@@ -1,0 +1,24 @@
+//! Petascale simulation — the paper's closing headline: "Running on
+//! hundreds of MIT SuperCloud nodes simultaneously achieved a
+//! sustained bandwidth >1 PB/s."
+//!
+//! Sweeps a SuperCloud-like CPU+GPU node mix with the analytic model
+//! (horizontal scaling is exactly linear — the same-map design
+//! communicates nothing) and reports the PB/s crossing.
+//!
+//! ```text
+//! cargo run --release --example petascale_sim [--max-nodes 2048]
+//! ```
+
+use distarray::cli::Args;
+use distarray::report::petascale;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let max_nodes = args.flag_usize("max-nodes", 1024);
+    print!("{}", petascale::render(max_nodes));
+    match petascale::nodes_to_reach(1e15, max_nodes.max(4096)) {
+        Some(n) => println!("petascale_sim OK — PB/s at {n} nodes"),
+        None => println!("petascale_sim: PB/s not reached (increase --max-nodes)"),
+    }
+}

@@ -1,0 +1,48 @@
+//! Temporal study — Figures 3 and 4 end to end: simulate every era ×
+//! language panel, measure a real series on this machine, and print
+//! the temporal-scaling table with the paper's headline ratios.
+//!
+//! ```text
+//! cargo run --release --example temporal_study
+//! ```
+
+use distarray::hardware::{Era, Lang};
+use distarray::report::{fig3, fig4, fmt_bw};
+
+fn main() {
+    // Figure 3: one panel per era, three languages.
+    println!("== Figure 3 (simulated panels, triad bandwidth vs Np) ==\n");
+    for label in ["xeon-p4", "bg-p", "xeon-e5", "xeon-g6", "xeon-p8", "amd-e9"] {
+        let era = Era::by_label(label).unwrap();
+        println!("{label} ({}):", era.year);
+        for lang in Lang::ALL {
+            let s = fig3::simulate_series(era, lang);
+            let pts: Vec<String> = s
+                .points
+                .iter()
+                .map(|p| format!("{}@{}", fmt_bw(p.triad_bw), p.np))
+                .collect();
+            println!("  {:<7} {}", lang.name(), pts.join("  "));
+        }
+    }
+    println!("\nGPU nodes:");
+    for label in ["v100", "h100nvl"] {
+        let era = Era::by_label(label).unwrap();
+        let s = fig3::simulate_series(era, Lang::Python);
+        for p in &s.points {
+            println!("  {label} Np={} triad {}", p.np, fmt_bw(p.triad_bw));
+        }
+    }
+
+    // Real measured series on this machine — same reporting path.
+    println!("\n== measured on this machine (native engine) ==");
+    let max_np = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    let s = fig3::measured_series(max_np, 1 << 21, 5);
+    for p in &s.points {
+        println!("  Np={:<3} triad {}", p.np, fmt_bw(p.triad_bw));
+    }
+
+    // Figure 4.
+    println!("\n== Figure 4 ==\n{}", fig4::render());
+    println!("temporal_study OK");
+}

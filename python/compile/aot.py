@@ -1,0 +1,116 @@
+"""AOT compile path: lower the L2 JAX functions to HLO *text* artifacts.
+
+HLO text (NOT ``lowered.compile().serialize()``) is the interchange
+format: jax >= 0.5 emits HloModuleProto with 64-bit instruction ids
+which the image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+``HloModuleProto::from_text_file`` on the Rust side reassigns ids, so
+text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):
+    python -m compile.aot --out ../artifacts/model.hlo.txt [--n 65536] [--nt 10]
+
+Emits one ``.hlo.txt`` per L2 entry point plus ``manifest.json`` so the
+Rust runtime knows each artifact's shapes without re-parsing HLO.
+
+Python runs ONLY here — never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # STREAM mandates f64 (§III)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _vec(n):
+    return jax.ShapeDtypeStruct((n,), jnp.float64)
+
+
+def _scalar():
+    return jax.ShapeDtypeStruct((), jnp.float64)
+
+
+def build_artifacts(n: int, nt: int):
+    """Return {name: (lowered, meta)} for every artifact."""
+    v, s = _vec(n), _scalar()
+    arts = {}
+
+    def low(name, fn, *specs, donate=(), meta=None):
+        jitted = jax.jit(fn, donate_argnums=donate)
+        arts[name] = (jitted.lower(*specs), meta or {})
+
+    # Per-op artifacts — Algorithm 1's individually-timed operations.
+    low("copy", model.stream_copy, v, meta={"inputs": [["f64", n]], "outputs": 1})
+    low("scale", model.stream_scale, v, s, meta={"inputs": [["f64", n], ["f64"]], "outputs": 1})
+    low("add", model.stream_add, v, v, meta={"inputs": [["f64", n], ["f64", n]], "outputs": 1})
+    low("triad", model.stream_triad, v, v, s, meta={"inputs": [["f64", n], ["f64", n], ["f64"]], "outputs": 1})
+    # Fused single iteration (perf variant) and the full Nt-run.
+    low("step_fused", model.stream_step_fused, v, s, meta={"inputs": [["f64", n], ["f64"]], "outputs": 3})
+    # NOTE: the run entry point takes (a, q) only — within the STREAM
+    # recurrence B and C are fully determined by A, and jax.jit prunes
+    # unused parameters from the lowered module anyway.
+    low(
+        "run",
+        lambda a, q: model.stream_run(a, a, a, q, nt),
+        v, s,
+        meta={"inputs": [["f64", n], ["f64"]], "outputs": 3, "nt": nt},
+    )
+    low(
+        "validate",
+        lambda a, b, c, q: model.stream_validate(a, b, c, q, nt),
+        v, v, v, s,
+        meta={"inputs": [["f64", n]] * 3 + [["f64"]], "outputs": 1, "nt": nt},
+    )
+    return arts
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the primary artifact (its dir receives all artifacts)")
+    ap.add_argument("--n", type=int, default=65536,
+                    help="local vector length lowered into the artifacts")
+    ap.add_argument("--nt", type=int, default=10, help="iterations baked into the `run` artifact")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"n": args.n, "nt": args.nt, "dtype": "f64", "artifacts": {}}
+    for name, (lowered, meta) in build_artifacts(args.n, args.nt).items():
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {"file": f"{name}.hlo.txt", **meta}
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    # The Makefile's stamp target: model.hlo.txt = the fused step artifact.
+    import shutil
+
+    shutil.copyfile(os.path.join(out_dir, "step_fused.hlo.txt"), os.path.abspath(args.out))
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Pure-jnp oracle for the STREAM kernels (§III of the paper).
+
+Every Pallas kernel in ``stream_kernels.py`` is checked against these
+reference implementations at build time (pytest) — the CORE correctness
+signal for L1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def copy(a):
+    """C = A."""
+    return jnp.asarray(a)
+
+
+def scale(c, q):
+    """B = q * C."""
+    return q * c
+
+
+def add(a, b):
+    """C = A + B."""
+    return a + b
+
+
+def triad(b, c, q):
+    """A = B + q * C."""
+    return b + q * c
+
+
+def step(a, b, c, q):
+    """One full STREAM iteration: Copy, Scale, Add, Triad (in order)."""
+    c = copy(a)
+    b = scale(c, q)
+    c = add(a, b)
+    a = triad(b, c, q)
+    return a, b, c
+
+
+def run(a, b, c, q, nt: int):
+    """Run ``nt`` STREAM iterations."""
+    for _ in range(nt):
+        a, b, c = step(a, b, c, q)
+    return a, b, c
+
+
+def validate_closed_form(a0: float, q: float, nt: int):
+    """Closed-form final values (§III validation formulas).
+
+    A_{Nt}(:) = (2q + q^2)^{Nt} * A0
+    B_{Nt}(:) = q * A_{Nt-1}
+    C_{Nt}(:) = (1+q) * A_{Nt-1}
+    where A_{Nt-1} = (2q + q^2)^{Nt-1} * A0.
+    """
+    g = 2.0 * q + q * q
+    a_prev = g ** (nt - 1) * a0
+    a_final = g**nt * a0
+    b_final = q * a_prev
+    c_final = (1.0 + q) * a_prev
+    return a_final, b_final, c_final
+
+
+STREAM_Q = float(jnp.sqrt(2.0) - 1.0)  # 2q + q^2 == 1 → values stay modest

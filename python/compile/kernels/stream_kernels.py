@@ -1,0 +1,163 @@
+"""L1 — Pallas kernels for the STREAM benchmark operations.
+
+The paper's compute hot-spot is the four STREAM vector operations
+(Copy, Scale, Add, Triad; §III Algorithm 1).  Each kernel is expressed
+as a Pallas kernel tiled with a ``BlockSpec`` so that every grid step
+streams one VMEM-resident tile — this is the explicit HBM↔VMEM schedule
+that the paper's CuPy/gpuArray path left implicit (DESIGN.md
+§Hardware-Adaptation).
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin
+cannot execute Mosaic custom-calls, and interpret-mode lowers to plain
+HLO which the Rust runtime loads via ``HloModuleProto::from_text_file``.
+
+VMEM budget: the fused step touches three tiles (A, B, C) of
+``block_size`` f64 elements → ``3 * block * 8`` bytes per grid step.
+The default ``block=65536`` gives 1.5 MiB, well under ~16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 65536
+
+
+def _grid_for(n: int, block: int) -> tuple[int, int]:
+    """Clamp block to n and return (block, grid)."""
+    block = min(block, n)
+    if n % block != 0:
+        # Fall back to a divisor block so BlockSpec tiles exactly.
+        block = _largest_divisor_block(n, block)
+    return block, n // block
+
+
+def _largest_divisor_block(n: int, block: int) -> int:
+    for b in range(min(block, n), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def _copy_kernel(a_ref, c_ref):
+    c_ref[...] = a_ref[...]
+
+
+def _scale_kernel(q_ref, c_ref, b_ref):
+    b_ref[...] = q_ref[0] * c_ref[...]
+
+
+def _add_kernel(a_ref, b_ref, c_ref):
+    c_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _triad_kernel(q_ref, b_ref, c_ref, a_ref):
+    a_ref[...] = b_ref[...] + q_ref[0] * c_ref[...]
+
+
+def _block_spec(block: int):
+    return pl.BlockSpec((block,), lambda i: (i,))
+
+
+def _scalar_spec():
+    # The scalar q is broadcast to every grid step.
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def copy(a: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """STREAM Copy: C = A."""
+    (n,) = a.shape
+    block, grid = _grid_for(n, block)
+    return pl.pallas_call(
+        _copy_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        grid=(grid,),
+        in_specs=[_block_spec(block)],
+        out_specs=_block_spec(block),
+        interpret=True,
+    )(a)
+
+
+def scale(c: jax.Array, q: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """STREAM Scale: B = q * C."""
+    (n,) = c.shape
+    block, grid = _grid_for(n, block)
+    q1 = jnp.reshape(q.astype(c.dtype), (1,))
+    return pl.pallas_call(
+        _scale_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), c.dtype),
+        grid=(grid,),
+        in_specs=[_scalar_spec(), _block_spec(block)],
+        out_specs=_block_spec(block),
+        interpret=True,
+    )(q1, c)
+
+
+def add(a: jax.Array, b: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """STREAM Add: C = A + B."""
+    (n,) = a.shape
+    block, grid = _grid_for(n, block)
+    return pl.pallas_call(
+        _add_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        grid=(grid,),
+        in_specs=[_block_spec(block), _block_spec(block)],
+        out_specs=_block_spec(block),
+        interpret=True,
+    )(a, b)
+
+
+def triad(b: jax.Array, c: jax.Array, q: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """STREAM Triad: A = B + q * C."""
+    (n,) = b.shape
+    block, grid = _grid_for(n, block)
+    q1 = jnp.reshape(q.astype(b.dtype), (1,))
+    return pl.pallas_call(
+        _triad_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), b.dtype),
+        grid=(grid,),
+        in_specs=[_scalar_spec(), _block_spec(block), _block_spec(block)],
+        out_specs=_block_spec(block),
+        interpret=True,
+    )(q1, b, c)
+
+
+def _fused_step_kernel(q_ref, a_ref, ao_ref, bo_ref, co_ref):
+    """One full STREAM iteration fused into a single tile pass.
+
+    Within one iteration the dataflow collapses onto A:
+        C = A;  B = qC = qA;  C = A + B = (1+q)A;  A' = B + qC = (2q+q^2)A
+    Fusing removes three of the four HBM round-trips per iteration —
+    the L1 perf optimization recorded in EXPERIMENTS.md §Perf.
+    """
+    q = q_ref[0]
+    a = a_ref[...]
+    c = a  # Copy
+    b = q * c  # Scale
+    c = a + b  # Add
+    ao_ref[...] = b + q * c  # Triad
+    bo_ref[...] = b
+    co_ref[...] = c
+
+
+def fused_step(a: jax.Array, q: jax.Array, *, block: int = DEFAULT_BLOCK):
+    """One STREAM iteration (Copy, Scale, Add, Triad) as a single kernel.
+
+    Returns (A', B', C') after the iteration.
+    """
+    (n,) = a.shape
+    block, grid = _grid_for(n, block)
+    q1 = jnp.reshape(q.astype(a.dtype), (1,))
+    out = jax.ShapeDtypeStruct((n,), a.dtype)
+    return pl.pallas_call(
+        _fused_step_kernel,
+        out_shape=(out, out, out),
+        grid=(grid,),
+        in_specs=[_scalar_spec(), _block_spec(block)],
+        out_specs=(_block_spec(block), _block_spec(block), _block_spec(block)),
+        interpret=True,
+    )(q1, a)

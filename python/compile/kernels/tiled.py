@@ -1,0 +1,82 @@
+"""TPU lane-tiled STREAM kernels — the DESIGN.md §Hardware-Adaptation
+variant.
+
+The paper's GPU path (CuPy/gpuArray) leaves the HBM schedule implicit.
+On TPU the natural layout for the VPU is (sublane, lane) = (8, 128)
+tiles; these kernels reshape the 1-D STREAM vectors to ``(rows, 128)``
+and tile with a 2-D ``BlockSpec`` so each grid step streams
+``row_block × 128`` elements through VMEM — the explicit HBM↔VMEM
+schedule.
+
+VMEM per grid step (fused): 3 tiles x row_block x 128 x 8 B.
+Default ``row_block=512`` → 1.5 MiB, well under ~16 MiB VMEM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+DEFAULT_ROW_BLOCK = 512
+
+
+def _shape2d(n: int) -> tuple[int, int]:
+    assert n % LANES == 0, f"tiled kernels need n % {LANES} == 0, got {n}"
+    return n // LANES, LANES
+
+
+def _grid(rows: int, row_block: int) -> tuple[int, int]:
+    rb = min(row_block, rows)
+    while rows % rb != 0:
+        rb -= 1
+    return rb, rows // rb
+
+
+def _spec(rb: int):
+    return pl.BlockSpec((rb, LANES), lambda i: (i, 0))
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1,), lambda i: (0,))
+
+
+def _fused_kernel(q_ref, a_ref, ao_ref, bo_ref, co_ref):
+    q = q_ref[0]
+    a = a_ref[...]
+    c = a  # Copy
+    b = q * c  # Scale
+    c = a + b  # Add
+    ao_ref[...] = b + q * c  # Triad
+    bo_ref[...] = b
+    co_ref[...] = c
+
+
+def fused_step_tiled(a: jax.Array, q: jax.Array, *, row_block: int = DEFAULT_ROW_BLOCK):
+    """One STREAM iteration over lane-tiled (rows, 128) layout.
+
+    Accepts and returns 1-D arrays; the 2-D tiling is internal.
+    """
+    (n,) = a.shape
+    rows, _ = _shape2d(n)
+    rb, grid = _grid(rows, row_block)
+    a2 = a.reshape(rows, LANES)
+    q1 = jnp.reshape(q.astype(a.dtype), (1,))
+    out = jax.ShapeDtypeStruct((rows, LANES), a.dtype)
+    ao, bo, co = pl.pallas_call(
+        _fused_kernel,
+        out_shape=(out, out, out),
+        grid=(grid,),
+        in_specs=[_scalar_spec(), _spec(rb)],
+        out_specs=(_spec(rb), _spec(rb), _spec(rb)),
+        interpret=True,
+    )(q1, a2)
+    return ao.reshape(n), bo.reshape(n), co.reshape(n)
+
+
+def vmem_bytes(row_block: int, dtype_bytes: int = 8, buffers: int = 4) -> int:
+    """VMEM footprint estimate per grid step: ``buffers`` resident
+    tiles (A in + A' B' C' out for the fused kernel) of
+    ``row_block × 128`` elements."""
+    return buffers * row_block * LANES * dtype_bytes

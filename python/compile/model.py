@@ -1,0 +1,103 @@
+"""L2 — the paper's compute graph in JAX, calling the L1 Pallas kernels.
+
+The "model" for this paper is the STREAM benchmark itself (§III,
+Algorithms 1 & 2): three N-element f64 vectors and the four ops
+Copy / Scale / Add / Triad, repeated Nt times, plus the closed-form
+validator.  Each public function here is jitted and AOT-lowered by
+``aot.py`` to an HLO text artifact the Rust runtime loads.
+
+Distributed-array note: under the paper's same-map design (Figure 2)
+each PID runs these functions on its *local* part only — so the shapes
+lowered here are the per-PID local lengths (N/Np), and the Rust L3
+coordinator owns the map/PID logic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, stream_kernels as k
+
+DTYPE = jnp.float64
+
+
+def stream_copy(a):
+    """C = A (L1 kernel)."""
+    return k.copy(a)
+
+
+def stream_scale(c, q):
+    """B = q*C (L1 kernel)."""
+    return k.scale(c, q)
+
+
+def stream_add(a, b):
+    """C = A+B (L1 kernel)."""
+    return k.add(a, b)
+
+
+def stream_triad(b, c, q):
+    """A = B+q*C (L1 kernel)."""
+    return k.triad(b, c, q)
+
+
+def stream_step(a, b, c, q):
+    """One STREAM iteration as four discrete kernel launches.
+
+    Faithful to Algorithm 1/2's op-by-op structure (each op separately
+    timed in the paper); used by the per-op PJRT artifacts.
+    """
+    c = k.copy(a)
+    b = k.scale(c, q)
+    c = k.add(a, b)
+    a = k.triad(b, c, q)
+    return a, b, c
+
+
+def stream_step_fused(a, q):
+    """One STREAM iteration as a single fused L1 kernel (perf variant).
+
+    B and C are fully determined by A within an iteration, so only A
+    flows in. Returns (A', B', C').
+    """
+    return k.fused_step(a, q)
+
+
+def stream_run(a, b, c, q, nt: int):
+    """Nt STREAM iterations via lax.scan over the fused step.
+
+    ``scan`` (not a Python loop) keeps the lowered HLO size O(1) in Nt.
+    Within an iteration B and C are fully determined by the incoming A,
+    so the scan carry is A alone; the last iteration runs outside the
+    scan so the final (A, B, C) triple matches Algorithm 1 exactly
+    (B and C as left by iteration Nt). Requires nt >= 1.
+    """
+
+    def body(a, _):
+        a2, _, _ = k.fused_step(a, q)
+        return a2, None
+
+    a_prev, _ = jax.lax.scan(body, a, None, length=nt - 1)
+    return k.fused_step(a_prev, q)
+
+
+def stream_validate(a, b, c, q, nt: int):
+    """Max absolute validation error against the §III closed forms.
+
+    Returns a length-3 vector [errA, errB, errC]; the Rust coordinator
+    asserts each < 1e-8 * nt.
+    """
+    g = 2.0 * q + q * q
+    a_prev = g ** (nt - 1)
+    err_a = jnp.max(jnp.abs(a - g**nt))
+    err_b = jnp.max(jnp.abs(b - q * a_prev))
+    err_c = jnp.max(jnp.abs(c - (1.0 + q) * a_prev))
+    return jnp.stack([err_a, err_b, err_c])
+
+
+def reference_run(a, b, c, q, nt: int):
+    """Pure-jnp reference of stream_run (for L2-vs-ref pytest)."""
+    return ref.run(a, b, c, q, nt)

@@ -1,0 +1,87 @@
+"""L1 §Perf instrument — block-shape and fusion ablation.
+
+interpret=True gives CPU-numpy timings only (NOT a TPU proxy), so the
+optimization signal here is *structural*: HLO size, kernel-launch
+count, VMEM footprint per grid step — plus CPU wallclock as a sanity
+check that fusion reduces traffic.
+
+Usage (from python/):  python -m compile.perf_blocks [--n 1048576]
+
+Output is pasted into EXPERIMENTS.md §Perf (L1).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from .kernels import stream_kernels as k
+from .kernels import ref, tiled
+
+
+def hlo_ops(fn, *args) -> int:
+    """Number of HLO instructions in the optimized lowering."""
+    text = jax.jit(fn).lower(*args).compile().as_text()
+    return sum(1 for line in text.splitlines() if "=" in line)
+
+
+def timeit(fn, *args, reps=3) -> float:
+    fn(*args)[0].block_until_ready()  # warm
+    best = float("inf")
+    for _ in range(reps):
+        t = time.perf_counter()
+        out = fn(*args)
+        jax.tree_util.tree_leaves(out)[0].block_until_ready()
+        best = min(best, time.perf_counter() - t)
+    return best
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=1 << 20)
+    args = ap.parse_args()
+    n = args.n
+    a = jnp.ones((n,), jnp.float64)
+    q = jnp.float64(ref.STREAM_Q)
+
+    print(f"L1 perf ablation, n={n} (f64)")
+    print("\n-- fusion: 4 discrete kernels vs 1 fused kernel --")
+
+    def discrete(a, q):
+        c = k.copy(a)
+        b = k.scale(c, q)
+        c = k.add(a, b)
+        return (k.triad(b, c, q),)
+
+    def fused(a, q):
+        return k.fused_step(a, q)
+
+    t_d = timeit(discrete, a, q)
+    t_f = timeit(fused, a, q)
+    print(f"discrete 4-op step : {t_d * 1e3:8.2f} ms   ({hlo_ops(discrete, a, q)} HLO ops)")
+    print(f"fused 1-op step    : {t_f * 1e3:8.2f} ms   ({hlo_ops(fused, a, q)} HLO ops)")
+    print(f"fusion speedup     : {t_d / t_f:8.2f}x  (HBM round-trips 8 -> 2 per element)")
+
+    print("\n-- block sweep (fused 1-D kernel) --")
+    for blk in [1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20]:
+        t = timeit(lambda a, q, blk=blk: k.fused_step(a, q, block=blk), a, q)
+        vmem = 4 * blk * 8
+        print(f"block {blk:>8} : {t * 1e3:8.2f} ms   VMEM/step {vmem / 2**20:6.2f} MiB")
+
+    print("\n-- lane-tiled (rows x 128) row_block sweep --")
+    for rb in [64, 256, 512, 2048]:
+        t = timeit(lambda a, q, rb=rb: tiled.fused_step_tiled(a, q, row_block=rb), a, q)
+        print(
+            f"row_block {rb:>5} : {t * 1e3:8.2f} ms   VMEM/step "
+            f"{tiled.vmem_bytes(rb) / 2**20:6.2f} MiB"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""L1 pytest: every Pallas kernel vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes per the session guide; assert_allclose
+against ref is the CORE correctness signal.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref, stream_kernels as k
+
+RNG = np.random.default_rng(0)
+Q = ref.STREAM_Q
+
+
+def _vec(n, dtype=np.float64, seed=0):
+    return jnp.asarray(np.random.default_rng(seed).standard_normal(n).astype(dtype))
+
+
+# ---------- fixed-shape smoke ----------
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 1024, 65536, 65536 + 13])
+def test_copy_matches_ref(n):
+    a = _vec(n)
+    assert_allclose(np.asarray(k.copy(a)), np.asarray(ref.copy(a)), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 1024, 65536 + 13])
+def test_scale_matches_ref(n):
+    c = _vec(n, seed=1)
+    q = jnp.float64(Q)
+    assert_allclose(np.asarray(k.scale(c, q)), np.asarray(ref.scale(c, q)), rtol=1e-15)
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 1024, 65536 + 13])
+def test_add_matches_ref(n):
+    a, b = _vec(n, seed=2), _vec(n, seed=3)
+    assert_allclose(np.asarray(k.add(a, b)), np.asarray(ref.add(a, b)), rtol=1e-15)
+
+
+@pytest.mark.parametrize("n", [1, 7, 128, 1024, 65536 + 13])
+def test_triad_matches_ref(n):
+    b, c = _vec(n, seed=4), _vec(n, seed=5)
+    q = jnp.float64(Q)
+    # rtol loose enough for FMA-contraction differences between paths.
+    assert_allclose(np.asarray(k.triad(b, c, q)), np.asarray(ref.triad(b, c, q)), rtol=1e-12, atol=1e-12)
+
+
+@pytest.mark.parametrize("n", [1, 128, 4096, 65536 + 13])
+def test_fused_step_matches_ref(n):
+    a = _vec(n, seed=6)
+    b0, c0 = _vec(n, seed=7), _vec(n, seed=8)
+    a2, b2, c2 = k.fused_step(a, jnp.float64(Q))
+    ra, rb, rc = ref.step(a, b0, c0, Q)
+    assert_allclose(np.asarray(a2), np.asarray(ra), rtol=1e-14)
+    assert_allclose(np.asarray(b2), np.asarray(rb), rtol=1e-14)
+    assert_allclose(np.asarray(c2), np.asarray(rc), rtol=1e-14)
+
+
+# ---------- block-shape sweep (the L1 tiling knob) ----------
+
+
+@pytest.mark.parametrize("block", [1, 16, 1000, 65536, 1 << 20])
+def test_block_sizes_equivalent(block):
+    n = 4096
+    a = _vec(n, seed=9)
+    out = k.fused_step(a, jnp.float64(Q), block=block)
+    rout = ref.step(a, a, a, Q)
+    for got, want in zip(out, rout):
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-14)
+
+
+# ---------- hypothesis: shapes × dtypes × q ----------
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=8192),
+    dtype=st.sampled_from([np.float32, np.float64]),
+    q=st.floats(min_value=-2.0, max_value=2.0, allow_nan=False),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_hypothesis_ops(n, dtype, q, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.standard_normal(n).astype(dtype))
+    b = jnp.asarray(rng.standard_normal(n).astype(dtype))
+    c = jnp.asarray(rng.standard_normal(n).astype(dtype))
+    qj = jnp.asarray(q, dtype=dtype)
+    tol = 1e-6 if dtype == np.float32 else 1e-13
+    assert_allclose(np.asarray(k.copy(a)), np.asarray(ref.copy(a)), rtol=0, atol=0)
+    assert_allclose(np.asarray(k.scale(c, qj)), np.asarray(ref.scale(c, qj)), rtol=tol, atol=tol)
+    assert_allclose(np.asarray(k.add(a, b)), np.asarray(ref.add(a, b)), rtol=tol, atol=tol)
+    assert_allclose(np.asarray(k.triad(b, c, qj)), np.asarray(ref.triad(b, c, qj)), rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=4096),
+    nt=st.integers(min_value=1, max_value=8),
+)
+def test_hypothesis_iterated_matches_closed_form(n, nt):
+    """Iterated fused kernel reproduces the §III closed forms with q=√2−1."""
+    a = jnp.full((n,), 1.0, dtype=jnp.float64)
+    b = jnp.full((n,), 2.0, dtype=jnp.float64)
+    c = jnp.zeros((n,), dtype=jnp.float64)
+    q = jnp.float64(Q)
+    for _ in range(nt):
+        a, b, c = k.fused_step(a, q)
+    fa, fb, fc = ref.validate_closed_form(1.0, Q, nt)
+    assert_allclose(np.asarray(a), fa, rtol=1e-12)
+    assert_allclose(np.asarray(b), fb, rtol=1e-12)
+    assert_allclose(np.asarray(c), fc, rtol=1e-12)
+
+
+def test_grid_divisor_fallback():
+    # n prime and > block → _grid_for must fall back to a divisor.
+    block, grid = k._grid_for(65537, 65536)
+    assert block * grid == 65537
+    assert block >= 1

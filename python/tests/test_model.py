@@ -1,0 +1,101 @@
+"""L2 pytest: model graph vs pure-jnp reference; AOT lowering sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import aot, model
+from compile.kernels import ref
+
+Q = ref.STREAM_Q
+
+
+def _abc(n):
+    a = jnp.full((n,), 1.0, dtype=jnp.float64)
+    b = jnp.full((n,), 2.0, dtype=jnp.float64)
+    c = jnp.zeros((n,), dtype=jnp.float64)
+    return a, b, c
+
+
+@pytest.mark.parametrize("n,nt", [(64, 1), (64, 3), (1024, 10), (4096, 5)])
+def test_stream_run_matches_ref(n, nt):
+    a, b, c = _abc(n)
+    q = jnp.float64(Q)
+    got = model.stream_run(a, b, c, q, nt)
+    want = ref.run(a, b, c, Q, nt)
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-12)
+
+
+@pytest.mark.parametrize("nt", [1, 2, 10, 50])
+def test_stream_run_closed_form(nt):
+    n = 256
+    a, b, c = _abc(n)
+    fa, fb, fc = ref.validate_closed_form(1.0, Q, nt)
+    ga, gb, gc = model.stream_run(a, b, c, jnp.float64(Q), nt)
+    assert_allclose(np.asarray(ga), fa, rtol=1e-11)
+    assert_allclose(np.asarray(gb), fb, rtol=1e-11)
+    assert_allclose(np.asarray(gc), fc, rtol=1e-11)
+
+
+def test_validate_zero_on_correct_run():
+    n, nt = 512, 10
+    a, b, c = _abc(n)
+    q = jnp.float64(Q)
+    a2, b2, c2 = model.stream_run(a, b, c, q, nt)
+    errs = model.stream_validate(a2, b2, c2, q, nt)
+    assert np.all(np.asarray(errs) < 1e-10)
+
+
+def test_validate_detects_corruption():
+    n, nt = 512, 4
+    a, b, c = _abc(n)
+    q = jnp.float64(Q)
+    a2, b2, c2 = model.stream_run(a, b, c, q, nt)
+    a_bad = a2.at[17].set(a2[17] + 1.0)
+    errs = model.stream_validate(a_bad, b2, c2, q, nt)
+    assert np.asarray(errs)[0] > 0.5
+
+
+def test_step_fused_equals_discrete_step():
+    n = 2048
+    a, b, c = _abc(n)
+    q = jnp.float64(Q)
+    fa, fb, fc = model.stream_step_fused(a, q)
+    da, db, dc = model.stream_step(a, b, c, q)
+    assert_allclose(np.asarray(fa), np.asarray(da), rtol=1e-14)
+    assert_allclose(np.asarray(fb), np.asarray(db), rtol=1e-14)
+    assert_allclose(np.asarray(fc), np.asarray(dc), rtol=1e-14)
+
+
+# ---------- AOT lowering ----------
+
+
+def test_all_artifacts_lower_to_hlo_text():
+    arts = aot.build_artifacts(n=256, nt=3)
+    assert set(arts) == {"copy", "scale", "add", "triad", "step_fused", "run", "validate"}
+    for name, (lowered, meta) in arts.items():
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "f64" in text, name
+
+
+def test_artifact_files_roundtrip(tmp_path):
+    import json
+    import sys
+
+    out = tmp_path / "model.hlo.txt"
+    argv = sys.argv
+    sys.argv = ["aot", "--out", str(out), "--n", "128", "--nt", "2"]
+    try:
+        aot.main()
+    finally:
+        sys.argv = argv
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["n"] == 128 and manifest["nt"] == 2
+    for name, entry in manifest["artifacts"].items():
+        text = (tmp_path / entry["file"]).read_text()
+        assert text.startswith("HloModule"), name
+    assert out.read_text().startswith("HloModule")

@@ -1,0 +1,58 @@
+"""Lane-tiled kernel (hardware-adaptation variant) vs the oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref, tiled
+
+Q = ref.STREAM_Q
+
+
+@pytest.mark.parametrize("n", [128, 1024, 128 * 7, 65536])
+def test_tiled_fused_matches_ref(n):
+    a = jnp.asarray(np.random.default_rng(1).standard_normal(n))
+    ta, tb, tc = tiled.fused_step_tiled(a, jnp.float64(Q))
+    ra, rb, rc = ref.step(a, a, a, Q)
+    assert_allclose(np.asarray(ta), np.asarray(ra), rtol=1e-13, atol=1e-13)
+    assert_allclose(np.asarray(tb), np.asarray(rb), rtol=1e-13, atol=1e-13)
+    assert_allclose(np.asarray(tc), np.asarray(rc), rtol=1e-13, atol=1e-13)
+
+
+@pytest.mark.parametrize("row_block", [1, 8, 100, 512, 4096])
+def test_row_blocks_equivalent(row_block):
+    n = 128 * 32
+    a = jnp.asarray(np.random.default_rng(2).standard_normal(n))
+    got = tiled.fused_step_tiled(a, jnp.float64(Q), row_block=row_block)
+    want = ref.step(a, a, a, Q)
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-13, atol=1e-13)
+
+
+def test_non_multiple_of_128_rejected():
+    a = jnp.ones(127)
+    with pytest.raises(AssertionError):
+        tiled.fused_step_tiled(a, jnp.float64(Q))
+
+
+def test_vmem_budget_under_16mib():
+    # The default tiling must fit comfortably in ~16 MiB VMEM.
+    assert tiled.vmem_bytes(tiled.DEFAULT_ROW_BLOCK) < 16 * 2**20 / 4
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(min_value=1, max_value=64),
+    dtype=st.sampled_from([np.float32, np.float64]),
+)
+def test_hypothesis_tiled_shapes_dtypes(rows, dtype):
+    n = rows * 128
+    a = jnp.asarray(np.random.default_rng(rows).standard_normal(n).astype(dtype))
+    q = jnp.asarray(Q, dtype=dtype)
+    got = tiled.fused_step_tiled(a, q)
+    want = ref.step(a, a, a, q)
+    tol = 1e-5 if dtype == np.float32 else 1e-12
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=tol, atol=tol)

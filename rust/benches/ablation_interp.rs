@@ -1,0 +1,39 @@
+//! Bench A1 — interpreter-model ablation: the §VI Octave effect.
+//! "The Octave interpreter defers the first copy ... and folds it into
+//! triad, which is why the Octave results are generally ~30% lower."
+
+use distarray::benchx::section;
+use distarray::hardware::{simulate_stream, Era, Lang, NodeModel};
+use distarray::stream::StreamParams;
+
+fn main() {
+    section("A1 — interpreter ablation (simulated xeon-g6, Np=1)");
+    let era = Era::by_label("xeon-g6").unwrap();
+    let node = NodeModel::new(era, 1, 1);
+    let p = StreamParams { nt: 10, log2_local: 24 };
+
+    let mut triad = std::collections::BTreeMap::new();
+    for lang in Lang::ALL {
+        let r = simulate_stream(&node, &p, lang);
+        let bw = r.bandwidths();
+        println!(
+            "{:<8} copy={:>12} scale={:>12} add={:>12} triad={:>12}",
+            lang.name(),
+            distarray::report::fmt_bw(bw[0]),
+            distarray::report::fmt_bw(bw[1]),
+            distarray::report::fmt_bw(bw[2]),
+            distarray::report::fmt_bw(bw[3]),
+        );
+        triad.insert(lang.name(), bw[3]);
+    }
+
+    let ratio = triad["octave"] / triad["matlab"];
+    assert!((ratio - 0.7).abs() < 0.02, "octave/matlab triad ratio {ratio}");
+    // ... while Octave's *copy* shows artificially high bandwidth (the
+    // deferred copy-on-write makes the timed C=A nearly free).
+    let copy_m = simulate_stream(&node, &p, Lang::Matlab).bandwidths()[0];
+    let copy_o = simulate_stream(&node, &p, Lang::Octave).bandwidths()[0];
+    assert!(copy_o > copy_m * 5.0, "deferred copy should look 'free'");
+    println!("\noctave/matlab triad = {ratio:.3} (paper: ~0.70)");
+    println!("ablation_interp OK");
+}

@@ -1,0 +1,96 @@
+//! Bench A3 — programming-model ablation (§II): the same STREAM
+//! workload under distributed arrays, message passing, and
+//! map-reduce. Distributed arrays should match map-reduce bandwidth
+//! (both communication-free in steady state) while message passing
+//! pays the explicit scatter/gather.
+
+use distarray::baselines::{run_mapreduce_stream, run_msgpass_stream};
+use distarray::benchx::section;
+use distarray::comm::{ChannelHub, Transport};
+use distarray::dmap::Dmap;
+use distarray::stream::{aggregate, run_parallel, AggregateResult, STREAM_Q};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+fn run_distarray(np: usize, n: usize, nt: usize) -> (AggregateResult, u64) {
+    let world = ChannelHub::world(np);
+    let bytes = Arc::new(AtomicU64::new(0));
+    let hs: Vec<_> = world
+        .into_iter()
+        .map(|t| {
+            let bytes = bytes.clone();
+            std::thread::spawn(move || {
+                let r = run_parallel(&Dmap::block_1d(t.np()), n, nt, STREAM_Q, t.pid());
+                bytes.fetch_add(t.stats().bytes_sent(), Ordering::Relaxed);
+                r
+            })
+        })
+        .collect();
+    let rs: Vec<_> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+    (aggregate(&rs).unwrap(), bytes.load(Ordering::Relaxed))
+}
+
+fn run_model(
+    np: usize,
+    n: usize,
+    nt: usize,
+    f: fn(&dyn Transport, usize, usize, f64) -> distarray::comm::Result<distarray::stream::StreamResult>,
+) -> (AggregateResult, u64) {
+    let world = ChannelHub::world(np);
+    let bytes = Arc::new(AtomicU64::new(0));
+    let hs: Vec<_> = world
+        .into_iter()
+        .map(|t| {
+            let bytes = bytes.clone();
+            std::thread::spawn(move || {
+                let r = f(&t, n, nt, STREAM_Q).unwrap();
+                bytes.fetch_add(t.stats().bytes_sent(), Ordering::Relaxed);
+                r
+            })
+        })
+        .collect();
+    let rs: Vec<_> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+    (aggregate(&rs).unwrap(), bytes.load(Ordering::Relaxed))
+}
+
+fn main() {
+    let np = 4;
+    let n = 1 << 21;
+    let nt = 5;
+
+    section("A3 — programming models on the same STREAM workload");
+    let (da, da_bytes) = run_distarray(np, n, nt);
+    let (mp, mp_bytes) = run_model(np, n, nt, run_msgpass_stream);
+    let (mr, mr_bytes) = run_model(np, n, nt, run_mapreduce_stream);
+
+    for (name, agg, bytes) in [
+        ("distributed arrays", &da, da_bytes),
+        ("message passing", &mp, mp_bytes),
+        ("map-reduce", &mr, mr_bytes),
+    ] {
+        println!(
+            "{name:<20} triad {:>12}  wire bytes {:>12}  valid={}",
+            distarray::report::fmt_bw(agg.triad_bw()),
+            bytes,
+            agg.all_valid
+        );
+        assert!(agg.all_valid, "{name} failed validation");
+    }
+
+    // The paper's qualitative claims:
+    assert_eq!(da_bytes, 0, "distributed arrays: zero communication");
+    assert!(mr_bytes < 10_000, "map-reduce: control traffic only");
+    assert!(
+        mp_bytes as usize > n * 8,
+        "message passing: pays explicit data distribution"
+    );
+    // Steady-state bandwidth comparable across models (loose band:
+    // thread scheduling noise dominates at this scale — the models
+    // differ in *communication*, not kernel throughput).
+    let lo = da.triad_bw().min(mp.triad_bw()).min(mr.triad_bw());
+    let hi = da.triad_bw().max(mp.triad_bw()).max(mr.triad_bw());
+    let spread = hi / lo;
+    println!("steady-state triad spread across models: {spread:.2}x");
+    assert!(spread < 10.0, "kernel bandwidth should be model-independent");
+    println!("\nablation_models OK — zero-comm distarray, control-only map-reduce, data-heavy msgpass");
+}

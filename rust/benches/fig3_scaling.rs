@@ -1,0 +1,44 @@
+//! Bench F3 — regenerate Figure 3: triad bandwidth vs Np for every
+//! era × language (simulated engine) plus a measured vertical-scaling
+//! series on this machine (native engine).
+//!
+//! Shape checks (not absolute numbers): vertical scaling rises then
+//! saturates; Octave sits ~30% below Matlab; horizontal scaling is
+//! linear.
+
+use distarray::benchx::{bench, section};
+use distarray::hardware::{Era, Lang};
+use distarray::report::fig3;
+
+fn main() {
+    section("FIGURE 3 — simulated panels (8 eras × 3 languages)");
+    let all = fig3::simulate_all();
+    print!("{}", fig3::render(&all));
+
+    section("shape checks");
+    for era_label in ["amd-e9", "xeon-p8", "xeon-g6", "xeon-e5"] {
+        let era = Era::by_label(era_label).unwrap();
+        let m = fig3::simulate_series(era, Lang::Matlab);
+        let first = m.points.first().unwrap().triad_bw;
+        let last = m.points.last().unwrap().triad_bw;
+        assert!(last > first * 4.0, "{era_label}: vertical scaling too flat");
+        let o = fig3::simulate_series(era, Lang::Octave);
+        let ratio = o.points.last().unwrap().triad_bw / last;
+        assert!((ratio - 0.7).abs() < 0.05, "{era_label}: octave ratio {ratio}");
+        println!("{era_label:<10} rise {:.1}x, octave/matlab {ratio:.2}", last / first);
+    }
+
+    section("measured vertical scaling on this machine (native engine)");
+    let max_np = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    let stats = bench(0, 3, || fig3::measured_series(max_np, 1 << 21, 3));
+    let series = fig3::measured_series(max_np, 1 << 21, 3);
+    for p in &series.points {
+        println!(
+            "  Np={:<3} triad {:>12}",
+            p.np,
+            distarray::report::fmt_bw(p.triad_bw)
+        );
+    }
+    println!("  (series regen median {:.1} ms)", stats.median * 1e3);
+    println!("\nfig3_scaling OK");
+}

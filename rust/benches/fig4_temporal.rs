@@ -1,0 +1,20 @@
+//! Bench F4 — regenerate Figure 4 (temporal scaling) and assert the
+//! paper's headline ratios: ~10× core / ~100× node over 20 years,
+//! ~5× GPU node over ~5 years.
+
+use distarray::benchx::{bench, section};
+use distarray::report::fig4;
+
+fn main() {
+    section("FIGURE 4 — temporal scaling");
+    print!("{}", fig4::render());
+
+    let (core, node, gpu) = fig4::headline_ratios();
+    assert!((5.0..20.0).contains(&core), "core ratio {core}");
+    assert!((50.0..200.0).contains(&node), "node ratio {node}");
+    assert!((3.0..8.0).contains(&gpu), "gpu ratio {gpu}");
+
+    let stats = bench(2, 50, fig4::points);
+    println!("points regen: median {:.2} ms", stats.median * 1e3);
+    println!("\nfig4_temporal OK — ratios within the paper's bands");
+}

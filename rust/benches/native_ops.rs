@@ -1,0 +1,56 @@
+//! Bench P1 — native kernel roofline: per-op bandwidth of the L3 hot
+//! path vs a `memcpy` roofline on this machine. The §Perf target is
+//! triad ≥ 0.8× of the copy roofline (STREAM triad moves 24B/elem vs
+//! copy's 16B/elem, so equal *bandwidth* is the roofline).
+
+use distarray::benchx::{bench, report, section};
+use distarray::stream::{ops, run_native_serial, STREAM_Q};
+use std::hint::black_box;
+
+fn main() {
+    let n = 1 << 24; // 128 MiB per vector — out of L3 cache
+    let a = vec![1.0f64; n];
+    let b = vec![2.0f64; n];
+    let mut c = vec![0.0f64; n];
+    let mut d = vec![0.0f64; n];
+
+    section("P1 — per-op native bandwidth (n = 2^24, out-of-cache)");
+    let bytes_rw2 = 16.0 * n as f64; // copy, scale: 1R + 1W
+    let bytes_rw3 = 24.0 * n as f64; // add, triad: 2R + 1W
+
+    // black_box the destination REFERENCE so LLVM cannot prove the
+    // stores unobserved and delete the loops (criterion's pattern).
+    let s = bench(2, 9, || black_box(&mut c[..]).copy_from_slice(black_box(&a)));
+    report("memcpy roofline (copy_from_slice)", &s, Some(bytes_rw2));
+    let roofline = bytes_rw2 / s.median;
+
+    let s_copy = bench(2, 9, || ops::copy(black_box(&mut c[..]), black_box(&a)));
+    report("stream copy", &s_copy, Some(bytes_rw2));
+    let s_scale = bench(2, 9, || ops::scale(black_box(&mut c[..]), black_box(&a), STREAM_Q));
+    report("stream scale", &s_scale, Some(bytes_rw2));
+    let s_add = bench(2, 9, || ops::add(black_box(&mut d[..]), black_box(&a), black_box(&b)));
+    report("stream add", &s_add, Some(bytes_rw3));
+    let s_triad = bench(2, 9, || {
+        ops::triad(black_box(&mut d[..]), black_box(&b), black_box(&c), STREAM_Q)
+    });
+    report("stream triad", &s_triad, Some(bytes_rw3));
+
+    let triad_bw = bytes_rw3 / s_triad.median;
+    println!(
+        "\ntriad/roofline = {:.2} (target ≥ 0.8)",
+        triad_bw / roofline
+    );
+
+    section("P1 — whole-benchmark serial run");
+    let r = run_native_serial(n, 3, STREAM_Q);
+    assert!(r.validation.passed);
+    let bw = r.bandwidths();
+    println!(
+        "serial n=2^24 nt=3: copy={} scale={} add={} triad={}",
+        distarray::report::fmt_bw(bw[0]),
+        distarray::report::fmt_bw(bw[1]),
+        distarray::report::fmt_bw(bw[2]),
+        distarray::report::fmt_bw(bw[3]),
+    );
+    println!("\nnative_ops done (roofline ratio recorded in EXPERIMENTS.md §Perf)");
+}

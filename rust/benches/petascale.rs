@@ -1,0 +1,27 @@
+//! Bench H1 — the >1 PB/s headline: horizontal scaling sweep over a
+//! SuperCloud-like CPU+GPU node mix.
+
+use distarray::benchx::{bench, section};
+use distarray::report::petascale;
+
+fn main() {
+    section("HEADLINE — horizontal scaling to >1 PB/s");
+    print!("{}", petascale::render(1024));
+
+    let n = petascale::nodes_to_reach(1e15, 4096).expect("PB/s reachable");
+    assert!(
+        (100..=1024).contains(&n),
+        "PB/s should land at 'hundreds' of nodes, got {n}"
+    );
+
+    // Linearity check: doubling nodes doubles bandwidth.
+    let pts = petascale::sweep(512);
+    for w in pts.windows(2) {
+        let r = w[1].bw / w[0].bw;
+        assert!((1.9..2.1).contains(&r), "nonlinear step {r}");
+    }
+
+    let stats = bench(2, 50, || petascale::sweep(1024));
+    println!("sweep regen: median {:.2} ms", stats.median * 1e3);
+    println!("\npetascale OK — >1 PB/s at {n} nodes (paper: \"hundreds\")");
+}

@@ -1,0 +1,30 @@
+//! Bench T1 — regenerate Table I and verify the era database drives
+//! the simulated engine at the calibrated envelopes.
+
+use distarray::benchx::{bench, section};
+use distarray::hardware::{simulate_stream, Lang, NodeModel, ERAS};
+use distarray::report::table1;
+use distarray::stream::StreamParams;
+
+fn main() {
+    section("TABLE I — hardware specifications (regenerated)");
+    print!("{}", table1::render());
+
+    section("era model: single-core simulated triad vs calibration");
+    for era in ERAS {
+        let node = NodeModel::new(era, 1, 1);
+        let p = StreamParams { nt: era.base_nt, log2_local: era.base_log2.min(24) };
+        let stats = bench(2, 20, || simulate_stream(&node, &p, Lang::Matlab).triad_bw());
+        let bw = simulate_stream(&node, &p, Lang::Matlab).triad_bw();
+        println!(
+            "{:<10} year={} sim core triad = {:>12}  (calib {:>12})  [model eval {:.1} µs]",
+            era.label,
+            era.year,
+            distarray::report::fmt_bw(bw),
+            distarray::report::fmt_bw(era.core_bw),
+            stats.median * 1e6
+        );
+        assert!((bw - era.core_bw).abs() / era.core_bw < 0.05, "{}", era.label);
+    }
+    println!("\ntable1_eras OK");
+}

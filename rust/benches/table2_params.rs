@@ -1,0 +1,27 @@
+//! Bench T2 — regenerate Table II (the Nt, N/Np schedule) and check
+//! the published anchor cells.
+
+use distarray::benchx::{bench, section};
+use distarray::report::table2;
+
+fn main() {
+    section("TABLE II — single-node STREAM parameters (regenerated)");
+    print!("{}", table2::render());
+
+    section("schedule derivation cost");
+    let stats = bench(5, 100, table2::rows);
+    println!("derive all rows: median {:.1} µs", stats.median * 1e6);
+
+    // Anchor cells from the paper.
+    let rows = table2::rows();
+    let cell = |era: &str, np: usize| {
+        let r = rows.iter().find(|r| r.era.label == era).unwrap();
+        r.cells.iter().find(|(c, _)| *c == np).map(|(_, p)| (p.nt, p.log2_local)).unwrap()
+    };
+    assert_eq!(cell("xeon-p8", 8), (20, 29), "xeon-p8 Np=8 → 20, 2^29");
+    assert_eq!(cell("xeon-p8", 32), (80, 27), "xeon-p8 Np=32 → 80, 2^27");
+    assert_eq!(cell("amd-e9", 1), (20, 30), "amd-e9 Np=1 → 20, 2^30");
+    assert_eq!(cell("bg-p", 128), (10, 25), "bg-p Np=128 → 10, 2^25");
+    assert_eq!(cell("xeon-p4", 1), (10, 25), "xeon-p4 Np=1 → 10, 2^25");
+    println!("\ntable2_params OK — anchor cells match the paper");
+}

@@ -1,0 +1,217 @@
+//! STREAM under the client-server / map-reduce model (§II).
+//!
+//! The leader (server) splits the global vector into independent
+//! tasks; workers (clients) request nothing from each other, process
+//! their assigned chunk, and send a reduced summary (times + local
+//! validation error) back. "Each worker communicates only with the
+//! leader and requires no knowledge about what the other workers are
+//! doing."
+
+use crate::comm::{Decode, Encode, Result, Transport, WireReader, WireWriter};
+use crate::stream::serial::{A0, B0, C0};
+use crate::stream::timing::{OpTimes, Timer};
+use crate::stream::validate::validate;
+use crate::stream::{ops, StreamResult};
+
+const TAG_TASK: u64 = 0x7A5C_0000;
+const TAG_DONE: u64 = 0x00DE_0000;
+
+/// A map task: process [lo, hi) of the global vector for nt trials.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Task {
+    pub lo: usize,
+    pub hi: usize,
+    pub nt: usize,
+    pub q: f64,
+}
+
+impl Encode for Task {
+    fn encode(&self, w: &mut WireWriter) {
+        w.put_usize(self.lo);
+        w.put_usize(self.hi);
+        w.put_usize(self.nt);
+        w.put_f64(self.q);
+    }
+}
+
+impl Decode for Task {
+    fn decode(r: &mut WireReader) -> crate::comm::Result<Self> {
+        Ok(Task {
+            lo: r.get_usize()?,
+            hi: r.get_usize()?,
+            nt: r.get_usize()?,
+            q: r.get_f64()?,
+        })
+    }
+}
+
+/// Reduced per-task summary (the "reduce" payload).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TaskDone {
+    pub n_local: usize,
+    pub times: [f64; 4],
+    pub passed: bool,
+    pub max_err: f64,
+}
+
+impl Encode for TaskDone {
+    fn encode(&self, w: &mut WireWriter) {
+        w.put_usize(self.n_local);
+        for t in self.times {
+            w.put_f64(t);
+        }
+        w.put_bool(self.passed);
+        w.put_f64(self.max_err);
+    }
+}
+
+impl Decode for TaskDone {
+    fn decode(r: &mut WireReader) -> crate::comm::Result<Self> {
+        let n_local = r.get_usize()?;
+        let mut times = [0.0; 4];
+        for t in &mut times {
+            *t = r.get_f64()?;
+        }
+        Ok(TaskDone { n_local, times, passed: r.get_bool()?, max_err: r.get_f64()? })
+    }
+}
+
+/// Process one task locally (the "map" function).
+pub fn execute_task(task: &Task) -> TaskDone {
+    let n = task.hi - task.lo;
+    let mut a = vec![A0; n];
+    let mut b = vec![B0; n];
+    let mut c = vec![C0; n];
+    let mut times = OpTimes::zero();
+    for _ in 0..task.nt {
+        let t = Timer::tic();
+        ops::copy(&mut c, &a);
+        times.copy += t.toc();
+        let t = Timer::tic();
+        ops::scale(&mut b, &c, task.q);
+        times.scale += t.toc();
+        let t = Timer::tic();
+        for i in 0..n {
+            c[i] = a[i] + b[i];
+        }
+        times.add += t.toc();
+        let t = Timer::tic();
+        for i in 0..n {
+            a[i] = b[i] + task.q * c[i];
+        }
+        times.triad += t.toc();
+    }
+    let v = validate(&a, &b, &c, A0, task.q, task.nt);
+    TaskDone {
+        n_local: n,
+        times: times.as_array(),
+        passed: v.passed,
+        max_err: v.max_err(),
+    }
+}
+
+/// SPMD entry: run map-reduce STREAM on this endpoint. Returns each
+/// endpoint's own StreamResult (the leader's includes its own chunk).
+pub fn run_mapreduce_stream(t: &dyn Transport, n: usize, nt: usize, q: f64) -> Result<StreamResult> {
+    let (me, np) = (t.pid(), t.np());
+    let b = n.div_ceil(np).max(1);
+    let result;
+    if me == 0 {
+        // Server: hand out tasks 1..np, do task 0 itself, reduce.
+        for p in 1..np {
+            let task = Task { lo: (p * b).min(n), hi: ((p + 1) * b).min(n), nt, q };
+            t.send(p, TAG_TASK, &task.to_bytes())?;
+        }
+        let my = execute_task(&Task { lo: 0, hi: b.min(n), nt, q });
+        let mut done = vec![my];
+        for p in 1..np {
+            done.push(TaskDone::from_bytes(&t.recv(p, TAG_DONE)?)?);
+        }
+        // Reduce: the leader's own StreamResult carries its chunk; the
+        // aggregate check folds everyone's validity.
+        let all_pass = done.iter().all(|d| d.passed);
+        result = to_result(n, nt, &my, all_pass);
+    } else {
+        let task = Task::from_bytes(&t.recv(0, TAG_TASK)?)?;
+        let done = execute_task(&task);
+        t.send(0, TAG_DONE, &done.to_bytes())?;
+        result = to_result(n, nt, &done, done.passed);
+    }
+    Ok(result)
+}
+
+fn to_result(n: usize, nt: usize, d: &TaskDone, passed: bool) -> StreamResult {
+    StreamResult {
+        n_global: n,
+        n_local: d.n_local,
+        nt,
+        times: OpTimes {
+            copy: d.times[0],
+            scale: d.times[1],
+            add: d.times[2],
+            triad: d.times[3],
+        },
+        validation: crate::stream::validate::ValidationReport {
+            passed,
+            err_a: d.max_err,
+            err_b: d.max_err,
+            err_c: d.max_err,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+    use crate::stream::{aggregate, STREAM_Q};
+    use std::thread;
+
+    #[test]
+    fn mapreduce_stream_validates() {
+        let np = 4;
+        let world = ChannelHub::world(np);
+        let handles: Vec<_> = world
+            .into_iter()
+            .map(|t| thread::spawn(move || run_mapreduce_stream(&t, 8000, 3, STREAM_Q).unwrap()))
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let agg = aggregate(&results).unwrap();
+        assert!(agg.all_valid);
+        let covered: usize = results.iter().map(|r| r.n_local).sum();
+        assert_eq!(covered, 8000);
+    }
+
+    #[test]
+    fn task_roundtrip() {
+        let t = Task { lo: 5, hi: 10, nt: 3, q: 0.25 };
+        assert_eq!(Task::from_bytes(&t.to_bytes()).unwrap(), t);
+    }
+
+    #[test]
+    fn execute_task_correctness() {
+        let d = execute_task(&Task { lo: 100, hi: 612, nt: 7, q: STREAM_Q });
+        assert!(d.passed, "err {}", d.max_err);
+        assert_eq!(d.n_local, 512);
+    }
+
+    #[test]
+    fn control_traffic_is_tiny_relative_to_data() {
+        // Map-reduce only ships task descriptors + summaries: bytes on
+        // the wire must be O(np), not O(n) like msgpass scatter.
+        let np = 4;
+        let n = 100_000;
+        let world = ChannelHub::world(np);
+        let handles: Vec<_> = world
+            .into_iter()
+            .map(|t| {
+                thread::spawn(move || {
+                    run_mapreduce_stream(&t, n, 2, STREAM_Q).unwrap();
+                    t.stats().bytes_sent()
+                })
+            })
+            .collect();
+        let total_bytes: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total_bytes < 10_000, "control traffic {total_bytes}B");
+    }
+}

@@ -1,0 +1,21 @@
+//! Baseline parallel programming models (§II) — the comparators the
+//! paper frames distributed arrays against.
+//!
+//! * [`msgpass`] — the message-passing model: explicit send/recv of
+//!   every vector fragment; "the programmer must manage every
+//!   individual message" (§II). Correct, but pays explicit
+//!   distribution traffic and far more code.
+//! * [`mapreduce`] — the client-server / map-reduce model: workers
+//!   receive independent tasks from the leader and never talk to each
+//!   other (§II).
+//!
+//! The ablation bench `ablation_models` compares all three on the
+//! same workload: the distributed-array model matches map-reduce
+//! bandwidth with map-independence, while message-passing pays the
+//! scatter/gather traffic the paper's `.loc` design avoids.
+
+pub mod mapreduce;
+pub mod msgpass;
+
+pub use mapreduce::run_mapreduce_stream;
+pub use msgpass::run_msgpass_stream;

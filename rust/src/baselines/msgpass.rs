@@ -1,0 +1,161 @@
+//! STREAM under the message-passing model (§II).
+//!
+//! Faithful to the model's costs: the leader owns the logical global
+//! vectors, **explicitly scatters** each worker's fragment, workers
+//! iterate locally (as any sane MPI STREAM would), and the leader
+//! **explicitly gathers** the final fragments for validation. The
+//! timed loop is identical to the distributed-array run; the model's
+//! overhead shows up as scatter/gather messages and code volume —
+//! exactly the paper's point.
+
+use crate::comm::{Result, Transport, WireReader, WireWriter};
+use crate::stream::serial::{A0, B0, C0};
+use crate::stream::timing::{OpTimes, Timer};
+use crate::stream::validate::validate;
+use crate::stream::{ops, StreamResult};
+
+const TAG_SCATTER: u64 = 0x5CA7_0000;
+const TAG_GATHER: u64 = 0x6A78_0000;
+
+/// Block extent of `pid` for n over np (leader-computed, like an MPI
+/// program would hand-roll).
+fn extent(n: usize, np: usize, pid: usize) -> (usize, usize) {
+    let b = n.div_ceil(np).max(1);
+    let lo = (pid * b).min(n);
+    let hi = ((pid + 1) * b).min(n);
+    (lo, hi)
+}
+
+/// SPMD entry: run message-passing STREAM on this endpoint.
+pub fn run_msgpass_stream(t: &dyn Transport, n: usize, nt: usize, q: f64) -> Result<StreamResult> {
+    let (me, np) = (t.pid(), t.np());
+    let (lo, hi) = extent(n, np, me);
+    let n_local = hi - lo;
+
+    // --- explicit scatter (rank 0 sends every fragment) ---
+    let (mut a, mut b, mut c);
+    if me == 0 {
+        let ga = vec![A0; n];
+        let gb = vec![B0; n];
+        let gc = vec![C0; n];
+        for p in 1..np {
+            let (plo, phi) = extent(n, np, p);
+            let mut w = WireWriter::with_capacity(24 + 24 * (phi - plo));
+            w.put_f64_slice(&ga[plo..phi]);
+            w.put_f64_slice(&gb[plo..phi]);
+            w.put_f64_slice(&gc[plo..phi]);
+            t.send(p, TAG_SCATTER, &w.finish())?;
+        }
+        a = ga[lo..hi].to_vec();
+        b = gb[lo..hi].to_vec();
+        c = gc[lo..hi].to_vec();
+    } else {
+        let payload = t.recv(0, TAG_SCATTER)?;
+        let mut r = WireReader::new(&payload);
+        a = r.get_f64_vec()?;
+        b = r.get_f64_vec()?;
+        c = r.get_f64_vec()?;
+    }
+
+    // --- timed loop (identical kernel work) ---
+    let mut times = OpTimes::zero();
+    for _ in 0..nt {
+        let tm = Timer::tic();
+        ops::copy(&mut c, &a);
+        times.copy += tm.toc();
+        let tm = Timer::tic();
+        ops::scale(&mut b, &c, q);
+        times.scale += tm.toc();
+        let tm = Timer::tic();
+        let (aa, bb) = (&a, &b);
+        // Add writes c from a, b.
+        for i in 0..c.len() {
+            c[i] = aa[i] + bb[i];
+        }
+        times.add += tm.toc();
+        let tm = Timer::tic();
+        for i in 0..a.len() {
+            a[i] = b[i] + q * c[i];
+        }
+        times.triad += tm.toc();
+    }
+
+    // --- explicit gather for validation at rank 0 ---
+    let validation;
+    if me == 0 {
+        let mut ga = vec![0.0; n];
+        let mut gb = vec![0.0; n];
+        let mut gc = vec![0.0; n];
+        ga[lo..hi].copy_from_slice(&a);
+        gb[lo..hi].copy_from_slice(&b);
+        gc[lo..hi].copy_from_slice(&c);
+        for p in 1..np {
+            let (plo, phi) = extent(n, np, p);
+            let payload = t.recv(p, TAG_GATHER)?;
+            let mut r = WireReader::new(&payload);
+            r.get_f64_into(&mut ga[plo..phi])?;
+            r.get_f64_into(&mut gb[plo..phi])?;
+            r.get_f64_into(&mut gc[plo..phi])?;
+        }
+        validation = validate(&ga, &gb, &gc, A0, q, nt);
+    } else {
+        let mut w = WireWriter::with_capacity(24 + 24 * n_local);
+        w.put_f64_slice(&a);
+        w.put_f64_slice(&b);
+        w.put_f64_slice(&c);
+        t.send(0, TAG_GATHER, &w.finish())?;
+        validation = validate(&a, &b, &c, A0, q, nt);
+    }
+
+    Ok(StreamResult { n_global: n, n_local, nt, times, validation })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+    use crate::stream::{aggregate, STREAM_Q};
+    use std::thread;
+
+    #[test]
+    fn msgpass_stream_validates_and_pays_traffic() {
+        let np = 4;
+        let n = 4096;
+        let world = ChannelHub::world(np);
+        let handles: Vec<_> = world
+            .into_iter()
+            .map(|t| {
+                thread::spawn(move || {
+                    let r = run_msgpass_stream(&t, n, 3, STREAM_Q).unwrap();
+                    let silent = t.stats().is_silent();
+                    (r, silent)
+                })
+            })
+            .collect();
+        let outcomes: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let results: Vec<_> = outcomes.iter().map(|(r, _)| r.clone()).collect();
+        let agg = aggregate(&results).unwrap();
+        assert!(agg.all_valid, "worst {}", agg.worst_err);
+        // The defining contrast with the distributed-array run: every
+        // endpoint moved data.
+        for (_, silent) in outcomes {
+            assert!(!silent, "message-passing model must communicate");
+        }
+    }
+
+    #[test]
+    fn extents_cover_exactly() {
+        for (n, np) in [(100usize, 7usize), (16, 4), (5, 8)] {
+            let total: usize = (0..np).map(|p| { let (lo, hi) = extent(n, np, p); hi - lo }).sum();
+            assert_eq!(total, n);
+        }
+    }
+
+    #[test]
+    fn single_rank_runs_without_peers() {
+        let mut world = ChannelHub::world(1);
+        let t = world.pop().unwrap();
+        let r = run_msgpass_stream(&t, 512, 2, STREAM_Q).unwrap();
+        assert!(r.validation.passed);
+    }
+}

@@ -1,0 +1,88 @@
+//! In-house micro-benchmark harness (criterion is unavailable
+//! offline). Used by every `rust/benches/*.rs` target
+//! (`harness = false`).
+//!
+//! Methodology: warmup runs, then `samples` timed runs; report
+//! min/median/mean. Black-box the results to keep LLVM honest.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+/// One measured statistic set (seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub min: f64,
+    pub median: f64,
+    pub mean: f64,
+    pub samples: usize,
+}
+
+impl Stats {
+    fn from_samples(mut xs: Vec<f64>) -> Stats {
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        Stats {
+            min: xs[0],
+            median: xs[n / 2],
+            mean: xs.iter().sum::<f64>() / n as f64,
+            samples: n,
+        }
+    }
+}
+
+/// Benchmark `f`, returning timing stats.
+pub fn bench<T>(warmup: usize, samples: usize, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(times)
+}
+
+/// Print one result row: name, median time, and an optional derived
+/// throughput (`bytes` moved per run → bandwidth).
+pub fn report(name: &str, stats: &Stats, bytes: Option<f64>) {
+    match bytes {
+        Some(b) => println!(
+            "{name:<44} median {:>10.3} ms   {:>12}",
+            stats.median * 1e3,
+            crate::report::fmt_bw(b / stats.median)
+        ),
+        None => println!("{name:<44} median {:>10.3} ms", stats.median * 1e3),
+    }
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordering() {
+        let s = Stats::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.median, 2.0);
+        assert_eq!(s.mean, 2.0);
+    }
+
+    #[test]
+    fn bench_runs_function() {
+        let mut count = 0;
+        let s = bench(2, 5, || {
+            count += 1;
+            count
+        });
+        assert_eq!(count, 7);
+        assert_eq!(s.samples, 5);
+        assert!(s.min >= 0.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `repro <subcommand> [positional...] [--flag value|--flag]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from raw args (excluding argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                // --key=value or --key value or bare --key
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".into());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process's own args.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> usize {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> f64 {
+        self.flag(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn flag_str<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.flag(name).unwrap_or(default)
+    }
+
+    pub fn flag_bool(&self, name: &str) -> bool {
+        matches!(self.flag(name), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("run extra --np 8 --engine native --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.flag_usize("np", 1), 8);
+        assert_eq!(a.flag_str("engine", "pjrt"), "native");
+        assert!(a.flag_bool("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn bare_flag_before_positional_consumes_it() {
+        // Documented ambiguity: `--verbose extra` binds "extra" as the
+        // flag's value; use `--verbose=true` or trailing placement.
+        let a = parse("run --verbose extra");
+        assert_eq!(a.flag("verbose"), Some("extra"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse("sweep --nodes=128 --out=fig3.csv");
+        assert_eq!(a.flag_usize("nodes", 0), 128);
+        assert_eq!(a.flag("out"), Some("fig3.csv"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("report");
+        assert_eq!(a.flag_usize("np", 4), 4);
+        assert_eq!(a.flag_f64("q", 0.5), 0.5);
+        assert!(!a.flag_bool("verbose"));
+    }
+
+    #[test]
+    fn empty_args() {
+        let a = parse("");
+        assert!(a.subcommand.is_none());
+    }
+}

@@ -1,0 +1,71 @@
+//! Barrier synchronization over any [`Transport`].
+//!
+//! Client-server shape (the paper's §II simplest model): all workers
+//! report to PID 0, PID 0 releases everyone. O(Np) messages, two
+//! phases — fine at the scales the coordinator runs (the hot loop
+//! never crosses a barrier; barriers bracket timed phases only).
+
+use super::{tags, Result, Transport};
+use std::time::Duration;
+
+/// Enter a two-phase barrier identified by `epoch`.
+///
+/// All `np` endpoints must call this with the same `epoch`; the epoch
+/// keeps back-to-back barriers from aliasing.
+pub fn barrier(t: &dyn Transport, epoch: u64, timeout: Duration) -> Result<()> {
+    let tag = tags::BARRIER ^ (epoch << 16);
+    let np = t.np();
+    if np == 1 {
+        return Ok(());
+    }
+    if t.pid() == 0 {
+        for from in 1..np {
+            t.recv_timeout(from, tag, timeout)?;
+        }
+        for to in 1..np {
+            t.send(to, tag, &[])?;
+        }
+    } else {
+        t.send(0, tag, &[])?;
+        t.recv_timeout(0, tag, timeout)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+    use std::thread;
+
+    #[test]
+    fn barrier_separates_phases() {
+        let np = 8;
+        let world = ChannelHub::world(np);
+        let phase1 = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for t in world {
+            let phase1 = phase1.clone();
+            handles.push(thread::spawn(move || {
+                phase1.fetch_add(1, Ordering::SeqCst);
+                barrier(&t, 0, Duration::from_secs(5)).unwrap();
+                // After the barrier every participant must have bumped.
+                assert_eq!(phase1.load(Ordering::SeqCst), 8);
+                barrier(&t, 1, Duration::from_secs(5)).unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn single_pid_barrier_is_noop() {
+        let mut world = ChannelHub::world(1);
+        let t = world.pop().unwrap();
+        barrier(&t, 0, Duration::from_millis(1)).unwrap();
+        assert!(t.stats().is_silent());
+    }
+}

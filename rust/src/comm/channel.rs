@@ -1,0 +1,188 @@
+//! In-process transport: one mailbox per PID, shared hub.
+//!
+//! Used by tests and by single-process multi-worker runs (each PID a
+//! thread). Matching is by (from, tag) with per-pair FIFO ordering —
+//! the same semantics the file transport provides across processes.
+
+use super::counter::CommStats;
+use super::{CommError, Result, Tag, Transport};
+use crate::dmap::Pid;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+type MailKey = (Pid, Tag); // (from, tag)
+
+#[derive(Default)]
+struct Mailbox {
+    queues: HashMap<MailKey, VecDeque<Vec<u8>>>,
+}
+
+struct Slot {
+    mbox: Mutex<Mailbox>,
+    cv: Condvar,
+}
+
+/// Shared state connecting all endpoints of one world.
+pub struct ChannelHub {
+    slots: Vec<Arc<Slot>>,
+}
+
+impl ChannelHub {
+    /// Create a world of `np` connected endpoints.
+    pub fn world(np: usize) -> Vec<ChannelTransport> {
+        assert!(np >= 1);
+        let slots: Vec<Arc<Slot>> = (0..np)
+            .map(|_| {
+                Arc::new(Slot {
+                    mbox: Mutex::new(Mailbox::default()),
+                    cv: Condvar::new(),
+                })
+            })
+            .collect();
+        let hub = Arc::new(ChannelHub { slots });
+        (0..np)
+            .map(|pid| ChannelTransport {
+                hub: hub.clone(),
+                pid,
+                np,
+                stats: CommStats::new(),
+            })
+            .collect()
+    }
+}
+
+/// One PID's endpoint of a [`ChannelHub`] world.
+pub struct ChannelTransport {
+    hub: Arc<ChannelHub>,
+    pid: Pid,
+    np: usize,
+    stats: CommStats,
+}
+
+impl Transport for ChannelTransport {
+    fn pid(&self) -> Pid {
+        self.pid
+    }
+
+    fn np(&self) -> usize {
+        self.np
+    }
+
+    fn send(&self, to: Pid, tag: Tag, payload: &[u8]) -> Result<()> {
+        if to >= self.np {
+            return Err(CommError::Disconnected(to));
+        }
+        let slot = &self.hub.slots[to];
+        {
+            let mut mbox = slot.mbox.lock().unwrap();
+            mbox.queues
+                .entry((self.pid, tag))
+                .or_default()
+                .push_back(payload.to_vec());
+        }
+        slot.cv.notify_all();
+        self.stats.record_send(payload.len());
+        Ok(())
+    }
+
+    fn recv_timeout(&self, from: Pid, tag: Tag, timeout: Duration) -> Result<Vec<u8>> {
+        let slot = &self.hub.slots[self.pid];
+        let deadline = Instant::now() + timeout;
+        let mut mbox = slot.mbox.lock().unwrap();
+        loop {
+            if let Some(q) = mbox.queues.get_mut(&(from, tag)) {
+                if let Some(payload) = q.pop_front() {
+                    self.stats.record_recv(payload.len());
+                    return Ok(payload);
+                }
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(CommError::Timeout { from, tag });
+            }
+            let (guard, _t) = slot.cv.wait_timeout(mbox, deadline - now).unwrap();
+            mbox = guard;
+        }
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let mut world = ChannelHub::world(2);
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        t0.send(1, 7, b"hello").unwrap();
+        assert_eq!(t1.recv(0, 7).unwrap(), b"hello");
+        assert_eq!(t0.stats().msgs_sent(), 1);
+        assert_eq!(t1.stats().msgs_recv(), 1);
+    }
+
+    #[test]
+    fn fifo_per_pair() {
+        let mut world = ChannelHub::world(2);
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        for i in 0u8..10 {
+            t0.send(1, 1, &[i]).unwrap();
+        }
+        for i in 0u8..10 {
+            assert_eq!(t1.recv(0, 1).unwrap(), vec![i]);
+        }
+    }
+
+    #[test]
+    fn tags_do_not_cross() {
+        let mut world = ChannelHub::world(2);
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        t0.send(1, 1, b"one").unwrap();
+        t0.send(1, 2, b"two").unwrap();
+        assert_eq!(t1.recv(0, 2).unwrap(), b"two");
+        assert_eq!(t1.recv(0, 1).unwrap(), b"one");
+    }
+
+    #[test]
+    fn recv_timeout_fires() {
+        let mut world = ChannelHub::world(2);
+        let t1 = world.pop().unwrap();
+        let _t0 = world.pop().unwrap();
+        let err = t1.recv_timeout(0, 9, Duration::from_millis(20));
+        assert!(matches!(err, Err(CommError::Timeout { .. })));
+    }
+
+    #[test]
+    fn cross_thread_delivery() {
+        let world = ChannelHub::world(4);
+        let mut handles = Vec::new();
+        for t in world {
+            handles.push(thread::spawn(move || {
+                let me = t.pid();
+                let np = t.np();
+                // Ring exchange: send to (me+1) % np, recv from (me+np-1) % np.
+                t.send((me + 1) % np, 5, &[me as u8]).unwrap();
+                let got = t.recv((me + np - 1) % np, 5).unwrap();
+                assert_eq!(got, vec![((me + np - 1) % np) as u8]);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn send_to_invalid_pid_errors() {
+        let mut world = ChannelHub::world(1);
+        let t0 = world.pop().unwrap();
+        assert!(matches!(t0.send(3, 0, b"x"), Err(CommError::Disconnected(3))));
+    }
+}

@@ -1,0 +1,90 @@
+//! Communication statistics — the instrument behind the paper's
+//! "Bounded communication" property (§IV): the same-map STREAM run
+//! must show **zero** messages, and tests assert it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Lock-free per-endpoint send/recv counters.
+#[derive(Debug, Default)]
+pub struct CommStats {
+    msgs_sent: AtomicU64,
+    bytes_sent: AtomicU64,
+    msgs_recv: AtomicU64,
+    bytes_recv: AtomicU64,
+}
+
+impl CommStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record_send(&self, bytes: usize) {
+        self.msgs_sent.fetch_add(1, Ordering::Relaxed);
+        self.bytes_sent.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn record_recv(&self, bytes: usize) {
+        self.msgs_recv.fetch_add(1, Ordering::Relaxed);
+        self.bytes_recv.fetch_add(bytes as u64, Ordering::Relaxed);
+    }
+
+    pub fn msgs_sent(&self) -> u64 {
+        self.msgs_sent.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_sent(&self) -> u64 {
+        self.bytes_sent.load(Ordering::Relaxed)
+    }
+
+    pub fn msgs_recv(&self) -> u64 {
+        self.msgs_recv.load(Ordering::Relaxed)
+    }
+
+    pub fn bytes_recv(&self) -> u64 {
+        self.bytes_recv.load(Ordering::Relaxed)
+    }
+
+    /// True iff no traffic at all has passed this endpoint.
+    pub fn is_silent(&self) -> bool {
+        self.msgs_sent() == 0 && self.msgs_recv() == 0
+    }
+
+    /// Snapshot (sent msgs, sent bytes, recv msgs, recv bytes).
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.msgs_sent(),
+            self.bytes_sent(),
+            self.msgs_recv(),
+            self.bytes_recv(),
+        )
+    }
+
+    pub fn reset(&self) {
+        self.msgs_sent.store(0, Ordering::Relaxed);
+        self.bytes_sent.store(0, Ordering::Relaxed);
+        self.msgs_recv.store(0, Ordering::Relaxed);
+        self.bytes_recv.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_accumulate() {
+        let s = CommStats::new();
+        assert!(s.is_silent());
+        s.record_send(100);
+        s.record_send(50);
+        s.record_recv(100);
+        assert_eq!(s.msgs_sent(), 2);
+        assert_eq!(s.bytes_sent(), 150);
+        assert_eq!(s.msgs_recv(), 1);
+        assert!(!s.is_silent());
+        s.reset();
+        assert!(s.is_silent());
+    }
+}

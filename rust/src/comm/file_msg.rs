@@ -1,0 +1,224 @@
+//! Asynchronous **file-based messaging** — the paper's aggregation
+//! transport (§V; Byun et al., "Large scale parallelization using
+//! file-based communications", HPEC 2019 [44]).
+//!
+//! Protocol (MatlabMPI-lineage):
+//! * A message from `f` to `t` with tag `g` and sequence `s` is the
+//!   file `spool/msg_f{f}_t{t}_g{g}_s{s}.bin`.
+//! * The sender writes to a `.tmp` name and **atomically renames** —
+//!   a reader never observes a partial message.
+//! * The receiver polls for the next sequence number it expects for
+//!   each (from, tag) pair and deletes the file after consuming it.
+//!
+//! No daemon, no sockets: works across OS processes sharing a
+//! filesystem, exactly like the paper's SuperCloud deployment (there,
+//! a Lustre mount; here, a local spool directory).
+
+use super::counter::CommStats;
+use super::{CommError, Result, Tag, Transport};
+use crate::dmap::Pid;
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// File-based transport endpoint for one PID.
+pub struct FileTransport {
+    dir: PathBuf,
+    pid: Pid,
+    np: usize,
+    stats: CommStats,
+    /// Next sequence number per (to, tag) for sends.
+    send_seq: Mutex<HashMap<(Pid, Tag), u64>>,
+    /// Next expected sequence per (from, tag) for receives.
+    recv_seq: Mutex<HashMap<(Pid, Tag), u64>>,
+    /// Poll interval while waiting for a message file.
+    poll: Duration,
+    unique: AtomicU64,
+}
+
+impl FileTransport {
+    /// Open (and create) a spool directory endpoint.
+    pub fn new(dir: impl AsRef<Path>, pid: Pid, np: usize) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)?;
+        Ok(FileTransport {
+            dir,
+            pid,
+            np,
+            stats: CommStats::new(),
+            send_seq: Mutex::new(HashMap::new()),
+            recv_seq: Mutex::new(HashMap::new()),
+            poll: Duration::from_micros(200),
+            unique: AtomicU64::new(0),
+        })
+    }
+
+    /// Adjust the receive poll interval (tests use a tight poll).
+    pub fn with_poll(mut self, poll: Duration) -> Self {
+        self.poll = poll;
+        self
+    }
+
+    fn msg_path(&self, from: Pid, to: Pid, tag: Tag, seq: u64) -> PathBuf {
+        self.dir.join(format!("msg_f{from}_t{to}_g{tag:x}_s{seq}.bin"))
+    }
+
+    /// Spool directory for inspection.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+impl Transport for FileTransport {
+    fn pid(&self) -> Pid {
+        self.pid
+    }
+
+    fn np(&self) -> usize {
+        self.np
+    }
+
+    fn send(&self, to: Pid, tag: Tag, payload: &[u8]) -> Result<()> {
+        if to >= self.np {
+            return Err(CommError::Disconnected(to));
+        }
+        let seq = {
+            let mut m = self.send_seq.lock().unwrap();
+            let e = m.entry((to, tag)).or_insert(0);
+            let s = *e;
+            *e += 1;
+            s
+        };
+        let final_path = self.msg_path(self.pid, to, tag, seq);
+        // Unique tmp name: two threads of one endpoint must not collide.
+        let unique = self.unique.fetch_add(1, Ordering::Relaxed);
+        let tmp = self
+            .dir
+            .join(format!(".tmp_f{}_u{}_{}", self.pid, unique, std::process::id()));
+        fs::write(&tmp, payload)?;
+        fs::rename(&tmp, &final_path)?; // atomic publish
+        self.stats.record_send(payload.len());
+        Ok(())
+    }
+
+    fn recv_timeout(&self, from: Pid, tag: Tag, timeout: Duration) -> Result<Vec<u8>> {
+        let seq = {
+            let mut m = self.recv_seq.lock().unwrap();
+            let e = m.entry((from, tag)).or_insert(0);
+            let s = *e;
+            *e += 1;
+            s
+        };
+        let path = self.msg_path(from, self.pid, tag, seq);
+        let deadline = Instant::now() + timeout;
+        loop {
+            match fs::read(&path) {
+                Ok(payload) => {
+                    let _ = fs::remove_file(&path);
+                    self.stats.record_recv(payload.len());
+                    return Ok(payload);
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    if Instant::now() >= deadline {
+                        // Roll back the sequence reservation so a retry
+                        // looks for the same message again.
+                        let mut m = self.recv_seq.lock().unwrap();
+                        if let Some(e) = m.get_mut(&(from, tag)) {
+                            *e = seq;
+                        }
+                        return Err(CommError::Timeout { from, tag });
+                    }
+                    std::thread::sleep(self.poll);
+                }
+                Err(e) => return Err(CommError::Io(e)),
+            }
+        }
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("distarray_fmsg_{name}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn roundtrip_same_process() {
+        let dir = tmpdir("rt");
+        let a = FileTransport::new(&dir, 0, 2).unwrap();
+        let b = FileTransport::new(&dir, 1, 2).unwrap();
+        a.send(1, 3, b"payload").unwrap();
+        assert_eq!(b.recv(0, 3).unwrap(), b"payload");
+        // consumed: file removed
+        assert_eq!(fs::read_dir(&dir).unwrap().count(), 0);
+    }
+
+    #[test]
+    fn ordering_preserved() {
+        let dir = tmpdir("ord");
+        let a = FileTransport::new(&dir, 0, 2).unwrap();
+        let b = FileTransport::new(&dir, 1, 2).unwrap();
+        for i in 0u8..5 {
+            a.send(1, 1, &[i]).unwrap();
+        }
+        for i in 0u8..5 {
+            assert_eq!(b.recv(0, 1).unwrap(), vec![i]);
+        }
+    }
+
+    #[test]
+    fn timeout_then_retry_succeeds() {
+        let dir = tmpdir("to");
+        let a = FileTransport::new(&dir, 0, 2).unwrap();
+        let b = FileTransport::new(&dir, 1, 2).unwrap().with_poll(Duration::from_micros(50));
+        assert!(b
+            .recv_timeout(0, 9, Duration::from_millis(10))
+            .is_err());
+        a.send(1, 9, b"late").unwrap();
+        // After a timeout the same message must still be receivable.
+        assert_eq!(b.recv(0, 9).unwrap(), b"late");
+    }
+
+    #[test]
+    fn concurrent_reader_sees_complete_message() {
+        let dir = tmpdir("conc");
+        let a = FileTransport::new(&dir, 0, 2).unwrap();
+        let big: Vec<u8> = (0..1_000_000u32).map(|i| (i % 251) as u8).collect();
+        let big2 = big.clone();
+        let dir2 = dir.clone();
+        let reader = thread::spawn(move || {
+            let b = FileTransport::new(&dir2, 1, 2)
+                .unwrap()
+                .with_poll(Duration::from_micros(10));
+            b.recv(0, 2).unwrap()
+        });
+        thread::sleep(Duration::from_millis(5));
+        a.send(1, 2, &big).unwrap();
+        let got = reader.join().unwrap();
+        assert_eq!(got, big2); // atomic rename ⇒ never a partial read
+    }
+
+    #[test]
+    fn distinct_pairs_do_not_interfere() {
+        let dir = tmpdir("pairs");
+        let a = FileTransport::new(&dir, 0, 3).unwrap();
+        let b = FileTransport::new(&dir, 1, 3).unwrap();
+        let c = FileTransport::new(&dir, 2, 3).unwrap();
+        a.send(2, 1, b"from0").unwrap();
+        b.send(2, 1, b"from1").unwrap();
+        assert_eq!(c.recv(1, 1).unwrap(), b"from1");
+        assert_eq!(c.recv(0, 1).unwrap(), b"from0");
+    }
+}

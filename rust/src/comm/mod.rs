@@ -1,0 +1,94 @@
+//! Communication substrate.
+//!
+//! The paper's systems communicate two ways: distributed-array remaps
+//! (PID↔PID messages, §II message-passing model) and leader/worker
+//! result aggregation via **asynchronous file-based messaging** (§V,
+//! reference [44] "Large scale parallelization using file-based
+//! communications").  Both are expressed through the [`Transport`]
+//! trait with two implementations:
+//!
+//! * [`ChannelTransport`] — in-process (one thread per PID); used by
+//!   tests and single-process multi-worker runs.
+//! * [`FileTransport`] — the paper's file-based messaging: messages
+//!   are files in a spool directory, delivered by atomic rename; works
+//!   across OS processes with no daemon.
+//!
+//! Every send/recv is counted by [`CommStats`] so the paper's central
+//! claim — *same-map STREAM performs zero communication* (Figure 2) —
+//! is asserted by tests rather than assumed.
+
+pub mod barrier;
+pub mod channel;
+pub mod counter;
+pub mod file_msg;
+pub mod protocol;
+
+pub use channel::{ChannelHub, ChannelTransport};
+pub use counter::CommStats;
+pub use file_msg::FileTransport;
+pub use protocol::{Decode, Encode, WireReader, WireWriter};
+
+use crate::dmap::Pid;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Message tag (sender-chosen; disambiguates concurrent streams).
+pub type Tag = u64;
+
+/// Reserved tags used by the library itself.
+pub mod tags {
+    use super::Tag;
+    /// Leader → worker run-configuration broadcast.
+    pub const CONFIG: Tag = 0xC0FF;
+    /// Worker → leader benchmark results.
+    pub const RESULT: Tag = 0x0BE5;
+    /// Barrier round-trips.
+    pub const BARRIER: Tag = 0xBA77;
+    /// Distributed-array remap payloads (base; +plan step).
+    pub const REMAP: Tag = 0x0E0A_0000;
+    /// Overlap/halo synchronization.
+    pub const HALO: Tag = 0x4A10_0000;
+    /// Aggregation (`agg()`) gathers.
+    pub const AGG: Tag = 0xA660_0000;
+}
+
+/// Errors surfaced by transports.
+#[derive(Debug, thiserror::Error)]
+pub enum CommError {
+    #[error("timeout waiting for message from {from} tag {tag:#x}")]
+    Timeout { from: Pid, tag: Tag },
+    #[error("peer {0} disconnected")]
+    Disconnected(Pid),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("malformed message: {0}")]
+    Malformed(String),
+}
+
+pub type Result<T> = std::result::Result<T, CommError>;
+
+/// Point-to-point messaging endpoint for one PID.
+///
+/// Semantics (matching MPI two-sided + pMatlab MatlabMPI):
+/// * `send` is asynchronous and ordered per (src, dst, tag);
+/// * `recv` blocks until a matching message arrives or `timeout`.
+pub trait Transport: Send + Sync {
+    /// This endpoint's PID.
+    fn pid(&self) -> Pid;
+    /// World size.
+    fn np(&self) -> usize;
+    /// Send `payload` to `to` under `tag`.
+    fn send(&self, to: Pid, tag: Tag, payload: &[u8]) -> Result<()>;
+    /// Blocking receive of the next message from `from` with `tag`.
+    fn recv_timeout(&self, from: Pid, tag: Tag, timeout: Duration) -> Result<Vec<u8>>;
+    /// Communication statistics for this endpoint.
+    fn stats(&self) -> &CommStats;
+
+    /// Blocking receive with the default (generous) timeout.
+    fn recv(&self, from: Pid, tag: Tag) -> Result<Vec<u8>> {
+        self.recv_timeout(from, tag, Duration::from_secs(120))
+    }
+}
+
+/// A `Transport` handle that can be shared across threads.
+pub type SharedTransport = Arc<dyn Transport>;

@@ -1,0 +1,245 @@
+//! Wire codec — hand-rolled little-endian encoding (no serde in the
+//! offline environment; building the codec is part of the substrate).
+//!
+//! Framing: values are written in declaration order; variable-length
+//! values carry a u64 length prefix. All multi-byte values are LE.
+
+use super::{CommError, Result};
+
+/// Append-only wire writer.
+#[derive(Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        WireWriter { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_usize(&mut self, v: usize) {
+        self.put_u64(v as u64);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(u8::from(v));
+    }
+
+    pub fn put_bytes(&mut self, v: &[u8]) {
+        self.put_u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn put_str(&mut self, v: &str) {
+        self.put_bytes(v.as_bytes());
+    }
+
+    /// Bulk f64 slice — the hot payload type (vector fragments).
+    pub fn put_f64_slice(&mut self, v: &[f64]) {
+        self.put_u64(v.len() as u64);
+        // Safe per-element encode; LLVM vectorizes this loop.
+        self.buf.reserve(v.len() * 8);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Cursor-based wire reader.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        WireReader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(CommError::Malformed(format!(
+                "need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_usize(&mut self) -> Result<usize> {
+        Ok(self.get_u64()? as usize)
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        Ok(self.get_u8()? != 0)
+    }
+
+    pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_usize()?;
+        self.take(n)
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let b = self.get_bytes()?;
+        String::from_utf8(b.to_vec())
+            .map_err(|e| CommError::Malformed(format!("bad utf8: {e}")))
+    }
+
+    pub fn get_f64_vec(&mut self) -> Result<Vec<f64>> {
+        let n = self.get_usize()?;
+        let bytes = self.take(n * 8)?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(8) {
+            out.push(f64::from_le_bytes(c.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+
+    /// Decode an f64 slice directly into `dst` (remap hot path — no
+    /// intermediate allocation).
+    pub fn get_f64_into(&mut self, dst: &mut [f64]) -> Result<()> {
+        let n = self.get_usize()?;
+        if n != dst.len() {
+            return Err(CommError::Malformed(format!(
+                "f64 slice length {n} != destination {}",
+                dst.len()
+            )));
+        }
+        let bytes = self.take(n * 8)?;
+        for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(8)) {
+            *d = f64::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+/// Types that can serialize themselves onto the wire.
+pub trait Encode {
+    fn encode(&self, w: &mut WireWriter);
+
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut w = WireWriter::new();
+        self.encode(&mut w);
+        w.finish()
+    }
+}
+
+/// Types that can deserialize themselves from the wire.
+pub trait Decode: Sized {
+    fn decode(r: &mut WireReader) -> Result<Self>;
+
+    fn from_bytes(b: &[u8]) -> Result<Self> {
+        Self::decode(&mut WireReader::new(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut w = WireWriter::new();
+        w.put_u8(7);
+        w.put_u64(u64::MAX - 1);
+        w.put_i64(-42);
+        w.put_f64(std::f64::consts::PI);
+        w.put_bool(true);
+        w.put_str("stream");
+        let buf = w.finish();
+        let mut r = WireReader::new(&buf);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.get_i64().unwrap(), -42);
+        assert_eq!(r.get_f64().unwrap(), std::f64::consts::PI);
+        assert!(r.get_bool().unwrap());
+        assert_eq!(r.get_str().unwrap(), "stream");
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn f64_slice_roundtrip() {
+        let v: Vec<f64> = (0..1000).map(|i| i as f64 * 0.5).collect();
+        let mut w = WireWriter::new();
+        w.put_f64_slice(&v);
+        let buf = w.finish();
+        let mut r = WireReader::new(&buf);
+        assert_eq!(r.get_f64_vec().unwrap(), v);
+    }
+
+    #[test]
+    fn f64_into_checks_length() {
+        let mut w = WireWriter::new();
+        w.put_f64_slice(&[1.0, 2.0]);
+        let buf = w.finish();
+        let mut dst = [0.0; 3];
+        assert!(WireReader::new(&buf).get_f64_into(&mut dst).is_err());
+        let mut dst = [0.0; 2];
+        WireReader::new(&buf).get_f64_into(&mut dst).unwrap();
+        assert_eq!(dst, [1.0, 2.0]);
+    }
+
+    #[test]
+    fn truncated_buffer_is_error_not_panic() {
+        let mut w = WireWriter::new();
+        w.put_u64(5);
+        let buf = w.finish();
+        let mut r = WireReader::new(&buf[..4]);
+        assert!(r.get_u64().is_err());
+    }
+}

@@ -1,0 +1,151 @@
+//! Run-configuration files — JSON configs for `repro run --config`.
+//!
+//! Example:
+//! ```json
+//! {
+//!   "triples": "1x4x1",
+//!   "n": 4194304,
+//!   "nt": 10,
+//!   "map": "block",
+//!   "engine": "native",
+//!   "artifacts": "artifacts"
+//! }
+//! ```
+
+use crate::coordinator::{EngineKind, MapKind, RunConfig};
+use crate::json::Json;
+use crate::launcher::Triples;
+use crate::stream::STREAM_Q;
+
+/// A full benchmark launch description: coordination config + triples.
+#[derive(Debug, Clone)]
+pub struct LaunchConfig {
+    pub triples: Triples,
+    pub run: RunConfig,
+}
+
+/// Errors loading a config file.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("parse: {0}")]
+    Json(#[from] crate::json::JsonError),
+    #[error("bad field '{0}': {1}")]
+    Field(&'static str, String),
+}
+
+impl LaunchConfig {
+    /// Built-in defaults (4 local processes, 2^22 elements, native).
+    pub fn default_config() -> LaunchConfig {
+        LaunchConfig {
+            triples: Triples::new(1, 4, 1),
+            run: RunConfig {
+                n_global: 1 << 22,
+                nt: 10,
+                q: STREAM_Q,
+                map: MapKind::Block,
+                engine: EngineKind::Native,
+                artifacts: "artifacts".into(),
+            },
+        }
+    }
+
+    /// Parse from JSON text; absent fields keep defaults.
+    pub fn from_json(text: &str) -> Result<LaunchConfig, ConfigError> {
+        let j = Json::parse(text)?;
+        let mut cfg = LaunchConfig::default_config();
+        if let Some(t) = j.get("triples") {
+            let s = t
+                .as_str()
+                .ok_or_else(|| ConfigError::Field("triples", "must be a string".into()))?;
+            cfg.triples = Triples::parse(s)
+                .ok_or_else(|| ConfigError::Field("triples", format!("bad spec '{s}'")))?;
+        }
+        if let Some(v) = j.get("n") {
+            cfg.run.n_global = v
+                .as_usize()
+                .ok_or_else(|| ConfigError::Field("n", "must be a number".into()))?;
+        }
+        if let Some(v) = j.get("nt") {
+            cfg.run.nt =
+                v.as_usize().ok_or_else(|| ConfigError::Field("nt", "must be a number".into()))?;
+        }
+        if let Some(v) = j.get("q") {
+            cfg.run.q =
+                v.as_f64().ok_or_else(|| ConfigError::Field("q", "must be a number".into()))?;
+        }
+        if let Some(v) = j.get("map") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| ConfigError::Field("map", "must be a string".into()))?;
+            cfg.run.map = MapKind::parse(s)
+                .ok_or_else(|| ConfigError::Field("map", format!("unknown map '{s}'")))?;
+        }
+        if let Some(v) = j.get("engine") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| ConfigError::Field("engine", "must be a string".into()))?;
+            cfg.run.engine = EngineKind::parse(s)
+                .ok_or_else(|| ConfigError::Field("engine", format!("unknown engine '{s}'")))?;
+        }
+        if let Some(v) = j.get("artifacts") {
+            cfg.run.artifacts = v
+                .as_str()
+                .ok_or_else(|| ConfigError::Field("artifacts", "must be a string".into()))?
+                .to_string();
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &str) -> Result<LaunchConfig, ConfigError> {
+        Self::from_json(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_config_parses() {
+        let cfg = LaunchConfig::from_json(
+            r#"{"triples": "2x4x2", "n": 1024, "nt": 3, "q": 0.5,
+                "map": "blockcyclic:16", "engine": "pjrt-fused",
+                "artifacts": "art"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.triples, Triples::new(2, 4, 2));
+        assert_eq!(cfg.run.n_global, 1024);
+        assert_eq!(cfg.run.nt, 3);
+        assert_eq!(cfg.run.q, 0.5);
+        assert_eq!(cfg.run.map, MapKind::BlockCyclic { block_size: 16 });
+        assert_eq!(cfg.run.engine, EngineKind::PjrtFused);
+        assert_eq!(cfg.run.artifacts, "art");
+    }
+
+    #[test]
+    fn partial_config_keeps_defaults() {
+        let cfg = LaunchConfig::from_json(r#"{"n": 99}"#).unwrap();
+        assert_eq!(cfg.run.n_global, 99);
+        assert_eq!(cfg.run.nt, 10);
+        assert_eq!(cfg.run.map, MapKind::Block);
+    }
+
+    #[test]
+    fn bad_fields_are_specific_errors() {
+        assert!(matches!(
+            LaunchConfig::from_json(r#"{"triples": "nope"}"#),
+            Err(ConfigError::Field("triples", _))
+        ));
+        assert!(matches!(
+            LaunchConfig::from_json(r#"{"engine": "cuda"}"#),
+            Err(ConfigError::Field("engine", _))
+        ));
+        assert!(matches!(
+            LaunchConfig::from_json("{"),
+            Err(ConfigError::Json(_))
+        ));
+    }
+}

@@ -1,0 +1,95 @@
+//! Leader side: broadcast config, run own share, gather reports.
+
+use super::results::{RunConfig, WorkerReport};
+use super::worker::run_configured_stream;
+use crate::comm::{tags, Decode, Encode, Result, Transport};
+use crate::stream::{aggregate, AggregateResult, StreamResult};
+
+/// Run a coordinated STREAM benchmark from PID 0's endpoint.
+///
+/// Broadcasts `cfg`, runs PID 0's own share, gathers every worker's
+/// report, and returns (aggregate, per-process results).
+pub fn run_leader(
+    t: &dyn Transport,
+    cfg: &RunConfig,
+) -> Result<(AggregateResult, Vec<StreamResult>)> {
+    assert_eq!(t.pid(), 0, "run_leader must be called on PID 0");
+    let np = t.np();
+    let payload = cfg.to_bytes();
+    for to in 1..np {
+        t.send(to, tags::CONFIG, &payload)?;
+    }
+    let mut results = Vec::with_capacity(np);
+    results.push(run_configured_stream(cfg, 0, np));
+    for from in 1..np {
+        let report = WorkerReport::from_bytes(&t.recv(from, tags::RESULT)?)?;
+        results.push(report.to_result());
+    }
+    let agg = aggregate(&results).expect("np >= 1");
+    Ok((agg, results))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+    use crate::coordinator::results::{EngineKind, MapKind};
+    use crate::coordinator::worker::run_worker;
+    use crate::stream::STREAM_Q;
+    use std::thread;
+
+    fn cfg(n: usize, nt: usize, map: MapKind) -> RunConfig {
+        RunConfig {
+            n_global: n,
+            nt,
+            q: STREAM_Q,
+            map,
+            engine: EngineKind::Native,
+            artifacts: "artifacts".into(),
+        }
+    }
+
+    #[test]
+    fn leader_and_workers_coordinate_over_channels() {
+        let np = 4;
+        let mut world = ChannelHub::world(np);
+        let leader = world.remove(0);
+        let mut handles = Vec::new();
+        for t in world {
+            handles.push(thread::spawn(move || run_worker(&t).unwrap()));
+        }
+        let (agg, results) = run_leader(&leader, &cfg(1 << 14, 3, MapKind::Block)).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(agg.np, np);
+        assert!(agg.all_valid, "worst err {}", agg.worst_err);
+        let covered: usize = results.iter().map(|r| r.n_local).sum();
+        assert_eq!(covered, 1 << 14);
+    }
+
+    #[test]
+    fn cyclic_map_through_the_full_protocol() {
+        let np = 3;
+        let mut world = ChannelHub::world(np);
+        let leader = world.remove(0);
+        let handles: Vec<_> = world
+            .into_iter()
+            .map(|t| thread::spawn(move || run_worker(&t).unwrap()))
+            .collect();
+        let (agg, _) = run_leader(&leader, &cfg(3000, 2, MapKind::Cyclic)).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(agg.all_valid);
+    }
+
+    #[test]
+    fn single_process_world() {
+        let mut world = ChannelHub::world(1);
+        let leader = world.pop().unwrap();
+        let (agg, _) = run_leader(&leader, &cfg(4096, 2, MapKind::Block)).unwrap();
+        assert!(agg.all_valid);
+        assert!(leader.stats().is_silent(), "np=1 needs no messages");
+    }
+}

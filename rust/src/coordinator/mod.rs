@@ -1,0 +1,18 @@
+//! Leader/worker coordination — the client-server model of §II
+//! applied as the paper applies it: workers run the benchmark
+//! independently and "communicate only with the leader"; results are
+//! aggregated at the end over the messaging transport (§V).
+//!
+//! Protocol (tags in [`crate::comm::tags`]):
+//! 1. leader broadcasts [`RunConfig`] (CONFIG) to every worker;
+//! 2. everyone (leader included) runs the configured STREAM;
+//! 3. workers send a [`WorkerReport`] (RESULT); the leader folds them
+//!    into an [`crate::stream::AggregateResult`].
+
+pub mod leader;
+pub mod results;
+pub mod worker;
+
+pub use leader::run_leader;
+pub use results::{EngineKind, MapKind, RunConfig, WorkerReport};
+pub use worker::{run_configured_stream, run_worker};

@@ -1,0 +1,275 @@
+//! Wire types for the leader/worker protocol.
+
+use crate::comm::{CommError, Decode, Encode, WireReader, WireWriter};
+use crate::dmap::Dmap;
+use crate::stream::timing::OpTimes;
+use crate::stream::validate::ValidationReport;
+use crate::stream::StreamResult;
+
+/// Which distribution the benchmark vectors use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapKind {
+    Block,
+    Cyclic,
+    BlockCyclic { block_size: usize },
+}
+
+impl MapKind {
+    pub fn to_map(&self, np: usize) -> Dmap {
+        match *self {
+            MapKind::Block => Dmap::block_1d(np),
+            MapKind::Cyclic => Dmap::cyclic_1d(np),
+            MapKind::BlockCyclic { block_size } => Dmap::block_cyclic_1d(np, block_size),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<MapKind> {
+        match s {
+            "block" => Some(MapKind::Block),
+            "cyclic" => Some(MapKind::Cyclic),
+            _ => s
+                .strip_prefix("blockcyclic:")
+                .and_then(|bs| bs.parse().ok())
+                .map(|block_size| MapKind::BlockCyclic { block_size }),
+        }
+    }
+
+    fn code(&self) -> (u8, u64) {
+        match *self {
+            MapKind::Block => (0, 0),
+            MapKind::Cyclic => (1, 0),
+            MapKind::BlockCyclic { block_size } => (2, block_size as u64),
+        }
+    }
+}
+
+/// Which engine executes the STREAM ops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Native Rust loops (primary measurement engine).
+    Native,
+    /// PJRT-executed AOT artifacts, one call per op (faithful to
+    /// Algorithm 1's four separately-timed operations).
+    Pjrt,
+    /// PJRT fused-step artifact, one call per iteration (the L1
+    /// fusion optimization surfaced at L3 — see EXPERIMENTS.md §Perf).
+    PjrtFused,
+}
+
+impl EngineKind {
+    pub fn parse(s: &str) -> Option<EngineKind> {
+        match s {
+            "native" => Some(EngineKind::Native),
+            "pjrt" => Some(EngineKind::Pjrt),
+            "pjrt-fused" => Some(EngineKind::PjrtFused),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Pjrt => "pjrt",
+            EngineKind::PjrtFused => "pjrt-fused",
+        }
+    }
+}
+
+/// The leader's run configuration, broadcast to every worker.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// Global vector length N.
+    pub n_global: usize,
+    /// Trials.
+    pub nt: usize,
+    /// Scale factor (√2−1 by default).
+    pub q: f64,
+    pub map: MapKind,
+    pub engine: EngineKind,
+    /// Artifacts directory for the PJRT engine.
+    pub artifacts: String,
+}
+
+impl Encode for RunConfig {
+    fn encode(&self, w: &mut WireWriter) {
+        w.put_usize(self.n_global);
+        w.put_usize(self.nt);
+        w.put_f64(self.q);
+        let (mc, mb) = self.map.code();
+        w.put_u8(mc);
+        w.put_u64(mb);
+        w.put_u8(match self.engine {
+            EngineKind::Native => 0,
+            EngineKind::Pjrt => 1,
+            EngineKind::PjrtFused => 2,
+        });
+        w.put_str(&self.artifacts);
+    }
+}
+
+impl Decode for RunConfig {
+    fn decode(r: &mut WireReader) -> crate::comm::Result<Self> {
+        let n_global = r.get_usize()?;
+        let nt = r.get_usize()?;
+        let q = r.get_f64()?;
+        let mc = r.get_u8()?;
+        let mb = r.get_u64()?;
+        let map = match mc {
+            0 => MapKind::Block,
+            1 => MapKind::Cyclic,
+            2 => MapKind::BlockCyclic { block_size: mb as usize },
+            x => return Err(CommError::Malformed(format!("bad map code {x}"))),
+        };
+        let engine = match r.get_u8()? {
+            0 => EngineKind::Native,
+            1 => EngineKind::Pjrt,
+            2 => EngineKind::PjrtFused,
+            x => return Err(CommError::Malformed(format!("bad engine code {x}"))),
+        };
+        let artifacts = r.get_str()?;
+        Ok(RunConfig { n_global, nt, q, map, engine, artifacts })
+    }
+}
+
+/// One process's benchmark report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerReport {
+    pub pid: usize,
+    pub n_global: usize,
+    pub n_local: usize,
+    pub nt: usize,
+    pub times: [f64; 4],
+    pub passed: bool,
+    pub errs: [f64; 3],
+}
+
+impl WorkerReport {
+    pub fn from_result(pid: usize, r: &StreamResult) -> Self {
+        WorkerReport {
+            pid,
+            n_global: r.n_global,
+            n_local: r.n_local,
+            nt: r.nt,
+            times: r.times.as_array(),
+            passed: r.validation.passed,
+            errs: [r.validation.err_a, r.validation.err_b, r.validation.err_c],
+        }
+    }
+
+    pub fn to_result(&self) -> StreamResult {
+        StreamResult {
+            n_global: self.n_global,
+            n_local: self.n_local,
+            nt: self.nt,
+            times: OpTimes {
+                copy: self.times[0],
+                scale: self.times[1],
+                add: self.times[2],
+                triad: self.times[3],
+            },
+            validation: ValidationReport {
+                passed: self.passed,
+                err_a: self.errs[0],
+                err_b: self.errs[1],
+                err_c: self.errs[2],
+            },
+        }
+    }
+}
+
+impl Encode for WorkerReport {
+    fn encode(&self, w: &mut WireWriter) {
+        w.put_usize(self.pid);
+        w.put_usize(self.n_global);
+        w.put_usize(self.n_local);
+        w.put_usize(self.nt);
+        for t in self.times {
+            w.put_f64(t);
+        }
+        w.put_bool(self.passed);
+        for e in self.errs {
+            w.put_f64(e);
+        }
+    }
+}
+
+impl Decode for WorkerReport {
+    fn decode(r: &mut WireReader) -> crate::comm::Result<Self> {
+        let pid = r.get_usize()?;
+        let n_global = r.get_usize()?;
+        let n_local = r.get_usize()?;
+        let nt = r.get_usize()?;
+        let mut times = [0.0; 4];
+        for t in &mut times {
+            *t = r.get_f64()?;
+        }
+        let passed = r.get_bool()?;
+        let mut errs = [0.0; 3];
+        for e in &mut errs {
+            *e = r.get_f64()?;
+        }
+        Ok(WorkerReport { pid, n_global, n_local, nt, times, passed, errs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runconfig_roundtrip() {
+        let c = RunConfig {
+            n_global: 1 << 20,
+            nt: 10,
+            q: crate::stream::STREAM_Q,
+            map: MapKind::BlockCyclic { block_size: 64 },
+            engine: EngineKind::Pjrt,
+            artifacts: "artifacts".into(),
+        };
+        let got = RunConfig::from_bytes(&c.to_bytes()).unwrap();
+        assert_eq!(got, c);
+    }
+
+    #[test]
+    fn report_roundtrip() {
+        let rep = WorkerReport {
+            pid: 3,
+            n_global: 100,
+            n_local: 25,
+            nt: 10,
+            times: [0.1, 0.2, 0.3, 0.4],
+            passed: true,
+            errs: [0.0, 1e-16, 0.0],
+        };
+        let got = WorkerReport::from_bytes(&rep.to_bytes()).unwrap();
+        assert_eq!(got, rep);
+        let r = got.to_result();
+        assert_eq!(r.times.triad, 0.4);
+        assert!(r.validation.passed);
+    }
+
+    #[test]
+    fn mapkind_parse() {
+        assert_eq!(MapKind::parse("block"), Some(MapKind::Block));
+        assert_eq!(MapKind::parse("cyclic"), Some(MapKind::Cyclic));
+        assert_eq!(
+            MapKind::parse("blockcyclic:16"),
+            Some(MapKind::BlockCyclic { block_size: 16 })
+        );
+        assert_eq!(MapKind::parse("huh"), None);
+    }
+
+    #[test]
+    fn truncated_config_is_error() {
+        let c = RunConfig {
+            n_global: 8,
+            nt: 1,
+            q: 0.5,
+            map: MapKind::Block,
+            engine: EngineKind::Native,
+            artifacts: String::new(),
+        };
+        let bytes = c.to_bytes();
+        assert!(RunConfig::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+    }
+}

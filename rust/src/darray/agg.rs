@@ -1,0 +1,102 @@
+//! `agg()` — gather a distributed array to the leader (pMatlab's
+//! aggregation; used at the end of a run "the results were aggregated
+//! using asynchronous file-based messaging" §V).
+
+use super::dense::Darray;
+use super::Result;
+use crate::comm::{tags, Transport, WireReader, WireWriter};
+use crate::dmap::Partition;
+
+impl Darray {
+    /// Gather the full global array onto PID 0.
+    ///
+    /// Returns `Some(global)` on the leader, `None` elsewhere. SPMD:
+    /// every PID in the map must call with the same `epoch`.
+    pub fn agg(&self, t: &dyn Transport, epoch: u64) -> Result<Option<Vec<f64>>> {
+        let tag = tags::AGG ^ (epoch << 8);
+        let part = Partition::of(self.map(), &self.shape().to_vec());
+        if self.pid() == 0 {
+            let mut global = vec![0.0f64; self.global_len()];
+            // Own pieces first.
+            let mut off = 0usize;
+            for r in part.ranges_of(0) {
+                global[r.lo..r.hi].copy_from_slice(&self.loc()[off..off + r.len()]);
+                off += r.len();
+            }
+            // Then one message per other PID.
+            for &pid in self.map().pids() {
+                if pid == 0 {
+                    continue;
+                }
+                let payload = t.recv(pid, tag)?;
+                let mut rd = WireReader::new(&payload);
+                let data = rd.get_f64_vec()?;
+                let mut off = 0usize;
+                for r in part.ranges_of(pid) {
+                    global[r.lo..r.hi].copy_from_slice(&data[off..off + r.len()]);
+                    off += r.len();
+                }
+            }
+            Ok(Some(global))
+        } else {
+            let mut w = WireWriter::with_capacity(16 + 8 * self.local_len());
+            w.put_f64_slice(self.loc());
+            t.send(0, tag, &w.finish())?;
+            Ok(None)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+    use crate::dmap::Dmap;
+    use std::thread;
+
+    fn run_agg(map_for: impl Fn(usize) -> Dmap + Send + Sync + 'static, n: usize, np: usize) {
+        let world = ChannelHub::world(np);
+        let f = std::sync::Arc::new(map_for);
+        let mut hs = Vec::new();
+        for t in world {
+            let f = f.clone();
+            hs.push(thread::spawn(move || {
+                let pid = t.pid();
+                let a = Darray::from_global_fn(f(np), &[n], pid, |g| g as f64 + 0.25);
+                let got = a.agg(&t, 0).unwrap();
+                if pid == 0 {
+                    let g = got.expect("leader gets the global array");
+                    assert_eq!(g.len(), n);
+                    for (i, v) in g.iter().enumerate() {
+                        assert_eq!(*v, i as f64 + 0.25);
+                    }
+                } else {
+                    assert!(got.is_none());
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn agg_block() {
+        run_agg(Dmap::block_1d, 103, 4);
+    }
+
+    #[test]
+    fn agg_cyclic() {
+        run_agg(Dmap::cyclic_1d, 64, 5);
+    }
+
+    #[test]
+    fn agg_block_cyclic() {
+        run_agg(|np| Dmap::block_cyclic_1d(np, 3), 50, 3);
+    }
+
+    #[test]
+    fn agg_single_pid() {
+        run_agg(Dmap::block_1d, 17, 1);
+    }
+}

@@ -1,0 +1,213 @@
+//! The [`Darray`] container: map + global shape + local storage.
+
+use super::{DarrayError, Result};
+use crate::dmap::{Dmap, Pid};
+
+/// One PID's view of a distributed dense f64 array.
+///
+/// Storage covers the *stored* region (owned + halo); for 1-D block
+/// maps the halo is a suffix, so `loc()` is always a prefix slice.
+#[derive(Debug, Clone)]
+pub struct Darray {
+    map: Dmap,
+    shape: Vec<usize>,
+    pid: Pid,
+    /// Row-major over `map.stored_shape(pid, shape)`.
+    data: Vec<f64>,
+    /// Cached: number of *owned* elements (prefix of `data` for 1-D).
+    owned: usize,
+}
+
+impl Darray {
+    /// Allocate the local part of a zero-filled distributed array.
+    pub fn zeros(map: Dmap, shape: &[usize], pid: Pid) -> Self {
+        assert_eq!(map.ndim(), shape.len(), "map/shape rank mismatch");
+        assert!(map.contains(pid), "PID {pid} not in map");
+        let stored: usize = map.stored_shape(pid, shape).iter().product();
+        let owned: usize = map.local_shape(pid, shape).iter().product();
+        Darray {
+            map,
+            shape: shape.to_vec(),
+            pid,
+            data: vec![0.0; stored],
+            owned,
+        }
+    }
+
+    /// Allocate with every owned element set to `v` (the Code Listing
+    /// idiom `local(zeros(1,N,map)) + A0`).
+    pub fn constant(map: Dmap, shape: &[usize], pid: Pid, v: f64) -> Self {
+        let mut a = Self::zeros(map, shape, pid);
+        a.fill(v);
+        a
+    }
+
+    /// Initialize each owned element from its **global** flat index —
+    /// deterministic across any map (test workhorse).
+    pub fn from_global_fn(map: Dmap, shape: &[usize], pid: Pid, f: impl Fn(usize) -> f64) -> Self {
+        let mut a = Self::zeros(map, shape, pid);
+        let part = crate::dmap::Partition::of(&a.map, &a.shape);
+        let mut off = 0usize;
+        for r in part.ranges_of(pid) {
+            for g in r.lo..r.hi {
+                a.data[off] = f(g);
+                off += 1;
+            }
+        }
+        debug_assert_eq!(off, a.owned);
+        a
+    }
+
+    pub fn map(&self) -> &Dmap {
+        &self.map
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn pid(&self) -> Pid {
+        self.pid
+    }
+
+    /// Global element count.
+    pub fn global_len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Owned element count on this PID.
+    pub fn local_len(&self) -> usize {
+        self.owned
+    }
+
+    /// The paper's `.loc`: immutable view of the owned region.
+    #[inline]
+    pub fn loc(&self) -> &[f64] {
+        &self.data[..self.owned]
+    }
+
+    /// The paper's `.loc` (mutable).
+    #[inline]
+    pub fn loc_mut(&mut self) -> &mut [f64] {
+        &mut self.data[..self.owned]
+    }
+
+    /// Stored region (owned + halo).
+    pub fn stored(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn stored_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Set every owned element.
+    pub fn fill(&mut self, v: f64) {
+        for x in self.loc_mut() {
+            *x = v;
+        }
+    }
+
+    /// Are `self` and `other` compatible for owner-computes ops?
+    pub fn check_aligned(&self, other: &Darray) -> Result<()> {
+        if self.shape != other.shape {
+            return Err(DarrayError::ShapeMismatch {
+                a: self.shape.clone(),
+                b: other.shape.clone(),
+            });
+        }
+        if self.pid != other.pid {
+            return Err(DarrayError::PidMismatch { a: self.pid, b: other.pid });
+        }
+        if !self.map.aligned_with(&other.map, &self.shape) {
+            return Err(DarrayError::NotAligned { shape: self.shape.clone() });
+        }
+        Ok(())
+    }
+
+    /// Read the value at a global flat index **if** this PID owns it.
+    pub fn global_get(&self, gflat: usize) -> Option<f64> {
+        let part = crate::dmap::Partition::of(&self.map, &self.shape);
+        if part.owner_of(gflat)? != self.pid {
+            return None;
+        }
+        let mut off = 0usize;
+        for r in part.ranges_of(self.pid) {
+            if gflat >= r.lo && gflat < r.hi {
+                return Some(self.data[off + (gflat - r.lo)]);
+            }
+            off += r.len();
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dmap::Dmap;
+
+    #[test]
+    fn zeros_allocates_local_only() {
+        let a = Darray::zeros(Dmap::block_1d(4), &[100], 1);
+        assert_eq!(a.local_len(), 25);
+        assert_eq!(a.global_len(), 100);
+        assert!(a.loc().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn uneven_block_sizes() {
+        // 10 over 4 → block quantum 3: 3,3,3,1.
+        let sizes: Vec<usize> = (0..4)
+            .map(|p| Darray::zeros(Dmap::block_1d(4), &[10], p).local_len())
+            .collect();
+        assert_eq!(sizes, vec![3, 3, 3, 1]);
+    }
+
+    #[test]
+    fn constant_fills_owned() {
+        let a = Darray::constant(Dmap::block_1d(2), &[8], 0, 2.5);
+        assert!(a.loc().iter().all(|&x| x == 2.5));
+    }
+
+    #[test]
+    fn from_global_fn_block_and_cyclic_agree_globally() {
+        for map in [Dmap::block_1d(3), Dmap::cyclic_1d(3)] {
+            for pid in 0..3 {
+                let a = Darray::from_global_fn(map.clone(), &[11], pid, |g| g as f64);
+                for g in 0..11 {
+                    if let Some(v) = a.global_get(g) {
+                        assert_eq!(v, g as f64, "{map:?} pid={pid} g={g}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn global_get_respects_ownership() {
+        let a = Darray::from_global_fn(Dmap::block_1d(4), &[16], 2, |g| g as f64);
+        assert_eq!(a.global_get(8), Some(8.0)); // pid 2 owns [8,12)
+        assert_eq!(a.global_get(0), None);
+        assert_eq!(a.global_get(100), None);
+    }
+
+    #[test]
+    fn halo_storage_is_suffix() {
+        let a = Darray::zeros(Dmap::block_1d_overlap(2, 2), &[10], 0);
+        assert_eq!(a.local_len(), 5);
+        assert_eq!(a.stored().len(), 7);
+    }
+
+    #[test]
+    fn check_aligned_catches_mismatch() {
+        let a = Darray::zeros(Dmap::block_1d(4), &[64], 0);
+        let b = Darray::zeros(Dmap::cyclic_1d(4), &[64], 0);
+        assert!(matches!(
+            a.check_aligned(&b),
+            Err(DarrayError::NotAligned { .. })
+        ));
+        let c = Darray::zeros(Dmap::block_1d(4), &[64], 0);
+        assert!(a.check_aligned(&c).is_ok());
+    }
+}

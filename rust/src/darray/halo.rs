@@ -1,0 +1,129 @@
+//! Overlap (halo) synchronization — Figure 1's "overlap" mapping:
+//! "Overlap allows the boundaries of an array to be stored on two
+//! neighboring PIDs" and is "implicitly communicated to complete the
+//! computation".
+//!
+//! [`Darray::sync_halo`] refreshes each PID's halo suffix from the
+//! owner (its right neighbour). Supported for 1-D block maps, the
+//! form pMatlab supports.
+
+use super::dense::Darray;
+use super::{DarrayError, Result};
+use crate::comm::{tags, Transport, WireReader, WireWriter};
+use crate::dmap::Dist;
+
+impl Darray {
+    /// Refresh this PID's halo from its right neighbour. SPMD.
+    pub fn sync_halo(&mut self, t: &dyn Transport, epoch: u64) -> Result<()> {
+        if self.map().ndim() != 1 {
+            return Err(DarrayError::Unsupported(
+                "halo sync supported for 1-D block maps only".into(),
+            ));
+        }
+        let ov = self.map().overlaps()[0];
+        if ov.is_none() {
+            return Ok(());
+        }
+        let dist = self.map().dists()[0];
+        if !matches!(dist, Dist::Block) {
+            return Err(DarrayError::Unsupported(
+                "overlap requires a block distribution".into(),
+            ));
+        }
+        let n = self.shape()[0];
+        let g = self.map().grid().dim(0);
+        let me = self.pid();
+        let coord = self.map().coord_of(me)[0];
+        let tag = tags::HALO ^ (epoch << 8);
+
+        // Send: my leading elements to my LEFT neighbour (they store my
+        // boundary as their halo).
+        if coord > 0 {
+            let left = self.map().pid_at(&[coord - 1]);
+            if let Some((lo, hi)) = ov.halo_range(&dist, coord - 1, n, g) {
+                // Their halo range [lo,hi) is global; it lives at the
+                // head of MY owned region.
+                let my_lo = dist.local_to_global(coord, 0, n, g);
+                let s = lo - my_lo;
+                let e = hi - my_lo;
+                let mut w = WireWriter::with_capacity(16 + 8 * (e - s));
+                w.put_f64_slice(&self.loc()[s..e]);
+                t.send(left, tag, &w.finish())?;
+            }
+        }
+        // Receive: my halo suffix from my RIGHT neighbour.
+        if let Some((lo, hi)) = ov.halo_range(&dist, coord, n, g) {
+            let right = self.map().pid_at(&[coord + 1]);
+            let payload = t.recv(right, tag)?;
+            let mut rd = WireReader::new(&payload);
+            let owned = self.local_len();
+            let halo_len = hi - lo;
+            let stored = self.stored_mut();
+            rd.get_f64_into(&mut stored[owned..owned + halo_len])?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+    use crate::dmap::Dmap;
+    use std::thread;
+
+    #[test]
+    fn halo_reflects_neighbour_values() {
+        let np = 4;
+        let n = 20;
+        let world = ChannelHub::world(np);
+        let mut hs = Vec::new();
+        for t in world {
+            hs.push(thread::spawn(move || {
+                let pid = t.pid();
+                let mut a =
+                    Darray::from_global_fn(Dmap::block_1d_overlap(np, 2), &[n], pid, |g| g as f64);
+                a.sync_halo(&t, 0).unwrap();
+                // Each of pids 0..2 owns 5 elems and stores 2 halo elems
+                // equal to the next two global values.
+                let owned = a.local_len();
+                let stored = a.stored();
+                if pid < np - 1 {
+                    let my_hi = (pid + 1) * 5;
+                    assert_eq!(stored[owned], my_hi as f64);
+                    assert_eq!(stored[owned + 1], (my_hi + 1) as f64);
+                } else {
+                    assert_eq!(stored.len(), owned);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn no_overlap_sync_is_silent_noop() {
+        let mut world = ChannelHub::world(1);
+        let t = world.pop().unwrap();
+        let mut a = Darray::zeros(Dmap::block_1d(1), &[8], 0);
+        a.sync_halo(&t, 0).unwrap();
+        assert!(t.stats().is_silent());
+    }
+
+    #[test]
+    fn halo_on_cyclic_is_error() {
+        let mut world = ChannelHub::world(1);
+        let t = world.pop().unwrap();
+        // construct a cyclic map with overlap manually
+        use crate::dmap::{Dist, Grid, Overlap};
+        let m = crate::dmap::Dmap::new(
+            Grid::line(1),
+            vec![Dist::Cyclic],
+            vec![Overlap::new(1)],
+            vec![0],
+        );
+        let mut a = Darray::zeros(m, &[8], 0);
+        assert!(a.sync_halo(&t, 0).is_err());
+    }
+}

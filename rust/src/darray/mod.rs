@@ -1,0 +1,48 @@
+//! Distributed arrays (§II "distributed array model").
+//!
+//! A [`Darray`] is the SPMD view one PID holds of a global array: the
+//! shared [`Dmap`], the global shape, and **only the local part** —
+//! exactly like the paper's Code Listings, where `Aloc`, `Bloc`,
+//! `Cloc` are the only allocations ("the distributed arrays A, B, C
+//! are never actually allocated").
+//!
+//! * `loc()` / `loc_mut()` — the paper's `.loc` construct: guaranteed
+//!   zero-communication access to the owned region.
+//! * Owner-computes element-wise ops (`copy_from`, `scale_from`,
+//!   `add_from`, `triad_from`, `zip2`, …) require aligned maps and are
+//!   pure local loops — the "performance guarantee" property (§IV).
+//! * Global assignment [`Darray::assign_from`] is map-independent: if
+//!   the maps align it degenerates to a local copy; otherwise it runs
+//!   the remap communication plan (§IV map-independence discussion).
+
+pub mod agg;
+pub mod dense;
+pub mod halo;
+pub mod ops;
+pub mod pipeline;
+pub mod reduce;
+pub mod remap;
+pub mod subsref;
+
+pub use dense::Darray;
+pub use pipeline::{stage_map, StageArray};
+pub use reduce::{allreduce, ReduceOp};
+
+use thiserror::Error;
+
+/// Errors from distributed-array operations.
+#[derive(Debug, Error)]
+pub enum DarrayError {
+    #[error("maps are not aligned for shape {shape:?}; use assign_from (remap) instead")]
+    NotAligned { shape: Vec<usize> },
+    #[error("shape mismatch: {a:?} vs {b:?}")]
+    ShapeMismatch { a: Vec<usize>, b: Vec<usize> },
+    #[error("pid mismatch: {a} vs {b}")]
+    PidMismatch { a: usize, b: usize },
+    #[error("communication failed: {0}")]
+    Comm(#[from] crate::comm::CommError),
+    #[error("{0}")]
+    Unsupported(String),
+}
+
+pub type Result<T> = std::result::Result<T, DarrayError>;

@@ -1,0 +1,138 @@
+//! Owner-computes element-wise operations (§II "owner computes" rule).
+//!
+//! All ops here require aligned maps and touch only `.loc` — they are
+//! the paper's "performance guarantee" path: plain loops over local
+//! memory with no hidden communication. The four STREAM ops are
+//! first-class; `zip1`/`zip2` generalize.
+
+use super::dense::Darray;
+use super::Result;
+
+impl Darray {
+    /// STREAM Copy: `self.loc = a.loc`.
+    pub fn copy_from(&mut self, a: &Darray) -> Result<()> {
+        self.check_aligned(a)?;
+        self.loc_mut().copy_from_slice(a.loc());
+        Ok(())
+    }
+
+    /// STREAM Scale: `self.loc = q * c.loc`.
+    pub fn scale_from(&mut self, c: &Darray, q: f64) -> Result<()> {
+        self.check_aligned(c)?;
+        let dst = self.loc_mut();
+        let src = c.loc();
+        crate::stream::ops::scale(dst, src, q);
+        Ok(())
+    }
+
+    /// STREAM Add: `self.loc = a.loc + b.loc`.
+    pub fn add_from(&mut self, a: &Darray, b: &Darray) -> Result<()> {
+        self.check_aligned(a)?;
+        self.check_aligned(b)?;
+        crate::stream::ops::add(self.loc_mut(), a.loc(), b.loc());
+        Ok(())
+    }
+
+    /// STREAM Triad: `self.loc = b.loc + q * c.loc`.
+    pub fn triad_from(&mut self, b: &Darray, c: &Darray, q: f64) -> Result<()> {
+        self.check_aligned(b)?;
+        self.check_aligned(c)?;
+        crate::stream::ops::triad(self.loc_mut(), b.loc(), c.loc(), q);
+        Ok(())
+    }
+
+    /// General unary owner-computes: `self.loc[i] = f(a.loc[i])`.
+    pub fn zip1(&mut self, a: &Darray, f: impl Fn(f64) -> f64) -> Result<()> {
+        self.check_aligned(a)?;
+        for (d, &s) in self.loc_mut().iter_mut().zip(a.loc()) {
+            *d = f(s);
+        }
+        Ok(())
+    }
+
+    /// General binary owner-computes: `self.loc[i] = f(a.loc[i], b.loc[i])`.
+    pub fn zip2(&mut self, a: &Darray, b: &Darray, f: impl Fn(f64, f64) -> f64) -> Result<()> {
+        self.check_aligned(a)?;
+        self.check_aligned(b)?;
+        let dst = self.loc_mut();
+        for (i, d) in dst.iter_mut().enumerate() {
+            *d = f(a.loc()[i], b.loc()[i]);
+        }
+        Ok(())
+    }
+
+    /// Local sum (building block for distributed reductions).
+    pub fn local_sum(&self) -> f64 {
+        self.loc().iter().sum()
+    }
+
+    /// Local max-abs-deviation from a constant — the validation
+    /// primitive (§III): `max_i |loc[i] - v|`.
+    pub fn local_max_abs_dev(&self, v: f64) -> f64 {
+        self.loc()
+            .iter()
+            .map(|&x| (x - v).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dmap::Dmap;
+
+    fn abc(np: usize, pid: usize, n: usize) -> (Darray, Darray, Darray) {
+        let m = Dmap::block_1d(np);
+        (
+            Darray::constant(m.clone(), &[n], pid, 1.0),
+            Darray::constant(m.clone(), &[n], pid, 2.0),
+            Darray::constant(m, &[n], pid, 0.0),
+        )
+    }
+
+    #[test]
+    fn stream_ops_one_iteration_closed_form() {
+        let q = std::f64::consts::SQRT_2 - 1.0;
+        for pid in 0..4 {
+            let (mut a, mut b, mut c) = abc(4, pid, 64);
+            c.copy_from(&a).unwrap();
+            b.scale_from(&c, q).unwrap();
+            c.add_from(&a, &b).unwrap();
+            a.triad_from(&b, &c, q).unwrap();
+            // 2q + q² = 1 → A stays 1.0
+            assert!(a.local_max_abs_dev(1.0) < 1e-15);
+            assert!(b.local_max_abs_dev(q) < 1e-15);
+            assert!(c.local_max_abs_dev(1.0 + q) < 1e-15);
+        }
+    }
+
+    #[test]
+    fn mismatched_maps_rejected_not_silently_wrong() {
+        let a = Darray::constant(Dmap::block_1d(4), &[64], 0, 1.0);
+        let mut c = Darray::zeros(Dmap::cyclic_1d(4), &[64], 0);
+        assert!(c.copy_from(&a).is_err());
+    }
+
+    #[test]
+    fn zip2_general_op() {
+        let m = Dmap::cyclic_1d(2);
+        let a = Darray::from_global_fn(m.clone(), &[9], 1, |g| g as f64);
+        let b = Darray::constant(m.clone(), &[9], 1, 10.0);
+        let mut c = Darray::zeros(m, &[9], 1);
+        c.zip2(&a, &b, |x, y| x * y).unwrap();
+        // pid 1 owns odd indices 1,3,5,7
+        assert_eq!(c.loc(), &[10.0, 30.0, 50.0, 70.0]);
+    }
+
+    #[test]
+    fn local_sum_over_all_pids_is_global_sum() {
+        let n = 101;
+        let total: f64 = (0..3)
+            .map(|p| {
+                Darray::from_global_fn(Dmap::block_cyclic_1d(3, 7), &[n], p, |g| g as f64)
+                    .local_sum()
+            })
+            .sum();
+        assert_eq!(total, (n * (n - 1) / 2) as f64);
+    }
+}

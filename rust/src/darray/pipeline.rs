@@ -1,0 +1,224 @@
+//! Pipeline maps — §II: "Another example are pipelines which can be
+//! implemented by mapping different arrays to different sets of PIDs."
+//!
+//! A [`StageMap`] assigns an array to a *subset* of the world's PIDs;
+//! PIDs outside the stage hold an empty local part. Moving data
+//! between stages is a [`Darray::assign_from`]-style transfer between
+//! the two subsets' partitions.
+
+use super::dense::Darray;
+use super::Result;
+use crate::comm::{tags, Transport, WireReader, WireWriter};
+use crate::dmap::{Dist, Dmap, Grid, Overlap, Partition, Pid};
+
+const TAG_STAGE: u64 = tags::REMAP ^ 0x5700_0000;
+
+/// Build a 1-D block map over an explicit PID subset (a pipeline
+/// stage). The world may contain many more PIDs.
+pub fn stage_map(pids: &[Pid]) -> Dmap {
+    assert!(!pids.is_empty());
+    Dmap::new(
+        Grid::line(pids.len()),
+        vec![Dist::Block],
+        vec![Overlap::none()],
+        pids.to_vec(),
+    )
+}
+
+/// One PID's view of a pipeline stage's array: participants hold
+/// their local block, non-participants hold nothing.
+pub struct StageArray {
+    /// `Some` iff this PID participates in the stage.
+    pub local: Option<Darray>,
+    map: Dmap,
+    shape: Vec<usize>,
+    me: Pid,
+}
+
+impl StageArray {
+    /// Allocate the stage array on this PID (empty if not a member).
+    pub fn zeros(map: Dmap, shape: &[usize], me: Pid) -> StageArray {
+        let local = map.contains(me).then(|| Darray::zeros(map.clone(), shape, me));
+        StageArray { local, map, shape: shape.to_vec(), me }
+    }
+
+    pub fn map(&self) -> &Dmap {
+        &self.map
+    }
+
+    pub fn participates(&self) -> bool {
+        self.local.is_some()
+    }
+
+    /// Transfer this stage's content into `dst` (the next stage),
+    /// across possibly disjoint PID subsets. SPMD over the **union**
+    /// of both stages' PIDs (plus any others — non-members no-op).
+    pub fn send_to(&self, dst: &mut StageArray, t: &dyn Transport, epoch: u64) -> Result<()> {
+        assert_eq!(self.shape, dst.shape, "stage shapes must match");
+        let tag = TAG_STAGE ^ (epoch << 8);
+        let src_part = Partition::of(&self.map, &self.shape);
+        let dst_part = Partition::of(&dst.map, &self.shape);
+        let plan = src_part.transfers_to(&dst_part);
+
+        // Phase 1: source members push their pieces.
+        if let Some(src) = &self.local {
+            let offsets = offsets_of(&src_part, self.me);
+            for (step, &(sp, dp, r)) in plan.iter().enumerate() {
+                if sp != self.me {
+                    continue;
+                }
+                let s_off = lookup(&offsets, r.lo);
+                let slice = &src.loc()[s_off..s_off + r.len()];
+                if dp == self.me {
+                    if let Some(d) = &mut dst.local {
+                        let d_off = lookup(&offsets_of(&dst_part, self.me), r.lo);
+                        d.loc_mut()[d_off..d_off + r.len()].copy_from_slice(slice);
+                    }
+                } else {
+                    let mut w = WireWriter::with_capacity(16 + 8 * r.len());
+                    w.put_u64(step as u64);
+                    w.put_f64_slice(slice);
+                    t.send(dp, tag ^ step as u64, &w.finish())?;
+                }
+            }
+        }
+        // Phase 2: destination members pull their pieces.
+        if let Some(d) = &mut dst.local {
+            let offsets = offsets_of(&dst_part, self.me);
+            for (step, &(sp, dp, r)) in plan.iter().enumerate() {
+                if dp != self.me || sp == self.me {
+                    continue;
+                }
+                let payload = t.recv(sp, tag ^ step as u64)?;
+                let mut rd = WireReader::new(&payload);
+                let _step = rd.get_u64()?;
+                let d_off = lookup(&offsets, r.lo);
+                rd.get_f64_into(&mut d.loc_mut()[d_off..d_off + r.len()])?;
+            }
+        }
+        Ok(())
+    }
+}
+
+fn offsets_of(p: &Partition, pid: Pid) -> Vec<(usize, usize, usize)> {
+    let mut out = Vec::new();
+    let mut off = 0usize;
+    for r in p.ranges_of(pid) {
+        out.push((r.lo, r.len(), off));
+        off += r.len();
+    }
+    out
+}
+
+fn lookup(table: &[(usize, usize, usize)], g: usize) -> usize {
+    for &(lo, len, off) in table {
+        if g >= lo && g < lo + len {
+            return off + (g - lo);
+        }
+    }
+    panic!("global index {g} not owned");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+    use std::thread;
+
+    /// Two-stage pipeline over a 4-PID world: stage A on {0,1},
+    /// stage B on {2,3}. Stage A produces, transfers, stage B consumes.
+    #[test]
+    fn two_stage_pipeline_transfers_across_subsets() {
+        let np = 4;
+        let n = 1000;
+        let world = ChannelHub::world(np);
+        let hs: Vec<_> = world
+            .into_iter()
+            .map(|t| {
+                thread::spawn(move || {
+                    let me = t.pid();
+                    let m_a = stage_map(&[0, 1]);
+                    let m_b = stage_map(&[2, 3]);
+                    let mut a = StageArray::zeros(m_a, &[n], me);
+                    let mut b = StageArray::zeros(m_b, &[n], me);
+                    // Stage A computes (owner-computes on its subset).
+                    if let Some(arr) = &mut a.local {
+                        let base = crate::dmap::Partition::of(arr.map(), &[n]);
+                        let mut off = 0;
+                        let ranges = base.ranges_of(me);
+                        for r in ranges {
+                            for g in r.lo..r.hi {
+                                arr.loc_mut()[off] = (g * 2) as f64;
+                                off += 1;
+                            }
+                        }
+                    }
+                    // Transfer A → B.
+                    a.send_to(&mut b, &t, 0).unwrap();
+                    // Stage B verifies.
+                    if let Some(arr) = &b.local {
+                        for g in 0..n {
+                            if let Some(v) = arr.global_get(g) {
+                                assert_eq!(v, (g * 2) as f64, "pid {me} g={g}");
+                            }
+                        }
+                        true
+                    } else {
+                        assert!(me < 2);
+                        false
+                    }
+                })
+            })
+            .collect();
+        let consumed: Vec<bool> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(consumed.iter().filter(|&&c| c).count(), 2);
+    }
+
+    /// Overlapping stages (a PID in both) still transfer correctly.
+    #[test]
+    fn overlapping_stage_membership() {
+        let np = 3;
+        let n = 90;
+        let world = ChannelHub::world(np);
+        let hs: Vec<_> = world
+            .into_iter()
+            .map(|t| {
+                thread::spawn(move || {
+                    let me = t.pid();
+                    let m_a = stage_map(&[0, 1]);
+                    let m_b = stage_map(&[1, 2]);
+                    let mut a = StageArray::zeros(m_a, &[n], me);
+                    if let Some(arr) = &mut a.local {
+                        let part = crate::dmap::Partition::of(arr.map(), &[n]);
+                        let mut off = 0;
+                        for r in part.ranges_of(me) {
+                            for g in r.lo..r.hi {
+                                arr.loc_mut()[off] = g as f64 + 0.5;
+                                off += 1;
+                            }
+                        }
+                    }
+                    let mut b = StageArray::zeros(m_b, &[n], me);
+                    a.send_to(&mut b, &t, 1).unwrap();
+                    if let Some(arr) = &b.local {
+                        for g in 0..n {
+                            if let Some(v) = arr.global_get(g) {
+                                assert_eq!(v, g as f64 + 0.5);
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn stage_map_requires_pids() {
+        let m = stage_map(&[5, 9]);
+        assert!(m.contains(5) && m.contains(9) && !m.contains(0));
+        assert_eq!(m.np(), 2);
+    }
+}

@@ -1,0 +1,198 @@
+//! Distributed reductions — the collective building blocks a pMatlab
+//! user gets from `sum(A)`, `min(A)`, `norm(A)`, `dot(A,B)`.
+//!
+//! Client-server shape (§II): every PID reduces its local part, sends
+//! one scalar to the leader, the leader combines and **broadcasts the
+//! result back** so the call is collective and every PID returns the
+//! same value (matching pMatlab semantics).
+
+use super::dense::Darray;
+use super::Result;
+use crate::comm::{tags, Transport, WireReader, WireWriter};
+
+const TAG_RED: u64 = tags::AGG ^ 0x5E00_0000;
+
+/// A binary reduction operator over f64.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Min,
+    Max,
+}
+
+impl ReduceOp {
+    #[inline]
+    fn identity(&self) -> f64 {
+        match self {
+            ReduceOp::Sum => 0.0,
+            ReduceOp::Min => f64::INFINITY,
+            ReduceOp::Max => f64::NEG_INFINITY,
+        }
+    }
+
+    #[inline]
+    fn combine(&self, a: f64, b: f64) -> f64 {
+        match self {
+            ReduceOp::Sum => a + b,
+            ReduceOp::Min => a.min(b),
+            ReduceOp::Max => a.max(b),
+        }
+    }
+}
+
+/// Collective scalar reduction over all PIDs of a map. SPMD.
+pub fn allreduce(t: &dyn Transport, local: f64, op: ReduceOp, epoch: u64) -> Result<f64> {
+    let tag = TAG_RED ^ (epoch << 8);
+    let np = t.np();
+    if np == 1 {
+        return Ok(local);
+    }
+    if t.pid() == 0 {
+        let mut acc = local;
+        for from in 1..np {
+            let payload = t.recv(from, tag)?;
+            let v = WireReader::new(&payload).get_f64()?;
+            acc = op.combine(acc, v);
+        }
+        let mut w = WireWriter::new();
+        w.put_f64(acc);
+        let bytes = w.finish();
+        for to in 1..np {
+            t.send(to, tag, &bytes)?;
+        }
+        Ok(acc)
+    } else {
+        let mut w = WireWriter::new();
+        w.put_f64(local);
+        t.send(0, tag, &w.finish())?;
+        let payload = t.recv(0, tag)?;
+        Ok(WireReader::new(&payload).get_f64()?)
+    }
+}
+
+impl Darray {
+    /// Global sum: `sum(A(:))`. Collective.
+    pub fn global_sum(&self, t: &dyn Transport, epoch: u64) -> Result<f64> {
+        allreduce(t, self.loc().iter().sum(), ReduceOp::Sum, epoch)
+    }
+
+    /// Global minimum. Collective.
+    pub fn global_min(&self, t: &dyn Transport, epoch: u64) -> Result<f64> {
+        let local = self.loc().iter().copied().fold(f64::INFINITY, f64::min);
+        allreduce(t, local, ReduceOp::Min, epoch)
+    }
+
+    /// Global maximum. Collective.
+    pub fn global_max(&self, t: &dyn Transport, epoch: u64) -> Result<f64> {
+        let local = self.loc().iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        allreduce(t, local, ReduceOp::Max, epoch)
+    }
+
+    /// Global dot product `A(:)' * B(:)` (maps must align). Collective.
+    pub fn global_dot(&self, other: &Darray, t: &dyn Transport, epoch: u64) -> Result<f64> {
+        self.check_aligned(other)?;
+        let local: f64 = self
+            .loc()
+            .iter()
+            .zip(other.loc())
+            .map(|(a, b)| a * b)
+            .sum();
+        allreduce(t, local, ReduceOp::Sum, epoch)
+    }
+
+    /// Global 2-norm `‖A(:)‖₂`. Collective.
+    pub fn global_norm2(&self, t: &dyn Transport, epoch: u64) -> Result<f64> {
+        let local: f64 = self.loc().iter().map(|x| x * x).sum();
+        Ok(allreduce(t, local, ReduceOp::Sum, epoch)?.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+    use crate::dmap::Dmap;
+    use std::thread;
+
+    fn spmd<R: Send + 'static>(
+        np: usize,
+        f: impl Fn(usize, &dyn Transport) -> R + Send + Sync + 'static,
+    ) -> Vec<R> {
+        let world = ChannelHub::world(np);
+        let f = std::sync::Arc::new(f);
+        world
+            .into_iter()
+            .map(|t| {
+                let f = f.clone();
+                thread::spawn(move || f(t.pid(), &t))
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn sum_over_any_map_is_global_sum() {
+        let n = 101;
+        for mk in [Dmap::block_1d as fn(usize) -> Dmap, Dmap::cyclic_1d] {
+            let sums = spmd(4, move |pid, t| {
+                let a = Darray::from_global_fn(mk(4), &[n], pid, |g| g as f64);
+                a.global_sum(t, 0).unwrap()
+            });
+            let want = (n * (n - 1) / 2) as f64;
+            for s in sums {
+                assert_eq!(s, want);
+            }
+        }
+    }
+
+    #[test]
+    fn min_max_agree_on_every_pid() {
+        let out = spmd(3, |pid, t| {
+            let a = Darray::from_global_fn(Dmap::cyclic_1d(3), &[50], pid, |g| {
+                (g as f64 - 20.0) * (g as f64 - 20.0)
+            });
+            (a.global_min(t, 1).unwrap(), a.global_max(t, 2).unwrap())
+        });
+        for (mn, mx) in out {
+            assert_eq!(mn, 0.0); // at g = 20
+            assert_eq!(mx, 29.0 * 29.0); // at g = 49
+        }
+    }
+
+    #[test]
+    fn dot_and_norm() {
+        let out = spmd(4, |pid, t| {
+            let m = Dmap::block_1d(4);
+            let a = Darray::constant(m.clone(), &[64], pid, 2.0);
+            let b = Darray::constant(m, &[64], pid, 3.0);
+            (
+                a.global_dot(&b, t, 3).unwrap(),
+                a.global_norm2(t, 4).unwrap(),
+            )
+        });
+        for (dot, norm) in out {
+            assert_eq!(dot, 64.0 * 6.0);
+            assert!((norm - (64.0f64 * 4.0).sqrt()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dot_requires_aligned_maps() {
+        spmd(2, |pid, t| {
+            let a = Darray::constant(Dmap::block_1d(2), &[10], pid, 1.0);
+            let b = Darray::constant(Dmap::cyclic_1d(2), &[10], pid, 1.0);
+            assert!(a.global_dot(&b, t, 5).is_err());
+        });
+    }
+
+    #[test]
+    fn single_pid_reduction_is_local() {
+        spmd(1, |pid, t| {
+            let a = Darray::from_global_fn(Dmap::block_1d(1), &[7], pid, |g| g as f64);
+            assert_eq!(a.global_sum(t, 0).unwrap(), 21.0);
+            assert!(t.stats().is_silent());
+        });
+    }
+}

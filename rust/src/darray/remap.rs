@@ -1,0 +1,177 @@
+//! Map-independent global assignment — the paper's §IV discussion:
+//! "if copy was implemented using `C(:,:) = A`, then it would run
+//! correctly regardless of the map. However, if A and C had different
+//! maps, then significant communication would be required."
+//!
+//! [`Darray::assign_from`] implements exactly that: aligned maps
+//! degenerate to a local memcpy (zero messages — asserted by tests);
+//! mismatched maps execute the [`Partition::transfers_to`] plan over
+//! the transport. SPMD: every participating PID calls this with its
+//! own endpoint; the plan is deterministic so no coordination is
+//! needed beyond the data messages themselves.
+
+use super::dense::Darray;
+use super::Result;
+use crate::comm::{tags, Transport, WireReader, WireWriter};
+use crate::dmap::{Partition, Pid};
+
+impl Darray {
+    /// Global assignment `self(:) = src(:)` for any pair of maps.
+    ///
+    /// `epoch` disambiguates concurrent remaps (like a barrier epoch).
+    pub fn assign_from(&mut self, src: &Darray, t: &dyn Transport, epoch: u64) -> Result<()> {
+        if self.shape() != src.shape() {
+            return Err(super::DarrayError::ShapeMismatch {
+                a: self.shape().to_vec(),
+                b: src.shape().to_vec(),
+            });
+        }
+        // Fast path: aligned maps → pure local copy, zero messages.
+        if self.map().aligned_with(src.map(), &self.shape().to_vec()) {
+            self.loc_mut().copy_from_slice(src.loc());
+            return Ok(());
+        }
+        let me: Pid = self.pid();
+        let shape = self.shape().to_vec();
+        let src_part = Partition::of(src.map(), &shape);
+        let dst_part = Partition::of(self.map(), &shape);
+        let plan = src_part.transfers_to(&dst_part);
+        let tag_base = tags::REMAP ^ (epoch << 32);
+
+        // Local offsets: flattened-global-range → local offset tables.
+        let src_offsets = local_offsets(&src_part, me);
+        let dst_offsets = local_offsets(&dst_part, me);
+
+        // Phase 1: satisfy local pieces + send outgoing pieces.
+        // One message per (src=me, dst≠me) plan step, tagged by step
+        // index so ordering is deterministic on both sides.
+        for (step, &(sp, dp, r)) in plan.iter().enumerate() {
+            if sp != me {
+                continue;
+            }
+            let s_off = offset_in(&src_offsets, r.lo);
+            let src_slice = &src.loc()[s_off..s_off + r.len()];
+            if dp == me {
+                let d_off = offset_in(&dst_offsets, r.lo);
+                self.loc_mut()[d_off..d_off + r.len()].copy_from_slice(src_slice);
+            } else {
+                let mut w = WireWriter::with_capacity(16 + 8 * r.len());
+                w.put_u64(step as u64);
+                w.put_f64_slice(src_slice);
+                t.send(dp, tag_base ^ (step as u64), &w.finish())?;
+            }
+        }
+        // Phase 2: receive incoming pieces.
+        for (step, &(sp, dp, r)) in plan.iter().enumerate() {
+            if dp != me || sp == me {
+                continue;
+            }
+            let payload = t.recv(sp, tag_base ^ (step as u64))?;
+            let mut rd = WireReader::new(&payload);
+            let got_step = rd.get_u64()?;
+            debug_assert_eq!(got_step as usize, step);
+            let d_off = offset_in(&dst_offsets, r.lo);
+            let dst = &mut self.loc_mut()[d_off..d_off + r.len()];
+            rd.get_f64_into(dst)?;
+        }
+        Ok(())
+    }
+}
+
+/// (range_start, range_len, local_offset) table for one PID.
+fn local_offsets(p: &Partition, pid: Pid) -> Vec<(usize, usize, usize)> {
+    let mut out = Vec::new();
+    let mut off = 0usize;
+    for r in p.ranges_of(pid) {
+        out.push((r.lo, r.len(), off));
+        off += r.len();
+    }
+    out
+}
+
+/// Local offset of flattened global index `g` given the offset table.
+fn offset_in(table: &[(usize, usize, usize)], g: usize) -> usize {
+    for &(lo, len, off) in table {
+        if g >= lo && g < lo + len {
+            return off + (g - lo);
+        }
+    }
+    panic!("global index {g} not owned (plan/offset table mismatch)");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+    use crate::dmap::Dmap;
+    use std::thread;
+
+    /// SPMD helper: run `f(pid, transport)` on np threads.
+    fn spmd(np: usize, f: impl Fn(usize, &dyn Transport) + Send + Sync + 'static) {
+        let world = ChannelHub::world(np);
+        let f = std::sync::Arc::new(f);
+        let mut hs = Vec::new();
+        for t in world {
+            let f = f.clone();
+            hs.push(thread::spawn(move || f(t.pid(), &t)));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn aligned_assign_is_local_and_silent() {
+        spmd(4, |pid, t| {
+            let src = Darray::from_global_fn(Dmap::block_1d(4), &[64], pid, |g| g as f64);
+            let mut dst = Darray::zeros(Dmap::block_1d(4), &[64], pid);
+            dst.assign_from(&src, t, 0).unwrap();
+            assert_eq!(dst.loc(), src.loc());
+            assert!(t.stats().is_silent(), "aligned assign must not message");
+        });
+    }
+
+    #[test]
+    fn block_to_cyclic_remap_correct() {
+        spmd(4, |pid, t| {
+            let src = Darray::from_global_fn(Dmap::block_1d(4), &[64], pid, |g| g as f64);
+            let mut dst = Darray::zeros(Dmap::cyclic_1d(4), &[64], pid);
+            dst.assign_from(&src, t, 1).unwrap();
+            for g in 0..64 {
+                if let Some(v) = dst.global_get(g) {
+                    assert_eq!(v, g as f64, "pid={pid} g={g}");
+                }
+            }
+            assert!(!t.stats().is_silent(), "remap must communicate");
+        });
+    }
+
+    #[test]
+    fn cyclic_to_block_cyclic_remap_correct() {
+        spmd(3, |pid, t| {
+            let src = Darray::from_global_fn(Dmap::cyclic_1d(3), &[50], pid, |g| (g * g) as f64);
+            let mut dst = Darray::zeros(Dmap::block_cyclic_1d(3, 4), &[50], pid);
+            dst.assign_from(&src, t, 2).unwrap();
+            for g in 0..50 {
+                if let Some(v) = dst.global_get(g) {
+                    assert_eq!(v, (g * g) as f64);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn np1_remap_never_messages() {
+        spmd(1, |pid, t| {
+            let src = Darray::from_global_fn(Dmap::block_1d(1), &[32], pid, |g| g as f64);
+            let mut dst = Darray::zeros(Dmap::cyclic_1d(1), &[32], pid);
+            dst.assign_from(&src, t, 3).unwrap();
+            assert!(t.stats().is_silent());
+            for g in 0..32 {
+                assert_eq!(dst.global_get(g), Some(g as f64));
+            }
+        });
+    }
+
+    use crate::comm::Transport;
+}

@@ -1,0 +1,182 @@
+//! Global indexing — pMatlab's `subsref`/`subsasgn`: read or write an
+//! arbitrary global range of a distributed array from any PID,
+//! regardless of which PIDs own the elements.
+//!
+//! These are the *convenience* global operations the paper's §IV
+//! contrasts with `.loc`: correct for any map, but every call may
+//! communicate — the cost the `.loc` discipline avoids on the hot
+//! path.
+
+use super::dense::Darray;
+use super::Result;
+use crate::comm::{tags, Transport, WireReader, WireWriter};
+use crate::dmap::Partition;
+
+const TAG_GETR: u64 = tags::AGG ^ 0x6E70_0000;
+
+impl Darray {
+    /// Collective read of the global range `[lo, hi)` (flattened
+    /// row-major): every PID returns the same dense vector.
+    ///
+    /// Protocol: each owner sends its overlap with the range to PID 0;
+    /// PID 0 assembles and broadcasts. SPMD — all PIDs must call.
+    pub fn gather_range(
+        &self,
+        lo: usize,
+        hi: usize,
+        t: &dyn Transport,
+        epoch: u64,
+    ) -> Result<Vec<f64>> {
+        assert!(lo <= hi && hi <= self.global_len(), "range out of bounds");
+        let tag = TAG_GETR ^ (epoch << 8);
+        let me = self.pid();
+        let part = Partition::of(self.map(), &self.shape().to_vec());
+
+        // Every PID extracts its overlap with [lo, hi).
+        let mut mine: Vec<(usize, Vec<f64>)> = Vec::new();
+        let mut off = 0usize;
+        for r in part.ranges_of(me) {
+            let s = r.lo.max(lo);
+            let e = r.hi.min(hi);
+            if s < e {
+                let local_s = off + (s - r.lo);
+                mine.push((s, self.loc()[local_s..local_s + (e - s)].to_vec()));
+            }
+            off += r.len();
+        }
+
+        if me == 0 {
+            let mut out = vec![0.0f64; hi - lo];
+            for (s, chunk) in &mine {
+                out[s - lo..s - lo + chunk.len()].copy_from_slice(chunk);
+            }
+            for &pid in self.map().pids() {
+                if pid == 0 {
+                    continue;
+                }
+                let payload = t.recv(pid, tag)?;
+                let mut rd = WireReader::new(&payload);
+                let npieces = rd.get_usize()?;
+                for _ in 0..npieces {
+                    let s = rd.get_usize()?;
+                    let chunk = rd.get_f64_vec()?;
+                    out[s - lo..s - lo + chunk.len()].copy_from_slice(&chunk);
+                }
+            }
+            // Broadcast the assembled range.
+            let mut w = WireWriter::with_capacity(16 + 8 * out.len());
+            w.put_f64_slice(&out);
+            let bytes = w.finish();
+            for &pid in self.map().pids() {
+                if pid != 0 {
+                    t.send(pid, tag, &bytes)?;
+                }
+            }
+            Ok(out)
+        } else {
+            let mut w = WireWriter::new();
+            w.put_usize(mine.len());
+            for (s, chunk) in &mine {
+                w.put_usize(*s);
+                w.put_f64_slice(chunk);
+            }
+            t.send(0, tag, &w.finish())?;
+            let payload = t.recv(0, tag)?;
+            Ok(WireReader::new(&payload).get_f64_vec()?)
+        }
+    }
+
+    /// Local write of a global range: each PID stores the pieces of
+    /// `values` (covering `[lo, hi)`) that it owns. No communication —
+    /// every PID is handed the full value vector (pMatlab's
+    /// `subsasgn` with a replicated right-hand side).
+    pub fn scatter_range(&mut self, lo: usize, values: &[f64]) -> Result<()> {
+        let hi = lo + values.len();
+        assert!(hi <= self.global_len(), "range out of bounds");
+        let me = self.pid();
+        let part = Partition::of(self.map(), &self.shape().to_vec());
+        let mut off = 0usize;
+        for r in part.ranges_of(me) {
+            let s = r.lo.max(lo);
+            let e = r.hi.min(hi);
+            if s < e {
+                let local_s = off + (s - r.lo);
+                self.loc_mut()[local_s..local_s + (e - s)]
+                    .copy_from_slice(&values[s - lo..e - lo]);
+            }
+            off += r.len();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+    use crate::dmap::Dmap;
+    use std::thread;
+
+    fn spmd<R: Send + 'static>(
+        np: usize,
+        f: impl Fn(usize, &dyn Transport) -> R + Send + Sync + 'static,
+    ) -> Vec<R> {
+        let world = ChannelHub::world(np);
+        let f = std::sync::Arc::new(f);
+        world
+            .into_iter()
+            .map(|t| {
+                let f = f.clone();
+                thread::spawn(move || f(t.pid(), &t))
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn gather_range_spans_owners() {
+        for mk in [Dmap::block_1d as fn(usize) -> Dmap, Dmap::cyclic_1d] {
+            let out = spmd(4, move |pid, t| {
+                let a = Darray::from_global_fn(mk(4), &[100], pid, |g| g as f64);
+                a.gather_range(20, 70, t, 0).unwrap()
+            });
+            for v in out {
+                assert_eq!(v.len(), 50);
+                for (i, x) in v.iter().enumerate() {
+                    assert_eq!(*x, (20 + i) as f64);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_empty_and_full_ranges() {
+        let out = spmd(3, |pid, t| {
+            let a = Darray::from_global_fn(Dmap::block_1d(3), &[30], pid, |g| g as f64);
+            let empty = a.gather_range(5, 5, t, 1).unwrap();
+            let full = a.gather_range(0, 30, t, 2).unwrap();
+            (empty.len(), full)
+        });
+        for (e, f) in out {
+            assert_eq!(e, 0);
+            assert_eq!(f, (0..30).map(|g| g as f64).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn scatter_then_gather_roundtrip() {
+        let out = spmd(4, |pid, t| {
+            let mut a = Darray::zeros(Dmap::block_cyclic_1d(4, 3), &[64], pid);
+            let vals: Vec<f64> = (0..40).map(|i| (i * i) as f64).collect();
+            a.scatter_range(10, &vals).unwrap();
+            a.gather_range(10, 50, t, 3).unwrap()
+        });
+        for v in out {
+            for (i, x) in v.iter().enumerate() {
+                assert_eq!(*x, (i * i) as f64);
+            }
+        }
+    }
+}

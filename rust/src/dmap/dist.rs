@@ -1,0 +1,251 @@
+//! Per-dimension distribution algebra: block, cyclic, block-cyclic.
+//!
+//! All functions are pure index arithmetic over one dimension of
+//! global extent `n` split across `g` grid coordinates.  Invariants
+//! (checked by unit + property tests):
+//!
+//! * ownership partitions `[0, n)` — every global index has exactly
+//!   one `(coord, local)` pair;
+//! * `local_to_global(owner(i), global_to_local(i)) == i`;
+//! * `Σ_c local_len(c) == n`.
+
+/// How one array dimension is distributed over one grid dimension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dist {
+    /// Each coordinate holds one contiguous slab (pMatlab default).
+    Block,
+    /// Element `i` lives on coordinate `i % g` (maximal interleave).
+    Cyclic,
+    /// Blocks of `block_size` dealt round-robin across coordinates.
+    BlockCyclic { block_size: usize },
+}
+
+impl Default for Dist {
+    fn default() -> Self {
+        Dist::Block
+    }
+}
+
+impl Dist {
+    /// Block size used by `Block` for extent `n` over `g` coords.
+    #[inline]
+    pub fn block_quantum(n: usize, g: usize) -> usize {
+        n.div_ceil(g).max(1)
+    }
+
+    /// Grid coordinate that owns global index `i` (`i < n`).
+    #[inline]
+    pub fn owner(&self, i: usize, n: usize, g: usize) -> usize {
+        debug_assert!(i < n, "global index {i} out of range {n}");
+        match *self {
+            Dist::Block => (i / Self::block_quantum(n, g)).min(g - 1),
+            Dist::Cyclic => i % g,
+            Dist::BlockCyclic { block_size } => {
+                let bs = block_size.max(1);
+                (i / bs) % g
+            }
+        }
+    }
+
+    /// Number of elements coordinate `c` owns.
+    pub fn local_len(&self, c: usize, n: usize, g: usize) -> usize {
+        debug_assert!(c < g);
+        match *self {
+            Dist::Block => {
+                let b = Self::block_quantum(n, g);
+                let lo = c * b;
+                if lo >= n {
+                    0
+                } else {
+                    (n - lo).min(b)
+                }
+            }
+            // #{ i < n : i ≡ c (mod g) } = ceil((n - c) / g), clamped at 0.
+            Dist::Cyclic => (n + g - 1).saturating_sub(c) / g,
+            Dist::BlockCyclic { block_size } => {
+                let bs = block_size.max(1);
+                let nb = n.div_ceil(bs); // total blocks (last may be partial)
+                if nb == 0 {
+                    return 0;
+                }
+                // #{ k < nb : k ≡ c (mod g) }
+                let owned_blocks = (nb + g - 1).saturating_sub(c) / g;
+                if owned_blocks == 0 {
+                    return 0;
+                }
+                let last_block = nb - 1;
+                let last_size = n - last_block * bs;
+                if last_block % g == c {
+                    (owned_blocks - 1) * bs + last_size
+                } else {
+                    owned_blocks * bs
+                }
+            }
+        }
+    }
+
+    /// Local index of global `i` on its owning coordinate.
+    #[inline]
+    pub fn global_to_local(&self, i: usize, n: usize, g: usize) -> usize {
+        debug_assert!(i < n);
+        match *self {
+            Dist::Block => {
+                let b = Self::block_quantum(n, g);
+                let c = (i / b).min(g - 1);
+                i - c * b
+            }
+            Dist::Cyclic => i / g,
+            Dist::BlockCyclic { block_size } => {
+                let bs = block_size.max(1);
+                let k = i / bs; // global block index
+                (k / g) * bs + i % bs
+            }
+        }
+    }
+
+    /// Global index of local `l` on coordinate `c`.
+    #[inline]
+    pub fn local_to_global(&self, c: usize, l: usize, n: usize, g: usize) -> usize {
+        match *self {
+            Dist::Block => c * Self::block_quantum(n, g) + l,
+            Dist::Cyclic => l * g + c,
+            Dist::BlockCyclic { block_size } => {
+                let bs = block_size.max(1);
+                let kb = l / bs; // local block index
+                (kb * g + c) * bs + l % bs
+            }
+        }
+    }
+
+    /// Is the ownership of coordinate `c` one contiguous global range?
+    pub fn is_contiguous(&self, n: usize, g: usize) -> bool {
+        match *self {
+            Dist::Block => true,
+            Dist::Cyclic => g == 1 || n <= 1,
+            Dist::BlockCyclic { block_size } => {
+                let bs = block_size.max(1);
+                g == 1 || n <= bs
+            }
+        }
+    }
+
+    /// Contiguous global ranges owned by coordinate `c`, in order.
+    pub fn owned_ranges(&self, c: usize, n: usize, g: usize) -> Vec<(usize, usize)> {
+        match *self {
+            Dist::Block => {
+                let b = Self::block_quantum(n, g);
+                let lo = (c * b).min(n);
+                let hi = ((c + 1) * b).min(n);
+                if lo >= hi {
+                    vec![]
+                } else {
+                    vec![(lo, hi)]
+                }
+            }
+            Dist::Cyclic => {
+                let mut out = Vec::new();
+                let mut i = c;
+                while i < n {
+                    out.push((i, i + 1));
+                    i += g;
+                }
+                out
+            }
+            Dist::BlockCyclic { block_size } => {
+                let bs = block_size.max(1);
+                let mut out = Vec::new();
+                let mut k = c;
+                let nb = n.div_ceil(bs);
+                while k < nb {
+                    let lo = k * bs;
+                    let hi = ((k + 1) * bs).min(n);
+                    out.push((lo, hi));
+                    k += g;
+                }
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_dists() -> Vec<Dist> {
+        vec![
+            Dist::Block,
+            Dist::Cyclic,
+            Dist::BlockCyclic { block_size: 1 },
+            Dist::BlockCyclic { block_size: 3 },
+            Dist::BlockCyclic { block_size: 8 },
+        ]
+    }
+
+    #[test]
+    fn ownership_partitions_range() {
+        for d in all_dists() {
+            for &(n, g) in &[(1usize, 1usize), (7, 3), (16, 4), (100, 7), (5, 8), (64, 64)] {
+                let mut counts = vec![0usize; g];
+                for i in 0..n {
+                    counts[d.owner(i, n, g)] += 1;
+                }
+                for c in 0..g {
+                    assert_eq!(
+                        counts[c],
+                        d.local_len(c, n, g),
+                        "{d:?} n={n} g={g} c={c}"
+                    );
+                }
+                assert_eq!(counts.iter().sum::<usize>(), n);
+            }
+        }
+    }
+
+    #[test]
+    fn g2l_l2g_roundtrip() {
+        for d in all_dists() {
+            for &(n, g) in &[(1usize, 1usize), (7, 3), (16, 4), (100, 7), (5, 8)] {
+                for i in 0..n {
+                    let c = d.owner(i, n, g);
+                    let l = d.global_to_local(i, n, g);
+                    assert!(l < d.local_len(c, n, g), "{d:?} n={n} g={g} i={i}");
+                    assert_eq!(d.local_to_global(c, l, n, g), i, "{d:?} n={n} g={g} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn owned_ranges_cover_exactly() {
+        for d in all_dists() {
+            for &(n, g) in &[(16usize, 4usize), (100, 7), (5, 8), (33, 2)] {
+                for c in 0..g {
+                    let ranges = d.owned_ranges(c, n, g);
+                    let total: usize = ranges.iter().map(|(lo, hi)| hi - lo).sum();
+                    assert_eq!(total, d.local_len(c, n, g), "{d:?} n={n} g={g} c={c}");
+                    for (lo, hi) in ranges {
+                        for i in lo..hi {
+                            assert_eq!(d.owner(i, n, g), c);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_is_contiguous_cyclic_is_not() {
+        assert!(Dist::Block.is_contiguous(100, 4));
+        assert!(!Dist::Cyclic.is_contiguous(100, 4));
+        assert!(Dist::Cyclic.is_contiguous(100, 1));
+        assert!(!Dist::BlockCyclic { block_size: 4 }.is_contiguous(100, 4));
+    }
+
+    #[test]
+    fn block_quantum_never_zero() {
+        assert_eq!(Dist::block_quantum(0, 4), 1);
+        assert_eq!(Dist::block_quantum(7, 3), 3);
+        assert_eq!(Dist::block_quantum(8, 4), 2);
+    }
+}

@@ -1,0 +1,106 @@
+//! Processor grids: the `[1 Np]` part of `map([1 Np], {}, 0:Np-1)`.
+//!
+//! A grid arranges the participating PIDs into an N-dimensional
+//! lattice; each array dimension is distributed over the matching grid
+//! dimension.  Linearization is row-major (last dimension fastest),
+//! matching pMatlab.
+
+/// An N-dimensional processor grid.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Grid {
+    dims: Vec<usize>,
+}
+
+impl Grid {
+    /// Build a grid from its dimensions. Every dim must be ≥ 1.
+    pub fn new(dims: &[usize]) -> Self {
+        assert!(!dims.is_empty(), "grid must have at least one dimension");
+        assert!(dims.iter().all(|&d| d >= 1), "grid dims must be >= 1");
+        Grid { dims: dims.to_vec() }
+    }
+
+    /// 1-D grid over `np` slots (the common row-vector map `[1, np]`
+    /// collapses to this after squeezing the unit dimension).
+    pub fn line(np: usize) -> Self {
+        Grid::new(&[np])
+    }
+
+    /// Number of grid dimensions.
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Extent of grid dimension `d`.
+    pub fn dim(&self, d: usize) -> usize {
+        self.dims[d]
+    }
+
+    /// All dimensions.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Total number of grid slots (`Np` when fully populated).
+    pub fn size(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Row-major linear slot of coordinate `coord`.
+    pub fn linear(&self, coord: &[usize]) -> usize {
+        assert_eq!(coord.len(), self.dims.len());
+        let mut idx = 0usize;
+        for (d, (&c, &ext)) in coord.iter().zip(&self.dims).enumerate() {
+            assert!(c < ext, "grid coord {c} out of range {ext} in dim {d}");
+            idx = idx * ext + c;
+        }
+        idx
+    }
+
+    /// Inverse of [`Grid::linear`].
+    pub fn coord(&self, mut linear: usize) -> Vec<usize> {
+        assert!(linear < self.size(), "linear slot out of range");
+        let mut coord = vec![0usize; self.dims.len()];
+        for d in (0..self.dims.len()).rev() {
+            coord[d] = linear % self.dims[d];
+            linear /= self.dims[d];
+        }
+        coord
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_coord_roundtrip() {
+        let g = Grid::new(&[3, 4, 2]);
+        assert_eq!(g.size(), 24);
+        for s in 0..g.size() {
+            assert_eq!(g.linear(&g.coord(s)), s);
+        }
+    }
+
+    #[test]
+    fn row_major_order() {
+        let g = Grid::new(&[2, 3]);
+        assert_eq!(g.linear(&[0, 0]), 0);
+        assert_eq!(g.linear(&[0, 2]), 2);
+        assert_eq!(g.linear(&[1, 0]), 3);
+        assert_eq!(g.coord(5), vec![1, 2]);
+    }
+
+    #[test]
+    fn line_grid() {
+        let g = Grid::line(8);
+        assert_eq!(g.ndim(), 1);
+        assert_eq!(g.size(), 8);
+        assert_eq!(g.coord(5), vec![5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn coord_out_of_range_panics() {
+        Grid::new(&[2, 2]).linear(&[2, 0]);
+    }
+}

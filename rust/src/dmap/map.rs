@@ -1,0 +1,285 @@
+//! [`Dmap`] — the full map object: grid × distributions × overlap × PID
+//! list.  Equivalent to pMatlab's `map(grid, dist, pids, overlap)`.
+
+use super::dist::Dist;
+use super::grid::Grid;
+use super::overlap::Overlap;
+use super::Pid;
+
+/// A distributed-array map over an N-dimensional global shape.
+///
+/// The map is *shape-agnostic*: it is combined with a concrete global
+/// shape at use time (matching pMatlab, where the same map object can
+/// describe arrays of different sizes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Dmap {
+    grid: Grid,
+    dists: Vec<Dist>,
+    overlaps: Vec<Overlap>,
+    /// Linear grid slot → PID. `pids.len() == grid.size()`.
+    pids: Vec<Pid>,
+}
+
+impl Dmap {
+    /// General constructor.
+    pub fn new(grid: Grid, dists: Vec<Dist>, overlaps: Vec<Overlap>, pids: Vec<Pid>) -> Self {
+        assert_eq!(grid.ndim(), dists.len(), "one dist per grid dim");
+        assert_eq!(grid.ndim(), overlaps.len(), "one overlap per grid dim");
+        assert_eq!(grid.size(), pids.len(), "one PID per grid slot");
+        let mut seen = std::collections::HashSet::new();
+        assert!(pids.iter().all(|p| seen.insert(*p)), "duplicate PID in map");
+        Dmap { grid, dists, overlaps, pids }
+    }
+
+    /// The paper's Code Listing map: `map([1 Np], {}, 0:Np-1)` — a row
+    /// vector block-distributed by columns over all `np` PIDs.
+    pub fn row_vector(np: usize) -> Self {
+        Dmap::new(
+            Grid::new(&[1, np]),
+            vec![Dist::Block, Dist::Block],
+            vec![Overlap::none(), Overlap::none()],
+            (0..np).collect(),
+        )
+    }
+
+    /// 1-D block map over `np` PIDs (squeezed row vector).
+    pub fn block_1d(np: usize) -> Self {
+        Dmap::new(
+            Grid::line(np),
+            vec![Dist::Block],
+            vec![Overlap::none()],
+            (0..np).collect(),
+        )
+    }
+
+    /// 1-D cyclic map over `np` PIDs.
+    pub fn cyclic_1d(np: usize) -> Self {
+        Dmap::new(
+            Grid::line(np),
+            vec![Dist::Cyclic],
+            vec![Overlap::none()],
+            (0..np).collect(),
+        )
+    }
+
+    /// 1-D block-cyclic map over `np` PIDs.
+    pub fn block_cyclic_1d(np: usize, block_size: usize) -> Self {
+        Dmap::new(
+            Grid::line(np),
+            vec![Dist::BlockCyclic { block_size }],
+            vec![Overlap::none()],
+            (0..np).collect(),
+        )
+    }
+
+    /// 2-D block map (Figure 1 "rows and columns").
+    pub fn block_2d(prows: usize, pcols: usize) -> Self {
+        Dmap::new(
+            Grid::new(&[prows, pcols]),
+            vec![Dist::Block, Dist::Block],
+            vec![Overlap::none(), Overlap::none()],
+            (0..prows * pcols).collect(),
+        )
+    }
+
+    /// 1-D block map with overlap (Figure 1 rightmost panel).
+    pub fn block_1d_overlap(np: usize, overlap: usize) -> Self {
+        Dmap::new(
+            Grid::line(np),
+            vec![Dist::Block],
+            vec![Overlap::new(overlap)],
+            (0..np).collect(),
+        )
+    }
+
+    pub fn grid(&self) -> &Grid {
+        &self.grid
+    }
+
+    pub fn dists(&self) -> &[Dist] {
+        &self.dists
+    }
+
+    pub fn overlaps(&self) -> &[Overlap] {
+        &self.overlaps
+    }
+
+    pub fn pids(&self) -> &[Pid] {
+        &self.pids
+    }
+
+    /// Number of participating processes.
+    pub fn np(&self) -> usize {
+        self.pids.len()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.grid.ndim()
+    }
+
+    /// Does `pid` participate in this map?
+    pub fn contains(&self, pid: Pid) -> bool {
+        self.pids.contains(&pid)
+    }
+
+    /// Grid coordinate of `pid` (panics if absent).
+    pub fn coord_of(&self, pid: Pid) -> Vec<usize> {
+        let slot = self
+            .pids
+            .iter()
+            .position(|&p| p == pid)
+            .unwrap_or_else(|| panic!("PID {pid} not in map"));
+        self.grid.coord(slot)
+    }
+
+    /// PID owning grid coordinate `coord`.
+    pub fn pid_at(&self, coord: &[usize]) -> Pid {
+        self.pids[self.grid.linear(coord)]
+    }
+
+    /// PID owning global index `gidx` of an array with `shape`.
+    pub fn owner(&self, gidx: &[usize], shape: &[usize]) -> Pid {
+        assert_eq!(gidx.len(), self.ndim());
+        assert_eq!(shape.len(), self.ndim());
+        let coord: Vec<usize> = (0..self.ndim())
+            .map(|d| self.dists[d].owner(gidx[d], shape[d], self.grid.dim(d)))
+            .collect();
+        self.pid_at(&coord)
+    }
+
+    /// Owned (excluding halo) local shape for `pid` under `shape`.
+    pub fn local_shape(&self, pid: Pid, shape: &[usize]) -> Vec<usize> {
+        let coord = self.coord_of(pid);
+        (0..self.ndim())
+            .map(|d| self.dists[d].local_len(coord[d], shape[d], self.grid.dim(d)))
+            .collect()
+    }
+
+    /// Stored (owned + halo) local shape for `pid` under `shape`.
+    pub fn stored_shape(&self, pid: Pid, shape: &[usize]) -> Vec<usize> {
+        let coord = self.coord_of(pid);
+        (0..self.ndim())
+            .map(|d| {
+                self.overlaps[d].stored_len(&self.dists[d], coord[d], shape[d], self.grid.dim(d))
+            })
+            .collect()
+    }
+
+    /// Global index of a local (owned-region) index on `pid`.
+    pub fn local_to_global(&self, pid: Pid, lidx: &[usize], shape: &[usize]) -> Vec<usize> {
+        let coord = self.coord_of(pid);
+        (0..self.ndim())
+            .map(|d| self.dists[d].local_to_global(coord[d], lidx[d], shape[d], self.grid.dim(d)))
+            .collect()
+    }
+
+    /// Local index of a global index on its owner (owner, local).
+    pub fn global_to_local(&self, gidx: &[usize], shape: &[usize]) -> (Pid, Vec<usize>) {
+        let pid = self.owner(gidx, shape);
+        let l = (0..self.ndim())
+            .map(|d| self.dists[d].global_to_local(gidx[d], shape[d], self.grid.dim(d)))
+            .collect();
+        (pid, l)
+    }
+
+    /// Total number of elements `pid` owns under `shape`.
+    pub fn local_size(&self, pid: Pid, shape: &[usize]) -> usize {
+        self.local_shape(pid, shape).iter().product()
+    }
+
+    /// Two maps are *aligned* for a shape when every PID owns exactly
+    /// the same global indices under both — the paper's "same map"
+    /// condition that guarantees zero communication (Figure 2).
+    pub fn aligned_with(&self, other: &Dmap, shape: &[usize]) -> bool {
+        if self == other {
+            return true;
+        }
+        if self.np() != other.np() || self.ndim() != other.ndim() {
+            return false;
+        }
+        // Structural fast path failed — compare materialized ownership.
+        let a = super::partition::Partition::of(self, shape);
+        let b = super::partition::Partition::of(other, shape);
+        a.same_ownership(&b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_vector_matches_paper_listing() {
+        // map([1 4], {}, 0:3) over a 1 × 16 row vector.
+        let m = Dmap::row_vector(4);
+        let shape = [1usize, 16];
+        assert_eq!(m.np(), 4);
+        for pid in 0..4 {
+            assert_eq!(m.local_shape(pid, &shape), vec![1, 4]);
+        }
+        assert_eq!(m.owner(&[0, 0], &shape), 0);
+        assert_eq!(m.owner(&[0, 5], &shape), 1);
+        assert_eq!(m.owner(&[0, 15], &shape), 3);
+    }
+
+    #[test]
+    fn global_local_roundtrip_2d() {
+        let m = Dmap::block_2d(2, 3);
+        let shape = [8usize, 9];
+        for i in 0..shape[0] {
+            for j in 0..shape[1] {
+                let (pid, l) = m.global_to_local(&[i, j], &shape);
+                assert_eq!(m.local_to_global(pid, &l, &shape), vec![i, j]);
+            }
+        }
+    }
+
+    #[test]
+    fn local_sizes_sum_to_global() {
+        for m in [
+            Dmap::block_1d(5),
+            Dmap::cyclic_1d(5),
+            Dmap::block_cyclic_1d(5, 3),
+        ] {
+            let shape = [101usize];
+            let total: usize = (0..5).map(|p| m.local_size(p, &shape)).sum();
+            assert_eq!(total, 101, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn aligned_same_map() {
+        let a = Dmap::block_1d(4);
+        let b = Dmap::block_1d(4);
+        assert!(a.aligned_with(&b, &[64]));
+    }
+
+    #[test]
+    fn not_aligned_different_dist() {
+        let a = Dmap::block_1d(4);
+        let b = Dmap::cyclic_1d(4);
+        assert!(!a.aligned_with(&b, &[64]));
+        // ... but over a shape where block == cyclic (n == np) they align.
+        assert!(a.aligned_with(&b, &[4]));
+    }
+
+    #[test]
+    #[should_panic]
+    fn duplicate_pid_rejected() {
+        Dmap::new(
+            Grid::line(2),
+            vec![Dist::Block],
+            vec![Overlap::none()],
+            vec![0, 0],
+        );
+    }
+
+    #[test]
+    fn stored_shape_includes_halo() {
+        let m = Dmap::block_1d_overlap(2, 3);
+        let shape = [10usize];
+        assert_eq!(m.local_shape(0, &shape), vec![5]);
+        assert_eq!(m.stored_shape(0, &shape), vec![8]);
+        assert_eq!(m.stored_shape(1, &shape), vec![5]);
+    }
+}

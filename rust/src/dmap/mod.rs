@@ -1,0 +1,27 @@
+//! Distributed-array **maps** — the core abstraction of the paper (§II).
+//!
+//! A [`Dmap`] describes how a global N-dimensional array is broken up
+//! among `Np` processes: a processor [`Grid`], a per-dimension
+//! [`Dist`]ribution (block / cyclic / block-cyclic — Figure 1), an
+//! optional per-dimension [`Overlap`], and the list of participating
+//! PIDs.  This mirrors pMatlab's `map([1 Np], {}, 0:Np-1)` and
+//! pPython's `Dmap([1,Np], {}, range(Np))`.
+//!
+//! Every PID can compute, from the map alone, which global indices any
+//! other PID owns — the property that makes owner-computes and remap
+//! planning possible without central coordination.
+
+pub mod dist;
+pub mod grid;
+pub mod map;
+pub mod overlap;
+pub mod partition;
+
+pub use dist::Dist;
+pub use grid::Grid;
+pub use map::Dmap;
+pub use overlap::Overlap;
+pub use partition::{GlobalRange, Partition};
+
+/// Process identifier (the paper's `P_ID`; MPI "rank").
+pub type Pid = usize;

@@ -1,0 +1,110 @@
+//! Boundary **overlap** (halo) descriptors — Figure 1's rightmost panel.
+//!
+//! Overlap lets the boundary of a block live on two neighbouring PIDs
+//! so stencil-style computations read neighbours without explicit
+//! messages; a `sync` operation refreshes the halo from the owner.
+//! For the block distribution, coordinate `c`'s *stored* range extends
+//! `amount` elements past its owned range into coordinate `c+1`'s
+//! territory (pMatlab overlap semantics).
+
+use super::dist::Dist;
+
+/// Per-dimension halo width (elements shared with the next neighbour).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Overlap {
+    pub amount: usize,
+}
+
+impl Overlap {
+    pub fn none() -> Self {
+        Overlap { amount: 0 }
+    }
+
+    pub fn new(amount: usize) -> Self {
+        Overlap { amount }
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.amount == 0
+    }
+
+    /// Stored (owned + halo) length for coordinate `c`.
+    ///
+    /// Only meaningful for `Dist::Block` (pMatlab restricts overlap to
+    /// block maps); the last coordinate has no right neighbour.
+    pub fn stored_len(&self, dist: &Dist, c: usize, n: usize, g: usize) -> usize {
+        let own = dist.local_len(c, n, g);
+        if own == 0 || self.amount == 0 {
+            return own;
+        }
+        match dist {
+            Dist::Block => {
+                let b = Dist::block_quantum(n, g);
+                let hi = ((c + 1) * b).min(n);
+                own + self.amount.min(n - hi)
+            }
+            _ => own, // overlap unsupported on non-block dists
+        }
+    }
+
+    /// Global range of the halo coordinate `c` must *receive* from its
+    /// right neighbour after that neighbour writes: `[hi, hi+amount)`
+    /// clamped to `n`. Empty when there is no halo.
+    pub fn halo_range(&self, dist: &Dist, c: usize, n: usize, g: usize) -> Option<(usize, usize)> {
+        if self.amount == 0 {
+            return None;
+        }
+        match dist {
+            Dist::Block => {
+                let b = Dist::block_quantum(n, g);
+                let hi = ((c + 1) * b).min(n);
+                let end = (hi + self.amount).min(n);
+                if hi < end && dist.local_len(c, n, g) > 0 {
+                    Some((hi, end))
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_overlap_is_owned_len() {
+        let d = Dist::Block;
+        let o = Overlap::none();
+        assert_eq!(o.stored_len(&d, 0, 10, 2), 5);
+        assert_eq!(o.stored_len(&d, 1, 10, 2), 5);
+    }
+
+    #[test]
+    fn overlap_extends_into_neighbour() {
+        let d = Dist::Block;
+        let o = Overlap::new(2);
+        // n=10, g=2 → c0 owns [0,5), stores [0,7); c1 owns [5,10), stores [5,10)
+        assert_eq!(o.stored_len(&d, 0, 10, 2), 7);
+        assert_eq!(o.stored_len(&d, 1, 10, 2), 5);
+        assert_eq!(o.halo_range(&d, 0, 10, 2), Some((5, 7)));
+        assert_eq!(o.halo_range(&d, 1, 10, 2), None);
+    }
+
+    #[test]
+    fn halo_clamped_at_array_end() {
+        let d = Dist::Block;
+        let o = Overlap::new(100);
+        assert_eq!(o.stored_len(&d, 0, 10, 2), 10);
+        assert_eq!(o.halo_range(&d, 0, 10, 2), Some((5, 10)));
+    }
+
+    #[test]
+    fn overlap_ignored_on_cyclic() {
+        let o = Overlap::new(2);
+        assert_eq!(o.stored_len(&Dist::Cyclic, 0, 10, 2), 5);
+        assert_eq!(o.halo_range(&Dist::Cyclic, 0, 10, 2), None);
+    }
+}

@@ -1,0 +1,259 @@
+//! Ownership partitions and map intersection — the planning substrate
+//! for remap communication (`darray::remap`).
+//!
+//! A [`Partition`] materializes, for a concrete global shape, the set
+//! of contiguous global ranges each PID owns (flattened row-major).
+//! Remap plans are computed by intersecting the source and destination
+//! partitions: each non-empty intersection becomes one message.
+
+use super::map::Dmap;
+use super::Pid;
+
+/// A contiguous range `[lo, hi)` of flattened global indices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GlobalRange {
+    pub lo: usize,
+    pub hi: usize,
+}
+
+impl GlobalRange {
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.hi <= self.lo
+    }
+
+    /// Intersection of two ranges (possibly empty).
+    pub fn intersect(&self, other: &GlobalRange) -> GlobalRange {
+        GlobalRange {
+            lo: self.lo.max(other.lo),
+            hi: self.hi.min(other.hi).max(self.lo.max(other.lo)),
+        }
+    }
+}
+
+/// Per-PID owned ranges over the row-major flattening of `shape`.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    /// `ranges[k]` = (pid, range); sorted by `range.lo`.
+    ranges: Vec<(Pid, GlobalRange)>,
+    np: usize,
+    total: usize,
+}
+
+impl Partition {
+    /// Materialize the partition of `map` over `shape`.
+    ///
+    /// For 1-D maps this is exact per the distribution. For N-D maps
+    /// the flattened ownership of a PID is the cross product of the
+    /// per-dim ranges; we emit one `GlobalRange` per contiguous run.
+    pub fn of(map: &Dmap, shape: &[usize]) -> Self {
+        assert_eq!(shape.len(), map.ndim());
+        let total: usize = shape.iter().product();
+        let mut ranges: Vec<(Pid, GlobalRange)> = Vec::new();
+        for &pid in map.pids() {
+            for r in Self::pid_ranges(map, pid, shape) {
+                if !r.is_empty() {
+                    ranges.push((pid, r));
+                }
+            }
+        }
+        ranges.sort_by_key(|(_, r)| r.lo);
+        Partition { ranges, np: map.np(), total }
+    }
+
+    /// Contiguous flattened ranges owned by one PID.
+    fn pid_ranges(map: &Dmap, pid: Pid, shape: &[usize]) -> Vec<GlobalRange> {
+        let coord = map.coord_of(pid);
+        let nd = map.ndim();
+        // Per-dimension owned ranges.
+        let per_dim: Vec<Vec<(usize, usize)>> = (0..nd)
+            .map(|d| map.dists()[d].owned_ranges(coord[d], shape[d], map.grid().dim(d)))
+            .collect();
+        if per_dim.iter().any(|v| v.is_empty()) {
+            return vec![];
+        }
+        // Row-major strides.
+        let mut stride = vec![1usize; nd];
+        for d in (0..nd.saturating_sub(1)).rev() {
+            stride[d] = stride[d + 1] * shape[d + 1];
+        }
+        // The last dimension's ranges are contiguous in the flattening;
+        // all outer dimensions contribute per-index offsets.
+        let mut out = Vec::new();
+        let mut outer_offsets = vec![0usize];
+        for d in 0..nd.saturating_sub(1) {
+            let mut next = Vec::new();
+            for &base in &outer_offsets {
+                for &(lo, hi) in &per_dim[d] {
+                    for i in lo..hi {
+                        next.push(base + i * stride[d]);
+                    }
+                }
+            }
+            outer_offsets = next;
+        }
+        let last = &per_dim[nd - 1];
+        for &base in &outer_offsets {
+            for &(lo, hi) in last {
+                out.push(GlobalRange { lo: base + lo, hi: base + hi });
+            }
+        }
+        // Merge adjacent ranges (e.g. a full row span).
+        out.sort_by_key(|r| r.lo);
+        let mut merged: Vec<GlobalRange> = Vec::with_capacity(out.len());
+        for r in out {
+            if let Some(last) = merged.last_mut() {
+                if last.hi == r.lo {
+                    last.hi = r.hi;
+                    continue;
+                }
+            }
+            merged.push(r);
+        }
+        merged
+    }
+
+    pub fn np(&self) -> usize {
+        self.np
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// All (pid, range) pairs sorted by range start.
+    pub fn ranges(&self) -> &[(Pid, GlobalRange)] {
+        &self.ranges
+    }
+
+    /// Ranges owned by a single PID.
+    pub fn ranges_of(&self, pid: Pid) -> Vec<GlobalRange> {
+        self.ranges
+            .iter()
+            .filter(|(p, _)| *p == pid)
+            .map(|(_, r)| *r)
+            .collect()
+    }
+
+    /// Owner of flattened global index `i` (binary search).
+    pub fn owner_of(&self, i: usize) -> Option<Pid> {
+        let idx = self.ranges.partition_point(|(_, r)| r.hi <= i);
+        match self.ranges.get(idx) {
+            Some((p, r)) if r.lo <= i && i < r.hi => Some(*p),
+            _ => None,
+        }
+    }
+
+    /// Do two partitions assign identical ownership?
+    pub fn same_ownership(&self, other: &Partition) -> bool {
+        self.total == other.total && self.ranges == other.ranges
+    }
+
+    /// Communication plan from `self` (source layout) to `dst`:
+    /// list of (src_pid, dst_pid, range) transfers. Transfers where
+    /// `src_pid == dst_pid` are local copies (no message).
+    pub fn transfers_to(&self, dst: &Partition) -> Vec<(Pid, Pid, GlobalRange)> {
+        assert_eq!(self.total, dst.total, "shape mismatch in remap plan");
+        let mut plan = Vec::new();
+        // Both range lists are sorted and non-overlapping: for each src
+        // range binary-search the first overlapping dst range, then walk.
+        for &(sp, sr) in &self.ranges {
+            let mut j = dst.ranges.partition_point(|(_, r)| r.hi <= sr.lo);
+            while j < dst.ranges.len() {
+                let (dp, dr) = dst.ranges[j];
+                if dr.lo >= sr.hi {
+                    break;
+                }
+                let x = sr.intersect(&dr);
+                if !x.is_empty() {
+                    plan.push((sp, dp, x));
+                }
+                j += 1;
+            }
+        }
+        plan
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dmap::Dmap;
+
+    #[test]
+    fn block_partition_1d() {
+        let p = Partition::of(&Dmap::block_1d(4), &[100]);
+        assert_eq!(p.ranges().len(), 4);
+        assert_eq!(p.ranges_of(0), vec![GlobalRange { lo: 0, hi: 25 }]);
+        assert_eq!(p.owner_of(99), Some(3));
+        assert_eq!(p.owner_of(100), None);
+    }
+
+    #[test]
+    fn cyclic_partition_has_n_ranges() {
+        let p = Partition::of(&Dmap::cyclic_1d(4), &[16]);
+        assert_eq!(p.ranges().len(), 16);
+        assert_eq!(p.owner_of(5), Some(1));
+    }
+
+    #[test]
+    fn partition_covers_all_indices() {
+        for map in [
+            Dmap::block_1d(3),
+            Dmap::cyclic_1d(3),
+            Dmap::block_cyclic_1d(3, 4),
+            Dmap::block_2d(2, 2),
+        ] {
+            let shape: Vec<usize> = if map.ndim() == 1 { vec![37] } else { vec![6, 7] };
+            let p = Partition::of(&map, &shape);
+            let total: usize = shape.iter().product();
+            for i in 0..total {
+                let owner = p.owner_of(i).unwrap_or_else(|| panic!("uncovered idx {i} {map:?}"));
+                assert!(owner < 4);
+            }
+            let sum: usize = p.ranges().iter().map(|(_, r)| r.len()).sum();
+            assert_eq!(sum, total);
+        }
+    }
+
+    #[test]
+    fn row_map_2d_matches_rows() {
+        // 2-D map [2,1]: block by rows (Figure 1 leftmost).
+        let m = Dmap::block_2d(2, 1);
+        let p = Partition::of(&m, &[4, 6]);
+        // PID 0 owns rows 0-1 → flattened [0, 12); PID 1 rows 2-3 → [12, 24).
+        assert_eq!(p.ranges_of(0), vec![GlobalRange { lo: 0, hi: 12 }]);
+        assert_eq!(p.ranges_of(1), vec![GlobalRange { lo: 12, hi: 24 }]);
+    }
+
+    #[test]
+    fn same_map_transfer_plan_is_all_local() {
+        let p = Partition::of(&Dmap::block_1d(4), &[64]);
+        let q = Partition::of(&Dmap::block_1d(4), &[64]);
+        let plan = p.transfers_to(&q);
+        assert!(plan.iter().all(|(s, d, _)| s == d));
+        let bytes: usize = plan.iter().map(|(_, _, r)| r.len()).sum();
+        assert_eq!(bytes, 64);
+    }
+
+    #[test]
+    fn block_to_cyclic_plan_covers_everything() {
+        let src = Partition::of(&Dmap::block_1d(4), &[64]);
+        let dst = Partition::of(&Dmap::cyclic_1d(4), &[64]);
+        let plan = src.transfers_to(&dst);
+        let total: usize = plan.iter().map(|(_, _, r)| r.len()).sum();
+        assert_eq!(total, 64);
+        // Most transfers cross PIDs.
+        assert!(plan.iter().any(|(s, d, _)| s != d));
+        // Every transferred element's src/dst owners agree with the partitions.
+        for (s, d, r) in plan {
+            for i in r.lo..r.hi {
+                assert_eq!(src.owner_of(i), Some(s));
+                assert_eq!(dst.owner_of(i), Some(d));
+            }
+        }
+    }
+}

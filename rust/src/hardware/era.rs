@@ -1,0 +1,252 @@
+//! Table I — computer hardware specifications, encoded verbatim, plus
+//! the STREAM-calibrated bandwidth envelopes the analytic model uses.
+//!
+//! Bandwidth calibration sources: the paper's own Figure 3/4 readings
+//! (10× core / 100× node over 20 years, 5× GPU node over ~5 years,
+//! PB/s on hundreds of nodes) and published STREAM numbers for each
+//! part. Absolute values are envelopes, not measurements — DESIGN.md
+//! records the substitution.
+
+/// Memory technology (Table I "Memory Part").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemKind {
+    Ddr2,
+    Ddr4,
+    Ddr5,
+    Hbm2,
+    Hbm3,
+}
+
+/// Node class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EraKind {
+    Cpu,
+    Gpu,
+}
+
+/// One row of Table I, extended with calibrated bandwidth envelopes.
+#[derive(Debug, Clone, Copy)]
+pub struct Era {
+    /// Node label ("amd-e9", "xeon-p8", ...).
+    pub label: &'static str,
+    /// Hardware era (year).
+    pub year: u32,
+    /// Processor part description.
+    pub part: &'static str,
+    /// Clock in GHz.
+    pub clock_ghz: f64,
+    /// Core count (0 for GPU rows — the paper leaves them blank).
+    pub cores: usize,
+    pub mem: MemKind,
+    /// Memory size in GB.
+    pub mem_gb: u64,
+    pub kind: EraKind,
+    /// Sustained single-core STREAM triad bandwidth (bytes/s).
+    pub core_bw: f64,
+    /// Sustained whole-node STREAM triad bandwidth (bytes/s).
+    pub node_bw: f64,
+    /// Table II base: log2 of per-process base vector length.
+    pub base_log2: u32,
+    /// Table II base trial count.
+    pub base_nt: usize,
+    /// Max process count benchmarked within the node (Table II row width).
+    pub max_np: usize,
+    /// Physical nodes this Table I entry spans (1 for all rows except
+    /// bg-p, which is a 32-node Blue Gene/P partition; its `node_bw`
+    /// and `cores` cover the whole partition).
+    pub nodes_in_entry: usize,
+}
+
+impl Era {
+    pub fn mem_bytes(&self) -> u64 {
+        self.mem_gb * (1 << 30)
+    }
+
+    pub fn is_gpu(&self) -> bool {
+        self.kind == EraKind::Gpu
+    }
+
+    /// Look up an era by label.
+    pub fn by_label(label: &str) -> Option<&'static Era> {
+        ERAS.iter().find(|e| e.label == label)
+    }
+}
+
+/// Table I, top-to-bottom. GPU rows sit below their host systems.
+pub static ERAS: &[Era] = &[
+    Era {
+        label: "amd-e9",
+        year: 2024,
+        part: "Dual AMD EPYC 9254",
+        clock_ghz: 2.9,
+        cores: 48,
+        mem: MemKind::Ddr5,
+        mem_gb: 750,
+        kind: EraKind::Cpu,
+        core_bw: 22.0e9,
+        node_bw: 360.0e9,
+        base_log2: 30,
+        base_nt: 20,
+        max_np: 32,
+        nodes_in_entry: 1,
+    },
+    Era {
+        label: "h100nvl",
+        year: 2024,
+        part: "Dual Nvidia H100 NVL",
+        clock_ghz: 1.7,
+        cores: 0,
+        mem: MemKind::Hbm3,
+        mem_gb: 188,
+        kind: EraKind::Gpu,
+        core_bw: 3.6e12, // one GPU ≈ one "core" slot
+        node_bw: 7.2e12,
+        base_log2: 30,
+        base_nt: 1000,
+        max_np: 2,
+        nodes_in_entry: 1,
+    },
+    Era {
+        label: "xeon-p8",
+        year: 2020,
+        part: "Dual Xeon Platinum 8260",
+        clock_ghz: 2.4,
+        cores: 48,
+        mem: MemKind::Ddr4,
+        mem_gb: 192,
+        kind: EraKind::Cpu,
+        core_bw: 13.0e9,
+        node_bw: 220.0e9,
+        base_log2: 30,
+        base_nt: 10,
+        max_np: 32,
+        nodes_in_entry: 1,
+    },
+    Era {
+        label: "xeon-g6",
+        year: 2018,
+        part: "Dual Xeon Gold 6248",
+        clock_ghz: 2.5,
+        cores: 40,
+        mem: MemKind::Ddr4,
+        mem_gb: 384,
+        kind: EraKind::Cpu,
+        core_bw: 12.5e9,
+        node_bw: 180.0e9,
+        base_log2: 30,
+        base_nt: 10,
+        max_np: 32,
+        nodes_in_entry: 1,
+    },
+    Era {
+        label: "v100",
+        year: 2018,
+        part: "Dual Nvidia V100",
+        clock_ghz: 1.2,
+        cores: 0,
+        mem: MemKind::Hbm2,
+        mem_gb: 64,
+        kind: EraKind::Gpu,
+        core_bw: 0.72e12,
+        node_bw: 1.44e12,
+        base_log2: 29,
+        base_nt: 1000,
+        max_np: 2,
+        nodes_in_entry: 1,
+    },
+    Era {
+        label: "xeon-e5",
+        year: 2014,
+        part: "Dual Xeon E5-2683 v3",
+        clock_ghz: 2.0,
+        cores: 28,
+        mem: MemKind::Ddr4,
+        mem_gb: 256,
+        kind: EraKind::Cpu,
+        core_bw: 10.0e9,
+        node_bw: 95.0e9,
+        base_log2: 30,
+        base_nt: 10,
+        max_np: 32,
+        nodes_in_entry: 1,
+    },
+    Era {
+        label: "bg-p",
+        year: 2009,
+        part: "32 x PowerPC 450",
+        clock_ghz: 0.85,
+        cores: 128,
+        mem: MemKind::Ddr2,
+        mem_gb: 2,
+        kind: EraKind::Cpu,
+        core_bw: 2.0e9,
+        node_bw: 8.5e9 * 32.0, // 32-node partition, 13.6 GB/s peak each
+        base_log2: 25,
+        base_nt: 10,
+        max_np: 128,
+        nodes_in_entry: 32,
+    },
+    Era {
+        label: "xeon-p4",
+        year: 2005,
+        part: "Dual Xeon P4",
+        clock_ghz: 2.8,
+        cores: 2,
+        mem: MemKind::Ddr2,
+        mem_gb: 4,
+        kind: EraKind::Cpu,
+        core_bw: 2.2e9,
+        node_bw: 3.6e9,
+        base_log2: 25,
+        base_nt: 10,
+        max_np: 2,
+        nodes_in_entry: 1,
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_eight_rows() {
+        assert_eq!(ERAS.len(), 8);
+    }
+
+    #[test]
+    fn lookup_by_label() {
+        assert_eq!(Era::by_label("xeon-p8").unwrap().year, 2020);
+        assert!(Era::by_label("nope").is_none());
+    }
+
+    #[test]
+    fn paper_temporal_ratios_hold() {
+        // 10x CPU-core bandwidth over 20 years (§VI / Fig. 4).
+        let p4 = Era::by_label("xeon-p4").unwrap();
+        let e9 = Era::by_label("amd-e9").unwrap();
+        let core_ratio = e9.core_bw / p4.core_bw;
+        assert!((5.0..20.0).contains(&core_ratio), "core ratio {core_ratio}");
+        // 100x CPU-node bandwidth over 20 years.
+        let node_ratio = e9.node_bw / p4.node_bw;
+        assert!((50.0..200.0).contains(&node_ratio), "node ratio {node_ratio}");
+        // 5x GPU-node bandwidth over ~5 years.
+        let v = Era::by_label("v100").unwrap();
+        let h = Era::by_label("h100nvl").unwrap();
+        let gpu_ratio = h.node_bw / v.node_bw;
+        assert!((3.0..8.0).contains(&gpu_ratio), "gpu ratio {gpu_ratio}");
+    }
+
+    #[test]
+    fn gpu_rows_marked() {
+        assert!(Era::by_label("v100").unwrap().is_gpu());
+        assert!(Era::by_label("h100nvl").unwrap().is_gpu());
+        assert!(!Era::by_label("bg-p").unwrap().is_gpu());
+    }
+
+    #[test]
+    fn node_bw_at_least_core_bw() {
+        for e in ERAS {
+            assert!(e.node_bw >= e.core_bw, "{}", e.label);
+        }
+    }
+}

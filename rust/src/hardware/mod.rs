@@ -1,0 +1,19 @@
+//! Hardware substrate — Table I and the analytic memory model.
+//!
+//! The paper's testbed is MIT SuperCloud hardware spanning two decades
+//! (plus Argonne's Blue Gene/P). That hardware is not available here;
+//! per the substitution rule (DESIGN.md §3), [`era`] encodes Table I
+//! verbatim and [`model`] provides a STREAM-calibrated analytic
+//! bandwidth model that drives the *simulated* engine for the temporal
+//! and many-node experiments. The measurement machinery above it
+//! (params schedule, validation, aggregation, reporting) is identical
+//! to the real-measurement path, so a future run on real hardware
+//! swaps engines without touching anything else.
+
+pub mod era;
+pub mod interp;
+pub mod model;
+
+pub use era::{Era, EraKind, MemKind, ERAS};
+pub use interp::Lang;
+pub use model::{horizontal_triad_bw, simulate_node, simulate_stream, NodeModel};

@@ -1,0 +1,18 @@
+//! Triples-mode hierarchical launcher (§V):
+//! `[Nnode Nppn Ntpn]` — `Nnode` nodes, `Nppn` processes per node,
+//! `Ntpn` threads per process, with processes "pinned to adjacent
+//! cores to minimize interprocess contention" [43].
+//!
+//! The SuperCloud substitution (DESIGN.md §3): "nodes" are simulated
+//! by groups of real OS processes on this machine, launched by
+//! [`spawn`] with `DISTARRAY_PID`/`DISTARRAY_NP` environment and a
+//! shared file-messaging spool; [`pinning`] computes (and on Linux
+//! applies) the adjacent-core affinity plan.
+
+pub mod pinning;
+pub mod spawn;
+pub mod triples;
+
+pub use pinning::PinPlan;
+pub use spawn::{spawn_workers, WorkerEnv, WorkerHandle};
+pub use triples::Triples;

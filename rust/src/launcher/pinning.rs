@@ -1,0 +1,124 @@
+//! Core pinning — §V: "each of the Nppn processes and their
+//! corresponding Ntpn threads were pinned to adjacent cores to
+//! minimize interprocess contention and maximize cache locality".
+//!
+//! [`PinPlan`] computes the adjacent-core assignment; `apply` sets the
+//! affinity of the calling process on Linux via `sched_setaffinity`
+//! (a no-op elsewhere, and gracefully skipped when the plan exceeds
+//! the machine).
+
+use super::triples::Triples;
+
+/// Adjacent-core assignment for one node's processes.
+#[derive(Debug, Clone)]
+pub struct PinPlan {
+    /// `cores[slot]` = core ids for process slot `slot` on the node.
+    cores: Vec<Vec<usize>>,
+}
+
+impl PinPlan {
+    /// Build the plan for one node of a triples launch: process slot
+    /// `s` gets cores `[s·ntpn, (s+1)·ntpn)` — adjacent, non-overlapping.
+    pub fn for_node(t: &Triples) -> PinPlan {
+        let cores = (0..t.nppn)
+            .map(|slot| (slot * t.ntpn..(slot + 1) * t.ntpn).collect())
+            .collect();
+        PinPlan { cores }
+    }
+
+    /// Core ids for process slot `slot`.
+    pub fn cores_of(&self, slot: usize) -> &[usize] {
+        &self.cores[slot]
+    }
+
+    /// Number of process slots in the plan.
+    pub fn slots(&self) -> usize {
+        self.cores.len()
+    }
+
+    /// Highest core id used (for fit checks).
+    pub fn max_core(&self) -> usize {
+        self.cores.iter().flatten().copied().max().unwrap_or(0)
+    }
+
+    /// Does the plan fit on a machine with `ncores` cores?
+    pub fn fits(&self, ncores: usize) -> bool {
+        self.max_core() < ncores
+    }
+
+    /// Apply the affinity for `slot` to the calling thread/process.
+    ///
+    /// Returns `true` if affinity was set. Never fails the run: if the
+    /// plan exceeds the machine (simulated-node oversubscription) the
+    /// pin is skipped — matching how the paper's launcher degrades on
+    /// shared nodes.
+    pub fn apply(&self, slot: usize) -> bool {
+        let cores = self.cores_of(slot);
+        apply_affinity(cores)
+    }
+}
+
+/// Number of online cores on this machine.
+pub fn online_cores() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+#[cfg(target_os = "linux")]
+fn apply_affinity(cores: &[usize]) -> bool {
+    let ncores = online_cores();
+    if cores.iter().any(|&c| c >= ncores) {
+        return false; // oversubscribed simulated node: skip
+    }
+    unsafe {
+        let mut set: libc::cpu_set_t = std::mem::zeroed();
+        libc::CPU_ZERO(&mut set);
+        for &c in cores {
+            libc::CPU_SET(c, &mut set);
+        }
+        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn apply_affinity(_cores: &[usize]) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adjacent_non_overlapping() {
+        let plan = PinPlan::for_node(&Triples::new(1, 4, 2));
+        assert_eq!(plan.slots(), 4);
+        assert_eq!(plan.cores_of(0), &[0, 1]);
+        assert_eq!(plan.cores_of(1), &[2, 3]);
+        assert_eq!(plan.cores_of(3), &[6, 7]);
+        assert_eq!(plan.max_core(), 7);
+        // All cores distinct.
+        let mut all: Vec<usize> = (0..4).flat_map(|s| plan.cores_of(s).to_vec()).collect();
+        all.sort();
+        all.dedup();
+        assert_eq!(all.len(), 8);
+    }
+
+    #[test]
+    fn fits_check() {
+        let plan = PinPlan::for_node(&Triples::new(1, 2, 2));
+        assert!(plan.fits(4));
+        assert!(!plan.fits(3));
+    }
+
+    #[test]
+    fn apply_within_machine_or_skip() {
+        // Whatever the machine, apply must not panic and must return
+        // false when the plan exceeds it.
+        let big = PinPlan::for_node(&Triples::new(1, 1, 100_000));
+        assert!(!big.apply(0));
+        let small = PinPlan::for_node(&Triples::new(1, 1, 1));
+        let _ = small.apply(0); // may be true or false by platform
+    }
+}

@@ -1,0 +1,132 @@
+//! Worker process spawning — the "simulated node" substrate.
+//!
+//! The leader re-executes its own binary with `worker` arguments and
+//! `DISTARRAY_*` environment; workers rendezvous with the leader over
+//! a [`crate::comm::FileTransport`] spool directory, exactly like the
+//! paper's SuperCloud launch where workers rendezvous on a shared
+//! filesystem.
+
+use crate::launcher::triples::Triples;
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+
+/// Environment a worker reads at startup.
+#[derive(Debug, Clone)]
+pub struct WorkerEnv {
+    pub pid: usize,
+    pub np: usize,
+    pub node: usize,
+    pub slot: usize,
+    pub ntpn: usize,
+    pub spool: PathBuf,
+}
+
+impl WorkerEnv {
+    /// Read the environment of the current (worker) process.
+    pub fn from_env() -> Option<WorkerEnv> {
+        let get = |k: &str| std::env::var(k).ok();
+        Some(WorkerEnv {
+            pid: get("DISTARRAY_PID")?.parse().ok()?,
+            np: get("DISTARRAY_NP")?.parse().ok()?,
+            node: get("DISTARRAY_NODE")?.parse().ok()?,
+            slot: get("DISTARRAY_SLOT")?.parse().ok()?,
+            ntpn: get("DISTARRAY_NTPN")?.parse().ok()?,
+            spool: PathBuf::from(get("DISTARRAY_SPOOL")?),
+        })
+    }
+}
+
+/// A spawned worker process.
+pub struct WorkerHandle {
+    pub pid: usize,
+    pub child: Child,
+}
+
+impl WorkerHandle {
+    /// Wait for exit; true iff success.
+    pub fn wait(mut self) -> std::io::Result<bool> {
+        Ok(self.child.wait()?.success())
+    }
+}
+
+/// Spawn the worker processes of a triples launch (all but PID 0,
+/// which is the calling leader). `extra_args` are forwarded verbatim
+/// after `worker`.
+pub fn spawn_workers(
+    t: &Triples,
+    spool: &Path,
+    extra_args: &[String],
+) -> std::io::Result<Vec<WorkerHandle>> {
+    let exe = std::env::current_exe()?;
+    std::fs::create_dir_all(spool)?;
+    let mut handles = Vec::new();
+    for pid in 1..t.np() {
+        let child = Command::new(&exe)
+            .arg("worker")
+            .args(extra_args)
+            .env("DISTARRAY_PID", pid.to_string())
+            .env("DISTARRAY_NP", t.np().to_string())
+            .env("DISTARRAY_NODE", t.node_of(pid).to_string())
+            .env("DISTARRAY_SLOT", t.slot_of(pid).to_string())
+            .env("DISTARRAY_NTPN", t.ntpn.to_string())
+            .env("DISTARRAY_SPOOL", spool)
+            .stdout(Stdio::inherit())
+            .stderr(Stdio::inherit())
+            .spawn()?;
+        handles.push(WorkerHandle { pid, child });
+    }
+    Ok(handles)
+}
+
+/// The leader's own WorkerEnv (PID 0).
+pub fn leader_env(t: &Triples, spool: &Path) -> WorkerEnv {
+    WorkerEnv {
+        pid: 0,
+        np: t.np(),
+        node: 0,
+        slot: 0,
+        ntpn: t.ntpn,
+        spool: spool.to_path_buf(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn leader_env_is_pid0() {
+        let t = Triples::new(2, 3, 1);
+        let e = leader_env(&t, Path::new("/tmp/spool"));
+        assert_eq!(e.pid, 0);
+        assert_eq!(e.np, 6);
+        assert_eq!(e.node, 0);
+    }
+
+    #[test]
+    fn from_env_roundtrip() {
+        // Set env vars, read them back. (Serialized by test name — no
+        // other test touches DISTARRAY_*.)
+        std::env::set_var("DISTARRAY_PID", "3");
+        std::env::set_var("DISTARRAY_NP", "8");
+        std::env::set_var("DISTARRAY_NODE", "1");
+        std::env::set_var("DISTARRAY_SLOT", "0");
+        std::env::set_var("DISTARRAY_NTPN", "2");
+        std::env::set_var("DISTARRAY_SPOOL", "/tmp/x");
+        let e = WorkerEnv::from_env().unwrap();
+        assert_eq!(e.pid, 3);
+        assert_eq!(e.np, 8);
+        assert_eq!(e.ntpn, 2);
+        for k in [
+            "DISTARRAY_PID",
+            "DISTARRAY_NP",
+            "DISTARRAY_NODE",
+            "DISTARRAY_SLOT",
+            "DISTARRAY_NTPN",
+            "DISTARRAY_SPOOL",
+        ] {
+            std::env::remove_var(k);
+        }
+        assert!(WorkerEnv::from_env().is_none());
+    }
+}

@@ -1,0 +1,102 @@
+//! The `[Nnode Nppn Ntpn]` triple and its derived quantities.
+
+/// A triples-mode launch specification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Triples {
+    /// Nodes.
+    pub nnode: usize,
+    /// Processes per node.
+    pub nppn: usize,
+    /// Threads per process.
+    pub ntpn: usize,
+}
+
+impl Triples {
+    pub fn new(nnode: usize, nppn: usize, ntpn: usize) -> Self {
+        assert!(nnode >= 1 && nppn >= 1 && ntpn >= 1);
+        Triples { nnode, nppn, ntpn }
+    }
+
+    /// Total process count `Np = Nnode × Nppn` (§V).
+    pub fn np(&self) -> usize {
+        self.nnode * self.nppn
+    }
+
+    /// Total hardware threads claimed.
+    pub fn total_threads(&self) -> usize {
+        self.np() * self.ntpn
+    }
+
+    /// Node index hosting `pid` (processes are dealt node-major:
+    /// node 0 gets pids 0..nppn, node 1 the next nppn, ...).
+    pub fn node_of(&self, pid: usize) -> usize {
+        assert!(pid < self.np());
+        pid / self.nppn
+    }
+
+    /// Process slot of `pid` within its node.
+    pub fn slot_of(&self, pid: usize) -> usize {
+        assert!(pid < self.np());
+        pid % self.nppn
+    }
+
+    /// Parse `"NxMxK"` or `"[N M K]"` forms.
+    pub fn parse(s: &str) -> Option<Triples> {
+        let cleaned = s.trim().trim_start_matches('[').trim_end_matches(']');
+        let parts: Vec<&str> = cleaned
+            .split(|c: char| c == 'x' || c == ',' || c.is_whitespace())
+            .filter(|p| !p.is_empty())
+            .collect();
+        if parts.len() != 3 {
+            return None;
+        }
+        let v: Option<Vec<usize>> = parts.iter().map(|p| p.parse().ok()).collect();
+        let v = v?;
+        if v.iter().any(|&x| x == 0) {
+            return None;
+        }
+        Some(Triples::new(v[0], v[1], v[2]))
+    }
+}
+
+impl std::fmt::Display for Triples {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{} {} {}]", self.nnode, self.nppn, self.ntpn)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn np_is_product_of_first_two() {
+        let t = Triples::new(4, 8, 2);
+        assert_eq!(t.np(), 32);
+        assert_eq!(t.total_threads(), 64);
+    }
+
+    #[test]
+    fn node_and_slot_assignment() {
+        let t = Triples::new(2, 4, 1);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert_eq!(t.slot_of(5), 1);
+    }
+
+    #[test]
+    fn parse_forms() {
+        assert_eq!(Triples::parse("2x4x1"), Some(Triples::new(2, 4, 1)));
+        assert_eq!(Triples::parse("[2 4 1]"), Some(Triples::new(2, 4, 1)));
+        assert_eq!(Triples::parse("2,4,1"), Some(Triples::new(2, 4, 1)));
+        assert_eq!(Triples::parse("2x4"), None);
+        assert_eq!(Triples::parse("0x4x1"), None);
+        assert_eq!(Triples::parse("junk"), None);
+    }
+
+    #[test]
+    fn display_matches_paper_notation() {
+        assert_eq!(Triples::new(1, 32, 1).to_string(), "[1 32 1]");
+    }
+}

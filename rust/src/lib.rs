@@ -1,0 +1,45 @@
+//! # distarray — Easy Acceleration with Distributed Arrays
+//!
+//! A production-grade reproduction of Kepner et al., *"Easy
+//! Acceleration with Distributed Arrays"* (HPEC 2025): a PGAS-style
+//! distributed-array library with the STREAM memory-bandwidth
+//! benchmark as its evaluation workload, structured as a three-layer
+//! Rust + JAX + Pallas stack (see DESIGN.md).
+//!
+//! Layer map:
+//! * **L3 (this crate)** — maps ([`dmap`]), distributed arrays
+//!   ([`darray`]), transports ([`comm`]), triples launcher
+//!   ([`launcher`]), leader/worker coordinator ([`coordinator`]),
+//!   hardware-era models ([`hardware`]), STREAM drivers ([`stream`]),
+//!   baseline programming models ([`baselines`]), and report
+//!   generators ([`report`]).
+//! * **L2/L1 (python/, build-time only)** — the STREAM step as a JAX
+//!   graph over Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`
+//!   and executed from Rust via [`runtime`].
+//!
+//! Quickstart:
+//! ```no_run
+//! use distarray::dmap::Dmap;
+//! use distarray::stream::{run_parallel_spmd, STREAM_Q};
+//!
+//! // 4-process parallel STREAM over a block map, in-process SPMD.
+//! let agg = run_parallel_spmd(&Dmap::block_1d(4), 1 << 20, 10, STREAM_Q);
+//! println!("triad {:.2} GB/s (validated: {})",
+//!          agg.triad_bw() / 1e9, agg.all_valid);
+//! ```
+
+pub mod baselines;
+pub mod benchx;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod darray;
+pub mod dmap;
+pub mod hardware;
+pub mod json;
+pub mod launcher;
+pub mod prop;
+pub mod report;
+pub mod runtime;
+pub mod stream;

@@ -1,0 +1,262 @@
+//! `repro` — the leader binary.
+//!
+//! Subcommands:
+//! * `run`      — coordinated STREAM across worker processes (triples mode)
+//! * `worker`   — internal: one spawned worker process
+//! * `sweep`    — regenerate a figure (fig3 | fig4 | petascale)
+//! * `report`   — print a paper table (table1 | table2 | fig4)
+//! * `validate` — run the PJRT artifacts and check numerics vs closed forms
+//! * `info`     — platform / artifact summary
+
+use distarray::cli::Args;
+use distarray::comm::FileTransport;
+use distarray::coordinator::{run_leader, run_worker, EngineKind, MapKind, RunConfig};
+use distarray::launcher::{spawn_workers, PinPlan, Triples, WorkerEnv};
+use distarray::report::{fig3, fig4, fmt_bw, petascale, table1, table2};
+use distarray::stream::STREAM_Q;
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("worker") => cmd_worker(),
+        Some("sweep") => cmd_sweep(&args),
+        Some("report") => cmd_report(&args),
+        Some("validate") => cmd_validate(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: repro <run|sweep|report|validate|info> [--flags]\n\
+                 \n  run      [--config run.json] --triples 1x4x1 --n 1048576 --nt 10\n\
+                 \n           --map block|cyclic|blockcyclic:K --engine native|pjrt|pjrt-fused\n\
+                 \n  sweep    fig3|fig4|petascale [--measure] [--csv]\n\
+                 \n  report   table1|table2|fig4\n\
+                 \n  validate --artifacts artifacts\n\
+                 \n  info     --artifacts artifacts"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// `repro run` — spawn triples-mode workers, coordinate one benchmark.
+/// Flags override `--config <file.json>` values, which override defaults.
+fn cmd_run(args: &Args) -> i32 {
+    let base = match args.flag("config") {
+        Some(path) => match distarray::config::LaunchConfig::load(path) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("config {path}: {e}");
+                return 2;
+            }
+        },
+        None => distarray::config::LaunchConfig::default_config(),
+    };
+    let triples = args
+        .flag("triples")
+        .and_then(Triples::parse)
+        .unwrap_or(base.triples);
+    let n = args.flag_usize("n", base.run.n_global);
+    let nt = args.flag_usize("nt", base.run.nt);
+    let map = args.flag("map").and_then(MapKind::parse).unwrap_or(base.run.map);
+    let engine = args
+        .flag("engine")
+        .and_then(EngineKind::parse)
+        .unwrap_or(base.run.engine);
+    let artifacts = args.flag_str("artifacts", &base.run.artifacts).to_string();
+    let spool = std::env::temp_dir().join(format!("distarray_run_{}", std::process::id()));
+
+    let cfg = RunConfig { n_global: n, nt, q: base.run.q, map, engine, artifacts };
+    println!(
+        "repro run: triples={triples} Np={} N={n} Nt={nt} engine={}",
+        triples.np(),
+        cfg.engine.name()
+    );
+
+    let plan = PinPlan::for_node(&triples);
+    plan.apply(0);
+
+    let workers = match spawn_workers(&triples, &spool, &[]) {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("spawn failed: {e}");
+            return 1;
+        }
+    };
+    let leader = match FileTransport::new(&spool, 0, triples.np()) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("transport: {e}");
+            return 1;
+        }
+    };
+    match run_leader(&leader, &cfg) {
+        Ok((agg, results)) => {
+            for r in &results {
+                println!(
+                    "  pid n_local={:<10} triad={:<12} ok={}",
+                    r.n_local,
+                    fmt_bw(r.triad_bw()),
+                    r.validation.passed
+                );
+            }
+            println!(
+                "AGGREGATE: copy={} scale={} add={} triad={} validated={}",
+                fmt_bw(agg.bw[0]),
+                fmt_bw(agg.bw[1]),
+                fmt_bw(agg.bw[2]),
+                fmt_bw(agg.bw[3]),
+                agg.all_valid
+            );
+            let mut ok = agg.all_valid;
+            for w in workers {
+                ok &= w.wait().unwrap_or(false);
+            }
+            std::fs::remove_dir_all(&spool).ok();
+            i32::from(!ok)
+        }
+        Err(e) => {
+            eprintln!("leader failed: {e}");
+            1
+        }
+    }
+}
+
+/// `repro worker` — internal entry for spawned workers.
+fn cmd_worker() -> i32 {
+    let Some(env) = WorkerEnv::from_env() else {
+        eprintln!("worker: missing DISTARRAY_* environment");
+        return 1;
+    };
+    let t = match FileTransport::new(&env.spool, env.pid, env.np) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("worker {} transport: {e}", env.pid);
+            return 1;
+        }
+    };
+    // Pin to the adjacent-core plan slot.
+    let triples = Triples::new(1, env.np, env.ntpn);
+    PinPlan::for_node(&triples).apply(env.slot.min(env.np - 1));
+    match run_worker(&t) {
+        Ok(rep) => i32::from(!rep.passed),
+        Err(e) => {
+            eprintln!("worker {} failed: {e}", env.pid);
+            1
+        }
+    }
+}
+
+/// `repro sweep fig3|fig4|petascale`.
+fn cmd_sweep(args: &Args) -> i32 {
+    match args.positional.first().map(String::as_str) {
+        Some("fig3") => {
+            let mut series = fig3::simulate_all();
+            if args.flag_bool("measure") {
+                let max_np = args.flag_usize("max-np", 8);
+                let n_per_p = args.flag_usize("n-per-p", 1 << 22);
+                series.push(fig3::measured_series(max_np, n_per_p, args.flag_usize("nt", 5)));
+            }
+            if args.flag_bool("csv") {
+                print!("{}", fig3::to_csv(&series));
+            } else {
+                print!("{}", fig3::render(&series));
+            }
+            0
+        }
+        Some("fig4") => {
+            print!("{}", fig4::render());
+            0
+        }
+        Some("petascale") => {
+            print!("{}", petascale::render(args.flag_usize("max-nodes", 1024)));
+            0
+        }
+        other => {
+            eprintln!("unknown sweep {other:?}; expected fig3|fig4|petascale");
+            2
+        }
+    }
+}
+
+/// `repro report table1|table2|fig4`.
+fn cmd_report(args: &Args) -> i32 {
+    match args.positional.first().map(String::as_str) {
+        Some("table1") => {
+            print!("{}", table1::render());
+            0
+        }
+        Some("table2") => {
+            print!("{}", table2::render());
+            0
+        }
+        Some("fig4") => {
+            print!("{}", fig4::render());
+            0
+        }
+        other => {
+            eprintln!("unknown report {other:?}; expected table1|table2|fig4");
+            2
+        }
+    }
+}
+
+/// `repro validate` — prove the three layers compose: run the PJRT
+/// artifacts (Pallas kernels lowered through JAX) and check against
+/// the closed forms.
+fn cmd_validate(args: &Args) -> i32 {
+    use distarray::runtime::PjrtRuntime;
+    let dir = args.flag_str("artifacts", "artifacts");
+    let rt = match PjrtRuntime::load(dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("load artifacts: {e}");
+            return 1;
+        }
+    };
+    let n = rt.n();
+    println!("platform={} n={} nt={}", rt.platform(), n, rt.nt());
+    let a = vec![1.0f64; n];
+    // Full run + validate, all inside the artifacts.
+    let (a2, b2, c2) = match rt.run(&a, STREAM_Q) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("run artifact failed: {e}");
+            return 1;
+        }
+    };
+    let errs = rt.validate(&a2, &b2, &c2, STREAM_Q).expect("validate artifact");
+    println!("pjrt errs: A={:.3e} B={:.3e} C={:.3e}", errs[0], errs[1], errs[2]);
+    let tol = 1e-10 * rt.nt() as f64;
+    // Cross-check against the native closed forms too.
+    let rep = distarray::stream::validate(&a2, &b2, &c2, 1.0, STREAM_Q, rt.nt());
+    println!("native cross-check: passed={} max_err={:.3e}", rep.passed, rep.max_err());
+    if errs.iter().all(|e| *e < tol) && rep.passed {
+        println!("VALIDATE OK — L1 Pallas → L2 JAX → HLO → L3 rust/PJRT agree");
+        0
+    } else {
+        println!("VALIDATE FAILED");
+        1
+    }
+}
+
+/// `repro info` — environment summary.
+fn cmd_info(args: &Args) -> i32 {
+    println!(
+        "distarray {} — Easy Acceleration with Distributed Arrays",
+        env!("CARGO_PKG_VERSION")
+    );
+    println!("cores online: {}", distarray::launcher::pinning::online_cores());
+    let dir = args.flag_str("artifacts", "artifacts");
+    match distarray::runtime::Manifest::load(dir) {
+        Ok(m) => {
+            println!("artifacts: n={} nt={} ({} entries)", m.n, m.nt, m.artifacts.len());
+            for name in m.artifacts.keys() {
+                println!("  - {name}");
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    0
+}

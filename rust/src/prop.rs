@@ -1,0 +1,121 @@
+//! Tiny property-testing substrate (proptest is unavailable offline).
+//!
+//! A deterministic xorshift64* PRNG plus a `forall` driver that runs a
+//! generator/checker pair for `iters` cases and reports the failing
+//! seed — enough for the randomized invariant tests in
+//! `rust/tests/prop_invariants.rs`.
+
+/// xorshift64* PRNG — deterministic, seedable, no dependencies.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Rng { state: seed.max(1) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in `[0, n)` (n ≥ 1).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n >= 1);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in `[lo, hi]`.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len())]
+    }
+}
+
+/// Run `check(rng)` for `iters` seeded cases; panic with the failing
+/// seed on the first failure so the case is reproducible.
+pub fn forall(iters: usize, base_seed: u64, check: impl Fn(&mut Rng)) {
+    for i in 0..iters {
+        let seed = base_seed.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| check(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at iter {i} (seed {seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn ranges_in_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.range(3, 17);
+            assert!((3..=17).contains(&x));
+            let f = r.f64();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn distribution_not_degenerate() {
+        let mut r = Rng::new(1);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            seen.insert(r.below(10));
+        }
+        assert!(seen.len() >= 9, "only {:?}", seen);
+    }
+
+    #[test]
+    fn forall_runs_all_iters() {
+        let count = std::cell::Cell::new(0);
+        forall(25, 99, |_| count.set(count.get() + 1));
+        assert_eq!(count.get(), 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall(10, 1, |rng| assert!(rng.below(10) < 5));
+    }
+}

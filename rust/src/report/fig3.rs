@@ -1,0 +1,162 @@
+//! Figure 3 — STREAM triad bandwidth vs process count, per hardware
+//! configuration × language: vertical scaling within the node and
+//! horizontal scaling across nodes.
+//!
+//! The simulated engine generates every era's series; the native
+//! engine additionally produces a **measured** series on this
+//! machine (label "native-local") so the real measurement path is
+//! exercised end-to-end.
+
+use crate::hardware::{simulate_node, Era, Lang, NodeModel, ERAS};
+use crate::stream::params::schedule;
+use crate::stream::{aggregate, run_parallel_spmd, STREAM_Q};
+
+/// One point of a Figure 3 series.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub np: usize,
+    /// Triad bandwidth, bytes/s.
+    pub triad_bw: f64,
+}
+
+/// One panel series (an era × language curve).
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub era: String,
+    pub lang: &'static str,
+    pub points: Vec<Point>,
+}
+
+/// Simulate the vertical-scaling series for one era and language.
+/// Uses the Table II cells (including the published bg-p override) so
+/// Figure 3 and Table II stay consistent.
+pub fn simulate_series(era: &'static Era, lang: Lang) -> Series {
+    let cells = super::table2::rows()
+        .into_iter()
+        .find(|r| r.era.label == era.label)
+        .map(|r| r.cells)
+        .unwrap_or_else(|| schedule(era.base_log2, era.base_nt, era.mem_bytes(), era.max_np));
+    let points = cells
+        .iter()
+        .map(|(np, params)| {
+            let node = NodeModel::new(era, *np, 1);
+            let agg = aggregate(&simulate_node(&node, params, lang)).unwrap();
+            Point { np: *np, triad_bw: agg.triad_bw() }
+        })
+        .collect();
+    Series { era: era.label.to_string(), lang: lang.name(), points }
+}
+
+/// All simulated panels of Figure 3.
+pub fn simulate_all() -> Vec<Series> {
+    let mut out = Vec::new();
+    for era in ERAS {
+        for lang in Lang::ALL {
+            out.push(simulate_series(era, lang));
+        }
+    }
+    out
+}
+
+/// Measured series on *this* machine via the native engine — real
+/// data through the identical reporting path. `n_per_p` elements per
+/// process, doubling process counts up to `max_np`.
+pub fn measured_series(max_np: usize, n_per_p: usize, nt: usize) -> Series {
+    let mut points = Vec::new();
+    let mut np = 1usize;
+    while np <= max_np {
+        let map = crate::dmap::Dmap::block_1d(np);
+        let agg = run_parallel_spmd(&map, n_per_p * np, nt, STREAM_Q);
+        assert!(agg.all_valid, "measured run failed validation");
+        points.push(Point { np, triad_bw: agg.triad_bw() });
+        np *= 2;
+    }
+    Series { era: "native-local".into(), lang: "rust", points }
+}
+
+/// Render a set of series as the panel grid (text form).
+pub fn render(series: &[Series]) -> String {
+    let mut s = String::new();
+    s.push_str("FIGURE 3 — STREAM TRIAD BANDWIDTH (vertical scaling)\n");
+    for sr in series {
+        s.push_str(&format!("-- {} [{}] --\n", sr.era, sr.lang));
+        for p in &sr.points {
+            s.push_str(&format!(
+                "  Np={:<4} triad={}\n",
+                p.np,
+                super::fmt_bw(p.triad_bw)
+            ));
+        }
+    }
+    s
+}
+
+/// CSV emitter (era,lang,np,triad_bytes_per_s).
+pub fn to_csv(series: &[Series]) -> String {
+    let mut s = String::from("era,lang,np,triad_bytes_per_s\n");
+    for sr in series {
+        for p in &sr.points {
+            s.push_str(&format!("{},{},{},{}\n", sr.era, sr.lang, p.np, p.triad_bw));
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_panels_generated() {
+        let all = simulate_all();
+        // 8 eras × 3 languages.
+        assert_eq!(all.len(), 24);
+        for s in &all {
+            assert!(!s.points.is_empty(), "{} {}", s.era, s.lang);
+        }
+    }
+
+    #[test]
+    fn vertical_scaling_shape_monotone_then_flat() {
+        let era = Era::by_label("xeon-p8").unwrap();
+        let s = simulate_series(era, Lang::Matlab);
+        // Monotone non-decreasing until saturation; final/first ratio
+        // large (the paper's "excellent vertical scaling").
+        let first = s.points.first().unwrap().triad_bw;
+        let last = s.points.last().unwrap().triad_bw;
+        assert!(last / first > 5.0, "ratio {}", last / first);
+        for w in s.points.windows(2) {
+            assert!(w[1].triad_bw >= w[0].triad_bw * 0.98);
+        }
+    }
+
+    #[test]
+    fn octave_sits_30pct_below_matlab() {
+        let era = Era::by_label("xeon-g6").unwrap();
+        let m = simulate_series(era, Lang::Matlab);
+        let o = simulate_series(era, Lang::Octave);
+        for (pm, po) in m.points.iter().zip(&o.points) {
+            let ratio = po.triad_bw / pm.triad_bw;
+            assert!((ratio - 0.7).abs() < 0.02, "np={} ratio={ratio}", pm.np);
+        }
+    }
+
+    #[test]
+    fn measured_series_runs_on_this_machine() {
+        let s = measured_series(2, 1 << 16, 3);
+        assert_eq!(s.points.len(), 2);
+        for p in &s.points {
+            assert!(p.triad_bw > 1e8, "np={} bw={}", p.np, p.triad_bw);
+        }
+    }
+
+    #[test]
+    fn csv_well_formed() {
+        let s = simulate_series(Era::by_label("xeon-e5").unwrap(), Lang::Python);
+        let csv = to_csv(&[s]);
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert!(lines.len() > 2);
+        assert_eq!(lines[0], "era,lang,np,triad_bytes_per_s");
+        assert!(lines[1].starts_with("xeon-e5,python,1,"));
+    }
+}

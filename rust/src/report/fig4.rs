@@ -1,0 +1,148 @@
+//! Figure 4 — temporal scaling: best single-core, single-node, and
+//! GPU-node triad bandwidth per hardware era, plus the headline
+//! ratios (10× core / 100× node over 20 years, 5× GPU over ~5 years).
+
+use crate::hardware::{simulate_stream, Era, Lang, NodeModel, ERAS};
+use crate::stream::params::schedule;
+use crate::stream::StreamParams;
+
+/// One Figure 4 point.
+#[derive(Debug, Clone)]
+pub struct TemporalPoint {
+    pub era: &'static Era,
+    /// Best single-core single-thread bandwidth (bottom black line).
+    pub single_core: Option<f64>,
+    /// Best whole-node multi-process bandwidth (middle blue line).
+    pub single_node: Option<f64>,
+    /// GPU-node bandwidth (top green line).
+    pub gpu_node: Option<f64>,
+}
+
+fn best_node_bw(era: &'static Era) -> f64 {
+    let best = schedule(era.base_log2, era.base_nt, era.mem_bytes(), era.max_np)
+        .iter()
+        .map(|(np, p)| {
+            let node = NodeModel::new(era, *np, 1);
+            crate::stream::aggregate(&crate::hardware::simulate_node(&node, p, Lang::Matlab))
+                .unwrap()
+                .triad_bw()
+        })
+        .fold(0.0, f64::max);
+    // Figure 4 plots per-*node* bandwidth; the bg-p Table I entry is a
+    // 32-node partition, so normalize it back to one Blue Gene/P node.
+    best / era.nodes_in_entry as f64
+}
+
+fn single_core_bw(era: &'static Era) -> f64 {
+    let p = StreamParams { nt: era.base_nt, log2_local: era.base_log2.min(24) };
+    simulate_stream(&NodeModel::new(era, 1, 1), &p, Lang::Matlab).triad_bw()
+}
+
+/// Compute the Figure 4 points for every era.
+pub fn points() -> Vec<TemporalPoint> {
+    ERAS.iter()
+        .map(|era| {
+            if era.is_gpu() {
+                TemporalPoint {
+                    era,
+                    single_core: None,
+                    single_node: None,
+                    gpu_node: Some(best_node_bw(era)),
+                }
+            } else {
+                TemporalPoint {
+                    era,
+                    single_core: Some(single_core_bw(era)),
+                    single_node: Some(best_node_bw(era)),
+                    gpu_node: None,
+                }
+            }
+        })
+        .collect()
+}
+
+/// The paper's three headline ratios (core20y, node20y, gpu5y).
+pub fn headline_ratios() -> (f64, f64, f64) {
+    let pts = points();
+    let by = |label: &str| pts.iter().find(|p| p.era.label == label).unwrap().clone();
+    let p4 = by("xeon-p4");
+    let e9 = by("amd-e9");
+    let v100 = by("v100");
+    let h100 = by("h100nvl");
+    (
+        e9.single_core.unwrap() / p4.single_core.unwrap(),
+        e9.single_node.unwrap() / p4.single_node.unwrap(),
+        h100.gpu_node.unwrap() / v100.gpu_node.unwrap(),
+    )
+}
+
+/// Render Figure 4 as a table + ratio summary.
+pub fn render() -> String {
+    let mut s = String::new();
+    s.push_str("FIGURE 4 — TEMPORAL SCALING (triad bandwidth by era)\n");
+    s.push_str("| Era | Node | single-core | single-node | GPU node |\n");
+    s.push_str("|---|---|---|---|---|\n");
+    let mut pts = points();
+    pts.sort_by_key(|p| p.era.year);
+    for p in &pts {
+        let f = |o: &Option<f64>| o.map(super::fmt_bw).unwrap_or_else(|| "-".into());
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {} |\n",
+            p.era.year,
+            p.era.label,
+            f(&p.single_core),
+            f(&p.single_node),
+            f(&p.gpu_node)
+        ));
+    }
+    let (core, node, gpu) = headline_ratios();
+    s.push_str(&format!(
+        "\nratios: single-core 20y = {core:.1}x (paper: ~10x), \
+         single-node 20y = {node:.1}x (paper: ~100x), \
+         GPU node ~5y = {gpu:.1}x (paper: ~5x)\n"
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_rows_have_core_and_node_gpu_rows_have_gpu() {
+        for p in points() {
+            if p.era.is_gpu() {
+                assert!(p.gpu_node.is_some() && p.single_core.is_none());
+            } else {
+                assert!(p.single_core.is_some() && p.single_node.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn headline_ratios_match_paper_bands() {
+        let (core, node, gpu) = headline_ratios();
+        assert!((5.0..20.0).contains(&core), "core {core}");
+        assert!((50.0..200.0).contains(&node), "node {node}");
+        assert!((3.0..8.0).contains(&gpu), "gpu {gpu}");
+    }
+
+    #[test]
+    fn node_bw_grows_monotonically_with_era_for_cpus() {
+        let mut cpu: Vec<_> = points().into_iter().filter(|p| !p.era.is_gpu()).collect();
+        cpu.sort_by_key(|p| p.era.year);
+        for w in cpu.windows(2) {
+            assert!(
+                w[1].single_node.unwrap() >= w[0].single_node.unwrap(),
+                "{} -> {}",
+                w[0].era.label,
+                w[1].era.label
+            );
+        }
+    }
+
+    #[test]
+    fn render_has_ratio_line() {
+        assert!(render().contains("ratios:"));
+    }
+}

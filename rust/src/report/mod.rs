@@ -1,0 +1,40 @@
+//! Report generators — one per paper artifact (DESIGN.md §5).
+//!
+//! Every generator returns both structured rows (for tests/benches)
+//! and a rendered table so `repro report <id>` prints the same
+//! rows/series the paper shows.
+
+pub mod fig3;
+pub mod fig4;
+pub mod petascale;
+pub mod table1;
+pub mod table2;
+
+/// Human-readable bytes/s with the paper's units.
+pub fn fmt_bw(bytes_per_s: f64) -> String {
+    const UNITS: [(&str, f64); 5] = [
+        ("PB/s", 1e15),
+        ("TB/s", 1e12),
+        ("GB/s", 1e9),
+        ("MB/s", 1e6),
+        ("kB/s", 1e3),
+    ];
+    for (u, f) in UNITS {
+        if bytes_per_s >= f {
+            return format!("{:.2} {u}", bytes_per_s / f);
+        }
+    }
+    format!("{bytes_per_s:.0} B/s")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn units() {
+        assert_eq!(fmt_bw(2.5e9), "2.50 GB/s");
+        assert_eq!(fmt_bw(1.2e15), "1.20 PB/s");
+        assert_eq!(fmt_bw(10.0), "10 B/s");
+    }
+}

@@ -1,0 +1,104 @@
+//! The >1 PB/s headline — "Running on hundreds of MIT SuperCloud
+//! nodes simultaneously achieved a sustained bandwidth >1 PB/s."
+//!
+//! Horizontal scaling is communication-free, so aggregate bandwidth is
+//! linear in node count; this report sweeps node counts over a
+//! SuperCloud-like mix of modern CPU and GPU nodes and reports where
+//! the PB/s line is crossed.
+
+use crate::hardware::{horizontal_triad_bw, Era, Lang, NodeModel};
+use crate::stream::params::schedule;
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    pub nnode_cpu: usize,
+    pub nnode_gpu: usize,
+    /// Aggregate triad bandwidth (bytes/s).
+    pub bw: f64,
+}
+
+/// Best per-node params for an era (max vertical scaling).
+fn best_params(era: &'static Era) -> (usize, crate::stream::StreamParams) {
+    let cells = schedule(era.base_log2, era.base_nt, era.mem_bytes(), era.max_np);
+    *cells.last().expect("non-empty schedule")
+}
+
+/// Sweep a SuperCloud-like mix: `r` CPU nodes per GPU node, doubling
+/// total node count until `max_nodes`.
+pub fn sweep(max_nodes: usize) -> Vec<ScalePoint> {
+    let cpu = Era::by_label("amd-e9").unwrap();
+    let gpu = Era::by_label("h100nvl").unwrap();
+    let (cpu_np, cpu_p) = best_params(cpu);
+    let (gpu_np, gpu_p) = best_params(gpu);
+    let cpu_node = NodeModel::new(cpu, cpu_np, 1);
+    let gpu_node = NodeModel::new(gpu, gpu_np, 1);
+    let mut out = Vec::new();
+    // Start at 4 nodes so the 3:1 CPU:GPU mix (SuperCloud's
+    // TX-GAIA-like ratio) stays proportional as the count doubles.
+    let mut n = 4usize;
+    while n <= max_nodes {
+        let ngpu = n / 4;
+        let ncpu = n - ngpu;
+        let bw = horizontal_triad_bw(&cpu_node, &cpu_p, Lang::Matlab, ncpu)
+            + horizontal_triad_bw(&gpu_node, &gpu_p, Lang::Python, ngpu);
+        out.push(ScalePoint { nnode_cpu: ncpu, nnode_gpu: ngpu, bw });
+        n *= 2;
+    }
+    out
+}
+
+/// First total node count whose aggregate crosses `target` bytes/s.
+pub fn nodes_to_reach(target: f64, max_nodes: usize) -> Option<usize> {
+    sweep(max_nodes)
+        .into_iter()
+        .find(|p| p.bw >= target)
+        .map(|p| p.nnode_cpu + p.nnode_gpu)
+}
+
+/// Render the sweep.
+pub fn render(max_nodes: usize) -> String {
+    let mut s = String::new();
+    s.push_str("HEADLINE — HORIZONTAL SCALING TO >1 PB/s\n");
+    s.push_str("| nodes (cpu+gpu) | aggregate triad |\n|---|---|\n");
+    for p in sweep(max_nodes) {
+        s.push_str(&format!(
+            "| {} ({}+{}) | {} |\n",
+            p.nnode_cpu + p.nnode_gpu,
+            p.nnode_cpu,
+            p.nnode_gpu,
+            super::fmt_bw(p.bw)
+        ));
+    }
+    match nodes_to_reach(1e15, max_nodes) {
+        Some(n) => s.push_str(&format!("\n>1 PB/s reached at {n} nodes (paper: \"hundreds\")\n")),
+        None => s.push_str("\n>1 PB/s not reached in this sweep\n"),
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_in_node_count() {
+        let pts = sweep(64);
+        // Doubling nodes ≈ doubles bandwidth (mix rounding aside).
+        for w in pts.windows(2) {
+            let ratio = w[1].bw / w[0].bw;
+            assert!((1.7..2.3).contains(&ratio), "ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn pb_per_s_reached_at_hundreds_of_nodes() {
+        let n = nodes_to_reach(1e15, 1024).expect("PB/s reachable");
+        assert!((64..=1024).contains(&n), "nodes {n}");
+    }
+
+    #[test]
+    fn render_mentions_pb() {
+        assert!(render(1024).contains("PB/s reached"));
+    }
+}

@@ -1,0 +1,41 @@
+//! Table I — computer hardware specifications.
+
+use crate::hardware::{Era, ERAS};
+
+/// Render Table I as markdown (same columns as the paper).
+pub fn render() -> String {
+    let mut s = String::new();
+    s.push_str("TABLE I — COMPUTER HARDWARE SPECIFICATIONS\n");
+    s.push_str("| Node Label | Era | Processor Part | Clock | Cores | Mem Part | Mem Size |\n");
+    s.push_str("|---|---|---|---|---|---|---|\n");
+    for e in ERAS {
+        s.push_str(&format!(
+            "| {} | {} | {} | {:.1} GHz | {} | {:?} | {} GB |\n",
+            e.label,
+            e.year,
+            e.part,
+            e.clock_ghz,
+            if e.cores == 0 { "-".to_string() } else { e.cores.to_string() },
+            e.mem,
+            e.mem_gb
+        ));
+    }
+    s
+}
+
+/// The rows, for programmatic checks.
+pub fn rows() -> &'static [Era] {
+    ERAS
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn render_contains_all_labels() {
+        let s = super::render();
+        for e in super::rows() {
+            assert!(s.contains(e.label), "{}", e.label);
+        }
+        assert!(s.contains("2005") && s.contains("2024"));
+    }
+}

@@ -1,0 +1,98 @@
+//! `artifacts/manifest.json` — shapes and filenames of the AOT
+//! artifacts, written by `python/compile/aot.py`.
+
+use super::{Result, RuntimeError};
+use crate::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: PathBuf,
+    pub outputs: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Vector length lowered into the artifacts.
+    pub n: usize,
+    /// Iteration count baked into the `run`/`validate` artifacts.
+    pub nt: usize,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| RuntimeError::Manifest(format!("parse: {e}")))?;
+        let n = j
+            .get("n")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| RuntimeError::Manifest("missing 'n'".into()))?;
+        let nt = j
+            .get("nt")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| RuntimeError::Manifest("missing 'nt'".into()))?;
+        let arts = j
+            .get("artifacts")
+            .and_then(Json::obj)
+            .ok_or_else(|| RuntimeError::Manifest("missing 'artifacts'".into()))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, meta) in arts {
+            let file = meta
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| RuntimeError::Manifest(format!("artifact {name}: no file")))?;
+            let outputs = meta.get("outputs").and_then(Json::as_usize).unwrap_or(1);
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta { name: name.clone(), file: dir.join(file), outputs },
+            );
+        }
+        Ok(Manifest { n, nt, artifacts, dir })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| RuntimeError::MissingArtifact(name.into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("distarray_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"n": 1024, "nt": 5, "dtype": "f64",
+                "artifacts": {"copy": {"file": "copy.hlo.txt", "outputs": 1},
+                              "run": {"file": "run.hlo.txt", "outputs": 3, "nt": 5}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n, 1024);
+        assert_eq!(m.nt, 5);
+        assert_eq!(m.get("run").unwrap().outputs, 3);
+        assert!(m.get("copy").unwrap().file.ends_with("copy.hlo.txt"));
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let r = Manifest::load("/nonexistent/dir");
+        assert!(matches!(r, Err(RuntimeError::Io(_))));
+    }
+}

@@ -1,0 +1,38 @@
+//! PJRT runtime — loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `python/compile/aot.py`) and executes them from
+//! Rust. Python never runs on this path.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! One compiled executable per artifact; executables are compiled at
+//! load time and reused for every call (compilation never sits on the
+//! hot path).
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{ArtifactMeta, Manifest};
+pub use pjrt::PjrtRuntime;
+
+/// Runtime errors.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("xla error: {0}")]
+    Xla(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    #[error("artifact '{0}' not found (run `make artifacts`)")]
+    MissingArtifact(String),
+    #[error("shape mismatch: artifact expects n={expected}, got {got}")]
+    ShapeMismatch { expected: usize, got: usize },
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;

@@ -1,0 +1,114 @@
+//! The STREAM benchmark (§III) — the paper's workload.
+//!
+//! * [`ops`] — the four vector kernels as native Rust loops (the
+//!   "regular numeric array" performance-guarantee path);
+//! * [`serial`] — Algorithm 1 (single process);
+//! * [`parallel`] — Algorithm 2 over [`crate::darray::Darray`] `.loc`
+//!   parts (zero-communication by construction);
+//! * [`params`] — the Table II parameter schedule (Nt, N/Np per era);
+//! * [`validate`] — the §III closed-form checks with `q = √2 − 1`;
+//! * [`timing`] — `tic`/`toc` equivalents and per-op accumulators.
+
+pub mod ops;
+pub mod params;
+pub mod parallel;
+pub mod serial;
+pub mod threaded;
+pub mod timing;
+pub mod validate;
+
+pub use params::StreamParams;
+pub use parallel::{run_parallel, run_parallel_spmd};
+pub use serial::run_native_serial;
+pub use timing::{OpTimes, Timer};
+pub use validate::{validate, ValidationReport, STREAM_Q};
+
+/// Result of one STREAM run (one process's view).
+#[derive(Debug, Clone)]
+pub struct StreamResult {
+    /// Global vector length N.
+    pub n_global: usize,
+    /// This process's local length (== N when serial).
+    pub n_local: usize,
+    /// Iterations.
+    pub nt: usize,
+    /// Accumulated per-op seconds over all iterations.
+    pub times: OpTimes,
+    /// Validation outcome.
+    pub validation: ValidationReport,
+}
+
+impl StreamResult {
+    /// Bytes moved per iteration for each op (§III formulas, 8-byte
+    /// doubles): Copy 16N, Scale 16N, Add 24N, Triad 24N — using the
+    /// *local* length, which is what this process actually moved.
+    pub fn bytes_per_iter(&self) -> [f64; 4] {
+        let n = self.n_local as f64;
+        [16.0 * n, 16.0 * n, 24.0 * n, 24.0 * n]
+    }
+
+    /// Per-op bandwidth in bytes/second: (bytes/iter × Nt) / t_op.
+    pub fn bandwidths(&self) -> [f64; 4] {
+        let b = self.bytes_per_iter();
+        let t = self.times.as_array();
+        let nt = self.nt as f64;
+        [
+            b[0] * nt / t[0],
+            b[1] * nt / t[1],
+            b[2] * nt / t[2],
+            b[3] * nt / t[3],
+        ]
+    }
+
+    /// Triad bandwidth (the figure the paper plots everywhere).
+    pub fn triad_bw(&self) -> f64 {
+        self.bandwidths()[3]
+    }
+}
+
+/// Sum the local results of all PIDs into the aggregate view the
+/// paper reports ("the resulting times can be averaged to obtain
+/// overall parallel bandwidths", Algorithm 2 caption).
+///
+/// Aggregate bandwidth = Σ_p (local bytes × Nt / t_p) — each process
+/// streams its own memory concurrently.
+pub fn aggregate(results: &[StreamResult]) -> Option<AggregateResult> {
+    if results.is_empty() {
+        return None;
+    }
+    let mut agg = AggregateResult {
+        np: results.len(),
+        n_global: results[0].n_global,
+        nt: results[0].nt,
+        bw: [0.0; 4],
+        all_valid: true,
+        worst_err: 0.0,
+    };
+    for r in results {
+        let bws = r.bandwidths();
+        for (a, b) in agg.bw.iter_mut().zip(bws) {
+            *a += b;
+        }
+        agg.all_valid &= r.validation.passed;
+        agg.worst_err = agg.worst_err.max(r.validation.max_err());
+    }
+    Some(agg)
+}
+
+/// Aggregated multi-process STREAM outcome.
+#[derive(Debug, Clone)]
+pub struct AggregateResult {
+    pub np: usize,
+    pub n_global: usize,
+    pub nt: usize,
+    /// [copy, scale, add, triad] aggregate bytes/sec.
+    pub bw: [f64; 4],
+    pub all_valid: bool,
+    pub worst_err: f64,
+}
+
+impl AggregateResult {
+    pub fn triad_bw(&self) -> f64 {
+        self.bw[3]
+    }
+}

@@ -1,0 +1,78 @@
+//! Native STREAM vector kernels — the L3 hot path.
+//!
+//! Plain indexable loops over `&[f64]`/`&mut [f64]`: LLVM
+//! auto-vectorizes these to the machine's widest loads/stores, which
+//! is the whole game for a bandwidth-bound kernel. The paper's
+//! "performance guarantee" (§IV) — `.loc` parts are regular arrays
+//! with no hidden cost — maps to exactly these functions.
+
+/// Copy: `dst[i] = src[i]`.
+#[inline]
+pub fn copy(dst: &mut [f64], src: &[f64]) {
+    dst.copy_from_slice(src);
+}
+
+/// Scale: `dst[i] = q * src[i]`.
+#[inline]
+pub fn scale(dst: &mut [f64], src: &[f64], q: f64) {
+    assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = q * s;
+    }
+}
+
+/// Add: `dst[i] = a[i] + b[i]`.
+#[inline]
+pub fn add(dst: &mut [f64], a: &[f64], b: &[f64]) {
+    assert_eq!(dst.len(), a.len());
+    assert_eq!(dst.len(), b.len());
+    for i in 0..dst.len() {
+        dst[i] = a[i] + b[i];
+    }
+}
+
+/// Triad: `dst[i] = b[i] + q * c[i]`.
+#[inline]
+pub fn triad(dst: &mut [f64], b: &[f64], c: &[f64], q: f64) {
+    assert_eq!(dst.len(), b.len());
+    assert_eq!(dst.len(), c.len());
+    for i in 0..dst.len() {
+        dst[i] = b[i] + q * c[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ops_match_definitions() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [10.0, 20.0, 30.0];
+        let mut d = [0.0; 3];
+        copy(&mut d, &a);
+        assert_eq!(d, a);
+        scale(&mut d, &a, 2.0);
+        assert_eq!(d, [2.0, 4.0, 6.0]);
+        add(&mut d, &a, &b);
+        assert_eq!(d, [11.0, 22.0, 33.0]);
+        triad(&mut d, &b, &a, 0.5);
+        assert_eq!(d, [10.5, 21.0, 31.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn length_mismatch_panics() {
+        let mut d = [0.0; 2];
+        add(&mut d, &[1.0, 2.0], &[1.0]);
+    }
+
+    #[test]
+    fn empty_slices_ok() {
+        let mut d: [f64; 0] = [];
+        copy(&mut d, &[]);
+        scale(&mut d, &[], 2.0);
+        add(&mut d, &[], &[]);
+        triad(&mut d, &[], &[], 2.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Algorithm 2 — parallel STREAM over distributed arrays.
+//!
+//! The `.loc` form: every op touches only the local part, so the run
+//! is communication-free by construction (Figure 2). Tests assert the
+//! transport stayed silent during the timed loop — the paper's
+//! "Bounded communication" property made checkable.
+
+use super::serial::{A0, B0, C0};
+use super::timing::{OpTimes, Timer};
+use super::validate::validate;
+use super::StreamResult;
+use crate::darray::Darray;
+use crate::dmap::{Dmap, Pid};
+
+/// One PID's parallel STREAM run (Algorithm 2). SPMD: call on every
+/// PID of `map` with the same arguments.
+///
+/// Equivalent to Code Listings 1–2:
+/// ```text
+/// Aloc = local(zeros(1,N,map)) + A0;  (B0, C0 likewise)
+/// for i=1:Nt  { C.loc=A.loc; B.loc=q*C.loc; C.loc=A.loc+B.loc; A.loc=B.loc+q*C.loc }
+/// ```
+pub fn run_parallel(map: &Dmap, n_global: usize, nt: usize, q: f64, pid: Pid) -> StreamResult {
+    assert!(nt >= 1);
+    let shape = [n_global];
+    let mut a = Darray::constant(map.clone(), &shape, pid, A0);
+    let mut b = Darray::constant(map.clone(), &shape, pid, B0);
+    let mut c = Darray::constant(map.clone(), &shape, pid, C0);
+    let n_local = a.local_len();
+    let mut times = OpTimes::zero();
+
+    for _ in 0..nt {
+        let t = Timer::tic();
+        c.copy_from(&a).expect("same map by construction");
+        times.copy += t.toc();
+
+        let t = Timer::tic();
+        b.scale_from(&c, q).expect("same map");
+        times.scale += t.toc();
+
+        let t = Timer::tic();
+        // add writes c from (a, b): destination aliasing is internal.
+        add_in_place(&mut c, &a, &b);
+        times.add += t.toc();
+
+        let t = Timer::tic();
+        triad_in_place(&mut a, &b, &c, q);
+        times.triad += t.toc();
+    }
+
+    let validation = validate(a.loc(), b.loc(), c.loc(), A0, q, nt);
+    StreamResult { n_global, n_local, nt, times, validation }
+}
+
+/// Run Algorithm 2 on every PID of `map` as one OS thread each and
+/// aggregate — the in-process SPMD driver (vertical scaling within
+/// one process, the `Nppn` axis of triples mode).
+pub fn run_parallel_spmd(map: &Dmap, n_global: usize, nt: usize, q: f64) -> super::AggregateResult {
+    let handles: Vec<_> = map
+        .pids()
+        .iter()
+        .map(|&p| {
+            let m = map.clone();
+            std::thread::spawn(move || run_parallel(&m, n_global, nt, q, p))
+        })
+        .collect();
+    let results: Vec<StreamResult> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    super::aggregate(&results).expect("map has at least one PID")
+}
+
+#[inline]
+fn add_in_place(c: &mut Darray, a: &Darray, b: &Darray) {
+    c.add_from(a, b).expect("same map");
+}
+
+#[inline]
+fn triad_in_place(a: &mut Darray, b: &Darray, c: &Darray, q: f64) {
+    a.triad_from(b, c, q).expect("same map");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::{aggregate, STREAM_Q};
+
+    #[test]
+    fn every_pid_validates_and_covers_n() {
+        let np = 4;
+        let n = 1000;
+        let map = Dmap::block_1d(np);
+        let results: Vec<StreamResult> = (0..np)
+            .map(|p| run_parallel(&map, n, 5, STREAM_Q, p))
+            .collect();
+        let total: usize = results.iter().map(|r| r.n_local).sum();
+        assert_eq!(total, n);
+        for r in &results {
+            assert!(r.validation.passed, "{:?}", r.validation);
+        }
+        let agg = aggregate(&results).unwrap();
+        assert!(agg.all_valid);
+        assert!(agg.triad_bw() > 0.0);
+    }
+
+    #[test]
+    fn cyclic_map_works_identically() {
+        // Map independence (§IV): same-map runs work for any
+        // distribution in the second dimension.
+        let map = Dmap::cyclic_1d(3);
+        for p in 0..3 {
+            let r = run_parallel(&map, 301, 4, STREAM_Q, p);
+            assert!(r.validation.passed);
+        }
+    }
+
+    #[test]
+    fn threaded_spmd_run() {
+        let np = 8;
+        let n = 1 << 16;
+        let map = Dmap::block_1d(np);
+        let handles: Vec<_> = (0..np)
+            .map(|p| {
+                let m = map.clone();
+                std::thread::spawn(move || run_parallel(&m, n, 3, STREAM_Q, p))
+            })
+            .collect();
+        let results: Vec<StreamResult> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let agg = aggregate(&results).unwrap();
+        assert!(agg.all_valid, "worst err {}", agg.worst_err);
+        assert_eq!(agg.np, np);
+    }
+}

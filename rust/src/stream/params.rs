@@ -1,0 +1,126 @@
+//! Table II — the STREAM parameter schedule.
+//!
+//! The paper's rule (§V): start from a base per-process size
+//! `N/Np = 2^30`; scale N with Np (constant local size) until the
+//! node memory cap; past the cap hold N constant (shrinking local
+//! size) and grow Nt to keep runtime a few hundred seconds. For
+//! multi-node runs reuse the bolded single-node parameters and scale
+//! N with the node count.
+
+/// Parameters for one (hardware, Np) cell of Table II.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StreamParams {
+    /// Trials.
+    pub nt: usize,
+    /// log2 of the per-process local vector length.
+    pub log2_local: u32,
+}
+
+impl StreamParams {
+    pub fn local_len(&self) -> usize {
+        1usize << self.log2_local
+    }
+
+    /// Global N for `np` processes (constant local size).
+    pub fn global_len(&self, np: usize) -> usize {
+        self.local_len() * np
+    }
+
+    /// Memory footprint of the three vectors on one process, bytes.
+    pub fn local_bytes(&self) -> usize {
+        3 * 8 * self.local_len()
+    }
+}
+
+/// Derive the Table II schedule for a node: `base_log2` is the
+/// starting per-process size (2^30 in the paper), `mem_bytes` the
+/// node's memory, `base_nt` the starting trial count.
+///
+/// Returns `(np, params)` for np = 1,2,4,...  up to `max_np`.
+pub fn schedule(
+    base_log2: u32,
+    base_nt: usize,
+    mem_bytes: u64,
+    max_np: usize,
+) -> Vec<(usize, StreamParams)> {
+    let mut out = Vec::new();
+    let mut np = 1usize;
+    // Usable fraction: the paper sizes to "a significant fraction" of
+    // memory; we cap the three vectors at 80% of node RAM.
+    let usable = (mem_bytes as f64 * 0.8) as u64;
+    while np <= max_np {
+        let mut p = StreamParams { nt: base_nt, log2_local: base_log2 };
+        // Shrink local size (and grow Nt) until the node fits.
+        while (p.local_bytes() as u64) * (np as u64) > usable {
+            if p.log2_local == 0 {
+                break;
+            }
+            p.log2_local -= 1;
+            p.nt *= 2;
+        }
+        out.push((np, p));
+        np *= 2;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GIB: u64 = 1 << 30;
+
+    #[test]
+    fn paper_xeon_p8_schedule() {
+        // xeon-p8: 192 GB, base 2^30, Nt=10 → Table II row:
+        // Np=1..4: (10, 2^30); Np=8: (20, 2^29); 16: (40, 2^28); 32: (80, 2^27)
+        let sched = schedule(30, 10, 192 * GIB, 32);
+        let expect = [
+            (1, 10, 30),
+            (2, 10, 30),
+            (4, 10, 30),
+            (8, 20, 29),
+            (16, 40, 28),
+            (32, 80, 27),
+        ];
+        for ((np, p), (enp, ent, elog)) in sched.iter().zip(expect) {
+            assert_eq!(*np, enp);
+            assert_eq!(p.nt, ent, "np={np}");
+            assert_eq!(p.log2_local, elog, "np={np}");
+        }
+    }
+
+    #[test]
+    fn paper_amd_e9_schedule() {
+        // amd-e9: 750 GB → constant 2^30 through Np=16, shrink at 32.
+        let sched = schedule(30, 20, 750 * GIB, 32);
+        assert_eq!(sched[4], (16, StreamParams { nt: 20, log2_local: 30 }));
+        assert_eq!(sched[5], (32, StreamParams { nt: 40, log2_local: 29 }));
+    }
+
+    #[test]
+    fn bgp_tiny_memory() {
+        // bg-p: 2 GB/node, base 2^25 → constant 2^25 for all Np (the
+        // paper runs 2^25 across the board).
+        let sched = schedule(25, 10, 2 * GIB, 2);
+        assert_eq!(sched[0].1, StreamParams { nt: 10, log2_local: 25 });
+    }
+
+    #[test]
+    fn memory_cap_respected() {
+        for (np, p) in schedule(30, 10, 64 * GIB, 128) {
+            assert!(
+                (p.local_bytes() as u64) * (np as u64) <= (64 * GIB as u64 * 8 / 10) + 1,
+                "np={np} {p:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn footprint_math() {
+        let p = StreamParams { nt: 10, log2_local: 20 };
+        assert_eq!(p.local_len(), 1 << 20);
+        assert_eq!(p.local_bytes(), 24 << 20);
+        assert_eq!(p.global_len(4), 4 << 20);
+    }
+}

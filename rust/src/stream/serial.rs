@@ -1,0 +1,105 @@
+//! Algorithm 1 — serial STREAM over plain vectors.
+
+use super::timing::{OpTimes, Timer};
+use super::validate::{validate, STREAM_Q};
+use super::{ops, StreamResult};
+
+/// Initial values from the Code Listings: A0=1, B0=2, C0=0.
+pub const A0: f64 = 1.0;
+pub const B0: f64 = 2.0;
+pub const C0: f64 = 0.0;
+
+/// Run serial STREAM: `nt` iterations over `n`-element vectors.
+///
+/// Faithful to Algorithm 1: each op timed separately with tic/toc,
+/// times accumulated across iterations. Note Add and Triad write into
+/// an existing destination vector (in-place via a scratch swap keeps
+/// the memory traffic identical to the C reference).
+pub fn run_native_serial(n: usize, nt: usize, q: f64) -> StreamResult {
+    assert!(n >= 1 && nt >= 1);
+    let mut a = vec![A0; n];
+    let mut b = vec![B0; n];
+    let mut c = vec![C0; n];
+    let mut times = OpTimes::zero();
+
+    for _ in 0..nt {
+        let t = Timer::tic();
+        ops::copy(&mut c, &a); // Copy: C = A
+        times.copy += t.toc();
+
+        let t = Timer::tic();
+        // Scale: B = q*C — write b from c.
+        scale_into(&mut b, &c, q);
+        times.scale += t.toc();
+
+        let t = Timer::tic();
+        // Add: C = A + B. C is also an input-free destination here
+        // (A and B are the inputs), so in-place write is safe.
+        add_into(&mut c, &a, &b);
+        times.add += t.toc();
+
+        let t = Timer::tic();
+        // Triad: A = B + q*C — destination distinct from inputs.
+        triad_into(&mut a, &b, &c, q);
+        times.triad += t.toc();
+    }
+
+    let validation = validate(&a, &b, &c, A0, q, nt);
+    StreamResult { n_global: n, n_local: n, nt, times, validation }
+}
+
+#[inline]
+fn scale_into(dst: &mut [f64], src: &[f64], q: f64) {
+    ops::scale(dst, src, q);
+}
+
+#[inline]
+fn add_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
+    ops::add(dst, a, b);
+}
+
+#[inline]
+fn triad_into(dst: &mut [f64], b: &[f64], c: &[f64], q: f64) {
+    ops::triad(dst, b, c, q);
+}
+
+/// Convenience: run with the paper's defaults (q = √2−1).
+pub fn run_default(n: usize, nt: usize) -> StreamResult {
+    run_native_serial(n, nt, STREAM_Q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_run_validates() {
+        let r = run_default(10_000, 10);
+        assert!(r.validation.passed, "{:?}", r.validation);
+        assert_eq!(r.n_global, 10_000);
+        assert_eq!(r.nt, 10);
+    }
+
+    #[test]
+    fn bandwidths_positive_and_ordered_sanely() {
+        let r = run_default(1 << 20, 5);
+        let bw = r.bandwidths();
+        for (i, b) in bw.iter().enumerate() {
+            assert!(*b > 0.0, "op {i} bw {b}");
+            // A laptop-class machine moves > 100 MB/s and < 10 TB/s.
+            assert!(*b > 1e8 && *b < 1e13, "op {i} bw {b}");
+        }
+    }
+
+    #[test]
+    fn many_iterations_still_validate() {
+        let r = run_default(1024, 200);
+        assert!(r.validation.passed, "{:?}", r.validation);
+    }
+
+    #[test]
+    fn n1_edge_case() {
+        let r = run_default(1, 3);
+        assert!(r.validation.passed);
+    }
+}

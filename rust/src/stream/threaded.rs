@@ -1,0 +1,243 @@
+//! The `Ntpn` axis of triples mode — §V: "each of the Nppn processes
+//! and their corresponding Ntpn threads"; "Within each ... process,
+//! the OpenMP parallelism is used as provided by their math
+//! libraries."
+//!
+//! The native engine's analogue of that library-level threading: each
+//! STREAM op splits the local vector into `ntpn` contiguous chunks
+//! processed by a persistent thread pool. Chunks are contiguous (not
+//! interleaved) to preserve streaming access per thread — the same
+//! reason the paper pins threads to adjacent cores.
+
+use super::serial::{A0, B0, C0};
+use super::timing::{OpTimes, Timer};
+use super::validate::validate;
+use super::{ops, StreamResult};
+use crate::darray::Darray;
+use crate::dmap::{Dmap, Pid};
+use std::sync::mpsc;
+use std::sync::{Arc, Barrier};
+use std::thread;
+
+/// A persistent chunk-parallel worker pool for vector ops.
+///
+/// `run(f)` invokes `f(tid)` on every pool thread plus the caller
+/// (tid 0), returning when all are done. The closure sees only its
+/// thread id; slicing is the call-site's job.
+pub struct OpPool {
+    ntpn: usize,
+    senders: Vec<mpsc::Sender<Job>>,
+    done: Arc<Barrier>,
+    /// Serializes concurrent `run` calls (the pool is one gang; two
+    /// overlapping gangs would interleave jobs and barrier waits).
+    gate: std::sync::Mutex<()>,
+}
+
+type Job = Arc<dyn Fn(usize) + Send + Sync>;
+
+impl OpPool {
+    pub fn new(ntpn: usize) -> OpPool {
+        assert!(ntpn >= 1);
+        let done = Arc::new(Barrier::new(ntpn));
+        let mut senders = Vec::new();
+        for tid in 1..ntpn {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let done = done.clone();
+            thread::spawn(move || {
+                while let Ok(job) = rx.recv() {
+                    job(tid);
+                    done.wait();
+                }
+            });
+            senders.push(tx);
+        }
+        OpPool { ntpn, senders, done, gate: std::sync::Mutex::new(()) }
+    }
+
+    pub fn ntpn(&self) -> usize {
+        self.ntpn
+    }
+
+    /// Run `f(tid)` for tid in 0..ntpn (0 on the caller's thread).
+    pub fn run(&self, f: impl Fn(usize) + Send + Sync + 'static) {
+        if self.ntpn == 1 {
+            f(0);
+            return;
+        }
+        let _gang = self.gate.lock().unwrap();
+        let job: Job = Arc::new(f);
+        for tx in &self.senders {
+            tx.send(job.clone()).expect("pool thread alive");
+        }
+        job(0);
+        self.done.wait();
+    }
+
+    /// Chunk bounds for thread `tid` over a length-`n` slice.
+    pub fn chunk(&self, n: usize, tid: usize) -> (usize, usize) {
+        let b = n.div_ceil(self.ntpn).max(1);
+        ((tid * b).min(n), ((tid + 1) * b).min(n))
+    }
+}
+
+/// Raw-pointer cell so the pool threads can write disjoint chunks of
+/// one destination slice. SAFETY: chunks never overlap.
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+macro_rules! par_op {
+    ($pool:expr, $dst:expr, $n:expr, |$lo:ident, $hi:ident, $d:ident| $body:expr) => {{
+        // Addresses cross the closure as usize (plain Send data); the
+        // disjoint-chunk discipline makes the reconstruction sound.
+        let dst_addr = $dst.as_mut_ptr() as usize;
+        let pool = $pool;
+        let n = $n;
+        pool.run(move |tid| {
+            let ($lo, $hi) = pool.chunk(n, tid);
+            if $lo < $hi {
+                // SAFETY: per-tid chunks are disjoint subranges of dst.
+                let $d: &mut [f64] = unsafe {
+                    std::slice::from_raw_parts_mut((dst_addr as *mut f64).add($lo), $hi - $lo)
+                };
+                $body
+            }
+        });
+    }};
+}
+
+/// Parallel STREAM with `ntpn` threads over the local part —
+/// Algorithm 2 with the §V thread axis. SPMD per PID like
+/// [`super::parallel::run_parallel`].
+pub fn run_parallel_threaded(
+    map: &Dmap,
+    n_global: usize,
+    nt: usize,
+    q: f64,
+    pid: Pid,
+    pool: &'static OpPool,
+) -> StreamResult {
+    assert!(nt >= 1);
+    let shape = [n_global];
+    let mut a = Darray::constant(map.clone(), &shape, pid, A0);
+    let mut b = Darray::constant(map.clone(), &shape, pid, B0);
+    let mut c = Darray::constant(map.clone(), &shape, pid, C0);
+    let n_local = a.local_len();
+    let mut times = OpTimes::zero();
+
+    // Share the source slices with pool threads via raw parts; all
+    // reads/writes are within disjoint chunks per op invocation.
+    for _ in 0..nt {
+        let (pa, pb, pc) = (
+            SendPtr(a.loc_mut().as_mut_ptr()),
+            SendPtr(b.loc_mut().as_mut_ptr()),
+            SendPtr(c.loc_mut().as_mut_ptr()),
+        );
+        let (pa, pb, pc) = (pa.0 as usize, pb.0 as usize, pc.0 as usize);
+
+        let t = Timer::tic();
+        par_op!(pool, c.loc_mut(), n_local, |lo, hi, d| {
+            let src = unsafe { std::slice::from_raw_parts((pa as *const f64).add(lo), hi - lo) };
+            ops::copy(d, src)
+        });
+        times.copy += t.toc();
+
+        let t = Timer::tic();
+        par_op!(pool, b.loc_mut(), n_local, |lo, hi, d| {
+            let src = unsafe { std::slice::from_raw_parts((pc as *const f64).add(lo), hi - lo) };
+            ops::scale(d, src, q)
+        });
+        times.scale += t.toc();
+
+        let t = Timer::tic();
+        par_op!(pool, c.loc_mut(), n_local, |lo, hi, d| {
+            let sa = unsafe { std::slice::from_raw_parts((pa as *const f64).add(lo), hi - lo) };
+            let sb = unsafe { std::slice::from_raw_parts((pb as *const f64).add(lo), hi - lo) };
+            ops::add(d, sa, sb)
+        });
+        times.add += t.toc();
+
+        let t = Timer::tic();
+        par_op!(pool, a.loc_mut(), n_local, |lo, hi, d| {
+            let sb = unsafe { std::slice::from_raw_parts((pb as *const f64).add(lo), hi - lo) };
+            let sc = unsafe { std::slice::from_raw_parts((pc as *const f64).add(lo), hi - lo) };
+            ops::triad(d, sb, sc, q)
+        });
+        times.triad += t.toc();
+    }
+
+    let validation = validate(a.loc(), b.loc(), c.loc(), A0, q, nt);
+    StreamResult { n_global, n_local, nt, times, validation }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::STREAM_Q;
+    use once_cell::sync::Lazy;
+
+    static POOL2: Lazy<OpPool> = Lazy::new(|| OpPool::new(2));
+    static POOL4: Lazy<OpPool> = Lazy::new(|| OpPool::new(4));
+    static POOL1: Lazy<OpPool> = Lazy::new(|| OpPool::new(1));
+
+    #[test]
+    fn threaded_run_validates() {
+        for pool in [&*POOL1, &*POOL2, &*POOL4] {
+            let r = run_parallel_threaded(&Dmap::block_1d(1), 100_000, 5, STREAM_Q, 0, pool);
+            assert!(r.validation.passed, "ntpn={} {:?}", pool.ntpn(), r.validation);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_single_thread_exactly() {
+        // Element-wise determinism: threading must not change results.
+        let r1 = run_parallel_threaded(&Dmap::block_1d(1), 4099, 7, STREAM_Q, 0, &POOL1);
+        let r4 = run_parallel_threaded(&Dmap::block_1d(1), 4099, 7, STREAM_Q, 0, &POOL4);
+        assert_eq!(r1.validation.max_err(), r4.validation.max_err());
+        assert!(r4.validation.passed);
+    }
+
+    #[test]
+    fn pool_chunks_tile_exactly() {
+        for ntpn in [1usize, 2, 3, 4, 7] {
+            let pool = OpPool::new(ntpn);
+            for n in [0usize, 1, 5, 100, 4097] {
+                let total: usize = (0..ntpn)
+                    .map(|tid| {
+                        let (lo, hi) = pool.chunk(n, tid);
+                        hi - lo
+                    })
+                    .sum();
+                assert_eq!(total, n, "ntpn={ntpn} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pool_runs_all_tids() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static HITS: AtomicU64 = AtomicU64::new(0);
+        POOL4.run(|tid| {
+            HITS.fetch_add(1 << (tid * 8), Ordering::SeqCst);
+        });
+        assert_eq!(HITS.load(Ordering::SeqCst), 0x01010101);
+    }
+
+    #[test]
+    fn multi_pid_threaded_spmd() {
+        let map = Dmap::block_1d(2);
+        let rs: Vec<_> = (0..2)
+            .map(|pid| {
+                let m = map.clone();
+                std::thread::spawn(move || {
+                    run_parallel_threaded(&m, 2 * 8192, 3, STREAM_Q, pid, &POOL2)
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect();
+        let agg = crate::stream::aggregate(&rs).unwrap();
+        assert!(agg.all_valid);
+    }
+}

@@ -1,0 +1,79 @@
+//! `tic`/`toc` timing (Algorithm 1 lines 4–15) and per-op accumulators.
+
+use std::time::Instant;
+
+/// Matlab-style tic/toc.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    /// `TIC`.
+    #[inline]
+    pub fn tic() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// `TOC` — seconds since the matching `tic`.
+    #[inline]
+    pub fn toc(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Accumulated seconds for the four STREAM ops.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpTimes {
+    pub copy: f64,
+    pub scale: f64,
+    pub add: f64,
+    pub triad: f64,
+}
+
+impl OpTimes {
+    pub fn zero() -> Self {
+        Self::default()
+    }
+
+    pub fn as_array(&self) -> [f64; 4] {
+        [self.copy, self.scale, self.add, self.triad]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.copy + self.scale + self.add + self.triad
+    }
+
+    /// Element-wise sum (combining trials).
+    pub fn merged(&self, o: &OpTimes) -> OpTimes {
+        OpTimes {
+            copy: self.copy + o.copy,
+            scale: self.scale + o.scale,
+            add: self.add + o.add,
+            triad: self.triad + o.triad,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tic_toc_measures_time() {
+        let t = Timer::tic();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let dt = t.toc();
+        assert!(dt >= 0.004, "measured {dt}");
+        assert!(dt < 1.0);
+    }
+
+    #[test]
+    fn optimes_merge_and_total() {
+        let a = OpTimes { copy: 1.0, scale: 2.0, add: 3.0, triad: 4.0 };
+        let b = OpTimes { copy: 0.5, scale: 0.5, add: 0.5, triad: 0.5 };
+        let m = a.merged(&b);
+        assert_eq!(m.total(), 12.0);
+        assert_eq!(m.as_array(), [1.5, 2.5, 3.5, 4.5]);
+    }
+}

@@ -1,0 +1,124 @@
+//! STREAM validation (§III): closed-form final values and the
+//! `q = √2 − 1` trick that keeps magnitudes modest (`2q + q² = 1`).
+
+/// The paper's scale factor: `q = √2 − 1` so `2q + q² = 1`.
+pub const STREAM_Q: f64 = std::f64::consts::SQRT_2 - 1.0;
+
+/// Closed-form expected values after `nt` iterations starting from
+/// `A = a0` (B, C arbitrary — they are overwritten in iteration 1):
+///
+/// ```text
+/// A_Nt(:) = (2q + q²)^Nt     · a0
+/// B_Nt(:) = q                · A_{Nt-1}
+/// C_Nt(:) = (1 + q)          · A_{Nt-1}
+/// ```
+pub fn expected(a0: f64, q: f64, nt: usize) -> (f64, f64, f64) {
+    assert!(nt >= 1);
+    let g = 2.0 * q + q * q;
+    let a_prev = g.powi(nt as i32 - 1) * a0;
+    (g.powi(nt as i32) * a0, q * a_prev, (1.0 + q) * a_prev)
+}
+
+/// Validation outcome for one run.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ValidationReport {
+    pub passed: bool,
+    /// Max |observed − expected| per vector.
+    pub err_a: f64,
+    pub err_b: f64,
+    pub err_c: f64,
+}
+
+impl ValidationReport {
+    pub fn max_err(&self) -> f64 {
+        self.err_a.max(self.err_b).max(self.err_c)
+    }
+}
+
+/// Tolerance: iteration count scales rounding accumulation.
+pub fn tolerance(nt: usize) -> f64 {
+    1e-13 * (nt as f64).max(1.0)
+}
+
+/// Validate final vectors against the closed forms.
+pub fn validate(a: &[f64], b: &[f64], c: &[f64], a0: f64, q: f64, nt: usize) -> ValidationReport {
+    let (ea, eb, ec) = expected(a0, q, nt);
+    let dev = |xs: &[f64], e: f64| xs.iter().map(|&x| (x - e).abs()).fold(0.0, f64::max);
+    let (err_a, err_b, err_c) = (dev(a, ea), dev(b, eb), dev(c, ec));
+    ValidationReport {
+        passed: err_a <= tolerance(nt) && err_b <= tolerance(nt) && err_c <= tolerance(nt),
+        err_a,
+        err_b,
+        err_c,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stream::ops;
+
+    #[test]
+    fn q_satisfies_identity() {
+        assert!((2.0 * STREAM_Q + STREAM_Q * STREAM_Q - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn expected_with_magic_q_is_stationary() {
+        let (a, b, c) = expected(1.0, STREAM_Q, 1000);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - STREAM_Q).abs() < 1e-12);
+        assert!((c - (1.0 + STREAM_Q)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn actual_run_validates() {
+        let n = 257;
+        let (mut a, mut b, mut c) = (vec![1.0; n], vec![2.0; n], vec![0.0; n]);
+        let nt = 10;
+        let mut tmp = vec![0.0; n];
+        for _ in 0..nt {
+            ops::copy(&mut c, &a);
+            ops::scale(&mut b, &c, STREAM_Q);
+            ops::add(&mut tmp, &a, &b);
+            c.copy_from_slice(&tmp);
+            ops::triad(&mut tmp, &b, &c, STREAM_Q);
+            a.copy_from_slice(&tmp);
+        }
+        let rep = validate(&a, &b, &c, 1.0, STREAM_Q, nt);
+        assert!(rep.passed, "{rep:?}");
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let n = 64;
+        let (ea, eb, ec) = expected(1.0, STREAM_Q, 5);
+        let mut a = vec![ea; n];
+        let b = vec![eb; n];
+        let c = vec![ec; n];
+        a[13] += 1e-6;
+        let rep = validate(&a, &b, &c, 1.0, STREAM_Q, 5);
+        assert!(!rep.passed);
+        assert!(rep.err_a > 1e-7);
+    }
+
+    #[test]
+    fn generic_q_closed_form_matches_iteration() {
+        let q = 0.3;
+        let mut a = 2.0f64;
+        let nt = 7;
+        let (mut bq, mut cq) = (0.0, 0.0);
+        for _ in 0..nt {
+            let c0 = a;
+            let b0 = q * c0;
+            let c1 = a + b0;
+            bq = b0;
+            cq = c1;
+            a = b0 + q * c1;
+        }
+        let (ea, eb, ec) = expected(2.0, q, nt);
+        assert!((a - ea).abs() < 1e-12 * ea.abs().max(1.0));
+        assert!((bq - eb).abs() < 1e-12);
+        assert!((cq - ec).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,118 @@
+//! Integration tests for the PJRT path: the AOT artifacts (L1 Pallas
+//! kernels lowered through L2 JAX) executed from Rust, cross-checked
+//! against the native engine element by element.
+//!
+//! Requires `make artifacts`; tests skip (with a loud note) if the
+//! artifacts directory is absent so `cargo test` alone stays green.
+
+use distarray::runtime::PjrtRuntime;
+use distarray::stream::{ops, validate, STREAM_Q};
+
+fn runtime() -> Option<PjrtRuntime> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        return None;
+    }
+    Some(PjrtRuntime::load("artifacts").expect("artifacts load"))
+}
+
+#[test]
+fn per_op_artifacts_match_native_ops() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.n();
+    let a: Vec<f64> = (0..n).map(|i| (i % 97) as f64 * 0.25 - 10.0).collect();
+    let b: Vec<f64> = (0..n).map(|i| (i % 89) as f64 * -0.5 + 3.0).collect();
+    let q = STREAM_Q;
+
+    // copy
+    let got = rt.copy(&a).unwrap();
+    assert_eq!(got, a, "pjrt copy differs");
+    // scale
+    let got = rt.scale(&a, q).unwrap();
+    let mut want = vec![0.0; n];
+    ops::scale(&mut want, &a, q);
+    assert_close(&got, &want, 1e-14);
+    // add
+    let got = rt.add(&a, &b).unwrap();
+    ops::add(&mut want, &a, &b);
+    assert_close(&got, &want, 1e-14);
+    // triad
+    let got = rt.triad(&a, &b, q).unwrap();
+    ops::triad(&mut want, &a, &b, q);
+    assert_close(&got, &want, 1e-12);
+}
+
+#[test]
+fn fused_step_matches_four_ops() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.n();
+    let a: Vec<f64> = (0..n).map(|i| 1.0 + (i % 13) as f64 * 0.01).collect();
+    let q = STREAM_Q;
+    let (fa, fb, fc) = rt.step_fused(&a, q).unwrap();
+    // Native four-op reference.
+    let mut c = vec![0.0; n];
+    let mut b = vec![0.0; n];
+    let mut a2 = vec![0.0; n];
+    ops::copy(&mut c, &a);
+    ops::scale(&mut b, &c, q);
+    let bc = b.clone();
+    ops::add(&mut c, &a, &bc);
+    ops::triad(&mut a2, &b, &c, q);
+    assert_close(&fa, &a2, 1e-12);
+    assert_close(&fb, &b, 1e-12);
+    assert_close(&fc, &c, 1e-12);
+}
+
+#[test]
+fn full_run_artifact_validates_against_closed_forms() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.n();
+    let nt = rt.nt();
+    let a = vec![1.0f64; n];
+    let (a2, b2, c2) = rt.run(&a, STREAM_Q).unwrap();
+    // Closed-form check on the Rust side.
+    let rep = validate(&a2, &b2, &c2, 1.0, STREAM_Q, nt);
+    assert!(rep.passed, "{rep:?}");
+    // And via the validate artifact itself (L2 graph).
+    let errs = rt.validate(&a2, &b2, &c2, STREAM_Q).unwrap();
+    assert!(errs.iter().all(|e| *e < 1e-10), "{errs:?}");
+}
+
+#[test]
+fn shape_mismatch_rejected() {
+    let Some(rt) = runtime() else { return };
+    let wrong = vec![1.0f64; rt.n() + 1];
+    assert!(rt.copy(&wrong).is_err());
+}
+
+#[test]
+fn validate_artifact_detects_corruption() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.n();
+    let a = vec![1.0f64; n];
+    let (mut a2, b2, c2) = rt.run(&a, STREAM_Q).unwrap();
+    a2[n / 2] += 0.5; // corrupt one element
+    let errs = rt.validate(&a2, &b2, &c2, STREAM_Q).unwrap();
+    assert!(errs[0] > 0.4, "corruption not detected: {errs:?}");
+}
+
+#[test]
+fn load_subset_only_compiles_requested() {
+    let Some(_) = runtime() else { return };
+    let rt = PjrtRuntime::load_subset("artifacts", &["copy"]).unwrap();
+    assert!(rt.has("copy"));
+    assert!(!rt.has("triad"));
+    let a = vec![2.5f64; rt.n()];
+    assert_eq!(rt.copy(&a).unwrap(), a);
+    assert!(rt.triad(&a, &a, 1.0).is_err());
+}
+
+fn assert_close(got: &[f64], want: &[f64], tol: f64) {
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            (g - w).abs() <= tol * (1.0 + w.abs()),
+            "idx {i}: {g} vs {w}"
+        );
+    }
+}

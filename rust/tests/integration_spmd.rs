@@ -1,0 +1,171 @@
+//! Integration tests: full SPMD flows over the in-process transport —
+//! the distributed-array programming model end to end.
+
+use distarray::comm::{barrier::barrier, ChannelHub, Transport};
+use distarray::coordinator::{run_leader, run_worker, EngineKind, MapKind, RunConfig};
+use distarray::darray::Darray;
+use distarray::dmap::Dmap;
+use distarray::stream::{aggregate, run_parallel, STREAM_Q};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+fn spmd<R: Send + 'static>(
+    np: usize,
+    f: impl Fn(usize, &dyn Transport) -> R + Send + Sync + 'static,
+) -> Vec<R> {
+    let world = ChannelHub::world(np);
+    let f = Arc::new(f);
+    let hs: Vec<_> = world
+        .into_iter()
+        .map(|t| {
+            let f = f.clone();
+            thread::spawn(move || f(t.pid(), &t))
+        })
+        .collect();
+    hs.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Figure 2's central property: the same-map STREAM communicates
+/// NOTHING — asserted over the real transport, not assumed.
+#[test]
+fn same_map_stream_is_communication_free() {
+    let silent = spmd(6, |pid, t| {
+        let r = run_parallel(&Dmap::block_1d(6), 6 * 4096, 4, STREAM_Q, pid);
+        assert!(r.validation.passed);
+        t.stats().is_silent()
+    });
+    assert!(silent.into_iter().all(|s| s), "Figure 2 violated: traffic observed");
+}
+
+/// Chained remaps through all three distributions preserve content.
+#[test]
+fn remap_chain_roundtrip() {
+    spmd(4, |pid, t| {
+        let n = 10_000;
+        let block = Darray::from_global_fn(Dmap::block_1d(4), &[n], pid, |g| (g * 3 + 1) as f64);
+        let mut cyc = Darray::zeros(Dmap::cyclic_1d(4), &[n], pid);
+        cyc.assign_from(&block, t, 1).unwrap();
+        let mut bc = Darray::zeros(Dmap::block_cyclic_1d(4, 7), &[n], pid);
+        bc.assign_from(&cyc, t, 2).unwrap();
+        let mut back = Darray::zeros(Dmap::block_1d(4), &[n], pid);
+        back.assign_from(&bc, t, 3).unwrap();
+        assert_eq!(back.loc(), block.loc(), "pid {pid}: chain corrupted data");
+    });
+}
+
+/// agg() after a parallel STREAM returns the closed-form constants.
+#[test]
+fn stream_then_agg_full_array() {
+    spmd(3, |pid, t| {
+        let n = 999;
+        let map = Dmap::block_1d(3);
+        // Run one STREAM iteration on darrays, then aggregate A.
+        let mut a = Darray::constant(map.clone(), &[n], pid, 1.0);
+        let mut b = Darray::constant(map.clone(), &[n], pid, 2.0);
+        let mut c = Darray::constant(map.clone(), &[n], pid, 0.0);
+        for _ in 0..5 {
+            c.copy_from(&a).unwrap();
+            b.scale_from(&c, STREAM_Q).unwrap();
+            let tmp = c.clone();
+            c.add_from(&a, &b).unwrap();
+            drop(tmp);
+            let b2 = b.clone();
+            a.triad_from(&b2, &c, STREAM_Q).unwrap();
+        }
+        let global = a.agg(t, 9).unwrap();
+        if pid == 0 {
+            let g = global.unwrap();
+            assert_eq!(g.len(), n);
+            for v in g {
+                assert!((v - 1.0).abs() < 1e-12, "A must stay 1.0 with q=√2−1");
+            }
+        }
+    });
+}
+
+/// Halo exchange composes with owner-computes stencils.
+#[test]
+fn halo_stencil_flow() {
+    spmd(4, |pid, t| {
+        let n = 40;
+        let map = Dmap::block_1d_overlap(4, 1);
+        let mut u = Darray::from_global_fn(map.clone(), &[n], pid, |g| g as f64);
+        u.sync_halo(t, 0).unwrap();
+        // forward difference using the halo: d[i] = u[i+1] - u[i] == 1
+        let owned = u.local_len();
+        let stored = u.stored().to_vec();
+        let coord = map.coord_of(pid)[0];
+        let last = if coord == 3 { owned - 1 } else { owned };
+        for i in 0..last {
+            let d = stored[i + 1] - stored[i];
+            assert_eq!(d, 1.0, "pid {pid} i={i}");
+        }
+    });
+}
+
+/// Barriers interleave with data traffic without tag collisions.
+#[test]
+fn barrier_and_data_interleave() {
+    spmd(5, |pid, t| {
+        for epoch in 0..10u64 {
+            let n = 500;
+            let src = Darray::from_global_fn(Dmap::block_1d(5), &[n], pid, |g| (g + epoch as usize) as f64);
+            let mut dst = Darray::zeros(Dmap::cyclic_1d(5), &[n], pid);
+            dst.assign_from(&src, t, 100 + epoch).unwrap();
+            barrier(t, epoch, Duration::from_secs(10)).unwrap();
+            for g in (pid..n).step_by(97) {
+                if let Some(v) = dst.global_get(g) {
+                    assert_eq!(v, (g + epoch as usize) as f64);
+                }
+            }
+        }
+    });
+}
+
+/// Coordinator protocol across every map kind.
+#[test]
+fn coordinator_all_map_kinds() {
+    for map in [MapKind::Block, MapKind::Cyclic, MapKind::BlockCyclic { block_size: 64 }] {
+        let np = 4;
+        let mut world = ChannelHub::world(np);
+        let leader = world.remove(0);
+        let hs: Vec<_> = world
+            .into_iter()
+            .map(|t| thread::spawn(move || run_worker(&t).unwrap()))
+            .collect();
+        let cfg = RunConfig {
+            n_global: 40_000,
+            nt: 2,
+            q: STREAM_Q,
+            map,
+            engine: EngineKind::Native,
+            artifacts: "artifacts".into(),
+        };
+        let (agg, results) = run_leader(&leader, &cfg).unwrap();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert!(agg.all_valid, "{map:?}");
+        assert_eq!(results.iter().map(|r| r.n_local).sum::<usize>(), 40_000);
+    }
+}
+
+/// Aggregate bandwidth equals the sum of per-process bandwidths.
+#[test]
+fn aggregate_is_sum_of_locals() {
+    let results = spmd(4, |pid, _| run_parallel(&Dmap::block_1d(4), 4 * 8192, 3, STREAM_Q, pid));
+    let sum: f64 = results.iter().map(|r| r.bandwidths()[3]).sum();
+    let agg = aggregate(&results).unwrap();
+    assert!((agg.triad_bw() - sum).abs() / sum < 1e-12);
+}
+
+/// Mixed engines in one world must still validate (engine is a
+/// per-config choice; numerics are engine-independent).
+#[test]
+fn native_matches_reference_constants() {
+    let results = spmd(2, |pid, _| run_parallel(&Dmap::block_1d(2), 2048, 50, STREAM_Q, pid));
+    for r in results {
+        assert!(r.validation.passed, "50 iterations drifted: {:?}", r.validation);
+    }
+}

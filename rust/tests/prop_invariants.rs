@@ -1,0 +1,272 @@
+//! Property-based invariant tests (in-house `prop` substrate):
+//! randomized sweeps over map algebra, partitions, remap plans, the
+//! wire codec, and the JSON codec.
+
+use distarray::comm::{WireReader, WireWriter};
+use distarray::dmap::{Dist, Dmap, Grid, Overlap, Partition};
+use distarray::json::Json;
+use distarray::prop::{forall, Rng};
+
+fn random_dist(rng: &mut Rng) -> Dist {
+    match rng.below(3) {
+        0 => Dist::Block,
+        1 => Dist::Cyclic,
+        _ => Dist::BlockCyclic { block_size: rng.range(1, 16) },
+    }
+}
+
+fn random_map_1d(rng: &mut Rng) -> Dmap {
+    let np = rng.range(1, 12);
+    Dmap::new(
+        Grid::line(np),
+        vec![random_dist(rng)],
+        vec![Overlap::none()],
+        (0..np).collect(),
+    )
+}
+
+/// INVARIANT: for any (dist, n, g), ownership is a bijection
+/// global ↔ (coord, local).
+#[test]
+fn prop_dist_bijection() {
+    forall(300, 0xD157, |rng| {
+        let d = random_dist(rng);
+        let n = rng.range(1, 500);
+        let g = rng.range(1, 16);
+        let mut seen = vec![false; n];
+        for c in 0..g {
+            let len = d.local_len(c, n, g);
+            for l in 0..len {
+                let gidx = d.local_to_global(c, l, n, g);
+                assert!(gidx < n, "{d:?} n={n} g={g} c={c} l={l} -> {gidx}");
+                assert!(!seen[gidx], "double-owned {gidx}");
+                seen[gidx] = true;
+                assert_eq!(d.owner(gidx, n, g), c);
+                assert_eq!(d.global_to_local(gidx, n, g), l);
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "uncovered index {d:?} n={n} g={g}");
+    });
+}
+
+/// INVARIANT: a partition's ranges exactly tile [0, total).
+#[test]
+fn prop_partition_tiles_range() {
+    forall(200, 0xBEEF, |rng| {
+        let map = random_map_1d(rng);
+        let n = rng.range(1, 2000);
+        let p = Partition::of(&map, &[n]);
+        let mut covered = 0usize;
+        let mut last_hi = 0usize;
+        for (pid, r) in p.ranges() {
+            assert!(*pid < map.np());
+            assert!(r.lo >= last_hi, "overlapping ranges");
+            covered += r.len();
+            last_hi = r.hi;
+        }
+        assert_eq!(covered, n);
+        // owner_of agrees with the map's own owner computation.
+        for _ in 0..20 {
+            let i = rng.below(n);
+            assert_eq!(p.owner_of(i), Some(map.owner(&[i], &[n])));
+        }
+    });
+}
+
+/// INVARIANT: a remap plan moves every element exactly once, and the
+/// (src, dst) of every transfer agrees with both partitions.
+#[test]
+fn prop_remap_plan_exact() {
+    forall(150, 0x0E0A, |rng| {
+        let n = rng.range(1, 1500);
+        let src_map = random_map_1d(rng);
+        let np = src_map.np();
+        // destination over the same np (remap requires same world)
+        let dst_map = Dmap::new(
+            Grid::line(np),
+            vec![random_dist(rng)],
+            vec![Overlap::none()],
+            (0..np).collect(),
+        );
+        let src = Partition::of(&src_map, &[n]);
+        let dst = Partition::of(&dst_map, &[n]);
+        let plan = src.transfers_to(&dst);
+        let total: usize = plan.iter().map(|(_, _, r)| r.len()).sum();
+        assert_eq!(total, n, "plan must move each element once");
+        for (s, d, r) in plan {
+            for i in r.lo..r.hi {
+                assert_eq!(src.owner_of(i), Some(s));
+                assert_eq!(dst.owner_of(i), Some(d));
+            }
+        }
+    });
+}
+
+/// INVARIANT: map alignment is reflexive and symmetric.
+#[test]
+fn prop_alignment_symmetric() {
+    forall(150, 0xA116, |rng| {
+        let n = rng.range(1, 300);
+        let a = random_map_1d(rng);
+        let b = random_map_1d(rng);
+        assert!(a.aligned_with(&a, &[n]), "reflexive");
+        if a.np() == b.np() {
+            assert_eq!(a.aligned_with(&b, &[n]), b.aligned_with(&a, &[n]), "symmetric");
+        }
+    });
+}
+
+/// INVARIANT: the wire codec round-trips arbitrary payload sequences.
+#[test]
+fn prop_wire_roundtrip() {
+    forall(200, 0x3142, |rng| {
+        // Random schema of up to 8 fields.
+        let nfields = rng.range(1, 8);
+        let mut kinds = Vec::new();
+        let mut w = WireWriter::new();
+        for _ in 0..nfields {
+            match rng.below(5) {
+                0 => {
+                    // 52 bits so the f64 side-channel stores it exactly.
+                    let v = rng.next_u64() >> 12;
+                    w.put_u64(v);
+                    kinds.push((0u8, v as f64, String::new(), vec![]));
+                }
+                1 => {
+                    let v = rng.f64_range(-1e12, 1e12);
+                    w.put_f64(v);
+                    kinds.push((1, v, String::new(), vec![]));
+                }
+                2 => {
+                    let len = rng.below(40);
+                    let s: String = (0..len).map(|_| (b'a' + rng.below(26) as u8) as char).collect();
+                    w.put_str(&s);
+                    kinds.push((2, 0.0, s, vec![]));
+                }
+                3 => {
+                    let len = rng.below(100);
+                    let v: Vec<f64> = (0..len).map(|_| rng.f64_range(-1e6, 1e6)).collect();
+                    w.put_f64_slice(&v);
+                    kinds.push((3, 0.0, String::new(), v));
+                }
+                _ => {
+                    let v = rng.bool();
+                    w.put_bool(v);
+                    kinds.push((4, f64::from(v), String::new(), vec![]));
+                }
+            }
+        }
+        let buf = w.finish();
+        let mut r = WireReader::new(&buf);
+        for (k, num, s, v) in kinds {
+            match k {
+                0 => assert_eq!(r.get_u64().unwrap(), num as u64),
+                1 => assert_eq!(r.get_f64().unwrap(), num),
+                2 => assert_eq!(r.get_str().unwrap(), s),
+                3 => assert_eq!(r.get_f64_vec().unwrap(), v),
+                _ => assert_eq!(r.get_bool().unwrap(), num != 0.0),
+            }
+        }
+        assert_eq!(r.remaining(), 0);
+    });
+}
+
+/// INVARIANT: JSON display → parse is the identity on random values.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool()),
+            2 => Json::Num((rng.f64_range(-1e9, 1e9) * 100.0).round() / 100.0),
+            3 => {
+                let len = rng.below(12);
+                Json::Str((0..len).map(|_| (b' ' + rng.below(94) as u8) as char).collect())
+            }
+            4 => {
+                let len = rng.below(5);
+                Json::Arr((0..len).map(|_| random_json(rng, depth - 1)).collect())
+            }
+            _ => {
+                let len = rng.below(5);
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..len {
+                    m.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    forall(300, 0x7503, |rng| {
+        let j = random_json(rng, 3);
+        let parsed = Json::parse(&j.to_string()).expect("rendered json parses");
+        assert_eq!(parsed, j);
+    });
+}
+
+/// INVARIANT: overlap stored length = owned + halo, halo within array.
+#[test]
+fn prop_overlap_bounds() {
+    forall(200, 0x4A10, |rng| {
+        let n = rng.range(1, 400);
+        let g = rng.range(1, 10);
+        let amount = rng.below(20);
+        let d = Dist::Block;
+        let ov = Overlap::new(amount);
+        for c in 0..g {
+            let own = d.local_len(c, n, g);
+            let stored = ov.stored_len(&d, c, n, g);
+            assert!(stored >= own);
+            assert!(stored - own <= amount);
+            if let Some((lo, hi)) = ov.halo_range(&d, c, n, g) {
+                assert!(lo < hi && hi <= n);
+                assert_eq!(stored - own, hi - lo);
+            }
+        }
+    });
+}
+
+/// INVARIANT: validation closed forms match brute-force iteration for
+/// random q and nt.
+#[test]
+fn prop_validation_closed_form() {
+    forall(200, 0x5555, |rng| {
+        let q = rng.f64_range(-0.9, 0.9);
+        let nt = rng.range(1, 30);
+        let a0 = rng.f64_range(0.1, 3.0);
+        let (mut a, mut b, mut c) = (a0, 0.0f64, 0.0f64);
+        for _ in 0..nt {
+            c = a;
+            b = q * c;
+            c = a + b;
+            a = b + q * c;
+        }
+        let (ea, eb, ec) = distarray::stream::validate::expected(a0, q, nt);
+        let scale = a.abs().max(1.0);
+        assert!((a - ea).abs() < 1e-9 * scale, "A: {a} vs {ea} (q={q} nt={nt})");
+        assert!((b - eb).abs() < 1e-9 * scale);
+        assert!((c - ec).abs() < 1e-9 * scale);
+    });
+}
+
+/// INVARIANT: Table II schedule never overcommits memory and never
+/// produces zero-length vectors.
+#[test]
+fn prop_schedule_sound() {
+    forall(200, 0x7AB2, |rng| {
+        let base_log2 = rng.range(10, 31) as u32;
+        let base_nt = rng.range(1, 100);
+        let mem = (1u64 << rng.range(24, 40)) + rng.next_u64() % (1 << 24);
+        let max_np = 1usize << rng.below(8);
+        for (np, p) in distarray::stream::params::schedule(base_log2, base_nt, mem, max_np) {
+            assert!(p.local_len() >= 1);
+            assert!(p.nt >= base_nt);
+            let footprint = (p.local_bytes() as u64).saturating_mul(np as u64);
+            // Either under the cap, or the vector can't shrink further.
+            assert!(
+                footprint <= mem * 8 / 10 + 1 || p.log2_local == 0,
+                "np={np} {p:?} mem={mem}"
+            );
+        }
+    });
+}
