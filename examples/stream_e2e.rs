@@ -111,6 +111,7 @@ fn coordinated(np: usize, n: usize, nt: usize, map: MapKind) -> distarray::strea
         q: STREAM_Q,
         map,
         engine: EngineKind::Native,
+        dtype: distarray::element::Dtype::F64,
         artifacts: "artifacts".into(),
     };
     let mut world = ChannelHub::world(np);

@@ -1,3 +1,10 @@
+import sys
+from pathlib import Path
+
+# Make the `compile` package importable regardless of the pytest
+# invocation directory (repo root, python/, or python/tests).
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
 import jax
 
 jax.config.update("jax_enable_x64", True)  # STREAM mandates f64 (§III)

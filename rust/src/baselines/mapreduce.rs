@@ -145,6 +145,7 @@ fn to_result(n: usize, nt: usize, d: &TaskDone, passed: bool) -> StreamResult {
         n_global: n,
         n_local: d.n_local,
         nt,
+        width: 8,
         times: OpTimes {
             copy: d.times[0],
             scale: d.times[1],

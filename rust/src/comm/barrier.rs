@@ -13,7 +13,7 @@ use std::time::Duration;
 /// All `np` endpoints must call this with the same `epoch`; the epoch
 /// keeps back-to-back barriers from aliasing.
 pub fn barrier(t: &dyn Transport, epoch: u64, timeout: Duration) -> Result<()> {
-    let tag = tags::BARRIER ^ (epoch << 16);
+    let tag = tags::pack(tags::NS_BARRIER, epoch, 0);
     let np = t.np();
     if np == 1 {
         return Ok(());

@@ -36,33 +36,93 @@ use std::time::Duration;
 pub type Tag = u64;
 
 /// Reserved tags used by the library itself.
+///
+/// Library-internal tags are **bit-field packed** so no two logical
+/// message streams can ever alias:
+///
+/// ```text
+/// bit 63........56 55........................24 23.............0
+///     namespace    epoch (low 32 bits)          step / sequence
+/// ```
+///
+/// The namespace occupies the top byte, so every packed tag is
+/// ≥ 2^56; the legacy low-valued control tags ([`CONFIG`],
+/// [`RESULT`]) and any user-chosen small tags live in namespace 0 and
+/// are disjoint by construction. This replaces the old XOR mixing
+/// (`REMAP ^ (epoch << 32) ^ step`), under which a (epoch, step) pair
+/// from one subsystem could collide with another subsystem's base
+/// constant.
 pub mod tags {
     use super::Tag;
     /// Leader → worker run-configuration broadcast.
     pub const CONFIG: Tag = 0xC0FF;
     /// Worker → leader benchmark results.
     pub const RESULT: Tag = 0x0BE5;
+
     /// Barrier round-trips.
-    pub const BARRIER: Tag = 0xBA77;
-    /// Distributed-array remap payloads (base; +plan step).
-    pub const REMAP: Tag = 0x0E0A_0000;
+    pub const NS_BARRIER: u8 = 1;
+    /// Distributed-array remap payloads (step = plan index).
+    pub const NS_REMAP: u8 = 2;
     /// Overlap/halo synchronization.
-    pub const HALO: Tag = 0x4A10_0000;
+    pub const NS_HALO: u8 = 3;
     /// Aggregation (`agg()`) gathers.
-    pub const AGG: Tag = 0xA660_0000;
+    pub const NS_AGG: u8 = 4;
+    /// Scalar reductions (`allreduce`).
+    pub const NS_REDUCE: u8 = 5;
+    /// Global range gathers (`gather_range`).
+    pub const NS_GATHER: u8 = 6;
+    /// Pipeline stage transfers (step = plan index).
+    pub const NS_STAGE: u8 = 7;
+
+    /// Pack `(namespace, epoch, step)` into disjoint bit fields.
+    ///
+    /// Epochs are truncated to 32 bits and steps to 24 bits (the plan
+    /// sizes and epoch counts of any realistic run fit with room to
+    /// spare; debug builds assert it). Two packed tags are equal iff
+    /// all three fields are equal — no cross-namespace aliasing.
+    #[inline]
+    pub const fn pack(ns: u8, epoch: u64, step: u64) -> Tag {
+        debug_assert!(epoch < 1 << 32, "epoch exceeds 32-bit tag field");
+        debug_assert!(step < 1 << 24, "step exceeds 24-bit tag field");
+        ((ns as Tag) << 56) | ((epoch & 0xFFFF_FFFF) << 24) | (step & 0x00FF_FFFF)
+    }
 }
 
 /// Errors surfaced by transports.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CommError {
-    #[error("timeout waiting for message from {from} tag {tag:#x}")]
     Timeout { from: Pid, tag: Tag },
-    #[error("peer {0} disconnected")]
     Disconnected(Pid),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("malformed message: {0}")]
+    Io(std::io::Error),
     Malformed(String),
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Timeout { from, tag } => {
+                write!(f, "timeout waiting for message from {from} tag {tag:#x}")
+            }
+            CommError::Disconnected(p) => write!(f, "peer {p} disconnected"),
+            CommError::Io(e) => write!(f, "io error: {e}"),
+            CommError::Malformed(m) => write!(f, "malformed message: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CommError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CommError {
+    fn from(e: std::io::Error) -> Self {
+        CommError::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, CommError>;

@@ -3,8 +3,18 @@
 //!
 //! Framing: values are written in declaration order; variable-length
 //! values carry a u64 length prefix. All multi-byte values are LE.
+//!
+//! Bulk array payloads are **typed**: [`WireWriter::put_slice`] /
+//! [`WireReader::get_slice_into`] work for any [`Element`] and frame
+//! the payload as `[count: u64][dtype code: u8][count × WIDTH bytes]`.
+//! The dtype byte makes payloads self-describing, so a receiver
+//! decoding at the wrong type gets a loud [`CommError::Malformed`]
+//! instead of silently reinterpreted bits — the contract the generic
+//! remap engine relies on. The legacy `put_f64_slice` family is a
+//! thin wrapper over the typed calls.
 
 use super::{CommError, Result};
+use crate::element::{Dtype, Element};
 
 /// Append-only wire writer.
 #[derive(Default)]
@@ -54,14 +64,21 @@ impl WireWriter {
         self.put_bytes(v.as_bytes());
     }
 
-    /// Bulk f64 slice — the hot payload type (vector fragments).
-    pub fn put_f64_slice(&mut self, v: &[f64]) {
+    /// Bulk typed slice — the hot payload type (vector fragments).
+    /// Framing: count, dtype code, then `count × T::WIDTH` LE bytes.
+    pub fn put_slice<T: Element>(&mut self, v: &[T]) {
         self.put_u64(v.len() as u64);
+        self.put_u8(T::DTYPE.code());
         // Safe per-element encode; LLVM vectorizes this loop.
-        self.buf.reserve(v.len() * 8);
+        self.buf.reserve(v.len() * T::WIDTH);
         for &x in v {
-            self.buf.extend_from_slice(&x.to_le_bytes());
+            x.write_le(&mut self.buf);
         }
+    }
+
+    /// Bulk f64 slice (compat wrapper over [`WireWriter::put_slice`]).
+    pub fn put_f64_slice(&mut self, v: &[f64]) {
+        self.put_slice::<f64>(v);
     }
 
     pub fn finish(self) -> Vec<u8> {
@@ -136,31 +153,58 @@ impl<'a> WireReader<'a> {
             .map_err(|e| CommError::Malformed(format!("bad utf8: {e}")))
     }
 
-    pub fn get_f64_vec(&mut self) -> Result<Vec<f64>> {
+    /// Read the `[count][dtype]` slice header, checking the dtype code
+    /// against `T` (payload self-description).
+    fn slice_header<T: Element>(&mut self) -> Result<usize> {
         let n = self.get_usize()?;
-        let bytes = self.take(n * 8)?;
+        let code = self.get_u8()?;
+        match Dtype::from_code(code) {
+            Some(d) if d == T::DTYPE => Ok(n),
+            Some(d) => Err(CommError::Malformed(format!(
+                "dtype mismatch: payload is {d}, reader expects {}",
+                T::DTYPE
+            ))),
+            None => Err(CommError::Malformed(format!("unknown dtype code {code}"))),
+        }
+    }
+
+    /// Decode a typed slice into a fresh vector.
+    pub fn get_vec<T: Element>(&mut self) -> Result<Vec<T>> {
+        let n = self.slice_header::<T>()?;
+        let bytes = self.take(n * T::WIDTH)?;
         let mut out = Vec::with_capacity(n);
-        for c in bytes.chunks_exact(8) {
-            out.push(f64::from_le_bytes(c.try_into().unwrap()));
+        for c in bytes.chunks_exact(T::WIDTH) {
+            out.push(T::read_le(c));
         }
         Ok(out)
     }
 
-    /// Decode an f64 slice directly into `dst` (remap hot path — no
+    /// Decode a typed slice directly into `dst` (remap hot path — no
     /// intermediate allocation).
-    pub fn get_f64_into(&mut self, dst: &mut [f64]) -> Result<()> {
-        let n = self.get_usize()?;
+    pub fn get_slice_into<T: Element>(&mut self, dst: &mut [T]) -> Result<()> {
+        let n = self.slice_header::<T>()?;
         if n != dst.len() {
             return Err(CommError::Malformed(format!(
-                "f64 slice length {n} != destination {}",
+                "{} slice length {n} != destination {}",
+                T::DTYPE,
                 dst.len()
             )));
         }
-        let bytes = self.take(n * 8)?;
-        for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(8)) {
-            *d = f64::from_le_bytes(c.try_into().unwrap());
+        let bytes = self.take(n * T::WIDTH)?;
+        for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(T::WIDTH)) {
+            *d = T::read_le(c);
         }
         Ok(())
+    }
+
+    /// Compat wrapper over [`WireReader::get_vec`].
+    pub fn get_f64_vec(&mut self) -> Result<Vec<f64>> {
+        self.get_vec::<f64>()
+    }
+
+    /// Compat wrapper over [`WireReader::get_slice_into`].
+    pub fn get_f64_into(&mut self, dst: &mut [f64]) -> Result<()> {
+        self.get_slice_into::<f64>(dst)
     }
 
     pub fn remaining(&self) -> usize {
@@ -232,6 +276,34 @@ mod tests {
         let mut dst = [0.0; 2];
         WireReader::new(&buf).get_f64_into(&mut dst).unwrap();
         assert_eq!(dst, [1.0, 2.0]);
+    }
+
+    #[test]
+    fn typed_slices_roundtrip_all_dtypes() {
+        let mut w = WireWriter::new();
+        w.put_slice::<f32>(&[1.5, -2.5, 0.0]);
+        w.put_slice::<i64>(&[i64::MIN, -1, i64::MAX]);
+        w.put_slice::<u64>(&[0, u64::MAX]);
+        let buf = w.finish();
+        let mut r = WireReader::new(&buf);
+        assert_eq!(r.get_vec::<f32>().unwrap(), vec![1.5, -2.5, 0.0]);
+        assert_eq!(r.get_vec::<i64>().unwrap(), vec![i64::MIN, -1, i64::MAX]);
+        let mut dst = [0u64; 2];
+        r.get_slice_into::<u64>(&mut dst).unwrap();
+        assert_eq!(dst, [0, u64::MAX]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn dtype_mismatch_is_loud_error() {
+        // An f32 payload read as f64 must error, not reinterpret bits.
+        let mut w = WireWriter::new();
+        w.put_slice::<f32>(&[1.0, 2.0]);
+        let buf = w.finish();
+        let mut dst = [0.0f64; 2];
+        let err = WireReader::new(&buf).get_slice_into::<f64>(&mut dst);
+        assert!(matches!(err, Err(CommError::Malformed(_))), "{err:?}");
+        assert!(WireReader::new(&buf).get_vec::<i64>().is_err());
     }
 
     #[test]

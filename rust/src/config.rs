@@ -8,11 +8,13 @@
 //!   "nt": 10,
 //!   "map": "block",
 //!   "engine": "native",
+//!   "dtype": "f64",
 //!   "artifacts": "artifacts"
 //! }
 //! ```
 
 use crate::coordinator::{EngineKind, MapKind, RunConfig};
+use crate::element::Dtype;
 use crate::json::Json;
 use crate::launcher::Triples;
 use crate::stream::STREAM_Q;
@@ -25,14 +27,43 @@ pub struct LaunchConfig {
 }
 
 /// Errors loading a config file.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("parse: {0}")]
-    Json(#[from] crate::json::JsonError),
-    #[error("bad field '{0}': {1}")]
+    Io(std::io::Error),
+    Json(crate::json::JsonError),
     Field(&'static str, String),
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+            ConfigError::Json(e) => write!(f, "parse: {e}"),
+            ConfigError::Field(name, msg) => write!(f, "bad field '{name}': {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Io(e) => Some(e),
+            ConfigError::Json(e) => Some(e),
+            ConfigError::Field(..) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
+}
+
+impl From<crate::json::JsonError> for ConfigError {
+    fn from(e: crate::json::JsonError) -> Self {
+        ConfigError::Json(e)
+    }
 }
 
 impl LaunchConfig {
@@ -46,6 +77,7 @@ impl LaunchConfig {
                 q: STREAM_Q,
                 map: MapKind::Block,
                 engine: EngineKind::Native,
+                dtype: Dtype::F64,
                 artifacts: "artifacts".into(),
             },
         }
@@ -89,6 +121,13 @@ impl LaunchConfig {
             cfg.run.engine = EngineKind::parse(s)
                 .ok_or_else(|| ConfigError::Field("engine", format!("unknown engine '{s}'")))?;
         }
+        if let Some(v) = j.get("dtype") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| ConfigError::Field("dtype", "must be a string".into()))?;
+            cfg.run.dtype = Dtype::parse(s)
+                .ok_or_else(|| ConfigError::Field("dtype", format!("unknown dtype '{s}'")))?;
+        }
         if let Some(v) = j.get("artifacts") {
             cfg.run.artifacts = v
                 .as_str()
@@ -113,7 +152,7 @@ mod tests {
         let cfg = LaunchConfig::from_json(
             r#"{"triples": "2x4x2", "n": 1024, "nt": 3, "q": 0.5,
                 "map": "blockcyclic:16", "engine": "pjrt-fused",
-                "artifacts": "art"}"#,
+                "dtype": "f32", "artifacts": "art"}"#,
         )
         .unwrap();
         assert_eq!(cfg.triples, Triples::new(2, 4, 2));
@@ -122,6 +161,7 @@ mod tests {
         assert_eq!(cfg.run.q, 0.5);
         assert_eq!(cfg.run.map, MapKind::BlockCyclic { block_size: 16 });
         assert_eq!(cfg.run.engine, EngineKind::PjrtFused);
+        assert_eq!(cfg.run.dtype, Dtype::F32);
         assert_eq!(cfg.run.artifacts, "art");
     }
 
@@ -131,6 +171,7 @@ mod tests {
         assert_eq!(cfg.run.n_global, 99);
         assert_eq!(cfg.run.nt, 10);
         assert_eq!(cfg.run.map, MapKind::Block);
+        assert_eq!(cfg.run.dtype, Dtype::F64);
     }
 
     #[test]
@@ -142,6 +183,10 @@ mod tests {
         assert!(matches!(
             LaunchConfig::from_json(r#"{"engine": "cuda"}"#),
             Err(ConfigError::Field("engine", _))
+        ));
+        assert!(matches!(
+            LaunchConfig::from_json(r#"{"dtype": "f16"}"#),
+            Err(ConfigError::Field("dtype", _))
         ));
         assert!(matches!(
             LaunchConfig::from_json("{"),

@@ -45,6 +45,7 @@ mod tests {
             q: STREAM_Q,
             map,
             engine: EngineKind::Native,
+            dtype: crate::element::Dtype::F64,
             artifacts: "artifacts".into(),
         }
     }
@@ -91,5 +92,27 @@ mod tests {
         let (agg, _) = run_leader(&leader, &cfg(4096, 2, MapKind::Block)).unwrap();
         assert!(agg.all_valid);
         assert!(leader.stats().is_silent(), "np=1 needs no messages");
+    }
+
+    #[test]
+    fn f32_dtype_through_the_full_protocol() {
+        let np = 3;
+        let mut world = ChannelHub::world(np);
+        let leader = world.remove(0);
+        let handles: Vec<_> = world
+            .into_iter()
+            .map(|t| thread::spawn(move || run_worker(&t).unwrap()))
+            .collect();
+        let mut c = cfg(3 * 1024, 4, MapKind::Block);
+        c.dtype = crate::element::Dtype::F32;
+        let (agg, results) = run_leader(&leader, &c).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(agg.all_valid, "worst err {}", agg.worst_err);
+        assert_eq!(agg.width, 4, "aggregate must carry the f32 width");
+        for r in &results {
+            assert_eq!(r.width, 4);
+        }
     }
 }

@@ -2,6 +2,7 @@
 
 use crate::comm::{CommError, Decode, Encode, WireReader, WireWriter};
 use crate::dmap::Dmap;
+use crate::element::Dtype;
 use crate::stream::timing::OpTimes;
 use crate::stream::validate::ValidationReport;
 use crate::stream::StreamResult;
@@ -86,6 +87,9 @@ pub struct RunConfig {
     pub q: f64,
     pub map: MapKind,
     pub engine: EngineKind,
+    /// Element dtype of the benchmark vectors (`--dtype` axis; the
+    /// native engine supports every float dtype, PJRT is f64-only).
+    pub dtype: Dtype,
     /// Artifacts directory for the PJRT engine.
     pub artifacts: String,
 }
@@ -103,6 +107,7 @@ impl Encode for RunConfig {
             EngineKind::Pjrt => 1,
             EngineKind::PjrtFused => 2,
         });
+        w.put_u8(self.dtype.code());
         w.put_str(&self.artifacts);
     }
 }
@@ -126,8 +131,11 @@ impl Decode for RunConfig {
             2 => EngineKind::PjrtFused,
             x => return Err(CommError::Malformed(format!("bad engine code {x}"))),
         };
+        let dcode = r.get_u8()?;
+        let dtype = Dtype::from_code(dcode)
+            .ok_or_else(|| CommError::Malformed(format!("bad dtype code {dcode}")))?;
         let artifacts = r.get_str()?;
-        Ok(RunConfig { n_global, nt, q, map, engine, artifacts })
+        Ok(RunConfig { n_global, nt, q, map, engine, dtype, artifacts })
     }
 }
 
@@ -138,6 +146,8 @@ pub struct WorkerReport {
     pub n_global: usize,
     pub n_local: usize,
     pub nt: usize,
+    /// Bytes per element of the streamed dtype.
+    pub width: usize,
     pub times: [f64; 4],
     pub passed: bool,
     pub errs: [f64; 3],
@@ -150,6 +160,7 @@ impl WorkerReport {
             n_global: r.n_global,
             n_local: r.n_local,
             nt: r.nt,
+            width: r.width,
             times: r.times.as_array(),
             passed: r.validation.passed,
             errs: [r.validation.err_a, r.validation.err_b, r.validation.err_c],
@@ -161,6 +172,7 @@ impl WorkerReport {
             n_global: self.n_global,
             n_local: self.n_local,
             nt: self.nt,
+            width: self.width,
             times: OpTimes {
                 copy: self.times[0],
                 scale: self.times[1],
@@ -183,6 +195,7 @@ impl Encode for WorkerReport {
         w.put_usize(self.n_global);
         w.put_usize(self.n_local);
         w.put_usize(self.nt);
+        w.put_usize(self.width);
         for t in self.times {
             w.put_f64(t);
         }
@@ -199,6 +212,7 @@ impl Decode for WorkerReport {
         let n_global = r.get_usize()?;
         let n_local = r.get_usize()?;
         let nt = r.get_usize()?;
+        let width = r.get_usize()?;
         let mut times = [0.0; 4];
         for t in &mut times {
             *t = r.get_f64()?;
@@ -208,7 +222,7 @@ impl Decode for WorkerReport {
         for e in &mut errs {
             *e = r.get_f64()?;
         }
-        Ok(WorkerReport { pid, n_global, n_local, nt, times, passed, errs })
+        Ok(WorkerReport { pid, n_global, n_local, nt, width, times, passed, errs })
     }
 }
 
@@ -224,6 +238,7 @@ mod tests {
             q: crate::stream::STREAM_Q,
             map: MapKind::BlockCyclic { block_size: 64 },
             engine: EngineKind::Pjrt,
+            dtype: Dtype::F32,
             artifacts: "artifacts".into(),
         };
         let got = RunConfig::from_bytes(&c.to_bytes()).unwrap();
@@ -237,6 +252,7 @@ mod tests {
             n_global: 100,
             n_local: 25,
             nt: 10,
+            width: 4,
             times: [0.1, 0.2, 0.3, 0.4],
             passed: true,
             errs: [0.0, 1e-16, 0.0],
@@ -245,6 +261,7 @@ mod tests {
         assert_eq!(got, rep);
         let r = got.to_result();
         assert_eq!(r.times.triad, 0.4);
+        assert_eq!(r.width, 4);
         assert!(r.validation.passed);
     }
 
@@ -267,6 +284,7 @@ mod tests {
             q: 0.5,
             map: MapKind::Block,
             engine: EngineKind::Native,
+            dtype: Dtype::F64,
             artifacts: String::new(),
         };
         let bytes = c.to_bytes();

@@ -2,16 +2,26 @@
 
 use super::results::{EngineKind, RunConfig, WorkerReport};
 use crate::comm::{tags, Decode, Encode, Result, Transport};
-use crate::stream::parallel::run_parallel;
+use crate::element::Dtype;
+use crate::stream::parallel::run_parallel_t;
 use crate::stream::timing::{OpTimes, Timer};
 use crate::stream::validate::validate;
 use crate::stream::StreamResult;
 
 /// Execute one configured STREAM run on this PID.
+///
+/// The native engine dispatches on the config's dtype (the `--dtype`
+/// axis); the PJRT engines execute f64 artifacts regardless — the CLI
+/// rejects the combination before a run starts, this is the backstop.
 pub fn run_configured_stream(cfg: &RunConfig, pid: usize, np: usize) -> StreamResult {
     let map = cfg.map.to_map(np);
     match cfg.engine {
-        EngineKind::Native => run_parallel(&map, cfg.n_global, cfg.nt, cfg.q, pid),
+        EngineKind::Native => match cfg.dtype {
+            Dtype::F64 => run_parallel_t::<f64>(&map, cfg.n_global, cfg.nt, cfg.q, pid),
+            Dtype::F32 => run_parallel_t::<f32>(&map, cfg.n_global, cfg.nt, cfg.q as f32, pid),
+            Dtype::I64 => run_parallel_t::<i64>(&map, cfg.n_global, cfg.nt, cfg.q as i64, pid),
+            Dtype::U64 => run_parallel_t::<u64>(&map, cfg.n_global, cfg.nt, cfg.q as u64, pid),
+        },
         EngineKind::Pjrt => run_pjrt_stream(cfg, pid, np),
         EngineKind::PjrtFused => run_pjrt_fused_stream(cfg, pid, np),
     }
@@ -60,7 +70,14 @@ fn run_pjrt_fused_stream(cfg: &RunConfig, pid: usize, np: usize) -> StreamResult
         times.triad += dt * 0.3;
     }
     let validation = validate(&a, &b, &c, A0, cfg.q, cfg.nt);
-    StreamResult { n_global: cfg.n_global, n_local: eff_local, nt: cfg.nt, times, validation }
+    StreamResult {
+        n_global: cfg.n_global,
+        n_local: eff_local,
+        nt: cfg.nt,
+        width: 8,
+        times,
+        validation,
+    }
 }
 
 /// PJRT engine: the local part is processed by the AOT artifacts
@@ -119,7 +136,14 @@ fn run_pjrt_stream(cfg: &RunConfig, pid: usize, np: usize) -> StreamResult {
         times.triad += t.toc();
     }
     let validation = validate(&a, &b, &c, A0, cfg.q, cfg.nt);
-    StreamResult { n_global: cfg.n_global, n_local: eff_local, nt: cfg.nt, times, validation }
+    StreamResult {
+        n_global: cfg.n_global,
+        n_local: eff_local,
+        nt: cfg.nt,
+        width: 8,
+        times,
+        validation,
+    }
 }
 
 /// Full worker lifecycle over a transport: receive the broadcast

@@ -2,21 +2,22 @@
 //! aggregation; used at the end of a run "the results were aggregated
 //! using asynchronous file-based messaging" §V).
 
-use super::dense::Darray;
+use super::dense::DarrayT;
 use super::Result;
 use crate::comm::{tags, Transport, WireReader, WireWriter};
 use crate::dmap::Partition;
+use crate::element::Element;
 
-impl Darray {
+impl<T: Element> DarrayT<T> {
     /// Gather the full global array onto PID 0.
     ///
     /// Returns `Some(global)` on the leader, `None` elsewhere. SPMD:
     /// every PID in the map must call with the same `epoch`.
-    pub fn agg(&self, t: &dyn Transport, epoch: u64) -> Result<Option<Vec<f64>>> {
-        let tag = tags::AGG ^ (epoch << 8);
+    pub fn agg(&self, t: &dyn Transport, epoch: u64) -> Result<Option<Vec<T>>> {
+        let tag = tags::pack(tags::NS_AGG, epoch, 0);
         let part = Partition::of(self.map(), &self.shape().to_vec());
         if self.pid() == 0 {
-            let mut global = vec![0.0f64; self.global_len()];
+            let mut global = vec![T::ZERO; self.global_len()];
             // Own pieces first.
             let mut off = 0usize;
             for r in part.ranges_of(0) {
@@ -30,7 +31,7 @@ impl Darray {
                 }
                 let payload = t.recv(pid, tag)?;
                 let mut rd = WireReader::new(&payload);
-                let data = rd.get_f64_vec()?;
+                let data = rd.get_vec::<T>()?;
                 let mut off = 0usize;
                 for r in part.ranges_of(pid) {
                     global[r.lo..r.hi].copy_from_slice(&data[off..off + r.len()]);
@@ -39,8 +40,8 @@ impl Darray {
             }
             Ok(Some(global))
         } else {
-            let mut w = WireWriter::with_capacity(16 + 8 * self.local_len());
-            w.put_f64_slice(self.loc());
+            let mut w = WireWriter::with_capacity(24 + T::WIDTH * self.local_len());
+            w.put_slice::<T>(self.loc());
             t.send(0, tag, &w.finish())?;
             Ok(None)
         }
@@ -51,6 +52,7 @@ impl Darray {
 mod tests {
     use super::*;
     use crate::comm::ChannelHub;
+    use crate::darray::dense::Darray;
     use crate::dmap::Dmap;
     use std::thread;
 
@@ -98,5 +100,27 @@ mod tests {
     #[test]
     fn agg_single_pid() {
         run_agg(Dmap::block_1d, 17, 1);
+    }
+
+    #[test]
+    fn agg_typed_u64() {
+        let np = 3;
+        let world = ChannelHub::world(np);
+        let mut hs = Vec::new();
+        for t in world {
+            hs.push(thread::spawn(move || {
+                let pid = t.pid();
+                let a =
+                    DarrayT::<u64>::from_global_fn(Dmap::cyclic_1d(np), &[29], pid, |g| g as u64);
+                let got = a.agg(&t, 1).unwrap();
+                if pid == 0 {
+                    let g = got.unwrap();
+                    assert_eq!(g, (0..29u64).collect::<Vec<_>>());
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
     }
 }

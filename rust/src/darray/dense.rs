@@ -1,42 +1,51 @@
-//! The [`Darray`] container: map + global shape + local storage.
+//! The [`DarrayT`] container: map + global shape + local storage.
 
 use super::{DarrayError, Result};
 use crate::dmap::{Dmap, Pid};
+use crate::element::{Dtype, Element};
 
-/// One PID's view of a distributed dense f64 array.
+/// One PID's view of a distributed dense array of `T`.
+///
+/// The map algebra is dtype-independent (the paper's model never
+/// inspects values); `T` controls only bytes-per-element, arithmetic,
+/// and the wire encoding. [`Darray`] aliases the classic `f64`
+/// instantiation so existing call sites read unchanged.
 ///
 /// Storage covers the *stored* region (owned + halo); for 1-D block
 /// maps the halo is a suffix, so `loc()` is always a prefix slice.
 #[derive(Debug, Clone)]
-pub struct Darray {
+pub struct DarrayT<T: Element> {
     map: Dmap,
     shape: Vec<usize>,
     pid: Pid,
     /// Row-major over `map.stored_shape(pid, shape)`.
-    data: Vec<f64>,
+    data: Vec<T>,
     /// Cached: number of *owned* elements (prefix of `data` for 1-D).
     owned: usize,
 }
 
-impl Darray {
+/// The classic f64 distributed array (the paper's STREAM dtype).
+pub type Darray = DarrayT<f64>;
+
+impl<T: Element> DarrayT<T> {
     /// Allocate the local part of a zero-filled distributed array.
     pub fn zeros(map: Dmap, shape: &[usize], pid: Pid) -> Self {
         assert_eq!(map.ndim(), shape.len(), "map/shape rank mismatch");
         assert!(map.contains(pid), "PID {pid} not in map");
         let stored: usize = map.stored_shape(pid, shape).iter().product();
         let owned: usize = map.local_shape(pid, shape).iter().product();
-        Darray {
+        DarrayT {
             map,
             shape: shape.to_vec(),
             pid,
-            data: vec![0.0; stored],
+            data: vec![T::ZERO; stored],
             owned,
         }
     }
 
     /// Allocate with every owned element set to `v` (the Code Listing
     /// idiom `local(zeros(1,N,map)) + A0`).
-    pub fn constant(map: Dmap, shape: &[usize], pid: Pid, v: f64) -> Self {
+    pub fn constant(map: Dmap, shape: &[usize], pid: Pid, v: T) -> Self {
         let mut a = Self::zeros(map, shape, pid);
         a.fill(v);
         a
@@ -44,7 +53,7 @@ impl Darray {
 
     /// Initialize each owned element from its **global** flat index —
     /// deterministic across any map (test workhorse).
-    pub fn from_global_fn(map: Dmap, shape: &[usize], pid: Pid, f: impl Fn(usize) -> f64) -> Self {
+    pub fn from_global_fn(map: Dmap, shape: &[usize], pid: Pid, f: impl Fn(usize) -> T) -> Self {
         let mut a = Self::zeros(map, shape, pid);
         let part = crate::dmap::Partition::of(&a.map, &a.shape);
         let mut off = 0usize;
@@ -70,6 +79,11 @@ impl Darray {
         self.pid
     }
 
+    /// Runtime dtype of the stored elements.
+    pub fn dtype(&self) -> Dtype {
+        T::DTYPE
+    }
+
     /// Global element count.
     pub fn global_len(&self) -> usize {
         self.shape.iter().product()
@@ -80,36 +94,41 @@ impl Darray {
         self.owned
     }
 
+    /// Owned bytes on this PID (the quantity bandwidth formulas use).
+    pub fn local_bytes(&self) -> usize {
+        self.owned * T::WIDTH
+    }
+
     /// The paper's `.loc`: immutable view of the owned region.
     #[inline]
-    pub fn loc(&self) -> &[f64] {
+    pub fn loc(&self) -> &[T] {
         &self.data[..self.owned]
     }
 
     /// The paper's `.loc` (mutable).
     #[inline]
-    pub fn loc_mut(&mut self) -> &mut [f64] {
+    pub fn loc_mut(&mut self) -> &mut [T] {
         &mut self.data[..self.owned]
     }
 
     /// Stored region (owned + halo).
-    pub fn stored(&self) -> &[f64] {
+    pub fn stored(&self) -> &[T] {
         &self.data
     }
 
-    pub fn stored_mut(&mut self) -> &mut [f64] {
+    pub fn stored_mut(&mut self) -> &mut [T] {
         &mut self.data
     }
 
     /// Set every owned element.
-    pub fn fill(&mut self, v: f64) {
+    pub fn fill(&mut self, v: T) {
         for x in self.loc_mut() {
             *x = v;
         }
     }
 
     /// Are `self` and `other` compatible for owner-computes ops?
-    pub fn check_aligned(&self, other: &Darray) -> Result<()> {
+    pub fn check_aligned(&self, other: &DarrayT<T>) -> Result<()> {
         if self.shape != other.shape {
             return Err(DarrayError::ShapeMismatch {
                 a: self.shape.clone(),
@@ -126,7 +145,7 @@ impl Darray {
     }
 
     /// Read the value at a global flat index **if** this PID owns it.
-    pub fn global_get(&self, gflat: usize) -> Option<f64> {
+    pub fn global_get(&self, gflat: usize) -> Option<T> {
         let part = crate::dmap::Partition::of(&self.map, &self.shape);
         if part.owner_of(gflat)? != self.pid {
             return None;
@@ -209,5 +228,17 @@ mod tests {
         ));
         let c = Darray::zeros(Dmap::block_1d(4), &[64], 0);
         assert!(a.check_aligned(&c).is_ok());
+    }
+
+    #[test]
+    fn typed_instantiations_share_the_map_algebra() {
+        let f = DarrayT::<f32>::from_global_fn(Dmap::cyclic_1d(3), &[10], 1, |g| g as f32);
+        let i = DarrayT::<i64>::from_global_fn(Dmap::cyclic_1d(3), &[10], 1, |g| g as i64);
+        let u = DarrayT::<u64>::from_global_fn(Dmap::cyclic_1d(3), &[10], 1, |g| g as u64);
+        assert_eq!(f.local_len(), i.local_len());
+        assert_eq!(f.local_bytes(), 3 * 4);
+        assert_eq!(i.local_bytes(), 3 * 8);
+        assert_eq!(u.global_get(4), Some(4u64));
+        assert_eq!(f.dtype(), crate::element::Dtype::F32);
     }
 }

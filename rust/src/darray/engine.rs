@@ -1,0 +1,279 @@
+//! [`RemapEngine`] — reusable remap planning for the whole
+//! darray/comm/stream stack.
+//!
+//! A remap (`A(:) = B` across different maps, a pipeline stage hand-
+//! off, a halo-style redistribution) is two separable concerns:
+//!
+//! 1. **Planning** — intersect the source and destination
+//!    [`Partition`]s into a transfer list and precompute, per PID, the
+//!    global-range → local-offset tables for both layouts. Pure index
+//!    arithmetic, identical on every PID, O(ranges) work.
+//! 2. **Execution** — move bytes per the plan over a
+//!    [`Transport`](crate::comm::Transport). O(data) work.
+//!
+//! The seed implementation fused the two inside `assign_from`, so an
+//! iterated pipeline re-planned on every iteration. [`RemapPlan`]
+//! materializes concern 1 as a value; [`RemapEngine`] caches plans
+//! keyed by `(src_map, dst_map, shape)` so a repeated remap plans
+//! **exactly once** (observable via [`RemapEngine::plans_built`] — the
+//! tests assert it rather than assume it). Plans are returned as
+//! `Arc`s: SPMD threads of one process can share one engine. The
+//! cache lock is never held during data movement; it IS held across
+//! the build of a missing plan, which keeps the build counter exact
+//! under thread races at the cost of serializing first-touch
+//! planning. A cache hit still pays the mutex plus a key clone —
+//! loops that care should hoist the `Arc` once
+//! ([`RemapEngine::plan`]) and execute through
+//! `DarrayT::assign_from_plan`.
+
+use crate::dmap::{Dmap, GlobalRange, Partition, Pid};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Per-PID offset table: `(global_lo, len, local_offset)` per owned
+/// contiguous range, in ascending global order.
+pub type OffsetTable = Vec<(usize, usize, usize)>;
+
+/// A fully precomputed remap: the transfer list plus both sides'
+/// offset tables. Everything `assign_from` needs except the data.
+#[derive(Debug)]
+pub struct RemapPlan {
+    /// Source and destination assign identical ownership — execution
+    /// degenerates to a local copy with zero messages.
+    aligned: bool,
+    /// `(src_pid, dst_pid, global_range)` transfers, in deterministic
+    /// plan order (empty when `aligned`). Entries with
+    /// `src_pid == dst_pid` are local copies, not messages.
+    transfers: Vec<(Pid, Pid, GlobalRange)>,
+    src_offsets: HashMap<Pid, OffsetTable>,
+    dst_offsets: HashMap<Pid, OffsetTable>,
+}
+
+impl RemapPlan {
+    /// Plan the remap of an array of `shape` from `src` to `dst`.
+    pub fn build(src: &Dmap, dst: &Dmap, shape: &[usize]) -> RemapPlan {
+        let src_part = Partition::of(src, shape);
+        let dst_part = Partition::of(dst, shape);
+        if src_part.same_ownership(&dst_part) {
+            return RemapPlan {
+                aligned: true,
+                transfers: Vec::new(),
+                src_offsets: HashMap::new(),
+                dst_offsets: HashMap::new(),
+            };
+        }
+        let transfers = src_part.transfers_to(&dst_part);
+        RemapPlan {
+            aligned: false,
+            transfers,
+            src_offsets: offset_tables(&src_part, src),
+            dst_offsets: offset_tables(&dst_part, dst),
+        }
+    }
+
+    /// Source and destination own identical index sets?
+    pub fn is_aligned(&self) -> bool {
+        self.aligned
+    }
+
+    /// The transfer list (empty for aligned plans).
+    pub fn transfers(&self) -> &[(Pid, Pid, GlobalRange)] {
+        &self.transfers
+    }
+
+    /// Messages `pid` will actually send/receive under this plan
+    /// (excludes local copies) — the "bounded communication" number.
+    pub fn message_count(&self, pid: Pid) -> usize {
+        self.transfers
+            .iter()
+            .filter(|(s, d, _)| s != d && (*s == pid || *d == pid))
+            .count()
+    }
+
+    /// Local offset of global index `g` in `pid`'s **source** layout.
+    pub fn src_offset(&self, pid: Pid, g: usize) -> usize {
+        lookup(&self.src_offsets[&pid], g)
+    }
+
+    /// Local offset of global index `g` in `pid`'s **destination**
+    /// layout.
+    pub fn dst_offset(&self, pid: Pid, g: usize) -> usize {
+        lookup(&self.dst_offsets[&pid], g)
+    }
+}
+
+/// Offset tables for every PID participating in `map`.
+fn offset_tables(p: &Partition, map: &Dmap) -> HashMap<Pid, OffsetTable> {
+    map.pids()
+        .iter()
+        .map(|&pid| {
+            let mut table = Vec::new();
+            let mut off = 0usize;
+            for r in p.ranges_of(pid) {
+                table.push((r.lo, r.len(), off));
+                off += r.len();
+            }
+            (pid, table)
+        })
+        .collect()
+}
+
+/// Local offset of flattened global index `g` given an offset table.
+fn lookup(table: &OffsetTable, g: usize) -> usize {
+    // Tables are sorted by global_lo; binary search the covering range.
+    let idx = table.partition_point(|&(lo, len, _)| lo + len <= g);
+    match table.get(idx) {
+        Some(&(lo, len, off)) if g >= lo && g < lo + len => off + (g - lo),
+        _ => panic!("global index {g} not owned (plan/offset table mismatch)"),
+    }
+}
+
+/// Cache key: the remap is fully determined by the map pair + shape.
+#[derive(PartialEq, Eq, Hash, Clone)]
+struct PlanKey {
+    src: Dmap,
+    dst: Dmap,
+    shape: Vec<usize>,
+}
+
+/// A plan cache shared by every remap-shaped operation.
+///
+/// ```no_run
+/// use distarray::darray::{Darray, RemapEngine};
+/// use distarray::dmap::Dmap;
+/// # let transport: &dyn distarray::comm::Transport = unimplemented!();
+/// let engine = RemapEngine::new();
+/// let src = Darray::zeros(Dmap::block_1d(4), &[1 << 20], 0);
+/// let mut dst = Darray::zeros(Dmap::cyclic_1d(4), &[1 << 20], 0);
+/// for epoch in 0..100 {
+///     // plans once, moves data 100 times
+///     dst.assign_from_engine(&src, transport, epoch, &engine).unwrap();
+/// }
+/// assert_eq!(engine.plans_built(), 1);
+/// ```
+#[derive(Default)]
+pub struct RemapEngine {
+    cache: Mutex<HashMap<PlanKey, Arc<RemapPlan>>>,
+    builds: AtomicU64,
+}
+
+impl RemapEngine {
+    pub fn new() -> RemapEngine {
+        RemapEngine::default()
+    }
+
+    /// The cached plan for `(src, dst, shape)`, building it on first
+    /// use. Holding the cache lock across the build keeps the build
+    /// counter exact even under SPMD thread races.
+    pub fn plan(&self, src: &Dmap, dst: &Dmap, shape: &[usize]) -> Arc<RemapPlan> {
+        let key = PlanKey { src: src.clone(), dst: dst.clone(), shape: shape.to_vec() };
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(p) = cache.get(&key) {
+            return p.clone();
+        }
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(RemapPlan::build(src, dst, shape));
+        cache.insert(key, plan.clone());
+        plan
+    }
+
+    /// How many plans have been *built* (cache misses) — the
+    /// replanning-amortization instrument.
+    pub fn plans_built(&self) -> u64 {
+        self.builds.load(Ordering::Relaxed)
+    }
+
+    /// How many distinct plans the cache currently holds.
+    pub fn cached_plans(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    /// Drop every cached plan (the build counter is preserved).
+    pub fn clear(&self) {
+        self.cache.lock().unwrap().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dmap::Dmap;
+
+    #[test]
+    fn aligned_plan_is_empty() {
+        let p = RemapPlan::build(&Dmap::block_1d(4), &Dmap::block_1d(4), &[64]);
+        assert!(p.is_aligned());
+        assert!(p.transfers().is_empty());
+        assert_eq!(p.message_count(0), 0);
+    }
+
+    #[test]
+    fn block_to_cyclic_plan_covers_and_offsets_agree() {
+        let src = Dmap::block_1d(4);
+        let dst = Dmap::cyclic_1d(4);
+        let p = RemapPlan::build(&src, &dst, &[64]);
+        assert!(!p.is_aligned());
+        let total: usize = p.transfers().iter().map(|(_, _, r)| r.len()).sum();
+        assert_eq!(total, 64);
+        // Offsets must match the partitions' own arithmetic.
+        let sp = Partition::of(&src, &[64]);
+        let dp = Partition::of(&dst, &[64]);
+        for &(s, d, r) in p.transfers() {
+            for g in r.lo..r.hi {
+                assert_eq!(sp.owner_of(g), Some(s));
+                assert_eq!(dp.owner_of(g), Some(d));
+                // Source is block: offset = g - 16*s. Dest is cyclic:
+                // offset = g / 4.
+                assert_eq!(p.src_offset(s, g), g - 16 * s);
+                assert_eq!(p.dst_offset(d, g), g / 4);
+            }
+        }
+    }
+
+    #[test]
+    fn message_count_excludes_local_copies() {
+        let p = RemapPlan::build(&Dmap::block_1d(2), &Dmap::cyclic_1d(2), &[8]);
+        let msgs: usize = (0..2).map(|pid| p.message_count(pid)).sum();
+        let crossings = p.transfers().iter().filter(|(s, d, _)| s != d).count();
+        // Each crossing counts once at the sender and once at the receiver.
+        assert_eq!(msgs, 2 * crossings);
+        assert!(crossings > 0);
+    }
+
+    #[test]
+    fn engine_builds_each_key_once() {
+        let eng = RemapEngine::new();
+        let a = Dmap::block_1d(4);
+        let b = Dmap::cyclic_1d(4);
+        let p1 = eng.plan(&a, &b, &[100]);
+        let p2 = eng.plan(&a, &b, &[100]);
+        assert!(Arc::ptr_eq(&p1, &p2), "second lookup must hit the cache");
+        assert_eq!(eng.plans_built(), 1);
+        // Any component changing is a new key.
+        eng.plan(&b, &a, &[100]);
+        eng.plan(&a, &b, &[101]);
+        assert_eq!(eng.plans_built(), 3);
+        assert_eq!(eng.cached_plans(), 3);
+        eng.clear();
+        assert_eq!(eng.cached_plans(), 0);
+        assert_eq!(eng.plans_built(), 3, "clear keeps the instrument");
+    }
+
+    #[test]
+    fn shared_engine_under_threads_builds_once() {
+        let eng = Arc::new(RemapEngine::new());
+        let hs: Vec<_> = (0..8)
+            .map(|_| {
+                let eng = eng.clone();
+                std::thread::spawn(move || {
+                    eng.plan(&Dmap::block_1d(3), &Dmap::cyclic_1d(3), &[999]);
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(eng.plans_built(), 1, "racing threads must not double-build");
+    }
+}

@@ -7,12 +7,13 @@
 //! owner (its right neighbour). Supported for 1-D block maps, the
 //! form pMatlab supports.
 
-use super::dense::Darray;
+use super::dense::DarrayT;
 use super::{DarrayError, Result};
 use crate::comm::{tags, Transport, WireReader, WireWriter};
 use crate::dmap::Dist;
+use crate::element::Element;
 
-impl Darray {
+impl<T: Element> DarrayT<T> {
     /// Refresh this PID's halo from its right neighbour. SPMD.
     pub fn sync_halo(&mut self, t: &dyn Transport, epoch: u64) -> Result<()> {
         if self.map().ndim() != 1 {
@@ -34,7 +35,7 @@ impl Darray {
         let g = self.map().grid().dim(0);
         let me = self.pid();
         let coord = self.map().coord_of(me)[0];
-        let tag = tags::HALO ^ (epoch << 8);
+        let tag = tags::pack(tags::NS_HALO, epoch, 0);
 
         // Send: my leading elements to my LEFT neighbour (they store my
         // boundary as their halo).
@@ -46,8 +47,8 @@ impl Darray {
                 let my_lo = dist.local_to_global(coord, 0, n, g);
                 let s = lo - my_lo;
                 let e = hi - my_lo;
-                let mut w = WireWriter::with_capacity(16 + 8 * (e - s));
-                w.put_f64_slice(&self.loc()[s..e]);
+                let mut w = WireWriter::with_capacity(24 + T::WIDTH * (e - s));
+                w.put_slice::<T>(&self.loc()[s..e]);
                 t.send(left, tag, &w.finish())?;
             }
         }
@@ -59,7 +60,7 @@ impl Darray {
             let owned = self.local_len();
             let halo_len = hi - lo;
             let stored = self.stored_mut();
-            rd.get_f64_into(&mut stored[owned..owned + halo_len])?;
+            rd.get_slice_into::<T>(&mut stored[owned..owned + halo_len])?;
         }
         Ok(())
     }
@@ -69,6 +70,7 @@ impl Darray {
 mod tests {
     use super::*;
     use crate::comm::ChannelHub;
+    use crate::darray::dense::Darray;
     use crate::dmap::Dmap;
     use std::thread;
 
@@ -109,6 +111,31 @@ mod tests {
         let mut a = Darray::zeros(Dmap::block_1d(1), &[8], 0);
         a.sync_halo(&t, 0).unwrap();
         assert!(t.stats().is_silent());
+    }
+
+    #[test]
+    fn halo_sync_f32() {
+        let np = 2;
+        let world = ChannelHub::world(np);
+        let mut hs = Vec::new();
+        for t in world {
+            hs.push(thread::spawn(move || {
+                let pid = t.pid();
+                let mut a = DarrayT::<f32>::from_global_fn(
+                    Dmap::block_1d_overlap(np, 1),
+                    &[8],
+                    pid,
+                    |g| g as f32,
+                );
+                a.sync_halo(&t, 0).unwrap();
+                if pid == 0 {
+                    assert_eq!(a.stored()[a.local_len()], 4.0f32);
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
     }
 
     #[test]

@@ -1,22 +1,29 @@
 //! Distributed arrays (§II "distributed array model").
 //!
-//! A [`Darray`] is the SPMD view one PID holds of a global array: the
-//! shared [`Dmap`], the global shape, and **only the local part** —
-//! exactly like the paper's Code Listings, where `Aloc`, `Bloc`,
-//! `Cloc` are the only allocations ("the distributed arrays A, B, C
-//! are never actually allocated").
+//! A [`DarrayT`] is the SPMD view one PID holds of a global array: the
+//! shared [`Dmap`](crate::dmap::Dmap), the global shape, and **only
+//! the local part** — exactly like the paper's Code Listings, where
+//! `Aloc`, `Bloc`, `Cloc` are the only allocations ("the distributed
+//! arrays A, B, C are never actually allocated"). [`Darray`] is the
+//! `f64` instantiation; the container is generic over the sealed
+//! [`Element`](crate::element::Element) dtypes (`f64`, `f32`, `i64`,
+//! `u64`).
 //!
 //! * `loc()` / `loc_mut()` — the paper's `.loc` construct: guaranteed
 //!   zero-communication access to the owned region.
 //! * Owner-computes element-wise ops (`copy_from`, `scale_from`,
 //!   `add_from`, `triad_from`, `zip2`, …) require aligned maps and are
 //!   pure local loops — the "performance guarantee" property (§IV).
-//! * Global assignment [`Darray::assign_from`] is map-independent: if
+//! * Global assignment [`DarrayT::assign_from`] is map-independent: if
 //!   the maps align it degenerates to a local copy; otherwise it runs
 //!   the remap communication plan (§IV map-independence discussion).
+//!   Iterated remaps should go through a [`RemapEngine`], which caches
+//!   the `(plan, src_offsets, dst_offsets)` triple per
+//!   `(src_map, dst_map, shape)` so replanning never repeats.
 
 pub mod agg;
 pub mod dense;
+pub mod engine;
 pub mod halo;
 pub mod ops;
 pub mod pipeline;
@@ -24,25 +31,49 @@ pub mod reduce;
 pub mod remap;
 pub mod subsref;
 
-pub use dense::Darray;
-pub use pipeline::{stage_map, StageArray};
+pub use dense::{Darray, DarrayT};
+pub use engine::{RemapEngine, RemapPlan};
+pub use pipeline::{stage_map, StageArray, StageArrayT};
 pub use reduce::{allreduce, ReduceOp};
 
-use thiserror::Error;
-
 /// Errors from distributed-array operations.
-#[derive(Debug, Error)]
+#[derive(Debug)]
 pub enum DarrayError {
-    #[error("maps are not aligned for shape {shape:?}; use assign_from (remap) instead")]
     NotAligned { shape: Vec<usize> },
-    #[error("shape mismatch: {a:?} vs {b:?}")]
     ShapeMismatch { a: Vec<usize>, b: Vec<usize> },
-    #[error("pid mismatch: {a} vs {b}")]
     PidMismatch { a: usize, b: usize },
-    #[error("communication failed: {0}")]
-    Comm(#[from] crate::comm::CommError),
-    #[error("{0}")]
+    Comm(crate::comm::CommError),
     Unsupported(String),
+}
+
+impl std::fmt::Display for DarrayError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DarrayError::NotAligned { shape } => write!(
+                f,
+                "maps are not aligned for shape {shape:?}; use assign_from (remap) instead"
+            ),
+            DarrayError::ShapeMismatch { a, b } => write!(f, "shape mismatch: {a:?} vs {b:?}"),
+            DarrayError::PidMismatch { a, b } => write!(f, "pid mismatch: {a} vs {b}"),
+            DarrayError::Comm(e) => write!(f, "communication failed: {e}"),
+            DarrayError::Unsupported(m) => f.write_str(m),
+        }
+    }
+}
+
+impl std::error::Error for DarrayError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            DarrayError::Comm(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<crate::comm::CommError> for DarrayError {
+    fn from(e: crate::comm::CommError) -> Self {
+        DarrayError::Comm(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, DarrayError>;

@@ -3,21 +3,25 @@
 //! All ops here require aligned maps and touch only `.loc` — they are
 //! the paper's "performance guarantee" path: plain loops over local
 //! memory with no hidden communication. The four STREAM ops are
-//! first-class; `zip1`/`zip2` generalize.
+//! first-class; `zip1`/`zip2` generalize. Everything is generic over
+//! the sealed [`Element`] dtypes; the scalar kernels live in
+//! [`crate::stream::ops`] so darray and raw-vector STREAM engines run
+//! the same loops.
 
-use super::dense::Darray;
+use super::dense::DarrayT;
 use super::Result;
+use crate::element::Element;
 
-impl Darray {
+impl<T: Element> DarrayT<T> {
     /// STREAM Copy: `self.loc = a.loc`.
-    pub fn copy_from(&mut self, a: &Darray) -> Result<()> {
+    pub fn copy_from(&mut self, a: &DarrayT<T>) -> Result<()> {
         self.check_aligned(a)?;
         self.loc_mut().copy_from_slice(a.loc());
         Ok(())
     }
 
     /// STREAM Scale: `self.loc = q * c.loc`.
-    pub fn scale_from(&mut self, c: &Darray, q: f64) -> Result<()> {
+    pub fn scale_from(&mut self, c: &DarrayT<T>, q: T) -> Result<()> {
         self.check_aligned(c)?;
         let dst = self.loc_mut();
         let src = c.loc();
@@ -26,7 +30,7 @@ impl Darray {
     }
 
     /// STREAM Add: `self.loc = a.loc + b.loc`.
-    pub fn add_from(&mut self, a: &Darray, b: &Darray) -> Result<()> {
+    pub fn add_from(&mut self, a: &DarrayT<T>, b: &DarrayT<T>) -> Result<()> {
         self.check_aligned(a)?;
         self.check_aligned(b)?;
         crate::stream::ops::add(self.loc_mut(), a.loc(), b.loc());
@@ -34,7 +38,7 @@ impl Darray {
     }
 
     /// STREAM Triad: `self.loc = b.loc + q * c.loc`.
-    pub fn triad_from(&mut self, b: &Darray, c: &Darray, q: f64) -> Result<()> {
+    pub fn triad_from(&mut self, b: &DarrayT<T>, c: &DarrayT<T>, q: T) -> Result<()> {
         self.check_aligned(b)?;
         self.check_aligned(c)?;
         crate::stream::ops::triad(self.loc_mut(), b.loc(), c.loc(), q);
@@ -42,7 +46,7 @@ impl Darray {
     }
 
     /// General unary owner-computes: `self.loc[i] = f(a.loc[i])`.
-    pub fn zip1(&mut self, a: &Darray, f: impl Fn(f64) -> f64) -> Result<()> {
+    pub fn zip1(&mut self, a: &DarrayT<T>, f: impl Fn(T) -> T) -> Result<()> {
         self.check_aligned(a)?;
         for (d, &s) in self.loc_mut().iter_mut().zip(a.loc()) {
             *d = f(s);
@@ -51,7 +55,7 @@ impl Darray {
     }
 
     /// General binary owner-computes: `self.loc[i] = f(a.loc[i], b.loc[i])`.
-    pub fn zip2(&mut self, a: &Darray, b: &Darray, f: impl Fn(f64, f64) -> f64) -> Result<()> {
+    pub fn zip2(&mut self, a: &DarrayT<T>, b: &DarrayT<T>, f: impl Fn(T, T) -> T) -> Result<()> {
         self.check_aligned(a)?;
         self.check_aligned(b)?;
         let dst = self.loc_mut();
@@ -61,17 +65,18 @@ impl Darray {
         Ok(())
     }
 
-    /// Local sum (building block for distributed reductions).
+    /// Local sum, widened to f64 (building block for distributed
+    /// reductions).
     pub fn local_sum(&self) -> f64 {
-        self.loc().iter().sum()
+        self.loc().iter().map(|x| x.to_f64()).sum()
     }
 
     /// Local max-abs-deviation from a constant — the validation
-    /// primitive (§III): `max_i |loc[i] - v|`.
+    /// primitive (§III): `max_i |loc[i] - v|`, computed in f64.
     pub fn local_max_abs_dev(&self, v: f64) -> f64 {
         self.loc()
             .iter()
-            .map(|&x| (x - v).abs())
+            .map(|&x| (x.to_f64() - v).abs())
             .fold(0.0, f64::max)
     }
 }
@@ -79,6 +84,7 @@ impl Darray {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::darray::dense::Darray;
     use crate::dmap::Dmap;
 
     fn abc(np: usize, pid: usize, n: usize) -> (Darray, Darray, Darray) {
@@ -134,5 +140,29 @@ mod tests {
             })
             .sum();
         assert_eq!(total, (n * (n - 1) / 2) as f64);
+    }
+
+    #[test]
+    fn f32_stream_step_stays_near_stationary() {
+        let q = std::f32::consts::SQRT_2 - 1.0;
+        let m = Dmap::block_1d(2);
+        let mut a = DarrayT::<f32>::constant(m.clone(), &[32], 0, 1.0);
+        let mut b = DarrayT::<f32>::constant(m.clone(), &[32], 0, 2.0);
+        let mut c = DarrayT::<f32>::constant(m, &[32], 0, 0.0);
+        c.copy_from(&a).unwrap();
+        b.scale_from(&c, q).unwrap();
+        c.add_from(&a, &b).unwrap();
+        a.triad_from(&b, &c, q).unwrap();
+        assert!(a.local_max_abs_dev(1.0) < 1e-6);
+    }
+
+    #[test]
+    fn integer_ops_wrap_not_panic() {
+        let m = Dmap::block_1d(1);
+        let a = DarrayT::<i64>::constant(m.clone(), &[4], 0, i64::MAX);
+        let b = DarrayT::<i64>::constant(m.clone(), &[4], 0, 1);
+        let mut c = DarrayT::<i64>::zeros(m, &[4], 0);
+        c.add_from(&a, &b).unwrap();
+        assert!(c.loc().iter().all(|&x| x == i64::MIN));
     }
 }

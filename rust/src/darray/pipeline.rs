@@ -1,17 +1,20 @@
 //! Pipeline maps — §II: "Another example are pipelines which can be
 //! implemented by mapping different arrays to different sets of PIDs."
 //!
-//! A [`StageMap`] assigns an array to a *subset* of the world's PIDs;
+//! A stage map assigns an array to a *subset* of the world's PIDs;
 //! PIDs outside the stage hold an empty local part. Moving data
-//! between stages is a [`Darray::assign_from`]-style transfer between
-//! the two subsets' partitions.
+//! between stages is exactly a remap between the two subsets'
+//! partitions, so [`StageArrayT::send_to`] executes a shared
+//! [`RemapPlan`] — and the iterated form
+//! [`StageArrayT::send_to_engine`] reuses a [`RemapEngine`]'s cache so
+//! a steady-state pipeline replans nothing.
 
-use super::dense::Darray;
+use super::dense::DarrayT;
+use super::engine::{RemapEngine, RemapPlan};
 use super::Result;
 use crate::comm::{tags, Transport, WireReader, WireWriter};
-use crate::dmap::{Dist, Dmap, Grid, Overlap, Partition, Pid};
-
-const TAG_STAGE: u64 = tags::REMAP ^ 0x5700_0000;
+use crate::dmap::{Dist, Dmap, Grid, Overlap, Pid};
+use crate::element::Element;
 
 /// Build a 1-D block map over an explicit PID subset (a pipeline
 /// stage). The world may contain many more PIDs.
@@ -27,19 +30,24 @@ pub fn stage_map(pids: &[Pid]) -> Dmap {
 
 /// One PID's view of a pipeline stage's array: participants hold
 /// their local block, non-participants hold nothing.
-pub struct StageArray {
+pub struct StageArrayT<T: Element> {
     /// `Some` iff this PID participates in the stage.
-    pub local: Option<Darray>,
+    pub local: Option<DarrayT<T>>,
     map: Dmap,
     shape: Vec<usize>,
     me: Pid,
 }
 
-impl StageArray {
+/// The classic f64 stage array.
+pub type StageArray = StageArrayT<f64>;
+
+impl<T: Element> StageArrayT<T> {
     /// Allocate the stage array on this PID (empty if not a member).
-    pub fn zeros(map: Dmap, shape: &[usize], me: Pid) -> StageArray {
-        let local = map.contains(me).then(|| Darray::zeros(map.clone(), shape, me));
-        StageArray { local, map, shape: shape.to_vec(), me }
+    pub fn zeros(map: Dmap, shape: &[usize], me: Pid) -> StageArrayT<T> {
+        let local = map
+            .contains(me)
+            .then(|| DarrayT::<T>::zeros(map.clone(), shape, me));
+        StageArrayT { local, map, shape: shape.to_vec(), me }
     }
 
     pub fn map(&self) -> &Dmap {
@@ -51,78 +59,86 @@ impl StageArray {
     }
 
     /// Transfer this stage's content into `dst` (the next stage),
-    /// across possibly disjoint PID subsets. SPMD over the **union**
-    /// of both stages' PIDs (plus any others — non-members no-op).
-    pub fn send_to(&self, dst: &mut StageArray, t: &dyn Transport, epoch: u64) -> Result<()> {
+    /// across possibly disjoint PID subsets, planning from scratch.
+    /// SPMD over the **union** of both stages' PIDs (plus any others —
+    /// non-members no-op).
+    pub fn send_to(&self, dst: &mut StageArrayT<T>, t: &dyn Transport, epoch: u64) -> Result<()> {
         assert_eq!(self.shape, dst.shape, "stage shapes must match");
-        let tag = TAG_STAGE ^ (epoch << 8);
-        let src_part = Partition::of(&self.map, &self.shape);
-        let dst_part = Partition::of(&dst.map, &self.shape);
-        let plan = src_part.transfers_to(&dst_part);
+        let plan = RemapPlan::build(&self.map, &dst.map, &self.shape);
+        self.execute_stage_plan(&plan, dst, t, epoch)
+    }
 
+    /// [`StageArrayT::send_to`] through a plan cache — the steady-state
+    /// pipeline path (plans once per `(src_map, dst_map, shape)`).
+    pub fn send_to_engine(
+        &self,
+        dst: &mut StageArrayT<T>,
+        t: &dyn Transport,
+        epoch: u64,
+        engine: &RemapEngine,
+    ) -> Result<()> {
+        assert_eq!(self.shape, dst.shape, "stage shapes must match");
+        let plan = engine.plan(&self.map, &dst.map, &self.shape);
+        self.execute_stage_plan(&plan, dst, t, epoch)
+    }
+
+    fn execute_stage_plan(
+        &self,
+        plan: &RemapPlan,
+        dst: &mut StageArrayT<T>,
+        t: &dyn Transport,
+        epoch: u64,
+    ) -> Result<()> {
+        // Identical PID subsets and distributions: pure local copy.
+        if plan.is_aligned() {
+            if let (Some(src), Some(d)) = (&self.local, &mut dst.local) {
+                d.loc_mut().copy_from_slice(src.loc());
+            }
+            return Ok(());
+        }
         // Phase 1: source members push their pieces.
         if let Some(src) = &self.local {
-            let offsets = offsets_of(&src_part, self.me);
-            for (step, &(sp, dp, r)) in plan.iter().enumerate() {
+            for (step, &(sp, dp, r)) in plan.transfers().iter().enumerate() {
                 if sp != self.me {
                     continue;
                 }
-                let s_off = lookup(&offsets, r.lo);
+                let s_off = plan.src_offset(self.me, r.lo);
                 let slice = &src.loc()[s_off..s_off + r.len()];
                 if dp == self.me {
                     if let Some(d) = &mut dst.local {
-                        let d_off = lookup(&offsets_of(&dst_part, self.me), r.lo);
+                        let d_off = plan.dst_offset(self.me, r.lo);
                         d.loc_mut()[d_off..d_off + r.len()].copy_from_slice(slice);
                     }
                 } else {
-                    let mut w = WireWriter::with_capacity(16 + 8 * r.len());
+                    let mut w = WireWriter::with_capacity(24 + T::WIDTH * r.len());
                     w.put_u64(step as u64);
-                    w.put_f64_slice(slice);
-                    t.send(dp, tag ^ step as u64, &w.finish())?;
+                    w.put_slice::<T>(slice);
+                    t.send(dp, tags::pack(tags::NS_STAGE, epoch, step as u64), &w.finish())?;
                 }
             }
         }
         // Phase 2: destination members pull their pieces.
         if let Some(d) = &mut dst.local {
-            let offsets = offsets_of(&dst_part, self.me);
-            for (step, &(sp, dp, r)) in plan.iter().enumerate() {
+            for (step, &(sp, dp, r)) in plan.transfers().iter().enumerate() {
                 if dp != self.me || sp == self.me {
                     continue;
                 }
-                let payload = t.recv(sp, tag ^ step as u64)?;
+                let payload = t.recv(sp, tags::pack(tags::NS_STAGE, epoch, step as u64))?;
                 let mut rd = WireReader::new(&payload);
                 let _step = rd.get_u64()?;
-                let d_off = lookup(&offsets, r.lo);
-                rd.get_f64_into(&mut d.loc_mut()[d_off..d_off + r.len()])?;
+                let d_off = plan.dst_offset(self.me, r.lo);
+                rd.get_slice_into::<T>(&mut d.loc_mut()[d_off..d_off + r.len()])?;
             }
         }
         Ok(())
     }
 }
 
-fn offsets_of(p: &Partition, pid: Pid) -> Vec<(usize, usize, usize)> {
-    let mut out = Vec::new();
-    let mut off = 0usize;
-    for r in p.ranges_of(pid) {
-        out.push((r.lo, r.len(), off));
-        off += r.len();
-    }
-    out
-}
-
-fn lookup(table: &[(usize, usize, usize)], g: usize) -> usize {
-    for &(lo, len, off) in table {
-        if g >= lo && g < lo + len {
-            return off + (g - lo);
-        }
-    }
-    panic!("global index {g} not owned");
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::comm::ChannelHub;
+    use std::sync::Arc;
     use std::thread;
 
     /// Two-stage pipeline over a 4-PID world: stage A on {0,1},
@@ -220,5 +236,53 @@ mod tests {
         let m = stage_map(&[5, 9]);
         assert!(m.contains(5) && m.contains(9) && !m.contains(0));
         assert_eq!(m.np(), 2);
+    }
+
+    /// An iterated f32 pipeline through a shared engine plans once per
+    /// hop direction and keeps the data exact.
+    #[test]
+    fn iterated_pipeline_plans_once_per_hop() {
+        let np = 4;
+        let n = 640;
+        let iters = 5u64;
+        let engine = Arc::new(RemapEngine::new());
+        let world = ChannelHub::world(np);
+        let hs: Vec<_> = world
+            .into_iter()
+            .map(|t| {
+                let engine = engine.clone();
+                thread::spawn(move || {
+                    let me = t.pid();
+                    let m_a = stage_map(&[0, 1]);
+                    let m_b = stage_map(&[2, 3]);
+                    for it in 0..iters {
+                        let mut a = StageArrayT::<f32>::zeros(m_a.clone(), &[n], me);
+                        let mut b = StageArrayT::<f32>::zeros(m_b.clone(), &[n], me);
+                        if let Some(arr) = &mut a.local {
+                            let part = crate::dmap::Partition::of(arr.map(), &[n]);
+                            let mut off = 0;
+                            for r in part.ranges_of(me) {
+                                for g in r.lo..r.hi {
+                                    arr.loc_mut()[off] = (g + it as usize) as f32;
+                                    off += 1;
+                                }
+                            }
+                        }
+                        a.send_to_engine(&mut b, &t, it, &engine).unwrap();
+                        if let Some(arr) = &b.local {
+                            for g in (0..n).step_by(13) {
+                                if let Some(v) = arr.global_get(g) {
+                                    assert_eq!(v, (g + it as usize) as f32);
+                                }
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(engine.plans_built(), 1, "one hop key, one plan");
     }
 }

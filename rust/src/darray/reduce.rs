@@ -6,11 +6,10 @@
 //! result back** so the call is collective and every PID returns the
 //! same value (matching pMatlab semantics).
 
-use super::dense::Darray;
+use super::dense::DarrayT;
 use super::Result;
 use crate::comm::{tags, Transport, WireReader, WireWriter};
-
-const TAG_RED: u64 = tags::AGG ^ 0x5E00_0000;
+use crate::element::Element;
 
 /// A binary reduction operator over f64.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -42,7 +41,7 @@ impl ReduceOp {
 
 /// Collective scalar reduction over all PIDs of a map. SPMD.
 pub fn allreduce(t: &dyn Transport, local: f64, op: ReduceOp, epoch: u64) -> Result<f64> {
-    let tag = TAG_RED ^ (epoch << 8);
+    let tag = tags::pack(tags::NS_REDUCE, epoch, 0);
     let np = t.np();
     if np == 1 {
         return Ok(local);
@@ -70,39 +69,48 @@ pub fn allreduce(t: &dyn Transport, local: f64, op: ReduceOp, epoch: u64) -> Res
     }
 }
 
-impl Darray {
-    /// Global sum: `sum(A(:))`. Collective.
+impl<T: Element> DarrayT<T> {
+    /// Global sum: `sum(A(:))`, widened to f64. Collective.
     pub fn global_sum(&self, t: &dyn Transport, epoch: u64) -> Result<f64> {
-        allreduce(t, self.loc().iter().sum(), ReduceOp::Sum, epoch)
+        allreduce(t, self.local_sum(), ReduceOp::Sum, epoch)
     }
 
-    /// Global minimum. Collective.
+    /// Global minimum (f64). Collective.
     pub fn global_min(&self, t: &dyn Transport, epoch: u64) -> Result<f64> {
-        let local = self.loc().iter().copied().fold(f64::INFINITY, f64::min);
+        let local = self
+            .loc()
+            .iter()
+            .map(|x| x.to_f64())
+            .fold(f64::INFINITY, f64::min);
         allreduce(t, local, ReduceOp::Min, epoch)
     }
 
-    /// Global maximum. Collective.
+    /// Global maximum (f64). Collective.
     pub fn global_max(&self, t: &dyn Transport, epoch: u64) -> Result<f64> {
-        let local = self.loc().iter().copied().fold(f64::NEG_INFINITY, f64::max);
+        let local = self
+            .loc()
+            .iter()
+            .map(|x| x.to_f64())
+            .fold(f64::NEG_INFINITY, f64::max);
         allreduce(t, local, ReduceOp::Max, epoch)
     }
 
-    /// Global dot product `A(:)' * B(:)` (maps must align). Collective.
-    pub fn global_dot(&self, other: &Darray, t: &dyn Transport, epoch: u64) -> Result<f64> {
+    /// Global dot product `A(:)' * B(:)` in f64 (maps must align).
+    /// Collective.
+    pub fn global_dot(&self, other: &DarrayT<T>, t: &dyn Transport, epoch: u64) -> Result<f64> {
         self.check_aligned(other)?;
         let local: f64 = self
             .loc()
             .iter()
             .zip(other.loc())
-            .map(|(a, b)| a * b)
+            .map(|(a, b)| a.to_f64() * b.to_f64())
             .sum();
         allreduce(t, local, ReduceOp::Sum, epoch)
     }
 
-    /// Global 2-norm `‖A(:)‖₂`. Collective.
+    /// Global 2-norm `‖A(:)‖₂` in f64. Collective.
     pub fn global_norm2(&self, t: &dyn Transport, epoch: u64) -> Result<f64> {
-        let local: f64 = self.loc().iter().map(|x| x * x).sum();
+        let local: f64 = self.loc().iter().map(|x| x.to_f64() * x.to_f64()).sum();
         Ok(allreduce(t, local, ReduceOp::Sum, epoch)?.sqrt())
     }
 }
@@ -111,6 +119,7 @@ impl Darray {
 mod tests {
     use super::*;
     use crate::comm::ChannelHub;
+    use crate::darray::dense::Darray;
     use crate::dmap::Dmap;
     use std::thread;
 
@@ -194,5 +203,18 @@ mod tests {
             assert_eq!(a.global_sum(t, 0).unwrap(), 21.0);
             assert!(t.stats().is_silent());
         });
+    }
+
+    #[test]
+    fn typed_reductions_widen_to_f64() {
+        let sums = spmd(3, |pid, t| {
+            let a = DarrayT::<i64>::from_global_fn(Dmap::cyclic_1d(3), &[100], pid, |g| g as i64);
+            let f = DarrayT::<f32>::from_global_fn(Dmap::block_1d(3), &[100], pid, |_| 0.5f32);
+            (a.global_sum(t, 6).unwrap(), f.global_sum(t, 7).unwrap())
+        });
+        for (i_sum, f_sum) in sums {
+            assert_eq!(i_sum, 4950.0);
+            assert_eq!(f_sum, 50.0);
+        }
     }
 }

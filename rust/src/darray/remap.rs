@@ -3,113 +3,144 @@
 //! correctly regardless of the map. However, if A and C had different
 //! maps, then significant communication would be required."
 //!
-//! [`Darray::assign_from`] implements exactly that: aligned maps
+//! [`DarrayT::assign_from`] implements exactly that: aligned maps
 //! degenerate to a local memcpy (zero messages — asserted by tests);
-//! mismatched maps execute the [`Partition::transfers_to`] plan over
-//! the transport. SPMD: every participating PID calls this with its
-//! own endpoint; the plan is deterministic so no coordination is
-//! needed beyond the data messages themselves.
+//! mismatched maps execute a [`RemapPlan`] over the transport. SPMD:
+//! every participating PID calls this with its own endpoint; the plan
+//! is deterministic so no coordination is needed beyond the data
+//! messages themselves.
+//!
+//! Planning is delegated to [`crate::darray::engine`]: `assign_from`
+//! builds a one-shot plan, [`DarrayT::assign_from_engine`] reuses a
+//! cached one — iterated remaps (pipelines, alternating layouts) plan
+//! exactly once per `(src_map, dst_map, shape)`.
 
-use super::dense::Darray;
+use super::dense::DarrayT;
+use super::engine::{RemapEngine, RemapPlan};
 use super::Result;
 use crate::comm::{tags, Transport, WireReader, WireWriter};
-use crate::dmap::{Partition, Pid};
+use crate::dmap::Pid;
+use crate::element::Element;
 
-impl Darray {
-    /// Global assignment `self(:) = src(:)` for any pair of maps.
+impl<T: Element> DarrayT<T> {
+    /// Global assignment `self(:) = src(:)` for any pair of maps,
+    /// planning from scratch.
     ///
     /// `epoch` disambiguates concurrent remaps (like a barrier epoch).
-    pub fn assign_from(&mut self, src: &Darray, t: &dyn Transport, epoch: u64) -> Result<()> {
+    pub fn assign_from(&mut self, src: &DarrayT<T>, t: &dyn Transport, epoch: u64) -> Result<()> {
+        self.check_assign_shapes(src)?;
+        let plan = RemapPlan::build(src.map(), self.map(), self.shape());
+        self.execute_remap(&plan, src, t, epoch)
+    }
+
+    /// Global assignment through a plan cache: the first call for a
+    /// given `(src_map, dst_map, shape)` plans, every later call moves
+    /// data only. Each call pays one cache lookup (a mutex + key
+    /// clone); the tightest loops can hoist the `Arc<RemapPlan>` once
+    /// and use [`DarrayT::assign_from_plan`] instead.
+    pub fn assign_from_engine(
+        &mut self,
+        src: &DarrayT<T>,
+        t: &dyn Transport,
+        epoch: u64,
+        engine: &RemapEngine,
+    ) -> Result<()> {
+        self.check_assign_shapes(src)?;
+        let plan = engine.plan(src.map(), self.map(), self.shape());
+        self.execute_remap(&plan, src, t, epoch)
+    }
+
+    /// Global assignment executing a prebuilt plan — the zero-lookup
+    /// hot path for iterated remaps (`engine.plan(..)` once, then this
+    /// per iteration). The plan MUST have been built for
+    /// `(src.map(), self.map(), shape)`; offset-table mismatches panic
+    /// rather than corrupt.
+    pub fn assign_from_plan(
+        &mut self,
+        src: &DarrayT<T>,
+        t: &dyn Transport,
+        epoch: u64,
+        plan: &RemapPlan,
+    ) -> Result<()> {
+        self.check_assign_shapes(src)?;
+        self.execute_remap(plan, src, t, epoch)
+    }
+
+    fn check_assign_shapes(&self, src: &DarrayT<T>) -> Result<()> {
         if self.shape() != src.shape() {
             return Err(super::DarrayError::ShapeMismatch {
                 a: self.shape().to_vec(),
                 b: src.shape().to_vec(),
             });
         }
+        Ok(())
+    }
+
+    /// Execute a prebuilt remap plan: local pieces copy, remote pieces
+    /// travel as one typed message per plan step.
+    fn execute_remap(
+        &mut self,
+        plan: &RemapPlan,
+        src: &DarrayT<T>,
+        t: &dyn Transport,
+        epoch: u64,
+    ) -> Result<()> {
         // Fast path: aligned maps → pure local copy, zero messages.
-        if self.map().aligned_with(src.map(), &self.shape().to_vec()) {
+        if plan.is_aligned() {
             self.loc_mut().copy_from_slice(src.loc());
             return Ok(());
         }
         let me: Pid = self.pid();
-        let shape = self.shape().to_vec();
-        let src_part = Partition::of(src.map(), &shape);
-        let dst_part = Partition::of(self.map(), &shape);
-        let plan = src_part.transfers_to(&dst_part);
-        let tag_base = tags::REMAP ^ (epoch << 32);
-
-        // Local offsets: flattened-global-range → local offset tables.
-        let src_offsets = local_offsets(&src_part, me);
-        let dst_offsets = local_offsets(&dst_part, me);
 
         // Phase 1: satisfy local pieces + send outgoing pieces.
         // One message per (src=me, dst≠me) plan step, tagged by step
         // index so ordering is deterministic on both sides.
-        for (step, &(sp, dp, r)) in plan.iter().enumerate() {
+        for (step, &(sp, dp, r)) in plan.transfers().iter().enumerate() {
             if sp != me {
                 continue;
             }
-            let s_off = offset_in(&src_offsets, r.lo);
+            let s_off = plan.src_offset(me, r.lo);
             let src_slice = &src.loc()[s_off..s_off + r.len()];
             if dp == me {
-                let d_off = offset_in(&dst_offsets, r.lo);
+                let d_off = plan.dst_offset(me, r.lo);
                 self.loc_mut()[d_off..d_off + r.len()].copy_from_slice(src_slice);
             } else {
-                let mut w = WireWriter::with_capacity(16 + 8 * r.len());
+                let mut w = WireWriter::with_capacity(24 + T::WIDTH * r.len());
                 w.put_u64(step as u64);
-                w.put_f64_slice(src_slice);
-                t.send(dp, tag_base ^ (step as u64), &w.finish())?;
+                w.put_slice::<T>(src_slice);
+                t.send(dp, tags::pack(tags::NS_REMAP, epoch, step as u64), &w.finish())?;
             }
         }
         // Phase 2: receive incoming pieces.
-        for (step, &(sp, dp, r)) in plan.iter().enumerate() {
+        for (step, &(sp, dp, r)) in plan.transfers().iter().enumerate() {
             if dp != me || sp == me {
                 continue;
             }
-            let payload = t.recv(sp, tag_base ^ (step as u64))?;
+            let payload = t.recv(sp, tags::pack(tags::NS_REMAP, epoch, step as u64))?;
             let mut rd = WireReader::new(&payload);
             let got_step = rd.get_u64()?;
             debug_assert_eq!(got_step as usize, step);
-            let d_off = offset_in(&dst_offsets, r.lo);
+            let d_off = plan.dst_offset(me, r.lo);
             let dst = &mut self.loc_mut()[d_off..d_off + r.len()];
-            rd.get_f64_into(dst)?;
+            rd.get_slice_into::<T>(dst)?;
         }
         Ok(())
     }
-}
-
-/// (range_start, range_len, local_offset) table for one PID.
-fn local_offsets(p: &Partition, pid: Pid) -> Vec<(usize, usize, usize)> {
-    let mut out = Vec::new();
-    let mut off = 0usize;
-    for r in p.ranges_of(pid) {
-        out.push((r.lo, r.len(), off));
-        off += r.len();
-    }
-    out
-}
-
-/// Local offset of flattened global index `g` given the offset table.
-fn offset_in(table: &[(usize, usize, usize)], g: usize) -> usize {
-    for &(lo, len, off) in table {
-        if g >= lo && g < lo + len {
-            return off + (g - lo);
-        }
-    }
-    panic!("global index {g} not owned (plan/offset table mismatch)");
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::comm::ChannelHub;
+    use crate::darray::dense::Darray;
     use crate::dmap::Dmap;
+    use std::sync::Arc;
     use std::thread;
 
     /// SPMD helper: run `f(pid, transport)` on np threads.
     fn spmd(np: usize, f: impl Fn(usize, &dyn Transport) + Send + Sync + 'static) {
         let world = ChannelHub::world(np);
-        let f = std::sync::Arc::new(f);
+        let f = Arc::new(f);
         let mut hs = Vec::new();
         for t in world {
             let f = f.clone();
@@ -171,6 +202,100 @@ mod tests {
                 assert_eq!(dst.global_get(g), Some(g as f64));
             }
         });
+    }
+
+    #[test]
+    fn typed_remaps_roundtrip_f32_and_i64() {
+        spmd(3, |pid, t| {
+            let src =
+                DarrayT::<f32>::from_global_fn(Dmap::block_1d(3), &[40], pid, |g| g as f32 * 0.5);
+            let mut dst = DarrayT::<f32>::zeros(Dmap::cyclic_1d(3), &[40], pid);
+            dst.assign_from(&src, t, 4).unwrap();
+            for g in 0..40 {
+                if let Some(v) = dst.global_get(g) {
+                    assert_eq!(v, g as f32 * 0.5);
+                }
+            }
+            let src =
+                DarrayT::<i64>::from_global_fn(Dmap::cyclic_1d(3), &[33], pid, |g| -(g as i64));
+            let mut dst = DarrayT::<i64>::zeros(Dmap::block_1d(3), &[33], pid);
+            dst.assign_from(&src, t, 5).unwrap();
+            for g in 0..33 {
+                if let Some(v) = dst.global_get(g) {
+                    assert_eq!(v, -(g as i64));
+                }
+            }
+        });
+    }
+
+    /// The hoisted hot path: fetch the Arc once, execute many times
+    /// with zero cache lookups.
+    #[test]
+    fn hoisted_plan_execution_matches_engine_path() {
+        let np = 3;
+        let n = 90;
+        let engine = Arc::new(RemapEngine::new());
+        let world = ChannelHub::world(np);
+        let mut hs = Vec::new();
+        for t in world {
+            let engine = engine.clone();
+            hs.push(thread::spawn(move || {
+                let pid = t.pid();
+                let src = Darray::from_global_fn(Dmap::cyclic_1d(np), &[n], pid, |g| g as f64);
+                let mut dst = Darray::zeros(Dmap::block_1d(np), &[n], pid);
+                let plan = engine.plan(src.map(), dst.map(), &[n]);
+                for epoch in 0..4 {
+                    dst.fill(-1.0);
+                    dst.assign_from_plan(&src, &t, epoch, &plan).unwrap();
+                }
+                for g in 0..n {
+                    if let Some(v) = dst.global_get(g) {
+                        assert_eq!(v, g as f64);
+                    }
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(engine.plans_built(), 1);
+    }
+
+    /// The acceptance-criterion property: iterated remaps through a
+    /// shared engine plan exactly once per direction.
+    #[test]
+    fn engine_plans_once_across_iterated_assigns() {
+        let np = 4;
+        let n = 256;
+        let iters = 6u64;
+        let engine = Arc::new(RemapEngine::new());
+        let world = ChannelHub::world(np);
+        let mut hs = Vec::new();
+        for t in world {
+            let engine = engine.clone();
+            hs.push(thread::spawn(move || {
+                let pid = t.pid();
+                let src = Darray::from_global_fn(Dmap::block_1d(np), &[n], pid, |g| g as f64);
+                let mut dst = Darray::zeros(Dmap::cyclic_1d(np), &[n], pid);
+                for epoch in 0..iters {
+                    dst.fill(0.0);
+                    dst.assign_from_engine(&src, &t, epoch, &engine).unwrap();
+                }
+                for g in 0..n {
+                    if let Some(v) = dst.global_get(g) {
+                        assert_eq!(v, g as f64);
+                    }
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            engine.plans_built(),
+            1,
+            "one (src,dst,shape) key must plan exactly once across {iters} iterations × {np} PIDs"
+        );
     }
 
     use crate::comm::Transport;

@@ -7,14 +7,13 @@
 //! communicate — the cost the `.loc` discipline avoids on the hot
 //! path.
 
-use super::dense::Darray;
+use super::dense::DarrayT;
 use super::Result;
 use crate::comm::{tags, Transport, WireReader, WireWriter};
 use crate::dmap::Partition;
+use crate::element::Element;
 
-const TAG_GETR: u64 = tags::AGG ^ 0x6E70_0000;
-
-impl Darray {
+impl<T: Element> DarrayT<T> {
     /// Collective read of the global range `[lo, hi)` (flattened
     /// row-major): every PID returns the same dense vector.
     ///
@@ -26,14 +25,14 @@ impl Darray {
         hi: usize,
         t: &dyn Transport,
         epoch: u64,
-    ) -> Result<Vec<f64>> {
+    ) -> Result<Vec<T>> {
         assert!(lo <= hi && hi <= self.global_len(), "range out of bounds");
-        let tag = TAG_GETR ^ (epoch << 8);
+        let tag = tags::pack(tags::NS_GATHER, epoch, 0);
         let me = self.pid();
         let part = Partition::of(self.map(), &self.shape().to_vec());
 
         // Every PID extracts its overlap with [lo, hi).
-        let mut mine: Vec<(usize, Vec<f64>)> = Vec::new();
+        let mut mine: Vec<(usize, Vec<T>)> = Vec::new();
         let mut off = 0usize;
         for r in part.ranges_of(me) {
             let s = r.lo.max(lo);
@@ -46,7 +45,7 @@ impl Darray {
         }
 
         if me == 0 {
-            let mut out = vec![0.0f64; hi - lo];
+            let mut out = vec![T::ZERO; hi - lo];
             for (s, chunk) in &mine {
                 out[s - lo..s - lo + chunk.len()].copy_from_slice(chunk);
             }
@@ -59,13 +58,13 @@ impl Darray {
                 let npieces = rd.get_usize()?;
                 for _ in 0..npieces {
                     let s = rd.get_usize()?;
-                    let chunk = rd.get_f64_vec()?;
+                    let chunk = rd.get_vec::<T>()?;
                     out[s - lo..s - lo + chunk.len()].copy_from_slice(&chunk);
                 }
             }
             // Broadcast the assembled range.
-            let mut w = WireWriter::with_capacity(16 + 8 * out.len());
-            w.put_f64_slice(&out);
+            let mut w = WireWriter::with_capacity(24 + T::WIDTH * out.len());
+            w.put_slice::<T>(&out);
             let bytes = w.finish();
             for &pid in self.map().pids() {
                 if pid != 0 {
@@ -78,11 +77,11 @@ impl Darray {
             w.put_usize(mine.len());
             for (s, chunk) in &mine {
                 w.put_usize(*s);
-                w.put_f64_slice(chunk);
+                w.put_slice::<T>(chunk);
             }
             t.send(0, tag, &w.finish())?;
             let payload = t.recv(0, tag)?;
-            Ok(WireReader::new(&payload).get_f64_vec()?)
+            Ok(WireReader::new(&payload).get_vec::<T>()?)
         }
     }
 
@@ -90,7 +89,7 @@ impl Darray {
     /// `values` (covering `[lo, hi)`) that it owns. No communication —
     /// every PID is handed the full value vector (pMatlab's
     /// `subsasgn` with a replicated right-hand side).
-    pub fn scatter_range(&mut self, lo: usize, values: &[f64]) -> Result<()> {
+    pub fn scatter_range(&mut self, lo: usize, values: &[T]) -> Result<()> {
         let hi = lo + values.len();
         assert!(hi <= self.global_len(), "range out of bounds");
         let me = self.pid();
@@ -114,6 +113,7 @@ impl Darray {
 mod tests {
     use super::*;
     use crate::comm::ChannelHub;
+    use crate::darray::dense::Darray;
     use crate::dmap::Dmap;
     use std::thread;
 
@@ -177,6 +177,17 @@ mod tests {
             for (i, x) in v.iter().enumerate() {
                 assert_eq!(*x, (i * i) as f64);
             }
+        }
+    }
+
+    #[test]
+    fn typed_gather_range_i64() {
+        let out = spmd(3, |pid, t| {
+            let a = DarrayT::<i64>::from_global_fn(Dmap::cyclic_1d(3), &[30], pid, |g| g as i64);
+            a.gather_range(7, 23, t, 4).unwrap()
+        });
+        for v in out {
+            assert_eq!(v, (7i64..23).collect::<Vec<_>>());
         }
     }
 }

@@ -11,7 +11,7 @@ use super::Pid;
 /// The map is *shape-agnostic*: it is combined with a concrete global
 /// shape at use time (matching pMatlab, where the same map object can
 /// describe arrays of different sizes).
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct Dmap {
     grid: Grid,
     dists: Vec<Dist>,

@@ -1,0 +1,307 @@
+//! The [`Element`] trait — the scalar axis of the distributed-array
+//! stack.
+//!
+//! The paper's distributed-array model is *dtype-independent*: the map
+//! algebra, the owner-computes rule, and the remap planner all operate
+//! on index sets, never on values. What the element type does control
+//! is **bytes per element**, and bytes are the whole story for a
+//! bandwidth benchmark: STREAM in `f32` moves half the bytes per
+//! element of `f64`, so at equal bytes/second it streams ~2× the
+//! elements/second (§III bytes-per-iteration formulas with width
+//! `W = T::WIDTH`: Copy/Scale move `2·W·N` bytes, Add/Triad `3·W·N`).
+//!
+//! [`Element`] is a **sealed** trait implemented for exactly `f64`,
+//! `f32`, `i64`, and `u64`. It supplies:
+//!
+//! * the algebra STREAM needs (`ZERO`/`ONE`, [`Element::add`],
+//!   [`Element::mul`]) — wrapping for the integer types so debug
+//!   builds cannot panic on overflow;
+//! * the wire contract ([`Element::write_le`] / [`Element::read_le`]
+//!   and `WIDTH`), used by the typed codec
+//!   (`WireWriter::put_slice::<T>` / `WireReader::get_slice_into::<T>`);
+//! * f64 round-trips (`from_f64`/`to_f64`) for validation and
+//!   reductions, plus a per-iteration validation tolerance
+//!   (`TOL_BASE`) scaled to the type's roundoff;
+//! * a runtime [`Dtype`] token for CLI flags, config files, and wire
+//!   payload self-description.
+//!
+//! Sealing keeps the wire format and the remap engine's payload
+//! assumptions closed: a foreign impl cannot introduce an unknown
+//! width or encoding.
+
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f64 {}
+    impl Sealed for f32 {}
+    impl Sealed for i64 {}
+    impl Sealed for u64 {}
+}
+
+/// Runtime identifier for an [`Element`] type — the `--dtype` axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    F64,
+    I64,
+    U64,
+}
+
+impl Dtype {
+    /// Parse a CLI/config spelling (`f32`, `f64`, `i64`, `u64`).
+    pub fn parse(s: &str) -> Option<Dtype> {
+        match s {
+            "f32" => Some(Dtype::F32),
+            "f64" => Some(Dtype::F64),
+            "i64" => Some(Dtype::I64),
+            "u64" => Some(Dtype::U64),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dtype::F32 => "f32",
+            Dtype::F64 => "f64",
+            Dtype::I64 => "i64",
+            Dtype::U64 => "u64",
+        }
+    }
+
+    /// Bytes per element.
+    pub fn width(&self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F64 | Dtype::I64 | Dtype::U64 => 8,
+        }
+    }
+
+    /// Stable wire code (payload self-description).
+    pub fn code(&self) -> u8 {
+        match self {
+            Dtype::F32 => 0,
+            Dtype::F64 => 1,
+            Dtype::I64 => 2,
+            Dtype::U64 => 3,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<Dtype> {
+        match c {
+            0 => Some(Dtype::F32),
+            1 => Some(Dtype::F64),
+            2 => Some(Dtype::I64),
+            3 => Some(Dtype::U64),
+            _ => None,
+        }
+    }
+
+    /// Is STREAM meaningful for this dtype? The §III recurrence needs
+    /// a real `q` with `2q + q² = 1`; integer dtypes are remap/storage
+    /// dtypes only.
+    pub fn is_float(&self) -> bool {
+        matches!(self, Dtype::F32 | Dtype::F64)
+    }
+}
+
+impl std::fmt::Display for Dtype {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A scalar that can live in a distributed array: fixed width,
+/// little-endian wire encoding, and just enough algebra for the
+/// owner-computes kernels. Sealed — see the module docs.
+pub trait Element:
+    sealed::Sealed + Copy + Default + PartialEq + Send + Sync + std::fmt::Debug + 'static
+{
+    /// Additive identity (STREAM `C0`).
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Bytes per element, in memory and on the wire.
+    const WIDTH: usize;
+    /// Runtime dtype token.
+    const DTYPE: Dtype;
+    /// Per-iteration closed-form validation tolerance (§III checks).
+    /// Scaled by the iteration count; zero for exact (integer) types.
+    const TOL_BASE: f64;
+
+    /// `a + b` (wrapping for integer types).
+    fn add(a: Self, b: Self) -> Self;
+    /// `a * b` (wrapping for integer types).
+    fn mul(a: Self, b: Self) -> Self;
+
+    /// Nearest representable value to `v` (used for constants like the
+    /// STREAM `q` and for test data generation).
+    fn from_f64(v: f64) -> Self;
+    /// Widen to f64 (reductions, validation).
+    fn to_f64(self) -> f64;
+
+    /// Append this value's little-endian bytes to `buf`.
+    fn write_le(self, buf: &mut Vec<u8>);
+    /// Decode from exactly [`Element::WIDTH`] little-endian bytes.
+    fn read_le(bytes: &[u8]) -> Self;
+
+    /// STREAM Triad fused form `b + q·c` — one definition so every
+    /// engine (serial, darray, threaded) computes identically.
+    #[inline]
+    fn triad(b: Self, q: Self, c: Self) -> Self {
+        Self::add(b, Self::mul(q, c))
+    }
+}
+
+macro_rules! element_float {
+    ($t:ty, $dtype:expr, $width:expr, $tol:expr) => {
+        impl Element for $t {
+            const ZERO: Self = 0.0;
+            const ONE: Self = 1.0;
+            const WIDTH: usize = $width;
+            const DTYPE: Dtype = $dtype;
+            const TOL_BASE: f64 = $tol;
+
+            #[inline]
+            fn add(a: Self, b: Self) -> Self {
+                a + b
+            }
+
+            #[inline]
+            fn mul(a: Self, b: Self) -> Self {
+                a * b
+            }
+
+            #[inline]
+            fn from_f64(v: f64) -> Self {
+                v as $t
+            }
+
+            #[inline]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+
+            #[inline]
+            fn write_le(self, buf: &mut Vec<u8>) {
+                buf.extend_from_slice(&self.to_le_bytes());
+            }
+
+            #[inline]
+            fn read_le(bytes: &[u8]) -> Self {
+                <$t>::from_le_bytes(bytes.try_into().expect("exactly WIDTH bytes"))
+            }
+        }
+    };
+}
+
+macro_rules! element_int {
+    ($t:ty, $dtype:expr) => {
+        impl Element for $t {
+            const ZERO: Self = 0;
+            const ONE: Self = 1;
+            const WIDTH: usize = 8;
+            const DTYPE: Dtype = $dtype;
+            const TOL_BASE: f64 = 0.0; // integer arithmetic is exact
+
+            #[inline]
+            fn add(a: Self, b: Self) -> Self {
+                a.wrapping_add(b)
+            }
+
+            #[inline]
+            fn mul(a: Self, b: Self) -> Self {
+                a.wrapping_mul(b)
+            }
+
+            #[inline]
+            fn from_f64(v: f64) -> Self {
+                v as $t
+            }
+
+            #[inline]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+
+            #[inline]
+            fn write_le(self, buf: &mut Vec<u8>) {
+                buf.extend_from_slice(&self.to_le_bytes());
+            }
+
+            #[inline]
+            fn read_le(bytes: &[u8]) -> Self {
+                <$t>::from_le_bytes(bytes.try_into().expect("exactly WIDTH bytes"))
+            }
+        }
+    };
+}
+
+// f64: the classic STREAM dtype; 1e-13/iter matches the historical
+// tolerance of the §III checks. f32: ~eps·ulp-growth per iteration,
+// 1e-5/iter gives ample slack while still catching real corruption
+// (a single flipped mantissa bit at magnitude 1 is ~1e-7 · 2^k).
+element_float!(f64, Dtype::F64, 8, 1e-13);
+element_float!(f32, Dtype::F32, 4, 1e-5);
+element_int!(i64, Dtype::I64);
+element_int!(u64, Dtype::U64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Element>(vals: &[T]) {
+        let mut buf = Vec::new();
+        for &v in vals {
+            v.write_le(&mut buf);
+        }
+        assert_eq!(buf.len(), vals.len() * T::WIDTH);
+        for (i, &v) in vals.iter().enumerate() {
+            let got = T::read_le(&buf[i * T::WIDTH..(i + 1) * T::WIDTH]);
+            assert_eq!(got, v);
+        }
+    }
+
+    #[test]
+    fn wire_roundtrips_all_dtypes() {
+        roundtrip(&[0.0f64, -1.5, std::f64::consts::PI, f64::MAX]);
+        roundtrip(&[0.0f32, -1.5, std::f32::consts::E, f32::MIN_POSITIVE]);
+        roundtrip(&[0i64, -42, i64::MAX, i64::MIN]);
+        roundtrip(&[0u64, 42, u64::MAX]);
+    }
+
+    #[test]
+    fn widths_match_dtype() {
+        assert_eq!(<f32 as Element>::WIDTH, Dtype::F32.width());
+        assert_eq!(<f64 as Element>::WIDTH, Dtype::F64.width());
+        assert_eq!(<i64 as Element>::WIDTH, Dtype::I64.width());
+        assert_eq!(<u64 as Element>::WIDTH, Dtype::U64.width());
+    }
+
+    #[test]
+    fn dtype_parse_name_code_roundtrip() {
+        for d in [Dtype::F32, Dtype::F64, Dtype::I64, Dtype::U64] {
+            assert_eq!(Dtype::parse(d.name()), Some(d));
+            assert_eq!(Dtype::from_code(d.code()), Some(d));
+        }
+        assert_eq!(Dtype::parse("f16"), None);
+        assert_eq!(Dtype::from_code(9), None);
+    }
+
+    #[test]
+    fn integer_ops_wrap_instead_of_panicking() {
+        assert_eq!(i64::add(i64::MAX, 1), i64::MIN);
+        assert_eq!(u64::mul(u64::MAX, 2), u64::MAX - 1);
+    }
+
+    #[test]
+    fn triad_matches_definition() {
+        let q = 0.5f64;
+        assert_eq!(f64::triad(2.0, q, 4.0), 4.0);
+        assert_eq!(i64::triad(2, 3, 4), 14);
+    }
+
+    #[test]
+    fn float_dtypes_only_for_stream() {
+        assert!(Dtype::F32.is_float() && Dtype::F64.is_float());
+        assert!(!Dtype::I64.is_float() && !Dtype::U64.is_float());
+    }
+}

@@ -96,6 +96,7 @@ pub fn simulate_stream(node: &NodeModel, params: &StreamParams, lang: Lang) -> S
         n_global: n_local * node.nppn,
         n_local,
         nt,
+        width: 8,
         times,
         // The simulated engine runs no arithmetic; validation is
         // vacuously exact (the real engines actually check).

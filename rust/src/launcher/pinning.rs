@@ -67,18 +67,24 @@ pub fn online_cores() -> usize {
 
 #[cfg(target_os = "linux")]
 fn apply_affinity(cores: &[usize]) -> bool {
+    // Hand-rolled `cpu_set_t` (the crate is dependency-free, so no
+    // libc binding): glibc's set is 1024 bits; the kernel accepts any
+    // size as long as the set bits fit.
+    const SET_BITS: usize = 1024;
     let ncores = online_cores();
-    if cores.iter().any(|&c| c >= ncores) {
+    if cores.iter().any(|&c| c >= ncores || c >= SET_BITS) {
         return false; // oversubscribed simulated node: skip
     }
-    unsafe {
-        let mut set: libc::cpu_set_t = std::mem::zeroed();
-        libc::CPU_ZERO(&mut set);
-        for &c in cores {
-            libc::CPU_SET(c, &mut set);
-        }
-        libc::sched_setaffinity(0, std::mem::size_of::<libc::cpu_set_t>(), &set) == 0
+    let mut mask = [0u64; SET_BITS / 64];
+    for &c in cores {
+        mask[c / 64] |= 1u64 << (c % 64);
     }
+    extern "C" {
+        // glibc wrapper over the sched_setaffinity(2) syscall; pid 0
+        // targets the calling thread.
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
 }
 
 #[cfg(not(target_os = "linux"))]

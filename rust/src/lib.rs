@@ -36,6 +36,7 @@ pub mod config;
 pub mod coordinator;
 pub mod darray;
 pub mod dmap;
+pub mod element;
 pub mod hardware;
 pub mod json;
 pub mod launcher;

@@ -29,6 +29,7 @@ fn main() {
                 "usage: repro <run|sweep|report|validate|info> [--flags]\n\
                  \n  run      [--config run.json] --triples 1x4x1 --n 1048576 --nt 10\n\
                  \n           --map block|cyclic|blockcyclic:K --engine native|pjrt|pjrt-fused\n\
+                 \n           --dtype f32|f64|i64|u64 (native engine; default f64)\n\
                  \n  sweep    fig3|fig4|petascale [--measure] [--csv]\n\
                  \n  report   table1|table2|fig4\n\
                  \n  validate --artifacts artifacts\n\
@@ -64,14 +65,35 @@ fn cmd_run(args: &Args) -> i32 {
         .flag("engine")
         .and_then(EngineKind::parse)
         .unwrap_or(base.run.engine);
+    let dtype = match args.flag("dtype") {
+        Some(s) => match distarray::element::Dtype::parse(s) {
+            Some(d) => d,
+            None => {
+                eprintln!("unknown dtype '{s}' (expected f32|f64|i64|u64)");
+                return 2;
+            }
+        },
+        None => base.run.dtype,
+    };
+    if engine != EngineKind::Native && dtype != distarray::element::Dtype::F64 {
+        eprintln!("engine {} is f64-only; use --engine native for --dtype {dtype}", engine.name());
+        return 2;
+    }
+    if !dtype.is_float() {
+        eprintln!(
+            "note: dtype {dtype} runs with q = 0 (integer STREAM degenerates; \
+             bandwidth numbers remain meaningful)"
+        );
+    }
     let artifacts = args.flag_str("artifacts", &base.run.artifacts).to_string();
     let spool = std::env::temp_dir().join(format!("distarray_run_{}", std::process::id()));
 
-    let cfg = RunConfig { n_global: n, nt, q: base.run.q, map, engine, artifacts };
+    let cfg = RunConfig { n_global: n, nt, q: base.run.q, map, engine, dtype, artifacts };
     println!(
-        "repro run: triples={triples} Np={} N={n} Nt={nt} engine={}",
+        "repro run: triples={triples} Np={} N={n} Nt={nt} engine={} dtype={}",
         triples.np(),
-        cfg.engine.name()
+        cfg.engine.name(),
+        cfg.dtype
     );
 
     let plan = PinPlan::for_node(&triples);
@@ -102,11 +124,13 @@ fn cmd_run(args: &Args) -> i32 {
                 );
             }
             println!(
-                "AGGREGATE: copy={} scale={} add={} triad={} validated={}",
+                "AGGREGATE: copy={} scale={} add={} triad={} ({:.3e} elem/s @ {}B/elem) validated={}",
                 fmt_bw(agg.bw[0]),
                 fmt_bw(agg.bw[1]),
                 fmt_bw(agg.bw[2]),
                 fmt_bw(agg.bw[3]),
+                agg.triad_elements_per_sec(),
+                agg.width,
                 agg.all_valid
             );
             let mut ok = agg.all_valid;

@@ -15,20 +15,54 @@ pub use manifest::{ArtifactMeta, Manifest};
 pub use pjrt::PjrtRuntime;
 
 /// Runtime errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum RuntimeError {
-    #[error("xla error: {0}")]
     Xla(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
-    #[error("manifest error: {0}")]
+    Io(std::io::Error),
     Manifest(String),
-    #[error("artifact '{0}' not found (run `make artifacts`)")]
     MissingArtifact(String),
-    #[error("shape mismatch: artifact expects n={expected}, got {got}")]
     ShapeMismatch { expected: usize, got: usize },
+    /// The crate was built without the `pjrt` feature (the default in
+    /// offline environments; the feature expects a vendored `xla`).
+    Unavailable,
 }
 
+impl std::fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RuntimeError::Xla(m) => write!(f, "xla error: {m}"),
+            RuntimeError::Io(e) => write!(f, "io error: {e}"),
+            RuntimeError::Manifest(m) => write!(f, "manifest error: {m}"),
+            RuntimeError::MissingArtifact(n) => {
+                write!(f, "artifact '{n}' not found (run `make artifacts`)")
+            }
+            RuntimeError::ShapeMismatch { expected, got } => {
+                write!(f, "shape mismatch: artifact expects n={expected}, got {got}")
+            }
+            RuntimeError::Unavailable => write!(
+                f,
+                "pjrt execution unavailable: build with `--features pjrt` (requires a vendored xla crate)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for RuntimeError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            RuntimeError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for RuntimeError {
+    fn from(e: std::io::Error) -> Self {
+        RuntimeError::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for RuntimeError {
     fn from(e: xla::Error) -> Self {
         RuntimeError::Xla(e.to_string())

@@ -18,10 +18,10 @@ pub mod timing;
 pub mod validate;
 
 pub use params::StreamParams;
-pub use parallel::{run_parallel, run_parallel_spmd};
-pub use serial::run_native_serial;
+pub use parallel::{run_parallel, run_parallel_spmd, run_parallel_spmd_t, run_parallel_t};
+pub use serial::{run_native_serial, run_serial_t};
 pub use timing::{OpTimes, Timer};
-pub use validate::{validate, ValidationReport, STREAM_Q};
+pub use validate::{validate, validate_t, ValidationReport, STREAM_Q};
 
 /// Result of one STREAM run (one process's view).
 #[derive(Debug, Clone)]
@@ -32,6 +32,9 @@ pub struct StreamResult {
     pub n_local: usize,
     /// Iterations.
     pub nt: usize,
+    /// Bytes per element of the streamed dtype
+    /// ([`crate::element::Element::WIDTH`]; 8 for the classic f64 run).
+    pub width: usize,
     /// Accumulated per-op seconds over all iterations.
     pub times: OpTimes,
     /// Validation outcome.
@@ -39,12 +42,14 @@ pub struct StreamResult {
 }
 
 impl StreamResult {
-    /// Bytes moved per iteration for each op (§III formulas, 8-byte
-    /// doubles): Copy 16N, Scale 16N, Add 24N, Triad 24N — using the
-    /// *local* length, which is what this process actually moved.
+    /// Bytes moved per iteration for each op — the §III formulas with
+    /// the dtype width `W` in place of the literal 8: Copy/Scale move
+    /// `2·W·N` bytes, Add/Triad `3·W·N` — using the *local* length,
+    /// which is what this process actually moved.
     pub fn bytes_per_iter(&self) -> [f64; 4] {
+        let w = self.width as f64;
         let n = self.n_local as f64;
-        [16.0 * n, 16.0 * n, 24.0 * n, 24.0 * n]
+        [2.0 * w * n, 2.0 * w * n, 3.0 * w * n, 3.0 * w * n]
     }
 
     /// Per-op bandwidth in bytes/second: (bytes/iter × Nt) / t_op.
@@ -64,6 +69,20 @@ impl StreamResult {
     pub fn triad_bw(&self) -> f64 {
         self.bandwidths()[3]
     }
+
+    /// Per-op element throughput (elements/second): bandwidth divided
+    /// by bytes-per-element-per-op. At equal bytes/sec, f32 streams
+    /// ~2× the elements/sec of f64 — the mixed-precision lever.
+    pub fn elements_per_sec(&self) -> [f64; 4] {
+        let bw = self.bandwidths();
+        let w = self.width as f64;
+        [
+            bw[0] / (2.0 * w),
+            bw[1] / (2.0 * w),
+            bw[2] / (3.0 * w),
+            bw[3] / (3.0 * w),
+        ]
+    }
 }
 
 /// Sum the local results of all PIDs into the aggregate view the
@@ -80,6 +99,7 @@ pub fn aggregate(results: &[StreamResult]) -> Option<AggregateResult> {
         np: results.len(),
         n_global: results[0].n_global,
         nt: results[0].nt,
+        width: results[0].width,
         bw: [0.0; 4],
         all_valid: true,
         worst_err: 0.0,
@@ -101,6 +121,8 @@ pub struct AggregateResult {
     pub np: usize,
     pub n_global: usize,
     pub nt: usize,
+    /// Bytes per element of the streamed dtype.
+    pub width: usize,
     /// [copy, scale, add, triad] aggregate bytes/sec.
     pub bw: [f64; 4],
     pub all_valid: bool,
@@ -110,5 +132,10 @@ pub struct AggregateResult {
 impl AggregateResult {
     pub fn triad_bw(&self) -> f64 {
         self.bw[3]
+    }
+
+    /// Aggregate triad element throughput (elements/second).
+    pub fn triad_elements_per_sec(&self) -> f64 {
+        self.triad_bw() / (3.0 * self.width as f64)
     }
 }

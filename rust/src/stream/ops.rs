@@ -1,43 +1,49 @@
 //! Native STREAM vector kernels — the L3 hot path.
 //!
-//! Plain indexable loops over `&[f64]`/`&mut [f64]`: LLVM
-//! auto-vectorizes these to the machine's widest loads/stores, which
-//! is the whole game for a bandwidth-bound kernel. The paper's
-//! "performance guarantee" (§IV) — `.loc` parts are regular arrays
-//! with no hidden cost — maps to exactly these functions.
+//! Plain indexable loops over `&[T]`/`&mut [T]` for any sealed
+//! [`Element`]: LLVM auto-vectorizes these to the machine's widest
+//! loads/stores, which is the whole game for a bandwidth-bound kernel
+//! (the `Element::add`/`mul` calls are `#[inline]` monomorphized
+//! straight back to scalar `+`/`*`). The paper's "performance
+//! guarantee" (§IV) — `.loc` parts are regular arrays with no hidden
+//! cost — maps to exactly these functions, at every dtype: f32 STREAM
+//! moves half the bytes per element of f64, so at equal bytes/second
+//! it streams ~2× the elements/second.
+
+use crate::element::Element;
 
 /// Copy: `dst[i] = src[i]`.
 #[inline]
-pub fn copy(dst: &mut [f64], src: &[f64]) {
+pub fn copy<T: Element>(dst: &mut [T], src: &[T]) {
     dst.copy_from_slice(src);
 }
 
 /// Scale: `dst[i] = q * src[i]`.
 #[inline]
-pub fn scale(dst: &mut [f64], src: &[f64], q: f64) {
+pub fn scale<T: Element>(dst: &mut [T], src: &[T], q: T) {
     assert_eq!(dst.len(), src.len());
     for (d, &s) in dst.iter_mut().zip(src) {
-        *d = q * s;
+        *d = T::mul(q, s);
     }
 }
 
 /// Add: `dst[i] = a[i] + b[i]`.
 #[inline]
-pub fn add(dst: &mut [f64], a: &[f64], b: &[f64]) {
+pub fn add<T: Element>(dst: &mut [T], a: &[T], b: &[T]) {
     assert_eq!(dst.len(), a.len());
     assert_eq!(dst.len(), b.len());
     for i in 0..dst.len() {
-        dst[i] = a[i] + b[i];
+        dst[i] = T::add(a[i], b[i]);
     }
 }
 
 /// Triad: `dst[i] = b[i] + q * c[i]`.
 #[inline]
-pub fn triad(dst: &mut [f64], b: &[f64], c: &[f64], q: f64) {
+pub fn triad<T: Element>(dst: &mut [T], b: &[T], c: &[T], q: T) {
     assert_eq!(dst.len(), b.len());
     assert_eq!(dst.len(), c.len());
     for i in 0..dst.len() {
-        dst[i] = b[i] + q * c[i];
+        dst[i] = T::triad(b[i], q, c[i]);
     }
 }
 
@@ -58,6 +64,26 @@ mod tests {
         assert_eq!(d, [11.0, 22.0, 33.0]);
         triad(&mut d, &b, &a, 0.5);
         assert_eq!(d, [10.5, 21.0, 31.5]);
+    }
+
+    #[test]
+    fn ops_generic_over_dtypes() {
+        let a = [1.0f32, 2.0, 3.0];
+        let mut d = [0.0f32; 3];
+        scale(&mut d, &a, 0.5f32);
+        assert_eq!(d, [0.5, 1.0, 1.5]);
+
+        let ia = [1i64, 2, 3];
+        let ib = [10i64, 20, 30];
+        let mut id = [0i64; 3];
+        triad(&mut id, &ib, &ia, 2);
+        assert_eq!(id, [12, 24, 36]);
+
+        let ua = [u64::MAX, 1];
+        let ub = [1u64, 1];
+        let mut ud = [0u64; 2];
+        add(&mut ud, &ua, &ub);
+        assert_eq!(ud, [0, 2], "u64 add wraps instead of panicking");
     }
 
     #[test]

@@ -1,31 +1,41 @@
-//! Algorithm 2 — parallel STREAM over distributed arrays.
+//! Algorithm 2 — parallel STREAM over distributed arrays, generic
+//! over the [`Element`] dtype.
 //!
 //! The `.loc` form: every op touches only the local part, so the run
 //! is communication-free by construction (Figure 2). Tests assert the
 //! transport stayed silent during the timed loop — the paper's
-//! "Bounded communication" property made checkable.
+//! "Bounded communication" property made checkable. The dtype is the
+//! bytes-per-element axis: an f32 run moves half the bytes of f64 at
+//! the same N, so at equal bytes/sec it streams ~2× the elements/sec.
 
 use super::serial::{A0, B0, C0};
 use super::timing::{OpTimes, Timer};
-use super::validate::validate;
+use super::validate::validate_t;
 use super::StreamResult;
-use crate::darray::Darray;
+use crate::darray::DarrayT;
 use crate::dmap::{Dmap, Pid};
+use crate::element::Element;
 
-/// One PID's parallel STREAM run (Algorithm 2). SPMD: call on every
-/// PID of `map` with the same arguments.
+/// One PID's parallel STREAM run at dtype `T` (Algorithm 2). SPMD:
+/// call on every PID of `map` with the same arguments.
 ///
 /// Equivalent to Code Listings 1–2:
 /// ```text
 /// Aloc = local(zeros(1,N,map)) + A0;  (B0, C0 likewise)
 /// for i=1:Nt  { C.loc=A.loc; B.loc=q*C.loc; C.loc=A.loc+B.loc; A.loc=B.loc+q*C.loc }
 /// ```
-pub fn run_parallel(map: &Dmap, n_global: usize, nt: usize, q: f64, pid: Pid) -> StreamResult {
+pub fn run_parallel_t<T: Element>(
+    map: &Dmap,
+    n_global: usize,
+    nt: usize,
+    q: T,
+    pid: Pid,
+) -> StreamResult {
     assert!(nt >= 1);
     let shape = [n_global];
-    let mut a = Darray::constant(map.clone(), &shape, pid, A0);
-    let mut b = Darray::constant(map.clone(), &shape, pid, B0);
-    let mut c = Darray::constant(map.clone(), &shape, pid, C0);
+    let mut a = DarrayT::<T>::constant(map.clone(), &shape, pid, T::from_f64(A0));
+    let mut b = DarrayT::<T>::constant(map.clone(), &shape, pid, T::from_f64(B0));
+    let mut c = DarrayT::<T>::constant(map.clone(), &shape, pid, T::from_f64(C0));
     let n_local = a.local_len();
     let mut times = OpTimes::zero();
 
@@ -40,42 +50,47 @@ pub fn run_parallel(map: &Dmap, n_global: usize, nt: usize, q: f64, pid: Pid) ->
 
         let t = Timer::tic();
         // add writes c from (a, b): destination aliasing is internal.
-        add_in_place(&mut c, &a, &b);
+        c.add_from(&a, &b).expect("same map");
         times.add += t.toc();
 
         let t = Timer::tic();
-        triad_in_place(&mut a, &b, &c, q);
+        a.triad_from(&b, &c, q).expect("same map");
         times.triad += t.toc();
     }
 
-    let validation = validate(a.loc(), b.loc(), c.loc(), A0, q, nt);
-    StreamResult { n_global, n_local, nt, times, validation }
+    let validation = validate_t(a.loc(), b.loc(), c.loc(), A0, q, nt);
+    StreamResult { n_global, n_local, nt, width: T::WIDTH, times, validation }
+}
+
+/// The classic f64 run (Algorithm 2 as published).
+pub fn run_parallel(map: &Dmap, n_global: usize, nt: usize, q: f64, pid: Pid) -> StreamResult {
+    run_parallel_t::<f64>(map, n_global, nt, q, pid)
 }
 
 /// Run Algorithm 2 on every PID of `map` as one OS thread each and
 /// aggregate — the in-process SPMD driver (vertical scaling within
 /// one process, the `Nppn` axis of triples mode).
-pub fn run_parallel_spmd(map: &Dmap, n_global: usize, nt: usize, q: f64) -> super::AggregateResult {
+pub fn run_parallel_spmd_t<T: Element>(
+    map: &Dmap,
+    n_global: usize,
+    nt: usize,
+    q: T,
+) -> super::AggregateResult {
     let handles: Vec<_> = map
         .pids()
         .iter()
         .map(|&p| {
             let m = map.clone();
-            std::thread::spawn(move || run_parallel(&m, n_global, nt, q, p))
+            std::thread::spawn(move || run_parallel_t::<T>(&m, n_global, nt, q, p))
         })
         .collect();
     let results: Vec<StreamResult> = handles.into_iter().map(|h| h.join().unwrap()).collect();
     super::aggregate(&results).expect("map has at least one PID")
 }
 
-#[inline]
-fn add_in_place(c: &mut Darray, a: &Darray, b: &Darray) {
-    c.add_from(a, b).expect("same map");
-}
-
-#[inline]
-fn triad_in_place(a: &mut Darray, b: &Darray, c: &Darray, q: f64) {
-    a.triad_from(b, c, q).expect("same map");
+/// The classic f64 SPMD driver.
+pub fn run_parallel_spmd(map: &Dmap, n_global: usize, nt: usize, q: f64) -> super::AggregateResult {
+    run_parallel_spmd_t::<f64>(map, n_global, nt, q)
 }
 
 #[cfg(test)]
@@ -127,5 +142,30 @@ mod tests {
         let agg = aggregate(&results).unwrap();
         assert!(agg.all_valid, "worst err {}", agg.worst_err);
         assert_eq!(agg.np, np);
+    }
+
+    #[test]
+    fn f32_parallel_validates_on_every_pid() {
+        let q32 = std::f32::consts::SQRT_2 - 1.0;
+        let map = Dmap::block_1d(4);
+        for p in 0..4 {
+            let r = run_parallel_t::<f32>(&map, 4 * 512, 8, q32, p);
+            assert!(r.validation.passed, "pid {p}: {:?}", r.validation);
+            assert_eq!(r.width, 4);
+        }
+    }
+
+    #[test]
+    fn f32_spmd_aggregate_doubles_elements_per_sec_at_equal_bw() {
+        // Pure arithmetic check of the §III width formulas (timing-free):
+        // equal bytes/sec ⇒ elements/sec scale as 8/W.
+        let q32 = std::f32::consts::SQRT_2 - 1.0;
+        let map = Dmap::block_1d(2);
+        let agg32 = run_parallel_spmd_t::<f32>(&map, 2 * 4096, 3, q32);
+        let agg64 = run_parallel_spmd(&map, 2 * 4096, 3, STREAM_Q);
+        assert!(agg32.all_valid && agg64.all_valid);
+        let e32 = agg32.triad_elements_per_sec() / agg32.triad_bw();
+        let e64 = agg64.triad_elements_per_sec() / agg64.triad_bw();
+        assert!((e32 / e64 - 2.0).abs() < 1e-12, "f32 must stream 2× elems per byte");
     }
 }

@@ -26,9 +26,17 @@ impl StreamParams {
         self.local_len() * np
     }
 
-    /// Memory footprint of the three vectors on one process, bytes.
+    /// Memory footprint of the three vectors on one process, bytes,
+    /// at the classic 8-byte (f64) width.
     pub fn local_bytes(&self) -> usize {
-        3 * 8 * self.local_len()
+        self.local_bytes_for(8)
+    }
+
+    /// Memory footprint of the three vectors at an arbitrary element
+    /// width (`width = Element::WIDTH`): an f32 schedule fits twice
+    /// the elements in the same node memory.
+    pub fn local_bytes_for(&self, width: usize) -> usize {
+        3 * width * self.local_len()
     }
 }
 

@@ -1,25 +1,28 @@
-//! Algorithm 1 — serial STREAM over plain vectors.
+//! Algorithm 1 — serial STREAM over plain vectors, generic over the
+//! [`Element`] dtype (the classic run is [`run_native_serial`] = f64).
 
 use super::timing::{OpTimes, Timer};
-use super::validate::{validate, STREAM_Q};
+use super::validate::{validate_t, STREAM_Q};
 use super::{ops, StreamResult};
+use crate::element::Element;
 
 /// Initial values from the Code Listings: A0=1, B0=2, C0=0.
 pub const A0: f64 = 1.0;
 pub const B0: f64 = 2.0;
 pub const C0: f64 = 0.0;
 
-/// Run serial STREAM: `nt` iterations over `n`-element vectors.
+/// Run serial STREAM at dtype `T`: `nt` iterations over `n`-element
+/// vectors with scale factor `q`.
 ///
 /// Faithful to Algorithm 1: each op timed separately with tic/toc,
 /// times accumulated across iterations. Note Add and Triad write into
 /// an existing destination vector (in-place via a scratch swap keeps
 /// the memory traffic identical to the C reference).
-pub fn run_native_serial(n: usize, nt: usize, q: f64) -> StreamResult {
+pub fn run_serial_t<T: Element>(n: usize, nt: usize, q: T) -> StreamResult {
     assert!(n >= 1 && nt >= 1);
-    let mut a = vec![A0; n];
-    let mut b = vec![B0; n];
-    let mut c = vec![C0; n];
+    let mut a = vec![T::from_f64(A0); n];
+    let mut b = vec![T::from_f64(B0); n];
+    let mut c = vec![T::from_f64(C0); n];
     let mut times = OpTimes::zero();
 
     for _ in 0..nt {
@@ -29,38 +32,28 @@ pub fn run_native_serial(n: usize, nt: usize, q: f64) -> StreamResult {
 
         let t = Timer::tic();
         // Scale: B = q*C — write b from c.
-        scale_into(&mut b, &c, q);
+        ops::scale(&mut b, &c, q);
         times.scale += t.toc();
 
         let t = Timer::tic();
         // Add: C = A + B. C is also an input-free destination here
         // (A and B are the inputs), so in-place write is safe.
-        add_into(&mut c, &a, &b);
+        ops::add(&mut c, &a, &b);
         times.add += t.toc();
 
         let t = Timer::tic();
         // Triad: A = B + q*C — destination distinct from inputs.
-        triad_into(&mut a, &b, &c, q);
+        ops::triad(&mut a, &b, &c, q);
         times.triad += t.toc();
     }
 
-    let validation = validate(&a, &b, &c, A0, q, nt);
-    StreamResult { n_global: n, n_local: n, nt, times, validation }
+    let validation = validate_t(&a, &b, &c, A0, q, nt);
+    StreamResult { n_global: n, n_local: n, nt, width: T::WIDTH, times, validation }
 }
 
-#[inline]
-fn scale_into(dst: &mut [f64], src: &[f64], q: f64) {
-    ops::scale(dst, src, q);
-}
-
-#[inline]
-fn add_into(dst: &mut [f64], a: &[f64], b: &[f64]) {
-    ops::add(dst, a, b);
-}
-
-#[inline]
-fn triad_into(dst: &mut [f64], b: &[f64], c: &[f64], q: f64) {
-    ops::triad(dst, b, c, q);
+/// The classic f64 serial run.
+pub fn run_native_serial(n: usize, nt: usize, q: f64) -> StreamResult {
+    run_serial_t::<f64>(n, nt, q)
 }
 
 /// Convenience: run with the paper's defaults (q = √2−1).
@@ -78,6 +71,7 @@ mod tests {
         assert!(r.validation.passed, "{:?}", r.validation);
         assert_eq!(r.n_global, 10_000);
         assert_eq!(r.nt, 10);
+        assert_eq!(r.width, 8);
     }
 
     #[test]
@@ -101,5 +95,23 @@ mod tests {
     fn n1_edge_case() {
         let r = run_default(1, 3);
         assert!(r.validation.passed);
+    }
+
+    #[test]
+    fn f32_serial_validates_and_halves_bytes() {
+        let q32 = std::f32::consts::SQRT_2 - 1.0;
+        let r32 = run_serial_t::<f32>(4096, 10, q32);
+        assert!(r32.validation.passed, "{:?}", r32.validation);
+        assert_eq!(r32.width, 4);
+        let r64 = run_default(4096, 10);
+        // §III with W = T::WIDTH: f32 triad bytes/iter are exactly half.
+        assert_eq!(r32.bytes_per_iter()[3] * 2.0, r64.bytes_per_iter()[3]);
+    }
+
+    #[test]
+    fn integer_serial_is_exact() {
+        let r = run_serial_t::<i64>(512, 4, 0i64);
+        assert!(r.validation.passed, "{:?}", r.validation);
+        assert_eq!(r.validation.max_err(), 0.0);
     }
 }

@@ -7,14 +7,16 @@
 //! STREAM op splits the local vector into `ntpn` contiguous chunks
 //! processed by a persistent thread pool. Chunks are contiguous (not
 //! interleaved) to preserve streaming access per thread — the same
-//! reason the paper pins threads to adjacent cores.
+//! reason the paper pins threads to adjacent cores. Generic over the
+//! [`Element`] dtype like the rest of the stream stack.
 
 use super::serial::{A0, B0, C0};
 use super::timing::{OpTimes, Timer};
-use super::validate::validate;
+use super::validate::validate_t;
 use super::{ops, StreamResult};
-use crate::darray::Darray;
+use crate::darray::DarrayT;
 use crate::dmap::{Dmap, Pid};
+use crate::element::Element;
 use std::sync::mpsc;
 use std::sync::{Arc, Barrier};
 use std::thread;
@@ -80,12 +82,6 @@ impl OpPool {
     }
 }
 
-/// Raw-pointer cell so the pool threads can write disjoint chunks of
-/// one destination slice. SAFETY: chunks never overlap.
-struct SendPtr(*mut f64);
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
-
 macro_rules! par_op {
     ($pool:expr, $dst:expr, $n:expr, |$lo:ident, $hi:ident, $d:ident| $body:expr) => {{
         // Addresses cross the closure as usize (plain Send data); the
@@ -97,8 +93,8 @@ macro_rules! par_op {
             let ($lo, $hi) = pool.chunk(n, tid);
             if $lo < $hi {
                 // SAFETY: per-tid chunks are disjoint subranges of dst.
-                let $d: &mut [f64] = unsafe {
-                    std::slice::from_raw_parts_mut((dst_addr as *mut f64).add($lo), $hi - $lo)
+                let $d: &mut [T] = unsafe {
+                    std::slice::from_raw_parts_mut((dst_addr as *mut T).add($lo), $hi - $lo)
                 };
                 $body
             }
@@ -107,8 +103,69 @@ macro_rules! par_op {
 }
 
 /// Parallel STREAM with `ntpn` threads over the local part —
-/// Algorithm 2 with the §V thread axis. SPMD per PID like
-/// [`super::parallel::run_parallel`].
+/// Algorithm 2 with the §V thread axis, at dtype `T`. SPMD per PID
+/// like [`super::parallel::run_parallel_t`].
+pub fn run_parallel_threaded_t<T: Element>(
+    map: &Dmap,
+    n_global: usize,
+    nt: usize,
+    q: T,
+    pid: Pid,
+    pool: &'static OpPool,
+) -> StreamResult {
+    assert!(nt >= 1);
+    let shape = [n_global];
+    let mut a = DarrayT::<T>::constant(map.clone(), &shape, pid, T::from_f64(A0));
+    let mut b = DarrayT::<T>::constant(map.clone(), &shape, pid, T::from_f64(B0));
+    let mut c = DarrayT::<T>::constant(map.clone(), &shape, pid, T::from_f64(C0));
+    let n_local = a.local_len();
+    let mut times = OpTimes::zero();
+
+    // Share the source slices with pool threads via raw parts; all
+    // reads/writes are within disjoint chunks per op invocation.
+    for _ in 0..nt {
+        let (pa, pb, pc) = (
+            a.loc_mut().as_mut_ptr() as usize,
+            b.loc_mut().as_mut_ptr() as usize,
+            c.loc_mut().as_mut_ptr() as usize,
+        );
+
+        let t = Timer::tic();
+        par_op!(pool, c.loc_mut(), n_local, |lo, hi, d| {
+            let src = unsafe { std::slice::from_raw_parts((pa as *const T).add(lo), hi - lo) };
+            ops::copy(d, src)
+        });
+        times.copy += t.toc();
+
+        let t = Timer::tic();
+        par_op!(pool, b.loc_mut(), n_local, |lo, hi, d| {
+            let src = unsafe { std::slice::from_raw_parts((pc as *const T).add(lo), hi - lo) };
+            ops::scale(d, src, q)
+        });
+        times.scale += t.toc();
+
+        let t = Timer::tic();
+        par_op!(pool, c.loc_mut(), n_local, |lo, hi, d| {
+            let sa = unsafe { std::slice::from_raw_parts((pa as *const T).add(lo), hi - lo) };
+            let sb = unsafe { std::slice::from_raw_parts((pb as *const T).add(lo), hi - lo) };
+            ops::add(d, sa, sb)
+        });
+        times.add += t.toc();
+
+        let t = Timer::tic();
+        par_op!(pool, a.loc_mut(), n_local, |lo, hi, d| {
+            let sb = unsafe { std::slice::from_raw_parts((pb as *const T).add(lo), hi - lo) };
+            let sc = unsafe { std::slice::from_raw_parts((pc as *const T).add(lo), hi - lo) };
+            ops::triad(d, sb, sc, q)
+        });
+        times.triad += t.toc();
+    }
+
+    let validation = validate_t(a.loc(), b.loc(), c.loc(), A0, q, nt);
+    StreamResult { n_global, n_local, nt, width: T::WIDTH, times, validation }
+}
+
+/// The classic f64 threaded run.
 pub fn run_parallel_threaded(
     map: &Dmap,
     n_global: usize,
@@ -117,72 +174,37 @@ pub fn run_parallel_threaded(
     pid: Pid,
     pool: &'static OpPool,
 ) -> StreamResult {
-    assert!(nt >= 1);
-    let shape = [n_global];
-    let mut a = Darray::constant(map.clone(), &shape, pid, A0);
-    let mut b = Darray::constant(map.clone(), &shape, pid, B0);
-    let mut c = Darray::constant(map.clone(), &shape, pid, C0);
-    let n_local = a.local_len();
-    let mut times = OpTimes::zero();
-
-    // Share the source slices with pool threads via raw parts; all
-    // reads/writes are within disjoint chunks per op invocation.
-    for _ in 0..nt {
-        let (pa, pb, pc) = (
-            SendPtr(a.loc_mut().as_mut_ptr()),
-            SendPtr(b.loc_mut().as_mut_ptr()),
-            SendPtr(c.loc_mut().as_mut_ptr()),
-        );
-        let (pa, pb, pc) = (pa.0 as usize, pb.0 as usize, pc.0 as usize);
-
-        let t = Timer::tic();
-        par_op!(pool, c.loc_mut(), n_local, |lo, hi, d| {
-            let src = unsafe { std::slice::from_raw_parts((pa as *const f64).add(lo), hi - lo) };
-            ops::copy(d, src)
-        });
-        times.copy += t.toc();
-
-        let t = Timer::tic();
-        par_op!(pool, b.loc_mut(), n_local, |lo, hi, d| {
-            let src = unsafe { std::slice::from_raw_parts((pc as *const f64).add(lo), hi - lo) };
-            ops::scale(d, src, q)
-        });
-        times.scale += t.toc();
-
-        let t = Timer::tic();
-        par_op!(pool, c.loc_mut(), n_local, |lo, hi, d| {
-            let sa = unsafe { std::slice::from_raw_parts((pa as *const f64).add(lo), hi - lo) };
-            let sb = unsafe { std::slice::from_raw_parts((pb as *const f64).add(lo), hi - lo) };
-            ops::add(d, sa, sb)
-        });
-        times.add += t.toc();
-
-        let t = Timer::tic();
-        par_op!(pool, a.loc_mut(), n_local, |lo, hi, d| {
-            let sb = unsafe { std::slice::from_raw_parts((pb as *const f64).add(lo), hi - lo) };
-            let sc = unsafe { std::slice::from_raw_parts((pc as *const f64).add(lo), hi - lo) };
-            ops::triad(d, sb, sc, q)
-        });
-        times.triad += t.toc();
-    }
-
-    let validation = validate(a.loc(), b.loc(), c.loc(), A0, q, nt);
-    StreamResult { n_global, n_local, nt, times, validation }
+    run_parallel_threaded_t::<f64>(map, n_global, nt, q, pid, pool)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::stream::STREAM_Q;
-    use once_cell::sync::Lazy;
+    use std::sync::OnceLock;
 
-    static POOL2: Lazy<OpPool> = Lazy::new(|| OpPool::new(2));
-    static POOL4: Lazy<OpPool> = Lazy::new(|| OpPool::new(4));
-    static POOL1: Lazy<OpPool> = Lazy::new(|| OpPool::new(1));
+    fn pool(cell: &'static OnceLock<OpPool>, ntpn: usize) -> &'static OpPool {
+        cell.get_or_init(|| OpPool::new(ntpn))
+    }
+
+    fn pool1() -> &'static OpPool {
+        static P: OnceLock<OpPool> = OnceLock::new();
+        pool(&P, 1)
+    }
+
+    fn pool2() -> &'static OpPool {
+        static P: OnceLock<OpPool> = OnceLock::new();
+        pool(&P, 2)
+    }
+
+    fn pool4() -> &'static OpPool {
+        static P: OnceLock<OpPool> = OnceLock::new();
+        pool(&P, 4)
+    }
 
     #[test]
     fn threaded_run_validates() {
-        for pool in [&*POOL1, &*POOL2, &*POOL4] {
+        for pool in [pool1(), pool2(), pool4()] {
             let r = run_parallel_threaded(&Dmap::block_1d(1), 100_000, 5, STREAM_Q, 0, pool);
             assert!(r.validation.passed, "ntpn={} {:?}", pool.ntpn(), r.validation);
         }
@@ -191,10 +213,18 @@ mod tests {
     #[test]
     fn threaded_matches_single_thread_exactly() {
         // Element-wise determinism: threading must not change results.
-        let r1 = run_parallel_threaded(&Dmap::block_1d(1), 4099, 7, STREAM_Q, 0, &POOL1);
-        let r4 = run_parallel_threaded(&Dmap::block_1d(1), 4099, 7, STREAM_Q, 0, &POOL4);
+        let r1 = run_parallel_threaded(&Dmap::block_1d(1), 4099, 7, STREAM_Q, 0, pool1());
+        let r4 = run_parallel_threaded(&Dmap::block_1d(1), 4099, 7, STREAM_Q, 0, pool4());
         assert_eq!(r1.validation.max_err(), r4.validation.max_err());
         assert!(r4.validation.passed);
+    }
+
+    #[test]
+    fn threaded_f32_validates() {
+        let q32 = std::f32::consts::SQRT_2 - 1.0;
+        let r = run_parallel_threaded_t::<f32>(&Dmap::block_1d(1), 10_000, 5, q32, 0, pool4());
+        assert!(r.validation.passed, "{:?}", r.validation);
+        assert_eq!(r.width, 4);
     }
 
     #[test]
@@ -217,7 +247,7 @@ mod tests {
     fn pool_runs_all_tids() {
         use std::sync::atomic::{AtomicU64, Ordering};
         static HITS: AtomicU64 = AtomicU64::new(0);
-        POOL4.run(|tid| {
+        pool4().run(|tid| {
             HITS.fetch_add(1 << (tid * 8), Ordering::SeqCst);
         });
         assert_eq!(HITS.load(Ordering::SeqCst), 0x01010101);
@@ -230,7 +260,7 @@ mod tests {
             .map(|pid| {
                 let m = map.clone();
                 std::thread::spawn(move || {
-                    run_parallel_threaded(&m, 2 * 8192, 3, STREAM_Q, pid, &POOL2)
+                    run_parallel_threaded(&m, 2 * 8192, 3, STREAM_Q, pid, pool2())
                 })
             })
             .collect::<Vec<_>>()

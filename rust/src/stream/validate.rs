@@ -1,5 +1,13 @@
 //! STREAM validation (§III): closed-form final values and the
 //! `q = √2 − 1` trick that keeps magnitudes modest (`2q + q² = 1`).
+//!
+//! The closed forms are always evaluated in f64; a typed run is
+//! checked by widening each element ([`validate_t`]) against a
+//! tolerance scaled to the dtype's roundoff
+//! ([`Element::TOL_BASE`] × Nt) — so an f32 run is held to f32
+//! accuracy, an integer run to exactness.
+
+use crate::element::Element;
 
 /// The paper's scale factor: `q = √2 − 1` so `2q + q² = 1`.
 pub const STREAM_Q: f64 = std::f64::consts::SQRT_2 - 1.0;
@@ -35,22 +43,39 @@ impl ValidationReport {
     }
 }
 
-/// Tolerance: iteration count scales rounding accumulation.
+/// Tolerance: iteration count scales rounding accumulation (f64).
 pub fn tolerance(nt: usize) -> f64 {
-    1e-13 * (nt as f64).max(1.0)
+    tolerance_for(1e-13, nt)
 }
 
-/// Validate final vectors against the closed forms.
-pub fn validate(a: &[f64], b: &[f64], c: &[f64], a0: f64, q: f64, nt: usize) -> ValidationReport {
-    let (ea, eb, ec) = expected(a0, q, nt);
-    let dev = |xs: &[f64], e: f64| xs.iter().map(|&x| (x - e).abs()).fold(0.0, f64::max);
+/// Dtype-aware tolerance: `base` is the per-iteration roundoff budget
+/// ([`Element::TOL_BASE`]).
+pub fn tolerance_for(base: f64, nt: usize) -> f64 {
+    base * (nt as f64).max(1.0)
+}
+
+/// Validate final vectors of any [`Element`] dtype against the f64
+/// closed forms, at the dtype's own tolerance.
+pub fn validate_t<T: Element>(a: &[T], b: &[T], c: &[T], a0: f64, q: T, nt: usize) -> ValidationReport {
+    let (ea, eb, ec) = expected(a0, q.to_f64(), nt);
+    let dev = |xs: &[T], e: f64| {
+        xs.iter()
+            .map(|&x| (x.to_f64() - e).abs())
+            .fold(0.0, f64::max)
+    };
     let (err_a, err_b, err_c) = (dev(a, ea), dev(b, eb), dev(c, ec));
+    let tol = tolerance_for(T::TOL_BASE, nt);
     ValidationReport {
-        passed: err_a <= tolerance(nt) && err_b <= tolerance(nt) && err_c <= tolerance(nt),
+        passed: err_a <= tol && err_b <= tol && err_c <= tol,
         err_a,
         err_b,
         err_c,
     }
+}
+
+/// Validate final f64 vectors against the closed forms.
+pub fn validate(a: &[f64], b: &[f64], c: &[f64], a0: f64, q: f64, nt: usize) -> ValidationReport {
+    validate_t::<f64>(a, b, c, a0, q, nt)
 }
 
 #[cfg(test)]
@@ -100,6 +125,48 @@ mod tests {
         let rep = validate(&a, &b, &c, 1.0, STREAM_Q, 5);
         assert!(!rep.passed);
         assert!(rep.err_a > 1e-7);
+    }
+
+    #[test]
+    fn f32_run_validates_at_f32_tolerance() {
+        let n = 128;
+        let q = std::f32::consts::SQRT_2 - 1.0;
+        let (mut a, mut b, mut c) = (vec![1.0f32; n], vec![2.0f32; n], vec![0.0f32; n]);
+        let nt = 20;
+        let mut tmp = vec![0.0f32; n];
+        for _ in 0..nt {
+            ops::copy(&mut c, &a);
+            ops::scale(&mut b, &c, q);
+            ops::add(&mut tmp, &a, &b);
+            c.copy_from_slice(&tmp);
+            ops::triad(&mut tmp, &b, &c, q);
+            a.copy_from_slice(&tmp);
+        }
+        let rep = validate_t::<f32>(&a, &b, &c, 1.0, q, nt);
+        assert!(rep.passed, "{rep:?}");
+        // ... but the same run is (correctly) outside f64 tolerance.
+        assert!(rep.max_err() > tolerance(nt));
+    }
+
+    #[test]
+    fn integer_run_is_exact() {
+        // q = 0 for integers ⇒ A collapses to 0 after one iteration;
+        // the closed form (g = 2q+q² = 0) predicts exactly that.
+        let n = 16;
+        let (mut a, mut b, mut c) = (vec![1i64; n], vec![2i64; n], vec![0i64; n]);
+        let nt = 3;
+        let mut tmp = vec![0i64; n];
+        for _ in 0..nt {
+            ops::copy(&mut c, &a);
+            ops::scale(&mut b, &c, 0);
+            ops::add(&mut tmp, &a, &b);
+            c.copy_from_slice(&tmp);
+            ops::triad(&mut tmp, &b, &c, 0);
+            a.copy_from_slice(&tmp);
+        }
+        let rep = validate_t::<i64>(&a, &b, &c, 1.0, 0, nt);
+        assert!(rep.passed, "{rep:?}");
+        assert_eq!(rep.max_err(), 0.0);
     }
 
     #[test]

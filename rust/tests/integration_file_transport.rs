@@ -38,6 +38,7 @@ fn coordinator_over_file_transport() {
         q: STREAM_Q,
         map: MapKind::Block,
         engine: EngineKind::Native,
+        dtype: distarray::element::Dtype::F64,
         artifacts: "artifacts".into(),
     };
     let (agg, _) = run_leader(&leader, &cfg).unwrap();

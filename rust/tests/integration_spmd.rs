@@ -140,6 +140,7 @@ fn coordinator_all_map_kinds() {
             q: STREAM_Q,
             map,
             engine: EngineKind::Native,
+            dtype: distarray::element::Dtype::F64,
             artifacts: "artifacts".into(),
         };
         let (agg, results) = run_leader(&leader, &cfg).unwrap();

@@ -1,11 +1,15 @@
 //! Property-based invariant tests (in-house `prop` substrate):
-//! randomized sweeps over map algebra, partitions, remap plans, the
-//! wire codec, and the JSON codec.
+//! randomized sweeps over map algebra, partitions, remap plans and
+//! their cached-engine execution, the wire codec, and the JSON codec.
 
-use distarray::comm::{WireReader, WireWriter};
+use distarray::comm::{ChannelHub, Transport, WireReader, WireWriter};
+use distarray::darray::{DarrayT, RemapEngine};
 use distarray::dmap::{Dist, Dmap, Grid, Overlap, Partition};
+use distarray::element::Element;
 use distarray::json::Json;
 use distarray::prop::{forall, Rng};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 fn random_dist(rng: &mut Rng) -> Dist {
     match rng.below(3) {
@@ -98,6 +102,118 @@ fn prop_remap_plan_exact() {
                 assert_eq!(src.owner_of(i), Some(s));
                 assert_eq!(dst.owner_of(i), Some(d));
             }
+        }
+    });
+}
+
+/// SPMD remap round-trip at dtype `T`:
+/// `A --assign_from--> B --assign_from--> A'` must reproduce `A`
+/// exactly for ANY pair of 1-D maps over the same world, and an
+/// aligned first hop must be silent. Runs through a shared
+/// [`RemapEngine`] and returns the total messages sent on hop 1,
+/// asserting the engine planned exactly once per hop direction.
+fn remap_roundtrip_case<T: Element>(src_map: Dmap, dst_map: Dmap, n: usize) -> u64 {
+    let np = src_map.np();
+    let engine = Arc::new(RemapEngine::new());
+    let hop1_msgs = Arc::new(AtomicU64::new(0));
+    let world = ChannelHub::world(np);
+    let hs: Vec<_> = world
+        .into_iter()
+        .map(|t| {
+            let (src_map, dst_map) = (src_map.clone(), dst_map.clone());
+            let engine = engine.clone();
+            let hop1_msgs = hop1_msgs.clone();
+            std::thread::spawn(move || {
+                let pid = t.pid();
+                let a = DarrayT::<T>::from_global_fn(src_map.clone(), &[n], pid, |g| {
+                    T::from_f64((g % 251) as f64)
+                });
+                let mut b = DarrayT::<T>::zeros(dst_map, &[n], pid);
+                b.assign_from_engine(&a, &t, 0, &engine).unwrap();
+                hop1_msgs.fetch_add(t.stats().msgs_sent(), Ordering::Relaxed);
+                let mut a2 = DarrayT::<T>::zeros(src_map, &[n], pid);
+                a2.assign_from_engine(&b, &t, 1, &engine).unwrap();
+                assert_eq!(a2.loc(), a.loc(), "pid {pid}: round trip corrupted data");
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+    // Two plan keys (src→dst, dst→src) — or one when the maps are the
+    // same object, in which case the keys coincide.
+    let expected_builds = if src_map == dst_map { 1 } else { 2 };
+    assert_eq!(
+        engine.plans_built(),
+        expected_builds,
+        "each plan key must be built exactly once"
+    );
+    hop1_msgs.load(Ordering::Relaxed)
+}
+
+/// INVARIANT: remap round-trips are exact at every dtype, and aligned
+/// maps communicate nothing.
+#[test]
+fn prop_remap_roundtrip_all_dtypes() {
+    forall(25, 0xD7F0, |rng| {
+        let src_map = random_map_1d(rng);
+        let np = src_map.np();
+        let dst_map = Dmap::new(
+            Grid::line(np),
+            vec![random_dist(rng)],
+            vec![Overlap::none()],
+            (0..np).collect(),
+        );
+        let n = rng.range(1, 400);
+        let aligned = src_map.aligned_with(&dst_map, &[n]);
+        let msgs = match rng.below(3) {
+            0 => remap_roundtrip_case::<f64>(src_map, dst_map, n),
+            1 => remap_roundtrip_case::<f32>(src_map, dst_map, n),
+            _ => remap_roundtrip_case::<i64>(src_map, dst_map, n),
+        };
+        if aligned {
+            assert_eq!(msgs, 0, "aligned maps must remap with zero messages");
+        }
+    });
+}
+
+/// INVARIANT: the engine-cached plan drives execution identically to
+/// scratch planning (same result, same traffic), for random map pairs.
+#[test]
+fn prop_engine_matches_scratch_plan() {
+    forall(20, 0xCAC4E, |rng| {
+        let src_map = random_map_1d(rng);
+        let np = src_map.np();
+        let dst_map = Dmap::new(
+            Grid::line(np),
+            vec![random_dist(rng)],
+            vec![Overlap::none()],
+            (0..np).collect(),
+        );
+        let n = rng.range(1, 300);
+        let world = ChannelHub::world(np);
+        let engine = Arc::new(RemapEngine::new());
+        let hs: Vec<_> = world
+            .into_iter()
+            .map(|t| {
+                let (src_map, dst_map) = (src_map.clone(), dst_map.clone());
+                let engine = engine.clone();
+                std::thread::spawn(move || {
+                    let pid = t.pid();
+                    let a = DarrayT::<u64>::from_global_fn(src_map, &[n], pid, |g| g as u64);
+                    let mut via_scratch = DarrayT::<u64>::zeros(dst_map.clone(), &[n], pid);
+                    via_scratch.assign_from(&a, &t, 0).unwrap();
+                    let scratch_traffic = t.stats().bytes_sent();
+                    let mut via_engine = DarrayT::<u64>::zeros(dst_map, &[n], pid);
+                    via_engine.assign_from_engine(&a, &t, 1, &engine).unwrap();
+                    assert_eq!(via_engine.loc(), via_scratch.loc());
+                    let engine_traffic = t.stats().bytes_sent() - scratch_traffic;
+                    assert_eq!(engine_traffic, scratch_traffic, "identical plans, identical bytes");
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
         }
     });
 }
