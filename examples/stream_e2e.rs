@@ -112,6 +112,8 @@ fn coordinated(np: usize, n: usize, nt: usize, map: MapKind) -> distarray::strea
         map,
         engine: EngineKind::Native,
         dtype: distarray::element::Dtype::F64,
+        backend: distarray::backend::BackendKind::Host,
+        threads: 1,
         artifacts: "artifacts".into(),
     };
     let mut world = ChannelHub::world(np);

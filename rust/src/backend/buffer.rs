@@ -1,0 +1,135 @@
+//! [`DeviceBuffer`] — a typed handle to backend-owned storage.
+//!
+//! The buffer models the paper's §IV hardware axis: the *program*
+//! holds a typed handle and moves data with explicit upload/download;
+//! *where* the bytes live is the backend's business. The host-class
+//! backends back it with ordinary host memory (upload/download are
+//! memcpys), and the PJRT backend treats it as the host staging mirror
+//! of device memory — each kernel stages through the artifact exactly
+//! like the engine-level PJRT path does. Either way the discipline is
+//! identical, so code written against [`DeviceBuffer`] is
+//! backend-portable by construction.
+
+use super::{Backend, BackendError, BackendKind, Result};
+use crate::element::{Dtype, ElemSlice, ElemSliceMut, Element};
+
+/// Typed storage allocated by (and tied to) one [`Backend`].
+#[derive(Debug, Clone)]
+pub struct DeviceBuffer<T: Element> {
+    kind: BackendKind,
+    data: Vec<T>,
+}
+
+impl<T: Element> DeviceBuffer<T> {
+    /// Allocate a zero-filled buffer of `len` elements on `backend`.
+    pub fn alloc(backend: &dyn Backend, len: usize) -> Result<DeviceBuffer<T>> {
+        backend.prepare_alloc(T::DTYPE, len)?;
+        Ok(DeviceBuffer { kind: backend.kind(), data: vec![T::ZERO; len] })
+    }
+
+    /// Which backend allocated this buffer.
+    pub fn kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        T::DTYPE
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Erased immutable view (kernel source operand).
+    pub fn view(&self) -> ElemSlice<'_> {
+        T::erase(&self.data)
+    }
+
+    /// Erased mutable view (kernel destination operand).
+    pub fn view_mut(&mut self) -> ElemSliceMut<'_> {
+        T::erase_mut(&mut self.data)
+    }
+
+    /// Copy `host` into the buffer through the owning backend.
+    pub fn upload_from(&mut self, backend: &dyn Backend, host: &[T]) -> Result<()> {
+        self.check_backend(backend)?;
+        super::check_len(self.data.len(), host.len())?;
+        backend.upload(T::erase(host), T::erase_mut(&mut self.data))
+    }
+
+    /// Copy the buffer into `host` through the owning backend.
+    pub fn download_into(&self, backend: &dyn Backend, host: &mut [T]) -> Result<()> {
+        self.check_backend(backend)?;
+        super::check_len(self.data.len(), host.len())?;
+        backend.download(T::erase(&self.data), T::erase_mut(host))
+    }
+
+    fn check_backend(&self, backend: &dyn Backend) -> Result<()> {
+        if backend.kind() != self.kind {
+            return Err(BackendError::WrongBackend {
+                buffer: self.kind,
+                backend: backend.kind(),
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ChunkedThreadedBackend, HostBackend};
+    use super::*;
+
+    #[test]
+    fn alloc_upload_download_roundtrip() {
+        let be = HostBackend::new();
+        let host: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        let mut buf = DeviceBuffer::<f32>::alloc(&be, 100).unwrap();
+        assert_eq!(buf.len(), 100);
+        assert_eq!(buf.dtype(), Dtype::F32);
+        assert_eq!(buf.kind(), BackendKind::Host);
+        buf.upload_from(&be, &host).unwrap();
+        let mut back = vec![0.0f32; 100];
+        buf.download_into(&be, &mut back).unwrap();
+        assert_eq!(back, host);
+    }
+
+    #[test]
+    fn wrong_backend_refused() {
+        let host = HostBackend::new();
+        let threaded = ChunkedThreadedBackend::new(2);
+        let mut buf = DeviceBuffer::<f64>::alloc(&host, 8).unwrap();
+        let data = [1.0f64; 8];
+        assert!(matches!(
+            buf.upload_from(&threaded, &data),
+            Err(BackendError::WrongBackend { .. })
+        ));
+    }
+
+    #[test]
+    fn length_mismatch_refused() {
+        let be = HostBackend::new();
+        let mut buf = DeviceBuffer::<u64>::alloc(&be, 4).unwrap();
+        assert!(matches!(
+            buf.upload_from(&be, &[1u64; 5]),
+            Err(BackendError::LenMismatch { .. })
+        ));
+        let mut small = [0u64; 3];
+        assert!(matches!(
+            buf.download_into(&be, &mut small),
+            Err(BackendError::LenMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn empty_buffer_ok() {
+        let be = HostBackend::new();
+        let buf = DeviceBuffer::<i64>::alloc(&be, 0).unwrap();
+        assert!(buf.is_empty());
+        assert_eq!(buf.view().len(), 0);
+    }
+}

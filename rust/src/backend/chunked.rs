@@ -1,0 +1,318 @@
+//! [`ChunkedThreadedBackend`] — kernels tiled over cache-sized chunks
+//! and fanned across an affinity-pinned worker pool.
+//!
+//! The §V thread axis as a backend: each kernel splits the vector into
+//! one contiguous range per pool thread (contiguous, not interleaved,
+//! to preserve streaming access — the same reason the paper pins
+//! threads to adjacent cores), and each thread walks its range in
+//! cache-sized tiles so a tile's working set stays resident between
+//! the load and the store. The pool is a pinned
+//! [`OpPool`](crate::stream::threaded::OpPool): spawned threads pin to
+//! the adjacent cores of *this process's* launcher window
+//! (`slot · Ntpn + tid`, from the `DISTARRAY_*` environment; base 0
+//! for the leader and in-process runs), gracefully skipped when the
+//! plan exceeds the machine.
+//!
+//! Element-wise determinism: tiling and threading change *which core*
+//! computes an element, never the arithmetic, so results are
+//! bit-identical to [`super::HostBackend`] — asserted by the
+//! backend-equivalence property tests.
+
+use super::{
+    check_len, execute_plan_erased, expect_t, expect_t_mut, for_dtype, memcpy_erased, Backend,
+    BackendKind, Result,
+};
+use crate::comm::Transport;
+use crate::darray::RemapPlan;
+use crate::dmap::Pid;
+use crate::element::{Dtype, ElemSlice, ElemSliceMut, Element};
+use crate::stream::ops;
+use crate::stream::threaded::{chunk_bounds, OpPool};
+use std::sync::OnceLock;
+
+/// Default tile: 256 KiB — comfortably inside a per-core L2 while
+/// large enough that loop overhead vanishes against memory traffic.
+pub const DEFAULT_TILE_BYTES: usize = 256 * 1024;
+
+/// First core of this process's launcher window: `slot × Ntpn` from
+/// the `DISTARRAY_*` worker environment, 0 for the leader and for
+/// in-process (test/SPMD) use. Keeps every process's pool inside its
+/// own adjacent-core window instead of stacking all pools on core 0.
+fn process_base_core() -> usize {
+    let get = |k: &str| std::env::var(k).ok().and_then(|v| v.parse::<usize>().ok());
+    match (get("DISTARRAY_SLOT"), get("DISTARRAY_NTPN")) {
+        (Some(slot), Some(ntpn)) => slot * ntpn,
+        _ => 0,
+    }
+}
+
+/// Rebuild an immutable slice from an address smuggled across a
+/// `'static` job closure as `usize`.
+///
+/// SAFETY (caller's obligations): `addr` must come from a live slice
+/// of `T` with at least `i + len` elements that outlives the pool's
+/// blocking `run` call, and `[i, i+len)` must be disjoint from every
+/// range any thread mutates during that call.
+unsafe fn slice_at<'a, T>(addr: usize, i: usize, len: usize) -> &'a [T] {
+    std::slice::from_raw_parts((addr as *const T).add(i), len)
+}
+
+/// Mutable counterpart of [`slice_at`]; additionally requires that no
+/// other thread touches `[i, i+len)` at all during the call.
+unsafe fn slice_at_mut<'a, T>(addr: usize, i: usize, len: usize) -> &'a mut [T] {
+    std::slice::from_raw_parts_mut((addr as *mut T).add(i), len)
+}
+
+/// Walk `[lo, hi)` in `tile`-element steps.
+macro_rules! tiled {
+    ($lo:expr, $hi:expr, $tile:expr, |$i:ident, $j:ident| $body:expr) => {{
+        let mut $i = $lo;
+        while $i < $hi {
+            let $j = ($i + $tile).min($hi);
+            $body;
+            $i = $j;
+        }
+    }};
+}
+
+/// Affinity-pinned chunk-parallel backend.
+pub struct ChunkedThreadedBackend {
+    threads: usize,
+    tile_bytes: usize,
+    /// Lazily spawned: constructing the backend (e.g. in a registry)
+    /// costs nothing until a kernel actually runs.
+    pool: OnceLock<OpPool>,
+}
+
+impl ChunkedThreadedBackend {
+    /// `threads == 0` means auto (one per online core).
+    pub fn new(threads: usize) -> ChunkedThreadedBackend {
+        ChunkedThreadedBackend::with_tile(threads, DEFAULT_TILE_BYTES)
+    }
+
+    /// Explicit cache-tile size in bytes (floored to one element).
+    pub fn with_tile(threads: usize, tile_bytes: usize) -> ChunkedThreadedBackend {
+        let threads = if threads == 0 {
+            crate::launcher::pinning::online_cores()
+        } else {
+            threads
+        };
+        ChunkedThreadedBackend { threads, tile_bytes: tile_bytes.max(8), pool: OnceLock::new() }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn pool(&self) -> &OpPool {
+        self.pool
+            .get_or_init(|| OpPool::pinned(self.threads, process_base_core()))
+    }
+
+    fn tile_elems<T: Element>(&self) -> usize {
+        (self.tile_bytes / T::WIDTH).max(1)
+    }
+}
+
+impl Backend for ChunkedThreadedBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Threaded
+    }
+
+    fn prepare_alloc(&self, _dtype: Dtype, _len: usize) -> Result<()> {
+        Ok(())
+    }
+
+    fn upload(&self, host: ElemSlice<'_>, dev: ElemSliceMut<'_>) -> Result<()> {
+        memcpy_erased(host, dev)
+    }
+
+    fn download(&self, dev: ElemSlice<'_>, host: ElemSliceMut<'_>) -> Result<()> {
+        memcpy_erased(dev, host)
+    }
+
+    fn copy(&self, src: ElemSlice<'_>, dst: ElemSliceMut<'_>) -> Result<()> {
+        for_dtype!(dst.dtype(), T, {
+            let s = expect_t::<T>(src)?;
+            let d = expect_t_mut::<T>(dst)?;
+            check_len(d.len(), s.len())?;
+            let (sp, dp, n) = (s.as_ptr() as usize, d.as_mut_ptr() as usize, d.len());
+            let (threads, tile) = (self.threads, self.tile_elems::<T>());
+            self.pool().run(move |tid| {
+                let (lo, hi) = chunk_bounds(threads, n, tid);
+                tiled!(lo, hi, tile, |i, j| {
+                    // SAFETY: per-tid chunks are disjoint subranges of
+                    // slices that outlive this blocking `run` call.
+                    let (sv, dv) = unsafe {
+                        (slice_at::<T>(sp, i, j - i), slice_at_mut::<T>(dp, i, j - i))
+                    };
+                    ops::copy(dv, sv)
+                });
+            });
+            Ok(())
+        })
+    }
+
+    fn scale(&self, src: ElemSlice<'_>, dst: ElemSliceMut<'_>, q: f64) -> Result<()> {
+        for_dtype!(dst.dtype(), T, {
+            let s = expect_t::<T>(src)?;
+            let d = expect_t_mut::<T>(dst)?;
+            check_len(d.len(), s.len())?;
+            let q = T::from_f64(q);
+            let (sp, dp, n) = (s.as_ptr() as usize, d.as_mut_ptr() as usize, d.len());
+            let (threads, tile) = (self.threads, self.tile_elems::<T>());
+            self.pool().run(move |tid| {
+                let (lo, hi) = chunk_bounds(threads, n, tid);
+                tiled!(lo, hi, tile, |i, j| {
+                    // SAFETY: as in `copy`.
+                    let (sv, dv) = unsafe {
+                        (slice_at::<T>(sp, i, j - i), slice_at_mut::<T>(dp, i, j - i))
+                    };
+                    ops::scale(dv, sv, q)
+                });
+            });
+            Ok(())
+        })
+    }
+
+    fn add(&self, a: ElemSlice<'_>, b: ElemSlice<'_>, dst: ElemSliceMut<'_>) -> Result<()> {
+        for_dtype!(dst.dtype(), T, {
+            let sa = expect_t::<T>(a)?;
+            let sb = expect_t::<T>(b)?;
+            let d = expect_t_mut::<T>(dst)?;
+            check_len(d.len(), sa.len())?;
+            check_len(d.len(), sb.len())?;
+            let (ap, bp, dp, n) = (
+                sa.as_ptr() as usize,
+                sb.as_ptr() as usize,
+                d.as_mut_ptr() as usize,
+                d.len(),
+            );
+            let (threads, tile) = (self.threads, self.tile_elems::<T>());
+            self.pool().run(move |tid| {
+                let (lo, hi) = chunk_bounds(threads, n, tid);
+                tiled!(lo, hi, tile, |i, j| {
+                    // SAFETY: as in `copy`.
+                    let (av, bv, dv) = unsafe {
+                        (
+                            slice_at::<T>(ap, i, j - i),
+                            slice_at::<T>(bp, i, j - i),
+                            slice_at_mut::<T>(dp, i, j - i),
+                        )
+                    };
+                    ops::add(dv, av, bv)
+                });
+            });
+            Ok(())
+        })
+    }
+
+    fn triad(
+        &self,
+        b: ElemSlice<'_>,
+        c: ElemSlice<'_>,
+        dst: ElemSliceMut<'_>,
+        q: f64,
+    ) -> Result<()> {
+        for_dtype!(dst.dtype(), T, {
+            let sb = expect_t::<T>(b)?;
+            let sc = expect_t::<T>(c)?;
+            let d = expect_t_mut::<T>(dst)?;
+            check_len(d.len(), sb.len())?;
+            check_len(d.len(), sc.len())?;
+            let q = T::from_f64(q);
+            let (bp, cp, dp, n) = (
+                sb.as_ptr() as usize,
+                sc.as_ptr() as usize,
+                d.as_mut_ptr() as usize,
+                d.len(),
+            );
+            let (threads, tile) = (self.threads, self.tile_elems::<T>());
+            self.pool().run(move |tid| {
+                let (lo, hi) = chunk_bounds(threads, n, tid);
+                tiled!(lo, hi, tile, |i, j| {
+                    // SAFETY: as in `copy`.
+                    let (bv, cv, dv) = unsafe {
+                        (
+                            slice_at::<T>(bp, i, j - i),
+                            slice_at::<T>(cp, i, j - i),
+                            slice_at_mut::<T>(dp, i, j - i),
+                        )
+                    };
+                    ops::triad(dv, bv, cv, q)
+                });
+            });
+            Ok(())
+        })
+    }
+
+    /// Plan execution is transport-bound, not compute-bound, so the
+    /// transfer list runs serially on the caller — identical bytes and
+    /// ordering to the host backend by construction.
+    fn execute_plan(
+        &self,
+        plan: &RemapPlan,
+        src: ElemSlice<'_>,
+        dst: ElemSliceMut<'_>,
+        pid: Pid,
+        t: &dyn Transport,
+        epoch: u64,
+    ) -> Result<()> {
+        execute_plan_erased(plan, src, dst, pid, t, epoch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::HostBackend;
+    use super::*;
+
+    #[test]
+    fn threaded_matches_host_bitwise() {
+        let host = HostBackend::new();
+        // A tiny tile so even a small vector crosses tile boundaries,
+        // and more threads than divide n evenly.
+        let th = ChunkedThreadedBackend::with_tile(3, 64);
+        let n = 1013;
+        let a: Vec<f64> = (0..n).map(|i| i as f64 * 0.25 - 7.0).collect();
+        let b: Vec<f64> = (0..n).map(|i| (i * i % 97) as f64).collect();
+        let q = 0.414;
+
+        let mut dh = vec![0.0f64; n];
+        let mut dt = vec![0.0f64; n];
+        host.scale(f64::erase(&a), f64::erase_mut(&mut dh), q).unwrap();
+        th.scale(f64::erase(&a), f64::erase_mut(&mut dt), q).unwrap();
+        assert_eq!(dh, dt);
+
+        host.add(f64::erase(&a), f64::erase(&b), f64::erase_mut(&mut dh))
+            .unwrap();
+        th.add(f64::erase(&a), f64::erase(&b), f64::erase_mut(&mut dt))
+            .unwrap();
+        assert_eq!(dh, dt);
+
+        host.triad(f64::erase(&b), f64::erase(&a), f64::erase_mut(&mut dh), q)
+            .unwrap();
+        th.triad(f64::erase(&b), f64::erase(&a), f64::erase_mut(&mut dt), q)
+            .unwrap();
+        assert_eq!(dh, dt);
+    }
+
+    #[test]
+    fn auto_threads_and_empty_vectors() {
+        let th = ChunkedThreadedBackend::new(0);
+        assert!(th.threads() >= 1);
+        let th = ChunkedThreadedBackend::new(2);
+        let mut d: [f64; 0] = [];
+        th.copy(f64::erase(&[]), f64::erase_mut(&mut d)).unwrap();
+        let a = [5i64];
+        let mut id = [0i64];
+        th.copy(i64::erase(&a), i64::erase_mut(&mut id)).unwrap();
+        assert_eq!(id, [5]);
+    }
+
+    #[test]
+    fn base_core_defaults_to_zero_without_worker_env() {
+        // In-process case: no DISTARRAY_* env → leader window.
+        assert_eq!(process_base_core(), 0);
+    }
+}

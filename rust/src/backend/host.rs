@@ -1,0 +1,166 @@
+//! [`HostBackend`] — the crate's classic serial execution path moved
+//! behind the [`Backend`] trait.
+//!
+//! Kernels are exactly [`crate::stream::ops`] (the `.loc`
+//! performance-guarantee loops LLVM auto-vectorizes), and plan
+//! execution is exactly the darray remap executor — so results are
+//! bit-identical to the pre-backend code paths, which the
+//! backend-equivalence property tests assert.
+
+use super::{
+    check_len, execute_plan_erased, expect_t, expect_t_mut, for_dtype, memcpy_erased, Backend,
+    BackendKind, Result,
+};
+use crate::comm::Transport;
+use crate::darray::RemapPlan;
+use crate::dmap::Pid;
+use crate::element::{Dtype, ElemSlice, ElemSliceMut, Element};
+use crate::stream::ops;
+
+/// Serial host loops (always available).
+#[derive(Debug, Default)]
+pub struct HostBackend;
+
+impl HostBackend {
+    pub fn new() -> HostBackend {
+        HostBackend
+    }
+}
+
+impl Backend for HostBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Host
+    }
+
+    fn prepare_alloc(&self, _dtype: Dtype, _len: usize) -> Result<()> {
+        Ok(())
+    }
+
+    fn upload(&self, host: ElemSlice<'_>, dev: ElemSliceMut<'_>) -> Result<()> {
+        memcpy_erased(host, dev)
+    }
+
+    fn download(&self, dev: ElemSlice<'_>, host: ElemSliceMut<'_>) -> Result<()> {
+        memcpy_erased(dev, host)
+    }
+
+    fn copy(&self, src: ElemSlice<'_>, dst: ElemSliceMut<'_>) -> Result<()> {
+        for_dtype!(dst.dtype(), T, {
+            let s = expect_t::<T>(src)?;
+            let d = expect_t_mut::<T>(dst)?;
+            check_len(d.len(), s.len())?;
+            ops::copy(d, s);
+            Ok(())
+        })
+    }
+
+    fn scale(&self, src: ElemSlice<'_>, dst: ElemSliceMut<'_>, q: f64) -> Result<()> {
+        for_dtype!(dst.dtype(), T, {
+            let s = expect_t::<T>(src)?;
+            let d = expect_t_mut::<T>(dst)?;
+            check_len(d.len(), s.len())?;
+            ops::scale(d, s, T::from_f64(q));
+            Ok(())
+        })
+    }
+
+    fn add(&self, a: ElemSlice<'_>, b: ElemSlice<'_>, dst: ElemSliceMut<'_>) -> Result<()> {
+        for_dtype!(dst.dtype(), T, {
+            let sa = expect_t::<T>(a)?;
+            let sb = expect_t::<T>(b)?;
+            let d = expect_t_mut::<T>(dst)?;
+            check_len(d.len(), sa.len())?;
+            check_len(d.len(), sb.len())?;
+            ops::add(d, sa, sb);
+            Ok(())
+        })
+    }
+
+    fn triad(
+        &self,
+        b: ElemSlice<'_>,
+        c: ElemSlice<'_>,
+        dst: ElemSliceMut<'_>,
+        q: f64,
+    ) -> Result<()> {
+        for_dtype!(dst.dtype(), T, {
+            let sb = expect_t::<T>(b)?;
+            let sc = expect_t::<T>(c)?;
+            let d = expect_t_mut::<T>(dst)?;
+            check_len(d.len(), sb.len())?;
+            check_len(d.len(), sc.len())?;
+            ops::triad(d, sb, sc, T::from_f64(q));
+            Ok(())
+        })
+    }
+
+    fn execute_plan(
+        &self,
+        plan: &RemapPlan,
+        src: ElemSlice<'_>,
+        dst: ElemSliceMut<'_>,
+        pid: Pid,
+        t: &dyn Transport,
+        epoch: u64,
+    ) -> Result<()> {
+        execute_plan_erased(plan, src, dst, pid, t, epoch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::BackendError;
+    use super::*;
+
+    #[test]
+    fn kernels_match_definitions_every_dtype() {
+        let be = HostBackend::new();
+        let a = [1.0f64, 2.0, 3.0];
+        let b = [10.0f64, 20.0, 30.0];
+        let mut d = [0.0f64; 3];
+        be.copy(f64::erase(&a), f64::erase_mut(&mut d)).unwrap();
+        assert_eq!(d, a);
+        be.scale(f64::erase(&a), f64::erase_mut(&mut d), 2.0).unwrap();
+        assert_eq!(d, [2.0, 4.0, 6.0]);
+        be.add(f64::erase(&a), f64::erase(&b), f64::erase_mut(&mut d))
+            .unwrap();
+        assert_eq!(d, [11.0, 22.0, 33.0]);
+        be.triad(f64::erase(&b), f64::erase(&a), f64::erase_mut(&mut d), 0.5)
+            .unwrap();
+        assert_eq!(d, [10.5, 21.0, 31.5]);
+
+        let ia = [1i64, 2];
+        let mut id = [0i64; 2];
+        be.triad(i64::erase(&ia), i64::erase(&ia), i64::erase_mut(&mut id), 3.0)
+            .unwrap();
+        assert_eq!(id, [4, 8]);
+
+        let fa = [2.0f32, 4.0];
+        let mut fd = [0.0f32; 2];
+        be.scale(f32::erase(&fa), f32::erase_mut(&mut fd), 0.5).unwrap();
+        assert_eq!(fd, [1.0, 2.0]);
+
+        let ua = [u64::MAX, 1];
+        let ub = [1u64, 1];
+        let mut ud = [0u64; 2];
+        be.add(u64::erase(&ua), u64::erase(&ub), u64::erase_mut(&mut ud))
+            .unwrap();
+        assert_eq!(ud, [0, 2]);
+    }
+
+    #[test]
+    fn dtype_and_length_mismatches_are_errors() {
+        let be = HostBackend::new();
+        let a = [1.0f64; 4];
+        let mut d32 = [0.0f32; 4];
+        assert!(matches!(
+            be.copy(f64::erase(&a), f32::erase_mut(&mut d32)),
+            Err(BackendError::DtypeMismatch { .. })
+        ));
+        let mut d = [0.0f64; 3];
+        assert!(matches!(
+            be.copy(f64::erase(&a), f64::erase_mut(&mut d)),
+            Err(BackendError::LenMismatch { .. })
+        ));
+    }
+}

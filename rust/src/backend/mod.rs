@@ -1,0 +1,363 @@
+//! Pluggable execution backends — the paper's temporal-scaling seam.
+//!
+//! §IV's hardware table spans CPU cores, CPU nodes, and GPU nodes
+//! across decades; the program stays the same because the
+//! distributed-array model separates *what* is owner-computed from
+//! *where* the owned bytes live and *which* engine streams them. This
+//! module reifies that seam:
+//!
+//! * [`Backend`] — an object-safe executor: allocate/upload/download
+//!   device buffers, run the four STREAM kernels, and execute a cached
+//!   [`RemapPlan`](crate::darray::RemapPlan) transfer list. Methods
+//!   speak the dtype-erased [`ElemSlice`]/[`ElemSliceMut`] views so a
+//!   `&dyn Backend` covers every sealed [`Element`] dtype.
+//! * [`DeviceBuffer`] — a typed handle to backend-owned storage
+//!   ([`buffer`]).
+//! * [`HostBackend`] — the crate's classic serial loops behind the
+//!   trait ([`host`]).
+//! * [`ChunkedThreadedBackend`] — an affinity-pinned worker pool
+//!   (reusing [`crate::launcher::pinning`]) with kernels tiled over
+//!   cache-sized chunks ([`chunked`]).
+//! * [`PjrtBackend`] — routes kernels through the AOT PJRT artifacts
+//!   ([`crate::runtime`]); reports [`BackendError::Unavailable`] in
+//!   default (offline) builds exactly like the runtime stub ([`pjrt`]).
+//! * [`BackendRegistry`] — the `--backend` axis: one constructed
+//!   instance per [`BackendKind`] ([`registry`]).
+//! * [`sched`] — the plan-driven scheduler mapping partition-local
+//!   STREAM work onto any registered backend.
+//!
+//! Remap plans stay backend-agnostic index sets (see
+//! `darray::engine`): the same cached plan drives host memcpys, pooled
+//! copies, or staged device transfers through
+//! [`Backend::execute_plan`], planning exactly once per
+//! `(src_map, dst_map, shape)`.
+
+pub mod buffer;
+pub mod chunked;
+pub mod host;
+pub mod pjrt;
+pub mod registry;
+pub mod sched;
+
+pub use buffer::DeviceBuffer;
+pub use chunked::ChunkedThreadedBackend;
+pub use host::HostBackend;
+pub use pjrt::PjrtBackend;
+pub use registry::BackendRegistry;
+pub use sched::{run_stream_dtype, run_stream_spmd_t, run_stream_t};
+
+use crate::comm::{CommError, Transport};
+use crate::darray::RemapPlan;
+use crate::dmap::Pid;
+use crate::element::{Dtype, ElemSlice, ElemSliceMut};
+
+/// Runtime identifier for a [`Backend`] — the `--backend` axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Serial host loops (the crate's classic execution path).
+    Host,
+    /// Affinity-pinned worker pool, kernels tiled over cache-sized
+    /// chunks.
+    Threaded,
+    /// AOT PJRT artifacts (unavailable without the `pjrt` feature).
+    Pjrt,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 3] =
+        [BackendKind::Host, BackendKind::Threaded, BackendKind::Pjrt];
+
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "host" => Some(BackendKind::Host),
+            "threaded" => Some(BackendKind::Threaded),
+            "pjrt" => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Host => "host",
+            BackendKind::Threaded => "threaded",
+            BackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    /// The valid `--backend` spellings, for one-line CLI errors.
+    pub fn choices() -> &'static str {
+        "host|threaded|pjrt"
+    }
+
+    /// Stable wire code (leader → worker config broadcast).
+    pub fn code(&self) -> u8 {
+        match self {
+            BackendKind::Host => 0,
+            BackendKind::Threaded => 1,
+            BackendKind::Pjrt => 2,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<BackendKind> {
+        match c {
+            0 => Some(BackendKind::Host),
+            1 => Some(BackendKind::Threaded),
+            2 => Some(BackendKind::Pjrt),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Errors surfaced by backends.
+#[derive(Debug)]
+pub enum BackendError {
+    /// The backend cannot execute in this build/environment (e.g. the
+    /// PJRT backend without the `pjrt` feature + artifacts).
+    Unavailable(BackendKind),
+    /// The backend exists but cannot run this particular request.
+    Unsupported { backend: BackendKind, what: String },
+    /// An erased view held a different dtype than the call expected.
+    DtypeMismatch { expected: Dtype, got: Dtype },
+    /// Source/destination lengths disagree.
+    LenMismatch { expected: usize, got: usize },
+    /// A [`DeviceBuffer`] was used with a backend other than its
+    /// allocator.
+    WrongBackend { buffer: BackendKind, backend: BackendKind },
+    /// The PJRT runtime failed underneath the backend.
+    Runtime(String),
+    /// Plan execution failed in the transport.
+    Comm(CommError),
+}
+
+impl std::fmt::Display for BackendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            BackendError::Unavailable(k) => write!(
+                f,
+                "backend '{k}' is unavailable in this build/environment"
+            ),
+            BackendError::Unsupported { backend, what } => {
+                write!(f, "backend '{backend}' does not support {what}")
+            }
+            BackendError::DtypeMismatch { expected, got } => {
+                write!(f, "dtype mismatch: expected {expected}, got {got}")
+            }
+            BackendError::LenMismatch { expected, got } => {
+                write!(f, "length mismatch: expected {expected}, got {got}")
+            }
+            BackendError::WrongBackend { buffer, backend } => write!(
+                f,
+                "buffer allocated on backend '{buffer}' used with backend '{backend}'"
+            ),
+            BackendError::Runtime(m) => write!(f, "runtime error: {m}"),
+            BackendError::Comm(e) => write!(f, "communication failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for BackendError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            BackendError::Comm(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<CommError> for BackendError {
+    fn from(e: CommError) -> Self {
+        BackendError::Comm(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, BackendError>;
+
+/// An execution backend: typed device buffers + the four STREAM
+/// kernels + remap-plan execution, behind an object-safe interface.
+///
+/// All methods speak [`ElemSlice`]/[`ElemSliceMut`]; generic call
+/// sites erase with [`crate::element::Element::erase`] (or go through
+/// [`DeviceBuffer`] / [`sched`], which do it for them). Scalars cross
+/// as `f64` and are narrowed with `Element::from_f64`, matching how
+/// the CLI's single `q` parameterizes every dtype.
+pub trait Backend: Send + Sync {
+    /// Which axis value this backend implements.
+    fn kind(&self) -> BackendKind;
+
+    /// Can this backend execute in this build/environment?
+    fn available(&self) -> bool {
+        true
+    }
+
+    /// Capability gate run before a [`DeviceBuffer`] is created:
+    /// checks availability and (for device backends) dtype support.
+    fn prepare_alloc(&self, dtype: Dtype, len: usize) -> Result<()>;
+
+    /// Host → device copy. Both views must hold the same dtype/length.
+    fn upload(&self, host: ElemSlice<'_>, dev: ElemSliceMut<'_>) -> Result<()>;
+
+    /// Device → host copy.
+    fn download(&self, dev: ElemSlice<'_>, host: ElemSliceMut<'_>) -> Result<()>;
+
+    /// STREAM Copy: `dst[i] = src[i]`.
+    fn copy(&self, src: ElemSlice<'_>, dst: ElemSliceMut<'_>) -> Result<()>;
+
+    /// STREAM Scale: `dst[i] = q · src[i]`.
+    fn scale(&self, src: ElemSlice<'_>, dst: ElemSliceMut<'_>, q: f64) -> Result<()>;
+
+    /// STREAM Add: `dst[i] = a[i] + b[i]`.
+    fn add(&self, a: ElemSlice<'_>, b: ElemSlice<'_>, dst: ElemSliceMut<'_>) -> Result<()>;
+
+    /// STREAM Triad: `dst[i] = b[i] + q · c[i]`.
+    fn triad(&self, b: ElemSlice<'_>, c: ElemSlice<'_>, dst: ElemSliceMut<'_>, q: f64)
+        -> Result<()>;
+
+    /// Execute a prebuilt remap plan's transfer list for one PID:
+    /// local pieces move within this backend's buffers, remote pieces
+    /// travel over `t`. The plan is a backend-agnostic index set — the
+    /// same cached [`RemapPlan`] drives every backend.
+    fn execute_plan(
+        &self,
+        plan: &RemapPlan,
+        src: ElemSlice<'_>,
+        dst: ElemSliceMut<'_>,
+        pid: Pid,
+        t: &dyn Transport,
+        epoch: u64,
+    ) -> Result<()>;
+}
+
+/// Dispatch a dtype token to a monomorphic body: `$T` is aliased to
+/// the concrete sealed type inside `$body`.
+macro_rules! for_dtype {
+    ($dt:expr, $T:ident, $body:block) => {
+        match $dt {
+            $crate::element::Dtype::F32 => {
+                type $T = f32;
+                $body
+            }
+            $crate::element::Dtype::F64 => {
+                type $T = f64;
+                $body
+            }
+            $crate::element::Dtype::I64 => {
+                type $T = i64;
+                $body
+            }
+            $crate::element::Dtype::U64 => {
+                type $T = u64;
+                $body
+            }
+        }
+    };
+}
+pub(crate) use for_dtype;
+
+/// Recover a typed slice from an erased view or report the mismatch.
+pub(crate) fn expect_t<T: crate::element::Element>(s: ElemSlice<'_>) -> Result<&[T]> {
+    let got = s.dtype();
+    T::unerase(s).ok_or(BackendError::DtypeMismatch { expected: T::DTYPE, got })
+}
+
+/// Mutable counterpart of [`expect_t`].
+pub(crate) fn expect_t_mut<T: crate::element::Element>(s: ElemSliceMut<'_>) -> Result<&mut [T]> {
+    let got = s.dtype();
+    T::unerase_mut(s).ok_or(BackendError::DtypeMismatch { expected: T::DTYPE, got })
+}
+
+/// Equal-length guard shared by every kernel implementation.
+pub(crate) fn check_len(expected: usize, got: usize) -> Result<()> {
+    if expected != got {
+        return Err(BackendError::LenMismatch { expected, got });
+    }
+    Ok(())
+}
+
+/// Host-visible memcpy between two erased views of the same dtype —
+/// the upload/download implementation every host-backed backend
+/// shares (one definition, three backends).
+pub(crate) fn memcpy_erased(src: ElemSlice<'_>, dst: ElemSliceMut<'_>) -> Result<()> {
+    for_dtype!(dst.dtype(), T, {
+        let s = expect_t::<T>(src)?;
+        let d = expect_t_mut::<T>(dst)?;
+        check_len(d.len(), s.len())?;
+        d.copy_from_slice(s);
+        Ok(())
+    })
+}
+
+/// Erased wrapper over
+/// [`execute_plan_typed`](crate::darray::engine::execute_plan_typed) —
+/// the plan execution every host-visible backend shares.
+pub(crate) fn execute_plan_erased(
+    plan: &RemapPlan,
+    src: ElemSlice<'_>,
+    dst: ElemSliceMut<'_>,
+    pid: Pid,
+    t: &dyn Transport,
+    epoch: u64,
+) -> Result<()> {
+    for_dtype!(dst.dtype(), T, {
+        let s = expect_t::<T>(src)?;
+        let d = expect_t_mut::<T>(dst)?;
+        crate::darray::engine::execute_plan_typed::<T>(plan, s, d, pid, t, epoch)?;
+        Ok(())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_name_code_roundtrip() {
+        for k in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+            assert_eq!(BackendKind::from_code(k.code()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("cuda"), None);
+        assert_eq!(BackendKind::from_code(7), None);
+        assert_eq!(BackendKind::choices(), "host|threaded|pjrt");
+    }
+
+    #[test]
+    fn errors_render_one_line() {
+        let msgs = [
+            BackendError::Unavailable(BackendKind::Pjrt).to_string(),
+            BackendError::DtypeMismatch {
+                expected: crate::element::Dtype::F64,
+                got: crate::element::Dtype::F32,
+            }
+            .to_string(),
+            BackendError::LenMismatch { expected: 4, got: 5 }.to_string(),
+            BackendError::WrongBackend {
+                buffer: BackendKind::Host,
+                backend: BackendKind::Threaded,
+            }
+            .to_string(),
+        ];
+        for m in msgs {
+            assert!(!m.is_empty() && !m.contains('\n'));
+        }
+    }
+
+    #[test]
+    fn expect_helpers_enforce_dtype() {
+        let v = [1.0f64, 2.0];
+        let e = <f64 as crate::element::Element>::erase(&v);
+        assert!(expect_t::<f64>(e).is_ok());
+        assert!(matches!(
+            expect_t::<f32>(e),
+            Err(BackendError::DtypeMismatch { .. })
+        ));
+        assert!(check_len(3, 3).is_ok());
+        assert!(matches!(check_len(3, 4), Err(BackendError::LenMismatch { .. })));
+    }
+}

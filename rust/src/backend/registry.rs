@@ -1,0 +1,78 @@
+//! [`BackendRegistry`] — the constructed instances behind the
+//! `--backend` axis.
+//!
+//! One registry per run: the leader builds it to validate the flag and
+//! every process (leader and workers alike) builds its own from the
+//! broadcast [`RunConfig`](crate::coordinator::RunConfig) — backends
+//! hold process-local resources (thread pools, compiled artifacts)
+//! that cannot travel over the wire.
+
+use super::{Backend, BackendKind, ChunkedThreadedBackend, HostBackend, PjrtBackend};
+use std::sync::Arc;
+
+/// The set of constructed backends for one process.
+pub struct BackendRegistry {
+    entries: Vec<Arc<dyn Backend>>,
+}
+
+impl BackendRegistry {
+    /// Construct one instance per [`BackendKind`]: host, threaded
+    /// (`threads` pool width, 0 = one per online core), and PJRT over
+    /// `artifacts_dir` (available only in `pjrt`-feature builds).
+    pub fn with_defaults(threads: usize, artifacts_dir: &str) -> BackendRegistry {
+        BackendRegistry {
+            entries: vec![
+                Arc::new(HostBackend::new()) as Arc<dyn Backend>,
+                Arc::new(ChunkedThreadedBackend::new(threads)) as Arc<dyn Backend>,
+                Arc::new(PjrtBackend::new(artifacts_dir)) as Arc<dyn Backend>,
+            ],
+        }
+    }
+
+    /// The registered backend for `kind` (the default registry covers
+    /// every kind).
+    pub fn get(&self, kind: BackendKind) -> Option<&Arc<dyn Backend>> {
+        self.entries.iter().find(|b| b.kind() == kind)
+    }
+
+    /// Every registered backend, in registration order.
+    pub fn backends(&self) -> &[Arc<dyn Backend>] {
+        &self.entries
+    }
+
+    /// The backends that can actually execute in this build.
+    pub fn available(&self) -> impl Iterator<Item = &Arc<dyn Backend>> {
+        self.entries.iter().filter(|b| b.available())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_cover_every_kind() {
+        let reg = BackendRegistry::with_defaults(2, "artifacts");
+        for kind in BackendKind::ALL {
+            let be = reg.get(kind).expect("registered");
+            assert_eq!(be.kind(), kind);
+        }
+        assert_eq!(reg.backends().len(), 3);
+    }
+
+    #[test]
+    fn host_and_threaded_always_available() {
+        let reg = BackendRegistry::with_defaults(1, "artifacts");
+        let avail: Vec<BackendKind> = reg.available().map(|b| b.kind()).collect();
+        assert!(avail.contains(&BackendKind::Host));
+        assert!(avail.contains(&BackendKind::Threaded));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_unavailable_in_default_build() {
+        let reg = BackendRegistry::with_defaults(1, "artifacts");
+        assert!(!reg.get(BackendKind::Pjrt).unwrap().available());
+        assert_eq!(reg.available().count(), 2);
+    }
+}

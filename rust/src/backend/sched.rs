@@ -1,0 +1,223 @@
+//! Plan-driven STREAM scheduling over any [`Backend`].
+//!
+//! The scheduler is the backend analogue of Algorithm 2: it maps one
+//! PID's partition-local share of the global vectors onto device
+//! buffers, drives the four kernels through the trait with the same
+//! tic/toc discipline as the native engines, and validates against the
+//! §III closed forms. The map algebra decides *what* is local; the
+//! backend decides *how* it executes — user code (and the coordinator
+//! protocol above it) stays identical across `--backend` values, which
+//! is the paper's temporal-scaling claim made concrete.
+
+use super::{Backend, BackendError, DeviceBuffer, Result};
+use crate::dmap::{Dmap, Pid};
+use crate::element::{Dtype, Element};
+use crate::stream::serial::{A0, B0, C0};
+use crate::stream::timing::{OpTimes, Timer};
+use crate::stream::validate::{expected, tolerance_for, ValidationReport};
+use crate::stream::{aggregate, AggregateResult, StreamResult};
+use std::sync::Arc;
+
+/// Max |x − e| over a downloaded vector — the same fold `validate_t`
+/// runs, applied one vector at a time so a single staging buffer
+/// serves all three downloads.
+fn max_dev<T: Element>(xs: &[T], e: f64) -> f64 {
+    xs.iter().map(|&x| (x.to_f64() - e).abs()).fold(0.0, f64::max)
+}
+
+/// Run one PID's STREAM share on `backend` at dtype `T` (SPMD: call on
+/// every PID of `map` with the same arguments).
+///
+/// Memory: three device buffers plus ONE host staging vector (reused
+/// for init uploads and the per-vector validation downloads) — 4·N
+/// local elements total, vs the 3·N of the darray path; host-class
+/// backends' buffers ARE host memory, so staging is the only overhead.
+pub fn run_stream_t<T: Element>(
+    backend: &dyn Backend,
+    map: &Dmap,
+    n_global: usize,
+    nt: usize,
+    q: T,
+    pid: Pid,
+) -> Result<StreamResult> {
+    assert!(nt >= 1);
+    if !backend.available() {
+        return Err(BackendError::Unavailable(backend.kind()));
+    }
+    let shape = [n_global];
+    let n_local = map.local_size(pid, &shape);
+
+    let mut da = DeviceBuffer::<T>::alloc(backend, n_local)?;
+    let mut db = DeviceBuffer::<T>::alloc(backend, n_local)?;
+    let mut dc = DeviceBuffer::<T>::alloc(backend, n_local)?;
+    let mut stage = vec![T::from_f64(A0); n_local];
+    da.upload_from(backend, &stage)?;
+    stage.fill(T::from_f64(B0));
+    db.upload_from(backend, &stage)?;
+    stage.fill(T::from_f64(C0));
+    dc.upload_from(backend, &stage)?;
+
+    let qf = q.to_f64();
+    let mut times = OpTimes::zero();
+    for _ in 0..nt {
+        let t = Timer::tic();
+        backend.copy(da.view(), dc.view_mut())?; // C = A
+        times.copy += t.toc();
+
+        let t = Timer::tic();
+        backend.scale(dc.view(), db.view_mut(), qf)?; // B = q·C
+        times.scale += t.toc();
+
+        let t = Timer::tic();
+        backend.add(da.view(), db.view(), dc.view_mut())?; // C = A + B
+        times.add += t.toc();
+
+        let t = Timer::tic();
+        backend.triad(db.view(), dc.view(), da.view_mut(), qf)?; // A = B + q·C
+        times.triad += t.toc();
+    }
+
+    // §III closed-form validation, identical arithmetic to
+    // `validate_t` but one downloaded vector at a time.
+    let (ea, eb, ec) = expected(A0, qf, nt);
+    da.download_into(backend, &mut stage)?;
+    let err_a = max_dev(&stage, ea);
+    db.download_into(backend, &mut stage)?;
+    let err_b = max_dev(&stage, eb);
+    dc.download_into(backend, &mut stage)?;
+    let err_c = max_dev(&stage, ec);
+    let tol = tolerance_for(T::TOL_BASE, nt);
+    let validation = ValidationReport {
+        passed: err_a <= tol && err_b <= tol && err_c <= tol,
+        err_a,
+        err_b,
+        err_c,
+    };
+    Ok(StreamResult {
+        n_global,
+        n_local,
+        nt,
+        width: T::WIDTH,
+        backend: backend.kind(),
+        times,
+        validation,
+    })
+}
+
+/// Run every PID of `map` as one OS thread on a shared backend and
+/// aggregate — the in-process SPMD driver of the backend path.
+pub fn run_stream_spmd_t<T: Element>(
+    backend: &Arc<dyn Backend>,
+    map: &Dmap,
+    n_global: usize,
+    nt: usize,
+    q: T,
+) -> Result<AggregateResult> {
+    let handles: Vec<_> = map
+        .pids()
+        .iter()
+        .map(|&p| {
+            let (b, m) = (backend.clone(), map.clone());
+            std::thread::spawn(move || run_stream_t::<T>(b.as_ref(), &m, n_global, nt, q, p))
+        })
+        .collect();
+    let mut results = Vec::with_capacity(handles.len());
+    for h in handles {
+        results.push(h.join().expect("scheduler thread panicked")?);
+    }
+    Ok(aggregate(&results).expect("map has at least one PID"))
+}
+
+/// Dispatch a runtime dtype token to [`run_stream_t`], narrowing the
+/// scale factor exactly as the engine-level dispatch does.
+pub fn run_stream_dtype(
+    backend: &dyn Backend,
+    map: &Dmap,
+    n_global: usize,
+    nt: usize,
+    q: f64,
+    dtype: Dtype,
+    pid: Pid,
+) -> Result<StreamResult> {
+    match dtype {
+        Dtype::F64 => run_stream_t::<f64>(backend, map, n_global, nt, q, pid),
+        Dtype::F32 => run_stream_t::<f32>(backend, map, n_global, nt, q as f32, pid),
+        Dtype::I64 => run_stream_t::<i64>(backend, map, n_global, nt, q as i64, pid),
+        Dtype::U64 => run_stream_t::<u64>(backend, map, n_global, nt, q as u64, pid),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{BackendKind, BackendRegistry};
+    use super::*;
+    use crate::stream::STREAM_Q;
+
+    #[test]
+    fn host_backend_stream_validates() {
+        let reg = BackendRegistry::with_defaults(1, "artifacts");
+        let be = reg.get(BackendKind::Host).unwrap();
+        let r = run_stream_t::<f64>(be.as_ref(), &Dmap::block_1d(1), 10_000, 5, STREAM_Q, 0)
+            .unwrap();
+        assert!(r.validation.passed, "{:?}", r.validation);
+        assert_eq!(r.backend, BackendKind::Host);
+        assert_eq!(r.n_local, 10_000);
+    }
+
+    #[test]
+    fn threaded_backend_stream_validates_and_names_itself() {
+        let reg = BackendRegistry::with_defaults(3, "artifacts");
+        let be = reg.get(BackendKind::Threaded).unwrap();
+        let r = run_stream_t::<f64>(be.as_ref(), &Dmap::block_1d(1), 40_001, 4, STREAM_Q, 0)
+            .unwrap();
+        assert!(r.validation.passed, "{:?}", r.validation);
+        assert_eq!(r.backend, BackendKind::Threaded);
+    }
+
+    #[test]
+    fn spmd_driver_covers_the_map() {
+        let reg = BackendRegistry::with_defaults(2, "artifacts");
+        let be = reg.get(BackendKind::Threaded).unwrap();
+        let agg = run_stream_spmd_t::<f32>(
+            be,
+            &Dmap::block_1d(3),
+            3 * 2048,
+            3,
+            std::f32::consts::SQRT_2 - 1.0,
+        )
+        .unwrap();
+        assert!(agg.all_valid, "worst err {}", agg.worst_err);
+        assert_eq!(agg.np, 3);
+        assert_eq!(agg.width, 4);
+        assert_eq!(agg.backend, BackendKind::Threaded);
+    }
+
+    #[test]
+    fn dtype_dispatch_covers_all_tokens() {
+        let reg = BackendRegistry::with_defaults(2, "artifacts");
+        let be = reg.get(BackendKind::Host).unwrap();
+        for dtype in [Dtype::F64, Dtype::F32, Dtype::I64, Dtype::U64] {
+            let r = run_stream_dtype(
+                be.as_ref(),
+                &Dmap::block_1d(1),
+                2048,
+                3,
+                STREAM_Q,
+                dtype,
+                0,
+            )
+            .unwrap();
+            assert!(r.validation.passed, "{dtype}: {:?}", r.validation);
+            assert_eq!(r.width, dtype.width());
+        }
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn unavailable_backend_errors_before_allocating() {
+        let reg = BackendRegistry::with_defaults(1, "artifacts");
+        let be = reg.get(BackendKind::Pjrt).unwrap();
+        let err = run_stream_t::<f64>(be.as_ref(), &Dmap::block_1d(1), 64, 1, STREAM_Q, 0);
+        assert!(matches!(err, Err(BackendError::Unavailable(BackendKind::Pjrt))));
+    }
+}

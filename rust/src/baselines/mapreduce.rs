@@ -146,6 +146,7 @@ fn to_result(n: usize, nt: usize, d: &TaskDone, passed: bool) -> StreamResult {
         n_local: d.n_local,
         nt,
         width: 8,
+        backend: crate::backend::BackendKind::Host,
         times: OpTimes {
             copy: d.times[0],
             scale: d.times[1],

@@ -107,7 +107,15 @@ pub fn run_msgpass_stream(t: &dyn Transport, n: usize, nt: usize, q: f64) -> Res
         validation = validate(&a, &b, &c, A0, q, nt);
     }
 
-    Ok(StreamResult { n_global: n, n_local, nt, width: 8, times, validation })
+    Ok(StreamResult {
+        n_global: n,
+        n_local,
+        nt,
+        width: 8,
+        backend: crate::backend::BackendKind::Host,
+        times,
+        validation,
+    })
 }
 
 #[cfg(test)]

@@ -13,6 +13,7 @@
 //! }
 //! ```
 
+use crate::backend::BackendKind;
 use crate::coordinator::{EngineKind, MapKind, RunConfig};
 use crate::element::Dtype;
 use crate::json::Json;
@@ -78,6 +79,8 @@ impl LaunchConfig {
                 map: MapKind::Block,
                 engine: EngineKind::Native,
                 dtype: Dtype::F64,
+                backend: BackendKind::Host,
+                threads: 1,
                 artifacts: "artifacts".into(),
             },
         }
@@ -128,12 +131,25 @@ impl LaunchConfig {
             cfg.run.dtype = Dtype::parse(s)
                 .ok_or_else(|| ConfigError::Field("dtype", format!("unknown dtype '{s}'")))?;
         }
+        if let Some(v) = j.get("backend") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| ConfigError::Field("backend", "must be a string".into()))?;
+            cfg.run.backend = BackendKind::parse(s).ok_or_else(|| {
+                ConfigError::Field(
+                    "backend",
+                    format!("unknown backend '{s}' (expected {})", BackendKind::choices()),
+                )
+            })?;
+        }
         if let Some(v) = j.get("artifacts") {
             cfg.run.artifacts = v
                 .as_str()
                 .ok_or_else(|| ConfigError::Field("artifacts", "must be a string".into()))?
                 .to_string();
         }
+        // The threaded backend's pool width is the Ntpn axis.
+        cfg.run.threads = cfg.triples.ntpn;
         Ok(cfg)
     }
 
@@ -152,7 +168,7 @@ mod tests {
         let cfg = LaunchConfig::from_json(
             r#"{"triples": "2x4x2", "n": 1024, "nt": 3, "q": 0.5,
                 "map": "blockcyclic:16", "engine": "pjrt-fused",
-                "dtype": "f32", "artifacts": "art"}"#,
+                "dtype": "f32", "backend": "threaded", "artifacts": "art"}"#,
         )
         .unwrap();
         assert_eq!(cfg.triples, Triples::new(2, 4, 2));
@@ -162,6 +178,8 @@ mod tests {
         assert_eq!(cfg.run.map, MapKind::BlockCyclic { block_size: 16 });
         assert_eq!(cfg.run.engine, EngineKind::PjrtFused);
         assert_eq!(cfg.run.dtype, Dtype::F32);
+        assert_eq!(cfg.run.backend, BackendKind::Threaded);
+        assert_eq!(cfg.run.threads, 2, "pool width follows the Ntpn axis");
         assert_eq!(cfg.run.artifacts, "art");
     }
 
@@ -187,6 +205,10 @@ mod tests {
         assert!(matches!(
             LaunchConfig::from_json(r#"{"dtype": "f16"}"#),
             Err(ConfigError::Field("dtype", _))
+        ));
+        assert!(matches!(
+            LaunchConfig::from_json(r#"{"backend": "cuda"}"#),
+            Err(ConfigError::Field("backend", _))
         ));
         assert!(matches!(
             LaunchConfig::from_json("{"),

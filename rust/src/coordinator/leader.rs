@@ -46,6 +46,8 @@ mod tests {
             map,
             engine: EngineKind::Native,
             dtype: crate::element::Dtype::F64,
+            backend: crate::backend::BackendKind::Host,
+            threads: 1,
             artifacts: "artifacts".into(),
         }
     }
@@ -92,6 +94,34 @@ mod tests {
         let (agg, _) = run_leader(&leader, &cfg(4096, 2, MapKind::Block)).unwrap();
         assert!(agg.all_valid);
         assert!(leader.stats().is_silent(), "np=1 needs no messages");
+    }
+
+    /// The `--backend threaded` acceptance path: a coordinated run
+    /// completes, validates, and every per-process result names the
+    /// backend that produced it.
+    #[test]
+    fn threaded_backend_through_the_full_protocol() {
+        use crate::backend::BackendKind;
+        let np = 3;
+        let mut world = ChannelHub::world(np);
+        let leader = world.remove(0);
+        let handles: Vec<_> = world
+            .into_iter()
+            .map(|t| thread::spawn(move || run_worker(&t).unwrap()))
+            .collect();
+        let mut c = cfg(3 * 4096, 3, MapKind::Block);
+        c.backend = BackendKind::Threaded;
+        c.threads = 2;
+        let (agg, results) = run_leader(&leader, &c).unwrap();
+        for h in handles {
+            let rep = h.join().unwrap();
+            assert_eq!(rep.backend, BackendKind::Threaded);
+        }
+        assert!(agg.all_valid, "worst err {}", agg.worst_err);
+        assert_eq!(agg.backend, BackendKind::Threaded);
+        for r in &results {
+            assert_eq!(r.backend, BackendKind::Threaded);
+        }
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Wire types for the leader/worker protocol.
 
+use crate::backend::BackendKind;
 use crate::comm::{CommError, Decode, Encode, WireReader, WireWriter};
 use crate::dmap::Dmap;
 use crate::element::Dtype;
@@ -90,6 +91,11 @@ pub struct RunConfig {
     /// Element dtype of the benchmark vectors (`--dtype` axis; the
     /// native engine supports every float dtype, PJRT is f64-only).
     pub dtype: Dtype,
+    /// Execution backend for the native engine (`--backend` axis).
+    pub backend: BackendKind,
+    /// Worker pool width for the threaded backend — the `Ntpn` axis of
+    /// the triples spec (0 = one thread per online core).
+    pub threads: usize,
     /// Artifacts directory for the PJRT engine.
     pub artifacts: String,
 }
@@ -108,6 +114,8 @@ impl Encode for RunConfig {
             EngineKind::PjrtFused => 2,
         });
         w.put_u8(self.dtype.code());
+        w.put_u8(self.backend.code());
+        w.put_usize(self.threads);
         w.put_str(&self.artifacts);
     }
 }
@@ -134,8 +142,12 @@ impl Decode for RunConfig {
         let dcode = r.get_u8()?;
         let dtype = Dtype::from_code(dcode)
             .ok_or_else(|| CommError::Malformed(format!("bad dtype code {dcode}")))?;
+        let bcode = r.get_u8()?;
+        let backend = BackendKind::from_code(bcode)
+            .ok_or_else(|| CommError::Malformed(format!("bad backend code {bcode}")))?;
+        let threads = r.get_usize()?;
         let artifacts = r.get_str()?;
-        Ok(RunConfig { n_global, nt, q, map, engine, dtype, artifacts })
+        Ok(RunConfig { n_global, nt, q, map, engine, dtype, backend, threads, artifacts })
     }
 }
 
@@ -148,6 +160,8 @@ pub struct WorkerReport {
     pub nt: usize,
     /// Bytes per element of the streamed dtype.
     pub width: usize,
+    /// Execution backend that produced the result.
+    pub backend: BackendKind,
     pub times: [f64; 4],
     pub passed: bool,
     pub errs: [f64; 3],
@@ -161,6 +175,7 @@ impl WorkerReport {
             n_local: r.n_local,
             nt: r.nt,
             width: r.width,
+            backend: r.backend,
             times: r.times.as_array(),
             passed: r.validation.passed,
             errs: [r.validation.err_a, r.validation.err_b, r.validation.err_c],
@@ -173,6 +188,7 @@ impl WorkerReport {
             n_local: self.n_local,
             nt: self.nt,
             width: self.width,
+            backend: self.backend,
             times: OpTimes {
                 copy: self.times[0],
                 scale: self.times[1],
@@ -196,6 +212,7 @@ impl Encode for WorkerReport {
         w.put_usize(self.n_local);
         w.put_usize(self.nt);
         w.put_usize(self.width);
+        w.put_u8(self.backend.code());
         for t in self.times {
             w.put_f64(t);
         }
@@ -213,6 +230,9 @@ impl Decode for WorkerReport {
         let n_local = r.get_usize()?;
         let nt = r.get_usize()?;
         let width = r.get_usize()?;
+        let bcode = r.get_u8()?;
+        let backend = BackendKind::from_code(bcode)
+            .ok_or_else(|| CommError::Malformed(format!("bad backend code {bcode}")))?;
         let mut times = [0.0; 4];
         for t in &mut times {
             *t = r.get_f64()?;
@@ -222,7 +242,7 @@ impl Decode for WorkerReport {
         for e in &mut errs {
             *e = r.get_f64()?;
         }
-        Ok(WorkerReport { pid, n_global, n_local, nt, width, times, passed, errs })
+        Ok(WorkerReport { pid, n_global, n_local, nt, width, backend, times, passed, errs })
     }
 }
 
@@ -239,6 +259,8 @@ mod tests {
             map: MapKind::BlockCyclic { block_size: 64 },
             engine: EngineKind::Pjrt,
             dtype: Dtype::F32,
+            backend: BackendKind::Threaded,
+            threads: 4,
             artifacts: "artifacts".into(),
         };
         let got = RunConfig::from_bytes(&c.to_bytes()).unwrap();
@@ -253,6 +275,7 @@ mod tests {
             n_local: 25,
             nt: 10,
             width: 4,
+            backend: BackendKind::Threaded,
             times: [0.1, 0.2, 0.3, 0.4],
             passed: true,
             errs: [0.0, 1e-16, 0.0],
@@ -262,6 +285,7 @@ mod tests {
         let r = got.to_result();
         assert_eq!(r.times.triad, 0.4);
         assert_eq!(r.width, 4);
+        assert_eq!(r.backend, BackendKind::Threaded);
         assert!(r.validation.passed);
     }
 
@@ -285,6 +309,8 @@ mod tests {
             map: MapKind::Block,
             engine: EngineKind::Native,
             dtype: Dtype::F64,
+            backend: BackendKind::Host,
+            threads: 1,
             artifacts: String::new(),
         };
         let bytes = c.to_bytes();

@@ -1,27 +1,40 @@
 //! Worker side of the protocol: receive config → run → report.
 
 use super::results::{EngineKind, RunConfig, WorkerReport};
+use crate::backend::{run_stream_dtype, BackendRegistry};
 use crate::comm::{tags, Decode, Encode, Result, Transport};
-use crate::element::Dtype;
-use crate::stream::parallel::run_parallel_t;
 use crate::stream::timing::{OpTimes, Timer};
 use crate::stream::validate::validate;
 use crate::stream::StreamResult;
 
 /// Execute one configured STREAM run on this PID.
 ///
-/// The native engine dispatches on the config's dtype (the `--dtype`
-/// axis); the PJRT engines execute f64 artifacts regardless — the CLI
-/// rejects the combination before a run starts, this is the backstop.
+/// The native engine routes through the execution-backend subsystem:
+/// each process constructs its own [`BackendRegistry`] (backends hold
+/// process-local pools/artifacts) and the scheduler dispatches on the
+/// config's dtype (the `--dtype` axis) and backend (the `--backend`
+/// axis). The PJRT *engines* execute f64 artifacts regardless of
+/// dtype — the CLI rejects bad combinations before a run starts; the
+/// panics here are the backstop for hand-built configs.
 pub fn run_configured_stream(cfg: &RunConfig, pid: usize, np: usize) -> StreamResult {
     let map = cfg.map.to_map(np);
     match cfg.engine {
-        EngineKind::Native => match cfg.dtype {
-            Dtype::F64 => run_parallel_t::<f64>(&map, cfg.n_global, cfg.nt, cfg.q, pid),
-            Dtype::F32 => run_parallel_t::<f32>(&map, cfg.n_global, cfg.nt, cfg.q as f32, pid),
-            Dtype::I64 => run_parallel_t::<i64>(&map, cfg.n_global, cfg.nt, cfg.q as i64, pid),
-            Dtype::U64 => run_parallel_t::<u64>(&map, cfg.n_global, cfg.nt, cfg.q as u64, pid),
-        },
+        EngineKind::Native => {
+            let registry = BackendRegistry::with_defaults(cfg.threads, &cfg.artifacts);
+            let backend = registry
+                .get(cfg.backend)
+                .expect("default registry covers every BackendKind");
+            run_stream_dtype(
+                backend.as_ref(),
+                &map,
+                cfg.n_global,
+                cfg.nt,
+                cfg.q,
+                cfg.dtype,
+                pid,
+            )
+            .unwrap_or_else(|e| panic!("backend '{}': {e}", cfg.backend))
+        }
         EngineKind::Pjrt => run_pjrt_stream(cfg, pid, np),
         EngineKind::PjrtFused => run_pjrt_fused_stream(cfg, pid, np),
     }
@@ -75,6 +88,7 @@ fn run_pjrt_fused_stream(cfg: &RunConfig, pid: usize, np: usize) -> StreamResult
         n_local: eff_local,
         nt: cfg.nt,
         width: 8,
+        backend: crate::backend::BackendKind::Pjrt,
         times,
         validation,
     }
@@ -141,6 +155,7 @@ fn run_pjrt_stream(cfg: &RunConfig, pid: usize, np: usize) -> StreamResult {
         n_local: eff_local,
         nt: cfg.nt,
         width: 8,
+        backend: crate::backend::BackendKind::Pjrt,
         times,
         validation,
     }

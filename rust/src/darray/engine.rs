@@ -26,7 +26,9 @@
 //! ([`RemapEngine::plan`]) and execute through
 //! `DarrayT::assign_from_plan`.
 
+use crate::comm::{tags, Transport, WireReader, WireWriter};
 use crate::dmap::{Dmap, GlobalRange, Partition, Pid};
+use crate::element::Element;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -101,6 +103,80 @@ impl RemapPlan {
     pub fn dst_offset(&self, pid: Pid, g: usize) -> usize {
         lookup(&self.dst_offsets[&pid], g)
     }
+
+    /// Execute this plan's transfer list on an execution backend: the
+    /// typed local parts are erased into the backend currency and the
+    /// data movement is delegated to
+    /// [`Backend::execute_plan`](crate::backend::Backend::execute_plan).
+    /// The plan MUST have been built for `(src map, dst map, shape)`
+    /// of the arrays these slices belong to.
+    pub fn execute_on<T: Element>(
+        &self,
+        backend: &dyn crate::backend::Backend,
+        src: &[T],
+        dst: &mut [T],
+        pid: Pid,
+        t: &dyn Transport,
+        epoch: u64,
+    ) -> crate::backend::Result<()> {
+        backend.execute_plan(self, T::erase(src), T::erase_mut(dst), pid, t, epoch)
+    }
+}
+
+/// Execute a prebuilt remap plan for one PID's typed local parts:
+/// aligned plans degenerate to a memcpy; otherwise local pieces copy
+/// and remote pieces travel as one typed message per plan step, tagged
+/// by step index so ordering is deterministic on both sides.
+///
+/// This is the single data-movement routine behind both
+/// `DarrayT::assign_from*` and every host-class
+/// [`Backend::execute_plan`](crate::backend::Backend::execute_plan)
+/// implementation — one definition, bit-identical outcomes.
+pub fn execute_plan_typed<T: Element>(
+    plan: &RemapPlan,
+    src: &[T],
+    dst: &mut [T],
+    pid: Pid,
+    t: &dyn Transport,
+    epoch: u64,
+) -> crate::comm::Result<()> {
+    // Fast path: aligned maps → pure local copy, zero messages.
+    if plan.is_aligned() {
+        dst.copy_from_slice(src);
+        return Ok(());
+    }
+
+    // Phase 1: satisfy local pieces + send outgoing pieces.
+    for (step, &(sp, dp, r)) in plan.transfers().iter().enumerate() {
+        if sp != pid {
+            continue;
+        }
+        let s_off = plan.src_offset(pid, r.lo);
+        let src_slice = &src[s_off..s_off + r.len()];
+        if dp == pid {
+            let d_off = plan.dst_offset(pid, r.lo);
+            dst[d_off..d_off + r.len()].copy_from_slice(src_slice);
+        } else {
+            let mut w = WireWriter::with_capacity(24 + T::WIDTH * r.len());
+            w.put_u64(step as u64);
+            w.put_slice::<T>(src_slice);
+            t.send(dp, tags::pack(tags::NS_REMAP, epoch, step as u64), &w.finish())?;
+        }
+    }
+    // Phase 2: receive incoming pieces.
+    for (step, &(sp, dp, r)) in plan.transfers().iter().enumerate() {
+        if dp != pid || sp == pid {
+            continue;
+        }
+        let payload = t.recv(sp, tags::pack(tags::NS_REMAP, epoch, step as u64))?;
+        let mut rd = WireReader::new(&payload);
+        let got_step = rd.get_u64()?;
+        debug_assert_eq!(got_step as usize, step);
+        let d_off = plan.dst_offset(pid, r.lo);
+        let dst_slice = &mut dst[d_off..d_off + r.len()];
+        rd.get_slice_into::<T>(dst_slice)?;
+    }
+    Ok(())
 }
 
 /// Offset tables for every PID participating in `map`.

@@ -16,10 +16,10 @@
 //! exactly once per `(src_map, dst_map, shape)`.
 
 use super::dense::DarrayT;
-use super::engine::{RemapEngine, RemapPlan};
-use super::Result;
-use crate::comm::{tags, Transport, WireReader, WireWriter};
-use crate::dmap::Pid;
+use super::engine::{execute_plan_typed, RemapEngine, RemapPlan};
+use super::{DarrayError, Result};
+use crate::backend::{Backend, BackendError};
+use crate::comm::Transport;
 use crate::element::Element;
 
 impl<T: Element> DarrayT<T> {
@@ -76,8 +76,36 @@ impl<T: Element> DarrayT<T> {
         Ok(())
     }
 
+    /// Global assignment whose data movement runs on an execution
+    /// backend: planning goes through `engine` (exactly once per
+    /// `(src_map, dst_map, shape)` key), execution through
+    /// [`Backend::execute_plan`] — the cached plan is a
+    /// backend-agnostic index set, so the same plan drives host
+    /// memcpys, pooled copies, or staged device transfers.
+    pub fn assign_from_engine_on(
+        &mut self,
+        src: &DarrayT<T>,
+        t: &dyn Transport,
+        epoch: u64,
+        engine: &RemapEngine,
+        backend: &dyn Backend,
+    ) -> Result<()> {
+        self.check_assign_shapes(src)?;
+        let plan = engine.plan(src.map(), self.map(), self.shape());
+        let pid = self.pid();
+        plan.execute_on::<T>(backend, src.loc(), self.loc_mut(), pid, t, epoch)
+            .map_err(|e| match e {
+                BackendError::Comm(c) => DarrayError::Comm(c),
+                other => DarrayError::Unsupported(format!(
+                    "backend '{}' remap failed: {other}",
+                    backend.kind().name()
+                )),
+            })
+    }
+
     /// Execute a prebuilt remap plan: local pieces copy, remote pieces
-    /// travel as one typed message per plan step.
+    /// travel as one typed message per plan step (the shared
+    /// [`execute_plan_typed`] routine backends reuse).
     fn execute_remap(
         &mut self,
         plan: &RemapPlan,
@@ -85,45 +113,8 @@ impl<T: Element> DarrayT<T> {
         t: &dyn Transport,
         epoch: u64,
     ) -> Result<()> {
-        // Fast path: aligned maps → pure local copy, zero messages.
-        if plan.is_aligned() {
-            self.loc_mut().copy_from_slice(src.loc());
-            return Ok(());
-        }
-        let me: Pid = self.pid();
-
-        // Phase 1: satisfy local pieces + send outgoing pieces.
-        // One message per (src=me, dst≠me) plan step, tagged by step
-        // index so ordering is deterministic on both sides.
-        for (step, &(sp, dp, r)) in plan.transfers().iter().enumerate() {
-            if sp != me {
-                continue;
-            }
-            let s_off = plan.src_offset(me, r.lo);
-            let src_slice = &src.loc()[s_off..s_off + r.len()];
-            if dp == me {
-                let d_off = plan.dst_offset(me, r.lo);
-                self.loc_mut()[d_off..d_off + r.len()].copy_from_slice(src_slice);
-            } else {
-                let mut w = WireWriter::with_capacity(24 + T::WIDTH * r.len());
-                w.put_u64(step as u64);
-                w.put_slice::<T>(src_slice);
-                t.send(dp, tags::pack(tags::NS_REMAP, epoch, step as u64), &w.finish())?;
-            }
-        }
-        // Phase 2: receive incoming pieces.
-        for (step, &(sp, dp, r)) in plan.transfers().iter().enumerate() {
-            if dp != me || sp == me {
-                continue;
-            }
-            let payload = t.recv(sp, tags::pack(tags::NS_REMAP, epoch, step as u64))?;
-            let mut rd = WireReader::new(&payload);
-            let got_step = rd.get_u64()?;
-            debug_assert_eq!(got_step as usize, step);
-            let d_off = plan.dst_offset(me, r.lo);
-            let dst = &mut self.loc_mut()[d_off..d_off + r.len()];
-            rd.get_slice_into::<T>(dst)?;
-        }
+        let pid = self.pid();
+        execute_plan_typed::<T>(plan, src.loc(), self.loc_mut(), pid, t, epoch)?;
         Ok(())
     }
 }
@@ -259,6 +250,23 @@ mod tests {
             h.join().unwrap();
         }
         assert_eq!(engine.plans_built(), 1);
+    }
+
+    /// Backend-driven assignment is bit-identical to the direct path
+    /// and still plans exactly once.
+    #[test]
+    fn backend_assign_matches_direct_assign() {
+        spmd(3, |pid, t| {
+            let src = Darray::from_global_fn(Dmap::block_1d(3), &[48], pid, |g| g as f64);
+            let mut direct = Darray::zeros(Dmap::cyclic_1d(3), &[48], pid);
+            direct.assign_from(&src, t, 10).unwrap();
+            let engine = RemapEngine::new();
+            let backend = crate::backend::HostBackend::new();
+            let mut via = Darray::zeros(Dmap::cyclic_1d(3), &[48], pid);
+            via.assign_from_engine_on(&src, t, 11, &engine, &backend).unwrap();
+            assert_eq!(via.loc(), direct.loc(), "pid {pid}");
+            assert_eq!(engine.plans_built(), 1);
+        });
     }
 
     /// The acceptance-criterion property: iterated remaps through a

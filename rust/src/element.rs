@@ -109,6 +109,77 @@ impl std::fmt::Display for Dtype {
     }
 }
 
+/// Dtype-erased immutable view of a typed slice — the object-safe
+/// currency of the pluggable execution backends ([`crate::backend`]).
+/// A `&dyn Backend` method cannot be generic over [`Element`], so the
+/// sealed dtype set is reified as one enum variant per dtype; a typed
+/// call site erases with [`Element::erase`] and an implementation
+/// recovers the concrete slice with [`Element::unerase`].
+#[derive(Debug, Clone, Copy)]
+pub enum ElemSlice<'a> {
+    F32(&'a [f32]),
+    F64(&'a [f64]),
+    I64(&'a [i64]),
+    U64(&'a [u64]),
+}
+
+impl<'a> ElemSlice<'a> {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            ElemSlice::F32(_) => Dtype::F32,
+            ElemSlice::F64(_) => Dtype::F64,
+            ElemSlice::I64(_) => Dtype::I64,
+            ElemSlice::U64(_) => Dtype::U64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ElemSlice::F32(s) => s.len(),
+            ElemSlice::F64(s) => s.len(),
+            ElemSlice::I64(s) => s.len(),
+            ElemSlice::U64(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Dtype-erased mutable view of a typed slice (see [`ElemSlice`]).
+#[derive(Debug)]
+pub enum ElemSliceMut<'a> {
+    F32(&'a mut [f32]),
+    F64(&'a mut [f64]),
+    I64(&'a mut [i64]),
+    U64(&'a mut [u64]),
+}
+
+impl<'a> ElemSliceMut<'a> {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            ElemSliceMut::F32(_) => Dtype::F32,
+            ElemSliceMut::F64(_) => Dtype::F64,
+            ElemSliceMut::I64(_) => Dtype::I64,
+            ElemSliceMut::U64(_) => Dtype::U64,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            ElemSliceMut::F32(s) => s.len(),
+            ElemSliceMut::F64(s) => s.len(),
+            ElemSliceMut::I64(s) => s.len(),
+            ElemSliceMut::U64(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 /// A scalar that can live in a distributed array: fixed width,
 /// little-endian wire encoding, and just enough algebra for the
 /// owner-computes kernels. Sealed — see the module docs.
@@ -149,16 +220,59 @@ pub trait Element:
     fn triad(b: Self, q: Self, c: Self) -> Self {
         Self::add(b, Self::mul(q, c))
     }
+
+    /// Erase the dtype of a slice into the backend currency.
+    fn erase(s: &[Self]) -> ElemSlice<'_>;
+    /// Erase the dtype of a mutable slice into the backend currency.
+    fn erase_mut(s: &mut [Self]) -> ElemSliceMut<'_>;
+    /// Recover the typed slice, `None` if the view holds another dtype.
+    fn unerase(s: ElemSlice<'_>) -> Option<&[Self]>;
+    /// Recover the typed mutable slice, `None` on a dtype mismatch.
+    fn unerase_mut(s: ElemSliceMut<'_>) -> Option<&mut [Self]>;
+}
+
+/// The erased-view vocabulary every sealed dtype implements the same
+/// way, differing only in the [`ElemSlice`] variant.
+macro_rules! element_erased_views {
+    ($var:ident) => {
+        #[inline]
+        fn erase(s: &[Self]) -> ElemSlice<'_> {
+            ElemSlice::$var(s)
+        }
+
+        #[inline]
+        fn erase_mut(s: &mut [Self]) -> ElemSliceMut<'_> {
+            ElemSliceMut::$var(s)
+        }
+
+        #[inline]
+        fn unerase(s: ElemSlice<'_>) -> Option<&[Self]> {
+            match s {
+                ElemSlice::$var(x) => Some(x),
+                _ => None,
+            }
+        }
+
+        #[inline]
+        fn unerase_mut(s: ElemSliceMut<'_>) -> Option<&mut [Self]> {
+            match s {
+                ElemSliceMut::$var(x) => Some(x),
+                _ => None,
+            }
+        }
+    };
 }
 
 macro_rules! element_float {
-    ($t:ty, $dtype:expr, $width:expr, $tol:expr) => {
+    ($t:ty, $var:ident, $dtype:expr, $width:expr, $tol:expr) => {
         impl Element for $t {
             const ZERO: Self = 0.0;
             const ONE: Self = 1.0;
             const WIDTH: usize = $width;
             const DTYPE: Dtype = $dtype;
             const TOL_BASE: f64 = $tol;
+
+            element_erased_views!($var);
 
             #[inline]
             fn add(a: Self, b: Self) -> Self {
@@ -194,13 +308,15 @@ macro_rules! element_float {
 }
 
 macro_rules! element_int {
-    ($t:ty, $dtype:expr) => {
+    ($t:ty, $var:ident, $dtype:expr) => {
         impl Element for $t {
             const ZERO: Self = 0;
             const ONE: Self = 1;
             const WIDTH: usize = 8;
             const DTYPE: Dtype = $dtype;
             const TOL_BASE: f64 = 0.0; // integer arithmetic is exact
+
+            element_erased_views!($var);
 
             #[inline]
             fn add(a: Self, b: Self) -> Self {
@@ -239,10 +355,10 @@ macro_rules! element_int {
 // tolerance of the §III checks. f32: ~eps·ulp-growth per iteration,
 // 1e-5/iter gives ample slack while still catching real corruption
 // (a single flipped mantissa bit at magnitude 1 is ~1e-7 · 2^k).
-element_float!(f64, Dtype::F64, 8, 1e-13);
-element_float!(f32, Dtype::F32, 4, 1e-5);
-element_int!(i64, Dtype::I64);
-element_int!(u64, Dtype::U64);
+element_float!(f64, F64, Dtype::F64, 8, 1e-13);
+element_float!(f32, F32, Dtype::F32, 4, 1e-5);
+element_int!(i64, I64, Dtype::I64);
+element_int!(u64, U64, Dtype::U64);
 
 #[cfg(test)]
 mod tests {
@@ -303,5 +419,27 @@ mod tests {
     fn float_dtypes_only_for_stream() {
         assert!(Dtype::F32.is_float() && Dtype::F64.is_float());
         assert!(!Dtype::I64.is_float() && !Dtype::U64.is_float());
+    }
+
+    #[test]
+    fn erase_unerase_roundtrips() {
+        let v = [1.5f32, -2.0, 3.25];
+        let e = f32::erase(&v);
+        assert_eq!(e.dtype(), Dtype::F32);
+        assert_eq!(e.len(), 3);
+        assert!(!e.is_empty());
+        assert_eq!(f32::unerase(e), Some(&v[..]));
+        // Cross-dtype recovery refuses.
+        assert_eq!(f64::unerase(e), None);
+        assert_eq!(i64::unerase(e), None);
+
+        let mut m = [7i64, 8];
+        let em = i64::erase_mut(&mut m);
+        assert_eq!(em.dtype(), Dtype::I64);
+        assert_eq!(em.len(), 2);
+        let back = i64::unerase_mut(em).unwrap();
+        back[0] = 9;
+        assert_eq!(m, [9, 8]);
+        assert!(u64::unerase_mut(u64::erase_mut(&mut [1u64])).is_some());
     }
 }

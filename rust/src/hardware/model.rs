@@ -97,6 +97,8 @@ pub fn simulate_stream(node: &NodeModel, params: &StreamParams, lang: Lang) -> S
         n_local,
         nt,
         width: 8,
+        // Era models emulate the host execution path.
+        backend: crate::backend::BackendKind::Host,
         times,
         // The simulated engine runs no arithmetic; validation is
         // vacuously exact (the real engines actually check).

@@ -65,6 +65,13 @@ pub fn online_cores() -> usize {
         .unwrap_or(1)
 }
 
+/// Pin the calling thread to one core. Same degrade-gracefully
+/// contract as [`PinPlan::apply`]: returns `false` (and pins nothing)
+/// when the core exceeds the machine or the platform can't pin.
+pub fn pin_to_core(core: usize) -> bool {
+    apply_affinity(&[core])
+}
+
 #[cfg(target_os = "linux")]
 fn apply_affinity(cores: &[usize]) -> bool {
     // Hand-rolled `cpu_set_t` (the crate is dependency-free, so no

@@ -11,8 +11,8 @@
 //!   ([`darray`]), transports ([`comm`]), triples launcher
 //!   ([`launcher`]), leader/worker coordinator ([`coordinator`]),
 //!   hardware-era models ([`hardware`]), STREAM drivers ([`stream`]),
-//!   baseline programming models ([`baselines`]), and report
-//!   generators ([`report`]).
+//!   pluggable execution backends ([`backend`]), baseline programming
+//!   models ([`baselines`]), and report generators ([`report`]).
 //! * **L2/L1 (python/, build-time only)** — the STREAM step as a JAX
 //!   graph over Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`
 //!   and executed from Rust via [`runtime`].
@@ -28,6 +28,7 @@
 //!          agg.triad_bw() / 1e9, agg.all_valid);
 //! ```
 
+pub mod backend;
 pub mod baselines;
 pub mod benchx;
 pub mod cli;

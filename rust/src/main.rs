@@ -8,11 +8,12 @@
 //! * `validate` — run the PJRT artifacts and check numerics vs closed forms
 //! * `info`     — platform / artifact summary
 
+use distarray::backend::{BackendKind, BackendRegistry};
 use distarray::cli::Args;
 use distarray::comm::FileTransport;
 use distarray::coordinator::{run_leader, run_worker, EngineKind, MapKind, RunConfig};
 use distarray::launcher::{spawn_workers, PinPlan, Triples, WorkerEnv};
-use distarray::report::{fig3, fig4, fmt_bw, petascale, table1, table2};
+use distarray::report::{bench_json, fig3, fig4, fmt_bw, petascale, table1, table2};
 use distarray::stream::STREAM_Q;
 
 fn main() {
@@ -30,7 +31,9 @@ fn main() {
                  \n  run      [--config run.json] --triples 1x4x1 --n 1048576 --nt 10\n\
                  \n           --map block|cyclic|blockcyclic:K --engine native|pjrt|pjrt-fused\n\
                  \n           --dtype f32|f64|i64|u64 (native engine; default f64)\n\
-                 \n  sweep    fig3|fig4|petascale [--measure] [--csv]\n\
+                 \n           --backend host|threaded|pjrt (native engine; default host)\n\
+                 \n           --bench-json out.json (machine-readable per-op bandwidths)\n\
+                 \n  sweep    fig3|fig4|petascale [--measure] [--csv] [--backend host|threaded]\n\
                  \n  report   table1|table2|fig4\n\
                  \n  validate --artifacts artifacts\n\
                  \n  info     --artifacts artifacts"
@@ -39,6 +42,26 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// Parse one axis flag: absent → `default`, unknown value → a
+/// one-line error naming the valid choices plus the exit code (every
+/// axis shares this wording — never a silent fallback or an opaque
+/// parse failure).
+fn axis_flag<T>(
+    args: &Args,
+    name: &str,
+    choices: &str,
+    default: T,
+    parse: impl Fn(&str) -> Option<T>,
+) -> Result<T, i32> {
+    match args.flag(name) {
+        None => Ok(default),
+        Some(s) => parse(s).ok_or_else(|| {
+            eprintln!("unknown {name} '{s}' (expected {choices})");
+            2
+        }),
+    }
 }
 
 /// `repro run` — spawn triples-mode workers, coordinate one benchmark.
@@ -54,29 +77,67 @@ fn cmd_run(args: &Args) -> i32 {
         },
         None => distarray::config::LaunchConfig::default_config(),
     };
-    let triples = args
-        .flag("triples")
-        .and_then(Triples::parse)
-        .unwrap_or(base.triples);
+    let triples = match axis_flag(
+        args,
+        "triples",
+        "NnodesxNppnxNtpn, e.g. 1x4x1",
+        base.triples,
+        Triples::parse,
+    ) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
     let n = args.flag_usize("n", base.run.n_global);
     let nt = args.flag_usize("nt", base.run.nt);
-    let map = args.flag("map").and_then(MapKind::parse).unwrap_or(base.run.map);
-    let engine = args
-        .flag("engine")
-        .and_then(EngineKind::parse)
-        .unwrap_or(base.run.engine);
-    let dtype = match args.flag("dtype") {
-        Some(s) => match distarray::element::Dtype::parse(s) {
-            Some(d) => d,
-            None => {
-                eprintln!("unknown dtype '{s}' (expected f32|f64|i64|u64)");
-                return 2;
-            }
-        },
-        None => base.run.dtype,
+    let map = match axis_flag(
+        args,
+        "map",
+        "block|cyclic|blockcyclic:K",
+        base.run.map,
+        MapKind::parse,
+    ) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    let engine = match axis_flag(
+        args,
+        "engine",
+        "native|pjrt|pjrt-fused",
+        base.run.engine,
+        EngineKind::parse,
+    ) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    let dtype = match axis_flag(
+        args,
+        "dtype",
+        "f32|f64|i64|u64",
+        base.run.dtype,
+        distarray::element::Dtype::parse,
+    ) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    let backend = match axis_flag(
+        args,
+        "backend",
+        BackendKind::choices(),
+        base.run.backend,
+        BackendKind::parse,
+    ) {
+        Ok(v) => v,
+        Err(code) => return code,
     };
     if engine != EngineKind::Native && dtype != distarray::element::Dtype::F64 {
         eprintln!("engine {} is f64-only; use --engine native for --dtype {dtype}", engine.name());
+        return 2;
+    }
+    if engine != EngineKind::Native && backend != BackendKind::Host {
+        eprintln!(
+            "--backend applies to the native engine; engine {} has its own execution path",
+            engine.name()
+        );
         return 2;
     }
     if !dtype.is_float() {
@@ -86,14 +147,48 @@ fn cmd_run(args: &Args) -> i32 {
         );
     }
     let artifacts = args.flag_str("artifacts", &base.run.artifacts).to_string();
+    // Validate the backend before spawning anything: availability (the
+    // pjrt backend exists in every build but executes only with the
+    // feature + a vendored xla + generated artifacts) AND capability
+    // for this run's dtype and PID-0 local length, so misconfigured
+    // runs die with one line here instead of a worker panic.
+    if engine == EngineKind::Native {
+        let probe = BackendRegistry::with_defaults(triples.ntpn, &artifacts);
+        let be = probe.get(backend).expect("default registry covers every kind");
+        if !be.available() {
+            eprintln!(
+                "backend '{backend}' is unavailable in this build/environment \
+                 (the pjrt backend needs `--features pjrt` and AOT artifacts)"
+            );
+            return 2;
+        }
+        let dmap = map.to_map(triples.np());
+        for pid in 0..triples.np() {
+            if let Err(e) = be.prepare_alloc(dtype, dmap.local_size(pid, &[n])) {
+                eprintln!("backend '{backend}' cannot run this configuration (pid {pid}): {e}");
+                return 2;
+            }
+        }
+    }
     let spool = std::env::temp_dir().join(format!("distarray_run_{}", std::process::id()));
 
-    let cfg = RunConfig { n_global: n, nt, q: base.run.q, map, engine, dtype, artifacts };
+    let cfg = RunConfig {
+        n_global: n,
+        nt,
+        q: base.run.q,
+        map,
+        engine,
+        dtype,
+        backend,
+        threads: triples.ntpn,
+        artifacts,
+    };
     println!(
-        "repro run: triples={triples} Np={} N={n} Nt={nt} engine={} dtype={}",
+        "repro run: triples={triples} Np={} N={n} Nt={nt} engine={} dtype={} backend={}",
         triples.np(),
         cfg.engine.name(),
-        cfg.dtype
+        cfg.dtype,
+        cfg.backend
     );
 
     let plan = PinPlan::for_node(&triples);
@@ -117,14 +212,16 @@ fn cmd_run(args: &Args) -> i32 {
         Ok((agg, results)) => {
             for r in &results {
                 println!(
-                    "  pid n_local={:<10} triad={:<12} ok={}",
+                    "  pid n_local={:<10} triad={:<12} backend={:<9} ok={}",
                     r.n_local,
                     fmt_bw(r.triad_bw()),
+                    r.backend.name(),
                     r.validation.passed
                 );
             }
             println!(
-                "AGGREGATE: copy={} scale={} add={} triad={} ({:.3e} elem/s @ {}B/elem) validated={}",
+                "AGGREGATE[{}]: copy={} scale={} add={} triad={} ({:.3e} elem/s @ {}B/elem) validated={}",
+                agg.backend,
                 fmt_bw(agg.bw[0]),
                 fmt_bw(agg.bw[1]),
                 fmt_bw(agg.bw[2]),
@@ -134,6 +231,15 @@ fn cmd_run(args: &Args) -> i32 {
                 agg.all_valid
             );
             let mut ok = agg.all_valid;
+            if let Some(path) = args.flag("bench-json") {
+                match bench_json::write_file(path, &cfg, &agg) {
+                    Ok(()) => println!("bench json written to {path}"),
+                    Err(e) => {
+                        eprintln!("bench-json {path}: {e}");
+                        ok = false;
+                    }
+                }
+            }
             for w in workers {
                 ok &= w.wait().unwrap_or(false);
             }
@@ -180,7 +286,35 @@ fn cmd_sweep(args: &Args) -> i32 {
             if args.flag_bool("measure") {
                 let max_np = args.flag_usize("max-np", 8);
                 let n_per_p = args.flag_usize("n-per-p", 1 << 22);
-                series.push(fig3::measured_series(max_np, n_per_p, args.flag_usize("nt", 5)));
+                let nt = args.flag_usize("nt", 5);
+                match args.flag("backend") {
+                    None => series.push(fig3::measured_series(max_np, n_per_p, nt)),
+                    Some(s) => {
+                        let Some(kind) = BackendKind::parse(s) else {
+                            eprintln!(
+                                "unknown backend '{s}' (expected {})",
+                                BackendKind::choices()
+                            );
+                            return 2;
+                        };
+                        let reg = BackendRegistry::with_defaults(
+                            args.flag_usize("threads", 0),
+                            args.flag_str("artifacts", "artifacts"),
+                        );
+                        let be = reg.get(kind).expect("default registry covers every kind");
+                        if !be.available() {
+                            eprintln!("backend '{kind}' is unavailable in this build");
+                            return 2;
+                        }
+                        match fig3::measured_series_on(be, max_np, n_per_p, nt) {
+                            Ok(s) => series.push(s),
+                            Err(e) => {
+                                eprintln!("backend '{kind}' cannot run this sweep: {e}");
+                                return 2;
+                            }
+                        }
+                    }
+                }
             }
             if args.flag_bool("csv") {
                 print!("{}", fig3::to_csv(&series));

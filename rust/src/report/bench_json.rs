@@ -1,0 +1,129 @@
+//! `BENCH_stream.json` — the machine-readable perf trajectory.
+//!
+//! `repro run --bench-json <path>` emits one JSON document per run
+//! with per-op bandwidths (bytes/s and GB/s), element throughput,
+//! and the full axis coordinates (dtype, backend, engine, Nt, Np) —
+//! so successive PRs can diff bandwidth numbers mechanically instead
+//! of scraping stdout.
+
+use crate::coordinator::RunConfig;
+use crate::json::Json;
+use crate::stream::AggregateResult;
+use std::collections::BTreeMap;
+
+/// Schema tag, bumped on any field change.
+pub const SCHEMA: &str = "bench_stream_v1";
+
+/// The four op names, in the order of [`AggregateResult::bw`].
+pub const OP_NAMES: [&str; 4] = ["copy", "scale", "add", "triad"];
+
+/// Build the benchmark document from a run's config + aggregate.
+pub fn to_json(cfg: &RunConfig, agg: &AggregateResult) -> Json {
+    let eps = agg.elements_per_sec();
+    let mut ops = BTreeMap::new();
+    for (i, name) in OP_NAMES.iter().enumerate() {
+        let bw = agg.bw[i];
+        let mut m = BTreeMap::new();
+        m.insert("bytes_per_sec".to_string(), Json::Num(bw));
+        m.insert("gb_per_sec".to_string(), Json::Num(bw / 1e9));
+        m.insert("elements_per_sec".to_string(), Json::Num(eps[i]));
+        ops.insert((*name).to_string(), Json::Obj(m));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str(SCHEMA.to_string()));
+    top.insert("engine".to_string(), Json::Str(cfg.engine.name().to_string()));
+    top.insert("backend".to_string(), Json::Str(agg.backend.name().to_string()));
+    top.insert("dtype".to_string(), Json::Str(cfg.dtype.name().to_string()));
+    top.insert("width".to_string(), Json::Num(agg.width as f64));
+    top.insert("n".to_string(), Json::Num(agg.n_global as f64));
+    top.insert("nt".to_string(), Json::Num(agg.nt as f64));
+    top.insert("np".to_string(), Json::Num(agg.np as f64));
+    top.insert("threads".to_string(), Json::Num(cfg.threads as f64));
+    top.insert("validated".to_string(), Json::Bool(agg.all_valid));
+    top.insert("worst_err".to_string(), Json::Num(agg.worst_err));
+    top.insert("ops".to_string(), Json::Obj(ops));
+    Json::Obj(top)
+}
+
+/// Emit the document to `path` (newline-terminated).
+pub fn write_file(path: &str, cfg: &RunConfig, agg: &AggregateResult) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", to_json(cfg, agg)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::BackendKind;
+    use crate::coordinator::{EngineKind, MapKind};
+    use crate::element::Dtype;
+
+    fn sample() -> (RunConfig, AggregateResult) {
+        let cfg = RunConfig {
+            n_global: 1 << 16,
+            nt: 5,
+            q: crate::stream::STREAM_Q,
+            map: MapKind::Block,
+            engine: EngineKind::Native,
+            dtype: Dtype::F32,
+            backend: BackendKind::Threaded,
+            threads: 4,
+            artifacts: "artifacts".into(),
+        };
+        let agg = AggregateResult {
+            np: 2,
+            n_global: 1 << 16,
+            nt: 5,
+            width: 4,
+            backend: BackendKind::Threaded,
+            bw: [4e9, 4e9, 6e9, 6e9],
+            all_valid: true,
+            worst_err: 1e-7,
+        };
+        (cfg, agg)
+    }
+
+    #[test]
+    fn document_roundtrips_and_carries_every_axis() {
+        let (cfg, agg) = sample();
+        let doc = to_json(&cfg, &agg);
+        let parsed = Json::parse(&doc.to_string()).expect("emitted json parses");
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some(SCHEMA));
+        assert_eq!(parsed.get("backend").unwrap().as_str(), Some("threaded"));
+        assert_eq!(parsed.get("dtype").unwrap().as_str(), Some("f32"));
+        assert_eq!(parsed.get("nt").unwrap().as_usize(), Some(5));
+        assert_eq!(parsed.get("np").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("validated").unwrap().as_bool(), Some(true));
+        for op in OP_NAMES {
+            let o = parsed.get("ops").unwrap().get(op).unwrap();
+            assert!(o.get("bytes_per_sec").unwrap().as_f64().unwrap() > 0.0);
+            assert!(o.get("gb_per_sec").unwrap().as_f64().unwrap() > 0.0);
+            assert!(o.get("elements_per_sec").unwrap().as_f64().unwrap() > 0.0);
+        }
+    }
+
+    #[test]
+    fn elements_per_sec_follows_the_width_formulas() {
+        let (cfg, agg) = sample();
+        let doc = to_json(&cfg, &agg);
+        // Triad at 6e9 B/s, 3 vectors × 4 B/elem → 5e8 elem/s.
+        let triad = doc.get("ops").unwrap().get("triad").unwrap();
+        let eps = triad.get("elements_per_sec").unwrap().as_f64().unwrap();
+        assert!((eps - 5e8).abs() < 1e-3);
+        // Copy at 4e9 B/s, 2 vectors × 4 B/elem → 5e8 elem/s too.
+        let copy = doc.get("ops").unwrap().get("copy").unwrap();
+        let eps = copy.get("elements_per_sec").unwrap().as_f64().unwrap();
+        assert!((eps - 5e8).abs() < 1e-3);
+    }
+
+    #[test]
+    fn write_file_emits_parseable_json() {
+        let (cfg, agg) = sample();
+        let path = std::env::temp_dir().join(format!("bench_stream_test_{}.json", std::process::id()));
+        let path_s = path.to_str().unwrap();
+        write_file(path_s, &cfg, &agg).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        assert!(Json::parse(text.trim()).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+}

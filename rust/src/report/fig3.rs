@@ -24,6 +24,10 @@ pub struct Point {
 pub struct Series {
     pub era: String,
     pub lang: &'static str,
+    /// Which execution backend produced the numbers: a real
+    /// [`crate::backend::BackendKind`] name for measured series,
+    /// `"model"` for the era simulations.
+    pub backend: &'static str,
     pub points: Vec<Point>,
 }
 
@@ -44,7 +48,7 @@ pub fn simulate_series(era: &'static Era, lang: Lang) -> Series {
             Point { np: *np, triad_bw: agg.triad_bw() }
         })
         .collect();
-    Series { era: era.label.to_string(), lang: lang.name(), points }
+    Series { era: era.label.to_string(), lang: lang.name(), backend: "model", points }
 }
 
 /// All simulated panels of Figure 3.
@@ -71,7 +75,43 @@ pub fn measured_series(max_np: usize, n_per_p: usize, nt: usize) -> Series {
         points.push(Point { np, triad_bw: agg.triad_bw() });
         np *= 2;
     }
-    Series { era: "native-local".into(), lang: "rust", points }
+    Series { era: "native-local".into(), lang: "rust", backend: "host", points }
+}
+
+/// Measured series driven through an execution backend: the same
+/// doubling sweep as [`measured_series`], but every process's share
+/// runs on `backend` via the plan-driven scheduler — so `repro sweep
+/// fig3 --measure --backend threaded` compares backends through the
+/// identical reporting path.
+///
+/// Caveat for the threaded backend: concurrent PIDs share one gang
+/// pool whose gate serializes kernel launches, so per-op times at
+/// `np > 1` include gate waits and the curve flattens. Its vertical
+/// scaling is the *pool width* axis — measure with `np = 1` and a
+/// wider pool (`--threads`), or compare per-np numbers on the host
+/// backend where PIDs are fully independent.
+pub fn measured_series_on(
+    backend: &std::sync::Arc<dyn crate::backend::Backend>,
+    max_np: usize,
+    n_per_p: usize,
+    nt: usize,
+) -> Result<Series, crate::backend::BackendError> {
+    let mut points = Vec::new();
+    let mut np = 1usize;
+    while np <= max_np {
+        let map = crate::dmap::Dmap::block_1d(np);
+        let agg =
+            crate::backend::run_stream_spmd_t::<f64>(backend, &map, n_per_p * np, nt, STREAM_Q)?;
+        assert!(agg.all_valid, "measured run failed validation");
+        points.push(Point { np, triad_bw: agg.triad_bw() });
+        np *= 2;
+    }
+    Ok(Series {
+        era: "native-local".into(),
+        lang: "rust",
+        backend: backend.kind().name(),
+        points,
+    })
 }
 
 /// Render a set of series as the panel grid (text form).
@@ -79,7 +119,7 @@ pub fn render(series: &[Series]) -> String {
     let mut s = String::new();
     s.push_str("FIGURE 3 — STREAM TRIAD BANDWIDTH (vertical scaling)\n");
     for sr in series {
-        s.push_str(&format!("-- {} [{}] --\n", sr.era, sr.lang));
+        s.push_str(&format!("-- {} [{}] backend={} --\n", sr.era, sr.lang, sr.backend));
         for p in &sr.points {
             s.push_str(&format!(
                 "  Np={:<4} triad={}\n",
@@ -91,12 +131,15 @@ pub fn render(series: &[Series]) -> String {
     s
 }
 
-/// CSV emitter (era,lang,np,triad_bytes_per_s).
+/// CSV emitter (era,lang,backend,np,triad_bytes_per_s).
 pub fn to_csv(series: &[Series]) -> String {
-    let mut s = String::from("era,lang,np,triad_bytes_per_s\n");
+    let mut s = String::from("era,lang,backend,np,triad_bytes_per_s\n");
     for sr in series {
         for p in &sr.points {
-            s.push_str(&format!("{},{},{},{}\n", sr.era, sr.lang, p.np, p.triad_bw));
+            s.push_str(&format!(
+                "{},{},{},{},{}\n",
+                sr.era, sr.lang, sr.backend, p.np, p.triad_bw
+            ));
         }
     }
     s
@@ -145,8 +188,21 @@ mod tests {
     fn measured_series_runs_on_this_machine() {
         let s = measured_series(2, 1 << 16, 3);
         assert_eq!(s.points.len(), 2);
+        assert_eq!(s.backend, "host");
         for p in &s.points {
             assert!(p.triad_bw > 1e8, "np={} bw={}", p.np, p.triad_bw);
+        }
+    }
+
+    #[test]
+    fn measured_series_on_threaded_backend() {
+        let reg = crate::backend::BackendRegistry::with_defaults(2, "artifacts");
+        let be = reg.get(crate::backend::BackendKind::Threaded).unwrap();
+        let s = measured_series_on(be, 2, 1 << 14, 2).unwrap();
+        assert_eq!(s.backend, "threaded");
+        assert_eq!(s.points.len(), 2);
+        for p in &s.points {
+            assert!(p.triad_bw > 1e7, "np={} bw={}", p.np, p.triad_bw);
         }
     }
 
@@ -156,7 +212,7 @@ mod tests {
         let csv = to_csv(&[s]);
         let lines: Vec<&str> = csv.trim().lines().collect();
         assert!(lines.len() > 2);
-        assert_eq!(lines[0], "era,lang,np,triad_bytes_per_s");
-        assert!(lines[1].starts_with("xeon-e5,python,1,"));
+        assert_eq!(lines[0], "era,lang,backend,np,triad_bytes_per_s");
+        assert!(lines[1].starts_with("xeon-e5,python,model,1,"));
     }
 }

@@ -6,7 +6,9 @@
 //! ships the stub below, which keeps the whole API surface but
 //! reports [`RuntimeError::Unavailable`] from `load`, so every
 //! caller's graceful-skip path (`repro validate`, `stream_e2e`, the
-//! integration tests) exercises the same code shape either way.
+//! integration tests, and the `--backend pjrt` execution backend in
+//! [`crate::backend::PjrtBackend`]) exercises the same code shape
+//! either way.
 
 #[cfg(feature = "pjrt")]
 mod imp {

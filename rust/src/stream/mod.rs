@@ -23,6 +23,8 @@ pub use serial::{run_native_serial, run_serial_t};
 pub use timing::{OpTimes, Timer};
 pub use validate::{validate, validate_t, ValidationReport, STREAM_Q};
 
+use crate::backend::BackendKind;
+
 /// Result of one STREAM run (one process's view).
 #[derive(Debug, Clone)]
 pub struct StreamResult {
@@ -35,6 +37,12 @@ pub struct StreamResult {
     /// Bytes per element of the streamed dtype
     /// ([`crate::element::Element::WIDTH`]; 8 for the classic f64 run).
     pub width: usize,
+    /// Which execution backend produced this result (the `--backend`
+    /// axis; the classic darray/serial engines are [`BackendKind::Host`]
+    /// semantics, the `Ntpn` thread engine is
+    /// [`BackendKind::Threaded`], the artifact engines
+    /// [`BackendKind::Pjrt`]).
+    pub backend: BackendKind,
     /// Accumulated per-op seconds over all iterations.
     pub times: OpTimes,
     /// Validation outcome.
@@ -100,6 +108,7 @@ pub fn aggregate(results: &[StreamResult]) -> Option<AggregateResult> {
         n_global: results[0].n_global,
         nt: results[0].nt,
         width: results[0].width,
+        backend: results[0].backend,
         bw: [0.0; 4],
         all_valid: true,
         worst_err: 0.0,
@@ -123,6 +132,9 @@ pub struct AggregateResult {
     pub nt: usize,
     /// Bytes per element of the streamed dtype.
     pub width: usize,
+    /// Execution backend of the per-process results (first result's —
+    /// one coordinated run never mixes backends).
+    pub backend: BackendKind,
     /// [copy, scale, add, triad] aggregate bytes/sec.
     pub bw: [f64; 4],
     pub all_valid: bool,
@@ -134,8 +146,22 @@ impl AggregateResult {
         self.bw[3]
     }
 
+    /// Per-op aggregate element throughput (elements/second) — the
+    /// §III vectors-per-op formula, mirroring
+    /// [`StreamResult::elements_per_sec`] (the single home of the
+    /// 2/2/3/3 constants for aggregates).
+    pub fn elements_per_sec(&self) -> [f64; 4] {
+        let w = self.width as f64;
+        [
+            self.bw[0] / (2.0 * w),
+            self.bw[1] / (2.0 * w),
+            self.bw[2] / (3.0 * w),
+            self.bw[3] / (3.0 * w),
+        ]
+    }
+
     /// Aggregate triad element throughput (elements/second).
     pub fn triad_elements_per_sec(&self) -> f64 {
-        self.triad_bw() / (3.0 * self.width as f64)
+        self.elements_per_sec()[3]
     }
 }

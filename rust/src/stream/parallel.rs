@@ -59,7 +59,15 @@ pub fn run_parallel_t<T: Element>(
     }
 
     let validation = validate_t(a.loc(), b.loc(), c.loc(), A0, q, nt);
-    StreamResult { n_global, n_local, nt, width: T::WIDTH, times, validation }
+    StreamResult {
+        n_global,
+        n_local,
+        nt,
+        width: T::WIDTH,
+        backend: crate::backend::BackendKind::Host,
+        times,
+        validation,
+    }
 }
 
 /// The classic f64 run (Algorithm 2 as published).

@@ -48,7 +48,15 @@ pub fn run_serial_t<T: Element>(n: usize, nt: usize, q: T) -> StreamResult {
     }
 
     let validation = validate_t(&a, &b, &c, A0, q, nt);
-    StreamResult { n_global: n, n_local: n, nt, width: T::WIDTH, times, validation }
+    StreamResult {
+        n_global: n,
+        n_local: n,
+        nt,
+        width: T::WIDTH,
+        backend: crate::backend::BackendKind::Host,
+        times,
+        validation,
+    }
 }
 
 /// The classic f64 serial run.

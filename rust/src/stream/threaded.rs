@@ -39,6 +39,18 @@ type Job = Arc<dyn Fn(usize) + Send + Sync>;
 
 impl OpPool {
     pub fn new(ntpn: usize) -> OpPool {
+        OpPool::build(ntpn, None)
+    }
+
+    /// A pool whose spawned threads pin themselves to the adjacent
+    /// cores `base_core + tid` (§V), skipped gracefully when a core
+    /// exceeds the machine. The caller thread (tid 0) keeps whatever
+    /// affinity the process launcher applied.
+    pub fn pinned(ntpn: usize, base_core: usize) -> OpPool {
+        OpPool::build(ntpn, Some(base_core))
+    }
+
+    fn build(ntpn: usize, pin_base: Option<usize>) -> OpPool {
         assert!(ntpn >= 1);
         let done = Arc::new(Barrier::new(ntpn));
         let mut senders = Vec::new();
@@ -46,6 +58,9 @@ impl OpPool {
             let (tx, rx) = mpsc::channel::<Job>();
             let done = done.clone();
             thread::spawn(move || {
+                if let Some(base) = pin_base {
+                    crate::launcher::pinning::pin_to_core(base + tid);
+                }
                 while let Ok(job) = rx.recv() {
                     job(tid);
                     done.wait();
@@ -77,9 +92,18 @@ impl OpPool {
 
     /// Chunk bounds for thread `tid` over a length-`n` slice.
     pub fn chunk(&self, n: usize, tid: usize) -> (usize, usize) {
-        let b = n.div_ceil(self.ntpn).max(1);
-        ((tid * b).min(n), ((tid + 1) * b).min(n))
+        chunk_bounds(self.ntpn, n, tid)
     }
+}
+
+/// Contiguous chunk bounds for worker `tid` of `ways` over a length-`n`
+/// vector. The ranges of tids `0..ways` are disjoint and tile `[0, n)`
+/// exactly — the invariant every raw-pointer gang kernel (the
+/// `par_op!` ops here and the chunked backend's tiled kernels) relies
+/// on for soundness, so there is exactly one definition.
+pub fn chunk_bounds(ways: usize, n: usize, tid: usize) -> (usize, usize) {
+    let b = n.div_ceil(ways).max(1);
+    ((tid * b).min(n), ((tid + 1) * b).min(n))
 }
 
 macro_rules! par_op {
@@ -162,7 +186,15 @@ pub fn run_parallel_threaded_t<T: Element>(
     }
 
     let validation = validate_t(a.loc(), b.loc(), c.loc(), A0, q, nt);
-    StreamResult { n_global, n_local, nt, width: T::WIDTH, times, validation }
+    StreamResult {
+        n_global,
+        n_local,
+        nt,
+        width: T::WIDTH,
+        backend: crate::backend::BackendKind::Threaded,
+        times,
+        validation,
+    }
 }
 
 /// The classic f64 threaded run.

@@ -39,6 +39,8 @@ fn coordinator_over_file_transport() {
         map: MapKind::Block,
         engine: EngineKind::Native,
         dtype: distarray::element::Dtype::F64,
+        backend: distarray::backend::BackendKind::Host,
+        threads: 1,
         artifacts: "artifacts".into(),
     };
     let (agg, _) = run_leader(&leader, &cfg).unwrap();

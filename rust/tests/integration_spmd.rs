@@ -141,6 +141,8 @@ fn coordinator_all_map_kinds() {
             map,
             engine: EngineKind::Native,
             dtype: distarray::element::Dtype::F64,
+            backend: distarray::backend::BackendKind::Host,
+            threads: 1,
             artifacts: "artifacts".into(),
         };
         let (agg, results) = run_leader(&leader, &cfg).unwrap();
