@@ -17,14 +17,23 @@
 //! computes an element, never the arithmetic, so results are
 //! bit-identical to [`super::HostBackend`] — asserted by the
 //! backend-equivalence property tests.
+//!
+//! Remap execution reuses the engine's coalesced per-peer message
+//! layout, but packs and unpacks payloads at least one tile large
+//! with the pinned pool (see `execute_plan`) — the wire bytes are
+//! identical to the serial path, only the cores doing the memcpys
+//! differ.
 
 use super::{
-    check_len, execute_plan_erased, expect_t, expect_t_mut, for_dtype, memcpy_erased, Backend,
-    BackendKind, Result,
+    check_len, expect_t, expect_t_mut, for_dtype, memcpy_erased, Backend, BackendKind, Result,
 };
-use crate::comm::Transport;
+use crate::comm::{BufferPool, Transport, WireWriter};
+use crate::darray::engine::{
+    check_group_payload, recv_groups, remap_tag, send_group_typed, unpack_group_typed,
+    write_group_header, PeerGroup,
+};
 use crate::darray::RemapPlan;
-use crate::dmap::Pid;
+use crate::dmap::{GlobalRange, Pid};
 use crate::element::{Dtype, ElemSlice, ElemSliceMut, Element};
 use crate::stream::ops;
 use crate::stream::threaded::{chunk_bounds, OpPool};
@@ -246,9 +255,15 @@ impl Backend for ChunkedThreadedBackend {
         })
     }
 
-    /// Plan execution is transport-bound, not compute-bound, so the
-    /// transfer list runs serially on the caller — identical bytes and
-    /// ordering to the host backend by construction.
+    /// Coalesced plan execution with **pool-parallel pack/unpack**:
+    /// the per-peer message layout is identical to the serial engine
+    /// routine (same header, same packed payload, same tags — so
+    /// chunked and host endpoints interoperate within one remap), but
+    /// payloads at least one cache tile large are gathered into the
+    /// pooled wire buffer and scattered out of received messages by
+    /// the pinned worker pool, chunked over payload elements so uneven
+    /// range lists still balance. Sub-tile payloads and big-endian
+    /// targets take the serial engine path unchanged.
     fn execute_plan(
         &self,
         plan: &RemapPlan,
@@ -258,8 +273,193 @@ impl Backend for ChunkedThreadedBackend {
         t: &dyn Transport,
         epoch: u64,
     ) -> Result<()> {
-        execute_plan_erased(plan, src, dst, pid, t, epoch)
+        for_dtype!(dst.dtype(), T, {
+            let s = expect_t::<T>(src)?;
+            let d = expect_t_mut::<T>(dst)?;
+            self.execute_plan_chunked::<T>(plan, s, d, pid, t, epoch)
+        })
     }
+}
+
+impl ChunkedThreadedBackend {
+    /// Is this group's payload worth fanning out over the pool?
+    fn parallel_payload<T: Element>(&self, g: &PeerGroup) -> bool {
+        cfg!(target_endian = "little") && self.threads > 1 && g.total * T::WIDTH >= self.tile_bytes
+    }
+
+    fn execute_plan_chunked<T: Element>(
+        &self,
+        plan: &RemapPlan,
+        src: &[T],
+        dst: &mut [T],
+        pid: Pid,
+        t: &dyn Transport,
+        epoch: u64,
+    ) -> Result<()> {
+        if plan.is_aligned() {
+            check_len(dst.len(), src.len())?;
+            dst.copy_from_slice(src);
+            return Ok(());
+        }
+        for &(s_off, d_off, len) in plan.local_copies(pid) {
+            dst[d_off..d_off + len].copy_from_slice(&src[s_off..s_off + len]);
+        }
+        for g in plan.peer_sends(pid) {
+            if self.parallel_payload::<T>(g) {
+                self.send_group_par::<T>(g, src, t, epoch)?;
+            } else {
+                send_group_typed::<T>(g, src, t, epoch)?;
+            }
+        }
+        recv_groups(plan, pid, t, epoch, |g, payload| {
+            if self.parallel_payload::<T>(g) {
+                self.unpack_group_par::<T>(g, &payload, dst)
+            } else {
+                unpack_group_typed::<T>(g, &payload, dst)
+            }
+        })?;
+        Ok(())
+    }
+
+    /// Pack one coalesced message with the pinned pool: the payload
+    /// region of the pooled wire buffer is filled by all threads in
+    /// parallel, each copying a contiguous span of payload *elements*
+    /// (split mid-range when ranges are uneven).
+    fn send_group_par<T: Element>(
+        &self,
+        g: &PeerGroup,
+        src: &[T],
+        t: &dyn Transport,
+        epoch: u64,
+    ) -> crate::comm::Result<()> {
+        assert!(
+            g.local_extent <= src.len(),
+            "remap plan/slice mismatch: group reads {} source elements, slice has {}",
+            g.local_extent,
+            src.len()
+        );
+        let pool = BufferPool::global();
+        let mut header = pool.checkout(g.header_bytes());
+        let mut w = WireWriter::from_vec(header.take());
+        write_group_header(&mut w, g);
+        header.restore(w.finish());
+
+        // Payload part: the typed-slice prefix, then the packed bytes,
+        // written in place by the gang (no zero-fill pass — the
+        // group's prefix sums tile the byte range exactly).
+        let nbytes = g.total * T::WIDTH;
+        let mut payload = pool.checkout(9 + nbytes);
+        let mut pw = WireWriter::from_vec(payload.take());
+        pw.put_u64(g.total as u64);
+        pw.put_u8(T::DTYPE.code());
+        let mut buf = pw.finish();
+        let prefix = buf.len();
+        buf.reserve(nbytes);
+        // SAFETY: capacity was just reserved, u8 needs no drop/init
+        // tracking, and `run_payload_copy` below writes every byte of
+        // `[prefix, prefix + nbytes)` before anyone reads the buffer.
+        unsafe { buf.set_len(prefix + nbytes) };
+        payload.restore(buf);
+        let pay_addr = payload.as_mut_ptr() as usize + prefix;
+        self.run_payload_copy::<T>(g, src.as_ptr() as usize, pay_addr, CopyDir::Pack);
+        t.send_parts(g.peer, remap_tag(epoch), &[header.as_slice(), payload.as_slice()])
+    }
+
+    /// Scatter one received coalesced message into `dst` with the
+    /// pinned pool (after serial header validation).
+    fn unpack_group_par<T: Element>(
+        &self,
+        g: &PeerGroup,
+        payload: &[u8],
+        dst: &mut [T],
+    ) -> crate::comm::Result<()> {
+        assert!(
+            g.local_extent <= dst.len(),
+            "remap plan/slice mismatch: group writes {} destination elements, slice has {}",
+            g.local_extent,
+            dst.len()
+        );
+        let bytes = check_group_payload::<T>(g, payload)?;
+        self.run_payload_copy::<T>(
+            g,
+            dst.as_mut_ptr() as usize,
+            bytes.as_ptr() as usize,
+            CopyDir::Unpack,
+        );
+        Ok(())
+    }
+
+    /// The shared gang kernel behind parallel pack and unpack: copy
+    /// between the local slice (`local_addr`, indexed by the group's
+    /// `local_offsets`) and the packed payload bytes (`payload_addr`,
+    /// indexed by the element prefix sums), chunking the payload
+    /// element space evenly across threads.
+    fn run_payload_copy<T: Element>(
+        &self,
+        g: &PeerGroup,
+        local_addr: usize,
+        payload_addr: usize,
+        dir: CopyDir,
+    ) {
+        let threads = self.threads;
+        let total = g.total;
+        let n_segs = g.ranges.len();
+        let ranges_addr = g.ranges.as_ptr() as usize;
+        let loffs_addr = g.local_offsets.as_ptr() as usize;
+        let poffs_addr = g.payload_offsets.as_ptr() as usize;
+        let width = T::WIDTH;
+        self.pool().run(move |tid| {
+            let (elo, ehi) = chunk_bounds(threads, total, tid);
+            if elo >= ehi {
+                return;
+            }
+            // SAFETY: the group's vectors and both buffers outlive the
+            // pool's blocking `run` call; per-tid payload spans are
+            // disjoint, and the local-side ranges they touch are the
+            // disjoint plan ranges of this single group.
+            let (ranges, loffs, poffs) = unsafe {
+                (
+                    slice_at::<GlobalRange>(ranges_addr, 0, n_segs),
+                    slice_at::<usize>(loffs_addr, 0, n_segs),
+                    slice_at::<usize>(poffs_addr, 0, n_segs),
+                )
+            };
+            let mut k = poffs.partition_point(|&p| p <= elo) - 1;
+            let mut pos = elo;
+            while pos < ehi {
+                let within = pos - poffs[k];
+                let n = (ranges[k].len() - within).min(ehi - pos);
+                let local = (loffs[k] + within) * width;
+                let packed = pos * width;
+                // SAFETY: in-bounds per the plan's offset tables; on a
+                // little-endian target (checked by the caller) raw
+                // element bytes ARE the wire encoding.
+                unsafe {
+                    match dir {
+                        CopyDir::Pack => std::ptr::copy_nonoverlapping(
+                            (local_addr as *const u8).add(local),
+                            (payload_addr as *mut u8).add(packed),
+                            n * width,
+                        ),
+                        CopyDir::Unpack => std::ptr::copy_nonoverlapping(
+                            (payload_addr as *const u8).add(packed),
+                            (local_addr as *mut u8).add(local),
+                            n * width,
+                        ),
+                    }
+                }
+                pos += n;
+                k += 1;
+            }
+        });
+    }
+}
+
+/// Direction of [`ChunkedThreadedBackend::run_payload_copy`].
+#[derive(Clone, Copy)]
+enum CopyDir {
+    Pack,
+    Unpack,
 }
 
 #[cfg(test)]
@@ -314,5 +514,60 @@ mod tests {
     fn base_core_defaults_to_zero_without_worker_env() {
         // In-process case: no DISTARRAY_* env → leader window.
         assert_eq!(process_base_core(), 0);
+    }
+
+    /// The pool-parallel pack/unpack must be bit-identical to the
+    /// serial engine path, and still one message per peer. A 64-byte
+    /// tile forces the parallel path for any payload ≥ 8 f64.
+    #[test]
+    fn parallel_packed_remap_matches_serial_and_coalesces() {
+        use crate::comm::{ChannelHub, Transport};
+        use crate::darray::engine::execute_plan_typed;
+        use crate::darray::RemapPlan;
+        use crate::dmap::Dmap;
+        use std::sync::Arc;
+
+        let np = 3;
+        let n = 120;
+        let backend = Arc::new(ChunkedThreadedBackend::with_tile(3, 64));
+        let world = ChannelHub::world(np);
+        let mut hs = Vec::new();
+        for t in world {
+            let backend = backend.clone();
+            hs.push(std::thread::spawn(move || {
+                let pid = t.pid();
+                let src_map = Dmap::block_1d(np);
+                let dst_map = Dmap::cyclic_1d(np);
+                let plan = RemapPlan::build(&src_map, &dst_map, &[n]);
+                let src: Vec<f64> = (0..n)
+                    .filter(|&g| src_map.owner(&[g], &[n]) == pid)
+                    .map(|g| g as f64 * 0.5)
+                    .collect();
+                let mut via_backend = vec![0.0f64; dst_map.local_size(pid, &[n])];
+                backend
+                    .execute_plan(
+                        &plan,
+                        f64::erase(&src),
+                        f64::erase_mut(&mut via_backend),
+                        pid,
+                        &t,
+                        1,
+                    )
+                    .unwrap();
+                // Serial reference on a second epoch over the same wire.
+                let mut serial = vec![0.0f64; via_backend.len()];
+                execute_plan_typed::<f64>(&plan, &src, &mut serial, pid, &t, 2).unwrap();
+                assert_eq!(via_backend, serial, "pid {pid}");
+                // One message per peer per epoch, both epochs.
+                assert_eq!(
+                    t.stats().msgs_sent() as usize,
+                    2 * plan.peer_sends(pid).len(),
+                    "pid {pid} message count"
+                );
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
     }
 }

@@ -295,7 +295,9 @@ pub(crate) fn memcpy_erased(src: ElemSlice<'_>, dst: ElemSliceMut<'_>) -> Result
 
 /// Erased wrapper over
 /// [`execute_plan_typed`](crate::darray::engine::execute_plan_typed) —
-/// the plan execution every host-visible backend shares.
+/// the serial coalesced plan execution the host and pjrt backends
+/// share (the chunked backend reuses the same per-peer message layout
+/// but packs/unpacks large payloads with its pinned pool).
 pub(crate) fn execute_plan_erased(
     plan: &RemapPlan,
     src: ElemSlice<'_>,

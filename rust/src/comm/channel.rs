@@ -70,19 +70,28 @@ impl Transport for ChannelTransport {
     }
 
     fn send(&self, to: Pid, tag: Tag, payload: &[u8]) -> Result<()> {
+        self.send_parts(to, tag, &[payload])
+    }
+
+    /// Multi-part send: the parts are gathered once, directly into the
+    /// mailbox message (one copy total — the default trait impl would
+    /// concatenate and then copy again through `send`).
+    fn send_parts(&self, to: Pid, tag: Tag, parts: &[&[u8]]) -> Result<()> {
         if to >= self.np {
             return Err(CommError::Disconnected(to));
+        }
+        let total = parts.iter().map(|p| p.len()).sum();
+        let mut buf = Vec::with_capacity(total);
+        for p in parts {
+            buf.extend_from_slice(p);
         }
         let slot = &self.hub.slots[to];
         {
             let mut mbox = slot.mbox.lock().unwrap();
-            mbox.queues
-                .entry((self.pid, tag))
-                .or_default()
-                .push_back(payload.to_vec());
+            mbox.queues.entry((self.pid, tag)).or_default().push_back(buf);
         }
         slot.cv.notify_all();
-        self.stats.record_send(payload.len());
+        self.stats.record_send(total);
         Ok(())
     }
 
@@ -149,6 +158,19 @@ mod tests {
         t0.send(1, 2, b"two").unwrap();
         assert_eq!(t1.recv(0, 2).unwrap(), b"two");
         assert_eq!(t1.recv(0, 1).unwrap(), b"one");
+    }
+
+    #[test]
+    fn send_parts_and_try_recv() {
+        let mut world = ChannelHub::world(2);
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        assert_eq!(t1.try_recv(0, 4).unwrap(), None);
+        t0.send_parts(1, 4, &[b"ab", b"", b"cd"]).unwrap();
+        assert_eq!(t1.try_recv(0, 4).unwrap().as_deref(), Some(&b"abcd"[..]));
+        assert_eq!(t1.try_recv(0, 4).unwrap(), None);
+        assert_eq!(t0.stats().msgs_sent(), 1);
+        assert_eq!(t0.stats().bytes_sent(), 4);
     }
 
     #[test]

@@ -6,9 +6,16 @@
 //! * A message from `f` to `t` with tag `g` and sequence `s` is the
 //!   file `spool/msg_f{f}_t{t}_g{g}_s{s}.bin`.
 //! * The sender writes to a `.tmp` name and **atomically renames** —
-//!   a reader never observes a partial message.
+//!   a reader never observes a partial message. Multi-part sends
+//!   ([`crate::comm::Transport::send_parts`]) stream framing and
+//!   payload into the spool file sequentially, so a coalesced remap
+//!   message never exists as a concatenated copy in memory.
 //! * The receiver polls for the next sequence number it expects for
 //!   each (from, tag) pair and deletes the file after consuming it.
+//!   Polling backs off exponentially from `poll` up to `poll_cap`, so
+//!   a slow peer costs O(log wait) syscalls instead of a fixed-rate
+//!   stat storm; [`FileTransport::with_poll`] pins both to one tight
+//!   interval (the test hook).
 //!
 //! No daemon, no sockets: works across OS processes sharing a
 //! filesystem, exactly like the paper's SuperCloud deployment (there,
@@ -34,8 +41,10 @@ pub struct FileTransport {
     send_seq: Mutex<HashMap<(Pid, Tag), u64>>,
     /// Next expected sequence per (from, tag) for receives.
     recv_seq: Mutex<HashMap<(Pid, Tag), u64>>,
-    /// Poll interval while waiting for a message file.
+    /// Initial poll interval while waiting for a message file.
     poll: Duration,
+    /// Upper bound of the exponential poll backoff.
+    poll_cap: Duration,
     unique: AtomicU64,
 }
 
@@ -52,13 +61,24 @@ impl FileTransport {
             send_seq: Mutex::new(HashMap::new()),
             recv_seq: Mutex::new(HashMap::new()),
             poll: Duration::from_micros(200),
+            poll_cap: Duration::from_millis(10),
             unique: AtomicU64::new(0),
         })
     }
 
-    /// Adjust the receive poll interval (tests use a tight poll).
+    /// Pin the receive poll to one fixed interval — no backoff (tests
+    /// use a tight poll to keep latencies deterministic).
     pub fn with_poll(mut self, poll: Duration) -> Self {
         self.poll = poll;
+        self.poll_cap = poll;
+        self
+    }
+
+    /// Explicit backoff window: polls start at `initial` and double up
+    /// to `cap`.
+    pub fn with_poll_backoff(mut self, initial: Duration, cap: Duration) -> Self {
+        self.poll = initial;
+        self.poll_cap = cap.max(initial);
         self
     }
 
@@ -82,6 +102,13 @@ impl Transport for FileTransport {
     }
 
     fn send(&self, to: Pid, tag: Tag, payload: &[u8]) -> Result<()> {
+        self.send_parts(to, tag, &[payload])
+    }
+
+    /// Multi-part send: framing + payload parts are written to the
+    /// spool file **sequentially** — the message is never materialized
+    /// as one concatenated buffer in memory.
+    fn send_parts(&self, to: Pid, tag: Tag, parts: &[&[u8]]) -> Result<()> {
         if to >= self.np {
             return Err(CommError::Disconnected(to));
         }
@@ -98,9 +125,17 @@ impl Transport for FileTransport {
         let tmp = self
             .dir
             .join(format!(".tmp_f{}_u{}_{}", self.pid, unique, std::process::id()));
-        fs::write(&tmp, payload)?;
+        let mut total = 0usize;
+        {
+            use std::io::Write;
+            let mut f = fs::File::create(&tmp)?;
+            for p in parts {
+                f.write_all(p)?;
+                total += p.len();
+            }
+        }
         fs::rename(&tmp, &final_path)?; // atomic publish
-        self.stats.record_send(payload.len());
+        self.stats.record_send(total);
         Ok(())
     }
 
@@ -114,6 +149,7 @@ impl Transport for FileTransport {
         };
         let path = self.msg_path(from, self.pid, tag, seq);
         let deadline = Instant::now() + timeout;
+        let mut delay = self.poll;
         loop {
             match fs::read(&path) {
                 Ok(payload) => {
@@ -122,7 +158,8 @@ impl Transport for FileTransport {
                     return Ok(payload);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
-                    if Instant::now() >= deadline {
+                    let now = Instant::now();
+                    if now >= deadline {
                         // Roll back the sequence reservation so a retry
                         // looks for the same message again.
                         let mut m = self.recv_seq.lock().unwrap();
@@ -131,7 +168,11 @@ impl Transport for FileTransport {
                         }
                         return Err(CommError::Timeout { from, tag });
                     }
-                    std::thread::sleep(self.poll);
+                    // Exponential backoff (capped, never past the
+                    // deadline): slow peers cost O(log wait) stats
+                    // instead of a fixed 200 µs poll storm.
+                    std::thread::sleep(delay.min(deadline - now));
+                    delay = (delay * 2).min(self.poll_cap);
                 }
                 Err(e) => return Err(CommError::Io(e)),
             }
@@ -208,6 +249,56 @@ mod tests {
         a.send(1, 2, &big).unwrap();
         let got = reader.join().unwrap();
         assert_eq!(got, big2); // atomic rename ⇒ never a partial read
+    }
+
+    #[test]
+    fn send_parts_arrives_as_one_contiguous_message() {
+        let dir = tmpdir("parts");
+        let a = FileTransport::new(&dir, 0, 2).unwrap();
+        let b = FileTransport::new(&dir, 1, 2).unwrap();
+        a.send_parts(1, 4, &[b"head", b"", b"payload"]).unwrap();
+        assert_eq!(b.recv(0, 4).unwrap(), b"headpayload");
+        // One message, stats count the total bytes once.
+        assert_eq!(a.stats().msgs_sent(), 1);
+        assert_eq!(a.stats().bytes_sent(), 11);
+        // Ordered with plain sends on the same (to, tag) stream.
+        a.send(1, 4, b"x").unwrap();
+        a.send_parts(1, 4, &[b"y", b"z"]).unwrap();
+        assert_eq!(b.recv(0, 4).unwrap(), b"x");
+        assert_eq!(b.recv(0, 4).unwrap(), b"yz");
+    }
+
+    #[test]
+    fn try_recv_is_nonblocking_and_preserves_order() {
+        let dir = tmpdir("tryrecv");
+        let a = FileTransport::new(&dir, 0, 2).unwrap();
+        let b = FileTransport::new(&dir, 1, 2).unwrap();
+        assert_eq!(b.try_recv(0, 7).unwrap(), None);
+        a.send(1, 7, b"first").unwrap();
+        a.send(1, 7, b"second").unwrap();
+        // A miss must not consume the sequence slot.
+        assert_eq!(b.try_recv(0, 7).unwrap().as_deref(), Some(&b"first"[..]));
+        assert_eq!(b.recv(0, 7).unwrap(), b"second");
+    }
+
+    #[test]
+    fn backoff_recv_still_sees_late_messages_and_times_out() {
+        let dir = tmpdir("backoff");
+        let b = FileTransport::new(&dir, 1, 2)
+            .unwrap()
+            .with_poll_backoff(Duration::from_micros(10), Duration::from_millis(2));
+        let start = Instant::now();
+        assert!(b.recv_timeout(0, 5, Duration::from_millis(20)).is_err());
+        // The capped backoff must not overshoot the deadline wildly.
+        assert!(start.elapsed() < Duration::from_millis(500));
+        let dir2 = dir.clone();
+        let sender = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(15));
+            let a = FileTransport::new(&dir2, 0, 2).unwrap();
+            a.send(1, 6, b"late").unwrap();
+        });
+        assert_eq!(b.recv(0, 6).unwrap(), b"late");
+        sender.join().unwrap();
     }
 
     #[test]

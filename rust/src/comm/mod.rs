@@ -21,11 +21,13 @@ pub mod barrier;
 pub mod channel;
 pub mod counter;
 pub mod file_msg;
+pub mod pool;
 pub mod protocol;
 
 pub use channel::{ChannelHub, ChannelTransport};
 pub use counter::CommStats;
 pub use file_msg::FileTransport;
+pub use pool::{BufferPool, PooledBuf};
 pub use protocol::{Decode, Encode, WireReader, WireWriter};
 
 use crate::dmap::Pid;
@@ -61,7 +63,9 @@ pub mod tags {
 
     /// Barrier round-trips.
     pub const NS_BARRIER: u8 = 1;
-    /// Distributed-array remap payloads (step = plan index).
+    /// Distributed-array remap payloads — one coalesced message per
+    /// communicating peer pair per epoch (the `(from, tag)` match
+    /// disambiguates peers, so the step field stays 0).
     pub const NS_REMAP: u8 = 2;
     /// Overlap/halo synchronization.
     pub const NS_HALO: u8 = 3;
@@ -147,6 +151,34 @@ pub trait Transport: Send + Sync {
     /// Blocking receive with the default (generous) timeout.
     fn recv(&self, from: Pid, tag: Tag) -> Result<Vec<u8>> {
         self.recv_timeout(from, tag, Duration::from_secs(120))
+    }
+
+    /// Send a message whose payload is `parts` concatenated in order.
+    ///
+    /// The default materializes the concatenation and calls
+    /// [`Transport::send`]; transports that can write incrementally
+    /// (the file spool) override it so framing and payload go straight
+    /// to the destination with no intermediate buffer. Receivers see a
+    /// single contiguous payload either way.
+    fn send_parts(&self, to: Pid, tag: Tag, parts: &[&[u8]]) -> Result<()> {
+        let total = parts.iter().map(|p| p.len()).sum();
+        let mut buf = Vec::with_capacity(total);
+        for p in parts {
+            buf.extend_from_slice(p);
+        }
+        self.send(to, tag, &buf)
+    }
+
+    /// Non-blocking receive: the next matching message if one has
+    /// already arrived, `None` otherwise. Lets a receiver drain
+    /// several peers in **arrival order** instead of blocking on one
+    /// — the remap engine's per-peer completion loop.
+    fn try_recv(&self, from: Pid, tag: Tag) -> Result<Option<Vec<u8>>> {
+        match self.recv_timeout(from, tag, Duration::ZERO) {
+            Ok(payload) => Ok(Some(payload)),
+            Err(CommError::Timeout { .. }) => Ok(None),
+            Err(e) => Err(e),
+        }
     }
 }
 

@@ -1,0 +1,220 @@
+//! [`BufferPool`] — reusable wire buffers for the data-movement hot
+//! path.
+//!
+//! Every remap/STREAM iteration used to allocate a fresh `WireWriter`
+//! per message and drop it after the send; at one coalesced message
+//! per peer per epoch that is still `peers × iterations` heap
+//! round-trips of multi-megabyte buffers. The pool keeps returned
+//! buffers (LIFO, so the warmest allocation is reused first) and hands
+//! them back on the next checkout: steady-state send loops perform
+//! **zero payload allocations** — asserted by tests via the
+//! [`BufferPool::checkouts`] / [`BufferPool::hits`] instruments, not
+//! assumed.
+//!
+//! Checkout returns a [`PooledBuf`] guard that gives the buffer back
+//! on drop, so early returns (transport errors) cannot leak buffers
+//! out of the pool.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// How many idle buffers a pool retains before excess ones are freed.
+/// Remap needs two live buffers per in-flight send (header + payload);
+/// 32 covers every realistic peer fan-out with room to spare.
+const DEFAULT_RETAINED: usize = 32;
+
+/// A pool of reusable `Vec<u8>` wire buffers.
+pub struct BufferPool {
+    free: Mutex<Vec<Vec<u8>>>,
+    max_retained: usize,
+    checkouts: AtomicU64,
+    hits: AtomicU64,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        BufferPool::new()
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool::with_retained(DEFAULT_RETAINED)
+    }
+
+    /// A pool retaining at most `max_retained` idle buffers.
+    pub fn with_retained(max_retained: usize) -> BufferPool {
+        BufferPool {
+            free: Mutex::new(Vec::new()),
+            max_retained,
+            checkouts: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+        }
+    }
+
+    /// The process-wide pool used by the remap engine's send path.
+    pub fn global() -> &'static BufferPool {
+        static POOL: OnceLock<BufferPool> = OnceLock::new();
+        POOL.get_or_init(BufferPool::new)
+    }
+
+    /// Check out a cleared buffer with at least `cap` bytes reserved,
+    /// reusing a previously returned allocation when one is free.
+    pub fn checkout(&self, cap: usize) -> PooledBuf<'_> {
+        self.checkouts.fetch_add(1, Ordering::Relaxed);
+        let reused = self.free.lock().unwrap().pop();
+        let mut buf = match reused {
+            Some(b) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                b
+            }
+            None => Vec::new(),
+        };
+        buf.clear();
+        buf.reserve(cap);
+        PooledBuf { pool: self, buf }
+    }
+
+    fn give_back(&self, mut buf: Vec<u8>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        buf.clear();
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max_retained {
+            free.push(buf);
+        }
+    }
+
+    /// Total checkouts (the traffic instrument).
+    pub fn checkouts(&self) -> u64 {
+        self.checkouts.load(Ordering::Relaxed)
+    }
+
+    /// Checkouts served by a reused allocation — in steady state this
+    /// tracks [`BufferPool::checkouts`] with a constant offset (the
+    /// warm-up allocations), i.e. zero allocations per iteration.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Idle buffers currently retained.
+    pub fn retained(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
+}
+
+/// A checked-out pool buffer; derefs to `Vec<u8>` and returns itself
+/// to the pool on drop.
+pub struct PooledBuf<'p> {
+    pool: &'p BufferPool,
+    buf: Vec<u8>,
+}
+
+impl PooledBuf<'_> {
+    /// Move the backing vector out (e.g. into a `WireWriter`), leaving
+    /// the guard empty; pair with [`PooledBuf::restore`] so the
+    /// allocation still returns to the pool.
+    pub fn take(&mut self) -> Vec<u8> {
+        std::mem::take(&mut self.buf)
+    }
+
+    /// Put a vector (typically the one from [`PooledBuf::take`], after
+    /// `WireWriter::finish`) back under this guard's management.
+    pub fn restore(&mut self, buf: Vec<u8>) {
+        self.buf = buf;
+    }
+}
+
+impl Deref for PooledBuf<'_> {
+    type Target = Vec<u8>;
+
+    fn deref(&self) -> &Vec<u8> {
+        &self.buf
+    }
+}
+
+impl DerefMut for PooledBuf<'_> {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+}
+
+impl Drop for PooledBuf<'_> {
+    fn drop(&mut self) {
+        self.pool.give_back(std::mem::take(&mut self.buf));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn steady_state_reuses_one_allocation() {
+        let pool = BufferPool::new();
+        let first_ptr = {
+            let mut b = pool.checkout(1024);
+            b.extend_from_slice(&[1, 2, 3]);
+            b.as_ptr() as usize
+        };
+        for _ in 0..100 {
+            let b = pool.checkout(1024);
+            assert!(b.is_empty(), "pooled buffers come back cleared");
+            assert!(b.capacity() >= 1024);
+            assert_eq!(b.as_ptr() as usize, first_ptr, "same allocation reused");
+        }
+        assert_eq!(pool.checkouts(), 101);
+        assert_eq!(pool.hits(), 100, "every checkout after the first is allocation-free");
+    }
+
+    #[test]
+    fn concurrent_checkouts_get_distinct_buffers() {
+        let pool = BufferPool::new();
+        let mut a = pool.checkout(16);
+        let mut b = pool.checkout(16);
+        a.push(1);
+        b.push(2);
+        assert_ne!(a.as_ptr(), b.as_ptr());
+        drop(a);
+        drop(b);
+        assert_eq!(pool.retained(), 2);
+    }
+
+    #[test]
+    fn retention_is_capped() {
+        let pool = BufferPool::with_retained(2);
+        let bufs: Vec<_> = (0..5).map(|_| pool.checkout(8)).collect();
+        drop(bufs);
+        assert_eq!(pool.retained(), 2);
+    }
+
+    #[test]
+    fn take_restore_roundtrip_returns_to_pool() {
+        let pool = BufferPool::new();
+        {
+            let mut guard = pool.checkout(64);
+            let mut v = guard.take();
+            v.extend_from_slice(b"framing");
+            guard.restore(v);
+            assert_eq!(&guard[..], b"framing");
+        }
+        assert_eq!(pool.retained(), 1);
+        assert!(pool.checkout(8).capacity() >= 64);
+    }
+
+    #[test]
+    fn zero_capacity_buffers_are_not_retained() {
+        let pool = BufferPool::new();
+        drop(pool.checkout(0));
+        assert_eq!(pool.retained(), 0);
+    }
+
+    #[test]
+    fn global_pool_is_shared() {
+        let a = BufferPool::global() as *const BufferPool;
+        let b = BufferPool::global() as *const BufferPool;
+        assert_eq!(a, b);
+    }
+}

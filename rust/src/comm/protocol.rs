@@ -12,6 +12,15 @@
 //! instead of silently reinterpreted bits — the contract the generic
 //! remap engine relies on. The legacy `put_f64_slice` family is a
 //! thin wrapper over the typed calls.
+//!
+//! Payload bytes move through the [`Element`] **bulk codec**
+//! (`copy_to_le` / `copy_from_le`): on little-endian targets a slice
+//! encodes and decodes as one memcpy — no per-element loop anywhere on
+//! the hot path. The gather/scatter variants
+//! ([`WireWriter::put_slice_gather`] /
+//! [`WireReader::get_slice_scatter`]) extend the same framing to
+//! non-contiguous piece lists, which is how the remap engine packs one
+//! coalesced message per peer without an intermediate staging copy.
 
 use super::{CommError, Result};
 use crate::element::{Dtype, Element};
@@ -29,6 +38,14 @@ impl WireWriter {
 
     pub fn with_capacity(cap: usize) -> Self {
         WireWriter { buf: Vec::with_capacity(cap) }
+    }
+
+    /// Build a writer over an existing allocation (cleared first) —
+    /// how pooled wire buffers ([`crate::comm::BufferPool`]) are
+    /// reused without reallocating.
+    pub fn from_vec(mut buf: Vec<u8>) -> Self {
+        buf.clear();
+        WireWriter { buf }
     }
 
     pub fn put_u8(&mut self, v: u8) {
@@ -65,14 +82,31 @@ impl WireWriter {
     }
 
     /// Bulk typed slice — the hot payload type (vector fragments).
-    /// Framing: count, dtype code, then `count × T::WIDTH` LE bytes.
+    /// Framing: count, dtype code, then `count × T::WIDTH` LE bytes,
+    /// encoded by the bulk codec (one memcpy on LE targets).
     pub fn put_slice<T: Element>(&mut self, v: &[T]) {
         self.put_u64(v.len() as u64);
         self.put_u8(T::DTYPE.code());
-        // Safe per-element encode; LLVM vectorizes this loop.
         self.buf.reserve(v.len() * T::WIDTH);
-        for &x in v {
-            x.write_le(&mut self.buf);
+        T::copy_to_le(v, &mut self.buf);
+    }
+
+    /// Coalesced typed payload: frame `Σ len` elements as one slice,
+    /// gathered from `segs = (offset, len)` pieces of `src` in order —
+    /// the per-peer remap message body, packed without any
+    /// intermediate staging buffer. (The iterator is walked twice —
+    /// once for the count, once to gather — hence `Clone`.)
+    pub fn put_slice_gather<T: Element>(
+        &mut self,
+        src: &[T],
+        segs: impl Iterator<Item = (usize, usize)> + Clone,
+    ) {
+        let total: usize = segs.clone().map(|(_, len)| len).sum();
+        self.put_u64(total as u64);
+        self.put_u8(T::DTYPE.code());
+        self.buf.reserve(total * T::WIDTH);
+        for (off, len) in segs {
+            T::copy_to_le(&src[off..off + len], &mut self.buf);
         }
     }
 
@@ -153,9 +187,16 @@ impl<'a> WireReader<'a> {
             .map_err(|e| CommError::Malformed(format!("bad utf8: {e}")))
     }
 
+    /// Take exactly `n` raw bytes (no length prefix) — the payload
+    /// region after a slice header, for callers that scatter it
+    /// themselves (the chunked backend's parallel unpack).
+    pub(crate) fn take_raw(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
     /// Read the `[count][dtype]` slice header, checking the dtype code
     /// against `T` (payload self-description).
-    fn slice_header<T: Element>(&mut self) -> Result<usize> {
+    pub(crate) fn slice_header<T: Element>(&mut self) -> Result<usize> {
         let n = self.get_usize()?;
         let code = self.get_u8()?;
         match Dtype::from_code(code) {
@@ -172,15 +213,14 @@ impl<'a> WireReader<'a> {
     pub fn get_vec<T: Element>(&mut self) -> Result<Vec<T>> {
         let n = self.slice_header::<T>()?;
         let bytes = self.take(n * T::WIDTH)?;
-        let mut out = Vec::with_capacity(n);
-        for c in bytes.chunks_exact(T::WIDTH) {
-            out.push(T::read_le(c));
-        }
+        let mut out = vec![T::ZERO; n];
+        T::copy_from_le(bytes, &mut out);
         Ok(out)
     }
 
     /// Decode a typed slice directly into `dst` (remap hot path — no
-    /// intermediate allocation).
+    /// intermediate allocation, bulk-decoded in one memcpy on LE
+    /// targets).
     pub fn get_slice_into<T: Element>(&mut self, dst: &mut [T]) -> Result<()> {
         let n = self.slice_header::<T>()?;
         if n != dst.len() {
@@ -191,8 +231,31 @@ impl<'a> WireReader<'a> {
             )));
         }
         let bytes = self.take(n * T::WIDTH)?;
-        for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(T::WIDTH)) {
-            *d = T::read_le(c);
+        T::copy_from_le(bytes, dst);
+        Ok(())
+    }
+
+    /// Coalesced counterpart of [`WireReader::get_slice_into`]: decode
+    /// one typed slice and scatter it into `dst` at `segs = (offset,
+    /// len)` pieces in order. The framed element count must equal
+    /// `Σ len` exactly.
+    pub fn get_slice_scatter<T: Element>(
+        &mut self,
+        dst: &mut [T],
+        segs: impl IntoIterator<Item = (usize, usize)>,
+    ) -> Result<()> {
+        let n = self.slice_header::<T>()?;
+        let mut scattered = 0usize;
+        for (off, len) in segs {
+            let bytes = self.take(len * T::WIDTH)?;
+            T::copy_from_le(bytes, &mut dst[off..off + len]);
+            scattered += len;
+        }
+        if scattered != n {
+            return Err(CommError::Malformed(format!(
+                "{} scatter consumed {scattered} of {n} framed elements",
+                T::DTYPE
+            )));
         }
         Ok(())
     }
@@ -304,6 +367,81 @@ mod tests {
         let err = WireReader::new(&buf).get_slice_into::<f64>(&mut dst);
         assert!(matches!(err, Err(CommError::Malformed(_))), "{err:?}");
         assert!(WireReader::new(&buf).get_vec::<i64>().is_err());
+    }
+
+    /// Acceptance criterion: a 1M-element f64 payload goes through the
+    /// codec's bulk path (one memcpy each way on LE targets — the
+    /// `Element::copy_to_le`/`copy_from_le` hooks) and round-trips
+    /// bit-exactly through `put_slice`/`get_slice_into`.
+    #[test]
+    fn one_million_f64_roundtrip_uses_bulk_path() {
+        let n = 1 << 20;
+        let v: Vec<f64> = (0..n).map(|i| i as f64 * 0.25 - 3.0).collect();
+        let mut w = WireWriter::with_capacity(9 + 8 * n);
+        w.put_slice::<f64>(&v);
+        let buf = w.finish();
+        assert_eq!(buf.len(), 9 + 8 * n);
+        let mut dst = vec![0.0f64; n];
+        WireReader::new(&buf).get_slice_into::<f64>(&mut dst).unwrap();
+        assert_eq!(dst, v);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip_is_bit_identical_to_contiguous() {
+        // Gathering pieces must frame exactly like a contiguous slice
+        // of the same elements.
+        let src: Vec<f64> = (0..100).map(|i| i as f64 * 0.25).collect();
+        let segs = [(10usize, 5usize), (0, 3), (90, 10)];
+        let gathered: Vec<f64> = segs
+            .iter()
+            .flat_map(|&(off, len)| src[off..off + len].iter().copied())
+            .collect();
+        let mut wa = WireWriter::new();
+        wa.put_slice_gather::<f64>(&src, segs.iter().copied());
+        let mut wb = WireWriter::new();
+        wb.put_slice::<f64>(&gathered);
+        assert_eq!(wa.finish(), wb.finish());
+
+        // Scatter back into a differently-laid-out destination.
+        let mut w = WireWriter::new();
+        w.put_slice_gather::<f64>(&src, segs.iter().copied());
+        let buf = w.finish();
+        let dsegs = [(2usize, 5usize), (20, 3), (40, 10)];
+        let mut dst = vec![0.0f64; 64];
+        WireReader::new(&buf)
+            .get_slice_scatter::<f64>(&mut dst, dsegs.iter().copied())
+            .unwrap();
+        assert_eq!(&dst[2..7], &src[10..15]);
+        assert_eq!(&dst[20..23], &src[0..3]);
+        assert_eq!(&dst[40..50], &src[90..100]);
+    }
+
+    #[test]
+    fn scatter_length_mismatch_is_error() {
+        let mut w = WireWriter::new();
+        w.put_slice::<i64>(&[1, 2, 3, 4]);
+        let buf = w.finish();
+        let mut dst = [0i64; 8];
+        // Fewer scattered elements than framed → loud error.
+        let err = WireReader::new(&buf).get_slice_scatter::<i64>(&mut dst, [(0usize, 3usize)]);
+        assert!(matches!(err, Err(CommError::Malformed(_))), "{err:?}");
+        // Too many → runs off the payload, also an error.
+        let err = WireReader::new(&buf).get_slice_scatter::<i64>(&mut dst, [(0usize, 6usize)]);
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn from_vec_reuses_and_clears() {
+        let mut w = WireWriter::new();
+        w.put_u64(7);
+        let buf = w.finish();
+        let cap = buf.capacity();
+        let mut w2 = WireWriter::from_vec(buf);
+        assert!(w2.is_empty());
+        w2.put_u64(9);
+        let out = w2.finish();
+        assert!(out.capacity() >= cap.min(8));
+        assert_eq!(WireReader::new(&out).get_u64().unwrap(), 9);
     }
 
     #[test]

@@ -5,40 +5,133 @@
 //! off, a halo-style redistribution) is two separable concerns:
 //!
 //! 1. **Planning** — intersect the source and destination
-//!    [`Partition`]s into a transfer list and precompute, per PID, the
-//!    global-range → local-offset tables for both layouts. Pure index
-//!    arithmetic, identical on every PID, O(ranges) work.
+//!    [`Partition`]s into a transfer list, group it **per peer**, and
+//!    precompute every local/payload offset the data movement will
+//!    need. Pure index arithmetic, identical on every PID, O(ranges)
+//!    work.
 //! 2. **Execution** — move bytes per the plan over a
 //!    [`Transport`](crate::comm::Transport). O(data) work.
 //!
-//! The seed implementation fused the two inside `assign_from`, so an
-//! iterated pipeline re-planned on every iteration. [`RemapPlan`]
-//! materializes concern 1 as a value; [`RemapEngine`] caches plans
-//! keyed by `(src_map, dst_map, shape)` so a repeated remap plans
-//! **exactly once** (observable via [`RemapEngine::plans_built`] — the
-//! tests assert it rather than assume it). Plans are returned as
-//! `Arc`s: SPMD threads of one process can share one engine. The
-//! cache lock is never held during data movement; it IS held across
-//! the build of a missing plan, which keeps the build counter exact
-//! under thread races at the cost of serializing first-touch
-//! planning. A cache hit still pays the mutex plus a key clone —
-//! loops that care should hoist the `Arc` once
-//! ([`RemapEngine::plan`]) and execute through
-//! `DarrayT::assign_from_plan`.
+//! Execution is the bandwidth hot path, and it is built to be
+//! bandwidth-bound rather than allocation/syscall-bound:
+//!
+//! * **One coalesced message per destination peer** per epoch
+//!   ([`PeerGroup`]): all ranges flowing between a PID pair travel as
+//!   `[n_ranges][(dst_lo, len)…][count][dtype][packed payload]`,
+//!   so a block→cyclic remap costs `np − 1` messages per PID instead
+//!   of one per plan step (which for strided maps means one per
+//!   element run).
+//! * **Pooled wire buffers** ([`crate::comm::BufferPool`]): header and
+//!   payload buffers are checked out per send and returned on
+//!   completion — steady-state remap loops allocate nothing on the
+//!   send path.
+//! * **Bulk byte-cast packing**: payloads are gathered and scattered
+//!   with the [`Element`] bulk codec (one memcpy per contiguous range
+//!   on little-endian targets, never a per-element loop).
+//! * **Arrival-order receives**: incoming peers are drained with
+//!   non-blocking sweeps ([`Transport::try_recv`]), so a slow peer
+//!   does not serialize the unpacking of the fast ones.
+//!
+//! [`RemapPlan`] materializes concern 1 as a value; [`RemapEngine`]
+//! caches plans keyed by `(src_map, dst_map, shape)` so a repeated
+//! remap plans **exactly once** (observable via
+//! [`RemapEngine::plans_built`] — the tests assert it rather than
+//! assume it). Plans are returned as `Arc`s: SPMD threads of one
+//! process can share one engine. Since [`Dmap`] is `Arc`-backed with
+//! a precomputed fingerprint, a cache hit costs a mutex plus an O(1)
+//! hash lookup — no deep map clone or structural compare. The cache
+//! lock is never held during data movement; it IS held across the
+//! build of a missing plan, which keeps the build counter exact under
+//! thread races at the cost of serializing first-touch planning.
 
-use crate::comm::{tags, Transport, WireReader, WireWriter};
+use crate::comm::{tags, BufferPool, CommError, Tag, Transport, WireReader, WireWriter};
 use crate::dmap::{Dmap, GlobalRange, Partition, Pid};
 use crate::element::Element;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// Per-PID offset table: `(global_lo, len, local_offset)` per owned
 /// contiguous range, in ascending global order.
 pub type OffsetTable = Vec<(usize, usize, usize)>;
 
-/// A fully precomputed remap: the transfer list plus both sides'
-/// offset tables. Everything `assign_from` needs except the data.
+/// How long the arrival-order receive loop waits in total before
+/// reporting a timeout (matches [`Transport::recv`]'s default).
+const RECV_WINDOW: Duration = Duration::from_secs(120);
+/// Empty sweeps before the receive loop stops spinning (yield) and
+/// starts sleeping.
+const SPIN_SWEEPS: u32 = 64;
+/// First sleep of the receive backoff.
+const POLL_MIN: Duration = Duration::from_micros(20);
+/// Backoff cap — bounds worst-case added latency per message.
+const POLL_MAX: Duration = Duration::from_millis(1);
+
+/// The remap tag for `epoch`: one coalesced message per peer pair per
+/// epoch, so the `(from, tag)` match fully identifies it and the step
+/// field stays 0.
+#[inline]
+pub(crate) fn remap_tag(epoch: u64) -> Tag {
+    tags::pack(tags::NS_REMAP, epoch, 0)
+}
+
+/// One peer's coalesced transfer group under a plan: every range that
+/// flows between this PID and `peer`, in deterministic plan order,
+/// with local and payload offsets precomputed at plan time so
+/// execution is pure memcpy plus exactly one message.
+#[derive(Debug)]
+pub struct PeerGroup {
+    /// The other endpoint (the sender's destination / the receiver's
+    /// source).
+    pub peer: Pid,
+    /// Global ranges carried by this group's single message.
+    pub ranges: Vec<GlobalRange>,
+    /// Local offset of each range in the owning side's layout (the
+    /// sender's source layout / the receiver's destination layout).
+    pub local_offsets: Vec<usize>,
+    /// Exclusive prefix sums of range lengths: range `i`'s elements
+    /// occupy `[payload_offsets[i], payload_offsets[i] + len_i)` of
+    /// the packed payload.
+    pub payload_offsets: Vec<usize>,
+    /// Total elements in the packed payload.
+    pub total: usize,
+    /// One past the highest local element this group touches
+    /// (`max(local_offsets[i] + len_i)`) — the bounds witness the
+    /// raw-pointer pack/unpack kernels check against the slice length
+    /// before running.
+    pub local_extent: usize,
+}
+
+impl PeerGroup {
+    fn build(peer: Pid, ranges: Vec<GlobalRange>, table: &OffsetTable) -> PeerGroup {
+        let local_offsets: Vec<usize> = ranges.iter().map(|r| lookup(table, r.lo)).collect();
+        let mut payload_offsets = Vec::with_capacity(ranges.len());
+        let mut total = 0usize;
+        let mut local_extent = 0usize;
+        for (r, &off) in ranges.iter().zip(&local_offsets) {
+            payload_offsets.push(total);
+            total += r.len();
+            local_extent = local_extent.max(off + r.len());
+        }
+        PeerGroup { peer, ranges, local_offsets, payload_offsets, total, local_extent }
+    }
+
+    /// `(local_offset, len)` pieces in payload order — the gather /
+    /// scatter list the codec calls consume.
+    pub fn segs(&self) -> impl Iterator<Item = (usize, usize)> + Clone + '_ {
+        self.ranges.iter().zip(&self.local_offsets).map(|(r, &off)| (off, r.len()))
+    }
+
+    /// Wire size of this group's message header (the range table; the
+    /// typed-slice prefix lives at the head of the payload part).
+    pub(crate) fn header_bytes(&self) -> usize {
+        8 + 16 * self.ranges.len()
+    }
+}
+
+/// A fully precomputed remap: the transfer list, both sides' offset
+/// tables, and the per-peer coalesced groups. Everything
+/// `assign_from` needs except the data.
 #[derive(Debug)]
 pub struct RemapPlan {
     /// Source and destination assign identical ownership — execution
@@ -50,6 +143,12 @@ pub struct RemapPlan {
     transfers: Vec<(Pid, Pid, GlobalRange)>,
     src_offsets: HashMap<Pid, OffsetTable>,
     dst_offsets: HashMap<Pid, OffsetTable>,
+    /// Per sender: coalesced outgoing groups, ascending peer order.
+    peer_sends: HashMap<Pid, Vec<PeerGroup>>,
+    /// Per receiver: coalesced incoming groups, ascending peer order.
+    peer_recvs: HashMap<Pid, Vec<PeerGroup>>,
+    /// Per PID: `(src_offset, dst_offset, len)` purely local copies.
+    locals: HashMap<Pid, Vec<(usize, usize, usize)>>,
 }
 
 impl RemapPlan {
@@ -63,14 +162,63 @@ impl RemapPlan {
                 transfers: Vec::new(),
                 src_offsets: HashMap::new(),
                 dst_offsets: HashMap::new(),
+                peer_sends: HashMap::new(),
+                peer_recvs: HashMap::new(),
+                locals: HashMap::new(),
             };
         }
         let transfers = src_part.transfers_to(&dst_part);
+        let src_offsets = offset_tables(&src_part, src);
+        let dst_offsets = offset_tables(&dst_part, dst);
+
+        // Group the transfer list per communicating pair (BTreeMap ⇒
+        // deterministic ascending peer order on every PID).
+        type ByPeer = BTreeMap<Pid, Vec<GlobalRange>>;
+        let mut sends: HashMap<Pid, ByPeer> = HashMap::new();
+        let mut recvs: HashMap<Pid, ByPeer> = HashMap::new();
+        let mut locals: HashMap<Pid, Vec<(usize, usize, usize)>> = HashMap::new();
+        for &(sp, dp, r) in &transfers {
+            if sp == dp {
+                locals.entry(sp).or_default().push((
+                    lookup(&src_offsets[&sp], r.lo),
+                    lookup(&dst_offsets[&dp], r.lo),
+                    r.len(),
+                ));
+            } else {
+                sends.entry(sp).or_default().entry(dp).or_default().push(r);
+                recvs.entry(dp).or_default().entry(sp).or_default().push(r);
+            }
+        }
+        let peer_sends = sends
+            .into_iter()
+            .map(|(pid, by_peer)| {
+                let table = &src_offsets[&pid];
+                let groups = by_peer
+                    .into_iter()
+                    .map(|(peer, ranges)| PeerGroup::build(peer, ranges, table))
+                    .collect();
+                (pid, groups)
+            })
+            .collect();
+        let peer_recvs = recvs
+            .into_iter()
+            .map(|(pid, by_peer)| {
+                let table = &dst_offsets[&pid];
+                let groups = by_peer
+                    .into_iter()
+                    .map(|(peer, ranges)| PeerGroup::build(peer, ranges, table))
+                    .collect();
+                (pid, groups)
+            })
+            .collect();
         RemapPlan {
             aligned: false,
             transfers,
-            src_offsets: offset_tables(&src_part, src),
-            dst_offsets: offset_tables(&dst_part, dst),
+            src_offsets,
+            dst_offsets,
+            peer_sends,
+            peer_recvs,
+            locals,
         }
     }
 
@@ -84,13 +232,27 @@ impl RemapPlan {
         &self.transfers
     }
 
-    /// Messages `pid` will actually send/receive under this plan
-    /// (excludes local copies) — the "bounded communication" number.
+    /// Coalesced outgoing groups for `pid` — one message each.
+    pub fn peer_sends(&self, pid: Pid) -> &[PeerGroup] {
+        self.peer_sends.get(&pid).map_or(&[], Vec::as_slice)
+    }
+
+    /// Coalesced incoming groups for `pid` — one message each.
+    pub fn peer_recvs(&self, pid: Pid) -> &[PeerGroup] {
+        self.peer_recvs.get(&pid).map_or(&[], Vec::as_slice)
+    }
+
+    /// Purely local `(src_offset, dst_offset, len)` copies for `pid`.
+    pub fn local_copies(&self, pid: Pid) -> &[(usize, usize, usize)] {
+        self.locals.get(&pid).map_or(&[], Vec::as_slice)
+    }
+
+    /// Messages `pid` will actually send/receive under this plan —
+    /// with per-peer coalescing, one per distinct communicating peer
+    /// per direction (**not** one per plan step), and still zero for
+    /// aligned plans. The "bounded communication" number.
     pub fn message_count(&self, pid: Pid) -> usize {
-        self.transfers
-            .iter()
-            .filter(|(s, d, _)| s != d && (*s == pid || *d == pid))
-            .count()
+        self.peer_sends(pid).len() + self.peer_recvs(pid).len()
     }
 
     /// Local offset of global index `g` in `pid`'s **source** layout.
@@ -125,8 +287,9 @@ impl RemapPlan {
 
 /// Execute a prebuilt remap plan for one PID's typed local parts:
 /// aligned plans degenerate to a memcpy; otherwise local pieces copy
-/// and remote pieces travel as one typed message per plan step, tagged
-/// by step index so ordering is deterministic on both sides.
+/// and remote pieces travel as **one coalesced message per peer**,
+/// packed from pooled wire buffers by the bulk codec and received in
+/// arrival order.
 ///
 /// This is the single data-movement routine behind both
 /// `DarrayT::assign_from*` and every host-class
@@ -145,36 +308,168 @@ pub fn execute_plan_typed<T: Element>(
         dst.copy_from_slice(src);
         return Ok(());
     }
+    for &(s_off, d_off, len) in plan.local_copies(pid) {
+        dst[d_off..d_off + len].copy_from_slice(&src[s_off..s_off + len]);
+    }
+    for g in plan.peer_sends(pid) {
+        send_group_typed::<T>(g, src, t, epoch)?;
+    }
+    recv_groups(plan, pid, t, epoch, |g, payload| {
+        unpack_group_typed::<T>(g, &payload, dst)
+    })
+}
 
-    // Phase 1: satisfy local pieces + send outgoing pieces.
-    for (step, &(sp, dp, r)) in plan.transfers().iter().enumerate() {
-        if sp != pid {
-            continue;
-        }
-        let s_off = plan.src_offset(pid, r.lo);
-        let src_slice = &src[s_off..s_off + r.len()];
-        if dp == pid {
-            let d_off = plan.dst_offset(pid, r.lo);
-            dst[d_off..d_off + r.len()].copy_from_slice(src_slice);
-        } else {
-            let mut w = WireWriter::with_capacity(24 + T::WIDTH * r.len());
-            w.put_u64(step as u64);
-            w.put_slice::<T>(src_slice);
-            t.send(dp, tags::pack(tags::NS_REMAP, epoch, step as u64), &w.finish())?;
+/// Pack and send one peer's coalesced message:
+/// `[n_ranges][(dst_lo, len)…][count][dtype][payload]`. Header and
+/// payload live in pooled wire buffers (zero steady-state
+/// allocations); the payload is gathered straight from `src` by the
+/// bulk codec; the transport writes both parts without concatenating
+/// them ([`Transport::send_parts`]).
+pub(crate) fn send_group_typed<T: Element>(
+    g: &PeerGroup,
+    src: &[T],
+    t: &dyn Transport,
+    epoch: u64,
+) -> crate::comm::Result<()> {
+    let pool = BufferPool::global();
+    let mut header = pool.checkout(g.header_bytes());
+    let mut w = WireWriter::from_vec(header.take());
+    write_group_header(&mut w, g);
+    header.restore(w.finish());
+
+    let mut payload = pool.checkout(9 + g.total * T::WIDTH);
+    let mut pw = WireWriter::from_vec(payload.take());
+    pw.put_slice_gather::<T>(src, g.segs());
+    payload.restore(pw.finish());
+    t.send_parts(g.peer, remap_tag(epoch), &[header.as_slice(), payload.as_slice()])
+}
+
+/// The coalesced message header: the range table. The typed-slice
+/// framing (`[count][dtype]`) opens the payload part, written by
+/// `put_slice_gather` (or its parallel equivalent).
+pub(crate) fn write_group_header(w: &mut WireWriter, g: &PeerGroup) {
+    w.put_u64(g.ranges.len() as u64);
+    for r in &g.ranges {
+        w.put_u64(r.lo as u64);
+        w.put_u64(r.len() as u64);
+    }
+}
+
+/// Validate one received message's range table against the plan's
+/// expectation for this group.
+fn check_group_header(g: &PeerGroup, rd: &mut WireReader) -> crate::comm::Result<()> {
+    let n = rd.get_usize()?;
+    if n != g.ranges.len() {
+        return Err(CommError::Malformed(format!(
+            "coalesced remap: message carries {n} ranges, plan expects {}",
+            g.ranges.len()
+        )));
+    }
+    for want in &g.ranges {
+        let lo = rd.get_usize()?;
+        let len = rd.get_usize()?;
+        if lo != want.lo || len != want.len() {
+            return Err(CommError::Malformed(format!(
+                "coalesced remap: range ({lo}, {len}) does not match plan ({}, {})",
+                want.lo,
+                want.len()
+            )));
         }
     }
-    // Phase 2: receive incoming pieces.
-    for (step, &(sp, dp, r)) in plan.transfers().iter().enumerate() {
-        if dp != pid || sp == pid {
+    Ok(())
+}
+
+/// Scatter one coalesced message into `dst` per the group's
+/// precomputed offsets (serial; the chunked backend has a
+/// pool-parallel counterpart over [`check_group_payload`]).
+pub(crate) fn unpack_group_typed<T: Element>(
+    g: &PeerGroup,
+    payload: &[u8],
+    dst: &mut [T],
+) -> crate::comm::Result<()> {
+    let mut rd = WireReader::new(payload);
+    check_group_header(g, &mut rd)?;
+    rd.get_slice_scatter::<T>(dst, g.segs())
+}
+
+/// Validate a coalesced message fully and return its raw packed
+/// payload bytes (for callers that scatter in parallel).
+pub(crate) fn check_group_payload<'a, T: Element>(
+    g: &PeerGroup,
+    payload: &'a [u8],
+) -> crate::comm::Result<&'a [u8]> {
+    let mut rd = WireReader::new(payload);
+    check_group_header(g, &mut rd)?;
+    let n = rd.slice_header::<T>()?;
+    if n != g.total {
+        return Err(CommError::Malformed(format!(
+            "coalesced remap: payload frames {n} elements, plan expects {}",
+            g.total
+        )));
+    }
+    let bytes = rd.take_raw(n * T::WIDTH)?;
+    if rd.remaining() != 0 {
+        return Err(CommError::Malformed(format!(
+            "coalesced remap: {} trailing bytes after payload",
+            rd.remaining()
+        )));
+    }
+    Ok(bytes)
+}
+
+/// Receive one coalesced message from every incoming peer of `pid`,
+/// completing them in **arrival order**: sweep the pending peers with
+/// non-blocking receives, spinning briefly then backing off
+/// exponentially between empty sweeps. `unpack(group, payload)`
+/// scatters one message.
+pub(crate) fn recv_groups(
+    plan: &RemapPlan,
+    pid: Pid,
+    t: &dyn Transport,
+    epoch: u64,
+    mut unpack: impl FnMut(&PeerGroup, Vec<u8>) -> crate::comm::Result<()>,
+) -> crate::comm::Result<()> {
+    let tag = remap_tag(epoch);
+    let groups = plan.peer_recvs(pid);
+    // A single incoming peer has nothing to reorder — block directly.
+    if let [only] = groups {
+        let payload = t.recv(only.peer, tag)?;
+        return unpack(only, payload);
+    }
+    let mut pending: Vec<&PeerGroup> = groups.iter().collect();
+    let deadline = Instant::now() + RECV_WINDOW;
+    let mut delay = POLL_MIN;
+    let mut empty_sweeps = 0u32;
+    while !pending.is_empty() {
+        let mut progressed = false;
+        let mut i = 0;
+        while i < pending.len() {
+            match t.try_recv(pending[i].peer, tag)? {
+                Some(payload) => {
+                    unpack(pending.swap_remove(i), payload)?;
+                    progressed = true;
+                }
+                None => i += 1,
+            }
+        }
+        if pending.is_empty() {
+            break;
+        }
+        if progressed {
+            delay = POLL_MIN;
+            empty_sweeps = 0;
             continue;
         }
-        let payload = t.recv(sp, tags::pack(tags::NS_REMAP, epoch, step as u64))?;
-        let mut rd = WireReader::new(&payload);
-        let got_step = rd.get_u64()?;
-        debug_assert_eq!(got_step as usize, step);
-        let d_off = plan.dst_offset(pid, r.lo);
-        let dst_slice = &mut dst[d_off..d_off + r.len()];
-        rd.get_slice_into::<T>(dst_slice)?;
+        if Instant::now() >= deadline {
+            return Err(CommError::Timeout { from: pending[0].peer, tag });
+        }
+        if empty_sweeps < SPIN_SWEEPS {
+            empty_sweeps += 1;
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(delay);
+            delay = (delay * 2).min(POLL_MAX);
+        }
     }
     Ok(())
 }
@@ -206,6 +501,8 @@ fn lookup(table: &OffsetTable, g: usize) -> usize {
 }
 
 /// Cache key: the remap is fully determined by the map pair + shape.
+/// Maps are `Arc`-backed with precomputed fingerprints, so cloning
+/// and hashing the key are O(1) in the map structure.
 #[derive(PartialEq, Eq, Hash, Clone)]
 struct PlanKey {
     src: Dmap,
@@ -240,8 +537,10 @@ impl RemapEngine {
     }
 
     /// The cached plan for `(src, dst, shape)`, building it on first
-    /// use. Holding the cache lock across the build keeps the build
-    /// counter exact even under SPMD thread races.
+    /// use. A hit is a mutex plus a fingerprint-keyed hash lookup
+    /// (maps clone as `Arc`s — no deep copy). Holding the cache lock
+    /// across the build keeps the build counter exact even under SPMD
+    /// thread races.
     pub fn plan(&self, src: &Dmap, dst: &Dmap, shape: &[usize]) -> Arc<RemapPlan> {
         let key = PlanKey { src: src.clone(), dst: dst.clone(), shape: shape.to_vec() };
         let mut cache = self.cache.lock().unwrap();
@@ -282,6 +581,7 @@ mod tests {
         assert!(p.is_aligned());
         assert!(p.transfers().is_empty());
         assert_eq!(p.message_count(0), 0);
+        assert!(p.peer_sends(0).is_empty() && p.peer_recvs(0).is_empty());
     }
 
     #[test]
@@ -307,14 +607,74 @@ mod tests {
         }
     }
 
+    /// The acceptance-criterion shape: block→cyclic on np=4 — every
+    /// PID talks to every other PID, exactly one message per peer.
     #[test]
-    fn message_count_excludes_local_copies() {
+    fn block_to_cyclic_np4_coalesces_to_one_message_per_peer() {
+        let p = RemapPlan::build(&Dmap::block_1d(4), &Dmap::cyclic_1d(4), &[64]);
+        for pid in 0..4 {
+            let sends = p.peer_sends(pid);
+            let recvs = p.peer_recvs(pid);
+            assert_eq!(sends.len(), 3, "pid {pid} sends one message per peer");
+            assert_eq!(recvs.len(), 3, "pid {pid} receives one message per peer");
+            assert_eq!(p.message_count(pid), 6);
+            // Ascending deterministic peer order, self excluded.
+            let speers: Vec<Pid> = sends.iter().map(|g| g.peer).collect();
+            let expect: Vec<Pid> = (0..4).filter(|&q| q != pid).collect();
+            assert_eq!(speers, expect);
+            // The per-plan-step count this replaces is strictly larger.
+            let steps = p
+                .transfers()
+                .iter()
+                .filter(|(s, d, _)| s != d && *s == pid)
+                .count();
+            assert!(steps > sends.len(), "coalescing must merge steps ({steps} > 3)");
+        }
+    }
+
+    #[test]
+    fn peer_group_offsets_are_consistent() {
+        let p = RemapPlan::build(&Dmap::block_1d(3), &Dmap::block_cyclic_1d(3, 4), &[60]);
+        for pid in 0..3 {
+            for g in p.peer_sends(pid) {
+                assert_eq!(g.ranges.len(), g.local_offsets.len());
+                assert_eq!(g.ranges.len(), g.payload_offsets.len());
+                let mut total = 0usize;
+                let mut extent = 0usize;
+                for (i, r) in g.ranges.iter().enumerate() {
+                    assert_eq!(g.payload_offsets[i], total, "prefix sums");
+                    assert_eq!(g.local_offsets[i], p.src_offset(pid, r.lo));
+                    total += r.len();
+                    extent = extent.max(g.local_offsets[i] + r.len());
+                }
+                assert_eq!(g.total, total);
+                assert_eq!(g.local_extent, extent, "bounds witness");
+                // The seg iterator mirrors (local_offset, len).
+                let segs: Vec<(usize, usize)> = g.segs().collect();
+                assert_eq!(segs.len(), g.ranges.len());
+                assert_eq!(segs[0], (g.local_offsets[0], g.ranges[0].len()));
+            }
+            for g in p.peer_recvs(pid) {
+                for (i, r) in g.ranges.iter().enumerate() {
+                    assert_eq!(g.local_offsets[i], p.dst_offset(pid, r.lo));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn message_count_counts_peers_not_steps() {
         let p = RemapPlan::build(&Dmap::block_1d(2), &Dmap::cyclic_1d(2), &[8]);
         let msgs: usize = (0..2).map(|pid| p.message_count(pid)).sum();
-        let crossings = p.transfers().iter().filter(|(s, d, _)| s != d).count();
-        // Each crossing counts once at the sender and once at the receiver.
-        assert_eq!(msgs, 2 * crossings);
-        assert!(crossings > 0);
+        // Distinct crossing (src, dst) pairs, counted at both ends.
+        let pairs: std::collections::HashSet<(Pid, Pid)> = p
+            .transfers()
+            .iter()
+            .filter(|(s, d, _)| s != d)
+            .map(|&(s, d, _)| (s, d))
+            .collect();
+        assert_eq!(msgs, 2 * pairs.len());
+        assert!(!pairs.is_empty());
     }
 
     #[test]
@@ -334,6 +694,17 @@ mod tests {
         eng.clear();
         assert_eq!(eng.cached_plans(), 0);
         assert_eq!(eng.plans_built(), 3, "clear keeps the instrument");
+    }
+
+    /// Cache hits must work across separately *constructed* (not just
+    /// cloned) maps — the fingerprint keys structural equality.
+    #[test]
+    fn engine_hits_across_reconstructed_maps() {
+        let eng = RemapEngine::new();
+        eng.plan(&Dmap::block_1d(4), &Dmap::cyclic_1d(4), &[64]);
+        let p = eng.plan(&Dmap::block_1d(4), &Dmap::cyclic_1d(4), &[64]);
+        assert_eq!(eng.plans_built(), 1, "reconstructed equal maps must hit");
+        assert!(!p.is_aligned());
     }
 
     #[test]

@@ -35,8 +35,9 @@ impl<T: Element> DarrayT<T> {
 
     /// Global assignment through a plan cache: the first call for a
     /// given `(src_map, dst_map, shape)` plans, every later call moves
-    /// data only. Each call pays one cache lookup (a mutex + key
-    /// clone); the tightest loops can hoist the `Arc<RemapPlan>` once
+    /// data only. Each call pays one cache lookup (a mutex + a
+    /// fingerprint-keyed hash — maps clone as `Arc`s, no deep copy);
+    /// the tightest loops can still hoist the `Arc<RemapPlan>` once
     /// and use [`DarrayT::assign_from_plan`] instead.
     pub fn assign_from_engine(
         &mut self,
@@ -104,8 +105,8 @@ impl<T: Element> DarrayT<T> {
     }
 
     /// Execute a prebuilt remap plan: local pieces copy, remote pieces
-    /// travel as one typed message per plan step (the shared
-    /// [`execute_plan_typed`] routine backends reuse).
+    /// travel as one coalesced typed message per destination peer (the
+    /// shared [`execute_plan_typed`] routine backends reuse).
     fn execute_remap(
         &mut self,
         plan: &RemapPlan,

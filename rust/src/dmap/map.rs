@@ -5,19 +5,100 @@ use super::dist::Dist;
 use super::grid::Grid;
 use super::overlap::Overlap;
 use super::Pid;
+use std::hash::{Hash, Hasher};
+use std::sync::Arc;
+
+/// FNV-1a 64 — a tiny deterministic hasher for the map fingerprint
+/// (no dependencies; the fingerprint never crosses the wire, so only
+/// within-process determinism matters).
+struct Fnv64(u64);
+
+impl Fnv64 {
+    fn new() -> Fnv64 {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl Hasher for Fnv64 {
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// The immutable body of a [`Dmap`]; shared via `Arc` so map clones
+/// (plan-cache keys, darray handles) are pointer copies.
+#[derive(Debug)]
+struct DmapInner {
+    grid: Grid,
+    dists: Vec<Dist>,
+    overlaps: Vec<Overlap>,
+    /// Linear grid slot → PID. `pids.len() == grid.size()`.
+    pids: Vec<Pid>,
+    /// Precomputed content fingerprint — `Hash` writes this single
+    /// u64, so hashing a map (e.g. a remap plan-cache lookup) costs
+    /// O(1) instead of a deep structural walk.
+    fingerprint: u64,
+}
 
 /// A distributed-array map over an N-dimensional global shape.
 ///
 /// The map is *shape-agnostic*: it is combined with a concrete global
 /// shape at use time (matching pMatlab, where the same map object can
 /// describe arrays of different sizes).
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+///
+/// Maps are immutable and cheaply clonable (`Arc`-backed), with a
+/// precomputed [`Dmap::fingerprint`]: equality checks pointer identity
+/// first, then the fingerprint, and walks the structure only for
+/// distinct equal-fingerprint allocations — so hot caches keyed by
+/// maps (the remap engine) pay a hash lookup, not a deep clone +
+/// compare, per hit.
+#[derive(Clone)]
 pub struct Dmap {
-    grid: Grid,
-    dists: Vec<Dist>,
-    overlaps: Vec<Overlap>,
-    /// Linear grid slot → PID. `pids.len() == grid.size()`.
-    pids: Vec<Pid>,
+    inner: Arc<DmapInner>,
+}
+
+impl std::fmt::Debug for Dmap {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Dmap")
+            .field("grid", &self.inner.grid)
+            .field("dists", &self.inner.dists)
+            .field("overlaps", &self.inner.overlaps)
+            .field("pids", &self.inner.pids)
+            .finish()
+    }
+}
+
+impl PartialEq for Dmap {
+    fn eq(&self, other: &Dmap) -> bool {
+        if Arc::ptr_eq(&self.inner, &other.inner) {
+            return true;
+        }
+        // Fingerprint mismatch decides instantly; a match still deep-
+        // compares so a (vanishingly rare) collision cannot alias two
+        // different maps.
+        self.inner.fingerprint == other.inner.fingerprint
+            && self.inner.grid == other.inner.grid
+            && self.inner.dists == other.inner.dists
+            && self.inner.overlaps == other.inner.overlaps
+            && self.inner.pids == other.inner.pids
+    }
+}
+
+impl Eq for Dmap {}
+
+impl Hash for Dmap {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        // Consistent with Eq: the fingerprint is a pure function of
+        // the structural content.
+        state.write_u64(self.inner.fingerprint);
+    }
 }
 
 impl Dmap {
@@ -28,7 +109,20 @@ impl Dmap {
         assert_eq!(grid.size(), pids.len(), "one PID per grid slot");
         let mut seen = std::collections::HashSet::new();
         assert!(pids.iter().all(|p| seen.insert(*p)), "duplicate PID in map");
-        Dmap { grid, dists, overlaps, pids }
+        let mut h = Fnv64::new();
+        grid.hash(&mut h);
+        dists.hash(&mut h);
+        overlaps.hash(&mut h);
+        pids.hash(&mut h);
+        let fingerprint = h.finish();
+        Dmap {
+            inner: Arc::new(DmapInner { grid, dists, overlaps, pids, fingerprint }),
+        }
+    }
+
+    /// The precomputed content fingerprint (what [`Hash`] emits).
+    pub fn fingerprint(&self) -> u64 {
+        self.inner.fingerprint
     }
 
     /// The paper's Code Listing map: `map([1 Np], {}, 0:Np-1)` — a row
@@ -93,48 +187,49 @@ impl Dmap {
     }
 
     pub fn grid(&self) -> &Grid {
-        &self.grid
+        &self.inner.grid
     }
 
     pub fn dists(&self) -> &[Dist] {
-        &self.dists
+        &self.inner.dists
     }
 
     pub fn overlaps(&self) -> &[Overlap] {
-        &self.overlaps
+        &self.inner.overlaps
     }
 
     pub fn pids(&self) -> &[Pid] {
-        &self.pids
+        &self.inner.pids
     }
 
     /// Number of participating processes.
     pub fn np(&self) -> usize {
-        self.pids.len()
+        self.inner.pids.len()
     }
 
     pub fn ndim(&self) -> usize {
-        self.grid.ndim()
+        self.inner.grid.ndim()
     }
 
     /// Does `pid` participate in this map?
     pub fn contains(&self, pid: Pid) -> bool {
-        self.pids.contains(&pid)
+        self.inner.pids.contains(&pid)
     }
 
     /// Grid coordinate of `pid` (panics if absent).
     pub fn coord_of(&self, pid: Pid) -> Vec<usize> {
         let slot = self
+            .inner
             .pids
             .iter()
             .position(|&p| p == pid)
             .unwrap_or_else(|| panic!("PID {pid} not in map"));
-        self.grid.coord(slot)
+        self.inner.grid.coord(slot)
     }
 
     /// PID owning grid coordinate `coord`.
     pub fn pid_at(&self, coord: &[usize]) -> Pid {
-        self.pids[self.grid.linear(coord)]
+        self.inner.pids[self.inner.grid.linear(coord)]
     }
 
     /// PID owning global index `gidx` of an array with `shape`.
@@ -142,7 +237,7 @@ impl Dmap {
         assert_eq!(gidx.len(), self.ndim());
         assert_eq!(shape.len(), self.ndim());
         let coord: Vec<usize> = (0..self.ndim())
-            .map(|d| self.dists[d].owner(gidx[d], shape[d], self.grid.dim(d)))
+            .map(|d| self.inner.dists[d].owner(gidx[d], shape[d], self.inner.grid.dim(d)))
             .collect();
         self.pid_at(&coord)
     }
@@ -151,7 +246,7 @@ impl Dmap {
     pub fn local_shape(&self, pid: Pid, shape: &[usize]) -> Vec<usize> {
         let coord = self.coord_of(pid);
         (0..self.ndim())
-            .map(|d| self.dists[d].local_len(coord[d], shape[d], self.grid.dim(d)))
+            .map(|d| self.inner.dists[d].local_len(coord[d], shape[d], self.inner.grid.dim(d)))
             .collect()
     }
 
@@ -160,7 +255,12 @@ impl Dmap {
         let coord = self.coord_of(pid);
         (0..self.ndim())
             .map(|d| {
-                self.overlaps[d].stored_len(&self.dists[d], coord[d], shape[d], self.grid.dim(d))
+                self.inner.overlaps[d].stored_len(
+                    &self.inner.dists[d],
+                    coord[d],
+                    shape[d],
+                    self.inner.grid.dim(d),
+                )
             })
             .collect()
     }
@@ -169,7 +269,14 @@ impl Dmap {
     pub fn local_to_global(&self, pid: Pid, lidx: &[usize], shape: &[usize]) -> Vec<usize> {
         let coord = self.coord_of(pid);
         (0..self.ndim())
-            .map(|d| self.dists[d].local_to_global(coord[d], lidx[d], shape[d], self.grid.dim(d)))
+            .map(|d| {
+                self.inner.dists[d].local_to_global(
+                    coord[d],
+                    lidx[d],
+                    shape[d],
+                    self.inner.grid.dim(d),
+                )
+            })
             .collect()
     }
 
@@ -177,7 +284,7 @@ impl Dmap {
     pub fn global_to_local(&self, gidx: &[usize], shape: &[usize]) -> (Pid, Vec<usize>) {
         let pid = self.owner(gidx, shape);
         let l = (0..self.ndim())
-            .map(|d| self.dists[d].global_to_local(gidx[d], shape[d], self.grid.dim(d)))
+            .map(|d| self.inner.dists[d].global_to_local(gidx[d], shape[d], self.inner.grid.dim(d)))
             .collect();
         (pid, l)
     }
@@ -245,6 +352,32 @@ mod tests {
             let total: usize = (0..5).map(|p| m.local_size(p, &shape)).sum();
             assert_eq!(total, 101, "{m:?}");
         }
+    }
+
+    #[test]
+    fn fingerprint_tracks_structural_equality() {
+        // Separately constructed equal maps: equal, same fingerprint,
+        // same hash — a plan cache keyed by maps hits across
+        // constructions, not just across clones.
+        let a = Dmap::block_cyclic_1d(4, 3);
+        let b = Dmap::block_cyclic_1d(4, 3);
+        assert_eq!(a, b);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // Different structure → different map (and, for these cases,
+        // different fingerprints).
+        for other in [
+            Dmap::block_1d(4),
+            Dmap::cyclic_1d(4),
+            Dmap::block_cyclic_1d(4, 2),
+            Dmap::block_cyclic_1d(5, 3),
+        ] {
+            assert_ne!(a, other);
+            assert_ne!(a.fingerprint(), other.fingerprint(), "{other:?}");
+        }
+        // Clones share the allocation (pointer-equality fast path).
+        let c = a.clone();
+        assert_eq!(a, c);
+        assert_eq!(a.fingerprint(), c.fingerprint());
     }
 
     #[test]

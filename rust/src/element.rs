@@ -17,8 +17,12 @@
 //!   [`Element::mul`]) — wrapping for the integer types so debug
 //!   builds cannot panic on overflow;
 //! * the wire contract ([`Element::write_le`] / [`Element::read_le`]
-//!   and `WIDTH`), used by the typed codec
-//!   (`WireWriter::put_slice::<T>` / `WireReader::get_slice_into::<T>`);
+//!   and `WIDTH`), plus the **bulk slice codec**
+//!   ([`Element::copy_to_le`] / [`Element::copy_from_le`]) that
+//!   compiles to a single memcpy on little-endian targets and backs
+//!   the typed codec (`WireWriter::put_slice::<T>` /
+//!   `WireReader::get_slice_into::<T>`) — the remap hot path never
+//!   loops per element;
 //! * f64 round-trips (`from_f64`/`to_f64`) for validation and
 //!   reductions, plus a per-iteration validation tolerance
 //!   (`TOL_BASE`) scaled to the type's roundoff;
@@ -213,6 +217,63 @@ pub trait Element:
     fn write_le(self, buf: &mut Vec<u8>);
     /// Decode from exactly [`Element::WIDTH`] little-endian bytes.
     fn read_le(bytes: &[u8]) -> Self;
+
+    /// Bulk encode: append the little-endian bytes of every element of
+    /// `src` to `buf` — the codec behind `WireWriter::put_slice`.
+    ///
+    /// On little-endian targets the in-memory layout of a sealed
+    /// element slice *is* its wire encoding, so this is a single
+    /// byte-cast `extend_from_slice` (one memcpy, no per-element
+    /// loop). Elsewhere it falls back to per-element
+    /// [`Element::write_le`].
+    fn copy_to_le(src: &[Self], buf: &mut Vec<u8>) {
+        #[cfg(target_endian = "little")]
+        {
+            // SAFETY: the trait is sealed to f32/f64/i64/u64 — Copy
+            // POD scalars of exactly WIDTH bytes with no padding and
+            // no invalid bit patterns, so viewing the slice as raw
+            // bytes is valid, and on a little-endian target those
+            // bytes are exactly the LE wire encoding.
+            let bytes = unsafe {
+                std::slice::from_raw_parts(src.as_ptr().cast::<u8>(), std::mem::size_of_val(src))
+            };
+            buf.extend_from_slice(bytes);
+        }
+        #[cfg(not(target_endian = "little"))]
+        for &x in src {
+            x.write_le(buf);
+        }
+    }
+
+    /// Bulk decode: fill `dst` from exactly `dst.len() × WIDTH`
+    /// little-endian bytes — the codec behind
+    /// `WireReader::get_slice_into`. Single memcpy on little-endian
+    /// targets (see [`Element::copy_to_le`]); per-element elsewhere.
+    ///
+    /// Panics if `bytes.len() != dst.len() * WIDTH`; callers (the wire
+    /// reader) validate lengths against the payload header first.
+    fn copy_from_le(bytes: &[u8], dst: &mut [Self]) {
+        assert_eq!(
+            bytes.len(),
+            std::mem::size_of_val(dst),
+            "bulk decode length mismatch"
+        );
+        #[cfg(target_endian = "little")]
+        // SAFETY: as in `copy_to_le` — sealed POD scalars whose LE
+        // byte image is their in-memory representation; lengths match
+        // per the assert above.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                dst.as_mut_ptr().cast::<u8>(),
+                bytes.len(),
+            );
+        }
+        #[cfg(not(target_endian = "little"))]
+        for (d, c) in dst.iter_mut().zip(bytes.chunks_exact(Self::WIDTH)) {
+            *d = Self::read_le(c);
+        }
+    }
 
     /// STREAM Triad fused form `b + q·c` — one definition so every
     /// engine (serial, darray, threaded) computes identically.
@@ -419,6 +480,55 @@ mod tests {
     fn float_dtypes_only_for_stream() {
         assert!(Dtype::F32.is_float() && Dtype::F64.is_float());
         assert!(!Dtype::I64.is_float() && !Dtype::U64.is_float());
+    }
+
+    /// The bulk codec must agree byte-for-byte with the per-element
+    /// encoder for every sealed dtype.
+    fn bulk_matches_per_element<T: Element>(vals: &[T]) {
+        let mut per_elem = Vec::new();
+        for &v in vals {
+            v.write_le(&mut per_elem);
+        }
+        let mut bulk = Vec::new();
+        T::copy_to_le(vals, &mut bulk);
+        assert_eq!(bulk, per_elem);
+        let mut back = vec![T::ZERO; vals.len()];
+        T::copy_from_le(&bulk, &mut back);
+        assert_eq!(back, vals);
+    }
+
+    #[test]
+    fn bulk_codec_matches_per_element_all_dtypes() {
+        bulk_matches_per_element(&[0.0f64, -1.5, std::f64::consts::PI, f64::MAX, f64::MIN]);
+        bulk_matches_per_element(&[0.0f32, -1.5, std::f32::consts::E, f32::MIN_POSITIVE]);
+        bulk_matches_per_element(&[0i64, -42, i64::MAX, i64::MIN]);
+        bulk_matches_per_element(&[0u64, 42, u64::MAX]);
+        bulk_matches_per_element::<f64>(&[]);
+    }
+
+    /// Acceptance criterion: a 1M-element f64 slice goes through the
+    /// bulk path (one byte-cast memcpy on LE targets) and round-trips
+    /// exactly.
+    #[test]
+    fn bulk_codec_one_million_f64() {
+        let n = 1 << 20;
+        let vals: Vec<f64> = (0..n).map(|i| i as f64 * 0.5 - 1000.0).collect();
+        let mut buf = Vec::new();
+        f64::copy_to_le(&vals, &mut buf);
+        assert_eq!(buf.len(), n * 8);
+        // Spot-check the encoding really is LE per element.
+        assert_eq!(&buf[..8], &vals[0].to_le_bytes());
+        assert_eq!(&buf[8 * (n - 1)..], &vals[n - 1].to_le_bytes());
+        let mut back = vec![0.0f64; n];
+        f64::copy_from_le(&buf, &mut back);
+        assert_eq!(back, vals);
+    }
+
+    #[test]
+    #[should_panic(expected = "bulk decode length mismatch")]
+    fn bulk_decode_checks_length() {
+        let mut dst = [0.0f64; 2];
+        f64::copy_from_le(&[0u8; 8], &mut dst);
     }
 
     #[test]

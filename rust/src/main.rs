@@ -1,12 +1,13 @@
 //! `repro` — the leader binary.
 //!
 //! Subcommands:
-//! * `run`      — coordinated STREAM across worker processes (triples mode)
-//! * `worker`   — internal: one spawned worker process
-//! * `sweep`    — regenerate a figure (fig3 | fig4 | petascale)
-//! * `report`   — print a paper table (table1 | table2 | fig4)
-//! * `validate` — run the PJRT artifacts and check numerics vs closed forms
-//! * `info`     — platform / artifact summary
+//! * `run`         — coordinated STREAM across worker processes (triples mode)
+//! * `worker`      — internal: one spawned worker process
+//! * `bench-remap` — measure the coalesced remap hot path (bench_remap_v1)
+//! * `sweep`       — regenerate a figure (fig3 | fig4 | petascale)
+//! * `report`      — print a paper table (table1 | table2 | fig4)
+//! * `validate`    — run the PJRT artifacts and check numerics vs closed forms
+//! * `info`        — platform / artifact summary
 
 use distarray::backend::{BackendKind, BackendRegistry};
 use distarray::cli::Args;
@@ -21,18 +22,21 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("worker") => cmd_worker(),
+        Some("bench-remap") => cmd_bench_remap(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("report") => cmd_report(&args),
         Some("validate") => cmd_validate(&args),
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: repro <run|sweep|report|validate|info> [--flags]\n\
+                "usage: repro <run|bench-remap|sweep|report|validate|info> [--flags]\n\
                  \n  run      [--config run.json] --triples 1x4x1 --n 1048576 --nt 10\n\
                  \n           --map block|cyclic|blockcyclic:K --engine native|pjrt|pjrt-fused\n\
                  \n           --dtype f32|f64|i64|u64 (native engine; default f64)\n\
                  \n           --backend host|threaded|pjrt (native engine; default host)\n\
                  \n           --bench-json out.json (machine-readable per-op bandwidths)\n\
+                 \n  bench-remap --np 4 --n 1048576 --iters 10 --dtype f64\n\
+                 \n           [--bench-json out.json] (bench_remap_v1: bytes, messages, GB/s)\n\
                  \n  sweep    fig3|fig4|petascale [--measure] [--csv] [--backend host|threaded]\n\
                  \n  report   table1|table2|fig4\n\
                  \n  validate --artifacts artifacts\n\
@@ -251,6 +255,47 @@ fn cmd_run(args: &Args) -> i32 {
             1
         }
     }
+}
+
+/// `repro bench-remap` — measure the coalesced remap hot path with
+/// in-process SPMD PIDs and emit/print a `bench_remap_v1` document.
+fn cmd_bench_remap(args: &Args) -> i32 {
+    let np = args.flag_usize("np", 4);
+    let n = args.flag_usize("n", 1 << 20);
+    let iters = args.flag_usize("iters", 10);
+    let dtype = match axis_flag(
+        args,
+        "dtype",
+        "f32|f64|i64|u64",
+        distarray::element::Dtype::F64,
+        distarray::element::Dtype::parse,
+    ) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    if np == 0 || n == 0 || iters == 0 {
+        eprintln!("bench-remap: --np, --n and --iters must all be >= 1");
+        return 2;
+    }
+    let b = bench_json::run_remap(np, n, iters, dtype);
+    println!(
+        "bench-remap: np={np} n={n} dtype={dtype} iters={iters} \
+         msgs/remap={:.0} bytes={} payload={} {:.3} GB/s",
+        b.messages as f64 / iters as f64,
+        b.bytes_moved,
+        b.payload_bytes,
+        b.gb_per_sec()
+    );
+    if let Some(path) = args.flag("bench-json") {
+        match bench_json::write_remap_file(path, &b) {
+            Ok(()) => println!("bench json written to {path}"),
+            Err(e) => {
+                eprintln!("bench-json {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    0
 }
 
 /// `repro worker` — internal entry for spawned workers.

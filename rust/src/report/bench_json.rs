@@ -1,18 +1,31 @@
-//! `BENCH_stream.json` — the machine-readable perf trajectory.
+//! `BENCH_stream.json` / `BENCH_remap.json` — the machine-readable
+//! perf trajectory.
 //!
-//! `repro run --bench-json <path>` emits one JSON document per run
-//! with per-op bandwidths (bytes/s and GB/s), element throughput,
-//! and the full axis coordinates (dtype, backend, engine, Nt, Np) —
-//! so successive PRs can diff bandwidth numbers mechanically instead
-//! of scraping stdout.
+//! `repro run --bench-json <path>` emits one `bench_stream_v1`
+//! document per run with per-op bandwidths (bytes/s and GB/s),
+//! element throughput, and the full axis coordinates (dtype, backend,
+//! engine, Nt, Np); `repro bench-remap --bench-json <path>` emits a
+//! `bench_remap_v1` document (bytes moved, message counts, GB/s per
+//! remap) for the coalesced data-movement hot path — so successive
+//! PRs can diff bandwidth numbers mechanically instead of scraping
+//! stdout.
 
+use crate::comm::{ChannelHub, Transport};
 use crate::coordinator::RunConfig;
+use crate::darray::{DarrayT, RemapEngine};
+use crate::dmap::Dmap;
+use crate::element::{Dtype, Element};
 use crate::json::Json;
 use crate::stream::AggregateResult;
 use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Schema tag, bumped on any field change.
 pub const SCHEMA: &str = "bench_stream_v1";
+
+/// Schema tag of the remap benchmark document.
+pub const REMAP_SCHEMA: &str = "bench_remap_v1";
 
 /// The four op names, in the order of [`AggregateResult::bw`].
 pub const OP_NAMES: [&str; 4] = ["copy", "scale", "add", "triad"];
@@ -48,6 +61,129 @@ pub fn to_json(cfg: &RunConfig, agg: &AggregateResult) -> Json {
 /// Emit the document to `path` (newline-terminated).
 pub fn write_file(path: &str, cfg: &RunConfig, agg: &AggregateResult) -> std::io::Result<()> {
     std::fs::write(path, format!("{}\n", to_json(cfg, agg)))
+}
+
+/// One measured remap benchmark: iterated block→cyclic global
+/// assignment through a cached plan over the in-process transport —
+/// the worst-case (fully strided) data-movement pattern the per-peer
+/// coalescing exists for.
+#[derive(Debug, Clone)]
+pub struct RemapBench {
+    pub np: usize,
+    pub n_global: usize,
+    pub dtype: Dtype,
+    pub iters: usize,
+    /// Total messages sent (all PIDs, all timed iterations). With
+    /// coalescing this is `iters × Σ_pid distinct peers`, independent
+    /// of plan-step count.
+    pub messages: u64,
+    /// Total wire bytes sent (framing + payload).
+    pub bytes_moved: u64,
+    /// Element payload bytes only (crossing elements × width × iters).
+    pub payload_bytes: u64,
+    /// Wall time of the timed iterations (max across PIDs).
+    pub seconds: f64,
+}
+
+impl RemapBench {
+    pub fn gb_per_sec(&self) -> f64 {
+        if self.seconds > 0.0 {
+            self.bytes_moved as f64 / self.seconds / 1e9
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Build the `bench_remap_v1` document.
+pub fn remap_to_json(b: &RemapBench) -> Json {
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str(REMAP_SCHEMA.to_string()));
+    top.insert("np".to_string(), Json::Num(b.np as f64));
+    top.insert("n".to_string(), Json::Num(b.n_global as f64));
+    top.insert("dtype".to_string(), Json::Str(b.dtype.name().to_string()));
+    top.insert("iters".to_string(), Json::Num(b.iters as f64));
+    top.insert("messages".to_string(), Json::Num(b.messages as f64));
+    top.insert(
+        "messages_per_remap".to_string(),
+        Json::Num(if b.iters > 0 { b.messages as f64 / b.iters as f64 } else { 0.0 }),
+    );
+    top.insert("bytes_moved".to_string(), Json::Num(b.bytes_moved as f64));
+    top.insert("payload_bytes".to_string(), Json::Num(b.payload_bytes as f64));
+    top.insert("seconds".to_string(), Json::Num(b.seconds));
+    top.insert("gb_per_sec".to_string(), Json::Num(b.gb_per_sec()));
+    Json::Obj(top)
+}
+
+/// Emit the remap document to `path` (newline-terminated).
+pub fn write_remap_file(path: &str, b: &RemapBench) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", remap_to_json(b)))
+}
+
+/// Run the remap benchmark: `np` in-process SPMD PIDs, `iters` timed
+/// block→cyclic remaps of an `n_global`-element array at `dtype`
+/// (plus one untimed warm-up that builds the plan and the pooled wire
+/// buffers).
+pub fn run_remap(np: usize, n_global: usize, iters: usize, dtype: Dtype) -> RemapBench {
+    match dtype {
+        Dtype::F32 => run_remap_t::<f32>(np, n_global, iters),
+        Dtype::F64 => run_remap_t::<f64>(np, n_global, iters),
+        Dtype::I64 => run_remap_t::<i64>(np, n_global, iters),
+        Dtype::U64 => run_remap_t::<u64>(np, n_global, iters),
+    }
+}
+
+fn run_remap_t<T: Element>(np: usize, n_global: usize, iters: usize) -> RemapBench {
+    assert!(np >= 1 && n_global >= 1);
+    let engine = Arc::new(RemapEngine::new());
+    let world = ChannelHub::world(np);
+    let mut hs = Vec::new();
+    for t in world {
+        let engine = engine.clone();
+        hs.push(std::thread::spawn(move || {
+            let pid = t.pid();
+            let src = DarrayT::<T>::from_global_fn(Dmap::block_1d(np), &[n_global], pid, |g| {
+                T::from_f64((g % 1024) as f64)
+            });
+            let mut dst = DarrayT::<T>::zeros(Dmap::cyclic_1d(np), &[n_global], pid);
+            // Warm-up: plans once, populates the buffer pool.
+            dst.assign_from_engine(&src, &t, 0, &engine).unwrap();
+            t.stats().reset();
+            let start = Instant::now();
+            for epoch in 1..=iters as u64 {
+                dst.assign_from_engine(&src, &t, epoch, &engine).unwrap();
+            }
+            let secs = start.elapsed().as_secs_f64();
+            let (msgs, bytes, _, _) = t.stats().snapshot();
+            (secs, msgs, bytes)
+        }));
+    }
+    let mut seconds = 0f64;
+    let mut messages = 0u64;
+    let mut bytes_moved = 0u64;
+    for h in hs {
+        let (s, m, b) = h.join().unwrap();
+        seconds = seconds.max(s);
+        messages += m;
+        bytes_moved += b;
+    }
+    let plan = engine.plan(&Dmap::block_1d(np), &Dmap::cyclic_1d(np), &[n_global]);
+    let crossing: usize = plan
+        .transfers()
+        .iter()
+        .filter(|(s, d, _)| s != d)
+        .map(|(_, _, r)| r.len())
+        .sum();
+    RemapBench {
+        np,
+        n_global,
+        dtype: T::DTYPE,
+        iters,
+        messages,
+        bytes_moved,
+        payload_bytes: (crossing * T::WIDTH * iters) as u64,
+        seconds,
+    }
 }
 
 #[cfg(test)]
@@ -113,6 +249,37 @@ mod tests {
         let copy = doc.get("ops").unwrap().get("copy").unwrap();
         let eps = copy.get("elements_per_sec").unwrap().as_f64().unwrap();
         assert!((eps - 5e8).abs() < 1e-3);
+    }
+
+    #[test]
+    fn remap_bench_runs_and_documents() {
+        // Small but strided: block→cyclic on np=3 — every PID talks to
+        // both peers, so sends per timed remap = 3 × 2 = 6.
+        let b = run_remap(3, 96, 2, Dtype::F32);
+        assert_eq!(b.messages, 2 * 6, "one send per peer per remap");
+        // 2/3 of elements cross PIDs, 4 bytes each, 2 iterations.
+        assert_eq!(b.payload_bytes, 64 * 4 * 2);
+        assert!(b.bytes_moved >= b.payload_bytes, "wire bytes include framing");
+        assert!(b.seconds >= 0.0 && b.gb_per_sec() >= 0.0);
+        let doc = remap_to_json(&b);
+        let parsed = Json::parse(&doc.to_string()).expect("emitted json parses");
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some(REMAP_SCHEMA));
+        assert_eq!(parsed.get("dtype").unwrap().as_str(), Some("f32"));
+        assert_eq!(parsed.get("messages_per_remap").unwrap().as_usize(), Some(6));
+        assert!(parsed.get("gb_per_sec").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn write_remap_file_emits_parseable_json() {
+        let b = run_remap(2, 32, 1, Dtype::F64);
+        let path =
+            std::env::temp_dir().join(format!("bench_remap_test_{}.json", std::process::id()));
+        let path_s = path.to_str().unwrap();
+        write_remap_file(path_s, &b).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        assert!(Json::parse(text.trim()).is_ok());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Properties of the coalesced per-peer remap path.
+//!
+//! The per-peer rewrite must be invisible except in the message
+//! counts: for random map pairs × every sealed dtype × host-class and
+//! threaded backends, the remapped values are bit-identical to the
+//! per-range reference (the destination's `from_global_fn` ground
+//! truth), while each PID sends exactly one message per **distinct
+//! destination peer** — not one per plan step — and receives one per
+//! distinct source peer. The same holds over the file transport
+//! (multi-part spool writes + polled arrival-order receives).
+
+use distarray::backend::{Backend, ChunkedThreadedBackend, HostBackend};
+use distarray::comm::{ChannelHub, FileTransport, Transport};
+use distarray::darray::{DarrayT, RemapEngine};
+use distarray::dmap::{Dmap, Pid};
+use distarray::element::Element;
+use distarray::prop::{forall, Rng};
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::thread;
+
+/// Deterministic test values, exactly representable in every sealed
+/// dtype (small non-negative integers) so equality is bitwise.
+fn value<T: Element>(g: usize) -> T {
+    T::from_f64(((g * 37 + 11) % 256) as f64)
+}
+
+fn random_map(rng: &mut Rng, np: usize) -> Dmap {
+    match rng.below(3) {
+        0 => Dmap::block_1d(np),
+        1 => Dmap::cyclic_1d(np),
+        _ => Dmap::block_cyclic_1d(np, rng.range(2, 6)),
+    }
+}
+
+/// Distinct crossing peers of `pid` per the raw transfer list — the
+/// reference the coalesced counts must match.
+fn distinct_peers(
+    transfers: &[(Pid, Pid, distarray::dmap::GlobalRange)],
+    pid: Pid,
+) -> (HashSet<Pid>, HashSet<Pid>) {
+    let sends = transfers
+        .iter()
+        .filter(|(s, d, _)| s != d && *s == pid)
+        .map(|&(_, d, _)| d)
+        .collect();
+    let recvs = transfers
+        .iter()
+        .filter(|(s, d, _)| s != d && *d == pid)
+        .map(|&(s, _, _)| s)
+        .collect();
+    (sends, recvs)
+}
+
+/// Run one SPMD remap and assert value correctness + per-peer message
+/// counts; `backend = None` exercises the direct engine path.
+fn check_remap_t<T: Element>(
+    np: usize,
+    n: usize,
+    src_map: &Dmap,
+    dst_map: &Dmap,
+    backend: Option<Arc<dyn Backend>>,
+) {
+    let engine = Arc::new(RemapEngine::new());
+    let world = ChannelHub::world(np);
+    let mut hs = Vec::new();
+    for t in world {
+        let engine = engine.clone();
+        let (sm, dm) = (src_map.clone(), dst_map.clone());
+        let backend = backend.clone();
+        hs.push(thread::spawn(move || {
+            let pid = t.pid();
+            let src = DarrayT::<T>::from_global_fn(sm, &[n], pid, value::<T>);
+            let mut dst = DarrayT::<T>::zeros(dm.clone(), &[n], pid);
+            match &backend {
+                Some(be) => dst
+                    .assign_from_engine_on(&src, &t, 1, &engine, be.as_ref())
+                    .unwrap(),
+                None => dst.assign_from_engine(&src, &t, 1, &engine).unwrap(),
+            }
+            // Bit-identical to the per-range reference.
+            let expect = DarrayT::<T>::from_global_fn(dm, &[n], pid, value::<T>);
+            assert_eq!(dst.loc(), expect.loc(), "pid {pid} values");
+            // Message counts: one per distinct peer, per direction.
+            let plan = engine.plan(src.map(), dst.map(), &[n]);
+            let (send_peers, recv_peers) = distinct_peers(plan.transfers(), pid);
+            assert_eq!(plan.peer_sends(pid).len(), send_peers.len(), "pid {pid}");
+            assert_eq!(plan.peer_recvs(pid).len(), recv_peers.len(), "pid {pid}");
+            assert_eq!(
+                t.stats().msgs_sent() as usize,
+                send_peers.len(),
+                "pid {pid}: one message per destination peer"
+            );
+            assert_eq!(
+                t.stats().msgs_recv() as usize,
+                recv_peers.len(),
+                "pid {pid}: one message per source peer"
+            );
+        }));
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+    assert_eq!(engine.plans_built(), 1, "exactly one plan per key");
+}
+
+#[test]
+fn coalesced_remap_matches_reference_all_dtypes_and_backends() {
+    // Shared across cases: a deliberately tiny tile (64 B) so even
+    // small payloads exercise the pool-parallel pack/unpack.
+    let chunked: Arc<dyn Backend> = Arc::new(ChunkedThreadedBackend::with_tile(3, 64));
+    let host: Arc<dyn Backend> = Arc::new(HostBackend::new());
+    forall(10, 0xC0A1E5CE, |rng| {
+        let np = rng.range(2, 4);
+        let n = rng.range(8, 160);
+        let src = random_map(rng, np);
+        let dst = random_map(rng, np);
+        check_remap_t::<f64>(np, n, &src, &dst, None);
+        check_remap_t::<f32>(np, n, &src, &dst, None);
+        check_remap_t::<i64>(np, n, &src, &dst, None);
+        check_remap_t::<u64>(np, n, &src, &dst, None);
+        check_remap_t::<f64>(np, n, &src, &dst, Some(host.clone()));
+        check_remap_t::<f64>(np, n, &src, &dst, Some(chunked.clone()));
+        check_remap_t::<f32>(np, n, &src, &dst, Some(chunked.clone()));
+    });
+}
+
+/// The acceptance criterion verbatim: block→cyclic on np=4 — each PID
+/// sends exactly one message per destination peer (3 of them), far
+/// fewer than the plan-step count the old path used.
+#[test]
+fn block_to_cyclic_np4_one_message_per_destination_peer() {
+    let np = 4;
+    let n = 256;
+    let engine = Arc::new(RemapEngine::new());
+    let world = ChannelHub::world(np);
+    let mut hs = Vec::new();
+    for t in world {
+        let engine = engine.clone();
+        hs.push(thread::spawn(move || {
+            let pid = t.pid();
+            let src = DarrayT::<f64>::from_global_fn(Dmap::block_1d(np), &[n], pid, value::<f64>);
+            let mut dst = DarrayT::<f64>::zeros(Dmap::cyclic_1d(np), &[n], pid);
+            dst.assign_from_engine(&src, &t, 7, &engine).unwrap();
+            assert_eq!(t.stats().msgs_sent(), 3, "pid {pid}: one send per peer");
+            assert_eq!(t.stats().msgs_recv(), 3, "pid {pid}: one recv per peer");
+            let plan = engine.plan(src.map(), dst.map(), &[n]);
+            let steps = plan
+                .transfers()
+                .iter()
+                .filter(|(s, d, _)| s != d && *s == pid)
+                .count();
+            assert!(steps > 3, "coalescing must merge {steps} plan steps into 3 messages");
+        }));
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+}
+
+/// The same coalesced path over the file transport: multi-part spool
+/// writes, polled try_recv sweeps, exponential backoff.
+#[test]
+fn coalesced_remap_over_file_transport() {
+    let np = 3;
+    let n = 48;
+    let dir = std::env::temp_dir().join(format!("distarray_coalesce_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut hs = Vec::new();
+    for pid in 0..np {
+        let dir = dir.clone();
+        hs.push(thread::spawn(move || {
+            let t = FileTransport::new(&dir, pid, np)
+                .unwrap()
+                .with_poll(std::time::Duration::from_micros(50));
+            let src = DarrayT::<i64>::from_global_fn(Dmap::block_1d(np), &[n], pid, value::<i64>);
+            let mut dst = DarrayT::<i64>::zeros(Dmap::cyclic_1d(np), &[n], pid);
+            dst.assign_from(&src, &t, 3).unwrap();
+            let expect =
+                DarrayT::<i64>::from_global_fn(Dmap::cyclic_1d(np), &[n], pid, value::<i64>);
+            assert_eq!(dst.loc(), expect.loc(), "pid {pid}");
+            assert_eq!(t.stats().msgs_sent(), (np - 1) as u64, "pid {pid}");
+        }));
+    }
+    for h in hs {
+        h.join().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
