@@ -114,6 +114,8 @@ fn coordinated(np: usize, n: usize, nt: usize, map: MapKind) -> distarray::strea
         dtype: distarray::element::Dtype::F64,
         backend: distarray::backend::BackendKind::Host,
         threads: 1,
+        coll: distarray::collective::CollKind::Star,
+        nppn: 0,
         artifacts: "artifacts".into(),
     };
     let mut world = ChannelHub::world(np);

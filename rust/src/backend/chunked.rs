@@ -301,17 +301,18 @@ impl ChunkedThreadedBackend {
             dst.copy_from_slice(src);
             return Ok(());
         }
+        let tag = remap_tag(epoch);
         for &(s_off, d_off, len) in plan.local_copies(pid) {
             dst[d_off..d_off + len].copy_from_slice(&src[s_off..s_off + len]);
         }
         for g in plan.peer_sends(pid) {
             if self.parallel_payload::<T>(g) {
-                self.send_group_par::<T>(g, src, t, epoch)?;
+                self.send_group_par::<T>(g, src, t, tag)?;
             } else {
-                send_group_typed::<T>(g, src, t, epoch)?;
+                send_group_typed::<T>(g, src, t, tag)?;
             }
         }
-        recv_groups(plan, pid, t, epoch, |g, payload| {
+        recv_groups(plan, pid, t, tag, |g, payload| {
             if self.parallel_payload::<T>(g) {
                 self.unpack_group_par::<T>(g, &payload, dst)
             } else {
@@ -330,7 +331,7 @@ impl ChunkedThreadedBackend {
         g: &PeerGroup,
         src: &[T],
         t: &dyn Transport,
-        epoch: u64,
+        tag: crate::comm::Tag,
     ) -> crate::comm::Result<()> {
         assert!(
             g.local_extent <= src.len(),
@@ -362,7 +363,7 @@ impl ChunkedThreadedBackend {
         payload.restore(buf);
         let pay_addr = payload.as_mut_ptr() as usize + prefix;
         self.run_payload_copy::<T>(g, src.as_ptr() as usize, pay_addr, CopyDir::Pack);
-        t.send_parts(g.peer, remap_tag(epoch), &[header.as_slice(), payload.as_slice()])
+        t.send_parts(g.peer, tag, &[header.as_slice(), payload.as_slice()])
     }
 
     /// Scatter one received coalesced message into `dst` with the

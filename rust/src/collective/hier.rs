@@ -1,0 +1,173 @@
+//! Hierarchical (two-level) collectives — the topology-aware
+//! composition that makes horizontal scaling linear.
+//!
+//! Every operation decomposes along the [`Topology`](super::Topology)
+//! node boundary:
+//!
+//! * intra-node phases run the **star** algorithm inside each node
+//!   group (node-local hops are cheap — shared memory or one switch);
+//! * the inter-node phase runs the **binomial tree** across one
+//!   *leader* per node (the node group's first PID), so the expensive
+//!   cross-node links carry O(log Nnode) depth and Nnode−1 messages
+//!   instead of O(Np) at a single rank.
+//!
+//! Gather therefore costs `(P − L)` intra-node messages plus `L − 1`
+//! inter-node messages (L = node count) — total P−1, same as the flat
+//! tree, but with the cross-node share shrunk from P−1 to L−1.
+//! Tag levels keep the three phases (intra-pre = 0, inter = 1,
+//! intra-post = 2) in disjoint tag streams.
+
+use super::{bundle, star, tree, TagSpace, PH_BCAST, PH_DOWN, PH_GATHER, PH_UP};
+use super::Topology;
+use crate::comm::{Result, Transport};
+use crate::dmap::Pid;
+use std::time::Duration;
+
+/// Tag level of the intra-node phase that precedes the inter phase.
+const LV_INTRA_PRE: u64 = 0;
+/// Tag level of the inter-node (leaders-only) phase.
+const LV_INTER: u64 = 1;
+/// Tag level of the intra-node phase that follows the inter phase.
+const LV_INTRA_POST: u64 = 2;
+
+/// One PID's view of the two-level decomposition of `group`.
+struct View {
+    /// Per-node participant lists (root's node first, root leading).
+    nodes: Vec<Vec<Pid>>,
+    /// One leader (first member) per node, in node order.
+    leaders: Vec<Pid>,
+    /// Index of my node in `nodes`.
+    my_node: usize,
+    /// My index within my node's list (0 ⇔ I lead it).
+    my_slot: usize,
+}
+
+impl View {
+    fn build(topo: &Topology, group: &[Pid], me_pid: Pid) -> View {
+        let nodes = topo.restrict(group);
+        let leaders: Vec<Pid> = nodes.iter().map(|g| g[0]).collect();
+        let (my_node, my_slot) = nodes
+            .iter()
+            .enumerate()
+            .find_map(|(k, g)| g.iter().position(|&p| p == me_pid).map(|s| (k, s)))
+            .expect("caller verified membership");
+        View { nodes, leaders, my_node, my_slot }
+    }
+
+    fn is_leader(&self) -> bool {
+        self.my_slot == 0
+    }
+
+    fn my_group(&self) -> &[Pid] {
+        &self.nodes[self.my_node]
+    }
+}
+
+/// Two-level broadcast: tree across leaders, star fan-out inside each
+/// node.
+pub(crate) fn bcast(
+    t: &dyn Transport,
+    topo: &Topology,
+    group: &[Pid],
+    me_pid: Pid,
+    space: &TagSpace,
+    payload: Vec<u8>,
+) -> Result<Vec<u8>> {
+    let v = View::build(topo, group, me_pid);
+    let data = if v.is_leader() {
+        tree::bcast(t, &v.leaders, v.my_node, space, LV_INTER, payload)?
+    } else {
+        payload
+    };
+    // Intra-node fan-out. Disjoint node memberships keep the shared
+    // (level, phase, round) tag unambiguous: `(from, tag)` differs per
+    // node.
+    star::bcast(
+        t,
+        v.my_group(),
+        v.my_slot,
+        space.at(LV_INTRA_POST, PH_BCAST, 0),
+        data,
+    )
+}
+
+/// Two-level gather to `group[0]`: star into each node leader, then
+/// tree of per-node bundles across leaders. Returns parts in
+/// group-rank order at the root.
+pub(crate) fn gather(
+    t: &dyn Transport,
+    topo: &Topology,
+    group: &[Pid],
+    me_pid: Pid,
+    space: &TagSpace,
+    part: Vec<u8>,
+) -> Result<Option<Vec<Vec<u8>>>> {
+    let v = View::build(topo, group, me_pid);
+    let node_parts = star::gather(
+        t,
+        v.my_group(),
+        v.my_slot,
+        space.at(LV_INTRA_PRE, PH_GATHER, 0),
+        part,
+    )?;
+    let Some(node_parts) = node_parts else {
+        return Ok(None); // non-leader: done after the intra hop
+    };
+    // Leader: re-key the node's parts by *group* rank and bundle them
+    // for the inter phase (one O(|group|) index build, not a scan per
+    // member).
+    let rank_of: std::collections::HashMap<Pid, u64> = group
+        .iter()
+        .enumerate()
+        .map(|(i, &p)| (p, i as u64))
+        .collect();
+    let ranks: Vec<u64> = v.my_group().iter().map(|p| rank_of[p]).collect();
+    let entries: Vec<(u64, Vec<u8>)> = ranks.into_iter().zip(node_parts).collect();
+    let node_bundle = bundle::write(&entries);
+    let Some(leader_bundles) = tree::gather(
+        t,
+        &v.leaders,
+        v.my_node,
+        space,
+        LV_INTER,
+        node_bundle,
+    )?
+    else {
+        return Ok(None); // non-root leader
+    };
+    // Root: splice every node bundle into one dense rank-ordered list.
+    let mut acc: Vec<(u64, Vec<u8>)> = Vec::with_capacity(group.len());
+    for b in &leader_bundles {
+        bundle::read(b, &mut acc)?;
+    }
+    bundle::into_rank_order(acc, group.len()).map(Some)
+}
+
+/// Two-level barrier: members report to their leader, leaders run a
+/// tree barrier, leaders release their members.
+pub(crate) fn barrier(
+    t: &dyn Transport,
+    topo: &Topology,
+    group: &[Pid],
+    me_pid: Pid,
+    space: &TagSpace,
+    timeout: Duration,
+) -> Result<()> {
+    let v = View::build(topo, group, me_pid);
+    let up = space.at(LV_INTRA_PRE, PH_UP, 0);
+    let down = space.at(LV_INTRA_POST, PH_DOWN, 0);
+    if v.is_leader() {
+        for &m in &v.my_group()[1..] {
+            t.recv_timeout(m, up, timeout)?;
+        }
+        tree::barrier(t, &v.leaders, v.my_node, space, LV_INTER, timeout)?;
+        for &m in &v.my_group()[1..] {
+            t.send(m, down, &[])?;
+        }
+    } else {
+        let leader = v.my_group()[0];
+        t.send(leader, up, &[])?;
+        t.recv_timeout(leader, down, timeout)?;
+    }
+    Ok(())
+}

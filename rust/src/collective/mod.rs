@@ -1,0 +1,780 @@
+//! Topology-aware collective communication.
+//!
+//! The paper's headline claim is *linear horizontal scaling* —
+//! hundreds of nodes sustaining >1 PB/s — and the repo's original
+//! collectives were exactly the thing that breaks it: every reduce,
+//! gather, broadcast, and barrier funneled through PID 0, one message
+//! at a time (O(P) serialized hops at one rank). This subsystem makes
+//! the *algorithm* a pluggable axis, the same way [`crate::backend`]
+//! made execution pluggable:
+//!
+//! | kind   | broadcast            | gather/reduce        | barrier              |
+//! |--------|----------------------|----------------------|----------------------|
+//! | `star` | root → each (legacy) | each → root (legacy) | report/release       |
+//! | `tree` | binomial, log depth  | binomial, P−1 msgs   | binomial up/down     |
+//! | `ring` | chunked pipeline     | chain, pipelined     | dissemination        |
+//! | `hier` | star-in-node + tree-across-leaders (two-level)              |||
+//! | `auto` | picks per topology: star at tiny P, hier when nodes > 1, else tree |||
+//!
+//! All operations run over the existing [`Transport`] trait, are
+//! dtype-generic over [`Element`], and tag their messages in the
+//! [`NS_COLL`](crate::comm::tags::NS_COLL) namespace (legacy call
+//! sites keep their historical namespaces — see [`TagSpace`]).
+//!
+//! **Deterministic reductions.** Reduction contributions travel
+//! *unreduced* and are folded at the destination in PID order, so
+//! every algorithm — star, tree, ring, hierarchical — produces
+//! **bit-identical** results, including non-associative f32/f64 sums.
+//! The cost is O(P·n) payload at the root instead of O(n) per link,
+//! which is the right trade for the scalar/control-plane reductions
+//! these calls serve (`sum(A)`, result aggregation); bulk data moves
+//! through the remap engine, not through reductions.
+//!
+//! The subsystem is selected end-to-end by `repro run --coll
+//! {star,tree,ring,hier,auto}` (threaded through
+//! [`RunConfig`](crate::coordinator::RunConfig) like the backend
+//! axis) and measured by `repro bench-collective`
+//! (`bench_collective_v1` documents: latency, bytes, and message
+//! counts per algorithm vs P).
+
+mod hier;
+mod ring;
+mod star;
+mod topology;
+mod tree;
+
+pub use topology::Topology;
+
+use crate::comm::{tags, CommError, Result, Tag, Transport};
+use crate::dmap::Pid;
+use crate::element::Element;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Phase ids for the packed step field (bits 16..20): keeps the
+/// gather and broadcast halves of one collective call, and the up and
+/// down halves of a barrier, in disjoint tag streams.
+pub(crate) const PH_GATHER: u64 = 0;
+pub(crate) const PH_BCAST: u64 = 1;
+pub(crate) const PH_UP: u64 = 2;
+pub(crate) const PH_DOWN: u64 = 3;
+pub(crate) const PH_DISSEM: u64 = 4;
+
+/// `ceil(log2(p))` — the round count of every logarithmic schedule.
+pub(crate) fn log2_rounds(p: usize) -> u32 {
+    if p <= 1 {
+        0
+    } else {
+        usize::BITS - (p - 1).leading_zeros()
+    }
+}
+
+/// Which collective algorithm family executes an operation — the
+/// `--coll` axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollKind {
+    /// Leader-centric reference (the pre-subsystem wire behavior).
+    Star,
+    /// Binomial tree: log-depth, P−1 messages.
+    Tree,
+    /// Pipeline chain / dissemination: bandwidth-oriented.
+    Ring,
+    /// Two-level topology-aware composition (star in-node, tree
+    /// across node leaders).
+    Hier,
+    /// Resolve per topology at construction time.
+    Auto,
+}
+
+impl CollKind {
+    pub fn parse(s: &str) -> Option<CollKind> {
+        match s {
+            "star" => Some(CollKind::Star),
+            "tree" => Some(CollKind::Tree),
+            "ring" => Some(CollKind::Ring),
+            "hier" => Some(CollKind::Hier),
+            "auto" => Some(CollKind::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollKind::Star => "star",
+            CollKind::Tree => "tree",
+            CollKind::Ring => "ring",
+            CollKind::Hier => "hier",
+            CollKind::Auto => "auto",
+        }
+    }
+
+    /// The CLI wording of the valid choices.
+    pub fn choices() -> &'static str {
+        "star|tree|ring|hier|auto"
+    }
+
+    /// Stable wire code (RunConfig encoding).
+    pub fn code(&self) -> u8 {
+        match self {
+            CollKind::Star => 0,
+            CollKind::Tree => 1,
+            CollKind::Ring => 2,
+            CollKind::Hier => 3,
+            CollKind::Auto => 4,
+        }
+    }
+
+    pub fn from_code(c: u8) -> Option<CollKind> {
+        match c {
+            0 => Some(CollKind::Star),
+            1 => Some(CollKind::Tree),
+            2 => Some(CollKind::Ring),
+            3 => Some(CollKind::Hier),
+            4 => Some(CollKind::Auto),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for CollKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The tag coordinates of one collective call.
+///
+/// Multi-round algorithms pack their messages as
+/// `(ns, epoch, level|phase|round)` via [`tags::pack`]; the **star**
+/// algorithm always uses a single tag — by default
+/// `pack(ns, epoch, 0)`, or an explicit legacy constant
+/// ([`TagSpace::with_star_tag`]) so rewired call sites reproduce
+/// their pre-subsystem wire tags bit-for-bit under `--coll star`
+/// (the coordinator's `CONFIG`/`RESULT` control tags).
+#[derive(Debug, Clone, Copy)]
+pub struct TagSpace {
+    ns: u8,
+    epoch: u64,
+    star_tag: Tag,
+}
+
+impl TagSpace {
+    /// A packed tag space in namespace `ns` (star uses step 0 —
+    /// identical to the legacy packed tags of reduce/agg/barrier).
+    pub fn packed(ns: u8, epoch: u64) -> TagSpace {
+        TagSpace { ns, epoch, star_tag: tags::pack(ns, epoch, 0) }
+    }
+
+    /// A packed tag space whose star-algorithm tag is the legacy
+    /// constant `star` (non-star algorithms still pack in `ns`).
+    pub fn with_star_tag(ns: u8, epoch: u64, star: Tag) -> TagSpace {
+        TagSpace { ns, epoch, star_tag: star }
+    }
+
+    /// The single tag the star algorithm uses.
+    pub(crate) fn star(&self) -> Tag {
+        self.star_tag
+    }
+
+    /// The packed tag of `(level, phase, round)`. Levels separate the
+    /// hierarchical composition's phases, phases separate the halves
+    /// of one operation, rounds separate a schedule's steps. A
+    /// collective call runs one algorithm world-wide (SPMD), so the
+    /// star tag and packed steps can never meet on a wire.
+    pub(crate) fn at(&self, level: u64, phase: u64, round: u64) -> Tag {
+        debug_assert!(level < 16 && phase < 16 && round < (1 << 16));
+        tags::pack(self.ns, self.epoch, (level << 20) | (phase << 16) | round)
+    }
+}
+
+/// A binary reduction operator, dtype-generic over the sealed
+/// [`Element`] set (no round-trip through f64 — `DarrayT<i64>` sums
+/// wrap exactly, `DarrayT<f32>` reduces in f32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Min,
+    Max,
+}
+
+impl ReduceOp {
+    /// The operator's identity element for `T`.
+    #[inline]
+    pub fn identity<T: Element>(&self) -> T {
+        match self {
+            ReduceOp::Sum => T::ZERO,
+            ReduceOp::Min => T::MAX_BOUND,
+            ReduceOp::Max => T::MIN_BOUND,
+        }
+    }
+
+    /// Combine two values (wrapping sums for integers, IEEE min/max
+    /// for floats — matching the legacy f64 behavior at `T = f64`).
+    #[inline]
+    pub fn combine<T: Element>(&self, a: T, b: T) -> T {
+        match self {
+            ReduceOp::Sum => T::add(a, b),
+            ReduceOp::Min => T::elem_min(a, b),
+            ReduceOp::Max => T::elem_max(a, b),
+        }
+    }
+}
+
+/// Framed rank-keyed byte bundles — the wire currency of the tree,
+/// ring, and hierarchical gathers: `[n] n × ([rank][len][bytes])`.
+pub(crate) mod bundle {
+    use crate::comm::{CommError, Result, WireReader, WireWriter};
+
+    pub(crate) fn write<B: AsRef<[u8]>>(entries: &[(u64, B)]) -> Vec<u8> {
+        let total: usize = entries.iter().map(|(_, b)| 24 + b.as_ref().len()).sum();
+        let mut w = WireWriter::with_capacity(8 + total);
+        w.put_u64(entries.len() as u64);
+        for (rank, bytes) in entries {
+            w.put_u64(*rank);
+            w.put_bytes(bytes.as_ref());
+        }
+        w.finish()
+    }
+
+    pub(crate) fn read(payload: &[u8], into: &mut Vec<(u64, Vec<u8>)>) -> Result<()> {
+        let mut rd = WireReader::new(payload);
+        let n = rd.get_usize()?;
+        into.reserve(n);
+        for _ in 0..n {
+            let rank = rd.get_u64()?;
+            into.push((rank, rd.get_bytes()?.to_vec()));
+        }
+        if rd.remaining() != 0 {
+            return Err(CommError::Malformed(format!(
+                "bundle carries {} trailing bytes",
+                rd.remaining()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Sort accumulated entries by rank and check they cover
+    /// `0..p` exactly once each.
+    pub(crate) fn into_rank_order(
+        mut acc: Vec<(u64, Vec<u8>)>,
+        p: usize,
+    ) -> Result<Vec<Vec<u8>>> {
+        acc.sort_by_key(|(r, _)| *r);
+        if acc.len() != p || acc.iter().enumerate().any(|(i, (r, _))| *r != i as u64) {
+            return Err(CommError::Malformed(format!(
+                "gather covered {} of {p} ranks",
+                acc.len()
+            )));
+        }
+        Ok(acc.into_iter().map(|(_, b)| b).collect())
+    }
+}
+
+/// Default pipeline chunk for the ring broadcast.
+pub const DEFAULT_CHUNK_BYTES: usize = 64 << 10;
+
+/// A configured collective context: a resolved algorithm family plus
+/// the launch [`Topology`]. Cheap to construct; hold one per run.
+#[derive(Debug, Clone)]
+pub struct Collective {
+    kind: CollKind,
+    topo: Topology,
+    chunk_bytes: usize,
+}
+
+impl Collective {
+    /// Build a context, resolving [`CollKind::Auto`] against the
+    /// topology: tiny worlds stay star (lowest constant), multi-node
+    /// topologies go hierarchical, flat big worlds go tree.
+    pub fn new(kind: CollKind, topo: Topology) -> Collective {
+        let kind = match kind {
+            CollKind::Auto => {
+                let np = topo.np();
+                if np <= 4 {
+                    CollKind::Star
+                } else if topo.node_count() > 1 && np > topo.node_count() {
+                    CollKind::Hier
+                } else {
+                    CollKind::Tree
+                }
+            }
+            k => k,
+        };
+        Collective { kind, topo, chunk_bytes: DEFAULT_CHUNK_BYTES }
+    }
+
+    /// The star reference over a flat world — the control-plane
+    /// bootstrap context (config broadcast) and the legacy default.
+    pub fn star(np: usize) -> Collective {
+        Collective::new(CollKind::Star, Topology::flat(np))
+    }
+
+    /// Override the ring pipeline chunk size (tests force multi-chunk
+    /// pipelines with tiny payloads).
+    pub fn with_chunk_bytes(mut self, chunk_bytes: usize) -> Collective {
+        self.chunk_bytes = chunk_bytes.max(1);
+        self
+    }
+
+    /// The resolved algorithm (never `Auto`).
+    pub fn kind(&self) -> CollKind {
+        self.kind
+    }
+
+    pub fn topology(&self) -> &Topology {
+        &self.topo
+    }
+
+    fn member_index(group: &[Pid], pid: Pid) -> Result<usize> {
+        group.iter().position(|&p| p == pid).ok_or_else(|| {
+            CommError::Malformed(format!("pid {pid} is not a member of the collective group"))
+        })
+    }
+
+    fn world(t: &dyn Transport) -> Vec<Pid> {
+        (0..t.np()).collect()
+    }
+
+    /// Broadcast `payload` from PID `world[0]` to the whole world;
+    /// every PID returns the payload.
+    pub fn bcast(&self, t: &dyn Transport, space: TagSpace, payload: Vec<u8>) -> Result<Vec<u8>> {
+        self.bcast_group(t, space, &Self::world(t), payload)
+    }
+
+    /// Broadcast within an explicit participant `group` (root =
+    /// `group[0]`; only the root's `payload` is read).
+    pub fn bcast_group(
+        &self,
+        t: &dyn Transport,
+        space: TagSpace,
+        group: &[Pid],
+        payload: Vec<u8>,
+    ) -> Result<Vec<u8>> {
+        if group.len() <= 1 {
+            return Ok(payload);
+        }
+        let me = Self::member_index(group, t.pid())?;
+        match self.kind {
+            CollKind::Star => star::bcast(t, group, me, space.star(), payload),
+            CollKind::Tree => tree::bcast(t, group, me, &space, 0, payload),
+            CollKind::Ring => ring::bcast(t, group, me, &space, 0, self.chunk_bytes, payload),
+            CollKind::Hier => hier::bcast(t, &self.topo, group, t.pid(), &space, payload),
+            CollKind::Auto => unreachable!("resolved at construction"),
+        }
+    }
+
+    /// Gather every PID's `part` to PID 0: `Some(parts)` in PID order
+    /// at the root, `None` elsewhere.
+    pub fn gather(
+        &self,
+        t: &dyn Transport,
+        space: TagSpace,
+        part: Vec<u8>,
+    ) -> Result<Option<Vec<Vec<u8>>>> {
+        self.gather_group(t, space, &Self::world(t), part)
+    }
+
+    /// Gather within an explicit participant `group` (root =
+    /// `group[0]`; parts returned in group-rank order).
+    pub fn gather_group(
+        &self,
+        t: &dyn Transport,
+        space: TagSpace,
+        group: &[Pid],
+        part: Vec<u8>,
+    ) -> Result<Option<Vec<Vec<u8>>>> {
+        if group.len() <= 1 {
+            return Ok(Some(vec![part]));
+        }
+        let me = Self::member_index(group, t.pid())?;
+        match self.kind {
+            CollKind::Star => star::gather(t, group, me, space.star(), part),
+            CollKind::Tree => tree::gather(t, group, me, &space, 0, part),
+            CollKind::Ring => ring::gather(t, group, me, &space, 0, part),
+            CollKind::Hier => hier::gather(t, &self.topo, group, t.pid(), &space, part),
+            CollKind::Auto => unreachable!("resolved at construction"),
+        }
+    }
+
+    /// Allgather: every PID returns every PID's `part`, in rank
+    /// order. Composition: gather to the root, broadcast the bundle.
+    pub fn allgather(
+        &self,
+        t: &dyn Transport,
+        space: TagSpace,
+        part: Vec<u8>,
+    ) -> Result<Vec<Vec<u8>>> {
+        self.allgather_group(t, space, &Self::world(t), part)
+    }
+
+    pub fn allgather_group(
+        &self,
+        t: &dyn Transport,
+        space: TagSpace,
+        group: &[Pid],
+        part: Vec<u8>,
+    ) -> Result<Vec<Vec<u8>>> {
+        if group.len() <= 1 {
+            return Ok(vec![part]);
+        }
+        let gathered = self.gather_group(t, space, group, part)?;
+        let encoded = match &gathered {
+            Some(parts) => {
+                let entries: Vec<(u64, &[u8])> = parts
+                    .iter()
+                    .enumerate()
+                    .map(|(i, p)| (i as u64, p.as_slice()))
+                    .collect();
+                bundle::write(&entries)
+            }
+            None => Vec::new(),
+        };
+        let bytes = self.bcast_group(t, space, group, encoded)?;
+        let mut acc = Vec::new();
+        bundle::read(&bytes, &mut acc)?;
+        bundle::into_rank_order(acc, group.len())
+    }
+
+    /// Element-wise reduction of equal-length local vectors to PID 0:
+    /// `Some(reduced)` at the root, `None` elsewhere. Contributions
+    /// are folded **in rank order** (see the module docs), so the
+    /// result is bit-identical across algorithms.
+    pub fn reduce<T: Element>(
+        &self,
+        t: &dyn Transport,
+        space: TagSpace,
+        local: &[T],
+        op: ReduceOp,
+    ) -> Result<Option<Vec<T>>> {
+        self.reduce_group(t, space, &Self::world(t), local, op)
+    }
+
+    pub fn reduce_group<T: Element>(
+        &self,
+        t: &dyn Transport,
+        space: TagSpace,
+        group: &[Pid],
+        local: &[T],
+        op: ReduceOp,
+    ) -> Result<Option<Vec<T>>> {
+        let mut part = Vec::with_capacity(local.len() * T::WIDTH);
+        T::copy_to_le(local, &mut part);
+        let Some(parts) = self.gather_group(t, space, group, part)? else {
+            return Ok(None);
+        };
+        let mut acc = local.to_vec();
+        let mut other = vec![T::ZERO; acc.len()];
+        for p in &parts[1..] {
+            if p.len() != acc.len() * T::WIDTH {
+                return Err(CommError::Malformed(format!(
+                    "reduce contribution is {} bytes, expected {} ({} × {})",
+                    p.len(),
+                    acc.len() * T::WIDTH,
+                    acc.len(),
+                    T::WIDTH
+                )));
+            }
+            T::copy_from_le(p, &mut other);
+            for (a, b) in acc.iter_mut().zip(&other) {
+                *a = op.combine(*a, *b);
+            }
+        }
+        Ok(Some(acc))
+    }
+
+    /// Reduction whose result lands on every PID (reduce + broadcast;
+    /// under star this is bit-for-bit the legacy `allreduce` wire
+    /// exchange).
+    pub fn allreduce<T: Element>(
+        &self,
+        t: &dyn Transport,
+        space: TagSpace,
+        local: &[T],
+        op: ReduceOp,
+    ) -> Result<Vec<T>> {
+        self.allreduce_group(t, space, &Self::world(t), local, op)
+    }
+
+    pub fn allreduce_group<T: Element>(
+        &self,
+        t: &dyn Transport,
+        space: TagSpace,
+        group: &[Pid],
+        local: &[T],
+        op: ReduceOp,
+    ) -> Result<Vec<T>> {
+        if group.len() <= 1 {
+            return Ok(local.to_vec());
+        }
+        let reduced = self.reduce_group(t, space, group, local, op)?;
+        let bytes = match &reduced {
+            Some(v) => {
+                let mut b = Vec::with_capacity(v.len() * T::WIDTH);
+                T::copy_to_le(v, &mut b);
+                b
+            }
+            None => Vec::new(),
+        };
+        let out = self.bcast_group(t, space, group, bytes)?;
+        if out.len() != local.len() * T::WIDTH {
+            return Err(CommError::Malformed(format!(
+                "allreduce result is {} bytes, expected {}",
+                out.len(),
+                local.len() * T::WIDTH
+            )));
+        }
+        let mut res = vec![T::ZERO; local.len()];
+        T::copy_from_le(&out, &mut res);
+        Ok(res)
+    }
+
+    /// Scalar allreduce — the `sum(A)`/`min(A)`/`max(A)` shape.
+    pub fn allreduce_scalar<T: Element>(
+        &self,
+        t: &dyn Transport,
+        space: TagSpace,
+        local: T,
+        op: ReduceOp,
+    ) -> Result<T> {
+        Ok(self.allreduce(t, space, &[local], op)?[0])
+    }
+
+    /// Barrier over the whole world.
+    pub fn barrier(&self, t: &dyn Transport, space: TagSpace, timeout: Duration) -> Result<()> {
+        self.barrier_group(t, space, &Self::world(t), timeout)
+    }
+
+    pub fn barrier_group(
+        &self,
+        t: &dyn Transport,
+        space: TagSpace,
+        group: &[Pid],
+        timeout: Duration,
+    ) -> Result<()> {
+        if group.len() <= 1 {
+            return Ok(());
+        }
+        let me = Self::member_index(group, t.pid())?;
+        match self.kind {
+            CollKind::Star => star::barrier(t, group, me, space.star(), timeout),
+            CollKind::Tree => tree::barrier(t, group, me, &space, 0, timeout),
+            CollKind::Ring => ring::barrier(t, group, me, &space, 0, timeout),
+            CollKind::Hier => hier::barrier(t, &self.topo, group, t.pid(), &space, timeout),
+            CollKind::Auto => unreachable!("resolved at construction"),
+        }
+    }
+}
+
+/// The process-wide default collective spec `(kind, pids_per_node)`
+/// behind the legacy wrappers (`darray::allreduce`, `DarrayT::agg`,
+/// `comm::barrier::barrier`). Defaults to `(Star, 0 = flat)` — the
+/// exact pre-subsystem behavior; the `repro` binary sets it from
+/// `--coll` and the launch triples.
+static AMBIENT: Mutex<(CollKind, usize)> = Mutex::new((CollKind::Star, 0));
+
+/// Install the process-default collective algorithm and node width.
+pub fn set_ambient(kind: CollKind, pids_per_node: usize) {
+    *AMBIENT.lock().unwrap() = (kind, pids_per_node);
+}
+
+/// The current process-default `(kind, pids_per_node)`.
+pub fn ambient_spec() -> (CollKind, usize) {
+    *AMBIENT.lock().unwrap()
+}
+
+/// Memoized ambient context: rebuilding a `Topology` (node lists +
+/// pid index) per collective call would put O(np) allocations on
+/// every iterated reduction; the context is immutable per
+/// `(kind, per_node, np)`, so cache the last one.
+#[allow(clippy::type_complexity)]
+static AMBIENT_CACHE: Mutex<Option<((CollKind, usize, usize), Arc<Collective>)>> =
+    Mutex::new(None);
+
+/// A [`Collective`] for an `np`-wide world under the process default.
+pub fn ambient(np: usize) -> Arc<Collective> {
+    let (kind, per_node) = ambient_spec();
+    let key = (kind, per_node, np);
+    let mut cache = AMBIENT_CACHE.lock().unwrap();
+    if let Some((k, c)) = cache.as_ref() {
+        if *k == key {
+            return c.clone();
+        }
+    }
+    let coll = Arc::new(Collective::new(kind, Topology::grouped(np, per_node)));
+    *cache = Some((key, coll.clone()));
+    coll
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+    use std::sync::Arc;
+    use std::thread;
+
+    const NS_TEST: u8 = tags::NS_COLL;
+
+    fn spmd<R: Send + 'static>(
+        np: usize,
+        f: impl Fn(&dyn Transport) -> R + Send + Sync + 'static,
+    ) -> Vec<R> {
+        let world = ChannelHub::world(np);
+        let f = Arc::new(f);
+        world
+            .into_iter()
+            .map(|t| {
+                let f = f.clone();
+                thread::spawn(move || f(&t))
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    }
+
+    fn all_kinds() -> [Collective; 4] {
+        [
+            Collective::new(CollKind::Star, Topology::flat(8)),
+            Collective::new(CollKind::Tree, Topology::flat(8)),
+            Collective::new(CollKind::Ring, Topology::flat(8)).with_chunk_bytes(16),
+            Collective::new(CollKind::Hier, Topology::grouped(8, 3)),
+        ]
+    }
+
+    #[test]
+    fn bcast_delivers_root_payload_every_kind_and_width() {
+        for coll in all_kinds() {
+            let coll = Arc::new(coll);
+            for np in [1usize, 2, 3, 5, 8] {
+                for len in [0usize, 1, 37, 4096] {
+                    let coll = coll.clone();
+                    let out = spmd(np, move |t| {
+                        let payload = if t.pid() == 0 {
+                            (0..len).map(|i| (i % 251) as u8).collect()
+                        } else {
+                            Vec::new()
+                        };
+                        coll.bcast(t, TagSpace::packed(NS_TEST, len as u64), payload).unwrap()
+                    });
+                    let want: Vec<u8> = (0..len).map(|i| (i % 251) as u8).collect();
+                    for got in out {
+                        assert_eq!(got, want);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gather_collects_rank_ordered_parts() {
+        for coll in all_kinds() {
+            let coll = Arc::new(coll);
+            for np in [1usize, 2, 3, 5, 8] {
+                let coll = coll.clone();
+                let out = spmd(np, move |t| {
+                    let part = vec![t.pid() as u8; t.pid() + 1];
+                    coll.gather(t, TagSpace::packed(NS_TEST, 90), part).unwrap()
+                });
+                for (pid, got) in out.into_iter().enumerate() {
+                    if pid == 0 {
+                        let parts = got.expect("root gets the parts");
+                        assert_eq!(parts.len(), np);
+                        for (r, p) in parts.iter().enumerate() {
+                            assert_eq!(*p, vec![r as u8; r + 1]);
+                        }
+                    } else {
+                        assert!(got.is_none());
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_delivers_everything_everywhere() {
+        for coll in all_kinds() {
+            let coll = Arc::new(coll);
+            let np = 5;
+            let out = spmd(np, move |t| {
+                coll.allgather(t, TagSpace::packed(NS_TEST, 91), vec![t.pid() as u8 + 10])
+                    .unwrap()
+            });
+            for parts in out {
+                assert_eq!(parts.len(), np);
+                for (r, p) in parts.iter().enumerate() {
+                    assert_eq!(*p, vec![r as u8 + 10]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_folds_in_rank_order_every_kind() {
+        // f64 sums are order-sensitive: rank-order folding must make
+        // every algorithm agree with the star reference bitwise.
+        for coll in all_kinds() {
+            let coll = Arc::new(coll);
+            for np in [2usize, 3, 5, 8] {
+                let coll = coll.clone();
+                let out = spmd(np, move |t| {
+                    let local = 0.1 + t.pid() as f64 * 1.7e-3;
+                    coll.allreduce_scalar(t, TagSpace::packed(NS_TEST, 92), local, ReduceOp::Sum)
+                        .unwrap()
+                });
+                let want = (0..np).fold(0.0f64, |a, p| a + (0.1 + p as f64 * 1.7e-3));
+                for got in out {
+                    assert_eq!(got.to_bits(), want.to_bits(), "np={np}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_completes_every_kind() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        for coll in all_kinds() {
+            let coll = Arc::new(coll);
+            for np in [1usize, 2, 5, 8] {
+                let coll = coll.clone();
+                let arrived = Arc::new(AtomicUsize::new(0));
+                spmd(np, move |t| {
+                    arrived.fetch_add(1, Ordering::SeqCst);
+                    coll.barrier(t, TagSpace::packed(NS_TEST, 93), Duration::from_secs(10))
+                        .unwrap();
+                    assert_eq!(arrived.load(Ordering::SeqCst), np);
+                    coll.barrier(t, TagSpace::packed(NS_TEST, 94), Duration::from_secs(10))
+                        .unwrap();
+                });
+            }
+        }
+    }
+
+    #[test]
+    fn auto_resolves_by_topology() {
+        assert_eq!(Collective::new(CollKind::Auto, Topology::flat(2)).kind(), CollKind::Star);
+        assert_eq!(Collective::new(CollKind::Auto, Topology::flat(16)).kind(), CollKind::Tree);
+        assert_eq!(
+            Collective::new(CollKind::Auto, Topology::grouped(16, 4)).kind(),
+            CollKind::Hier
+        );
+    }
+
+    #[test]
+    fn kind_parse_name_code_roundtrip() {
+        for k in [CollKind::Star, CollKind::Tree, CollKind::Ring, CollKind::Hier, CollKind::Auto] {
+            assert_eq!(CollKind::parse(k.name()), Some(k));
+            assert_eq!(CollKind::from_code(k.code()), Some(k));
+        }
+        assert_eq!(CollKind::parse("mesh"), None);
+        assert_eq!(CollKind::from_code(9), None);
+    }
+
+    #[test]
+    fn log2_rounds_model() {
+        assert_eq!(log2_rounds(1), 0);
+        assert_eq!(log2_rounds(2), 1);
+        assert_eq!(log2_rounds(5), 3);
+        assert_eq!(log2_rounds(8), 3);
+        assert_eq!(log2_rounds(9), 4);
+    }
+}

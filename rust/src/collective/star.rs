@@ -1,0 +1,79 @@
+//! Star (leader-centric) collectives — the reference algorithm.
+//!
+//! Exactly the shape the repo shipped before the collective subsystem
+//! existed: every non-root exchanges directly with the root, one
+//! message at a time, under a **single** tag. O(P) messages and O(P)
+//! serialized latency at the root — correct at any scale, fast only
+//! at small P. `--coll star` routes every call site through these
+//! functions with the call site's legacy tag, so the wire behavior
+//! (peers, order, payload bytes, tags) is bit-for-bit the
+//! pre-subsystem behavior.
+
+use crate::comm::{Result, Tag, Transport};
+use crate::dmap::Pid;
+use std::time::Duration;
+
+/// Root (`group[0]`) sends `payload` to every other member in group
+/// order; everyone returns the payload.
+pub(crate) fn bcast(
+    t: &dyn Transport,
+    group: &[Pid],
+    me: usize,
+    tag: Tag,
+    payload: Vec<u8>,
+) -> Result<Vec<u8>> {
+    if me == 0 {
+        for &to in &group[1..] {
+            t.send(to, tag, &payload)?;
+        }
+        Ok(payload)
+    } else {
+        t.recv(group[0], tag)
+    }
+}
+
+/// Every non-root sends its raw `part` to the root; the root returns
+/// all parts in group-rank order (receiving in group order — the
+/// legacy `agg`/result-gather loop).
+pub(crate) fn gather(
+    t: &dyn Transport,
+    group: &[Pid],
+    me: usize,
+    tag: Tag,
+    part: Vec<u8>,
+) -> Result<Option<Vec<Vec<u8>>>> {
+    if me == 0 {
+        let mut parts = Vec::with_capacity(group.len());
+        parts.push(part);
+        for &from in &group[1..] {
+            parts.push(t.recv(from, tag)?);
+        }
+        Ok(Some(parts))
+    } else {
+        t.send(group[0], tag, &part)?;
+        Ok(None)
+    }
+}
+
+/// Two-phase star barrier: all report to the root, the root releases
+/// everyone (the legacy `comm::barrier` shape).
+pub(crate) fn barrier(
+    t: &dyn Transport,
+    group: &[Pid],
+    me: usize,
+    tag: Tag,
+    timeout: Duration,
+) -> Result<()> {
+    if me == 0 {
+        for &from in &group[1..] {
+            t.recv_timeout(from, tag, timeout)?;
+        }
+        for &to in &group[1..] {
+            t.send(to, tag, &[])?;
+        }
+    } else {
+        t.send(group[0], tag, &[])?;
+        t.recv_timeout(group[0], tag, timeout)?;
+    }
+    Ok(())
+}

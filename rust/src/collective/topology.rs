@@ -1,0 +1,182 @@
+//! [`Topology`] — the (node, slot) structure of a launch, the seam
+//! the hierarchical collectives exploit.
+//!
+//! The launcher's `[Nnode Nppn Ntpn]` triples (§V) already say which
+//! PIDs share a node: processes are dealt node-major, so node `k`
+//! hosts PIDs `k·Nppn .. (k+1)·Nppn`. A [`Topology`] materializes
+//! that grouping as explicit per-node PID lists, and the
+//! [`hier`](super) composition runs its intra-node phases inside one
+//! group and its inter-node phase across one representative (the
+//! *leader*, the group's first PID) per group — O(Nppn) cheap local
+//! hops plus O(log Nnode) expensive cross-node hops, instead of
+//! O(Np) cross-node hops at one rank.
+
+use crate::dmap::Pid;
+use crate::launcher::Triples;
+
+/// Node-grouped PID lists. Groups are non-empty and disjoint; PIDs
+/// not covered by any group are treated as singleton nodes by
+/// [`Topology::restrict`]. A pid → node index built at construction
+/// keeps [`Topology::node_of`] (and therefore the per-call setup of
+/// every hierarchical collective) O(1) per PID.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    nodes: Vec<Vec<Pid>>,
+    node_ix: std::collections::HashMap<Pid, usize>,
+}
+
+impl Topology {
+    fn from_nodes(nodes: Vec<Vec<Pid>>) -> Topology {
+        let mut node_ix = std::collections::HashMap::new();
+        for (k, g) in nodes.iter().enumerate() {
+            for &p in g {
+                node_ix.insert(p, k);
+            }
+        }
+        Topology { nodes, node_ix }
+    }
+
+    /// Everything on one node — the degenerate topology under which
+    /// `hier` collapses to its intra-node algorithm.
+    pub fn flat(np: usize) -> Topology {
+        Topology::from_nodes(vec![(0..np).collect()])
+    }
+
+    /// Consecutive groups of `per_node` PIDs (the launcher's
+    /// node-major deal); the last group takes the remainder.
+    /// `per_node == 0` means "unknown" and yields [`Topology::flat`].
+    pub fn grouped(np: usize, per_node: usize) -> Topology {
+        if per_node == 0 || per_node >= np {
+            return Topology::flat(np);
+        }
+        let nodes = (0..np.div_ceil(per_node))
+            .map(|k| (k * per_node..((k + 1) * per_node).min(np)).collect())
+            .collect();
+        Topology::from_nodes(nodes)
+    }
+
+    /// The topology of a triples-mode launch (`Nnode` groups of
+    /// `Nppn` consecutive PIDs).
+    pub fn from_triples(t: &Triples) -> Topology {
+        Topology::grouped(t.np(), t.nppn)
+    }
+
+    /// Explicit groups (must be non-empty and pairwise disjoint).
+    pub fn from_groups(groups: Vec<Vec<Pid>>) -> Topology {
+        assert!(!groups.is_empty(), "topology needs at least one node");
+        let mut seen = std::collections::HashSet::new();
+        for g in &groups {
+            assert!(!g.is_empty(), "empty node group");
+            for &p in g {
+                assert!(seen.insert(p), "pid {p} appears in two node groups");
+            }
+        }
+        Topology::from_nodes(groups)
+    }
+
+    /// Total PIDs covered.
+    pub fn np(&self) -> usize {
+        self.nodes.iter().map(Vec::len).sum()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn nodes(&self) -> &[Vec<Pid>] {
+        &self.nodes
+    }
+
+    /// Index of the node group containing `pid` (O(1)).
+    pub fn node_of(&self, pid: Pid) -> Option<usize> {
+        self.node_ix.get(&pid).copied()
+    }
+
+    /// Intersect the topology with an ordered participant `group`:
+    /// per-node sub-lists keeping `group`'s member order, empty nodes
+    /// dropped, and any participant outside the topology promoted to
+    /// a singleton node (so a mismatched topology degrades to extra
+    /// inter-node traffic, never a hang). The node containing
+    /// `group[0]` (the operation root) is rotated to the front and
+    /// the root to the front of its node, preserving the invariant
+    /// that the first PID of the first node is the global root.
+    pub fn restrict(&self, group: &[Pid]) -> Vec<Vec<Pid>> {
+        assert!(!group.is_empty(), "restrict of an empty group");
+        let mut out: Vec<Vec<Pid>> = Vec::new();
+        let mut node_slot: Vec<Option<usize>> = vec![None; self.nodes.len()];
+        for &p in group {
+            match self.node_of(p) {
+                Some(k) => match node_slot[k] {
+                    Some(i) => out[i].push(p),
+                    None => {
+                        node_slot[k] = Some(out.len());
+                        out.push(vec![p]);
+                    }
+                },
+                None => out.push(vec![p]),
+            }
+        }
+        // Rotate the root's node first, and the root to its head.
+        let root = group[0];
+        let rn = out
+            .iter()
+            .position(|g| g.contains(&root))
+            .expect("root is a group member");
+        out.swap(0, rn);
+        let rs = out[0].iter().position(|&p| p == root).unwrap();
+        out[0].swap(0, rs);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grouped_splits_node_major() {
+        let t = Topology::grouped(8, 3);
+        assert_eq!(t.nodes(), &[vec![0, 1, 2], vec![3, 4, 5], vec![6, 7]]);
+        assert_eq!(t.np(), 8);
+        assert_eq!(t.node_count(), 3);
+        assert_eq!(t.node_of(4), Some(1));
+        assert_eq!(t.node_of(9), None);
+    }
+
+    #[test]
+    fn zero_or_oversized_per_node_is_flat() {
+        assert_eq!(Topology::grouped(4, 0), Topology::flat(4));
+        assert_eq!(Topology::grouped(4, 8), Topology::flat(4));
+        assert_eq!(Topology::flat(4).node_count(), 1);
+    }
+
+    #[test]
+    fn from_triples_matches_node_major_deal() {
+        let t = Topology::from_triples(&Triples::new(2, 4, 1));
+        assert_eq!(t.nodes(), &[vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+    }
+
+    #[test]
+    fn restrict_keeps_order_and_roots_first() {
+        let t = Topology::grouped(8, 2); // {0,1}{2,3}{4,5}{6,7}
+        let g = t.restrict(&[0, 1, 2, 3, 6]);
+        assert_eq!(g, vec![vec![0, 1], vec![2, 3], vec![6]]);
+        // A root in a later node rotates to the front.
+        let g = t.restrict(&[5, 0, 1, 4]);
+        assert_eq!(g[0], vec![5, 4]);
+        assert_eq!(g[1], vec![0, 1]);
+    }
+
+    #[test]
+    fn restrict_promotes_unknown_pids_to_singletons() {
+        let t = Topology::grouped(4, 2);
+        let g = t.restrict(&[0, 1, 9]);
+        assert_eq!(g, vec![vec![0, 1], vec![9]]);
+    }
+
+    #[test]
+    #[should_panic(expected = "two node groups")]
+    fn overlapping_groups_panic() {
+        Topology::from_groups(vec![vec![0, 1], vec![1, 2]]);
+    }
+}

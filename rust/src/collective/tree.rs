@@ -1,0 +1,116 @@
+//! Binomial-tree collectives — O(log P) rounds, P−1 messages.
+//!
+//! Classic doubling schedule over **group ranks** (index in the
+//! participant list, root = rank 0):
+//!
+//! * broadcast — in round `r`, every rank `< 2^r` that holds the
+//!   payload sends it to rank `+ 2^r`; after `ceil(log2 P)` rounds
+//!   everyone holds it. P−1 messages, log-depth critical path.
+//! * gather — the mirror: rank `me` (with `me mod 2^{r+1} == 2^r`)
+//!   sends the framed bundle of its whole binomial subtree to
+//!   `me − 2^r`. Contributions travel **unreduced** (see the module
+//!   docs in [`super`]): the root folds them in rank order, so every
+//!   algorithm produces bit-identical reductions.
+//! * barrier — gather-shaped up phase with empty payloads, then a
+//!   broadcast-shaped release.
+
+use super::{bundle, log2_rounds, TagSpace, PH_BCAST, PH_DOWN, PH_GATHER, PH_UP};
+use crate::comm::{Result, Transport};
+use crate::dmap::Pid;
+use std::time::Duration;
+
+/// Binomial broadcast from `group[0]`; every rank returns the payload.
+pub(crate) fn bcast(
+    t: &dyn Transport,
+    group: &[Pid],
+    me: usize,
+    space: &TagSpace,
+    level: u64,
+    payload: Vec<u8>,
+) -> Result<Vec<u8>> {
+    let p = group.len();
+    let mut data = (me == 0).then_some(payload);
+    for r in 0..log2_rounds(p) {
+        let bit = 1usize << r;
+        let tag = space.at(level, PH_BCAST, r as u64);
+        if me < bit {
+            let dst = me + bit;
+            if dst < p {
+                t.send(group[dst], tag, data.as_ref().expect("rank < 2^r holds the payload"))?;
+            }
+        } else if me < 2 * bit {
+            data = Some(t.recv(group[me - bit], tag)?);
+        }
+    }
+    Ok(data.expect("every rank holds the payload after the final round"))
+}
+
+/// Binomial gather to `group[0]`: returns `Some(parts)` (rank order)
+/// at the root, `None` elsewhere.
+pub(crate) fn gather(
+    t: &dyn Transport,
+    group: &[Pid],
+    me: usize,
+    space: &TagSpace,
+    level: u64,
+    part: Vec<u8>,
+) -> Result<Option<Vec<Vec<u8>>>> {
+    let p = group.len();
+    let mut acc: Vec<(u64, Vec<u8>)> = vec![(me as u64, part)];
+    for r in 0..log2_rounds(p) {
+        let bit = 1usize << r;
+        let tag = space.at(level, PH_GATHER, r as u64);
+        if me % (2 * bit) == 0 {
+            let src = me + bit;
+            if src < p {
+                let payload = t.recv(group[src], tag)?;
+                bundle::read(&payload, &mut acc)?;
+            }
+        } else {
+            // me mod 2^{r+1} == 2^r: hand the subtree up and exit.
+            t.send(group[me - bit], tag, &bundle::write(&acc))?;
+            return Ok(None);
+        }
+    }
+    debug_assert_eq!(me, 0);
+    bundle::into_rank_order(acc, p).map(Some)
+}
+
+/// Tree barrier: binomial up phase (children report) then binomial
+/// release, both with empty payloads and the caller's timeout.
+pub(crate) fn barrier(
+    t: &dyn Transport,
+    group: &[Pid],
+    me: usize,
+    space: &TagSpace,
+    level: u64,
+    timeout: Duration,
+) -> Result<()> {
+    let p = group.len();
+    for r in 0..log2_rounds(p) {
+        let bit = 1usize << r;
+        let tag = space.at(level, PH_UP, r as u64);
+        if me % (2 * bit) == 0 {
+            let src = me + bit;
+            if src < p {
+                t.recv_timeout(group[src], tag, timeout)?;
+            }
+        } else {
+            t.send(group[me - bit], tag, &[])?;
+            break;
+        }
+    }
+    for r in 0..log2_rounds(p) {
+        let bit = 1usize << r;
+        let tag = space.at(level, PH_DOWN, r as u64);
+        if me < bit {
+            let dst = me + bit;
+            if dst < p {
+                t.send(group[dst], tag, &[])?;
+            }
+        } else if me < 2 * bit {
+            t.recv_timeout(group[me - bit], tag, timeout)?;
+        }
+    }
+    Ok(())
+}

@@ -1,40 +1,42 @@
 //! Barrier synchronization over any [`Transport`].
 //!
-//! Client-server shape (the paper's §II simplest model): all workers
-//! report to PID 0, PID 0 releases everyone. O(Np) messages, two
-//! phases — fine at the scales the coordinator runs (the hot loop
-//! never crosses a barrier; barriers bracket timed phases only).
+//! Routed through the [`crate::collective`] subsystem (`NS_BARRIER`
+//! namespace). The process-default algorithm is the legacy
+//! client-server star — all workers report to PID 0, PID 0 releases
+//! everyone, O(Np) messages at one rank — and `--coll tree|ring|hier`
+//! swap in the binomial up/down tree, the dissemination schedule, or
+//! the two-level topology-aware composition ([`barrier_with`] for an
+//! explicit context). Barriers bracket timed phases only (the hot
+//! loop never crosses one), but at large Np the O(log Np) schedules
+//! keep even that bracketing off the leader's critical path.
 
 use super::{tags, Result, Transport};
+use crate::collective::{Collective, TagSpace};
 use std::time::Duration;
 
-/// Enter a two-phase barrier identified by `epoch`.
+/// Enter a barrier identified by `epoch` under the process-default
+/// collective algorithm.
 ///
 /// All `np` endpoints must call this with the same `epoch`; the epoch
 /// keeps back-to-back barriers from aliasing.
 pub fn barrier(t: &dyn Transport, epoch: u64, timeout: Duration) -> Result<()> {
-    let tag = tags::pack(tags::NS_BARRIER, epoch, 0);
-    let np = t.np();
-    if np == 1 {
-        return Ok(());
-    }
-    if t.pid() == 0 {
-        for from in 1..np {
-            t.recv_timeout(from, tag, timeout)?;
-        }
-        for to in 1..np {
-            t.send(to, tag, &[])?;
-        }
-    } else {
-        t.send(0, tag, &[])?;
-        t.recv_timeout(0, tag, timeout)?;
-    }
-    Ok(())
+    barrier_with(&crate::collective::ambient(t.np()), t, epoch, timeout)
+}
+
+/// Enter a barrier under an explicit collective context.
+pub fn barrier_with(
+    coll: &Collective,
+    t: &dyn Transport,
+    epoch: u64,
+    timeout: Duration,
+) -> Result<()> {
+    coll.barrier(t, TagSpace::packed(tags::NS_BARRIER, epoch), timeout)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collective::{CollKind, Topology};
     use crate::comm::ChannelHub;
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
@@ -67,5 +69,30 @@ mod tests {
         let t = world.pop().unwrap();
         barrier(&t, 0, Duration::from_millis(1)).unwrap();
         assert!(t.stats().is_silent());
+    }
+
+    /// Every algorithm synchronizes: no thread observes a stale phase
+    /// counter after release.
+    #[test]
+    fn barrier_with_every_algorithm() {
+        for kind in [CollKind::Tree, CollKind::Ring, CollKind::Hier] {
+            let np = 6;
+            let world = ChannelHub::world(np);
+            let phase = Arc::new(AtomicUsize::new(0));
+            let mut handles = Vec::new();
+            for t in world {
+                let phase = phase.clone();
+                handles.push(thread::spawn(move || {
+                    let coll = Collective::new(kind, Topology::grouped(np, 2));
+                    phase.fetch_add(1, Ordering::SeqCst);
+                    barrier_with(&coll, &t, 5, Duration::from_secs(5)).unwrap();
+                    assert_eq!(phase.load(Ordering::SeqCst), np, "kind {kind}");
+                    barrier_with(&coll, &t, 6, Duration::from_secs(5)).unwrap();
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
     }
 }

@@ -75,8 +75,15 @@ pub mod tags {
     pub const NS_REDUCE: u8 = 5;
     /// Global range gathers (`gather_range`).
     pub const NS_GATHER: u8 = 6;
-    /// Pipeline stage transfers (step = plan index).
+    /// Pipeline stage transfers — one coalesced message per
+    /// destination peer per epoch (like [`NS_REMAP`]).
     pub const NS_STAGE: u8 = 7;
+    /// Collective subsystem operations (`crate::collective`): the
+    /// coordinator's config/result control plane and any collective
+    /// call that does not carry a legacy namespace. Steps are packed
+    /// `level | phase | round` by
+    /// [`TagSpace`](crate::collective::TagSpace).
+    pub const NS_COLL: u8 = 8;
 
     /// Pack `(namespace, epoch, step)` into disjoint bit fields.
     ///

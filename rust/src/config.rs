@@ -14,6 +14,7 @@
 //! ```
 
 use crate::backend::BackendKind;
+use crate::collective::CollKind;
 use crate::coordinator::{EngineKind, MapKind, RunConfig};
 use crate::element::Dtype;
 use crate::json::Json;
@@ -81,6 +82,8 @@ impl LaunchConfig {
                 dtype: Dtype::F64,
                 backend: BackendKind::Host,
                 threads: 1,
+                coll: CollKind::Star,
+                nppn: 4,
                 artifacts: "artifacts".into(),
             },
         }
@@ -142,14 +145,27 @@ impl LaunchConfig {
                 )
             })?;
         }
+        if let Some(v) = j.get("coll") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| ConfigError::Field("coll", "must be a string".into()))?;
+            cfg.run.coll = CollKind::parse(s).ok_or_else(|| {
+                ConfigError::Field(
+                    "coll",
+                    format!("unknown collective '{s}' (expected {})", CollKind::choices()),
+                )
+            })?;
+        }
         if let Some(v) = j.get("artifacts") {
             cfg.run.artifacts = v
                 .as_str()
                 .ok_or_else(|| ConfigError::Field("artifacts", "must be a string".into()))?
                 .to_string();
         }
-        // The threaded backend's pool width is the Ntpn axis.
+        // The threaded backend's pool width is the Ntpn axis; the
+        // collective topology's node width is the Nppn axis.
         cfg.run.threads = cfg.triples.ntpn;
+        cfg.run.nppn = cfg.triples.nppn;
         Ok(cfg)
     }
 
@@ -168,7 +184,8 @@ mod tests {
         let cfg = LaunchConfig::from_json(
             r#"{"triples": "2x4x2", "n": 1024, "nt": 3, "q": 0.5,
                 "map": "blockcyclic:16", "engine": "pjrt-fused",
-                "dtype": "f32", "backend": "threaded", "artifacts": "art"}"#,
+                "dtype": "f32", "backend": "threaded", "coll": "hier",
+                "artifacts": "art"}"#,
         )
         .unwrap();
         assert_eq!(cfg.triples, Triples::new(2, 4, 2));
@@ -180,6 +197,8 @@ mod tests {
         assert_eq!(cfg.run.dtype, Dtype::F32);
         assert_eq!(cfg.run.backend, BackendKind::Threaded);
         assert_eq!(cfg.run.threads, 2, "pool width follows the Ntpn axis");
+        assert_eq!(cfg.run.coll, CollKind::Hier);
+        assert_eq!(cfg.run.nppn, 4, "collective topology follows the Nppn axis");
         assert_eq!(cfg.run.artifacts, "art");
     }
 
@@ -209,6 +228,10 @@ mod tests {
         assert!(matches!(
             LaunchConfig::from_json(r#"{"backend": "cuda"}"#),
             Err(ConfigError::Field("backend", _))
+        ));
+        assert!(matches!(
+            LaunchConfig::from_json(r#"{"coll": "mesh"}"#),
+            Err(ConfigError::Field("coll", _))
         ));
         assert!(matches!(
             LaunchConfig::from_json("{"),

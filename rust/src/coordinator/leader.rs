@@ -1,9 +1,36 @@
 //! Leader side: broadcast config, run own share, gather reports.
+//!
+//! Both control-plane exchanges route through the
+//! [`crate::collective`] subsystem. The config broadcast bootstraps
+//! over the **star** algorithm (the config is what tells workers
+//! which algorithm the run uses, so it cannot itself depend on the
+//! choice); result aggregation runs under the configured `--coll`
+//! algorithm over the triples topology. Under `--coll star` both
+//! exchanges are bit-for-bit the legacy wire protocol (tags
+//! [`tags::CONFIG`] / [`tags::RESULT`] included, via
+//! [`TagSpace::with_star_tag`]).
 
 use super::results::{RunConfig, WorkerReport};
 use super::worker::run_configured_stream;
+use crate::collective::{Collective, TagSpace, Topology};
 use crate::comm::{tags, Decode, Encode, Result, Transport};
 use crate::stream::{aggregate, AggregateResult, StreamResult};
+
+/// Tag epoch of the config broadcast in [`tags::NS_COLL`].
+pub(crate) const EPOCH_CONFIG: u64 = 0;
+/// Tag epoch of the result aggregation in [`tags::NS_COLL`].
+pub(crate) const EPOCH_RESULT: u64 = 1;
+
+/// The config broadcast's tag space (star bootstrap, legacy tag).
+pub(crate) fn config_space() -> TagSpace {
+    TagSpace::with_star_tag(tags::NS_COLL, EPOCH_CONFIG, tags::CONFIG)
+}
+
+/// The result gather's tag space (configured algorithm, legacy star
+/// tag).
+pub(crate) fn result_space() -> TagSpace {
+    TagSpace::with_star_tag(tags::NS_COLL, EPOCH_RESULT, tags::RESULT)
+}
 
 /// Run a coordinated STREAM benchmark from PID 0's endpoint.
 ///
@@ -15,15 +42,16 @@ pub fn run_leader(
 ) -> Result<(AggregateResult, Vec<StreamResult>)> {
     assert_eq!(t.pid(), 0, "run_leader must be called on PID 0");
     let np = t.np();
-    let payload = cfg.to_bytes();
-    for to in 1..np {
-        t.send(to, tags::CONFIG, &payload)?;
-    }
+    Collective::star(np).bcast(t, config_space(), cfg.to_bytes())?;
     let mut results = Vec::with_capacity(np);
     results.push(run_configured_stream(cfg, 0, np));
-    for from in 1..np {
-        let report = WorkerReport::from_bytes(&t.recv(from, tags::RESULT)?)?;
-        results.push(report.to_result());
+    let coll = Collective::new(cfg.coll, Topology::grouped(np, cfg.nppn));
+    let my_report = WorkerReport::from_result(0, &results[0]);
+    let parts = coll
+        .gather(t, result_space(), my_report.to_bytes())?
+        .expect("pid 0 is the gather root");
+    for part in &parts[1..] {
+        results.push(WorkerReport::from_bytes(part)?.to_result());
     }
     let agg = aggregate(&results).expect("np >= 1");
     Ok((agg, results))
@@ -48,6 +76,8 @@ mod tests {
             dtype: crate::element::Dtype::F64,
             backend: crate::backend::BackendKind::Host,
             threads: 1,
+            coll: crate::collective::CollKind::Star,
+            nppn: 0,
             artifacts: "artifacts".into(),
         }
     }
@@ -121,6 +151,33 @@ mod tests {
         assert_eq!(agg.backend, BackendKind::Threaded);
         for r in &results {
             assert_eq!(r.backend, BackendKind::Threaded);
+        }
+    }
+
+    /// The `--coll` acceptance path: result aggregation over the
+    /// tree, ring, and hierarchical algorithms produces the identical
+    /// pid-ordered results the star protocol does.
+    #[test]
+    fn collective_algorithms_through_the_full_protocol() {
+        use crate::collective::CollKind;
+        for (kind, nppn) in [(CollKind::Tree, 0), (CollKind::Ring, 0), (CollKind::Hier, 2)] {
+            let np = 5;
+            let mut world = ChannelHub::world(np);
+            let leader = world.remove(0);
+            let handles: Vec<_> = world
+                .into_iter()
+                .map(|t| thread::spawn(move || run_worker(&t).unwrap()))
+                .collect();
+            let mut c = cfg(5 * 1024, 2, MapKind::Block);
+            c.coll = kind;
+            c.nppn = nppn;
+            let (agg, results) = run_leader(&leader, &c).unwrap();
+            for h in handles {
+                h.join().unwrap();
+            }
+            assert!(agg.all_valid, "coll {kind}: worst err {}", agg.worst_err);
+            assert_eq!(agg.np, np);
+            assert_eq!(results.iter().map(|r| r.n_local).sum::<usize>(), 5 * 1024);
         }
     }
 

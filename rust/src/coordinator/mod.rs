@@ -3,11 +3,13 @@
 //! independently and "communicate only with the leader"; results are
 //! aggregated at the end over the messaging transport (§V).
 //!
-//! Protocol (tags in [`crate::comm::tags`]):
-//! 1. leader broadcasts [`RunConfig`] (CONFIG) to every worker;
+//! Protocol (both exchanges route through [`crate::collective`]):
+//! 1. leader broadcasts [`RunConfig`] (star bootstrap, legacy CONFIG
+//!    tag under `--coll star`);
 //! 2. everyone (leader included) runs the configured STREAM;
-//! 3. workers send a [`WorkerReport`] (RESULT); the leader folds them
-//!    into an [`crate::stream::AggregateResult`].
+//! 3. reports are gathered under the configured `--coll` algorithm
+//!    (legacy RESULT tag under star); the leader folds them into an
+//!    [`crate::stream::AggregateResult`].
 
 pub mod leader;
 pub mod results;

@@ -1,6 +1,7 @@
 //! Wire types for the leader/worker protocol.
 
 use crate::backend::BackendKind;
+use crate::collective::CollKind;
 use crate::comm::{CommError, Decode, Encode, WireReader, WireWriter};
 use crate::dmap::Dmap;
 use crate::element::Dtype;
@@ -96,6 +97,13 @@ pub struct RunConfig {
     /// Worker pool width for the threaded backend — the `Ntpn` axis of
     /// the triples spec (0 = one thread per online core).
     pub threads: usize,
+    /// Collective algorithm for the coordinator's result aggregation
+    /// (`--coll` axis; the config broadcast itself bootstraps over
+    /// star since it is what tells workers which algorithm to use).
+    pub coll: CollKind,
+    /// PIDs per node — the `Nppn` axis of the triples spec, the
+    /// hierarchical collectives' topology (0 = flat/unknown).
+    pub nppn: usize,
     /// Artifacts directory for the PJRT engine.
     pub artifacts: String,
 }
@@ -116,6 +124,8 @@ impl Encode for RunConfig {
         w.put_u8(self.dtype.code());
         w.put_u8(self.backend.code());
         w.put_usize(self.threads);
+        w.put_u8(self.coll.code());
+        w.put_usize(self.nppn);
         w.put_str(&self.artifacts);
     }
 }
@@ -146,8 +156,24 @@ impl Decode for RunConfig {
         let backend = BackendKind::from_code(bcode)
             .ok_or_else(|| CommError::Malformed(format!("bad backend code {bcode}")))?;
         let threads = r.get_usize()?;
+        let ccode = r.get_u8()?;
+        let coll = CollKind::from_code(ccode)
+            .ok_or_else(|| CommError::Malformed(format!("bad coll code {ccode}")))?;
+        let nppn = r.get_usize()?;
         let artifacts = r.get_str()?;
-        Ok(RunConfig { n_global, nt, q, map, engine, dtype, backend, threads, artifacts })
+        Ok(RunConfig {
+            n_global,
+            nt,
+            q,
+            map,
+            engine,
+            dtype,
+            backend,
+            threads,
+            coll,
+            nppn,
+            artifacts,
+        })
     }
 }
 
@@ -261,6 +287,8 @@ mod tests {
             dtype: Dtype::F32,
             backend: BackendKind::Threaded,
             threads: 4,
+            coll: CollKind::Hier,
+            nppn: 4,
             artifacts: "artifacts".into(),
         };
         let got = RunConfig::from_bytes(&c.to_bytes()).unwrap();
@@ -311,6 +339,8 @@ mod tests {
             dtype: Dtype::F64,
             backend: BackendKind::Host,
             threads: 1,
+            coll: CollKind::Star,
+            nppn: 0,
             artifacts: String::new(),
         };
         let bytes = c.to_bytes();

@@ -1,8 +1,10 @@
 //! Worker side of the protocol: receive config → run → report.
 
+use super::leader::{config_space, result_space};
 use super::results::{EngineKind, RunConfig, WorkerReport};
 use crate::backend::{run_stream_dtype, BackendRegistry};
-use crate::comm::{tags, Decode, Encode, Result, Transport};
+use crate::collective::{Collective, Topology};
+use crate::comm::{Decode, Encode, Result, Transport};
 use crate::stream::timing::{OpTimes, Timer};
 use crate::stream::validate::validate;
 use crate::stream::StreamResult;
@@ -162,12 +164,16 @@ fn run_pjrt_stream(cfg: &RunConfig, pid: usize, np: usize) -> StreamResult {
 }
 
 /// Full worker lifecycle over a transport: receive the broadcast
-/// config, run, report back to PID 0.
+/// config (star bootstrap — see the leader module docs), run, then
+/// join the result aggregation under the configured `--coll`
+/// algorithm.
 pub fn run_worker(t: &dyn Transport) -> Result<WorkerReport> {
-    let payload = t.recv(0, tags::CONFIG)?;
+    let np = t.np();
+    let payload = Collective::star(np).bcast(t, config_space(), Vec::new())?;
     let cfg = RunConfig::from_bytes(&payload)?;
-    let result = run_configured_stream(&cfg, t.pid(), t.np());
+    let result = run_configured_stream(&cfg, t.pid(), np);
     let report = WorkerReport::from_result(t.pid(), &result);
-    t.send(0, tags::RESULT, &report.to_bytes())?;
+    let coll = Collective::new(cfg.coll, Topology::grouped(np, cfg.nppn));
+    coll.gather(t, result_space(), report.to_bytes())?;
     Ok(report)
 }

@@ -1,56 +1,72 @@
 //! `agg()` — gather a distributed array to the leader (pMatlab's
 //! aggregation; used at the end of a run "the results were aggregated
 //! using asynchronous file-based messaging" §V).
+//!
+//! Routed through the [`crate::collective`] gather (`NS_AGG`
+//! namespace): under the default star algorithm the wire exchange is
+//! bit-for-bit the legacy one (each PID's typed local part straight
+//! to PID 0, received in map-PID order); `--coll tree|ring|hier`
+//! swap in logarithmic or topology-aware gathers without touching
+//! this call site again.
 
 use super::dense::DarrayT;
 use super::Result;
+use crate::collective::{Collective, TagSpace};
 use crate::comm::{tags, Transport, WireReader, WireWriter};
 use crate::dmap::Partition;
 use crate::element::Element;
 
 impl<T: Element> DarrayT<T> {
-    /// Gather the full global array onto PID 0.
+    /// Gather the full global array onto the map's first PID — PID 0
+    /// for every world-spanning map.
     ///
-    /// Returns `Some(global)` on the leader, `None` elsewhere. SPMD:
+    /// Returns `Some(global)` on that leader, `None` elsewhere. SPMD:
     /// every PID in the map must call with the same `epoch`.
     pub fn agg(&self, t: &dyn Transport, epoch: u64) -> Result<Option<Vec<T>>> {
-        let tag = tags::pack(tags::NS_AGG, epoch, 0);
+        self.agg_with(&crate::collective::ambient(t.np()), t, epoch)
+    }
+
+    /// [`DarrayT::agg`] under an explicit collective context.
+    pub fn agg_with(
+        &self,
+        coll: &Collective,
+        t: &dyn Transport,
+        epoch: u64,
+    ) -> Result<Option<Vec<T>>> {
+        let space = TagSpace::packed(tags::NS_AGG, epoch);
+        // The assembly root is the map's first PID — PID 0 for every
+        // world-spanning map (the legacy contract). A non-member PID
+        // cannot reach this method (DarrayT construction asserts map
+        // membership), so for subset maps the global lands at the
+        // subset's own leader; the legacy code instead sent those
+        // contributions to a PID that could hold no array and lost
+        // them.
+        let group = self.map().pids().to_vec();
+        let mut w = WireWriter::with_capacity(24 + T::WIDTH * self.local_len());
+        w.put_slice::<T>(self.loc());
+        let Some(parts) = coll.gather_group(t, space, &group, w.finish())? else {
+            return Ok(None);
+        };
+        // Root: scatter every PID's typed part into the global layout.
         let part = Partition::of(self.map(), &self.shape().to_vec());
-        if self.pid() == 0 {
-            let mut global = vec![T::ZERO; self.global_len()];
-            // Own pieces first.
+        let mut global = vec![T::ZERO; self.global_len()];
+        for (&pid, payload) in group.iter().zip(&parts) {
+            let mut rd = WireReader::new(payload);
+            let data = rd.get_vec::<T>().map_err(crate::darray::DarrayError::from)?;
             let mut off = 0usize;
-            for r in part.ranges_of(0) {
-                global[r.lo..r.hi].copy_from_slice(&self.loc()[off..off + r.len()]);
+            for r in part.ranges_of(pid) {
+                global[r.lo..r.hi].copy_from_slice(&data[off..off + r.len()]);
                 off += r.len();
             }
-            // Then one message per other PID.
-            for &pid in self.map().pids() {
-                if pid == 0 {
-                    continue;
-                }
-                let payload = t.recv(pid, tag)?;
-                let mut rd = WireReader::new(&payload);
-                let data = rd.get_vec::<T>()?;
-                let mut off = 0usize;
-                for r in part.ranges_of(pid) {
-                    global[r.lo..r.hi].copy_from_slice(&data[off..off + r.len()]);
-                    off += r.len();
-                }
-            }
-            Ok(Some(global))
-        } else {
-            let mut w = WireWriter::with_capacity(24 + T::WIDTH * self.local_len());
-            w.put_slice::<T>(self.loc());
-            t.send(0, tag, &w.finish())?;
-            Ok(None)
         }
+        Ok(Some(global))
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collective::{CollKind, Topology};
     use crate::comm::ChannelHub;
     use crate::darray::dense::Darray;
     use crate::dmap::Dmap;
@@ -121,6 +137,63 @@ mod tests {
         }
         for h in hs {
             h.join().unwrap();
+        }
+    }
+
+    /// A map over a PID subset aggregates onto the subset's first PID
+    /// (non-members hold no array and do not participate; the legacy
+    /// code sent their contributions to PID 0, which could hold no
+    /// array for this map, and lost them).
+    #[test]
+    fn agg_subset_map_roots_at_first_map_pid() {
+        let np = 3;
+        let n = 40;
+        let world = ChannelHub::world(np);
+        let mut hs = Vec::new();
+        for t in world {
+            hs.push(thread::spawn(move || {
+                let pid = t.pid();
+                if pid == 0 {
+                    return None; // not a map member: no array, no call
+                }
+                let map = crate::darray::pipeline::stage_map(&[1, 2]);
+                let a = Darray::from_global_fn(map, &[n], pid, |g| g as f64 + 0.5);
+                a.agg(&t, 3).unwrap()
+            }));
+        }
+        let outs: Vec<_> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+        let g = outs[1].as_ref().expect("the subset leader assembles");
+        assert_eq!(g.len(), n);
+        for (i, v) in g.iter().enumerate() {
+            assert_eq!(*v, i as f64 + 0.5);
+        }
+        assert!(outs[0].is_none() && outs[2].is_none());
+    }
+
+    /// Explicit non-star contexts aggregate the identical global
+    /// array (the equivalence the property suite checks exhaustively).
+    #[test]
+    fn agg_with_every_algorithm_matches() {
+        for kind in [CollKind::Tree, CollKind::Ring, CollKind::Hier] {
+            let np = 5;
+            let world = ChannelHub::world(np);
+            let mut hs = Vec::new();
+            for t in world {
+                hs.push(thread::spawn(move || {
+                    let pid = t.pid();
+                    let coll = Collective::new(kind, Topology::grouped(np, 2));
+                    let a = Darray::from_global_fn(Dmap::cyclic_1d(np), &[77], pid, |g| {
+                        g as f64 * 0.5
+                    });
+                    a.agg_with(&coll, &t, 2).unwrap()
+                }));
+            }
+            let outs: Vec<_> = hs.into_iter().map(|h| h.join().unwrap()).collect();
+            let g = outs[0].as_ref().expect("root output");
+            for (i, v) in g.iter().enumerate() {
+                assert_eq!(*v, i as f64 * 0.5, "kind {kind}");
+            }
+            assert!(outs[1..].iter().all(Option::is_none));
         }
     }
 }

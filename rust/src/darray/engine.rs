@@ -308,13 +308,14 @@ pub fn execute_plan_typed<T: Element>(
         dst.copy_from_slice(src);
         return Ok(());
     }
+    let tag = remap_tag(epoch);
     for &(s_off, d_off, len) in plan.local_copies(pid) {
         dst[d_off..d_off + len].copy_from_slice(&src[s_off..s_off + len]);
     }
     for g in plan.peer_sends(pid) {
-        send_group_typed::<T>(g, src, t, epoch)?;
+        send_group_typed::<T>(g, src, t, tag)?;
     }
-    recv_groups(plan, pid, t, epoch, |g, payload| {
+    recv_groups(plan, pid, t, tag, |g, payload| {
         unpack_group_typed::<T>(g, &payload, dst)
     })
 }
@@ -324,12 +325,14 @@ pub fn execute_plan_typed<T: Element>(
 /// payload live in pooled wire buffers (zero steady-state
 /// allocations); the payload is gathered straight from `src` by the
 /// bulk codec; the transport writes both parts without concatenating
-/// them ([`Transport::send_parts`]).
+/// them ([`Transport::send_parts`]). The caller supplies the `tag`
+/// (remap epochs, pipeline stage epochs, …) — one coalesced message
+/// per peer per tag.
 pub(crate) fn send_group_typed<T: Element>(
     g: &PeerGroup,
     src: &[T],
     t: &dyn Transport,
-    epoch: u64,
+    tag: Tag,
 ) -> crate::comm::Result<()> {
     let pool = BufferPool::global();
     let mut header = pool.checkout(g.header_bytes());
@@ -341,7 +344,7 @@ pub(crate) fn send_group_typed<T: Element>(
     let mut pw = WireWriter::from_vec(payload.take());
     pw.put_slice_gather::<T>(src, g.segs());
     payload.restore(pw.finish());
-    t.send_parts(g.peer, remap_tag(epoch), &[header.as_slice(), payload.as_slice()])
+    t.send_parts(g.peer, tag, &[header.as_slice(), payload.as_slice()])
 }
 
 /// The coalesced message header: the range table. The typed-slice
@@ -426,10 +429,9 @@ pub(crate) fn recv_groups(
     plan: &RemapPlan,
     pid: Pid,
     t: &dyn Transport,
-    epoch: u64,
+    tag: Tag,
     mut unpack: impl FnMut(&PeerGroup, Vec<u8>) -> crate::comm::Result<()>,
 ) -> crate::comm::Result<()> {
-    let tag = remap_tag(epoch);
     let groups = plan.peer_recvs(pid);
     // A single incoming peer has nothing to reorder — block directly.
     if let [only] = groups {

@@ -34,7 +34,7 @@ pub mod subsref;
 pub use dense::{Darray, DarrayT};
 pub use engine::{RemapEngine, RemapPlan};
 pub use pipeline::{stage_map, StageArray, StageArrayT};
-pub use reduce::{allreduce, ReduceOp};
+pub use reduce::{allreduce, allreduce_t, allreduce_with, ReduceOp};
 
 /// Errors from distributed-array operations.
 #[derive(Debug)]

@@ -1,78 +1,64 @@
 //! Distributed reductions — the collective building blocks a pMatlab
 //! user gets from `sum(A)`, `min(A)`, `norm(A)`, `dot(A,B)`.
 //!
-//! Client-server shape (§II): every PID reduces its local part, sends
-//! one scalar to the leader, the leader combines and **broadcasts the
-//! result back** so the call is collective and every PID returns the
-//! same value (matching pMatlab semantics).
+//! All reductions route through the [`crate::collective`] subsystem
+//! (`NS_REDUCE` tag namespace): the algorithm — star, binomial tree,
+//! ring, hierarchical — is the process-default (`--coll` axis) for
+//! the plain entry points, or explicit via [`allreduce_with`].
+//! Contributions fold in PID order regardless of algorithm, so every
+//! algorithm returns bit-identical results (the star default is
+//! bit-for-bit the legacy wire exchange).
+//!
+//! [`ReduceOp`] is dtype-generic over the sealed
+//! [`Element`](crate::element::Element) set: `DarrayT<i64>` sums wrap
+//! exactly and `DarrayT<f32>` reduces in f32 via the `*_t` entry
+//! points — no round-trip through f64. The historical f64-widening
+//! API (`global_sum`, …) is unchanged.
 
 use super::dense::DarrayT;
 use super::Result;
-use crate::comm::{tags, Transport, WireReader, WireWriter};
+use crate::collective::{Collective, TagSpace};
+use crate::comm::{tags, Transport};
 use crate::element::Element;
 
-/// A binary reduction operator over f64.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum ReduceOp {
-    Sum,
-    Min,
-    Max,
-}
+pub use crate::collective::ReduceOp;
 
-impl ReduceOp {
-    #[inline]
-    fn identity(&self) -> f64 {
-        match self {
-            ReduceOp::Sum => 0.0,
-            ReduceOp::Min => f64::INFINITY,
-            ReduceOp::Max => f64::NEG_INFINITY,
-        }
-    }
-
-    #[inline]
-    fn combine(&self, a: f64, b: f64) -> f64 {
-        match self {
-            ReduceOp::Sum => a + b,
-            ReduceOp::Min => a.min(b),
-            ReduceOp::Max => a.max(b),
-        }
-    }
-}
-
-/// Collective scalar reduction over all PIDs of a map. SPMD.
+/// Collective scalar reduction over all PIDs (f64 — the historical
+/// entry point). SPMD.
 pub fn allreduce(t: &dyn Transport, local: f64, op: ReduceOp, epoch: u64) -> Result<f64> {
-    let tag = tags::pack(tags::NS_REDUCE, epoch, 0);
-    let np = t.np();
-    if np == 1 {
-        return Ok(local);
-    }
-    if t.pid() == 0 {
-        let mut acc = local;
-        for from in 1..np {
-            let payload = t.recv(from, tag)?;
-            let v = WireReader::new(&payload).get_f64()?;
-            acc = op.combine(acc, v);
-        }
-        let mut w = WireWriter::new();
-        w.put_f64(acc);
-        let bytes = w.finish();
-        for to in 1..np {
-            t.send(to, tag, &bytes)?;
-        }
-        Ok(acc)
-    } else {
-        let mut w = WireWriter::new();
-        w.put_f64(local);
-        t.send(0, tag, &w.finish())?;
-        let payload = t.recv(0, tag)?;
-        Ok(WireReader::new(&payload).get_f64()?)
-    }
+    allreduce_t(t, local, op, epoch)
+}
+
+/// Dtype-generic collective scalar reduction under the
+/// process-default algorithm. SPMD.
+pub fn allreduce_t<T: Element>(t: &dyn Transport, local: T, op: ReduceOp, epoch: u64) -> Result<T> {
+    allreduce_with(&crate::collective::ambient(t.np()), t, local, op, epoch)
+}
+
+/// Dtype-generic collective scalar reduction under an explicit
+/// algorithm context. SPMD.
+pub fn allreduce_with<T: Element>(
+    coll: &Collective,
+    t: &dyn Transport,
+    local: T,
+    op: ReduceOp,
+    epoch: u64,
+) -> Result<T> {
+    let space = TagSpace::packed(tags::NS_REDUCE, epoch);
+    Ok(coll.allreduce_scalar(t, space, local, op)?)
 }
 
 impl<T: Element> DarrayT<T> {
     /// Global sum: `sum(A(:))`, widened to f64. Collective.
     pub fn global_sum(&self, t: &dyn Transport, epoch: u64) -> Result<f64> {
         allreduce(t, self.local_sum(), ReduceOp::Sum, epoch)
+    }
+
+    /// Global sum in `T` itself (wrapping for integer dtypes, f32
+    /// accumulation for f32). Collective.
+    pub fn global_sum_t(&self, t: &dyn Transport, epoch: u64) -> Result<T> {
+        let local = self.loc().iter().fold(T::ZERO, |a, &b| T::add(a, b));
+        allreduce_t(t, local, ReduceOp::Sum, epoch)
     }
 
     /// Global minimum (f64). Collective.
@@ -85,6 +71,12 @@ impl<T: Element> DarrayT<T> {
         allreduce(t, local, ReduceOp::Min, epoch)
     }
 
+    /// Global minimum in `T` itself. Collective.
+    pub fn global_min_t(&self, t: &dyn Transport, epoch: u64) -> Result<T> {
+        let local = self.loc().iter().fold(T::MAX_BOUND, |a, &b| T::elem_min(a, b));
+        allreduce_t(t, local, ReduceOp::Min, epoch)
+    }
+
     /// Global maximum (f64). Collective.
     pub fn global_max(&self, t: &dyn Transport, epoch: u64) -> Result<f64> {
         let local = self
@@ -93,6 +85,12 @@ impl<T: Element> DarrayT<T> {
             .map(|x| x.to_f64())
             .fold(f64::NEG_INFINITY, f64::max);
         allreduce(t, local, ReduceOp::Max, epoch)
+    }
+
+    /// Global maximum in `T` itself. Collective.
+    pub fn global_max_t(&self, t: &dyn Transport, epoch: u64) -> Result<T> {
+        let local = self.loc().iter().fold(T::MIN_BOUND, |a, &b| T::elem_max(a, b));
+        allreduce_t(t, local, ReduceOp::Max, epoch)
     }
 
     /// Global dot product `A(:)' * B(:)` in f64 (maps must align).
@@ -118,6 +116,7 @@ impl<T: Element> DarrayT<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::collective::{CollKind, Topology};
     use crate::comm::ChannelHub;
     use crate::darray::dense::Darray;
     use crate::dmap::Dmap;
@@ -215,6 +214,45 @@ mod tests {
         for (i_sum, f_sum) in sums {
             assert_eq!(i_sum, 4950.0);
             assert_eq!(f_sum, 50.0);
+        }
+    }
+
+    /// The `*_t` entry points reduce in the array's own dtype: i64
+    /// sums stay exact integers, u64 maxima never touch a float.
+    #[test]
+    fn native_dtype_reductions_skip_f64() {
+        let out = spmd(4, |pid, t| {
+            let a = DarrayT::<i64>::from_global_fn(Dmap::block_1d(4), &[64], pid, |g| {
+                1 + (1i64 << 60) * (g == 0) as i64
+            });
+            let u = DarrayT::<u64>::from_global_fn(Dmap::cyclic_1d(4), &[64], pid, |g| g as u64);
+            (
+                a.global_sum_t(t, 8).unwrap(),
+                u.global_max_t(t, 9).unwrap(),
+                u.global_min_t(t, 10).unwrap(),
+            )
+        });
+        for (s, mx, mn) in out {
+            // 64 ones plus one 2^60 spike — exact in i64, lossy in f64.
+            assert_eq!(s, 64 + (1i64 << 60));
+            assert_eq!(mx, 63);
+            assert_eq!(mn, 0);
+        }
+    }
+
+    /// Every algorithm produces the bit-identical scalar (rank-order
+    /// folding), via the explicit-context entry point.
+    #[test]
+    fn allreduce_with_matches_across_algorithms() {
+        for kind in [CollKind::Star, CollKind::Tree, CollKind::Ring, CollKind::Hier] {
+            let out = spmd(5, move |pid, t| {
+                let coll = Collective::new(kind, Topology::grouped(5, 2));
+                allreduce_with(&coll, t, 0.1f64 + pid as f64 * 1e-3, ReduceOp::Sum, 11).unwrap()
+            });
+            let want = (0..5).fold(0.0f64, |a, p| a + (0.1 + p as f64 * 1e-3));
+            for got in out {
+                assert_eq!(got.to_bits(), want.to_bits(), "kind {kind}");
+            }
         }
     }
 }

@@ -202,10 +202,22 @@ pub trait Element:
     /// Scaled by the iteration count; zero for exact (integer) types.
     const TOL_BASE: f64;
 
+    /// Smallest representable value (`-∞` for floats) — the identity
+    /// of a `max` reduction.
+    const MIN_BOUND: Self;
+    /// Largest representable value (`+∞` for floats) — the identity
+    /// of a `min` reduction.
+    const MAX_BOUND: Self;
+
     /// `a + b` (wrapping for integer types).
     fn add(a: Self, b: Self) -> Self;
     /// `a * b` (wrapping for integer types).
     fn mul(a: Self, b: Self) -> Self;
+    /// The smaller of `a` and `b` (IEEE `min` for floats — matching
+    /// the historical f64 reduction semantics).
+    fn elem_min(a: Self, b: Self) -> Self;
+    /// The larger of `a` and `b` (IEEE `max` for floats).
+    fn elem_max(a: Self, b: Self) -> Self;
 
     /// Nearest representable value to `v` (used for constants like the
     /// STREAM `q` and for test data generation).
@@ -332,6 +344,8 @@ macro_rules! element_float {
             const WIDTH: usize = $width;
             const DTYPE: Dtype = $dtype;
             const TOL_BASE: f64 = $tol;
+            const MIN_BOUND: Self = <$t>::NEG_INFINITY;
+            const MAX_BOUND: Self = <$t>::INFINITY;
 
             element_erased_views!($var);
 
@@ -343,6 +357,16 @@ macro_rules! element_float {
             #[inline]
             fn mul(a: Self, b: Self) -> Self {
                 a * b
+            }
+
+            #[inline]
+            fn elem_min(a: Self, b: Self) -> Self {
+                a.min(b)
+            }
+
+            #[inline]
+            fn elem_max(a: Self, b: Self) -> Self {
+                a.max(b)
             }
 
             #[inline]
@@ -376,6 +400,8 @@ macro_rules! element_int {
             const WIDTH: usize = 8;
             const DTYPE: Dtype = $dtype;
             const TOL_BASE: f64 = 0.0; // integer arithmetic is exact
+            const MIN_BOUND: Self = <$t>::MIN;
+            const MAX_BOUND: Self = <$t>::MAX;
 
             element_erased_views!($var);
 
@@ -387,6 +413,16 @@ macro_rules! element_int {
             #[inline]
             fn mul(a: Self, b: Self) -> Self {
                 a.wrapping_mul(b)
+            }
+
+            #[inline]
+            fn elem_min(a: Self, b: Self) -> Self {
+                Ord::min(a, b)
+            }
+
+            #[inline]
+            fn elem_max(a: Self, b: Self) -> Self {
+                Ord::max(a, b)
             }
 
             #[inline]

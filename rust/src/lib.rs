@@ -11,8 +11,9 @@
 //!   ([`darray`]), transports ([`comm`]), triples launcher
 //!   ([`launcher`]), leader/worker coordinator ([`coordinator`]),
 //!   hardware-era models ([`hardware`]), STREAM drivers ([`stream`]),
-//!   pluggable execution backends ([`backend`]), baseline programming
-//!   models ([`baselines`]), and report generators ([`report`]).
+//!   pluggable execution backends ([`backend`]), topology-aware
+//!   collectives ([`collective`]), baseline programming models
+//!   ([`baselines`]), and report generators ([`report`]).
 //! * **L2/L1 (python/, build-time only)** — the STREAM step as a JAX
 //!   graph over Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`
 //!   and executed from Rust via [`runtime`].
@@ -32,6 +33,7 @@ pub mod backend;
 pub mod baselines;
 pub mod benchx;
 pub mod cli;
+pub mod collective;
 pub mod comm;
 pub mod config;
 pub mod coordinator;

@@ -4,6 +4,7 @@
 //! * `run`         — coordinated STREAM across worker processes (triples mode)
 //! * `worker`      — internal: one spawned worker process
 //! * `bench-remap` — measure the coalesced remap hot path (bench_remap_v1)
+//! * `bench-collective` — measure the collective algorithms (bench_collective_v1)
 //! * `sweep`       — regenerate a figure (fig3 | fig4 | petascale)
 //! * `report`      — print a paper table (table1 | table2 | fig4)
 //! * `validate`    — run the PJRT artifacts and check numerics vs closed forms
@@ -11,6 +12,7 @@
 
 use distarray::backend::{BackendKind, BackendRegistry};
 use distarray::cli::Args;
+use distarray::collective::CollKind;
 use distarray::comm::FileTransport;
 use distarray::coordinator::{run_leader, run_worker, EngineKind, MapKind, RunConfig};
 use distarray::launcher::{spawn_workers, PinPlan, Triples, WorkerEnv};
@@ -23,6 +25,7 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("worker") => cmd_worker(),
         Some("bench-remap") => cmd_bench_remap(&args),
+        Some("bench-collective") => cmd_bench_collective(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("report") => cmd_report(&args),
         Some("validate") => cmd_validate(&args),
@@ -34,9 +37,13 @@ fn main() {
                  \n           --map block|cyclic|blockcyclic:K --engine native|pjrt|pjrt-fused\n\
                  \n           --dtype f32|f64|i64|u64 (native engine; default f64)\n\
                  \n           --backend host|threaded|pjrt (native engine; default host)\n\
+                 \n           --coll star|tree|ring|hier|auto (collective algorithms; default star)\n\
                  \n           --bench-json out.json (machine-readable per-op bandwidths)\n\
                  \n  bench-remap --np 4 --n 1048576 --iters 10 --dtype f64\n\
                  \n           [--bench-json out.json] (bench_remap_v1: bytes, messages, GB/s)\n\
+                 \n  bench-collective --np-list 2,4,8 --nppn 2 --bytes 65536 --iters 20\n\
+                 \n           --coll star,tree,ring,hier [--bench-json out.json]\n\
+                 \n           (bench_collective_v1: latency, bytes, messages vs P)\n\
                  \n  sweep    fig3|fig4|petascale [--measure] [--csv] [--backend host|threaded]\n\
                  \n  report   table1|table2|fig4\n\
                  \n  validate --artifacts artifacts\n\
@@ -133,6 +140,10 @@ fn cmd_run(args: &Args) -> i32 {
         Ok(v) => v,
         Err(code) => return code,
     };
+    let coll = match axis_flag(args, "coll", CollKind::choices(), base.run.coll, CollKind::parse) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
     if engine != EngineKind::Native && dtype != distarray::element::Dtype::F64 {
         eprintln!("engine {} is f64-only; use --engine native for --dtype {dtype}", engine.name());
         return 2;
@@ -185,14 +196,25 @@ fn cmd_run(args: &Args) -> i32 {
         dtype,
         backend,
         threads: triples.ntpn,
+        coll,
+        nppn: triples.nppn,
         artifacts,
     };
+    // Any library collective in this process (darray reductions,
+    // barriers) follows the configured algorithm too — and spawned
+    // worker processes inherit it through the environment (read back
+    // in `cmd_worker`), so an ambient-routed collective spanning the
+    // whole world runs one algorithm everywhere.
+    distarray::collective::set_ambient(coll, triples.nppn);
+    std::env::set_var("DISTARRAY_COLL", coll.name());
+    std::env::set_var("DISTARRAY_NPPN", triples.nppn.to_string());
     println!(
-        "repro run: triples={triples} Np={} N={n} Nt={nt} engine={} dtype={} backend={}",
+        "repro run: triples={triples} Np={} N={n} Nt={nt} engine={} dtype={} backend={} coll={}",
         triples.np(),
         cfg.engine.name(),
         cfg.dtype,
-        cfg.backend
+        cfg.backend,
+        cfg.coll
     );
 
     let plan = PinPlan::for_node(&triples);
@@ -298,12 +320,96 @@ fn cmd_bench_remap(args: &Args) -> i32 {
     0
 }
 
+/// `repro bench-collective` — measure every collective algorithm ×
+/// operation across a list of world sizes with in-process SPMD PIDs
+/// and emit/print a `bench_collective_v1` document.
+fn cmd_bench_collective(args: &Args) -> i32 {
+    let np_list: Vec<usize> = args
+        .flag_str("np-list", "2,4,8")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim().parse::<usize>())
+        .collect::<Result<_, _>>()
+        .unwrap_or_default();
+    if np_list.is_empty() || np_list.contains(&0) {
+        eprintln!("bench-collective: --np-list must be comma-separated positive integers");
+        return 2;
+    }
+    let kinds: Vec<CollKind> = {
+        let spec = args.flag_str("coll", "star,tree,ring,hier");
+        let mut out = Vec::new();
+        for s in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            match CollKind::parse(s) {
+                Some(k) => out.push(k),
+                None => {
+                    eprintln!("unknown coll '{s}' (expected {})", CollKind::choices());
+                    return 2;
+                }
+            }
+        }
+        out
+    };
+    if kinds.is_empty() {
+        eprintln!("bench-collective: --coll selected no algorithms");
+        return 2;
+    }
+    let nppn = args.flag_usize("nppn", 2);
+    let bytes = args.flag_usize("bytes", 64 << 10);
+    let iters = args.flag_usize("iters", 20);
+    if bytes == 0 || iters == 0 {
+        eprintln!("bench-collective: --bytes and --iters must be >= 1");
+        return 2;
+    }
+    let mut records = Vec::new();
+    for &np in &np_list {
+        records.extend(bench_json::run_collective(np, nppn, &kinds, bytes, iters));
+    }
+    println!(
+        "bench-collective: np-list={np_list:?} nppn={nppn} bytes={bytes} iters={iters}"
+    );
+    println!(
+        "{:<6} {:<10} {:>4} {:>6} {:>10} {:>12} {:>12}",
+        "coll", "op", "np", "nodes", "msgs/op", "bytes/op", "avg µs"
+    );
+    for r in &records {
+        println!(
+            "{:<6} {:<10} {:>4} {:>6} {:>10.1} {:>12.0} {:>12.1}",
+            r.coll.name(),
+            r.op,
+            r.np,
+            r.nodes,
+            r.msgs_per_op(),
+            r.bytes_moved as f64 / r.iters as f64,
+            r.avg_latency_us()
+        );
+    }
+    if let Some(path) = args.flag("bench-json") {
+        match bench_json::write_collective_file(path, &records) {
+            Ok(()) => println!("bench json written to {path}"),
+            Err(e) => {
+                eprintln!("bench-json {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
 /// `repro worker` — internal entry for spawned workers.
 fn cmd_worker() -> i32 {
     let Some(env) = WorkerEnv::from_env() else {
         eprintln!("worker: missing DISTARRAY_* environment");
         return 1;
     };
+    // Install the launch's collective algorithm as this process's
+    // default (inherited from the leader's environment) so
+    // ambient-routed collectives agree across the whole world. The
+    // explicit coordinator paths carry the algorithm in the config;
+    // this covers any library collective the run itself performs.
+    if let Some(kind) = std::env::var("DISTARRAY_COLL").ok().as_deref().and_then(CollKind::parse) {
+        let nppn = std::env::var("DISTARRAY_NPPN").ok().and_then(|s| s.parse().ok()).unwrap_or(0);
+        distarray::collective::set_ambient(kind, nppn);
+    }
     let t = match FileTransport::new(&env.spool, env.pid, env.np) {
         Ok(t) => t,
         Err(e) => {

@@ -1,16 +1,20 @@
-//! `BENCH_stream.json` / `BENCH_remap.json` — the machine-readable
-//! perf trajectory.
+//! `BENCH_stream.json` / `BENCH_remap.json` / `BENCH_collective.json`
+//! — the machine-readable perf trajectory.
 //!
 //! `repro run --bench-json <path>` emits one `bench_stream_v1`
 //! document per run with per-op bandwidths (bytes/s and GB/s),
 //! element throughput, and the full axis coordinates (dtype, backend,
 //! engine, Nt, Np); `repro bench-remap --bench-json <path>` emits a
 //! `bench_remap_v1` document (bytes moved, message counts, GB/s per
-//! remap) for the coalesced data-movement hot path — so successive
-//! PRs can diff bandwidth numbers mechanically instead of scraping
-//! stdout.
+//! remap) for the coalesced data-movement hot path; `repro
+//! bench-collective --bench-json <path>` emits a
+//! `bench_collective_v1` document (per-algorithm × per-operation
+//! latency, bytes, and message counts vs P) so the scaling behavior
+//! of the collective subsystem is measured, not asserted — successive
+//! PRs can diff the numbers mechanically instead of scraping stdout.
 
-use crate::comm::{ChannelHub, Transport};
+use crate::collective::{CollKind, Collective, ReduceOp, TagSpace, Topology};
+use crate::comm::{tags, ChannelHub, Transport};
 use crate::coordinator::RunConfig;
 use crate::darray::{DarrayT, RemapEngine};
 use crate::dmap::Dmap;
@@ -19,13 +23,16 @@ use crate::json::Json;
 use crate::stream::AggregateResult;
 use std::collections::BTreeMap;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Schema tag, bumped on any field change.
 pub const SCHEMA: &str = "bench_stream_v1";
 
 /// Schema tag of the remap benchmark document.
 pub const REMAP_SCHEMA: &str = "bench_remap_v1";
+
+/// Schema tag of the collective benchmark document.
+pub const COLL_SCHEMA: &str = "bench_collective_v1";
 
 /// The four op names, in the order of [`AggregateResult::bw`].
 pub const OP_NAMES: [&str; 4] = ["copy", "scale", "add", "triad"];
@@ -186,6 +193,176 @@ fn run_remap_t<T: Element>(np: usize, n_global: usize, iters: usize) -> RemapBen
     }
 }
 
+/// The measured collective operations, in run order.
+pub const COLL_OPS: [&str; 5] = ["bcast", "allreduce", "gather", "allgather", "barrier"];
+
+/// One measured collective data point: `(algorithm, operation, P)` →
+/// latency, messages, wire bytes.
+#[derive(Debug, Clone)]
+pub struct CollBench {
+    pub coll: CollKind,
+    pub op: &'static str,
+    pub np: usize,
+    /// Node-group count of the topology the run used.
+    pub nodes: usize,
+    /// Broadcast payload size; gathers contribute `payload/np` per PID.
+    pub payload_bytes: usize,
+    pub iters: usize,
+    /// Total messages sent (all PIDs, timed iterations only).
+    pub messages: u64,
+    /// Total wire bytes sent (framing + payload).
+    pub bytes_moved: u64,
+    /// Wall time of the timed iterations (max across PIDs).
+    pub seconds: f64,
+}
+
+impl CollBench {
+    /// Mean wall time of one collective call, in microseconds.
+    pub fn avg_latency_us(&self) -> f64 {
+        if self.iters > 0 {
+            self.seconds / self.iters as f64 * 1e6
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean messages per collective call.
+    pub fn msgs_per_op(&self) -> f64 {
+        if self.iters > 0 {
+            self.messages as f64 / self.iters as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run one collective call so benchmarks and smoke tests share the
+/// exact call shapes.
+fn coll_once(
+    coll: &Collective,
+    t: &dyn Transport,
+    op: &str,
+    epoch: u64,
+    payload_bytes: usize,
+    timeout: Duration,
+) {
+    let space = TagSpace::packed(tags::NS_COLL, epoch);
+    let part_len = (payload_bytes / t.np()).max(1);
+    match op {
+        "bcast" => {
+            let payload = if t.pid() == 0 { vec![7u8; payload_bytes] } else { Vec::new() };
+            coll.bcast(t, space, payload).unwrap();
+        }
+        "allreduce" => {
+            coll.allreduce_scalar(t, space, t.pid() as f64 + 0.5, ReduceOp::Sum).unwrap();
+        }
+        "gather" => {
+            coll.gather(t, space, vec![t.pid() as u8; part_len]).unwrap();
+        }
+        "allgather" => {
+            coll.allgather(t, space, vec![t.pid() as u8; part_len]).unwrap();
+        }
+        "barrier" => coll.barrier(t, space, timeout).unwrap(),
+        other => unreachable!("unknown collective op {other}"),
+    }
+}
+
+/// Measure every op of every requested algorithm at world size `np`
+/// over the in-process transport (one warm-up + `iters` timed calls
+/// per op; messages and bytes from [`crate::comm::CommStats`]
+/// deltas).
+pub fn run_collective(
+    np: usize,
+    nppn: usize,
+    kinds: &[CollKind],
+    payload_bytes: usize,
+    iters: usize,
+) -> Vec<CollBench> {
+    assert!(np >= 1 && iters >= 1);
+    let mut out = Vec::new();
+    for &kind in kinds {
+        let coll = Arc::new(Collective::new(kind, Topology::grouped(np, nppn)));
+        let world = ChannelHub::world(np);
+        let mut hs = Vec::new();
+        for t in world {
+            let coll = coll.clone();
+            hs.push(std::thread::spawn(move || {
+                let timeout = Duration::from_secs(60);
+                let mut epoch = 0u64;
+                let mut per_op = Vec::with_capacity(COLL_OPS.len());
+                for op in COLL_OPS {
+                    coll_once(&coll, &t, op, epoch, payload_bytes, timeout);
+                    epoch += 1;
+                    let (m0, b0, _, _) = t.stats().snapshot();
+                    let start = Instant::now();
+                    for _ in 0..iters {
+                        coll_once(&coll, &t, op, epoch, payload_bytes, timeout);
+                        epoch += 1;
+                    }
+                    let secs = start.elapsed().as_secs_f64();
+                    let (m1, b1, _, _) = t.stats().snapshot();
+                    per_op.push((secs, m1 - m0, b1 - b0));
+                }
+                per_op
+            }));
+        }
+        let mut totals = vec![(0.0f64, 0u64, 0u64); COLL_OPS.len()];
+        for h in hs {
+            for (i, (s, m, b)) in h.join().unwrap().into_iter().enumerate() {
+                totals[i].0 = totals[i].0.max(s);
+                totals[i].1 += m;
+                totals[i].2 += b;
+            }
+        }
+        for (i, op) in COLL_OPS.into_iter().enumerate() {
+            out.push(CollBench {
+                coll: coll.kind(),
+                op,
+                np,
+                nodes: coll.topology().node_count(),
+                payload_bytes,
+                iters,
+                messages: totals[i].1,
+                bytes_moved: totals[i].2,
+                seconds: totals[i].0,
+            });
+        }
+    }
+    out
+}
+
+/// Build the `bench_collective_v1` document from a set of runs
+/// (typically one [`run_collective`] call per P).
+pub fn collective_to_json(records: &[CollBench]) -> Json {
+    let runs = records
+        .iter()
+        .map(|b| {
+            let mut m = BTreeMap::new();
+            m.insert("coll".to_string(), Json::Str(b.coll.name().to_string()));
+            m.insert("op".to_string(), Json::Str(b.op.to_string()));
+            m.insert("np".to_string(), Json::Num(b.np as f64));
+            m.insert("nodes".to_string(), Json::Num(b.nodes as f64));
+            m.insert("payload_bytes".to_string(), Json::Num(b.payload_bytes as f64));
+            m.insert("iters".to_string(), Json::Num(b.iters as f64));
+            m.insert("messages".to_string(), Json::Num(b.messages as f64));
+            m.insert("msgs_per_op".to_string(), Json::Num(b.msgs_per_op()));
+            m.insert("bytes_moved".to_string(), Json::Num(b.bytes_moved as f64));
+            m.insert("seconds".to_string(), Json::Num(b.seconds));
+            m.insert("avg_latency_us".to_string(), Json::Num(b.avg_latency_us()));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str(COLL_SCHEMA.to_string()));
+    top.insert("runs".to_string(), Json::Arr(runs));
+    Json::Obj(top)
+}
+
+/// Emit the collective document to `path` (newline-terminated).
+pub fn write_collective_file(path: &str, records: &[CollBench]) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", collective_to_json(records)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,6 +380,8 @@ mod tests {
             dtype: Dtype::F32,
             backend: BackendKind::Threaded,
             threads: 4,
+            coll: crate::collective::CollKind::Star,
+            nppn: 0,
             artifacts: "artifacts".into(),
         };
         let agg = AggregateResult {
@@ -267,6 +446,47 @@ mod tests {
         assert_eq!(parsed.get("dtype").unwrap().as_str(), Some("f32"));
         assert_eq!(parsed.get("messages_per_remap").unwrap().as_usize(), Some(6));
         assert!(parsed.get("gb_per_sec").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn collective_bench_runs_and_documents() {
+        let recs = run_collective(3, 2, &[CollKind::Star, CollKind::Tree], 256, 2);
+        assert_eq!(recs.len(), 2 * COLL_OPS.len());
+        // Message models at P=3: star bcast sends P−1 per call; the
+        // binomial tree also sends P−1 (fewer serial hops, not fewer
+        // messages); a star allreduce is a gather + a bcast.
+        let find = |k: CollKind, op: &str| {
+            recs.iter().find(|r| r.coll == k && r.op == op).expect("record present")
+        };
+        assert_eq!(find(CollKind::Star, "bcast").msgs_per_op(), 2.0);
+        assert_eq!(find(CollKind::Tree, "bcast").msgs_per_op(), 2.0);
+        assert_eq!(find(CollKind::Star, "allreduce").msgs_per_op(), 4.0);
+        for r in &recs {
+            assert!(r.seconds >= 0.0 && r.messages > 0, "{}/{}", r.coll, r.op);
+            assert_eq!(r.np, 3);
+            assert_eq!(r.nodes, 2);
+        }
+        let doc = collective_to_json(&recs);
+        let parsed = Json::parse(&doc.to_string()).expect("emitted json parses");
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some(COLL_SCHEMA));
+        let runs = parsed.get("runs").unwrap().items().expect("runs is an array");
+        assert_eq!(runs.len(), recs.len());
+        assert_eq!(runs[0].get("coll").unwrap().as_str(), Some("star"));
+        assert_eq!(runs[0].get("op").unwrap().as_str(), Some("bcast"));
+        assert!(runs[0].get("avg_latency_us").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn write_collective_file_emits_parseable_json() {
+        let recs = run_collective(2, 0, &[CollKind::Hier], 64, 1);
+        let path = std::env::temp_dir()
+            .join(format!("bench_collective_test_{}.json", std::process::id()));
+        let path_s = path.to_str().unwrap();
+        write_collective_file(path_s, &recs).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        assert!(Json::parse(text.trim()).is_ok());
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

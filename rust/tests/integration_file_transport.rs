@@ -41,6 +41,8 @@ fn coordinator_over_file_transport() {
         dtype: distarray::element::Dtype::F64,
         backend: distarray::backend::BackendKind::Host,
         threads: 1,
+        coll: distarray::collective::CollKind::Star,
+        nppn: 0,
         artifacts: "artifacts".into(),
     };
     let (agg, _) = run_leader(&leader, &cfg).unwrap();

@@ -143,6 +143,8 @@ fn coordinator_all_map_kinds() {
             dtype: distarray::element::Dtype::F64,
             backend: distarray::backend::BackendKind::Host,
             threads: 1,
+            coll: distarray::collective::CollKind::Star,
+            nppn: 0,
             artifacts: "artifacts".into(),
         };
         let (agg, results) = run_leader(&leader, &cfg).unwrap();
