@@ -116,6 +116,7 @@ fn coordinated(np: usize, n: usize, nt: usize, map: MapKind) -> distarray::strea
         threads: 1,
         coll: distarray::collective::CollKind::Star,
         nppn: 0,
+        chunk_bytes: 0,
         artifacts: "artifacts".into(),
     };
     let mut world = ChannelHub::world(np);

@@ -27,7 +27,8 @@
 use super::{
     check_len, expect_t, expect_t_mut, for_dtype, memcpy_erased, Backend, BackendKind, Result,
 };
-use crate::comm::{BufferPool, Transport, WireWriter};
+use crate::comm::datapath::{self, ChunkStream, ChunkTag};
+use crate::comm::{Transport, WireWriter};
 use crate::darray::engine::{
     check_group_payload, recv_groups, remap_tag, send_group_typed, unpack_group_typed,
     write_group_header, PeerGroup,
@@ -331,7 +332,7 @@ impl ChunkedThreadedBackend {
         g: &PeerGroup,
         src: &[T],
         t: &dyn Transport,
-        tag: crate::comm::Tag,
+        tag: ChunkTag,
     ) -> crate::comm::Result<()> {
         assert!(
             g.local_extent <= src.len(),
@@ -339,8 +340,7 @@ impl ChunkedThreadedBackend {
             g.local_extent,
             src.len()
         );
-        let pool = BufferPool::global();
-        let mut header = pool.checkout(g.header_bytes());
+        let mut header = datapath::checkout(g.header_bytes());
         let mut w = WireWriter::from_vec(header.take());
         write_group_header(&mut w, g);
         header.restore(w.finish());
@@ -349,7 +349,7 @@ impl ChunkedThreadedBackend {
         // written in place by the gang (no zero-fill pass — the
         // group's prefix sums tile the byte range exactly).
         let nbytes = g.total * T::WIDTH;
-        let mut payload = pool.checkout(9 + nbytes);
+        let mut payload = datapath::checkout(9 + nbytes);
         let mut pw = WireWriter::from_vec(payload.take());
         pw.put_u64(g.total as u64);
         pw.put_u8(T::DTYPE.code());
@@ -363,7 +363,14 @@ impl ChunkedThreadedBackend {
         payload.restore(buf);
         let pay_addr = payload.as_mut_ptr() as usize + prefix;
         self.run_payload_copy::<T>(g, src.as_ptr() as usize, pay_addr, CopyDir::Pack);
-        t.send_parts(g.peer, tag, &[header.as_slice(), payload.as_slice()])
+        ChunkStream::send(
+            t,
+            g.peer,
+            tag,
+            datapath::ambient_chunk_bytes(),
+            &[header.as_slice(), payload.as_slice()],
+        )?;
+        Ok(())
     }
 
     /// Scatter one received coalesced message into `dst` with the

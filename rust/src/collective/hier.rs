@@ -19,6 +19,7 @@
 
 use super::{bundle, star, tree, TagSpace, PH_BCAST, PH_DOWN, PH_GATHER, PH_UP};
 use super::Topology;
+use crate::comm::datapath;
 use crate::comm::{Result, Transport};
 use crate::dmap::Pid;
 use std::time::Duration;
@@ -130,6 +131,7 @@ pub(crate) fn gather(
         v.my_node,
         space,
         LV_INTER,
+        datapath::ambient_chunk_bytes(),
         node_bundle,
     )?
     else {

@@ -12,9 +12,15 @@
 //! |--------|----------------------|----------------------|----------------------|
 //! | `star` | root → each (legacy) | each → root (legacy) | report/release       |
 //! | `tree` | binomial, log depth  | binomial, P−1 msgs   | binomial up/down     |
-//! | `ring` | chunked pipeline     | chain, pipelined     | dissemination        |
+//! | `ring` | chunked pipeline     | direct, chunked      | dissemination        |
 //! | `hier` | star-in-node + tree-across-leaders (two-level)              |||
 //! | `auto` | picks per topology: star at tiny P, hier when nodes > 1, else tree |||
+//!
+//! Every bulk data path — the ring pipelines, the tree/hier bundle
+//! forwarding, and the elimination allreduce — rides the shared
+//! [`ChunkStream`](crate::comm::ChunkStream) datapath: pooled frame
+//! buffers, the 16-bit chunk cap enforced once, and zero
+//! re-serialization on forwarding hops.
 //!
 //! All operations run over the existing [`Transport`] trait, are
 //! dtype-generic over [`Element`], and tag their messages in the
@@ -28,7 +34,11 @@
 //! The cost is O(P·n) payload at the root instead of O(n) per link,
 //! which is the right trade for the scalar/control-plane reductions
 //! these calls serve (`sum(A)`, result aggregation); bulk data moves
-//! through the remap engine, not through reductions.
+//! through the remap engine, not through reductions. Long-vector
+//! allreduces that can waive exact fold order opt in to the
+//! elimination schedule with [`AllreduceOrder::Fast`] (see
+//! [`Collective::allreduce_ordered`]): `(P−1)/P·2n` bytes per rank,
+//! elected by `auto` contexts above [`ELIM_THRESHOLD_BYTES`].
 //!
 //! The subsystem is selected end-to-end by `repro run --coll
 //! {star,tree,ring,hier,auto}` (threaded through
@@ -45,6 +55,7 @@ mod tree;
 
 pub use topology::Topology;
 
+use crate::comm::datapath::{self, ChunkStream, ChunkTag};
 use crate::comm::{tags, CommError, Result, Tag, Transport};
 use crate::dmap::Pid;
 use crate::element::Element;
@@ -52,13 +63,18 @@ use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 /// Phase ids for the packed step field (bits 16..20): keeps the
-/// gather and broadcast halves of one collective call, and the up and
-/// down halves of a barrier, in disjoint tag streams.
+/// gather and broadcast halves of one collective call, the up and
+/// down halves of a barrier, and the two phases of the elimination
+/// allreduce in disjoint tag streams.
 pub(crate) const PH_GATHER: u64 = 0;
 pub(crate) const PH_BCAST: u64 = 1;
 pub(crate) const PH_UP: u64 = 2;
 pub(crate) const PH_DOWN: u64 = 3;
 pub(crate) const PH_DISSEM: u64 = 4;
+/// Reduce-scatter phase of the elimination allreduce.
+pub(crate) const PH_RS: u64 = 5;
+/// Allgather phase of the elimination allreduce.
+pub(crate) const PH_AG: u64 = 6;
 
 /// `ceil(log2(p))` — the round count of every logarithmic schedule.
 pub(crate) fn log2_rounds(p: usize) -> u32 {
@@ -185,6 +201,14 @@ impl TagSpace {
         debug_assert!(level < 16 && phase < 16 && round < (1 << 16));
         tags::pack(self.ns, self.epoch, (level << 20) | (phase << 16) | round)
     }
+
+    /// The [`ChunkTag`] of one `(level, phase)` lane — the datapath
+    /// stream coordinates of a chunked collective data path (the
+    /// 16-bit round field carries the chunk index).
+    pub(crate) fn chunk_tag(&self, level: u64, phase: u64) -> ChunkTag {
+        debug_assert!(level < 16 && phase < 16);
+        ChunkTag::with_lane(self.ns, self.epoch, (level << 20) | (phase << 16))
+    }
 }
 
 /// A binary reduction operator, dtype-generic over the sealed
@@ -220,9 +244,10 @@ impl ReduceOp {
     }
 }
 
-/// Framed rank-keyed byte bundles — the wire currency of the tree,
-/// ring, and hierarchical gathers: `[n] n × ([rank][len][bytes])`.
+/// Framed rank-keyed byte bundles — the wire currency of the tree
+/// and hierarchical gathers: `[n] n × ([rank][len][bytes])`.
 pub(crate) mod bundle {
+    use crate::comm::datapath::{self, ChunkStream, ChunkTag};
     use crate::comm::{CommError, Result, WireReader, WireWriter};
 
     pub(crate) fn write<B: AsRef<[u8]>>(entries: &[(u64, B)]) -> Vec<u8> {
@@ -268,18 +293,128 @@ pub(crate) mod bundle {
         }
         Ok(acc.into_iter().map(|(_, b)| b).collect())
     }
+
+    /// An accumulating bundle that **never re-serializes**: the local
+    /// part stays structured (its `[rank][len]` prefix is written
+    /// into the pooled stream frame at send time), and absorbed child
+    /// bundles are retained as raw payloads. Forwarding up a tree
+    /// sends `[count][own prefix] + part + payloads` as a slice list
+    /// through the shared datapath — every payload byte is encoded at
+    /// its origin and then only windowed by [`ChunkStream::send`],
+    /// which is what kills the old per-hop `write(&acc)` rebuild
+    /// (O(subtree) bytes re-encoded at every level). The wire layout
+    /// is byte-identical to [`write`]'s.
+    pub(crate) struct Acc {
+        count: u64,
+        own_rank: u64,
+        own_part: Vec<u8>,
+        /// Raw absorbed child bundles (`[n] entries…`, as received).
+        absorbed: Vec<Vec<u8>>,
+    }
+
+    impl Acc {
+        /// Start a bundle holding this rank's own part.
+        pub(crate) fn new(rank: u64, part: Vec<u8>) -> Acc {
+            Acc { count: 1, own_rank: rank, own_part: part, absorbed: Vec::new() }
+        }
+
+        /// Absorb a received bundle payload (raw `[n] entries…`
+        /// bytes) without parsing or copying its entries.
+        pub(crate) fn absorb(&mut self, payload: Vec<u8>) -> Result<()> {
+            if payload.len() < 8 {
+                return Err(CommError::Malformed(format!(
+                    "bundle payload is {} bytes, needs an 8-byte count",
+                    payload.len()
+                )));
+            }
+            let n = u64::from_le_bytes(payload[..8].try_into().unwrap());
+            self.count += n;
+            self.absorbed.push(payload);
+            Ok(())
+        }
+
+        /// Stream this bundle to `to` — the forwarding hop of a
+        /// tree/hierarchical gather. The 24-byte
+        /// `[count][rank][len]` head is the only bytes written here;
+        /// the part and every absorbed bundle ride as windows.
+        pub(crate) fn send(
+            &self,
+            t: &dyn crate::comm::Transport,
+            to: crate::dmap::Pid,
+            tag: ChunkTag,
+            chunk_bytes: usize,
+        ) -> Result<()> {
+            let mut head = datapath::checkout(24);
+            let mut w = WireWriter::from_vec(head.take());
+            w.put_u64(self.count);
+            w.put_u64(self.own_rank);
+            w.put_u64(self.own_part.len() as u64);
+            head.restore(w.finish());
+            let mut parts: Vec<&[u8]> = Vec::with_capacity(2 + self.absorbed.len());
+            parts.push(head.as_slice());
+            parts.push(&self.own_part);
+            for payload in &self.absorbed {
+                parts.push(&payload[8..]);
+            }
+            ChunkStream::send(t, to, tag, chunk_bytes, &parts)?;
+            Ok(())
+        }
+
+        /// Root side: collect the accumulated entries and return the
+        /// parts in rank order. The own part moves without a copy and
+        /// each absorbed bundle is parsed in place — no flattening
+        /// pass, one copy per received entry.
+        pub(crate) fn into_rank_order(self, p: usize) -> Result<Vec<Vec<u8>>> {
+            let mut entries = Vec::with_capacity(self.count as usize);
+            entries.push((self.own_rank, self.own_part));
+            for payload in &self.absorbed {
+                read(payload, &mut entries)?;
+            }
+            into_rank_order(entries, p)
+        }
+    }
 }
 
-/// Default pipeline chunk for the ring broadcast.
-pub const DEFAULT_CHUNK_BYTES: usize = 64 << 10;
+/// Default pipeline chunk for the chunked data paths (the shared
+/// datapath default; override per run with `--chunk-bytes`).
+pub const DEFAULT_CHUNK_BYTES: usize = datapath::DEFAULT_CHUNK_BYTES;
+
+/// Vector-allreduce size (n · width · P bytes) above which
+/// [`CollKind::Auto`] elects the elimination (reduce-scatter +
+/// allgather) schedule — when the caller has waived exact fold order
+/// with [`AllreduceOrder::Fast`]. Below it the order-preserving
+/// gather-fold wins on latency.
+pub const ELIM_THRESHOLD_BYTES: usize = 4 << 20;
+
+/// Whether an allreduce must reproduce the star reference bit-for-bit
+/// or may trade fold order for bandwidth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AllreduceOrder {
+    /// Contributions fold in PID order — bit-identical to the star
+    /// reference for every dtype, including f32/f64 sums. The
+    /// default.
+    #[default]
+    Deterministic,
+    /// The caller waives exact fold order: [`CollKind::Auto`] may
+    /// elect the elimination (reduce-scatter + allgather) schedule
+    /// for long vectors, whose `(P−1)/P·2n` bytes per rank replace
+    /// the gather-fold's O(P·n) at the root. Exact for wrapping
+    /// integer sums and all min/max; f32/f64 sums differ from star
+    /// only by association order (numerical tolerance).
+    Fast,
+}
 
 /// A configured collective context: a resolved algorithm family plus
 /// the launch [`Topology`]. Cheap to construct; hold one per run.
 #[derive(Debug, Clone)]
 pub struct Collective {
     kind: CollKind,
+    /// The request was [`CollKind::Auto`] — the context may elect the
+    /// elimination allreduce when the caller waives fold order.
+    auto: bool,
     topo: Topology,
     chunk_bytes: usize,
+    elim_threshold: usize,
 }
 
 impl Collective {
@@ -287,6 +422,7 @@ impl Collective {
     /// topology: tiny worlds stay star (lowest constant), multi-node
     /// topologies go hierarchical, flat big worlds go tree.
     pub fn new(kind: CollKind, topo: Topology) -> Collective {
+        let auto = kind == CollKind::Auto;
         let kind = match kind {
             CollKind::Auto => {
                 let np = topo.np();
@@ -300,7 +436,13 @@ impl Collective {
             }
             k => k,
         };
-        Collective { kind, topo, chunk_bytes: DEFAULT_CHUNK_BYTES }
+        Collective {
+            kind,
+            auto,
+            topo,
+            chunk_bytes: datapath::ambient_chunk_bytes(),
+            elim_threshold: ELIM_THRESHOLD_BYTES,
+        }
     }
 
     /// The star reference over a flat world — the control-plane
@@ -309,10 +451,19 @@ impl Collective {
         Collective::new(CollKind::Star, Topology::flat(np))
     }
 
-    /// Override the ring pipeline chunk size (tests force multi-chunk
-    /// pipelines with tiny payloads).
+    /// Override the pipeline chunk size of this context's ring data
+    /// paths (tests force multi-chunk pipelines with tiny payloads;
+    /// bundle and remap streams follow the process-wide
+    /// `--chunk-bytes` instead).
     pub fn with_chunk_bytes(mut self, chunk_bytes: usize) -> Collective {
         self.chunk_bytes = chunk_bytes.max(1);
+        self
+    }
+
+    /// Override the elimination-allreduce threshold (tests force the
+    /// reduce-scatter schedule with tiny vectors).
+    pub fn with_elim_threshold(mut self, bytes: usize) -> Collective {
+        self.elim_threshold = bytes;
         self
     }
 
@@ -389,8 +540,10 @@ impl Collective {
         let me = Self::member_index(group, t.pid())?;
         match self.kind {
             CollKind::Star => star::gather(t, group, me, space.star(), part),
-            CollKind::Tree => tree::gather(t, group, me, &space, 0, part),
-            CollKind::Ring => ring::gather(t, group, me, &space, 0, part),
+            CollKind::Tree => {
+                tree::gather(t, group, me, &space, 0, datapath::ambient_chunk_bytes(), part)
+            }
+            CollKind::Ring => ring::gather(t, group, me, &space, 0, self.chunk_bytes, part),
             CollKind::Hier => hier::gather(t, &self.topo, group, t.pid(), &space, part),
             CollKind::Auto => unreachable!("resolved at construction"),
         }
@@ -539,6 +692,152 @@ impl Collective {
         Ok(self.allreduce(t, space, &[local], op)?[0])
     }
 
+    /// Allreduce with an explicit order contract: under
+    /// [`AllreduceOrder::Deterministic`] this is exactly
+    /// [`Collective::allreduce`]; under [`AllreduceOrder::Fast`] a
+    /// context built from [`CollKind::Auto`] elects the elimination
+    /// (reduce-scatter + allgather) schedule once
+    /// `n · width · P` crosses the threshold — the ROADMAP's
+    /// long-vector mode, `(P−1)/P·2n` bytes per rank instead of
+    /// O(P·n) at the root.
+    pub fn allreduce_ordered<T: Element>(
+        &self,
+        t: &dyn Transport,
+        space: TagSpace,
+        local: &[T],
+        op: ReduceOp,
+        order: AllreduceOrder,
+    ) -> Result<Vec<T>> {
+        let group = Self::world(t);
+        if self.elects_elimination::<T>(local.len(), group.len(), order) {
+            self.allreduce_elim_group(t, space, &group, local, op)
+        } else {
+            self.allreduce_group(t, space, &group, local, op)
+        }
+    }
+
+    /// Does this context route an `n`-element, `p`-rank allreduce
+    /// through the elimination schedule? Only when the request was
+    /// `auto`, the caller waived exact order, every rank gets a
+    /// non-empty segment, and the aggregate size clears the
+    /// threshold.
+    fn elects_elimination<T: Element>(&self, n: usize, p: usize, order: AllreduceOrder) -> bool {
+        self.auto
+            && order == AllreduceOrder::Fast
+            && p > 1
+            && n >= p
+            && n.saturating_mul(T::WIDTH).saturating_mul(p) >= self.elim_threshold
+    }
+
+    /// The elimination allreduce: a ring **reduce-scatter** (after
+    /// step `s`, rank `i` has combined the incoming partial of
+    /// segment `(i − s − 1) mod P` into its copy; after `P−1` steps
+    /// rank `i` owns the fully reduced segment `(i + 1) mod P`)
+    /// followed by a ring **allgather** of the reduced segments.
+    /// Every rank moves `2·(P−1)/P·n` elements instead of the
+    /// gather-fold's O(P·n) at the root; segments travel as pooled
+    /// [`ChunkStream`]s. Fold order follows the ring, so wrapping
+    /// integer sums and min/max are exact while float sums carry
+    /// reassociation error — which is why this path requires the
+    /// [`AllreduceOrder::Fast`] waiver (it is public so benches and
+    /// tests can target the schedule directly).
+    pub fn allreduce_elim_group<T: Element>(
+        &self,
+        t: &dyn Transport,
+        space: TagSpace,
+        group: &[Pid],
+        local: &[T],
+        op: ReduceOp,
+    ) -> Result<Vec<T>> {
+        let p = group.len();
+        let n = local.len();
+        if p <= 1 {
+            return Ok(local.to_vec());
+        }
+        if n < p {
+            // Degenerate segments: the ordered path handles it.
+            return self.allreduce_group(t, space, group, local, op);
+        }
+        let me = Self::member_index(group, t.pid())?;
+        let next = group[(me + 1) % p];
+        let prev = group[(me + p - 1) % p];
+        let seg = |k: usize| (k * n / p, (k + 1) * n / p);
+        let mut acc = local.to_vec();
+        let mut incoming: Vec<T> = Vec::new();
+        let rs_tag = space.chunk_tag(0, PH_RS);
+        let ag_tag = space.chunk_tag(0, PH_AG);
+        // Phase 1 — reduce-scatter. All sends to `next` share one tag
+        // lane: the transport's per-(src, dst, tag) FIFO sequences the
+        // steps. The incoming scratch is unavoidable here (the
+        // received partial must be *combined* with the local copy,
+        // not written over it).
+        for s in 0..p - 1 {
+            let (slo, shi) = seg((me + p - s) % p);
+            Self::send_segment(t, next, rs_tag, self.chunk_bytes, &acc[slo..shi])?;
+            let (rlo, rhi) = seg((me + p - s - 1) % p);
+            incoming.resize(rhi - rlo, T::ZERO);
+            Self::recv_segment_into(t, prev, rs_tag, &mut incoming)?;
+            for (a, b) in acc[rlo..rhi].iter_mut().zip(&incoming) {
+                *a = op.combine(*b, *a);
+            }
+        }
+        // Phase 2 — allgather: forward the segment received last
+        // step, starting from the fully reduced one this rank owns;
+        // received segments decode straight into their final slot.
+        for s in 0..p - 1 {
+            let (slo, shi) = seg((me + 1 + p - s) % p);
+            Self::send_segment(t, next, ag_tag, self.chunk_bytes, &acc[slo..shi])?;
+            let (rlo, rhi) = seg((me + p - s) % p);
+            Self::recv_segment_into(t, prev, ag_tag, &mut acc[rlo..rhi])?;
+        }
+        Ok(acc)
+    }
+
+    /// Stream one typed segment: on little-endian targets the
+    /// segment's in-memory bytes are windowed straight onto the wire
+    /// (no staging copy at all — [`Element::as_le_bytes`]); the
+    /// big-endian fallback encodes into a pooled buffer.
+    fn send_segment<T: Element>(
+        t: &dyn Transport,
+        to: Pid,
+        tag: ChunkTag,
+        chunk_bytes: usize,
+        seg: &[T],
+    ) -> Result<()> {
+        if let Some(bytes) = T::as_le_bytes(seg) {
+            ChunkStream::send(t, to, tag, chunk_bytes, &[bytes])?;
+            return Ok(());
+        }
+        let mut buf = datapath::checkout(seg.len() * T::WIDTH);
+        let mut bytes = buf.take();
+        T::copy_to_le(seg, &mut bytes);
+        buf.restore(bytes);
+        ChunkStream::send(t, to, tag, chunk_bytes, &[buf.as_slice()])?;
+        Ok(())
+    }
+
+    /// Receive one typed segment of exactly `dst.len()` elements,
+    /// decoding straight into `dst` (one bulk memcpy on LE targets).
+    fn recv_segment_into<T: Element>(
+        t: &dyn Transport,
+        from: Pid,
+        tag: ChunkTag,
+        dst: &mut [T],
+    ) -> Result<()> {
+        let bytes = ChunkStream::recv(t, from, tag)?;
+        if bytes.len() != dst.len() * T::WIDTH {
+            return Err(CommError::Malformed(format!(
+                "elimination segment is {} bytes, expected {} ({} × {})",
+                bytes.len(),
+                dst.len() * T::WIDTH,
+                dst.len(),
+                T::WIDTH
+            )));
+        }
+        T::copy_from_le(&bytes, dst);
+        Ok(())
+    }
+
     /// Barrier over the whole world.
     pub fn barrier(&self, t: &dyn Transport, space: TagSpace, timeout: Duration) -> Result<()> {
         self.barrier_group(t, space, &Self::world(t), timeout)
@@ -585,15 +884,17 @@ pub fn ambient_spec() -> (CollKind, usize) {
 /// Memoized ambient context: rebuilding a `Topology` (node lists +
 /// pid index) per collective call would put O(np) allocations on
 /// every iterated reduction; the context is immutable per
-/// `(kind, per_node, np)`, so cache the last one.
+/// `(kind, per_node, np, chunk_bytes)` — the datapath chunk size is
+/// part of the key so a context cached before `--chunk-bytes` was
+/// installed is not served stale — so cache the last one.
 #[allow(clippy::type_complexity)]
-static AMBIENT_CACHE: Mutex<Option<((CollKind, usize, usize), Arc<Collective>)>> =
+static AMBIENT_CACHE: Mutex<Option<((CollKind, usize, usize, usize), Arc<Collective>)>> =
     Mutex::new(None);
 
 /// A [`Collective`] for an `np`-wide world under the process default.
 pub fn ambient(np: usize) -> Arc<Collective> {
     let (kind, per_node) = ambient_spec();
-    let key = (kind, per_node, np);
+    let key = (kind, per_node, np, datapath::ambient_chunk_bytes());
     let mut cache = AMBIENT_CACHE.lock().unwrap();
     if let Some((k, c)) = cache.as_ref() {
         if *k == key {

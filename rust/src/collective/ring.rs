@@ -1,40 +1,33 @@
 //! Ring collectives — chunked pipelining for bandwidth, plus the
-//! dissemination barrier.
+//! dissemination barrier. Every data-bearing path rides the shared
+//! [`ChunkStream`] datapath (pooled frame buffers, the 16-bit chunk
+//! cap enforced once, arrival-order drains).
 //!
 //! * broadcast — the payload is cut into chunks that flow down the
 //!   chain `0 → 1 → … → P−1`; rank `i` forwards chunk `c` the moment
-//!   it lands, so all links stream concurrently once the pipe fills.
-//!   `(P−1) × chunks` messages; per-rank bandwidth approaches the
-//!   link bandwidth independent of P (the star saturates the root's
-//!   link at 1/(P−1) of that). Chunk 0 carries a
-//!   `[total][n_chunks]` header so downstream ranks can size buffers
-//!   without a separate round.
-//! * gather — a chain toward the root: rank `P−1` starts a framed
-//!   bundle, each rank appends its part and forwards. P−1 messages
-//!   but the accumulated bundle is re-serialized at every hop —
-//!   O(P²·part) total wire bytes with O(P) serial depth, so this is
-//!   a control-plane gather (scalar reductions, worker reports), not
-//!   a bulk one; large aggregations should prefer `tree`/`hier`
-//!   (reduce-scatter pipelining is a ROADMAP item).
+//!   it lands ([`ChunkStream::recv_forward`]), so all links stream
+//!   concurrently once the pipe fills. `(P−1) × chunks` messages;
+//!   per-rank bandwidth approaches the link bandwidth independent of
+//!   P (the star saturates the root's link at 1/(P−1) of that).
+//!   Chunk 0 carries the stream's `[total][n_chunks]` frame so
+//!   downstream ranks can size buffers without a separate round.
+//! * gather — chunk-pipelined and **direct**: every rank streams its
+//!   part straight to the root, which drains all senders in arrival
+//!   order ([`ChunkStream::drain`]). `(P−1) × chunks` messages and
+//!   O(P·part) total wire bytes — this replaces the old accumulating
+//!   chain, which re-serialized its bundle at every hop for
+//!   O(P²·part) wire bytes and O(P) serial depth, making ring gathers
+//!   safe for bulk payloads, not just control-plane sizes.
 //! * barrier — the dissemination algorithm: in round `r` every rank
 //!   signals `(me + 2^r) mod P` and waits on `(me − 2^r) mod P`;
 //!   after `ceil(log2 P)` rounds every rank transitively covers every
 //!   other. No root, `P·ceil(log2 P)` messages, log depth.
 
-use super::{bundle, log2_rounds, TagSpace, PH_BCAST, PH_DISSEM, PH_GATHER};
-use crate::comm::{CommError, Result, Transport, WireReader, WireWriter};
+use super::{log2_rounds, TagSpace, PH_BCAST, PH_DISSEM, PH_GATHER};
+use crate::comm::datapath::ChunkStream;
+use crate::comm::{Result, Transport};
 use crate::dmap::Pid;
 use std::time::Duration;
-
-/// Hard cap on pipeline chunks (the tag round field is 16 bits).
-const MAX_CHUNKS: usize = 1 << 16;
-
-/// The chunk size actually used for an `n`-byte payload: the
-/// configured size, raised if needed so the chunk count fits the tag
-/// field.
-fn chunk_for(n: usize, chunk_bytes: usize) -> usize {
-    chunk_bytes.max(1).max(n.div_ceil(MAX_CHUNKS))
-}
 
 /// Chunked pipelined broadcast from `group[0]` down the chain.
 pub(crate) fn bcast(
@@ -50,79 +43,41 @@ pub(crate) fn bcast(
     if p == 1 {
         return Ok(payload);
     }
+    let tag = space.chunk_tag(level, PH_BCAST);
     if me == 0 {
-        let n = payload.len();
-        let cb = chunk_for(n, chunk_bytes);
-        let nchunks = n.div_ceil(cb).max(1);
-        for c in 0..nchunks {
-            let lo = c * cb;
-            let hi = (lo + cb).min(n);
-            let tag = space.at(level, PH_BCAST, c as u64);
-            if c == 0 {
-                let mut w = WireWriter::with_capacity(16 + (hi - lo));
-                w.put_u64(n as u64);
-                w.put_u64(nchunks as u64);
-                let mut msg = w.finish();
-                msg.extend_from_slice(&payload[lo..hi]);
-                t.send(group[1], tag, &msg)?;
-            } else {
-                t.send(group[1], tag, &payload[lo..hi])?;
-            }
-        }
+        ChunkStream::send(t, group[1], tag, chunk_bytes, &[&payload])?;
         Ok(payload)
     } else {
-        let prev = group[me - 1];
         let next = if me + 1 < p { Some(group[me + 1]) } else { None };
-        let first = t.recv(prev, space.at(level, PH_BCAST, 0))?;
-        if let Some(nx) = next {
-            t.send(nx, space.at(level, PH_BCAST, 0), &first)?;
-        }
-        let mut rd = WireReader::new(&first);
-        let total = rd.get_usize()?;
-        let nchunks = rd.get_usize()?;
-        let mut out = Vec::with_capacity(total);
-        out.extend_from_slice(rd.take_raw(rd.remaining())?);
-        for c in 1..nchunks {
-            let tag = space.at(level, PH_BCAST, c as u64);
-            let chunk = t.recv(prev, tag)?;
-            if let Some(nx) = next {
-                t.send(nx, tag, &chunk)?;
-            }
-            out.extend_from_slice(&chunk);
-        }
-        if out.len() != total {
-            return Err(CommError::Malformed(format!(
-                "ring bcast reassembled {} of {total} bytes",
-                out.len()
-            )));
-        }
-        Ok(out)
+        ChunkStream::recv_forward(t, group[me - 1], tag, next)
     }
 }
 
-/// Chain gather toward `group[0]`: returns `Some(parts)` in rank
-/// order at the root, `None` elsewhere.
+/// Chunk-pipelined direct gather toward `group[0]`: returns
+/// `Some(parts)` in rank order at the root, `None` elsewhere.
 pub(crate) fn gather(
     t: &dyn Transport,
     group: &[Pid],
     me: usize,
     space: &TagSpace,
     level: u64,
+    chunk_bytes: usize,
     part: Vec<u8>,
 ) -> Result<Option<Vec<Vec<u8>>>> {
     let p = group.len();
-    let mut acc: Vec<(u64, Vec<u8>)> = Vec::with_capacity(p - me);
-    if me + 1 < p {
-        let payload = t.recv(group[me + 1], space.at(level, PH_GATHER, (me + 1) as u64))?;
-        bundle::read(&payload, &mut acc)?;
-    }
-    acc.push((me as u64, part));
+    let tag = space.chunk_tag(level, PH_GATHER);
     if me > 0 {
-        t.send(group[me - 1], space.at(level, PH_GATHER, me as u64), &bundle::write(&acc))?;
-        Ok(None)
-    } else {
-        bundle::into_rank_order(acc, p).map(Some)
+        ChunkStream::send(t, group[0], tag, chunk_bytes, &[&part])?;
+        return Ok(None);
     }
+    let mut parts: Vec<Vec<u8>> = vec![Vec::new(); p];
+    parts[0] = part;
+    let peers = &group[1..];
+    ChunkStream::drain(t, peers, tag, |i, payload| {
+        parts[i + 1] = payload;
+        Ok(())
+    })?;
+    Ok(Some(parts))
 }
 
 /// Dissemination barrier (no root; every rank sends and receives one

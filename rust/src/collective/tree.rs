@@ -7,14 +7,20 @@
 //!   payload sends it to rank `+ 2^r`; after `ceil(log2 P)` rounds
 //!   everyone holds it. P−1 messages, log-depth critical path.
 //! * gather — the mirror: rank `me` (with `me mod 2^{r+1} == 2^r`)
-//!   sends the framed bundle of its whole binomial subtree to
-//!   `me − 2^r`. Contributions travel **unreduced** (see the module
-//!   docs in [`super`]): the root folds them in rank order, so every
-//!   algorithm produces bit-identical reductions.
+//!   sends the bundle of its whole binomial subtree to `me − 2^r` as
+//!   a chunked stream over the shared datapath. The bundle is a
+//!   [`bundle::Acc`]: received child bundles are **forwarded as raw
+//!   segments**, never re-parsed or re-encoded, so a multi-MB
+//!   aggregation costs each hop O(subtree) memcpy instead of
+//!   O(subtree) re-serialization per level. Contributions travel
+//!   **unreduced** (see the module docs in [`super`]): the root folds
+//!   them in rank order, so every algorithm produces bit-identical
+//!   reductions.
 //! * barrier — gather-shaped up phase with empty payloads, then a
 //!   broadcast-shaped release.
 
 use super::{bundle, log2_rounds, TagSpace, PH_BCAST, PH_DOWN, PH_GATHER, PH_UP};
+use crate::comm::datapath::ChunkStream;
 use crate::comm::{Result, Transport};
 use crate::dmap::Pid;
 use std::time::Duration;
@@ -46,34 +52,37 @@ pub(crate) fn bcast(
 }
 
 /// Binomial gather to `group[0]`: returns `Some(parts)` (rank order)
-/// at the root, `None` elsewhere.
+/// at the root, `None` elsewhere. Each rank sends exactly one stream
+/// (in its exit round), so the whole schedule shares one
+/// `(level, PH_GATHER)` tag lane — `(from, tag)` stays unambiguous —
+/// and absorbed subtrees ride upward as raw segments.
 pub(crate) fn gather(
     t: &dyn Transport,
     group: &[Pid],
     me: usize,
     space: &TagSpace,
     level: u64,
+    chunk_bytes: usize,
     part: Vec<u8>,
 ) -> Result<Option<Vec<Vec<u8>>>> {
     let p = group.len();
-    let mut acc: Vec<(u64, Vec<u8>)> = vec![(me as u64, part)];
+    let tag = space.chunk_tag(level, PH_GATHER);
+    let mut acc = bundle::Acc::new(me as u64, part);
     for r in 0..log2_rounds(p) {
         let bit = 1usize << r;
-        let tag = space.at(level, PH_GATHER, r as u64);
         if me % (2 * bit) == 0 {
             let src = me + bit;
             if src < p {
-                let payload = t.recv(group[src], tag)?;
-                bundle::read(&payload, &mut acc)?;
+                acc.absorb(ChunkStream::recv(t, group[src], tag)?)?;
             }
         } else {
             // me mod 2^{r+1} == 2^r: hand the subtree up and exit.
-            t.send(group[me - bit], tag, &bundle::write(&acc))?;
+            acc.send(t, group[me - bit], tag, chunk_bytes)?;
             return Ok(None);
         }
     }
     debug_assert_eq!(me, 0);
-    bundle::into_rank_order(acc, p).map(Some)
+    acc.into_rank_order(p).map(Some)
 }
 
 /// Tree barrier: binomial up phase (children report) then binomial

@@ -1,0 +1,515 @@
+//! The shared bulk-transfer datapath: one chunked, pooled streaming
+//! layer beneath every mover in the codebase.
+//!
+//! Before this module existed the chunking + pooling + coalescing
+//! machinery lived in three places — the remap engine's pooled
+//! per-peer sends, the ring broadcast's ad-hoc chunk pipeline, and the
+//! threaded backend's pack/unpack loops — each with its own framing
+//! and its own idea of how many chunks fit a tag. [`ChunkStream`] is
+//! the single implementation all of them now ride:
+//!
+//! * **Framing** — a stream frames `[total][n_chunks]` exactly once,
+//!   at the head of chunk 0; every later chunk is raw bytes. A
+//!   receiver can size its reassembly buffer from the first message
+//!   without a separate round.
+//! * **Chunking** — the 16-bit tag-round cap ([`MAX_CHUNKS`]) is
+//!   enforced here, once, by [`plan_chunks`]: the chunk size is raised
+//!   when a payload would otherwise need more than `2^16` chunks, so
+//!   no algorithm has to carry its own copy of that rule.
+//! * **Pooling** — stream headers (and any caller-built message body)
+//!   come out of the global [`BufferPool`] via [`checkout`]; senders
+//!   never copy payload bytes into a staging buffer — each chunk is a
+//!   window over the caller's `parts`, handed to
+//!   [`Transport::send_parts`] as slices.
+//! * **Tags** — a [`ChunkTag`] packs `(namespace, epoch, lane)` and
+//!   reserves the low 16 bits of the step field for the chunk index,
+//!   so every namespace (`NS_REMAP`, `NS_COLL`, `NS_STAGE`) rides the
+//!   same layer without aliasing.
+//! * **Draining** — [`ChunkStream::drain`] completes streams from many
+//!   peers in **arrival order** (non-blocking [`Transport::try_recv`]
+//!   sweeps, spin-then-backoff), so one slow peer never serializes the
+//!   rest — the receive loop previously private to the remap engine.
+//!
+//! The process default chunk size is [`DEFAULT_CHUNK_BYTES`],
+//! overridable per run with `--chunk-bytes` (installed here via
+//! [`set_ambient_chunk_bytes`] and inherited by worker processes
+//! through the environment, like `--coll`).
+
+use super::pool::{BufferPool, PooledBuf};
+use super::{tags, CommError, Result, Tag, Transport, WireReader, WireWriter};
+use crate::dmap::Pid;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Hard cap on stream chunks: the chunk index lives in the low 16
+/// bits of the packed tag step field.
+pub const MAX_CHUNKS: usize = 1 << 16;
+
+/// Default stream chunk: 64 KiB — large enough that framing overhead
+/// vanishes, small enough that a multi-hop pipeline fills quickly.
+pub const DEFAULT_CHUNK_BYTES: usize = 64 << 10;
+
+/// Process-wide chunk-size override (0 = unset, use the default).
+static AMBIENT_CHUNK_BYTES: AtomicUsize = AtomicUsize::new(0);
+
+/// Install the process-default stream chunk size (the `--chunk-bytes`
+/// axis; `repro run` sets it from the CLI and worker processes inherit
+/// it through `DISTARRAY_CHUNK_BYTES`). Values are floored to 1 byte.
+pub fn set_ambient_chunk_bytes(bytes: usize) {
+    AMBIENT_CHUNK_BYTES.store(bytes, Ordering::Relaxed);
+}
+
+/// The current process-default stream chunk size.
+pub fn ambient_chunk_bytes() -> usize {
+    match AMBIENT_CHUNK_BYTES.load(Ordering::Relaxed) {
+        0 => DEFAULT_CHUNK_BYTES,
+        b => b.max(1),
+    }
+}
+
+/// The chunk size actually used for a `total`-byte stream: the
+/// requested size, raised if needed so the chunk count fits the
+/// 16-bit tag field. Returns `(chunk_bytes, n_chunks)`; empty streams
+/// are one (header-only) chunk.
+pub fn plan_chunks(total: usize, chunk_bytes: usize) -> (usize, usize) {
+    let cb = chunk_bytes.max(1).max(total.div_ceil(MAX_CHUNKS));
+    (cb, total.div_ceil(cb).max(1))
+}
+
+/// Check a cleared wire buffer with at least `cap` bytes out of the
+/// process-global [`BufferPool`] — the only sanctioned way for a
+/// mover to get a staging/header buffer (keeps every bulk path's
+/// allocations observable through one instrument).
+pub fn checkout(cap: usize) -> PooledBuf<'static> {
+    BufferPool::global().checkout(cap)
+}
+
+/// `(checkouts, hits)` of the global pool — the steady-state
+/// zero-allocation instrument surfaced in the bench documents.
+pub fn pool_counters() -> (u64, u64) {
+    let pool = BufferPool::global();
+    (pool.checkouts(), pool.hits())
+}
+
+/// The tag coordinates of one chunk stream: `tag(chunk) =
+/// pack(ns, epoch, lane | chunk)`. The lane is the caller's high step
+/// bits (a collective's `level | phase`, zero for remap/stage
+/// epochs); its low 16 bits must be clear — they carry the chunk
+/// index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChunkTag {
+    ns: u8,
+    epoch: u64,
+    lane: u64,
+}
+
+impl ChunkTag {
+    /// A lane-0 stream tag — one stream per `(ns, epoch, peer pair)`,
+    /// the remap/stage shape.
+    pub fn new(ns: u8, epoch: u64) -> ChunkTag {
+        ChunkTag { ns, epoch, lane: 0 }
+    }
+
+    /// A stream tag in an explicit lane (multiples of `2^16`; the
+    /// collective subsystem packs `level | phase` here).
+    pub fn with_lane(ns: u8, epoch: u64, lane: u64) -> ChunkTag {
+        debug_assert!((lane & (MAX_CHUNKS as u64 - 1)) == 0, "lane overlaps the chunk field");
+        debug_assert!(lane < 1 << 24, "lane exceeds the 24-bit step field");
+        ChunkTag { ns, epoch, lane }
+    }
+
+    /// The wire tag of chunk `c`.
+    #[inline]
+    pub fn at(&self, chunk: u64) -> Tag {
+        debug_assert!(chunk < MAX_CHUNKS as u64, "chunk index exceeds the 16-bit tag field");
+        tags::pack(self.ns, self.epoch, self.lane | chunk)
+    }
+}
+
+/// How long a drain waits in total before reporting a timeout
+/// (matches [`Transport::recv`]'s default).
+const RECV_WINDOW: Duration = Duration::from_secs(120);
+/// Empty sweeps before the drain stops spinning (yield) and starts
+/// sleeping.
+const SPIN_SWEEPS: u32 = 64;
+/// First sleep of the drain backoff.
+const POLL_MIN: Duration = Duration::from_micros(20);
+/// Backoff cap — bounds worst-case added latency per chunk.
+const POLL_MAX: Duration = Duration::from_millis(1);
+
+/// The chunked stream writer/reader — all methods are stateless
+/// associated functions over a [`Transport`].
+pub struct ChunkStream;
+
+/// Reassembly state of one incoming stream.
+struct Reassembly {
+    peer: Pid,
+    /// Caller-side index of this peer (stable across completions).
+    idx: usize,
+    next_chunk: usize,
+    /// 0 until chunk 0's header has been parsed.
+    n_chunks: usize,
+    total: usize,
+    buf: Vec<u8>,
+}
+
+impl Reassembly {
+    /// Feed one received chunk; `Ok(true)` when the stream completed.
+    fn feed(&mut self, chunk: Vec<u8>) -> Result<bool> {
+        if self.next_chunk == 0 {
+            let (total, n_chunks, buf) = parse_first(&chunk)?;
+            self.total = total;
+            self.n_chunks = n_chunks;
+            self.buf = buf;
+        } else {
+            self.buf.extend_from_slice(&chunk);
+        }
+        self.next_chunk += 1;
+        if self.next_chunk < self.n_chunks {
+            return Ok(false);
+        }
+        check_total(self.buf.len(), self.total)?;
+        Ok(true)
+    }
+}
+
+/// Parse chunk 0: the `[total][n_chunks]` frame plus the first
+/// payload bytes, returned in a buffer sized for the whole stream.
+fn parse_first(first: &[u8]) -> Result<(usize, usize, Vec<u8>)> {
+    let mut rd = WireReader::new(first);
+    let total = rd.get_usize()?;
+    let n_chunks = rd.get_usize()?;
+    if n_chunks == 0 || n_chunks > MAX_CHUNKS {
+        return Err(CommError::Malformed(format!(
+            "chunk stream frames {n_chunks} chunks (valid: 1..={MAX_CHUNKS})"
+        )));
+    }
+    let mut buf = Vec::with_capacity(total);
+    buf.extend_from_slice(rd.take_raw(rd.remaining())?);
+    Ok((total, n_chunks, buf))
+}
+
+fn check_total(got: usize, total: usize) -> Result<()> {
+    if got != total {
+        return Err(CommError::Malformed(format!(
+            "chunk stream reassembled {got} of {total} bytes"
+        )));
+    }
+    Ok(())
+}
+
+impl ChunkStream {
+    /// Send the logical concatenation of `parts` to `to` as a chunked
+    /// stream under `tag`. The `[total][n_chunks]` frame is written
+    /// once into a pooled header buffer; every chunk is a window of
+    /// slices over `parts` handed to [`Transport::send_parts`] — no
+    /// payload byte is ever staged or copied by this layer. Returns
+    /// the number of chunk messages sent.
+    pub fn send(
+        t: &dyn Transport,
+        to: Pid,
+        tag: ChunkTag,
+        chunk_bytes: usize,
+        parts: &[&[u8]],
+    ) -> Result<usize> {
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        let (cb, n_chunks) = plan_chunks(total, chunk_bytes);
+        let mut header = checkout(16);
+        let mut w = WireWriter::from_vec(header.take());
+        w.put_u64(total as u64);
+        w.put_u64(n_chunks as u64);
+        header.restore(w.finish());
+
+        // Cursor over the logical byte space of `parts`; chunks are
+        // consecutive, so it only ever advances.
+        let mut pi = 0usize;
+        let mut po = 0usize;
+        let mut slices: Vec<&[u8]> = Vec::with_capacity(parts.len() + 1);
+        for c in 0..n_chunks {
+            let lo = c * cb;
+            let hi = (lo + cb).min(total);
+            slices.clear();
+            if c == 0 {
+                slices.push(header.as_slice());
+            }
+            let mut remaining = hi - lo;
+            while remaining > 0 {
+                let avail = parts[pi].len() - po;
+                if avail == 0 {
+                    pi += 1;
+                    po = 0;
+                    continue;
+                }
+                let take = avail.min(remaining);
+                slices.push(&parts[pi][po..po + take]);
+                po += take;
+                remaining -= take;
+            }
+            t.send_parts(to, tag.at(c as u64), &slices)?;
+        }
+        Ok(n_chunks)
+    }
+
+    /// Blocking receive of one whole stream from `from`: reads the
+    /// frame off chunk 0, then the remaining chunks in order.
+    pub fn recv(t: &dyn Transport, from: Pid, tag: ChunkTag) -> Result<Vec<u8>> {
+        Self::recv_forward(t, from, tag, None)
+    }
+
+    /// Blocking receive that forwards every chunk to `next` the
+    /// moment it lands (before reassembly) — the ring-pipeline hop:
+    /// all links stream concurrently once the pipe fills.
+    pub fn recv_forward(
+        t: &dyn Transport,
+        from: Pid,
+        tag: ChunkTag,
+        next: Option<Pid>,
+    ) -> Result<Vec<u8>> {
+        let first = t.recv(from, tag.at(0))?;
+        if let Some(nx) = next {
+            t.send(nx, tag.at(0), &first)?;
+        }
+        let (total, n_chunks, mut out) = parse_first(&first)?;
+        for c in 1..n_chunks {
+            let chunk = t.recv(from, tag.at(c as u64))?;
+            if let Some(nx) = next {
+                t.send(nx, tag.at(c as u64), &chunk)?;
+            }
+            out.extend_from_slice(&chunk);
+        }
+        check_total(out.len(), total)?;
+        Ok(out)
+    }
+
+    /// Receive one stream from **every** peer in `peers`, completing
+    /// them in arrival order: sweep the pending streams with
+    /// non-blocking receives, spinning briefly then backing off
+    /// exponentially between empty sweeps. `on_payload(i, bytes)` is
+    /// called once per peer with `i` indexing into `peers`.
+    pub fn drain(
+        t: &dyn Transport,
+        peers: &[Pid],
+        tag: ChunkTag,
+        mut on_payload: impl FnMut(usize, Vec<u8>) -> Result<()>,
+    ) -> Result<()> {
+        match peers {
+            [] => return Ok(()),
+            // A single incoming stream has nothing to reorder —
+            // block directly.
+            &[only] => {
+                let payload = Self::recv(t, only, tag)?;
+                return on_payload(0, payload);
+            }
+            _ => {}
+        }
+        let mut pending: Vec<Reassembly> = peers
+            .iter()
+            .enumerate()
+            .map(|(idx, &peer)| Reassembly {
+                peer,
+                idx,
+                next_chunk: 0,
+                n_chunks: 0,
+                total: 0,
+                buf: Vec::new(),
+            })
+            .collect();
+        let deadline = Instant::now() + RECV_WINDOW;
+        let mut delay = POLL_MIN;
+        let mut empty_sweeps = 0u32;
+        while !pending.is_empty() {
+            let mut progressed = false;
+            let mut i = 0;
+            while i < pending.len() {
+                // Drain whatever this peer has ready before moving on
+                // (consecutive chunks of a hot stream complete back
+                // to back).
+                let mut done = false;
+                while let Some(chunk) =
+                    t.try_recv(pending[i].peer, tag.at(pending[i].next_chunk as u64))?
+                {
+                    progressed = true;
+                    if pending[i].feed(chunk)? {
+                        done = true;
+                        break;
+                    }
+                }
+                if done {
+                    let r = pending.swap_remove(i);
+                    on_payload(r.idx, r.buf)?;
+                } else {
+                    i += 1;
+                }
+            }
+            if pending.is_empty() {
+                break;
+            }
+            if progressed {
+                delay = POLL_MIN;
+                empty_sweeps = 0;
+                continue;
+            }
+            if Instant::now() >= deadline {
+                return Err(CommError::Timeout {
+                    from: pending[0].peer,
+                    tag: tag.at(pending[0].next_chunk as u64),
+                });
+            }
+            if empty_sweeps < SPIN_SWEEPS {
+                empty_sweeps += 1;
+                std::thread::yield_now();
+            } else {
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(POLL_MAX);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+
+    const NS: u8 = tags::NS_COLL;
+
+    #[test]
+    fn plan_chunks_enforces_the_tag_cap_once() {
+        // Exactly 2^16 chunks fit (chunk indices 0..=65535).
+        assert_eq!(plan_chunks(MAX_CHUNKS, 1), (1, MAX_CHUNKS));
+        // One byte more: the chunk size is raised, never the count.
+        assert_eq!(plan_chunks(MAX_CHUNKS + 1, 1), (2, MAX_CHUNKS / 2 + 1));
+        // Requested sizes below the floor are raised too.
+        let (cb, n) = plan_chunks(10 * MAX_CHUNKS, 4);
+        assert_eq!(cb, 10);
+        assert_eq!(n, MAX_CHUNKS);
+        // Ordinary payloads honor the requested size.
+        assert_eq!(plan_chunks(100, 16), (16, 7));
+        assert_eq!(plan_chunks(0, 16), (16, 1), "empty streams are one header chunk");
+        assert_eq!(plan_chunks(16, 16), (16, 1));
+        assert_eq!(plan_chunks(17, 16), (16, 2));
+    }
+
+    #[test]
+    fn chunk_tag_packs_lane_and_chunk_disjointly() {
+        let a = ChunkTag::new(NS, 7);
+        let b = ChunkTag::with_lane(NS, 7, 1 << 16);
+        assert_eq!(a.at(0), tags::pack(NS, 7, 0));
+        assert_eq!(a.at(5), tags::pack(NS, 7, 5));
+        assert_eq!(b.at(5), tags::pack(NS, 7, (1 << 16) | 5));
+        assert_ne!(a.at(5), b.at(5));
+    }
+
+    #[test]
+    fn ambient_chunk_bytes_defaults_and_overrides() {
+        // Process-global: keep this the only test that mutates it, and
+        // use a large transient value so any concurrently constructed
+        // context still sees single-chunk streams at test sizes.
+        assert_eq!(ambient_chunk_bytes(), DEFAULT_CHUNK_BYTES);
+        set_ambient_chunk_bytes(1 << 20);
+        assert_eq!(ambient_chunk_bytes(), 1 << 20);
+        set_ambient_chunk_bytes(0);
+        assert_eq!(ambient_chunk_bytes(), DEFAULT_CHUNK_BYTES);
+    }
+
+    #[test]
+    fn multipart_stream_roundtrips_and_counts_chunks() {
+        let mut world = ChannelHub::world(2);
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        let tag = ChunkTag::new(NS, 42);
+        let a: Vec<u8> = (0..40).collect();
+        let b: Vec<u8> = (100..140).collect();
+        // 80 payload bytes at 16-byte chunks → 5 chunks.
+        let sent = ChunkStream::send(&t0, 1, tag, 16, &[&a, &[], &b]).unwrap();
+        assert_eq!(sent, 5);
+        assert_eq!(t0.stats().msgs_sent(), 5);
+        let got = ChunkStream::recv(&t1, 0, tag).unwrap();
+        let want: Vec<u8> = a.iter().chain(b.iter()).copied().collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn empty_stream_is_one_message() {
+        let mut world = ChannelHub::world(2);
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        let tag = ChunkTag::new(NS, 43);
+        assert_eq!(ChunkStream::send(&t0, 1, tag, 64, &[]).unwrap(), 1);
+        assert_eq!(ChunkStream::recv(&t1, 0, tag).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn forwarding_relays_every_chunk_down_a_chain() {
+        let world = ChannelHub::world(3);
+        let payload: Vec<u8> = (0..100u8).collect();
+        let tag = ChunkTag::new(NS, 44);
+        let hs: Vec<_> = world
+            .into_iter()
+            .map(|t| {
+                let payload = payload.clone();
+                std::thread::spawn(move || match t.pid() {
+                    0 => {
+                        ChunkStream::send(&t, 1, tag, 16, &[&payload]).unwrap();
+                        payload
+                    }
+                    1 => ChunkStream::recv_forward(&t, 0, tag, Some(2)).unwrap(),
+                    _ => ChunkStream::recv(&t, 1, tag).unwrap(),
+                })
+            })
+            .collect();
+        for h in hs {
+            assert_eq!(h.join().unwrap(), payload);
+        }
+    }
+
+    #[test]
+    fn drain_completes_multi_chunk_streams_from_many_peers() {
+        let np = 4;
+        let world = ChannelHub::world(np);
+        let tag = ChunkTag::new(NS, 45);
+        let hs: Vec<_> = world
+            .into_iter()
+            .map(|t| {
+                std::thread::spawn(move || {
+                    if t.pid() == 0 {
+                        let peers: Vec<Pid> = (1..t.np()).collect();
+                        let mut got: Vec<Option<Vec<u8>>> = vec![None; peers.len()];
+                        ChunkStream::drain(&t, &peers, tag, |i, payload| {
+                            got[i] = Some(payload);
+                            Ok(())
+                        })
+                        .unwrap();
+                        for (i, g) in got.iter().enumerate() {
+                            let want = vec![(i + 1) as u8; 50 + (i + 1)];
+                            assert_eq!(g.as_deref(), Some(&want[..]));
+                        }
+                    } else {
+                        let part = vec![t.pid() as u8; 50 + t.pid()];
+                        ChunkStream::send(&t, 0, tag, 16, &[&part]).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn malformed_chunk_count_is_loud() {
+        let mut world = ChannelHub::world(2);
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        let tag = ChunkTag::new(NS, 46);
+        let mut w = WireWriter::new();
+        w.put_u64(4);
+        w.put_u64(0); // zero chunks: invalid
+        t0.send(1, tag.at(0), &w.finish()).unwrap();
+        assert!(matches!(
+            ChunkStream::recv(&t1, 0, tag),
+            Err(CommError::Malformed(_))
+        ));
+    }
+}

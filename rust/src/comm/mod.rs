@@ -20,12 +20,14 @@
 pub mod barrier;
 pub mod channel;
 pub mod counter;
+pub mod datapath;
 pub mod file_msg;
 pub mod pool;
 pub mod protocol;
 
 pub use channel::{ChannelHub, ChannelTransport};
 pub use counter::CommStats;
+pub use datapath::{ChunkStream, ChunkTag};
 pub use file_msg::FileTransport;
 pub use pool::{BufferPool, PooledBuf};
 pub use protocol::{Decode, Encode, WireReader, WireWriter};
@@ -63,9 +65,10 @@ pub mod tags {
 
     /// Barrier round-trips.
     pub const NS_BARRIER: u8 = 1;
-    /// Distributed-array remap payloads — one coalesced message per
-    /// communicating peer pair per epoch (the `(from, tag)` match
-    /// disambiguates peers, so the step field stays 0).
+    /// Distributed-array remap payloads — one coalesced chunk stream
+    /// per communicating peer pair per epoch (the `(from, tag)` match
+    /// disambiguates peers; the low 16 step bits carry the chunk
+    /// index, 0 for sub-chunk-size messages).
     pub const NS_REMAP: u8 = 2;
     /// Overlap/halo synchronization.
     pub const NS_HALO: u8 = 3;

@@ -84,6 +84,7 @@ impl LaunchConfig {
                 threads: 1,
                 coll: CollKind::Star,
                 nppn: 4,
+                chunk_bytes: 0,
                 artifacts: "artifacts".into(),
             },
         }
@@ -156,6 +157,18 @@ impl LaunchConfig {
                 )
             })?;
         }
+        if let Some(v) = j.get("chunk_bytes") {
+            let b = v
+                .as_usize()
+                .ok_or_else(|| ConfigError::Field("chunk_bytes", "must be a number".into()))?;
+            if b == 0 {
+                return Err(ConfigError::Field(
+                    "chunk_bytes",
+                    "must be a byte count >= 1".into(),
+                ));
+            }
+            cfg.run.chunk_bytes = b;
+        }
         if let Some(v) = j.get("artifacts") {
             cfg.run.artifacts = v
                 .as_str()
@@ -185,7 +198,7 @@ mod tests {
             r#"{"triples": "2x4x2", "n": 1024, "nt": 3, "q": 0.5,
                 "map": "blockcyclic:16", "engine": "pjrt-fused",
                 "dtype": "f32", "backend": "threaded", "coll": "hier",
-                "artifacts": "art"}"#,
+                "chunk_bytes": 4096, "artifacts": "art"}"#,
         )
         .unwrap();
         assert_eq!(cfg.triples, Triples::new(2, 4, 2));
@@ -199,6 +212,7 @@ mod tests {
         assert_eq!(cfg.run.threads, 2, "pool width follows the Ntpn axis");
         assert_eq!(cfg.run.coll, CollKind::Hier);
         assert_eq!(cfg.run.nppn, 4, "collective topology follows the Nppn axis");
+        assert_eq!(cfg.run.chunk_bytes, 4096);
         assert_eq!(cfg.run.artifacts, "art");
     }
 
@@ -209,6 +223,7 @@ mod tests {
         assert_eq!(cfg.run.nt, 10);
         assert_eq!(cfg.run.map, MapKind::Block);
         assert_eq!(cfg.run.dtype, Dtype::F64);
+        assert_eq!(cfg.run.chunk_bytes, 0, "0 = datapath default");
     }
 
     #[test]
@@ -232,6 +247,10 @@ mod tests {
         assert!(matches!(
             LaunchConfig::from_json(r#"{"coll": "mesh"}"#),
             Err(ConfigError::Field("coll", _))
+        ));
+        assert!(matches!(
+            LaunchConfig::from_json(r#"{"chunk_bytes": 0}"#),
+            Err(ConfigError::Field("chunk_bytes", _))
         ));
         assert!(matches!(
             LaunchConfig::from_json("{"),

@@ -78,6 +78,7 @@ mod tests {
             threads: 1,
             coll: crate::collective::CollKind::Star,
             nppn: 0,
+            chunk_bytes: 0,
             artifacts: "artifacts".into(),
         }
     }

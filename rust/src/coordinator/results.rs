@@ -104,6 +104,10 @@ pub struct RunConfig {
     /// PIDs per node — the `Nppn` axis of the triples spec, the
     /// hierarchical collectives' topology (0 = flat/unknown).
     pub nppn: usize,
+    /// Stream chunk size of the shared bulk-transfer datapath
+    /// (`--chunk-bytes`; 0 = the built-in default). Workers inherit
+    /// it through the environment like `--coll`.
+    pub chunk_bytes: usize,
     /// Artifacts directory for the PJRT engine.
     pub artifacts: String,
 }
@@ -126,6 +130,7 @@ impl Encode for RunConfig {
         w.put_usize(self.threads);
         w.put_u8(self.coll.code());
         w.put_usize(self.nppn);
+        w.put_usize(self.chunk_bytes);
         w.put_str(&self.artifacts);
     }
 }
@@ -160,6 +165,7 @@ impl Decode for RunConfig {
         let coll = CollKind::from_code(ccode)
             .ok_or_else(|| CommError::Malformed(format!("bad coll code {ccode}")))?;
         let nppn = r.get_usize()?;
+        let chunk_bytes = r.get_usize()?;
         let artifacts = r.get_str()?;
         Ok(RunConfig {
             n_global,
@@ -172,6 +178,7 @@ impl Decode for RunConfig {
             threads,
             coll,
             nppn,
+            chunk_bytes,
             artifacts,
         })
     }
@@ -289,6 +296,7 @@ mod tests {
             threads: 4,
             coll: CollKind::Hier,
             nppn: 4,
+            chunk_bytes: 1 << 20,
             artifacts: "artifacts".into(),
         };
         let got = RunConfig::from_bytes(&c.to_bytes()).unwrap();
@@ -341,6 +349,7 @@ mod tests {
             threads: 1,
             coll: CollKind::Star,
             nppn: 0,
+            chunk_bytes: 0,
             artifacts: String::new(),
         };
         let bytes = c.to_bytes();

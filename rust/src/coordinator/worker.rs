@@ -171,6 +171,12 @@ pub fn run_worker(t: &dyn Transport) -> Result<WorkerReport> {
     let np = t.np();
     let payload = Collective::star(np).bcast(t, config_space(), Vec::new())?;
     let cfg = RunConfig::from_bytes(&payload)?;
+    // The broadcast config is authoritative for the datapath chunk
+    // size (the env inherit in `cmd_worker` covers ambient users that
+    // run before the config lands).
+    if cfg.chunk_bytes > 0 {
+        crate::comm::datapath::set_ambient_chunk_bytes(cfg.chunk_bytes);
+    }
     let result = run_configured_stream(&cfg, t.pid(), np);
     let report = WorkerReport::from_result(t.pid(), &result);
     let coll = Collective::new(cfg.coll, Topology::grouped(np, cfg.nppn));

@@ -15,22 +15,25 @@
 //! Execution is the bandwidth hot path, and it is built to be
 //! bandwidth-bound rather than allocation/syscall-bound:
 //!
-//! * **One coalesced message per destination peer** per epoch
+//! * **One coalesced stream per destination peer** per epoch
 //!   ([`PeerGroup`]): all ranges flowing between a PID pair travel as
 //!   `[n_ranges][(dst_lo, len)…][count][dtype][packed payload]`,
-//!   so a block→cyclic remap costs `np − 1` messages per PID instead
+//!   so a block→cyclic remap costs `np − 1` streams per PID instead
 //!   of one per plan step (which for strided maps means one per
 //!   element run).
-//! * **Pooled wire buffers** ([`crate::comm::BufferPool`]): header and
-//!   payload buffers are checked out per send and returned on
-//!   completion — steady-state remap loops allocate nothing on the
-//!   send path.
+//! * **The shared datapath** ([`crate::comm::datapath`]): headers and
+//!   payloads live in pooled wire buffers (checked out per send,
+//!   returned on completion — steady-state remap loops allocate
+//!   nothing on the send path) and travel as a
+//!   [`ChunkStream`](crate::comm::ChunkStream), which also pipelines
+//!   multi-MB payloads in chunks without staging copies.
 //! * **Bulk byte-cast packing**: payloads are gathered and scattered
 //!   with the [`Element`] bulk codec (one memcpy per contiguous range
 //!   on little-endian targets, never a per-element loop).
 //! * **Arrival-order receives**: incoming peers are drained with
-//!   non-blocking sweeps ([`Transport::try_recv`]), so a slow peer
-//!   does not serialize the unpacking of the fast ones.
+//!   non-blocking sweeps ([`ChunkStream::drain`](crate::comm::ChunkStream::drain)),
+//!   so a slow peer does not serialize the unpacking of the fast
+//!   ones.
 //!
 //! [`RemapPlan`] materializes concern 1 as a value; [`RemapEngine`]
 //! caches plans keyed by `(src_map, dst_map, shape)` so a repeated
@@ -44,35 +47,25 @@
 //! build of a missing plan, which keeps the build counter exact under
 //! thread races at the cost of serializing first-touch planning.
 
-use crate::comm::{tags, BufferPool, CommError, Tag, Transport, WireReader, WireWriter};
+use crate::comm::datapath::{self, ChunkStream, ChunkTag};
+use crate::comm::{tags, CommError, Transport, WireReader, WireWriter};
 use crate::dmap::{Dmap, GlobalRange, Partition, Pid};
 use crate::element::Element;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
 
 /// Per-PID offset table: `(global_lo, len, local_offset)` per owned
 /// contiguous range, in ascending global order.
 pub type OffsetTable = Vec<(usize, usize, usize)>;
 
-/// How long the arrival-order receive loop waits in total before
-/// reporting a timeout (matches [`Transport::recv`]'s default).
-const RECV_WINDOW: Duration = Duration::from_secs(120);
-/// Empty sweeps before the receive loop stops spinning (yield) and
-/// starts sleeping.
-const SPIN_SWEEPS: u32 = 64;
-/// First sleep of the receive backoff.
-const POLL_MIN: Duration = Duration::from_micros(20);
-/// Backoff cap — bounds worst-case added latency per message.
-const POLL_MAX: Duration = Duration::from_millis(1);
-
-/// The remap tag for `epoch`: one coalesced message per peer pair per
-/// epoch, so the `(from, tag)` match fully identifies it and the step
-/// field stays 0.
+/// The remap stream tag for `epoch`: one coalesced chunk stream per
+/// peer pair per epoch, so the `(from, tag)` match fully identifies
+/// it (sub-chunk-size payloads keep the historical single message
+/// with step 0).
 #[inline]
-pub(crate) fn remap_tag(epoch: u64) -> Tag {
-    tags::pack(tags::NS_REMAP, epoch, 0)
+pub(crate) fn remap_tag(epoch: u64) -> ChunkTag {
+    ChunkTag::new(tags::NS_REMAP, epoch)
 }
 
 /// One peer's coalesced transfer group under a plan: every range that
@@ -321,30 +314,37 @@ pub fn execute_plan_typed<T: Element>(
 }
 
 /// Pack and send one peer's coalesced message:
-/// `[n_ranges][(dst_lo, len)…][count][dtype][payload]`. Header and
-/// payload live in pooled wire buffers (zero steady-state
-/// allocations); the payload is gathered straight from `src` by the
-/// bulk codec; the transport writes both parts without concatenating
-/// them ([`Transport::send_parts`]). The caller supplies the `tag`
-/// (remap epochs, pipeline stage epochs, …) — one coalesced message
-/// per peer per tag.
+/// `[n_ranges][(dst_lo, len)…][count][dtype][payload]`, streamed as a
+/// [`ChunkStream`] over the shared datapath. Header and payload live
+/// in pooled wire buffers (zero steady-state allocations); the
+/// payload is gathered straight from `src` by the bulk codec; the
+/// stream layer windows both parts straight into
+/// [`Transport::send_parts`] without concatenating them. The caller
+/// supplies the `tag` (remap epochs, pipeline stage epochs, …) — one
+/// coalesced stream per peer per tag.
 pub(crate) fn send_group_typed<T: Element>(
     g: &PeerGroup,
     src: &[T],
     t: &dyn Transport,
-    tag: Tag,
+    tag: ChunkTag,
 ) -> crate::comm::Result<()> {
-    let pool = BufferPool::global();
-    let mut header = pool.checkout(g.header_bytes());
+    let mut header = datapath::checkout(g.header_bytes());
     let mut w = WireWriter::from_vec(header.take());
     write_group_header(&mut w, g);
     header.restore(w.finish());
 
-    let mut payload = pool.checkout(9 + g.total * T::WIDTH);
+    let mut payload = datapath::checkout(9 + g.total * T::WIDTH);
     let mut pw = WireWriter::from_vec(payload.take());
     pw.put_slice_gather::<T>(src, g.segs());
     payload.restore(pw.finish());
-    t.send_parts(g.peer, tag, &[header.as_slice(), payload.as_slice()])
+    ChunkStream::send(
+        t,
+        g.peer,
+        tag,
+        datapath::ambient_chunk_bytes(),
+        &[header.as_slice(), payload.as_slice()],
+    )?;
+    Ok(())
 }
 
 /// The coalesced message header: the range table. The typed-slice
@@ -420,60 +420,21 @@ pub(crate) fn check_group_payload<'a, T: Element>(
     Ok(bytes)
 }
 
-/// Receive one coalesced message from every incoming peer of `pid`,
-/// completing them in **arrival order**: sweep the pending peers with
-/// non-blocking receives, spinning briefly then backing off
-/// exponentially between empty sweeps. `unpack(group, payload)`
-/// scatters one message.
+/// Receive one coalesced stream from every incoming peer of `pid`,
+/// completing them in **arrival order** via the shared datapath's
+/// multi-peer drain ([`ChunkStream::drain`] — non-blocking sweeps
+/// with spin-then-backoff). `unpack(group, payload)` scatters one
+/// reassembled message.
 pub(crate) fn recv_groups(
     plan: &RemapPlan,
     pid: Pid,
     t: &dyn Transport,
-    tag: Tag,
+    tag: ChunkTag,
     mut unpack: impl FnMut(&PeerGroup, Vec<u8>) -> crate::comm::Result<()>,
 ) -> crate::comm::Result<()> {
     let groups = plan.peer_recvs(pid);
-    // A single incoming peer has nothing to reorder — block directly.
-    if let [only] = groups {
-        let payload = t.recv(only.peer, tag)?;
-        return unpack(only, payload);
-    }
-    let mut pending: Vec<&PeerGroup> = groups.iter().collect();
-    let deadline = Instant::now() + RECV_WINDOW;
-    let mut delay = POLL_MIN;
-    let mut empty_sweeps = 0u32;
-    while !pending.is_empty() {
-        let mut progressed = false;
-        let mut i = 0;
-        while i < pending.len() {
-            match t.try_recv(pending[i].peer, tag)? {
-                Some(payload) => {
-                    unpack(pending.swap_remove(i), payload)?;
-                    progressed = true;
-                }
-                None => i += 1,
-            }
-        }
-        if pending.is_empty() {
-            break;
-        }
-        if progressed {
-            delay = POLL_MIN;
-            empty_sweeps = 0;
-            continue;
-        }
-        if Instant::now() >= deadline {
-            return Err(CommError::Timeout { from: pending[0].peer, tag });
-        }
-        if empty_sweeps < SPIN_SWEEPS {
-            empty_sweeps += 1;
-            std::thread::yield_now();
-        } else {
-            std::thread::sleep(delay);
-            delay = (delay * 2).min(POLL_MAX);
-        }
-    }
-    Ok(())
+    let peers: Vec<Pid> = groups.iter().map(|g| g.peer).collect();
+    ChunkStream::drain(t, &peers, tag, |i, payload| unpack(&groups[i], payload))
 }
 
 /// Offset tables for every PID participating in `map`.

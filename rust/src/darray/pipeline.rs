@@ -12,7 +12,7 @@
 use super::dense::DarrayT;
 use super::engine::{recv_groups, send_group_typed, unpack_group_typed, RemapEngine, RemapPlan};
 use super::Result;
-use crate::comm::{tags, Transport};
+use crate::comm::{tags, ChunkTag, Transport};
 use crate::dmap::{Dist, Dmap, Grid, Overlap, Pid};
 use crate::element::Element;
 
@@ -82,12 +82,13 @@ impl<T: Element> StageArrayT<T> {
         self.execute_stage_plan(&plan, dst, t, epoch)
     }
 
-    /// Stage transfers ride the remap engine's per-peer coalescing:
-    /// every range flowing between a PID pair travels as **one**
-    /// message (`[n_ranges][(dst_lo, len)…][payload]`, pooled wire
-    /// buffers, bulk codec), tagged per stage epoch in `NS_STAGE` —
-    /// not one `NS_STAGE` message per plan step as before. Incoming
-    /// peers complete in arrival order.
+    /// Stage transfers ride the remap engine's per-peer coalescing
+    /// over the shared datapath: every range flowing between a PID
+    /// pair travels as **one** chunked stream
+    /// (`[n_ranges][(dst_lo, len)…][payload]`, pooled wire buffers,
+    /// bulk codec), tagged per stage epoch in `NS_STAGE` — not one
+    /// `NS_STAGE` message per plan step as before. Incoming peers
+    /// complete in arrival order.
     fn execute_stage_plan(
         &self,
         plan: &RemapPlan,
@@ -102,7 +103,7 @@ impl<T: Element> StageArrayT<T> {
             }
             return Ok(());
         }
-        let tag = tags::pack(tags::NS_STAGE, epoch, 0);
+        let tag = ChunkTag::new(tags::NS_STAGE, epoch);
         // Overlapping membership: ranges this PID owns in both stages
         // never touch the wire.
         let src_loc: &[T] = self.local.as_ref().map_or(&[], |a| a.loc());

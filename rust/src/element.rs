@@ -257,6 +257,26 @@ pub trait Element:
         }
     }
 
+    /// Zero-copy view of a slice as its little-endian wire bytes —
+    /// `Some` on little-endian targets (where the in-memory layout
+    /// *is* the encoding), `None` elsewhere (callers fall back to
+    /// [`Element::copy_to_le`] staging). Lets bulk senders window a
+    /// typed slice straight onto the wire with no staging buffer.
+    fn as_le_bytes(src: &[Self]) -> Option<&[u8]> {
+        if cfg!(target_endian = "little") {
+            // SAFETY: the trait is sealed to f32/f64/i64/u64 — Copy
+            // POD scalars of exactly WIDTH bytes with no padding and
+            // no invalid bit patterns, so viewing the slice as raw
+            // bytes is valid; on a little-endian target those bytes
+            // are exactly the LE wire encoding (checked above).
+            Some(unsafe {
+                std::slice::from_raw_parts(src.as_ptr().cast::<u8>(), std::mem::size_of_val(src))
+            })
+        } else {
+            None
+        }
+    }
+
     /// Bulk decode: fill `dst` from exactly `dst.len() × WIDTH`
     /// little-endian bytes — the codec behind
     /// `WireReader::get_slice_into`. Single memcpy on little-endian

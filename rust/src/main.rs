@@ -38,12 +38,13 @@ fn main() {
                  \n           --dtype f32|f64|i64|u64 (native engine; default f64)\n\
                  \n           --backend host|threaded|pjrt (native engine; default host)\n\
                  \n           --coll star|tree|ring|hier|auto (collective algorithms; default star)\n\
+                 \n           --chunk-bytes N (stream chunk of the shared datapath; default 65536)\n\
                  \n           --bench-json out.json (machine-readable per-op bandwidths)\n\
                  \n  bench-remap --np 4 --n 1048576 --iters 10 --dtype f64\n\
                  \n           [--bench-json out.json] (bench_remap_v1: bytes, messages, GB/s)\n\
                  \n  bench-collective --np-list 2,4,8 --nppn 2 --bytes 65536 --iters 20\n\
-                 \n           --coll star,tree,ring,hier [--bench-json out.json]\n\
-                 \n           (bench_collective_v1: latency, bytes, messages vs P)\n\
+                 \n           --coll star,tree,ring,hier,auto [--chunk-bytes N] [--bench-json out.json]\n\
+                 \n           (bench_collective_v1: latency, bytes, messages, pool hits vs P)\n\
                  \n  sweep    fig3|fig4|petascale [--measure] [--csv] [--backend host|threaded]\n\
                  \n  report   table1|table2|fig4\n\
                  \n  validate --artifacts artifacts\n\
@@ -53,6 +54,22 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// Parse `--chunk-bytes` (absent → `default`, which may be 0 = the
+/// built-in datapath default); invalid values die with one line and
+/// exit code 2, like every other axis.
+fn parse_chunk_bytes(args: &Args, default: usize) -> Result<usize, i32> {
+    match args.flag("chunk-bytes") {
+        None => Ok(default),
+        Some(s) => match s.parse::<usize>() {
+            Ok(b) if b >= 1 => Ok(b),
+            _ => {
+                eprintln!("invalid --chunk-bytes '{s}' (expected a byte count >= 1)");
+                Err(2)
+            }
+        },
+    }
 }
 
 /// Parse one axis flag: absent → `default`, unknown value → a
@@ -144,6 +161,10 @@ fn cmd_run(args: &Args) -> i32 {
         Ok(v) => v,
         Err(code) => return code,
     };
+    let chunk_bytes = match parse_chunk_bytes(args, base.run.chunk_bytes) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
     if engine != EngineKind::Native && dtype != distarray::element::Dtype::F64 {
         eprintln!("engine {} is f64-only; use --engine native for --dtype {dtype}", engine.name());
         return 2;
@@ -198,16 +219,22 @@ fn cmd_run(args: &Args) -> i32 {
         threads: triples.ntpn,
         coll,
         nppn: triples.nppn,
+        chunk_bytes,
         artifacts,
     };
     // Any library collective in this process (darray reductions,
     // barriers) follows the configured algorithm too — and spawned
     // worker processes inherit it through the environment (read back
     // in `cmd_worker`), so an ambient-routed collective spanning the
-    // whole world runs one algorithm everywhere.
+    // whole world runs one algorithm everywhere. The datapath chunk
+    // size travels the same way.
     distarray::collective::set_ambient(coll, triples.nppn);
     std::env::set_var("DISTARRAY_COLL", coll.name());
     std::env::set_var("DISTARRAY_NPPN", triples.nppn.to_string());
+    if chunk_bytes > 0 {
+        distarray::comm::datapath::set_ambient_chunk_bytes(chunk_bytes);
+        std::env::set_var("DISTARRAY_CHUNK_BYTES", chunk_bytes.to_string());
+    }
     println!(
         "repro run: triples={triples} Np={} N={n} Nt={nt} engine={} dtype={} backend={} coll={}",
         triples.np(),
@@ -360,6 +387,11 @@ fn cmd_bench_collective(args: &Args) -> i32 {
         eprintln!("bench-collective: --bytes and --iters must be >= 1");
         return 2;
     }
+    match parse_chunk_bytes(args, 0) {
+        Ok(0) => {}
+        Ok(b) => distarray::comm::datapath::set_ambient_chunk_bytes(b),
+        Err(code) => return code,
+    }
     let mut records = Vec::new();
     for &np in &np_list {
         records.extend(bench_json::run_collective(np, nppn, &kinds, bytes, iters));
@@ -409,6 +441,13 @@ fn cmd_worker() -> i32 {
     if let Some(kind) = std::env::var("DISTARRAY_COLL").ok().as_deref().and_then(CollKind::parse) {
         let nppn = std::env::var("DISTARRAY_NPPN").ok().and_then(|s| s.parse().ok()).unwrap_or(0);
         distarray::collective::set_ambient(kind, nppn);
+    }
+    if let Some(b) = std::env::var("DISTARRAY_CHUNK_BYTES")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&b| b >= 1)
+    {
+        distarray::comm::datapath::set_ambient_chunk_bytes(b);
     }
     let t = match FileTransport::new(&env.spool, env.pid, env.np) {
         Ok(t) => t,

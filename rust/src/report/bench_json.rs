@@ -13,7 +13,8 @@
 //! of the collective subsystem is measured, not asserted — successive
 //! PRs can diff the numbers mechanically instead of scraping stdout.
 
-use crate::collective::{CollKind, Collective, ReduceOp, TagSpace, Topology};
+use crate::collective::{AllreduceOrder, CollKind, Collective, ReduceOp, TagSpace, Topology};
+use crate::comm::datapath;
 use crate::comm::{tags, ChannelHub, Transport};
 use crate::coordinator::RunConfig;
 use crate::darray::{DarrayT, RemapEngine};
@@ -90,6 +91,13 @@ pub struct RemapBench {
     pub payload_bytes: u64,
     /// Wall time of the timed iterations (max across PIDs).
     pub seconds: f64,
+    /// Global [`BufferPool`](crate::comm::BufferPool) checkouts
+    /// during the timed iterations (warm-up excluded).
+    pub pool_checkouts: u64,
+    /// Checkouts served by a reused allocation. Equal to
+    /// [`RemapBench::pool_checkouts`] in steady state — the
+    /// zero-allocation proof.
+    pub pool_hits: u64,
 }
 
 impl RemapBench {
@@ -119,6 +127,8 @@ pub fn remap_to_json(b: &RemapBench) -> Json {
     top.insert("payload_bytes".to_string(), Json::Num(b.payload_bytes as f64));
     top.insert("seconds".to_string(), Json::Num(b.seconds));
     top.insert("gb_per_sec".to_string(), Json::Num(b.gb_per_sec()));
+    top.insert("pool_checkouts".to_string(), Json::Num(b.pool_checkouts as f64));
+    top.insert("pool_hits".to_string(), Json::Num(b.pool_hits as f64));
     Json::Obj(top)
 }
 
@@ -144,9 +154,14 @@ fn run_remap_t<T: Element>(np: usize, n_global: usize, iters: usize) -> RemapBen
     assert!(np >= 1 && n_global >= 1);
     let engine = Arc::new(RemapEngine::new());
     let world = ChannelHub::world(np);
+    // Two rendezvous with the measuring parent: after warm-up (so the
+    // pool counter baseline excludes the populating allocations) and
+    // before the timed loop.
+    let gate = Arc::new(std::sync::Barrier::new(np + 1));
     let mut hs = Vec::new();
     for t in world {
         let engine = engine.clone();
+        let gate = gate.clone();
         hs.push(std::thread::spawn(move || {
             let pid = t.pid();
             let src = DarrayT::<T>::from_global_fn(Dmap::block_1d(np), &[n_global], pid, |g| {
@@ -156,6 +171,8 @@ fn run_remap_t<T: Element>(np: usize, n_global: usize, iters: usize) -> RemapBen
             // Warm-up: plans once, populates the buffer pool.
             dst.assign_from_engine(&src, &t, 0, &engine).unwrap();
             t.stats().reset();
+            gate.wait();
+            gate.wait();
             let start = Instant::now();
             for epoch in 1..=iters as u64 {
                 dst.assign_from_engine(&src, &t, epoch, &engine).unwrap();
@@ -165,6 +182,9 @@ fn run_remap_t<T: Element>(np: usize, n_global: usize, iters: usize) -> RemapBen
             (secs, msgs, bytes)
         }));
     }
+    gate.wait();
+    let (c0, h0) = datapath::pool_counters();
+    gate.wait();
     let mut seconds = 0f64;
     let mut messages = 0u64;
     let mut bytes_moved = 0u64;
@@ -174,6 +194,7 @@ fn run_remap_t<T: Element>(np: usize, n_global: usize, iters: usize) -> RemapBen
         messages += m;
         bytes_moved += b;
     }
+    let (c1, h1) = datapath::pool_counters();
     let plan = engine.plan(&Dmap::block_1d(np), &Dmap::cyclic_1d(np), &[n_global]);
     let crossing: usize = plan
         .transfers()
@@ -190,11 +211,18 @@ fn run_remap_t<T: Element>(np: usize, n_global: usize, iters: usize) -> RemapBen
         bytes_moved,
         payload_bytes: (crossing * T::WIDTH * iters) as u64,
         seconds,
+        pool_checkouts: c1 - c0,
+        pool_hits: h1 - h0,
     }
 }
 
 /// The measured collective operations, in run order.
-pub const COLL_OPS: [&str; 5] = ["bcast", "allreduce", "gather", "allgather", "barrier"];
+/// `allreduce_vec` is the long-vector shape: a whole `payload_bytes`
+/// f64 vector reduced under [`AllreduceOrder::Fast`], so an `auto`
+/// context above the elimination threshold exercises the
+/// reduce-scatter + allgather schedule.
+pub const COLL_OPS: [&str; 6] =
+    ["bcast", "allreduce", "allreduce_vec", "gather", "allgather", "barrier"];
 
 /// One measured collective data point: `(algorithm, operation, P)` →
 /// latency, messages, wire bytes.
@@ -255,6 +283,12 @@ fn coll_once(
         }
         "allreduce" => {
             coll.allreduce_scalar(t, space, t.pid() as f64 + 0.5, ReduceOp::Sum).unwrap();
+        }
+        "allreduce_vec" => {
+            let n = (payload_bytes / 8).max(1);
+            let local: Vec<f64> = vec![t.pid() as f64 * 0.5 + 1.0; n];
+            coll.allreduce_ordered(t, space, &local, ReduceOp::Sum, AllreduceOrder::Fast)
+                .unwrap();
         }
         "gather" => {
             coll.gather(t, space, vec![t.pid() as u8; part_len]).unwrap();
@@ -354,6 +388,13 @@ pub fn collective_to_json(records: &[CollBench]) -> Json {
         .collect();
     let mut top = BTreeMap::new();
     top.insert("schema".to_string(), Json::Str(COLL_SCHEMA.to_string()));
+    // Process-cumulative datapath pool counters at document build —
+    // for a dedicated `repro bench-collective` process this is the
+    // bench's own pool traffic (hits ≈ checkouts ⇒ steady-state
+    // sends allocated nothing).
+    let (pc, ph) = datapath::pool_counters();
+    top.insert("pool_checkouts".to_string(), Json::Num(pc as f64));
+    top.insert("pool_hits".to_string(), Json::Num(ph as f64));
     top.insert("runs".to_string(), Json::Arr(runs));
     Json::Obj(top)
 }
@@ -382,6 +423,7 @@ mod tests {
             threads: 4,
             coll: crate::collective::CollKind::Star,
             nppn: 0,
+            chunk_bytes: 0,
             artifacts: "artifacts".into(),
         };
         let agg = AggregateResult {
@@ -446,6 +488,14 @@ mod tests {
         assert_eq!(parsed.get("dtype").unwrap().as_str(), Some("f32"));
         assert_eq!(parsed.get("messages_per_remap").unwrap().as_usize(), Some(6));
         assert!(parsed.get("gb_per_sec").unwrap().as_f64().is_some());
+        // The pool instruments ride along (the strict 100%-hit-rate
+        // assertion lives in rust/tests/datapath_stream.rs, where the
+        // process's pool traffic is controlled).
+        let pc = parsed.get("pool_checkouts").unwrap().as_usize();
+        assert_eq!(pc, Some(b.pool_checkouts as usize));
+        assert_eq!(parsed.get("pool_hits").unwrap().as_usize(), Some(b.pool_hits as usize));
+        assert!(b.pool_hits <= b.pool_checkouts);
+        assert!(b.pool_checkouts > 0, "timed sends check buffers out of the pool");
     }
 
     #[test]
@@ -474,6 +524,8 @@ mod tests {
         assert_eq!(runs[0].get("coll").unwrap().as_str(), Some("star"));
         assert_eq!(runs[0].get("op").unwrap().as_str(), Some("bcast"));
         assert!(runs[0].get("avg_latency_us").unwrap().as_f64().is_some());
+        assert!(parsed.get("pool_checkouts").unwrap().as_usize().is_some());
+        assert!(parsed.get("pool_hits").unwrap().as_usize().is_some());
     }
 
     #[test]

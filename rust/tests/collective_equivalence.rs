@@ -9,7 +9,7 @@
 //! model (tree = P−1, ring broadcast = (P−1)·chunks, hierarchical =
 //! (P−L) intra + (L−1) inter).
 
-use distarray::collective::{CollKind, Collective, ReduceOp, TagSpace, Topology};
+use distarray::collective::{AllreduceOrder, CollKind, Collective, ReduceOp, TagSpace, Topology};
 use distarray::comm::{tags, ChannelHub, FileTransport, Transport};
 use distarray::element::Element;
 use std::path::PathBuf;
@@ -319,6 +319,206 @@ fn file_transport_matches_star_reference() {
                 assert!(gathered.is_none());
             }
         }
+    }
+}
+
+/// The gather no longer re-serializes per hop: a ring gather is
+/// chunk-pipelined and **direct**, so total traffic is O(P·chunks)
+/// messages and O(P·part) wire bytes — each part crosses exactly one
+/// link plus one 16-byte stream frame. (The old accumulating chain
+/// cost O(P²·part) wire bytes, re-encoding the bundle at every hop.)
+#[test]
+fn ring_gather_is_direct_and_chunk_pipelined() {
+    for np in NPS {
+        let part_len = 100usize;
+        let chunks = 7u64; // 100 bytes at the ctx's 16-byte chunks
+        let out = spmd_channel(np, move |t| {
+            let coll = ctx(CollKind::Ring, np);
+            let got = coll
+                .gather(t, TagSpace::packed(tags::NS_COLL, 70), vec![t.pid() as u8; part_len])
+                .unwrap();
+            if t.pid() == 0 {
+                let parts = got.expect("root holds the gather");
+                assert_eq!(parts.len(), np);
+                for (r, p) in parts.iter().enumerate() {
+                    assert_eq!(*p, vec![r as u8; part_len]);
+                }
+            } else {
+                assert!(got.is_none());
+            }
+            (t.stats().msgs_sent(), t.stats().bytes_sent())
+        });
+        let msgs: u64 = out.iter().map(|(m, _)| m).sum();
+        let bytes: u64 = out.iter().map(|(_, b)| b).sum();
+        assert_eq!(msgs, (np as u64 - 1) * chunks, "O(P·chunks) messages, np={np}");
+        assert_eq!(
+            bytes,
+            (np as u64 - 1) * (part_len as u64 + 16),
+            "O(P·part) wire bytes, np={np}"
+        );
+    }
+}
+
+/// An `auto` context under the `Fast` order waiver with the threshold
+/// forced low: the elimination (reduce-scatter + allgather) schedule
+/// must be exactly equal to the star reference for wrapping integer
+/// sums and every min/max, and tolerance-equal for f32/f64 sums
+/// (fold order follows the ring, so floats reassociate).
+fn elim_ctx(np: usize) -> Collective {
+    Collective::new(CollKind::Auto, Topology::grouped(np, 3))
+        .with_chunk_bytes(16)
+        .with_elim_threshold(1)
+}
+
+/// Per-PID, per-element contribution (order-sensitive for floats).
+fn vec_contribution<T: Element>(pid: usize, n: usize) -> Vec<T> {
+    (0..n)
+        .map(|j| T::from_f64((3 * pid + 1) as f64 + (j % 13) as f64 + pid as f64 * 0.265625))
+        .collect()
+}
+
+/// Star reference: element-wise fold in PID order.
+fn vec_reference<T: Element>(np: usize, n: usize, op: ReduceOp) -> Vec<T> {
+    (1..np).fold(vec_contribution::<T>(0, n), |acc, p| {
+        let other = vec_contribution::<T>(p, n);
+        acc.into_iter().zip(other).map(|(a, b)| op.combine(a, b)).collect()
+    })
+}
+
+fn check_elim_exact<T: Element>(np: usize, n: usize, op: ReduceOp, epoch: u64) {
+    let got = spmd_channel(np, move |t| {
+        let coll = elim_ctx(np);
+        coll.allreduce_ordered::<T>(
+            t,
+            TagSpace::packed(tags::NS_COLL, epoch),
+            &vec_contribution::<T>(t.pid(), n),
+            op,
+            AllreduceOrder::Fast,
+        )
+        .unwrap()
+    });
+    let want = vec_reference::<T>(np, n, op);
+    for g in got {
+        assert_eq!(g, want, "np={np} {op:?} {:?}", T::DTYPE);
+    }
+}
+
+#[test]
+fn elimination_allreduce_exact_for_integers_and_minmax() {
+    for np in NPS {
+        let n = 4 * np + 3; // uneven segments
+        for (i, op) in [ReduceOp::Sum, ReduceOp::Min, ReduceOp::Max].into_iter().enumerate() {
+            let epoch = (100 + np * 10 + i) as u64;
+            check_elim_exact::<i64>(np, n, op, epoch);
+            check_elim_exact::<u64>(np, n, op, epoch + 500);
+            if op != ReduceOp::Sum {
+                // Float min/max are order-free — exact under
+                // elimination too.
+                check_elim_exact::<f64>(np, n, op, epoch + 1500);
+                check_elim_exact::<f32>(np, n, op, epoch + 2500);
+            }
+        }
+    }
+}
+
+#[test]
+fn elimination_allreduce_float_sums_within_tolerance() {
+    for np in NPS {
+        let n = 4 * np + 3;
+        let got = spmd_channel(np, move |t| {
+            let coll = elim_ctx(np);
+            let f64s = coll
+                .allreduce_ordered::<f64>(
+                    t,
+                    TagSpace::packed(tags::NS_COLL, 200 + np as u64),
+                    &vec_contribution::<f64>(t.pid(), n),
+                    ReduceOp::Sum,
+                    AllreduceOrder::Fast,
+                )
+                .unwrap();
+            let f32s = coll
+                .allreduce_ordered::<f32>(
+                    t,
+                    TagSpace::packed(tags::NS_COLL, 300 + np as u64),
+                    &vec_contribution::<f32>(t.pid(), n),
+                    ReduceOp::Sum,
+                    AllreduceOrder::Fast,
+                )
+                .unwrap();
+            (f64s, f32s)
+        });
+        let want64 = vec_reference::<f64>(np, n, ReduceOp::Sum);
+        let want32 = vec_reference::<f32>(np, n, ReduceOp::Sum);
+        for (g64, g32) in got {
+            for (g, w) in g64.iter().zip(&want64) {
+                assert!((g - w).abs() <= 1e-12 * w.abs().max(1.0), "np={np} f64 {g} vs {w}");
+            }
+            for (g, w) in g32.iter().zip(&want32) {
+                assert!((g - w).abs() <= 1e-4 * w.abs().max(1.0), "np={np} f32 {g} vs {w}");
+            }
+        }
+    }
+}
+
+/// Without the `Fast` waiver the same context must stay bit-identical
+/// to the star reference — the default path is untouched by the
+/// elimination mode.
+#[test]
+fn deterministic_order_stays_bit_identical_under_auto() {
+    let np = 5;
+    let n = 23;
+    let got = spmd_channel(np, move |t| {
+        let coll = elim_ctx(np);
+        coll.allreduce_ordered::<f64>(
+            t,
+            TagSpace::packed(tags::NS_COLL, 400),
+            &vec_contribution::<f64>(t.pid(), n),
+            ReduceOp::Sum,
+            AllreduceOrder::Deterministic,
+        )
+        .unwrap()
+    });
+    let want = vec_reference::<f64>(np, n, ReduceOp::Sum);
+    for g in got {
+        for (a, b) in g.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits(), "deterministic path must match star bitwise");
+        }
+    }
+}
+
+/// The elimination cost model: each rank moves `(P−1)/P · 2n`
+/// payload bytes (plus one 16-byte stream frame per step) in exactly
+/// `2(P−1)` messages.
+#[test]
+fn elimination_cost_model_bytes_per_rank() {
+    let np = 4usize;
+    let n = 32usize; // divisible by np → equal 8-element segments
+    let out = spmd_channel(np, move |t| {
+        // Default chunk size: each 64-byte segment is a single-chunk
+        // stream, so the byte model is exact.
+        let coll = Collective::new(CollKind::Auto, Topology::grouped(np, 3))
+            .with_elim_threshold(1);
+        let got = coll
+            .allreduce_ordered::<f64>(
+                t,
+                TagSpace::packed(tags::NS_COLL, 500),
+                &vec_contribution::<f64>(t.pid(), n),
+                ReduceOp::Sum,
+                AllreduceOrder::Fast,
+            )
+            .unwrap();
+        assert_eq!(got.len(), n);
+        (t.stats().msgs_sent(), t.stats().bytes_sent())
+    });
+    let seg_bytes = (n / np) * 8;
+    let steps = 2 * (np - 1);
+    for (pid, (msgs, bytes)) in out.into_iter().enumerate() {
+        assert_eq!(msgs, steps as u64, "pid {pid}: 2(P−1) segment messages");
+        assert_eq!(
+            bytes,
+            (steps * (seg_bytes + 16)) as u64,
+            "pid {pid}: (P−1)/P·2n payload bytes + stream frames"
+        );
     }
 }
 

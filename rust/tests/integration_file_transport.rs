@@ -43,6 +43,7 @@ fn coordinator_over_file_transport() {
         threads: 1,
         coll: distarray::collective::CollKind::Star,
         nppn: 0,
+        chunk_bytes: 0,
         artifacts: "artifacts".into(),
     };
     let (agg, _) = run_leader(&leader, &cfg).unwrap();

@@ -145,6 +145,7 @@ fn coordinator_all_map_kinds() {
             threads: 1,
             coll: distarray::collective::CollKind::Star,
             nppn: 0,
+            chunk_bytes: 0,
             artifacts: "artifacts".into(),
         };
         let (agg, results) = run_leader(&leader, &cfg).unwrap();
