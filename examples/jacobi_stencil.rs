@@ -6,9 +6,13 @@
 //! 1-D heat diffusion `u' = u + α (u[i-1] - 2u[i] + u[i+1])` with
 //! fixed boundaries, distributed over a block map with overlap 1:
 //! each sweep reads one neighbour cell on each side; the right halo
-//! comes from `sync_halo`, the left boundary value is exchanged
-//! symmetrically. The distributed result is compared element-for-
-//! element against a serial reference.
+//! comes from the split `sync_halo_send`/`sync_halo_recv` pair, the
+//! left boundary value is exchanged symmetrically. Each sweep pushes
+//! its boundary messages first, computes the interior cells while
+//! they are in flight, and only then waits for the two edge inputs —
+//! the compute/communication overlap pattern at example scale. The
+//! distributed result is compared element-for-element against a
+//! serial reference.
 //!
 //! ```text
 //! cargo run --release --example jacobi_stencil
@@ -82,45 +86,57 @@ fn run_pid(t: &dyn Transport, np: usize, n: usize, sweeps: usize) -> (usize, Vec
 
     let mut next = vec![0.0f64; owned];
     for sweep in 0..sweeps {
-        // Right halo: owner pushes its first cell to the left
-        // neighbour's halo slot.
-        u.sync_halo(t, sweep as u64).unwrap();
-        // Left neighbour cell: symmetric explicit exchange (pMatlab
-        // would use a second overlap dimension; one message here).
-        let left_val = {
-            // send my first owned cell to the left; receive my right
-            // neighbour's... handled by halo. For the LEFT input cell
-            // each PID needs its left neighbour's LAST owned cell.
-            if me + 1 < np {
-                let mut w = WireWriter::new();
-                w.put_f64(u.loc()[owned - 1]);
-                // my last cell is the right neighbour's left input? No:
-                // my last cell is needed by the PID to my RIGHT.
-                t.send(me + 1, TAG_LEFT ^ ((sweep as u64) << 16), &w.finish()).unwrap();
-            }
-            if me > 0 {
-                let payload = t.recv(me - 1, TAG_LEFT ^ ((sweep as u64) << 16)).unwrap();
-                Some(WireReader::new(&payload).get_f64().unwrap())
-            } else {
-                None
-            }
-        };
+        let tag_left = TAG_LEFT ^ ((sweep as u64) << 16);
+        // Push both boundary messages before touching any cell: my
+        // first cell to the left neighbour's halo slot, my last cell
+        // to the right neighbour's left input.
+        u.sync_halo_send(t, sweep as u64).unwrap();
+        if me + 1 < np {
+            let mut w = WireWriter::new();
+            w.put_f64(u.loc()[owned - 1]);
+            t.send(me + 1, tag_left, &w.finish()).unwrap();
+        }
 
-        let stored = u.stored();
-        for i in 0..owned {
-            let g = glo + i;
-            if g == 0 || g == n - 1 {
-                next[i] = stored[i]; // fixed boundary
-                continue;
+        // Compute-on-arrival at example scale: the interior cells
+        // read only owned memory, so they sweep while the boundary
+        // exchanges are still in flight.
+        {
+            let stored = u.stored();
+            for i in 1..owned.saturating_sub(1) {
+                next[i] =
+                    stored[i] + ALPHA * (stored[i - 1] - 2.0 * stored[i] + stored[i + 1]);
             }
-            let left = if i == 0 {
-                left_val.expect("interior PID has a left neighbour")
-            } else {
-                stored[i - 1]
+        }
+
+        // Land the remote cells and finish the two edge cells.
+        u.sync_halo_recv(t, sweep as u64).unwrap();
+        let left_val = if me > 0 {
+            let payload = t.recv(me - 1, tag_left).unwrap();
+            Some(WireReader::new(&payload).get_f64().unwrap())
+        } else {
+            None
+        };
+        {
+            let stored = u.stored();
+            let mut edge = |i: usize| {
+                let g = glo + i;
+                if g == 0 || g == n - 1 {
+                    next[i] = stored[i]; // fixed boundary
+                    return;
+                }
+                let left = if i == 0 {
+                    left_val.expect("interior PID has a left neighbour")
+                } else {
+                    stored[i - 1]
+                };
+                // stored[owned] is the halo cell (right neighbour's
+                // first) — the i == owned-1 read lands there.
+                next[i] = stored[i] + ALPHA * (left - 2.0 * stored[i] + stored[i + 1]);
             };
-            // stored[owned] is the halo cell (right neighbour's first).
-            let right = stored[i + 1];
-            next[i] = stored[i] + ALPHA * (left - 2.0 * stored[i] + right);
+            edge(0);
+            if owned > 1 {
+                edge(owned - 1);
+            }
         }
         u.loc_mut().copy_from_slice(&next);
     }

@@ -24,14 +24,15 @@
 //! identical to the serial path, only the cores doing the memcpys
 //! differ.
 
+use super::sched::ReadyQueue;
 use super::{
     check_len, expect_t, expect_t_mut, for_dtype, memcpy_erased, Backend, BackendKind, Result,
 };
-use crate::comm::datapath::{self, ChunkStream, ChunkTag};
-use crate::comm::{Transport, WireWriter};
+use crate::comm::datapath::{self, ArrivedChunk, ChunkStream, ChunkTag};
+use crate::comm::{CommError, Transport, WireWriter};
 use crate::darray::engine::{
-    check_group_payload, recv_groups, remap_tag, send_group_typed, unpack_group_typed,
-    write_group_header, PeerGroup,
+    check_group_payload, recv_groups, remap_tag, scatter_payload_bytes, send_group_typed,
+    unpack_group_typed, write_group_header, GroupScatter, PeerGroup,
 };
 use crate::darray::RemapPlan;
 use crate::dmap::{GlobalRange, Pid};
@@ -39,6 +40,12 @@ use crate::element::{Dtype, ElemSlice, ElemSliceMut, Element};
 use crate::stream::ops;
 use crate::stream::threaded::{chunk_bounds, OpPool};
 use std::sync::OnceLock;
+
+/// In-flight chunks the overlapped receive path buffers between the
+/// drain (producer) and the unpack thread (consumer): enough to ride
+/// out scheduling jitter, small enough that memory stays bounded at
+/// `depth × chunk_bytes` per remap.
+const OVERLAP_QUEUE_DEPTH: usize = 8;
 
 /// Default tile: 256 KiB — comfortably inside a per-core L2 while
 /// large enough that loop overhead vanishes against memory traffic.
@@ -89,6 +96,10 @@ macro_rules! tiled {
 pub struct ChunkedThreadedBackend {
     threads: usize,
     tile_bytes: usize,
+    /// Double-buffer multi-chunk receives (compute on arrival)?
+    /// Defaults on; [`ChunkedThreadedBackend::with_overlap`] turns it
+    /// off — the bench's serial comparator and an escape hatch.
+    overlap: bool,
     /// Lazily spawned: constructing the backend (e.g. in a registry)
     /// costs nothing until a kernel actually runs.
     pool: OnceLock<OpPool>,
@@ -107,7 +118,21 @@ impl ChunkedThreadedBackend {
         } else {
             threads
         };
-        ChunkedThreadedBackend { threads, tile_bytes: tile_bytes.max(8), pool: OnceLock::new() }
+        ChunkedThreadedBackend {
+            threads,
+            tile_bytes: tile_bytes.max(8),
+            overlap: true,
+            pool: OnceLock::new(),
+        }
+    }
+
+    /// Enable/disable the overlapped (double-buffered) receive path.
+    /// Off, every remap receive reassembles whole messages before
+    /// unpacking — the serial reference the equivalence tests and the
+    /// overlap bench compare against.
+    pub fn with_overlap(mut self, overlap: bool) -> ChunkedThreadedBackend {
+        self.overlap = overlap;
+        self
     }
 
     pub fn threads(&self) -> usize {
@@ -313,14 +338,138 @@ impl ChunkedThreadedBackend {
                 send_group_typed::<T>(g, src, t, tag)?;
             }
         }
-        recv_groups(plan, pid, t, tag, |g, payload| {
-            if self.parallel_payload::<T>(g) {
-                self.unpack_group_par::<T>(g, &payload, dst)
-            } else {
-                unpack_group_typed::<T>(g, &payload, dst)
-            }
-        })?;
+        // Multi-chunk incoming streams are consumed on arrival: the
+        // drain thread receives chunk k while the unpack thread
+        // scatters chunk k − 1. Single-chunk (sub-chunk-size) streams
+        // gain nothing from a second thread — they stay on the
+        // reassembling path, as do big-endian targets and explicit
+        // `with_overlap(false)` backends.
+        let multi_chunk = plan
+            .peer_recvs(pid)
+            .iter()
+            .any(|g| g.header_bytes() + 9 + g.total * T::WIDTH > datapath::ambient_chunk_bytes());
+        if self.overlap && cfg!(target_endian = "little") && multi_chunk {
+            self.recv_groups_overlapped::<T>(plan, pid, t, tag, dst)?;
+        } else {
+            recv_groups(plan, pid, t, tag, |g, payload| {
+                if self.parallel_payload::<T>(g) {
+                    self.unpack_group_par::<T>(g, &payload, dst)
+                } else {
+                    unpack_group_typed::<T>(g, &payload, dst)
+                }
+            })?;
+        }
         Ok(())
+    }
+
+    /// Double-buffered receive: the calling thread runs the chunk-
+    /// granular drain and pushes each landed [`ArrivedChunk`] into a
+    /// bounded [`ReadyQueue`]; a scoped consumer thread pops and
+    /// scatters each chunk straight into `dst` (pool-parallel for
+    /// tile-sized windows, serial otherwise). Wire time and unpack
+    /// time overlap instead of adding; wire bytes and destination
+    /// contents are bit-identical to the serial path.
+    fn recv_groups_overlapped<T: Element>(
+        &self,
+        plan: &RemapPlan,
+        pid: Pid,
+        t: &dyn Transport,
+        tag: ChunkTag,
+        dst: &mut [T],
+    ) -> crate::comm::Result<()> {
+        let groups = plan.peer_recvs(pid);
+        for g in groups {
+            assert!(
+                g.local_extent <= dst.len(),
+                "remap plan/slice mismatch: group writes {} destination elements, slice has {}",
+                g.local_extent,
+                dst.len()
+            );
+        }
+        let peers: Vec<Pid> = groups.iter().map(|g| g.peer).collect();
+        let queue = ReadyQueue::<ArrivedChunk>::new(OVERLAP_QUEUE_DEPTH);
+        let consumer_stopped = std::cell::Cell::new(false);
+        std::thread::scope(|s| {
+            let consumer = s.spawn(|| {
+                let mut scatters: Vec<GroupScatter<'_, T>> =
+                    groups.iter().map(GroupScatter::new).collect();
+                let mut res: crate::comm::Result<()> = Ok(());
+                while let Some(c) = queue.pop() {
+                    match scatters[c.peer_idx].feed_raw(c.payload()) {
+                        Ok(None) => {}
+                        Ok(Some((off, win))) => {
+                            let g = &groups[c.peer_idx];
+                            if win.len() >= self.tile_bytes && self.parallel_payload::<T>(g) {
+                                self.scatter_window_par::<T>(g, off, win, dst);
+                            } else {
+                                scatter_payload_bytes::<T>(g, off, win, dst);
+                            }
+                        }
+                        Err(e) => {
+                            res = Err(e);
+                            break;
+                        }
+                    }
+                }
+                // Unblocks a producer stuck on a full queue when we
+                // bailed early; harmless after a normal drain.
+                queue.close();
+                if res.is_ok() {
+                    res = scatters.iter().try_for_each(GroupScatter::finish);
+                }
+                res
+            });
+            let prod = ChunkStream::drain_chunks(t, &peers, tag, |c| {
+                if queue.push(c) {
+                    Ok(())
+                } else {
+                    consumer_stopped.set(true);
+                    Err(CommError::Malformed("overlapped unpack consumer stopped".into()))
+                }
+            });
+            queue.close();
+            let cons = consumer.join().expect("overlap unpack thread panicked");
+            // When the drain failed only because the consumer bailed,
+            // the consumer's error is the root cause.
+            if consumer_stopped.get() {
+                cons.and(prod)
+            } else {
+                prod.and(cons)
+            }
+        })
+    }
+
+    /// Pool-parallel scatter of one landed chunk's payload window:
+    /// split-element edge bytes (a window boundary can bisect an
+    /// element) go serially, the whole-element body fans out over the
+    /// pinned pool — the gang that unpacks chunk k − 1 while chunk k
+    /// rides the wire.
+    fn scatter_window_par<T: Element>(
+        &self,
+        g: &PeerGroup,
+        byte_off: usize,
+        win: &[u8],
+        dst: &mut [T],
+    ) {
+        let width = T::WIDTH;
+        let head = ((width - byte_off % width) % width).min(win.len());
+        if head > 0 {
+            scatter_payload_bytes::<T>(g, byte_off, &win[..head], dst);
+        }
+        let body = (win.len() - head) / width * width;
+        if body > 0 {
+            self.run_payload_copy::<T>(
+                g,
+                dst.as_mut_ptr() as usize,
+                win[head..].as_ptr() as usize,
+                CopyDir::Unpack,
+                (byte_off + head) / width,
+                body / width,
+            );
+        }
+        if head + body < win.len() {
+            scatter_payload_bytes::<T>(g, byte_off + head + body, &win[head + body..], dst);
+        }
     }
 
     /// Pack one coalesced message with the pinned pool: the payload
@@ -362,7 +511,7 @@ impl ChunkedThreadedBackend {
         unsafe { buf.set_len(prefix + nbytes) };
         payload.restore(buf);
         let pay_addr = payload.as_mut_ptr() as usize + prefix;
-        self.run_payload_copy::<T>(g, src.as_ptr() as usize, pay_addr, CopyDir::Pack);
+        self.run_payload_copy::<T>(g, src.as_ptr() as usize, pay_addr, CopyDir::Pack, 0, g.total);
         ChunkStream::send(
             t,
             g.peer,
@@ -393,34 +542,40 @@ impl ChunkedThreadedBackend {
             dst.as_mut_ptr() as usize,
             bytes.as_ptr() as usize,
             CopyDir::Unpack,
+            0,
+            g.total,
         );
         Ok(())
     }
 
     /// The shared gang kernel behind parallel pack and unpack: copy
     /// between the local slice (`local_addr`, indexed by the group's
-    /// `local_offsets`) and the packed payload bytes (`payload_addr`,
-    /// indexed by the element prefix sums), chunking the payload
-    /// element space evenly across threads.
+    /// `local_offsets`) and packed payload bytes (`payload_addr`,
+    /// which points at the packed bytes of element `base`), chunking
+    /// the `span`-element payload window `[base, base + span)` evenly
+    /// across threads. Whole-message callers pass `(0, g.total)`; the
+    /// overlapped receive passes one landed chunk's element window.
     fn run_payload_copy<T: Element>(
         &self,
         g: &PeerGroup,
         local_addr: usize,
         payload_addr: usize,
         dir: CopyDir,
+        base: usize,
+        span: usize,
     ) {
         let threads = self.threads;
-        let total = g.total;
         let n_segs = g.ranges.len();
         let ranges_addr = g.ranges.as_ptr() as usize;
         let loffs_addr = g.local_offsets.as_ptr() as usize;
         let poffs_addr = g.payload_offsets.as_ptr() as usize;
         let width = T::WIDTH;
         self.pool().run(move |tid| {
-            let (elo, ehi) = chunk_bounds(threads, total, tid);
-            if elo >= ehi {
+            let (lo, hi) = chunk_bounds(threads, span, tid);
+            if lo >= hi {
                 return;
             }
+            let (mut pos, ehi) = (base + lo, base + hi);
             // SAFETY: the group's vectors and both buffers outlive the
             // pool's blocking `run` call; per-tid payload spans are
             // disjoint, and the local-side ranges they touch are the
@@ -432,13 +587,12 @@ impl ChunkedThreadedBackend {
                     slice_at::<usize>(poffs_addr, 0, n_segs),
                 )
             };
-            let mut k = poffs.partition_point(|&p| p <= elo) - 1;
-            let mut pos = elo;
+            let mut k = poffs.partition_point(|&p| p <= pos) - 1;
             while pos < ehi {
                 let within = pos - poffs[k];
                 let n = (ranges[k].len() - within).min(ehi - pos);
                 let local = (loffs[k] + within) * width;
-                let packed = pos * width;
+                let packed = (pos - base) * width;
                 // SAFETY: in-bounds per the plan's offset tables; on a
                 // little-endian target (checked by the caller) raw
                 // element bytes ARE the wire encoding.

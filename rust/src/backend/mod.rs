@@ -44,7 +44,7 @@ pub use chunked::ChunkedThreadedBackend;
 pub use host::HostBackend;
 pub use pjrt::PjrtBackend;
 pub use registry::BackendRegistry;
-pub use sched::{run_stream_dtype, run_stream_spmd_t, run_stream_t};
+pub use sched::{run_stream_dtype, run_stream_spmd_t, run_stream_t, ReadyQueue};
 
 use crate::comm::{CommError, Transport};
 use crate::darray::RemapPlan;

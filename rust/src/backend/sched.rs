@@ -147,11 +147,141 @@ pub fn run_stream_dtype(
     }
 }
 
+/// A small bounded MPSC hand-off queue — the double-buffering
+/// primitive of the compute-on-arrival datapath.
+///
+/// The receive loop (producer) pushes each landed
+/// [`ArrivedChunk`](crate::comm::datapath::ArrivedChunk) while the
+/// unpack thread (consumer) pops and scatters the previous one: chunk
+/// `k` rides the wire while chunk `k − 1` is being consumed. The
+/// bound keeps the producer from racing arbitrarily far ahead of a
+/// slow consumer (bounded buffering, not unbounded queueing), and a
+/// consumer-side [`ReadyQueue::close`] releases a blocked producer so
+/// an unpack error can't deadlock the drain.
+pub struct ReadyQueue<T> {
+    state: std::sync::Mutex<RqState<T>>,
+    /// Signaled when an item lands or the queue closes (consumer waits).
+    avail: std::sync::Condvar,
+    /// Signaled when capacity frees or the queue closes (producer waits).
+    space: std::sync::Condvar,
+    cap: usize,
+}
+
+struct RqState<T> {
+    q: std::collections::VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> ReadyQueue<T> {
+    /// A queue holding at most `cap` in-flight items (floored to 1).
+    pub fn new(cap: usize) -> ReadyQueue<T> {
+        ReadyQueue {
+            state: std::sync::Mutex::new(RqState {
+                q: std::collections::VecDeque::with_capacity(cap.max(1)),
+                closed: false,
+            }),
+            avail: std::sync::Condvar::new(),
+            space: std::sync::Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Enqueue one item, blocking while the queue is full. Returns
+    /// `false` (dropping the item) if the queue was closed — the
+    /// producer's signal to stop feeding.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.q.len() >= self.cap && !st.closed {
+            st = self.space.wait(st).unwrap();
+        }
+        if st.closed {
+            return false;
+        }
+        st.q.push_back(item);
+        drop(st);
+        self.avail.notify_one();
+        true
+    }
+
+    /// Dequeue the next item, blocking while the queue is empty.
+    /// Returns `None` once the queue is closed **and** drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.q.pop_front() {
+                drop(st);
+                self.space.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.avail.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: a draining consumer still sees every queued
+    /// item; a blocked producer wakes and returns `false`. Called by
+    /// the producer when its stream ends, or by the consumer on error.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.avail.notify_all();
+        self.space.notify_all();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::{BackendKind, BackendRegistry};
     use super::*;
     use crate::stream::STREAM_Q;
+
+    #[test]
+    fn ready_queue_is_fifo_across_threads() {
+        let q = std::sync::Arc::new(ReadyQueue::<usize>::new(4));
+        let qp = q.clone();
+        let producer = std::thread::spawn(move || {
+            for i in 0..1000 {
+                assert!(qp.push(i), "queue closed early");
+            }
+            qp.close();
+        });
+        let mut expect = 0usize;
+        while let Some(i) = q.pop() {
+            assert_eq!(i, expect, "FIFO order");
+            expect += 1;
+        }
+        assert_eq!(expect, 1000, "every item delivered before close-drain");
+        producer.join().unwrap();
+    }
+
+    #[test]
+    fn ready_queue_close_releases_a_blocked_producer() {
+        let q = std::sync::Arc::new(ReadyQueue::<usize>::new(1));
+        assert!(q.push(0), "first push fits");
+        let qp = q.clone();
+        // Second push blocks on the full queue until the consumer
+        // side closes (the unpack-error path).
+        let producer = std::thread::spawn(move || qp.push(1));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert!(!producer.join().unwrap(), "close must reject the blocked push");
+        // The queued item survives for a draining consumer.
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), None, "closed and drained");
+    }
+
+    #[test]
+    fn ready_queue_pop_blocks_until_item_or_close() {
+        let q = std::sync::Arc::new(ReadyQueue::<&'static str>::new(2));
+        let qc = q.clone();
+        let consumer = std::thread::spawn(move || (qc.pop(), qc.pop()));
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(q.push("a"));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), (Some("a"), None));
+        assert!(!q.push("b"), "push after close is rejected");
+    }
 
     #[test]
     fn host_backend_stream_validates() {

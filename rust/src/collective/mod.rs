@@ -415,6 +415,9 @@ pub struct Collective {
     topo: Topology,
     chunk_bytes: usize,
     elim_threshold: usize,
+    /// Fold elimination-allreduce segments chunk-by-chunk as they
+    /// land instead of after the whole segment is reassembled.
+    overlap: bool,
 }
 
 impl Collective {
@@ -442,6 +445,7 @@ impl Collective {
             topo,
             chunk_bytes: datapath::ambient_chunk_bytes(),
             elim_threshold: ELIM_THRESHOLD_BYTES,
+            overlap: true,
         }
     }
 
@@ -464,6 +468,18 @@ impl Collective {
     /// reduce-scatter schedule with tiny vectors).
     pub fn with_elim_threshold(mut self, bytes: usize) -> Collective {
         self.elim_threshold = bytes;
+        self
+    }
+
+    /// Toggle compute-on-arrival for the elimination allreduce
+    /// (default on): each reduce-scatter chunk is folded — and each
+    /// allgather chunk decoded into place — the moment it lands, so
+    /// the combine of chunk `k` overlaps the wire of chunk `k+1`.
+    /// The per-element fold is identical to the reassembled path, so
+    /// results are bit-identical either way; `false` restores the
+    /// whole-segment receive (the bench's serial reference).
+    pub fn with_overlap(mut self, overlap: bool) -> Collective {
+        self.overlap = overlap;
         self
     }
 
@@ -768,27 +784,37 @@ impl Collective {
         let ag_tag = space.chunk_tag(0, PH_AG);
         // Phase 1 — reduce-scatter. All sends to `next` share one tag
         // lane: the transport's per-(src, dst, tag) FIFO sequences the
-        // steps. The incoming scratch is unavoidable here (the
-        // received partial must be *combined* with the local copy,
-        // not written over it).
+        // steps. With overlap on, each landed chunk is folded while
+        // `prev` is still pushing the next one; the serial fallback
+        // reassembles the whole segment first and folds after (same
+        // per-element combine, bit-identical result).
         for s in 0..p - 1 {
             let (slo, shi) = seg((me + p - s) % p);
             Self::send_segment(t, next, rs_tag, self.chunk_bytes, &acc[slo..shi])?;
             let (rlo, rhi) = seg((me + p - s - 1) % p);
-            incoming.resize(rhi - rlo, T::ZERO);
-            Self::recv_segment_into(t, prev, rs_tag, &mut incoming)?;
-            for (a, b) in acc[rlo..rhi].iter_mut().zip(&incoming) {
-                *a = op.combine(*b, *a);
+            if self.overlap {
+                Self::recv_segment_fold(t, prev, rs_tag, &mut acc[rlo..rhi], op, &mut incoming)?;
+            } else {
+                incoming.resize(rhi - rlo, T::ZERO);
+                Self::recv_segment_into(t, prev, rs_tag, &mut incoming)?;
+                for (a, b) in acc[rlo..rhi].iter_mut().zip(&incoming) {
+                    *a = op.combine(*b, *a);
+                }
             }
         }
         // Phase 2 — allgather: forward the segment received last
         // step, starting from the fully reduced one this rank owns;
-        // received segments decode straight into their final slot.
+        // received segments decode straight into their final slot
+        // (chunk by chunk when overlap is on).
         for s in 0..p - 1 {
             let (slo, shi) = seg((me + 1 + p - s) % p);
             Self::send_segment(t, next, ag_tag, self.chunk_bytes, &acc[slo..shi])?;
             let (rlo, rhi) = seg((me + p - s) % p);
-            Self::recv_segment_into(t, prev, ag_tag, &mut acc[rlo..rhi])?;
+            if self.overlap {
+                Self::recv_segment_streamed(t, prev, ag_tag, &mut acc[rlo..rhi])?;
+            } else {
+                Self::recv_segment_into(t, prev, ag_tag, &mut acc[rlo..rhi])?;
+            }
         }
         Ok(acc)
     }
@@ -836,6 +862,122 @@ impl Collective {
         }
         T::copy_from_le(&bytes, dst);
         Ok(())
+    }
+
+    /// Size check shared by the streaming segment receivers: the
+    /// stream frame's `total` must match the expected segment exactly.
+    fn check_segment_bytes<T: Element>(total: usize, elems: usize) -> Result<()> {
+        if total != elems * T::WIDTH {
+            return Err(CommError::Malformed(format!(
+                "elimination segment is {} bytes, expected {} ({} × {})",
+                total,
+                elems * T::WIDTH,
+                elems,
+                T::WIDTH
+            )));
+        }
+        Ok(())
+    }
+
+    /// Compute-on-arrival reduce-scatter receive: fold each chunk of
+    /// the incoming segment into `acc` the moment it lands, so the
+    /// combine of chunk `k` overlaps the wire of chunk `k+1`. Chunk
+    /// boundaries need not align with elements — a split element is
+    /// completed through a tiny carry buffer — and elements are folded
+    /// in order with the same `combine(incoming, local)` orientation as
+    /// the reassembled path, so the result is bit-identical to
+    /// [`Collective::recv_segment_into`] + fold. `scratch` is the
+    /// caller's reusable decode buffer (grown to at most one chunk).
+    fn recv_segment_fold<T: Element>(
+        t: &dyn Transport,
+        from: Pid,
+        tag: ChunkTag,
+        acc: &mut [T],
+        op: ReduceOp,
+        scratch: &mut Vec<T>,
+    ) -> Result<()> {
+        let width = T::WIDTH;
+        let mut carry = [0u8; 16];
+        let mut carry_len = 0usize;
+        let mut pos = 0usize;
+        ChunkStream::drain_chunks(t, &[from], tag, |c| {
+            if c.chunk_idx == 0 {
+                Self::check_segment_bytes::<T>(c.total, acc.len())?;
+            }
+            let mut bytes = c.payload();
+            if carry_len > 0 {
+                let take = (width - carry_len).min(bytes.len());
+                carry[carry_len..carry_len + take].copy_from_slice(&bytes[..take]);
+                carry_len += take;
+                bytes = &bytes[take..];
+                if carry_len == width {
+                    let mut one = [T::ZERO];
+                    T::copy_from_le(&carry[..width], &mut one);
+                    acc[pos] = op.combine(one[0], acc[pos]);
+                    pos += 1;
+                    carry_len = 0;
+                }
+            }
+            let n = bytes.len() / width;
+            if n > 0 {
+                scratch.resize(n, T::ZERO);
+                T::copy_from_le(&bytes[..n * width], &mut scratch[..n]);
+                for (a, b) in acc[pos..pos + n].iter_mut().zip(&scratch[..n]) {
+                    *a = op.combine(*b, *a);
+                }
+                pos += n;
+            }
+            let rem = bytes.len() - n * width;
+            if rem > 0 {
+                carry[..rem].copy_from_slice(&bytes[n * width..]);
+                carry_len = rem;
+            }
+            Ok(())
+        })
+    }
+
+    /// Compute-on-arrival allgather receive: decode each chunk of the
+    /// incoming segment straight into its final slot in `dst` as it
+    /// lands (split elements complete through the carry buffer, same
+    /// as [`Collective::recv_segment_fold`]).
+    fn recv_segment_streamed<T: Element>(
+        t: &dyn Transport,
+        from: Pid,
+        tag: ChunkTag,
+        dst: &mut [T],
+    ) -> Result<()> {
+        let width = T::WIDTH;
+        let mut carry = [0u8; 16];
+        let mut carry_len = 0usize;
+        let mut pos = 0usize;
+        ChunkStream::drain_chunks(t, &[from], tag, |c| {
+            if c.chunk_idx == 0 {
+                Self::check_segment_bytes::<T>(c.total, dst.len())?;
+            }
+            let mut bytes = c.payload();
+            if carry_len > 0 {
+                let take = (width - carry_len).min(bytes.len());
+                carry[carry_len..carry_len + take].copy_from_slice(&bytes[..take]);
+                carry_len += take;
+                bytes = &bytes[take..];
+                if carry_len == width {
+                    T::copy_from_le(&carry[..width], &mut dst[pos..pos + 1]);
+                    pos += 1;
+                    carry_len = 0;
+                }
+            }
+            let n = bytes.len() / width;
+            if n > 0 {
+                T::copy_from_le(&bytes[..n * width], &mut dst[pos..pos + n]);
+                pos += n;
+            }
+            let rem = bytes.len() - n * width;
+            if rem > 0 {
+                carry[..rem].copy_from_slice(&bytes[n * width..]);
+                carry_len = rem;
+            }
+            Ok(())
+        })
     }
 
     /// Barrier over the whole world.

@@ -108,7 +108,7 @@ impl Transport for ChannelTransport {
             }
             let now = Instant::now();
             if now >= deadline {
-                return Err(CommError::Timeout { from, tag });
+                return Err(CommError::timeout(from, tag));
             }
             let (guard, _t) = slot.cv.wait_timeout(mbox, deadline - now).unwrap();
             mbox = guard;

@@ -137,45 +137,108 @@ const POLL_MIN: Duration = Duration::from_micros(20);
 /// Backoff cap — bounds worst-case added latency per chunk.
 const POLL_MAX: Duration = Duration::from_millis(1);
 
+/// Wire size of the stream frame at the head of chunk 0:
+/// `[total: u64][n_chunks: u64]`.
+const FRAME_BYTES: usize = 16;
+
 /// The chunked stream writer/reader — all methods are stateless
 /// associated functions over a [`Transport`].
 pub struct ChunkStream;
 
-/// Reassembly state of one incoming stream.
-struct Reassembly {
+/// One landed chunk of an incoming stream, delivered by
+/// [`ChunkStream::drain_chunks`] the moment it arrives. Owns its wire
+/// message, so a consumer can hand the whole value to another thread
+/// (a ready-queue) without copying a byte.
+#[derive(Debug)]
+pub struct ArrivedChunk {
+    /// The sending peer.
+    pub peer: Pid,
+    /// Caller-side index of the peer in the `peers` slice.
+    pub peer_idx: usize,
+    /// This chunk's index within its stream.
+    pub chunk_idx: usize,
+    /// Chunks in the whole stream (parsed off chunk 0's frame).
+    pub n_chunks: usize,
+    /// Total payload bytes of the whole stream.
+    pub total: usize,
+    /// Byte offset of this chunk's first payload byte in the stream.
+    pub offset: usize,
+    /// Final chunk of its stream?
+    pub is_last: bool,
+    data: Vec<u8>,
+    /// Payload start within `data` ([`FRAME_BYTES`] on chunk 0).
+    start: usize,
+}
+
+impl ArrivedChunk {
+    /// This chunk's payload bytes (the frame already stripped).
+    pub fn payload(&self) -> &[u8] {
+        &self.data[self.start..]
+    }
+}
+
+/// Progress state of one incoming stream under a chunk-granular
+/// drain: frame fields plus the byte cursor — no reassembly buffer.
+struct Incoming {
     peer: Pid,
     /// Caller-side index of this peer (stable across completions).
     idx: usize,
     next_chunk: usize,
-    /// 0 until chunk 0's header has been parsed.
+    /// 0 until chunk 0's frame has been parsed.
     n_chunks: usize,
     total: usize,
-    buf: Vec<u8>,
+    offset: usize,
 }
 
-impl Reassembly {
-    /// Feed one received chunk; `Ok(true)` when the stream completed.
-    fn feed(&mut self, chunk: Vec<u8>) -> Result<bool> {
-        if self.next_chunk == 0 {
-            let (total, n_chunks, buf) = parse_first(&chunk)?;
+impl Incoming {
+    fn new(peer: Pid, idx: usize) -> Incoming {
+        Incoming { peer, idx, next_chunk: 0, n_chunks: 0, total: 0, offset: 0 }
+    }
+
+    /// Feed one received wire message; returns the landed chunk and
+    /// whether its stream is now complete.
+    fn feed(&mut self, data: Vec<u8>) -> Result<(ArrivedChunk, bool)> {
+        let start = if self.next_chunk == 0 {
+            let (total, n_chunks) = parse_frame(&data)?;
             self.total = total;
             self.n_chunks = n_chunks;
-            self.buf = buf;
+            FRAME_BYTES
         } else {
-            self.buf.extend_from_slice(&chunk);
+            0
+        };
+        let offset = self.offset;
+        let len = data.len() - start;
+        if offset + len > self.total {
+            return Err(CommError::Malformed(format!(
+                "chunk stream overflows: {} of {} framed bytes",
+                offset + len,
+                self.total
+            )));
         }
+        self.offset = offset + len;
+        let chunk_idx = self.next_chunk;
         self.next_chunk += 1;
-        if self.next_chunk < self.n_chunks {
-            return Ok(false);
+        let is_last = self.next_chunk == self.n_chunks;
+        if is_last {
+            check_total(self.offset, self.total)?;
         }
-        check_total(self.buf.len(), self.total)?;
-        Ok(true)
+        let chunk = ArrivedChunk {
+            peer: self.peer,
+            peer_idx: self.idx,
+            chunk_idx,
+            n_chunks: self.n_chunks,
+            total: self.total,
+            offset,
+            is_last,
+            data,
+            start,
+        };
+        Ok((chunk, is_last))
     }
 }
 
-/// Parse chunk 0: the `[total][n_chunks]` frame plus the first
-/// payload bytes, returned in a buffer sized for the whole stream.
-fn parse_first(first: &[u8]) -> Result<(usize, usize, Vec<u8>)> {
+/// Parse and validate chunk 0's `[total][n_chunks]` frame.
+fn parse_frame(first: &[u8]) -> Result<(usize, usize)> {
     let mut rd = WireReader::new(first);
     let total = rd.get_usize()?;
     let n_chunks = rd.get_usize()?;
@@ -184,9 +247,7 @@ fn parse_first(first: &[u8]) -> Result<(usize, usize, Vec<u8>)> {
             "chunk stream frames {n_chunks} chunks (valid: 1..={MAX_CHUNKS})"
         )));
     }
-    let mut buf = Vec::with_capacity(total);
-    buf.extend_from_slice(rd.take_raw(rd.remaining())?);
-    Ok((total, n_chunks, buf))
+    Ok((total, n_chunks))
 }
 
 fn check_total(got: usize, total: usize) -> Result<()> {
@@ -196,6 +257,46 @@ fn check_total(got: usize, total: usize) -> Result<()> {
         )));
     }
     Ok(())
+}
+
+/// The drain's spin-then-sleep backoff: yield for the first
+/// [`SPIN_SWEEPS`] empty sweeps, then sleep with exponential growth
+/// capped at [`POLL_MAX`]. Any progress resets it to spinning from
+/// [`POLL_MIN`], so a stream that keeps advancing is polled hot.
+pub(crate) struct Backoff {
+    delay: Duration,
+    empty_sweeps: u32,
+}
+
+impl Backoff {
+    pub(crate) fn new() -> Backoff {
+        Backoff { delay: POLL_MIN, empty_sweeps: 0 }
+    }
+
+    /// Record progress: the next empty sweep spins again and the first
+    /// sleep after that restarts at [`POLL_MIN`].
+    pub(crate) fn progress(&mut self) {
+        self.delay = POLL_MIN;
+        self.empty_sweeps = 0;
+    }
+
+    /// One empty sweep: yield while still spinning, otherwise sleep
+    /// and double the next delay (capped).
+    pub(crate) fn wait(&mut self) {
+        if self.empty_sweeps < SPIN_SWEEPS {
+            self.empty_sweeps += 1;
+            std::thread::yield_now();
+        } else {
+            std::thread::sleep(self.delay);
+            self.delay = (self.delay * 2).min(POLL_MAX);
+        }
+    }
+
+    /// The next sleep this backoff would take (the reset instrument).
+    #[cfg(test)]
+    pub(crate) fn delay(&self) -> Duration {
+        self.delay
+    }
 }
 
 impl ChunkStream {
@@ -269,7 +370,12 @@ impl ChunkStream {
         if let Some(nx) = next {
             t.send(nx, tag.at(0), &first)?;
         }
-        let (total, n_chunks, mut out) = parse_first(&first)?;
+        let (total, n_chunks) = parse_frame(&first)?;
+        // Pre-reserve `total` off chunk 0's frame: a multi-chunk
+        // receive allocates its output exactly once, never growing
+        // through the doubling path mid-stream.
+        let mut out = Vec::with_capacity(total);
+        out.extend_from_slice(&first[FRAME_BYTES..]);
         for c in 1..n_chunks {
             let chunk = t.recv(from, tag.at(c as u64))?;
             if let Some(nx) = next {
@@ -286,37 +392,87 @@ impl ChunkStream {
     /// non-blocking receives, spinning briefly then backing off
     /// exponentially between empty sweeps. `on_payload(i, bytes)` is
     /// called once per peer with `i` indexing into `peers`.
+    ///
+    /// Built on [`ChunkStream::drain_chunks`]: the payload buffer is
+    /// reserved once off the frame and filled as chunks land — kept
+    /// for consumers that genuinely need the contiguous bytes;
+    /// compute-on-arrival consumers should take `drain_chunks`
+    /// directly and skip the reassembly copy entirely.
     pub fn drain(
         t: &dyn Transport,
         peers: &[Pid],
         tag: ChunkTag,
         mut on_payload: impl FnMut(usize, Vec<u8>) -> Result<()>,
     ) -> Result<()> {
+        let mut bufs: Vec<Vec<u8>> = Vec::new();
+        bufs.resize_with(peers.len(), Vec::new);
+        Self::drain_chunks(t, peers, tag, |c| {
+            let buf = &mut bufs[c.peer_idx];
+            if c.chunk_idx == 0 {
+                buf.reserve_exact(c.total);
+            }
+            buf.extend_from_slice(c.payload());
+            if c.is_last {
+                on_payload(c.peer_idx, std::mem::take(buf))
+            } else {
+                Ok(())
+            }
+        })
+    }
+
+    /// Chunk-granular drain: receive one stream from **every** peer in
+    /// `peers`, firing `on_chunk` the moment each chunk lands — the
+    /// compute-on-arrival primitive. Chunks of one stream arrive in
+    /// order; streams from different peers interleave in arrival
+    /// order (the same non-blocking sweep + spin-then-backoff loop as
+    /// [`ChunkStream::drain`]). A single-peer drain blocks per chunk
+    /// instead of sweeping, so the callback still overlaps the
+    /// sender's next chunk.
+    pub fn drain_chunks(
+        t: &dyn Transport,
+        peers: &[Pid],
+        tag: ChunkTag,
+        on_chunk: impl FnMut(ArrivedChunk) -> Result<()>,
+    ) -> Result<()> {
+        Self::drain_chunks_window(t, peers, tag, RECV_WINDOW, on_chunk)
+    }
+
+    /// [`ChunkStream::drain_chunks`] with an explicit stall window:
+    /// the drain times out only after `window` elapses **without any
+    /// progress** (every landed chunk resets the deadline, so a slow
+    /// but advancing peer is never killed mid-stream). The timeout
+    /// error names every stalled peer and its next-expected chunk.
+    pub fn drain_chunks_window(
+        t: &dyn Transport,
+        peers: &[Pid],
+        tag: ChunkTag,
+        window: Duration,
+        mut on_chunk: impl FnMut(ArrivedChunk) -> Result<()>,
+    ) -> Result<()> {
         match peers {
             [] => return Ok(()),
             // A single incoming stream has nothing to reorder —
-            // block directly.
+            // block per chunk.
             &[only] => {
-                let payload = Self::recv(t, only, tag)?;
-                return on_payload(0, payload);
+                let mut inc = Incoming::new(only, 0);
+                loop {
+                    let msg = t.recv_timeout(only, tag.at(inc.next_chunk as u64), window)?;
+                    let (chunk, done) = inc.feed(msg)?;
+                    on_chunk(chunk)?;
+                    if done {
+                        return Ok(());
+                    }
+                }
             }
             _ => {}
         }
-        let mut pending: Vec<Reassembly> = peers
+        let mut pending: Vec<Incoming> = peers
             .iter()
             .enumerate()
-            .map(|(idx, &peer)| Reassembly {
-                peer,
-                idx,
-                next_chunk: 0,
-                n_chunks: 0,
-                total: 0,
-                buf: Vec::new(),
-            })
+            .map(|(idx, &peer)| Incoming::new(peer, idx))
             .collect();
-        let deadline = Instant::now() + RECV_WINDOW;
-        let mut delay = POLL_MIN;
-        let mut empty_sweeps = 0u32;
+        let mut deadline = Instant::now() + window;
+        let mut backoff = Backoff::new();
         while !pending.is_empty() {
             let mut progressed = false;
             let mut i = 0;
@@ -325,18 +481,19 @@ impl ChunkStream {
                 // (consecutive chunks of a hot stream complete back
                 // to back).
                 let mut done = false;
-                while let Some(chunk) =
+                while let Some(msg) =
                     t.try_recv(pending[i].peer, tag.at(pending[i].next_chunk as u64))?
                 {
                     progressed = true;
-                    if pending[i].feed(chunk)? {
+                    let (chunk, fin) = pending[i].feed(msg)?;
+                    on_chunk(chunk)?;
+                    if fin {
                         done = true;
                         break;
                     }
                 }
                 if done {
-                    let r = pending.swap_remove(i);
-                    on_payload(r.idx, r.buf)?;
+                    pending.swap_remove(i);
                 } else {
                     i += 1;
                 }
@@ -345,23 +502,22 @@ impl ChunkStream {
                 break;
             }
             if progressed {
-                delay = POLL_MIN;
-                empty_sweeps = 0;
+                backoff.progress();
+                deadline = Instant::now() + window;
                 continue;
             }
             if Instant::now() >= deadline {
+                let stalled: Vec<(Pid, u64)> = pending
+                    .iter()
+                    .map(|p| (p.peer, p.next_chunk as u64))
+                    .collect();
                 return Err(CommError::Timeout {
                     from: pending[0].peer,
                     tag: tag.at(pending[0].next_chunk as u64),
+                    stalled,
                 });
             }
-            if empty_sweeps < SPIN_SWEEPS {
-                empty_sweeps += 1;
-                std::thread::yield_now();
-            } else {
-                std::thread::sleep(delay);
-                delay = (delay * 2).min(POLL_MAX);
-            }
+            backoff.wait();
         }
         Ok(())
     }
@@ -495,6 +651,234 @@ mod tests {
         for h in hs {
             h.join().unwrap();
         }
+    }
+
+    /// The backoff resets to [`POLL_MIN`] on progress — a slow but
+    /// advancing peer is polled hot again instead of inheriting the
+    /// grown delay.
+    #[test]
+    fn backoff_resets_to_poll_min_on_progress() {
+        let mut b = Backoff::new();
+        assert_eq!(b.delay(), POLL_MIN);
+        // Spin phase: the delay does not grow while yielding.
+        for _ in 0..SPIN_SWEEPS {
+            b.wait();
+        }
+        assert_eq!(b.delay(), POLL_MIN, "spinning must not inflate the delay");
+        // Sleep phase: exponential growth, capped.
+        for _ in 0..32 {
+            b.wait();
+        }
+        assert!(b.delay() > POLL_MIN);
+        assert!(b.delay() <= POLL_MAX);
+        b.progress();
+        assert_eq!(b.delay(), POLL_MIN, "progress must reset the backoff");
+    }
+
+    /// `drain_chunks` fires the callback once per landed chunk with
+    /// in-order indices, correct payload offsets, and `is_last` on
+    /// the final chunk — for both the multi-peer sweep and the
+    /// single-peer blocking path.
+    #[test]
+    fn drain_chunks_delivers_every_chunk_in_order() {
+        for senders in [1usize, 3] {
+            let np = senders + 1;
+            let world = ChannelHub::world(np);
+            let tag = ChunkTag::new(NS, 47);
+            let hs: Vec<_> = world
+                .into_iter()
+                .map(|t| {
+                    std::thread::spawn(move || {
+                        if t.pid() != 0 {
+                            let part = vec![t.pid() as u8; 50];
+                            ChunkStream::send(&t, 0, tag, 16, &[&part]).unwrap();
+                            return;
+                        }
+                        let peers: Vec<Pid> = (1..t.np()).collect();
+                        let mut next_idx = vec![0usize; peers.len()];
+                        let mut got = vec![Vec::<u8>::new(); peers.len()];
+                        let mut finished = vec![false; peers.len()];
+                        ChunkStream::drain_chunks(&t, &peers, tag, |c| {
+                            assert_eq!(c.peer, peers[c.peer_idx]);
+                            assert_eq!(c.chunk_idx, next_idx[c.peer_idx], "in-order per peer");
+                            assert_eq!(c.total, 50);
+                            // 50 bytes at 16-byte chunks → 4 chunks.
+                            assert_eq!(c.n_chunks, 4);
+                            assert_eq!(c.offset, got[c.peer_idx].len());
+                            assert_eq!(c.is_last, c.chunk_idx == 3);
+                            next_idx[c.peer_idx] += 1;
+                            got[c.peer_idx].extend_from_slice(c.payload());
+                            if c.is_last {
+                                finished[c.peer_idx] = true;
+                            }
+                            Ok(())
+                        })
+                        .unwrap();
+                        for (i, g) in got.iter().enumerate() {
+                            assert!(finished[i]);
+                            assert_eq!(g, &vec![(i + 1) as u8; 50]);
+                        }
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+        }
+    }
+
+    /// A transport wrapper that silently swallows everything one peer
+    /// sends — the receiver sees that peer as fully stalled.
+    struct Withhold {
+        inner: crate::comm::ChannelTransport,
+        peer: Pid,
+    }
+
+    impl super::Transport for Withhold {
+        fn pid(&self) -> Pid {
+            self.inner.pid()
+        }
+        fn np(&self) -> usize {
+            self.inner.np()
+        }
+        fn send(&self, to: Pid, tag: Tag, payload: &[u8]) -> Result<()> {
+            self.inner.send(to, tag, payload)
+        }
+        fn recv_timeout(
+            &self,
+            from: Pid,
+            tag: Tag,
+            timeout: std::time::Duration,
+        ) -> Result<Vec<u8>> {
+            if from == self.peer {
+                return Err(CommError::timeout(from, tag));
+            }
+            self.inner.recv_timeout(from, tag, timeout)
+        }
+        fn stats(&self) -> &crate::comm::CommStats {
+            self.inner.stats()
+        }
+    }
+
+    /// A peer that withholds its chunks past the stall window produces
+    /// a timeout naming **every** stalled peer and its next-expected
+    /// chunk — not just an arbitrary first one.
+    #[test]
+    fn drain_timeout_names_every_stalled_peer() {
+        let np = 4;
+        let mut world = ChannelHub::world(np);
+        let t3 = world.pop().unwrap();
+        let t2 = world.pop().unwrap();
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        let tag = ChunkTag::new(NS, 48);
+        // Peer 1 completes; peers 2 and 3 are withheld (their sends
+        // land in the mailbox but the wrapper hides one of them; the
+        // other never sends at all).
+        ChunkStream::send(&t1, 0, tag, 16, &[&[7u8; 40][..]]).unwrap();
+        ChunkStream::send(&t2, 0, tag, 16, &[&[8u8; 40][..]]).unwrap();
+        drop(t3); // peer 3 never sends
+        let t = Withhold { inner: t0, peer: 2 };
+        let err = ChunkStream::drain_chunks_window(
+            &t,
+            &[1, 2, 3],
+            tag,
+            Duration::from_millis(50),
+            |_c| Ok(()),
+        )
+        .unwrap_err();
+        match err {
+            CommError::Timeout { mut stalled, .. } => {
+                stalled.sort_unstable();
+                assert_eq!(stalled, vec![(2, 0), (3, 0)], "both stalled peers, next chunk 0");
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        // The Display form carries the full stall list.
+        let msg = err_display(&t, tag);
+        assert!(msg.contains("pid 2 (next chunk 0)") && msg.contains("pid 3 (next chunk 0)"));
+    }
+
+    /// Re-run the stalled drain and render its error (the first drain
+    /// consumed peer 1's stream; peer 2's withheld chunks are still
+    /// in the mailbox, peer 3 stays silent).
+    fn err_display(t: &Withhold, tag: ChunkTag) -> String {
+        ChunkStream::drain_chunks_window(t, &[2, 3], tag, Duration::from_millis(30), |_| Ok(()))
+            .unwrap_err()
+            .to_string()
+    }
+
+    /// A slow but progressing peer never trips the stall window: the
+    /// deadline resets on every landed chunk, so a stream whose total
+    /// duration exceeds the window still completes as long as each
+    /// gap stays under it.
+    #[test]
+    fn slow_but_progressing_peer_resets_the_window() {
+        let np = 3;
+        let mut world = ChannelHub::world(np);
+        let t2 = world.pop().unwrap();
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        let tag = ChunkTag::new(NS, 49);
+        let window = Duration::from_millis(250);
+        // Peer 2 is fast; peer 1 dribbles 3 chunks with 100 ms gaps —
+        // 300 ms total, over the 250 ms window, but each gap under it.
+        let slow = std::thread::spawn(move || {
+            let payload = vec![5u8; 48];
+            let (cb, n_chunks) = plan_chunks(payload.len(), 16);
+            assert_eq!(n_chunks, 3);
+            let mut w = WireWriter::new();
+            w.put_u64(payload.len() as u64);
+            w.put_u64(n_chunks as u64);
+            let frame = w.finish();
+            for c in 0..n_chunks {
+                std::thread::sleep(Duration::from_millis(100));
+                let lo = c * cb;
+                let window_bytes = &payload[lo..(lo + cb).min(payload.len())];
+                if c == 0 {
+                    t1.send_parts(0, tag.at(0), &[&frame, window_bytes]).unwrap();
+                } else {
+                    t1.send(0, tag.at(c as u64), window_bytes).unwrap();
+                }
+            }
+        });
+        ChunkStream::send(&t2, 0, tag, 16, &[&[6u8; 32][..]]).unwrap();
+        let mut done = 0;
+        ChunkStream::drain_chunks_window(&t0, &[1, 2], tag, window, |c| {
+            if c.is_last {
+                done += 1;
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(done, 2, "both streams complete despite the slow dribble");
+        slow.join().unwrap();
+    }
+
+    /// The receive side allocates its output exactly once, sized off
+    /// chunk 0's frame: no growth reallocation ever runs, so the
+    /// final capacity equals the payload length.
+    #[test]
+    fn multi_chunk_recv_allocates_once() {
+        let mut world = ChannelHub::world(2);
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        let tag = ChunkTag::new(NS, 50);
+        // A non-power-of-two total: growth-doubling from empty could
+        // never land on exactly this capacity.
+        let payload: Vec<u8> = (0..5000u32).map(|i| (i % 251) as u8).collect();
+        ChunkStream::send(&t0, 1, tag, 512, &[&payload]).unwrap();
+        let got = ChunkStream::recv(&t1, 0, tag).unwrap();
+        assert_eq!(got, payload);
+        assert_eq!(got.capacity(), got.len(), "single reserve off the frame, no regrowth");
+        // The drain path shares the same guarantee via `reserve_exact`.
+        ChunkStream::send(&t0, 1, tag, 512, &[&payload]).unwrap();
+        ChunkStream::drain(&t1, &[0], tag, |_, bytes| {
+            assert_eq!(bytes.capacity(), bytes.len());
+            assert_eq!(bytes, payload);
+            Ok(())
+        })
+        .unwrap();
     }
 
     #[test]

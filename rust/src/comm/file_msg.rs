@@ -166,7 +166,7 @@ impl Transport for FileTransport {
                         if let Some(e) = m.get_mut(&(from, tag)) {
                             *e = seq;
                         }
-                        return Err(CommError::Timeout { from, tag });
+                        return Err(CommError::timeout(from, tag));
                     }
                     // Exponential backoff (capped, never past the
                     // deadline): slow peers cost O(log wait) stats

@@ -105,17 +105,40 @@ pub mod tags {
 /// Errors surfaced by transports.
 #[derive(Debug)]
 pub enum CommError {
-    Timeout { from: Pid, tag: Tag },
+    Timeout {
+        from: Pid,
+        tag: Tag,
+        /// Every peer still owing data when a multi-peer drain timed
+        /// out, with the chunk index it stalled on — empty for plain
+        /// point-to-point timeouts. Makes multi-peer hangs diagnosable
+        /// from the error alone instead of naming one arbitrary peer.
+        stalled: Vec<(Pid, u64)>,
+    },
     Disconnected(Pid),
     Io(std::io::Error),
     Malformed(String),
 }
 
+impl CommError {
+    /// A point-to-point timeout (no multi-peer stall detail).
+    pub fn timeout(from: Pid, tag: Tag) -> CommError {
+        CommError::Timeout { from, tag, stalled: Vec::new() }
+    }
+}
+
 impl std::fmt::Display for CommError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            CommError::Timeout { from, tag } => {
-                write!(f, "timeout waiting for message from {from} tag {tag:#x}")
+            CommError::Timeout { from, tag, stalled } => {
+                write!(f, "timeout waiting for message from {from} tag {tag:#x}")?;
+                if !stalled.is_empty() {
+                    write!(f, "; stalled peers:")?;
+                    for (i, (peer, chunk)) in stalled.iter().enumerate() {
+                        let sep = if i == 0 { ' ' } else { ',' };
+                        write!(f, "{sep}pid {peer} (next chunk {chunk})")?;
+                    }
+                }
+                Ok(())
             }
             CommError::Disconnected(p) => write!(f, "peer {p} disconnected"),
             CommError::Io(e) => write!(f, "io error: {e}"),

@@ -308,9 +308,7 @@ pub fn execute_plan_typed<T: Element>(
     for g in plan.peer_sends(pid) {
         send_group_typed::<T>(g, src, t, tag)?;
     }
-    recv_groups(plan, pid, t, tag, |g, payload| {
-        unpack_group_typed::<T>(g, &payload, dst)
-    })
+    recv_groups_into::<T>(plan, pid, t, tag, dst)
 }
 
 /// Pack and send one peer's coalesced message:
@@ -420,11 +418,186 @@ pub(crate) fn check_group_payload<'a, T: Element>(
     Ok(bytes)
 }
 
+/// Scatter one byte window of a group's **packed payload space** into
+/// `dst` at the group's precomputed offsets. `byte_off` is the
+/// window's offset within the packed payload (element
+/// `payload_offsets[i]` starts at byte `payload_offsets[i] × WIDTH`);
+/// windows may start or end mid-element — a split element completes
+/// across consecutive windows through the destination's byte view.
+///
+/// Little-endian targets only (raw element bytes ARE the wire
+/// encoding); callers gate on endianness. The caller must have
+/// checked `local_extent ≤ dst.len()` and
+/// `byte_off + bytes.len() ≤ total × WIDTH`.
+pub(crate) fn scatter_payload_bytes<T: Element>(
+    g: &PeerGroup,
+    byte_off: usize,
+    bytes: &[u8],
+    dst: &mut [T],
+) {
+    let width = T::WIDTH;
+    debug_assert!(byte_off + bytes.len() <= g.total * width);
+    // SAFETY: `Element` impls are plain-old-data; the byte view lets a
+    // window boundary split an element and still land every byte.
+    let dst_bytes = unsafe {
+        std::slice::from_raw_parts_mut(dst.as_mut_ptr() as *mut u8, dst.len() * width)
+    };
+    let mut k = g.payload_offsets.partition_point(|&p| p * width <= byte_off) - 1;
+    let mut pos = byte_off;
+    let mut src = bytes;
+    while !src.is_empty() {
+        let seg_lo = g.payload_offsets[k] * width;
+        let seg_hi = seg_lo + g.ranges[k].len() * width;
+        if pos == seg_hi {
+            k += 1;
+            continue;
+        }
+        let n = (seg_hi - pos).min(src.len());
+        let local = g.local_offsets[k] * width + (pos - seg_lo);
+        dst_bytes[local..local + n].copy_from_slice(&src[..n]);
+        pos += n;
+        src = &src[n..];
+    }
+}
+
+/// Incremental consumer of one peer's coalesced message under a
+/// chunk-granular drain ([`ChunkStream::drain_chunks`]): accumulates
+/// and validates the prefix (range table + typed-slice header) once,
+/// then scatters every later byte window straight into the
+/// destination — the compute-on-arrival replacement for reassembling
+/// a `Vec<u8>` per peer and unpacking it after the fact.
+///
+/// Chunk boundaries are arbitrary: a window may split the prefix, or
+/// a single element, and the byte cursor carries across. Little-
+/// endian targets only; callers gate on endianness.
+pub(crate) struct GroupScatter<'a, T: Element> {
+    g: &'a PeerGroup,
+    /// Accumulated message head until `header_bytes() + 9` bytes land.
+    prefix: Vec<u8>,
+    /// Packed payload bytes consumed so far.
+    scattered: usize,
+    _t: std::marker::PhantomData<T>,
+}
+
+impl<'a, T: Element> GroupScatter<'a, T> {
+    pub(crate) fn new(g: &'a PeerGroup) -> GroupScatter<'a, T> {
+        let prefix_len = g.header_bytes() + 9;
+        GroupScatter {
+            g,
+            prefix: Vec::with_capacity(prefix_len),
+            scattered: 0,
+            _t: std::marker::PhantomData,
+        }
+    }
+
+    /// Consume one landed chunk's bytes. Returns the chunk's validated
+    /// payload window and its byte offset in the packed payload space
+    /// — `None` while the window is still all prefix. The prefix is
+    /// validated against the plan the moment it completes.
+    pub(crate) fn feed_raw<'b>(
+        &mut self,
+        mut bytes: &'b [u8],
+    ) -> crate::comm::Result<Option<(usize, &'b [u8])>> {
+        let prefix_len = self.g.header_bytes() + 9;
+        if self.prefix.len() < prefix_len {
+            let take = (prefix_len - self.prefix.len()).min(bytes.len());
+            self.prefix.extend_from_slice(&bytes[..take]);
+            bytes = &bytes[take..];
+            if self.prefix.len() == prefix_len {
+                let mut rd = WireReader::new(&self.prefix);
+                check_group_header(self.g, &mut rd)?;
+                let n = rd.slice_header::<T>()?;
+                if n != self.g.total {
+                    return Err(CommError::Malformed(format!(
+                        "coalesced remap: payload frames {n} elements, plan expects {}",
+                        self.g.total
+                    )));
+                }
+            }
+            if bytes.is_empty() {
+                return Ok(None);
+            }
+        }
+        let off = self.scattered;
+        if off + bytes.len() > self.g.total * T::WIDTH {
+            return Err(CommError::Malformed(format!(
+                "coalesced remap: {} trailing bytes after payload",
+                off + bytes.len() - self.g.total * T::WIDTH
+            )));
+        }
+        self.scattered = off + bytes.len();
+        Ok(Some((off, bytes)))
+    }
+
+    /// Consume one landed chunk and scatter its payload window into
+    /// `dst` immediately (the serial compute-on-arrival kernel).
+    pub(crate) fn feed(&mut self, bytes: &[u8], dst: &mut [T]) -> crate::comm::Result<()> {
+        if let Some((off, win)) = self.feed_raw(bytes)? {
+            scatter_payload_bytes::<T>(self.g, off, win, dst);
+        }
+        Ok(())
+    }
+
+    /// Assert the whole message landed (prefix complete, every payload
+    /// byte consumed) — call once its stream reports `is_last`.
+    pub(crate) fn finish(&self) -> crate::comm::Result<()> {
+        let prefix_len = self.g.header_bytes() + 9;
+        if self.prefix.len() != prefix_len || self.scattered != self.g.total * T::WIDTH {
+            return Err(CommError::Malformed(format!(
+                "coalesced remap: incomplete stream from pid {} ({} of {} payload bytes)",
+                self.g.peer,
+                self.scattered,
+                self.g.total * T::WIDTH
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Compute-on-arrival receive: every landed chunk of every incoming
+/// coalesced stream is scattered **straight into `dst`** by a
+/// [`GroupScatter`] — zero reassembly copies on the remap hot path.
+/// Streams from different peers interleave in arrival order exactly
+/// as under [`recv_groups`]; the wire bytes are identical. Big-endian
+/// targets fall back to the reassembling [`recv_groups`] + serial
+/// unpack (the wire stays LE either way).
+pub(crate) fn recv_groups_into<T: Element>(
+    plan: &RemapPlan,
+    pid: Pid,
+    t: &dyn Transport,
+    tag: ChunkTag,
+    dst: &mut [T],
+) -> crate::comm::Result<()> {
+    if !cfg!(target_endian = "little") {
+        return recv_groups(plan, pid, t, tag, |g, payload| {
+            unpack_group_typed::<T>(g, &payload, dst)
+        });
+    }
+    let groups = plan.peer_recvs(pid);
+    for g in groups {
+        assert!(
+            g.local_extent <= dst.len(),
+            "remap plan/slice mismatch: group writes {} destination elements, slice has {}",
+            g.local_extent,
+            dst.len()
+        );
+    }
+    let peers: Vec<Pid> = groups.iter().map(|g| g.peer).collect();
+    let mut scatters: Vec<GroupScatter<'_, T>> = groups.iter().map(GroupScatter::new).collect();
+    ChunkStream::drain_chunks(t, &peers, tag, |c| scatters[c.peer_idx].feed(c.payload(), dst))?;
+    for s in &scatters {
+        s.finish()?;
+    }
+    Ok(())
+}
+
 /// Receive one coalesced stream from every incoming peer of `pid`,
 /// completing them in **arrival order** via the shared datapath's
 /// multi-peer drain ([`ChunkStream::drain`] — non-blocking sweeps
 /// with spin-then-backoff). `unpack(group, payload)` scatters one
-/// reassembled message.
+/// reassembled message. Kept for consumers that need the contiguous
+/// payload (the pipeline's stage hand-off, the bench wire-only
+/// passes); the remap hot path takes [`recv_groups_into`].
 pub(crate) fn recv_groups(
     plan: &RemapPlan,
     pid: Pid,
@@ -668,6 +841,52 @@ mod tests {
         let p = eng.plan(&Dmap::block_1d(4), &Dmap::cyclic_1d(4), &[64]);
         assert_eq!(eng.plans_built(), 1, "reconstructed equal maps must hit");
         assert!(!p.is_aligned());
+    }
+
+    /// Feeding a coalesced message to a [`GroupScatter`] in arbitrary
+    /// byte windows — including ones that split the prefix and split
+    /// single elements — must land bit-identically to the serial
+    /// reassemble-then-unpack path.
+    #[test]
+    #[cfg(target_endian = "little")]
+    fn group_scatter_matches_serial_unpack_at_any_window_size() {
+        let p = RemapPlan::build(&Dmap::block_1d(3), &Dmap::cyclic_1d(3), &[60]);
+        let g = &p.peer_recvs(0)[0];
+        // Synthesize the wire message: range table + typed payload in
+        // plan order (what the sender's gather would produce).
+        let gathered: Vec<f64> = g
+            .ranges
+            .iter()
+            .flat_map(|r| (r.lo..r.hi).map(|i| i as f64 * 0.5 - 7.0))
+            .collect();
+        assert_eq!(gathered.len(), g.total);
+        let mut w = WireWriter::new();
+        write_group_header(&mut w, g);
+        w.put_slice::<f64>(&gathered);
+        let msg = w.finish();
+
+        let mut expect = vec![0.0f64; 60];
+        unpack_group_typed::<f64>(g, &msg, &mut expect).unwrap();
+
+        for window in [1usize, 13, 64, msg.len()] {
+            let mut got = vec![0.0f64; 60];
+            let mut s = GroupScatter::<f64>::new(g);
+            for win in msg.chunks(window) {
+                s.feed(win, &mut got).unwrap();
+            }
+            s.finish().unwrap();
+            assert_eq!(got, expect, "window {window}");
+        }
+
+        // Trailing bytes past the framed payload are a loud error.
+        let mut s = GroupScatter::<f64>::new(g);
+        s.feed(&msg, &mut vec![0.0f64; 60]).unwrap();
+        assert!(matches!(s.feed(&[0u8], &mut vec![0.0f64; 60]), Err(CommError::Malformed(_))));
+
+        // A short stream is caught by `finish`, not silently accepted.
+        let mut s = GroupScatter::<f64>::new(g);
+        s.feed(&msg[..msg.len() - 3], &mut vec![0.0f64; 60]).unwrap();
+        assert!(matches!(s.finish(), Err(CommError::Malformed(_))));
     }
 
     #[test]

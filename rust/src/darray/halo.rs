@@ -10,35 +10,31 @@
 use super::dense::DarrayT;
 use super::{DarrayError, Result};
 use crate::comm::{tags, Transport, WireReader, WireWriter};
-use crate::dmap::Dist;
+use crate::dmap::{Dist, Overlap};
 use crate::element::Element;
 
 impl<T: Element> DarrayT<T> {
     /// Refresh this PID's halo from its right neighbour. SPMD.
+    ///
+    /// Equivalent to [`DarrayT::sync_halo_send`] immediately followed
+    /// by [`DarrayT::sync_halo_recv`]; callers that have local work to
+    /// do can issue the halves separately and compute between them
+    /// while the boundary is in flight (see
+    /// `examples/jacobi_stencil.rs`).
     pub fn sync_halo(&mut self, t: &dyn Transport, epoch: u64) -> Result<()> {
-        if self.map().ndim() != 1 {
-            return Err(DarrayError::Unsupported(
-                "halo sync supported for 1-D block maps only".into(),
-            ));
-        }
-        let ov = self.map().overlaps()[0];
-        if ov.is_none() {
-            return Ok(());
-        }
-        let dist = self.map().dists()[0];
-        if !matches!(dist, Dist::Block) {
-            return Err(DarrayError::Unsupported(
-                "overlap requires a block distribution".into(),
-            ));
-        }
-        let n = self.shape()[0];
-        let g = self.map().grid().dim(0);
-        let me = self.pid();
-        let coord = self.map().coord_of(me)[0];
-        let tag = tags::pack(tags::NS_HALO, epoch, 0);
+        self.sync_halo_send(t, epoch)?;
+        self.sync_halo_recv(t, epoch)
+    }
 
-        // Send: my leading elements to my LEFT neighbour (they store my
-        // boundary as their halo).
+    /// The send half of [`DarrayT::sync_halo`]: push my leading
+    /// elements to my LEFT neighbour (they store my boundary as their
+    /// halo) and return without waiting for my own halo to land.
+    pub fn sync_halo_send(&self, t: &dyn Transport, epoch: u64) -> Result<()> {
+        let (ov, dist, n, g, coord) = match self.halo_ctx()? {
+            Some(c) => c,
+            None => return Ok(()),
+        };
+        let tag = tags::pack(tags::NS_HALO, epoch, 0);
         if coord > 0 {
             let left = self.map().pid_at(&[coord - 1]);
             if let Some((lo, hi)) = ov.halo_range(&dist, coord - 1, n, g) {
@@ -52,7 +48,17 @@ impl<T: Element> DarrayT<T> {
                 t.send(left, tag, &w.finish())?;
             }
         }
-        // Receive: my halo suffix from my RIGHT neighbour.
+        Ok(())
+    }
+
+    /// The receive half of [`DarrayT::sync_halo`]: land my halo suffix
+    /// from my RIGHT neighbour (blocks until it arrives).
+    pub fn sync_halo_recv(&mut self, t: &dyn Transport, epoch: u64) -> Result<()> {
+        let (ov, dist, n, g, coord) = match self.halo_ctx()? {
+            Some(c) => c,
+            None => return Ok(()),
+        };
+        let tag = tags::pack(tags::NS_HALO, epoch, 0);
         if let Some((lo, hi)) = ov.halo_range(&dist, coord, n, g) {
             let right = self.map().pid_at(&[coord + 1]);
             let payload = t.recv(right, tag)?;
@@ -63,6 +69,31 @@ impl<T: Element> DarrayT<T> {
             rd.get_slice_into::<T>(&mut stored[owned..owned + halo_len])?;
         }
         Ok(())
+    }
+
+    /// Shared validation of both halves: `None` means "no overlap,
+    /// nothing to sync" (a silent no-op), `Err` an unsupported map.
+    #[allow(clippy::type_complexity)]
+    fn halo_ctx(&self) -> Result<Option<(Overlap, Dist, usize, usize, usize)>> {
+        if self.map().ndim() != 1 {
+            return Err(DarrayError::Unsupported(
+                "halo sync supported for 1-D block maps only".into(),
+            ));
+        }
+        let ov = self.map().overlaps()[0];
+        if ov.is_none() {
+            return Ok(None);
+        }
+        let dist = self.map().dists()[0];
+        if !matches!(dist, Dist::Block) {
+            return Err(DarrayError::Unsupported(
+                "overlap requires a block distribution".into(),
+            ));
+        }
+        let n = self.shape()[0];
+        let g = self.map().grid().dim(0);
+        let coord = self.map().coord_of(self.pid())[0];
+        Ok(Some((ov, dist, n, g, coord)))
     }
 }
 
@@ -131,6 +162,30 @@ mod tests {
                 if pid == 0 {
                     assert_eq!(a.stored()[a.local_len()], 4.0f32);
                 }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn split_halo_halves_match_combined() {
+        let np = 3;
+        let n = 12;
+        let world = ChannelHub::world(np);
+        let mut hs = Vec::new();
+        for t in world {
+            hs.push(thread::spawn(move || {
+                let pid = t.pid();
+                let f = |g: usize| g as f64 * 3.0;
+                let map = Dmap::block_1d_overlap(np, 1);
+                let mut a = Darray::from_global_fn(map.clone(), &[n], pid, f);
+                a.sync_halo_send(&t, 7).unwrap();
+                a.sync_halo_recv(&t, 7).unwrap();
+                let mut b = Darray::from_global_fn(map, &[n], pid, f);
+                b.sync_halo(&t, 8).unwrap();
+                assert_eq!(a.stored(), b.stored());
             }));
         }
         for h in hs {

@@ -5,6 +5,7 @@
 //! * `worker`      — internal: one spawned worker process
 //! * `bench-remap` — measure the coalesced remap hot path (bench_remap_v1)
 //! * `bench-collective` — measure the collective algorithms (bench_collective_v1)
+//! * `bench-overlap` — measure compute/communication overlap (bench_overlap_v1)
 //! * `sweep`       — regenerate a figure (fig3 | fig4 | petascale)
 //! * `report`      — print a paper table (table1 | table2 | fig4)
 //! * `validate`    — run the PJRT artifacts and check numerics vs closed forms
@@ -26,6 +27,7 @@ fn main() {
         Some("worker") => cmd_worker(),
         Some("bench-remap") => cmd_bench_remap(&args),
         Some("bench-collective") => cmd_bench_collective(&args),
+        Some("bench-overlap") => cmd_bench_overlap(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("report") => cmd_report(&args),
         Some("validate") => cmd_validate(&args),
@@ -45,6 +47,9 @@ fn main() {
                  \n  bench-collective --np-list 2,4,8 --nppn 2 --bytes 65536 --iters 20\n\
                  \n           --coll star,tree,ring,hier,auto [--chunk-bytes N] [--bench-json out.json]\n\
                  \n           (bench_collective_v1: latency, bytes, messages, pool hits vs P)\n\
+                 \n  bench-overlap --np 4 --bytes 67108864 --iters 3 [--chunk-bytes N]\n\
+                 \n           [--bench-json out.json] (bench_overlap_v1: wire/compute/serial/total\n\
+                 \n           seconds + overlap efficiency for remap and elimination allreduce)\n\
                  \n  sweep    fig3|fig4|petascale [--measure] [--csv] [--backend host|threaded]\n\
                  \n  report   table1|table2|fig4\n\
                  \n  validate --artifacts artifacts\n\
@@ -417,6 +422,56 @@ fn cmd_bench_collective(args: &Args) -> i32 {
     }
     if let Some(path) = args.flag("bench-json") {
         match bench_json::write_collective_file(path, &records) {
+            Ok(()) => println!("bench json written to {path}"),
+            Err(e) => {
+                eprintln!("bench-json {path}: {e}");
+                return 1;
+            }
+        }
+    }
+    0
+}
+
+/// `repro bench-overlap` — measure how much of the wire time the
+/// chunk-granular datapath hides behind compute: the remap and
+/// elimination-allreduce phases each run wire-only, compute-only,
+/// serial (overlap off), and overlapped, and emit/print a
+/// `bench_overlap_v1` document.
+fn cmd_bench_overlap(args: &Args) -> i32 {
+    let np = args.flag_usize("np", 4);
+    let bytes = args.flag_usize("bytes", 64 << 20);
+    let iters = args.flag_usize("iters", 3);
+    if np < 2 || bytes < 8 || iters == 0 {
+        eprintln!("bench-overlap: need --np >= 2, --bytes >= 8 and --iters >= 1");
+        return 2;
+    }
+    let chunk = match parse_chunk_bytes(args, 0) {
+        Ok(b) => b,
+        Err(code) => return code,
+    };
+    if chunk > 0 {
+        distarray::comm::datapath::set_ambient_chunk_bytes(chunk);
+    }
+    let records = bench_json::run_overlap(np, bytes, iters, chunk);
+    println!("bench-overlap: np={np} bytes-per-rank={bytes} iters={iters}");
+    println!(
+        "{:<10} {:>10} {:>10} {:>10} {:>10} {:>8} {:>8}",
+        "phase", "wire s", "compute s", "serial s", "total s", "eff", "speedup"
+    );
+    for r in &records {
+        println!(
+            "{:<10} {:>10.4} {:>10.4} {:>10.4} {:>10.4} {:>8.3} {:>8.3}",
+            r.phase,
+            r.wire_seconds,
+            r.compute_seconds,
+            r.serial_seconds,
+            r.total_seconds,
+            r.efficiency(),
+            r.speedup_vs_serial()
+        );
+    }
+    if let Some(path) = args.flag("bench-json") {
+        match bench_json::write_overlap_file(path, &records) {
             Ok(()) => println!("bench json written to {path}"),
             Err(e) => {
                 eprintln!("bench-json {path}: {e}");

@@ -13,17 +13,21 @@
 //! of the collective subsystem is measured, not asserted — successive
 //! PRs can diff the numbers mechanically instead of scraping stdout.
 
-use crate::collective::{AllreduceOrder, CollKind, Collective, ReduceOp, TagSpace, Topology};
-use crate::comm::datapath;
-use crate::comm::{tags, ChannelHub, Transport};
+use crate::backend::ChunkedThreadedBackend;
+use crate::collective::{
+    AllreduceOrder, CollKind, Collective, ReduceOp, TagSpace, Topology, PH_AG, PH_RS,
+};
+use crate::comm::datapath::{self, ChunkStream};
+use crate::comm::{tags, ChannelHub, Transport, WireWriter};
 use crate::coordinator::RunConfig;
+use crate::darray::engine::{remap_tag, send_group_typed, unpack_group_typed, write_group_header};
 use crate::darray::{DarrayT, RemapEngine};
 use crate::dmap::Dmap;
 use crate::element::{Dtype, Element};
 use crate::json::Json;
 use crate::stream::AggregateResult;
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 /// Schema tag, bumped on any field change.
@@ -34,6 +38,9 @@ pub const REMAP_SCHEMA: &str = "bench_remap_v1";
 
 /// Schema tag of the collective benchmark document.
 pub const COLL_SCHEMA: &str = "bench_collective_v1";
+
+/// Schema tag of the compute/communication-overlap benchmark document.
+pub const OVERLAP_SCHEMA: &str = "bench_overlap_v1";
 
 /// The four op names, in the order of [`AggregateResult::bw`].
 pub const OP_NAMES: [&str; 4] = ["copy", "scale", "add", "triad"];
@@ -404,6 +411,380 @@ pub fn write_collective_file(path: &str, records: &[CollBench]) -> std::io::Resu
     std::fs::write(path, format!("{}\n", collective_to_json(records)))
 }
 
+/// One phase of the compute-on-arrival benchmark: the same work
+/// measured four ways — pure wire (same bytes, no compute), pure
+/// compute (same unpack/fold, no wire), the serial datapath
+/// (whole-message reassembly, overlap off), and the overlapped
+/// datapath (chunk-granular, overlap on).
+#[derive(Debug, Clone)]
+pub struct OverlapBench {
+    /// `"remap"` (chunked-backend block→cyclic) or `"allreduce"`
+    /// (elimination reduce-scatter + allgather).
+    pub phase: &'static str,
+    pub np: usize,
+    /// Payload bytes owned per rank (remap: owned slice; allreduce:
+    /// the reduced vector).
+    pub bytes_per_rank: usize,
+    pub iters: usize,
+    /// Stream chunk size the phase ran at.
+    pub chunk_bytes: usize,
+    /// Wall time of `iters` wire-only exchanges (max across ranks).
+    pub wire_seconds: f64,
+    /// Wall time of `iters` compute-only passes (max across ranks).
+    pub compute_seconds: f64,
+    /// Wall time of `iters` full operations with overlap off.
+    pub serial_seconds: f64,
+    /// Wall time of `iters` full operations with overlap on.
+    pub total_seconds: f64,
+}
+
+impl OverlapBench {
+    /// `1 − total/(wire + compute)`: 0 when the phases run strictly
+    /// back to back, approaching `1 − max/(wire+compute)` when one
+    /// fully hides behind the other.
+    pub fn efficiency(&self) -> f64 {
+        let denom = self.wire_seconds + self.compute_seconds;
+        if denom > 0.0 {
+            1.0 - self.total_seconds / denom
+        } else {
+            0.0
+        }
+    }
+
+    /// Serial (overlap off) time over overlapped time.
+    pub fn speedup_vs_serial(&self) -> f64 {
+        if self.total_seconds > 0.0 {
+            self.serial_seconds / self.total_seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Run both overlap phases at f64. `chunk_bytes == 0` means the
+/// ambient process default; the remap phase always streams at the
+/// ambient size (its datapath reads the process default internally),
+/// so callers who want a specific size should set the ambient chunk
+/// size *and* pass it here, as the CLI does.
+pub fn run_overlap(
+    np: usize,
+    bytes_per_rank: usize,
+    iters: usize,
+    chunk_bytes: usize,
+) -> Vec<OverlapBench> {
+    assert!(np >= 2 && iters >= 1 && bytes_per_rank >= 8);
+    let effective = if chunk_bytes > 0 { chunk_bytes } else { datapath::ambient_chunk_bytes() };
+    vec![
+        overlap_remap_phase(np, bytes_per_rank, iters, effective),
+        overlap_allreduce_phase(np, bytes_per_rank, iters, effective),
+    ]
+}
+
+/// The remap phase: block→cyclic through [`ChunkedThreadedBackend`],
+/// overlap on vs off, against a wire-only pass (the real coalesced
+/// group messages, drained without unpacking) and a compute-only pass
+/// (the same group messages unpacked from local memory).
+fn overlap_remap_phase(
+    np: usize,
+    bytes_per_rank: usize,
+    iters: usize,
+    chunk_bytes: usize,
+) -> OverlapBench {
+    let n_global = (np * bytes_per_rank / 8).max(np);
+    let engine = Arc::new(RemapEngine::new());
+    let gate = Arc::new(Barrier::new(np));
+    let world = ChannelHub::world(np);
+    let mut hs = Vec::new();
+    for t in world {
+        let engine = engine.clone();
+        let gate = gate.clone();
+        hs.push(std::thread::spawn(move || {
+            let pid = t.pid();
+            let src = DarrayT::<f64>::from_global_fn(Dmap::block_1d(np), &[n_global], pid, |g| {
+                (g % 8191) as f64 * 0.5
+            });
+            let mut dst = DarrayT::<f64>::zeros(Dmap::cyclic_1d(np), &[n_global], pid);
+            let plan = engine.plan(&Dmap::block_1d(np), &Dmap::cyclic_1d(np), &[n_global]);
+            let peers: Vec<_> = plan.peer_recvs(pid).iter().map(|g| g.peer).collect();
+            let b_ov = ChunkedThreadedBackend::new(2);
+            let b_ser = ChunkedThreadedBackend::new(2).with_overlap(false);
+            let mut epoch = 0u64;
+
+            // Wire-only: the real coalesced sends, received by a
+            // no-op chunk drain (not one payload byte is unpacked).
+            epoch += 1;
+            wire_remap_iter(&*plan, pid, &t, &src, &peers, epoch);
+            gate.wait();
+            let start = Instant::now();
+            for _ in 0..iters {
+                epoch += 1;
+                wire_remap_iter(&*plan, pid, &t, &src, &peers, epoch);
+            }
+            let wire = start.elapsed().as_secs_f64();
+            gate.wait();
+
+            // Compute-only: the same group messages synthesized in
+            // local memory, unpacked into the destination each iter.
+            let msgs: Vec<Vec<u8>> = plan
+                .peer_recvs(pid)
+                .iter()
+                .map(|g| {
+                    let mut w = WireWriter::with_capacity(g.header_bytes() + 9 + g.total * 8);
+                    write_group_header(&mut w, g);
+                    let vals = vec![1.0f64; g.total];
+                    w.put_slice::<f64>(&vals);
+                    w.finish()
+                })
+                .collect();
+            for (g, m) in plan.peer_recvs(pid).iter().zip(&msgs) {
+                unpack_group_typed::<f64>(g, m, dst.loc_mut()).unwrap();
+            }
+            gate.wait();
+            let start = Instant::now();
+            for _ in 0..iters {
+                for (g, m) in plan.peer_recvs(pid).iter().zip(&msgs) {
+                    unpack_group_typed::<f64>(g, m, dst.loc_mut()).unwrap();
+                }
+            }
+            let compute = start.elapsed().as_secs_f64();
+            gate.wait();
+
+            // Serial reference: whole-message reassembly, overlap off.
+            epoch += 1;
+            dst.assign_from_engine_on(&src, &t, epoch, &engine, &b_ser).unwrap();
+            let serial_result = dst.loc().to_vec();
+            gate.wait();
+            let start = Instant::now();
+            for _ in 0..iters {
+                epoch += 1;
+                dst.assign_from_engine_on(&src, &t, epoch, &engine, &b_ser).unwrap();
+            }
+            let serial = start.elapsed().as_secs_f64();
+            gate.wait();
+
+            // Overlapped: chunk-granular double-buffered receive.
+            epoch += 1;
+            dst.assign_from_engine_on(&src, &t, epoch, &engine, &b_ov).unwrap();
+            assert_eq!(
+                serial_result,
+                dst.loc(),
+                "overlapped remap diverged from the serial datapath"
+            );
+            gate.wait();
+            let start = Instant::now();
+            for _ in 0..iters {
+                epoch += 1;
+                dst.assign_from_engine_on(&src, &t, epoch, &engine, &b_ov).unwrap();
+            }
+            let total = start.elapsed().as_secs_f64();
+            (wire, compute, serial, total)
+        }));
+    }
+    let mut agg = (0f64, 0f64, 0f64, 0f64);
+    for h in hs {
+        let (w, c, s, tt) = h.join().unwrap();
+        agg = (agg.0.max(w), agg.1.max(c), agg.2.max(s), agg.3.max(tt));
+    }
+    OverlapBench {
+        phase: "remap",
+        np,
+        bytes_per_rank,
+        iters,
+        chunk_bytes,
+        wire_seconds: agg.0,
+        compute_seconds: agg.1,
+        serial_seconds: agg.2,
+        total_seconds: agg.3,
+    }
+}
+
+/// One wire-only remap iteration: real sends, chunk-drained receives,
+/// zero unpack work.
+fn wire_remap_iter(
+    plan: &crate::darray::RemapPlan,
+    pid: crate::dmap::Pid,
+    t: &dyn Transport,
+    src: &DarrayT<f64>,
+    peers: &[crate::dmap::Pid],
+    epoch: u64,
+) {
+    let tag = remap_tag(epoch);
+    for g in plan.peer_sends(pid) {
+        send_group_typed::<f64>(g, src.loc(), t, tag).unwrap();
+    }
+    ChunkStream::drain_chunks(t, peers, tag, |_| Ok(())).unwrap();
+}
+
+/// The allreduce phase: the Fast elimination schedule with overlap on
+/// vs off, against a wire-only ring pass (same segment streams,
+/// drained without folding) and a compute-only pass (the same folds
+/// and decodes over local memory).
+fn overlap_allreduce_phase(
+    np: usize,
+    bytes_per_rank: usize,
+    iters: usize,
+    chunk_bytes: usize,
+) -> OverlapBench {
+    let n = (bytes_per_rank / 8).max(np);
+    let gate = Arc::new(Barrier::new(np));
+    let world = ChannelHub::world(np);
+    let mut hs = Vec::new();
+    for t in world {
+        let gate = gate.clone();
+        hs.push(std::thread::spawn(move || {
+            let pid = t.pid();
+            let coll_ov = Collective::new(CollKind::Auto, Topology::flat(np))
+                .with_elim_threshold(1)
+                .with_chunk_bytes(chunk_bytes)
+                .with_overlap(true);
+            let coll_ser = coll_ov.clone().with_overlap(false);
+            let local: Vec<f64> =
+                (0..n).map(|i| (pid + 1) as f64 * 0.25 + i as f64 * 1e-6).collect();
+            let seg = |k: usize| (k * n / np, (k + 1) * n / np);
+            let me = pid;
+            let next = (me + 1) % np;
+            let prev = (me + np - 1) % np;
+            let mut epoch = 0u64;
+
+            // Wire-only: the exact ring schedule's segment streams,
+            // received by a no-op drain.
+            let max_seg_bytes = (0..np).map(|k| (seg(k).1 - seg(k).0) * 8).max().unwrap();
+            let zeros = vec![0u8; max_seg_bytes];
+            let wire_iter = |epoch: u64| {
+                let space = TagSpace::packed(tags::NS_COLL, epoch);
+                for (phase, shift) in [(PH_RS, 0), (PH_AG, 1)] {
+                    let tag = space.chunk_tag(0, phase);
+                    for s in 0..np - 1 {
+                        let (lo, hi) = seg((me + shift + np - s) % np);
+                        ChunkStream::send(&t, next, tag, chunk_bytes, &[&zeros[..(hi - lo) * 8]])
+                            .unwrap();
+                        ChunkStream::drain_chunks(&t, &[prev], tag, |_| Ok(())).unwrap();
+                    }
+                }
+            };
+            epoch += 1;
+            wire_iter(epoch);
+            gate.wait();
+            let start = Instant::now();
+            for _ in 0..iters {
+                epoch += 1;
+                wire_iter(epoch);
+            }
+            let wire = start.elapsed().as_secs_f64();
+            gate.wait();
+
+            // Compute-only: the same folds (reduce-scatter) and LE
+            // decodes (allgather) over local buffers.
+            let mut acc = local.clone();
+            let mut scratch = vec![0.0f64; max_seg_bytes / 8];
+            let compute_iter = |acc: &mut [f64], scratch: &mut [f64]| {
+                for s in 0..np - 1 {
+                    let (lo, hi) = seg((me + np - s - 1) % np);
+                    for (a, b) in acc[lo..hi].iter_mut().zip(&scratch[..hi - lo]) {
+                        *a = ReduceOp::Sum.combine(*b, *a);
+                    }
+                }
+                for s in 0..np - 1 {
+                    let (lo, hi) = seg((me + np - s) % np);
+                    f64::copy_from_le(&zeros[..(hi - lo) * 8], &mut acc[lo..hi]);
+                }
+            };
+            compute_iter(&mut acc, &mut scratch);
+            gate.wait();
+            let start = Instant::now();
+            for _ in 0..iters {
+                compute_iter(&mut acc, &mut scratch);
+            }
+            let compute = start.elapsed().as_secs_f64();
+            gate.wait();
+
+            // Serial reference: whole-segment receives, overlap off.
+            let mut space = || {
+                epoch += 1;
+                TagSpace::packed(tags::NS_COLL, epoch)
+            };
+            let serial_result = coll_ser
+                .allreduce_ordered(&t, space(), &local, ReduceOp::Sum, AllreduceOrder::Fast)
+                .unwrap();
+            gate.wait();
+            let start = Instant::now();
+            for _ in 0..iters {
+                coll_ser
+                    .allreduce_ordered(&t, space(), &local, ReduceOp::Sum, AllreduceOrder::Fast)
+                    .unwrap();
+            }
+            let serial = start.elapsed().as_secs_f64();
+            gate.wait();
+
+            // Overlapped: fold each segment chunk as it arrives.
+            let overlapped_result = coll_ov
+                .allreduce_ordered(&t, space(), &local, ReduceOp::Sum, AllreduceOrder::Fast)
+                .unwrap();
+            assert_eq!(
+                serial_result,
+                overlapped_result,
+                "overlapped allreduce diverged from the serial schedule"
+            );
+            gate.wait();
+            let start = Instant::now();
+            for _ in 0..iters {
+                coll_ov
+                    .allreduce_ordered(&t, space(), &local, ReduceOp::Sum, AllreduceOrder::Fast)
+                    .unwrap();
+            }
+            let total = start.elapsed().as_secs_f64();
+            (wire, compute, serial, total)
+        }));
+    }
+    let mut agg = (0f64, 0f64, 0f64, 0f64);
+    for h in hs {
+        let (w, c, s, tt) = h.join().unwrap();
+        agg = (agg.0.max(w), agg.1.max(c), agg.2.max(s), agg.3.max(tt));
+    }
+    OverlapBench {
+        phase: "allreduce",
+        np,
+        bytes_per_rank,
+        iters,
+        chunk_bytes,
+        wire_seconds: agg.0,
+        compute_seconds: agg.1,
+        serial_seconds: agg.2,
+        total_seconds: agg.3,
+    }
+}
+
+/// Build the `bench_overlap_v1` document.
+pub fn overlap_to_json(records: &[OverlapBench]) -> Json {
+    let runs = records
+        .iter()
+        .map(|b| {
+            let mut m = BTreeMap::new();
+            m.insert("phase".to_string(), Json::Str(b.phase.to_string()));
+            m.insert("np".to_string(), Json::Num(b.np as f64));
+            m.insert("bytes_per_rank".to_string(), Json::Num(b.bytes_per_rank as f64));
+            m.insert("iters".to_string(), Json::Num(b.iters as f64));
+            m.insert("chunk_bytes".to_string(), Json::Num(b.chunk_bytes as f64));
+            m.insert("wire_seconds".to_string(), Json::Num(b.wire_seconds));
+            m.insert("compute_seconds".to_string(), Json::Num(b.compute_seconds));
+            m.insert("serial_seconds".to_string(), Json::Num(b.serial_seconds));
+            m.insert("total_seconds".to_string(), Json::Num(b.total_seconds));
+            m.insert("overlap_efficiency".to_string(), Json::Num(b.efficiency()));
+            m.insert("speedup_vs_serial".to_string(), Json::Num(b.speedup_vs_serial()));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str(OVERLAP_SCHEMA.to_string()));
+    top.insert("runs".to_string(), Json::Arr(runs));
+    Json::Obj(top)
+}
+
+/// Emit the overlap document to `path` (newline-terminated).
+pub fn write_overlap_file(path: &str, records: &[OverlapBench]) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", overlap_to_json(records)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -526,6 +907,35 @@ mod tests {
         assert!(runs[0].get("avg_latency_us").unwrap().as_f64().is_some());
         assert!(parsed.get("pool_checkouts").unwrap().as_usize().is_some());
         assert!(parsed.get("pool_hits").unwrap().as_usize().is_some());
+    }
+
+    #[test]
+    fn overlap_bench_runs_documents_and_stays_bit_identical() {
+        // Tiny payloads: the four passes still run (the in-phase
+        // asserts check overlap-on == overlap-off bit-for-bit), the
+        // document carries every field. Efficiency itself is only
+        // meaningful at bench scale.
+        let recs = run_overlap(2, 4096, 1, 0);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].phase, "remap");
+        assert_eq!(recs[1].phase, "allreduce");
+        for r in &recs {
+            assert!(r.wire_seconds >= 0.0 && r.compute_seconds >= 0.0);
+            assert!(r.serial_seconds > 0.0 && r.total_seconds > 0.0);
+            assert!(r.efficiency() < 1.0);
+            assert_eq!(r.np, 2);
+            assert_eq!(r.bytes_per_rank, 4096);
+            assert!(r.chunk_bytes > 0);
+        }
+        let doc = overlap_to_json(&recs);
+        let parsed = Json::parse(&doc.to_string()).expect("emitted json parses");
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some(OVERLAP_SCHEMA));
+        let runs = parsed.get("runs").unwrap().items().expect("runs is an array");
+        assert_eq!(runs.len(), 2);
+        assert_eq!(runs[0].get("phase").unwrap().as_str(), Some("remap"));
+        assert_eq!(runs[1].get("phase").unwrap().as_str(), Some("allreduce"));
+        assert!(runs[0].get("overlap_efficiency").unwrap().as_f64().is_some());
+        assert!(runs[1].get("speedup_vs_serial").unwrap().as_f64().is_some());
     }
 
     #[test]

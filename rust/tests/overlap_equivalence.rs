@@ -1,0 +1,176 @@
+//! Bit-identity of the compute-on-arrival datapath.
+//!
+//! The acceptance bar for the overlapped receive paths: the
+//! chunk-granular, double-buffered remap receive
+//! ([`ChunkedThreadedBackend::with_overlap`]) and the fold-on-arrival
+//! elimination allreduce ([`Collective::with_overlap`]) must produce
+//! results **bit-identical** to their serial (whole-message
+//! reassembly) counterparts for every sealed dtype — including chunk
+//! sizes that split single elements across chunk boundaries (the
+//! carry paths), multi-chunk group headers, and uneven segment sizes.
+
+use distarray::backend::ChunkedThreadedBackend;
+use distarray::collective::{AllreduceOrder, CollKind, Collective, ReduceOp, TagSpace, Topology};
+use distarray::comm::{datapath, tags, ChannelHub, Transport};
+use distarray::darray::{DarrayT, RemapEngine};
+use distarray::dmap::Dmap;
+use distarray::element::Element;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Serializes tests that set the process-wide ambient chunk size (the
+/// remap datapath reads it internally); the guard restores the
+/// default even when an assertion unwinds.
+static AMBIENT: Mutex<()> = Mutex::new(());
+
+struct ChunkGuard;
+
+impl Drop for ChunkGuard {
+    fn drop(&mut self) {
+        datapath::set_ambient_chunk_bytes(0);
+    }
+}
+
+fn spmd<R: Send + 'static>(
+    np: usize,
+    f: impl Fn(&dyn Transport) -> R + Send + Sync + 'static,
+) -> Vec<R> {
+    let f = Arc::new(f);
+    ChannelHub::world(np)
+        .into_iter()
+        .map(|t| {
+            let f = f.clone();
+            thread::spawn(move || f(&t))
+        })
+        .collect::<Vec<_>>()
+        .into_iter()
+        .map(|h| h.join().unwrap())
+        .collect()
+}
+
+/// Deterministic, dtype-exact source values (integers in f64 range).
+fn src_val<T: Element>(g: usize) -> T {
+    T::from_f64(((g * 7919) % 2039) as f64)
+}
+
+/// One block→cyclic remap per PID through the chunked backend,
+/// returning every PID's destination slice.
+fn remap_once<T: Element>(np: usize, n: usize, tile: usize, overlap: bool) -> Vec<Vec<T>> {
+    let backend = Arc::new(ChunkedThreadedBackend::with_tile(2, tile).with_overlap(overlap));
+    let engine = Arc::new(RemapEngine::new());
+    spmd(np, move |t| {
+        let pid = t.pid();
+        let src = DarrayT::<T>::from_global_fn(Dmap::block_1d(np), &[n], pid, src_val);
+        let mut dst = DarrayT::<T>::zeros(Dmap::cyclic_1d(np), &[n], pid);
+        dst.assign_from_engine_on(&src, t, 1, &engine, &*backend).unwrap();
+        dst.loc().to_vec()
+    })
+}
+
+fn check_remap<T: Element>(np: usize, n: usize, tile: usize) {
+    let on = remap_once::<T>(np, n, tile, true);
+    let off = remap_once::<T>(np, n, tile, false);
+    for pid in 0..np {
+        let want = DarrayT::<T>::from_global_fn(Dmap::cyclic_1d(np), &[n], pid, src_val);
+        assert_eq!(on[pid], off[pid], "overlap on vs off, pid={pid} {:?}", T::DTYPE);
+        assert_eq!(on[pid], want.loc(), "overlap vs ground truth, pid={pid} {:?}", T::DTYPE);
+    }
+}
+
+#[test]
+fn overlapped_remap_bit_identical_across_dtypes() {
+    let _serial = AMBIENT.lock().unwrap();
+    let _restore = ChunkGuard;
+    // 13-byte chunks split every element (and the group header)
+    // across chunk boundaries — the GroupScatter carry paths.
+    datapath::set_ambient_chunk_bytes(13);
+    check_remap::<f64>(3, 101, 64);
+    check_remap::<f32>(3, 101, 64);
+    check_remap::<i64>(3, 101, 64);
+    check_remap::<u64>(3, 101, 64);
+}
+
+#[test]
+fn overlapped_remap_parallel_scatter_matches() {
+    let _serial = AMBIENT.lock().unwrap();
+    let _restore = ChunkGuard;
+    // Chunk windows (4096 B) above the tile size (64 B): landed
+    // windows fan out over the worker pool (`scatter_window_par`).
+    datapath::set_ambient_chunk_bytes(4096);
+    check_remap::<f64>(3, 12 * 1024, 64);
+    check_remap::<f32>(2, 12 * 1024, 64);
+}
+
+/// Both allreduce modes in one world: overlap on and off at disjoint
+/// epochs, per PID.
+fn allreduce_both<T: Element>(np: usize, n: usize, op: ReduceOp) -> Vec<(Vec<T>, Vec<T>)> {
+    spmd(np, move |t| {
+        let base = Collective::new(CollKind::Auto, Topology::grouped(np, 3))
+            .with_chunk_bytes(13)
+            .with_elim_threshold(1);
+        let local: Vec<T> = (0..n)
+            .map(|j| T::from_f64((3 * t.pid() + 1) as f64 + (j % 17) as f64))
+            .collect();
+        let on = base
+            .clone()
+            .allreduce_ordered::<T>(
+                t,
+                TagSpace::packed(tags::NS_COLL, 1),
+                &local,
+                op,
+                AllreduceOrder::Fast,
+            )
+            .unwrap();
+        let off = base
+            .with_overlap(false)
+            .allreduce_ordered::<T>(
+                t,
+                TagSpace::packed(tags::NS_COLL, 2),
+                &local,
+                op,
+                AllreduceOrder::Fast,
+            )
+            .unwrap();
+        (on, off)
+    })
+}
+
+fn check_allreduce<T: Element>(np: usize, op: ReduceOp) {
+    let n = 4 * np + 3; // uneven segments
+    for (pid, (on, off)) in allreduce_both::<T>(np, n, op).into_iter().enumerate() {
+        assert_eq!(on, off, "overlap on vs off, np={np} pid={pid} {op:?} {:?}", T::DTYPE);
+    }
+}
+
+#[test]
+fn overlapped_allreduce_bit_identical_across_dtypes() {
+    // 13-byte segment chunks split every element — the
+    // fold-on-arrival carry buffer — at even and odd world sizes.
+    for np in [2, 5] {
+        check_allreduce::<f64>(np, ReduceOp::Sum);
+        check_allreduce::<f32>(np, ReduceOp::Sum);
+        check_allreduce::<i64>(np, ReduceOp::Sum);
+        check_allreduce::<u64>(np, ReduceOp::Sum);
+        check_allreduce::<f64>(np, ReduceOp::Min);
+        check_allreduce::<i64>(np, ReduceOp::Max);
+    }
+}
+
+/// The fold-on-arrival reduce-scatter must also agree with the star
+/// reference exactly for integer sums (wrapping) and min/max — the
+/// same bar the serial elimination schedule already meets.
+#[test]
+fn overlapped_allreduce_matches_star_reference_for_exact_ops() {
+    let np = 5;
+    let n = 4 * np + 3;
+    let got = allreduce_both::<i64>(np, n, ReduceOp::Sum);
+    let contribution =
+        |pid: usize| -> Vec<i64> { (0..n).map(|j| (3 * pid + 1 + (j % 17)) as i64).collect() };
+    let want = (1..np).fold(contribution(0), |acc, p| {
+        acc.into_iter().zip(contribution(p)).map(|(a, b)| a.wrapping_add(b)).collect()
+    });
+    for (on, off) in got {
+        assert_eq!(on, want, "fold-on-arrival vs star reference");
+        assert_eq!(off, want, "serial elimination vs star reference");
+    }
+}
