@@ -398,12 +398,21 @@ impl ChunkedThreadedBackend {
                     match scatters[c.peer_idx].feed_raw(c.payload()) {
                         Ok(None) => {}
                         Ok(Some((off, win))) => {
+                            let t0 = crate::obs::span_begin();
                             let g = &groups[c.peer_idx];
                             if win.len() >= self.tile_bytes && self.parallel_payload::<T>(g) {
                                 self.scatter_window_par::<T>(g, off, win, dst);
                             } else {
                                 scatter_payload_bytes::<T>(g, off, win, dst);
                             }
+                            crate::obs_span!(
+                                crate::obs::EventKind::ScatterWindow,
+                                t0,
+                                tag: tag.at(c.chunk_idx as u64),
+                                peer: c.peer as u32,
+                                a: win.len() as u64,
+                                b: off as u64
+                            );
                         }
                         Err(e) => {
                             res = Err(e);

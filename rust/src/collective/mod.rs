@@ -520,14 +520,24 @@ impl Collective {
         if group.len() <= 1 {
             return Ok(payload);
         }
+        let t0 = crate::obs::span_begin();
         let me = Self::member_index(group, t.pid())?;
-        match self.kind {
+        let out = match self.kind {
             CollKind::Star => star::bcast(t, group, me, space.star(), payload),
             CollKind::Tree => tree::bcast(t, group, me, &space, 0, payload),
             CollKind::Ring => ring::bcast(t, group, me, &space, 0, self.chunk_bytes, payload),
             CollKind::Hier => hier::bcast(t, &self.topo, group, t.pid(), &space, payload),
             CollKind::Auto => unreachable!("resolved at construction"),
-        }
+        }?;
+        crate::obs_span!(
+            crate::obs::EventKind::CollOp,
+            t0,
+            tag: space.at(0, PH_BCAST, 0),
+            peer: crate::obs::NO_PEER,
+            a: out.len() as u64,
+            b: group.len() as u64
+        );
+        Ok(out)
     }
 
     /// Gather every PID's `part` to PID 0: `Some(parts)` in PID order
@@ -553,8 +563,10 @@ impl Collective {
         if group.len() <= 1 {
             return Ok(Some(vec![part]));
         }
+        let t0 = crate::obs::span_begin();
+        let part_bytes = part.len() as u64;
         let me = Self::member_index(group, t.pid())?;
-        match self.kind {
+        let out = match self.kind {
             CollKind::Star => star::gather(t, group, me, space.star(), part),
             CollKind::Tree => {
                 tree::gather(t, group, me, &space, 0, datapath::ambient_chunk_bytes(), part)
@@ -562,7 +574,20 @@ impl Collective {
             CollKind::Ring => ring::gather(t, group, me, &space, 0, self.chunk_bytes, part),
             CollKind::Hier => hier::gather(t, &self.topo, group, t.pid(), &space, part),
             CollKind::Auto => unreachable!("resolved at construction"),
-        }
+        }?;
+        let bytes = match &out {
+            Some(parts) => parts.iter().map(|p| p.len() as u64).sum(),
+            None => part_bytes,
+        };
+        crate::obs_span!(
+            crate::obs::EventKind::CollOp,
+            t0,
+            tag: space.at(0, PH_GATHER, 0),
+            peer: crate::obs::NO_PEER,
+            a: bytes,
+            b: group.len() as u64
+        );
+        Ok(out)
     }
 
     /// Allgather: every PID returns every PID's `part`, in rank
@@ -774,6 +799,7 @@ impl Collective {
             // Degenerate segments: the ordered path handles it.
             return self.allreduce_group(t, space, group, local, op);
         }
+        let t0 = crate::obs::span_begin();
         let me = Self::member_index(group, t.pid())?;
         let next = group[(me + 1) % p];
         let prev = group[(me + p - 1) % p];
@@ -816,6 +842,14 @@ impl Collective {
                 Self::recv_segment_into(t, prev, ag_tag, &mut acc[rlo..rhi])?;
             }
         }
+        crate::obs_span!(
+            crate::obs::EventKind::CollOp,
+            t0,
+            tag: space.at(0, PH_RS, 0),
+            peer: crate::obs::NO_PEER,
+            a: (n * T::WIDTH) as u64,
+            b: p as u64
+        );
         Ok(acc)
     }
 
@@ -995,6 +1029,7 @@ impl Collective {
         if group.len() <= 1 {
             return Ok(());
         }
+        let t0 = crate::obs::span_begin();
         let me = Self::member_index(group, t.pid())?;
         match self.kind {
             CollKind::Star => star::barrier(t, group, me, space.star(), timeout),
@@ -1002,7 +1037,16 @@ impl Collective {
             CollKind::Ring => ring::barrier(t, group, me, &space, 0, timeout),
             CollKind::Hier => hier::barrier(t, &self.topo, group, t.pid(), &space, timeout),
             CollKind::Auto => unreachable!("resolved at construction"),
-        }
+        }?;
+        crate::obs_span!(
+            crate::obs::EventKind::CollOp,
+            t0,
+            tag: space.at(0, PH_UP, 0),
+            peer: crate::obs::NO_PEER,
+            a: 0,
+            b: group.len() as u64
+        );
+        Ok(())
     }
 }
 

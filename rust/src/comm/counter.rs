@@ -5,7 +5,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Lock-free per-endpoint send/recv counters.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct CommStats {
     msgs_sent: AtomicU64,
     bytes_sent: AtomicU64,
@@ -13,9 +13,22 @@ pub struct CommStats {
     bytes_recv: AtomicU64,
 }
 
+impl Default for CommStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl CommStats {
-    pub fn new() -> Self {
-        Self::default()
+    /// `const` so a counter can live in a `static` (the datapath's
+    /// process-wide stream totals).
+    pub const fn new() -> Self {
+        CommStats {
+            msgs_sent: AtomicU64::new(0),
+            bytes_sent: AtomicU64::new(0),
+            msgs_recv: AtomicU64::new(0),
+            bytes_recv: AtomicU64::new(0),
+        }
     }
 
     #[inline]

@@ -36,8 +36,9 @@
 //! through the environment, like `--coll`).
 
 use super::pool::{BufferPool, PooledBuf};
-use super::{tags, CommError, Result, Tag, Transport, WireReader, WireWriter};
+use super::{tags, CommError, CommStats, Result, Tag, Transport, WireReader, WireWriter};
 use crate::dmap::Pid;
+use crate::obs::EventKind;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
@@ -89,6 +90,66 @@ pub fn checkout(cap: usize) -> PooledBuf<'static> {
 pub fn pool_counters() -> (u64, u64) {
     let pool = BufferPool::global();
     (pool.checkouts(), pool.hits())
+}
+
+/// Process-cumulative wire totals of every [`ChunkStream`] chunk sent
+/// or received (frame bytes included). Like the pool counters this is
+/// a process-wide monotone instrument: bench documents surface deltas
+/// around their timed region; per-endpoint assertions (the "bounded
+/// communication" zero-message property) stay on
+/// [`Transport::stats`].
+static STREAM_STATS: CommStats = CommStats::new();
+
+/// The datapath's process-wide stream counters.
+pub fn comm_stats() -> &'static CommStats {
+    &STREAM_STATS
+}
+
+/// Snapshot of [`comm_stats`]: `(msgs_sent, bytes_sent, msgs_recv,
+/// bytes_recv)`.
+pub fn comm_snapshot() -> (u64, u64, u64, u64) {
+    STREAM_STATS.snapshot()
+}
+
+/// Count one landed chunk and record its arrival event.
+#[inline]
+fn note_arrival(tag: &ChunkTag, chunk: &ArrivedChunk) {
+    let wire = chunk.payload().len() + if chunk.chunk_idx == 0 { FRAME_BYTES } else { 0 };
+    STREAM_STATS.record_recv(wire);
+    crate::obs_event!(
+        EventKind::ChunkArrive,
+        tag: tag.at(chunk.chunk_idx as u64),
+        peer: chunk.peer as u32,
+        a: wire as u64,
+        b: chunk.chunk_idx as u64
+    );
+}
+
+/// Count one received wire message on the blocking path (where no
+/// [`ArrivedChunk`] is built).
+#[inline]
+fn note_recv_wire(tag: &ChunkTag, from: Pid, chunk_idx: u64, wire: usize) {
+    STREAM_STATS.record_recv(wire);
+    crate::obs_event!(
+        EventKind::ChunkArrive,
+        tag: tag.at(chunk_idx),
+        peer: from as u32,
+        a: wire as u64,
+        b: chunk_idx
+    );
+}
+
+/// Count one sent chunk and record its event.
+#[inline]
+fn note_send(tag: &ChunkTag, to: Pid, chunk_idx: u64, wire: usize) {
+    STREAM_STATS.record_send(wire);
+    crate::obs_event!(
+        EventKind::ChunkSend,
+        tag: tag.at(chunk_idx),
+        peer: to as u32,
+        a: wire as u64,
+        b: chunk_idx
+    );
 }
 
 /// The tag coordinates of one chunk stream: `tag(chunk) =
@@ -347,6 +408,8 @@ impl ChunkStream {
                 remaining -= take;
             }
             t.send_parts(to, tag.at(c as u64), &slices)?;
+            let wire = (hi - lo) + if c == 0 { FRAME_BYTES } else { 0 };
+            note_send(&tag, to, c as u64, wire);
         }
         Ok(n_chunks)
     }
@@ -367,8 +430,10 @@ impl ChunkStream {
         next: Option<Pid>,
     ) -> Result<Vec<u8>> {
         let first = t.recv(from, tag.at(0))?;
+        note_recv_wire(&tag, from, 0, first.len());
         if let Some(nx) = next {
             t.send(nx, tag.at(0), &first)?;
+            note_send(&tag, nx, 0, first.len());
         }
         let (total, n_chunks) = parse_frame(&first)?;
         // Pre-reserve `total` off chunk 0's frame: a multi-chunk
@@ -378,8 +443,10 @@ impl ChunkStream {
         out.extend_from_slice(&first[FRAME_BYTES..]);
         for c in 1..n_chunks {
             let chunk = t.recv(from, tag.at(c as u64))?;
+            note_recv_wire(&tag, from, c as u64, chunk.len());
             if let Some(nx) = next {
                 t.send(nx, tag.at(c as u64), &chunk)?;
+                note_send(&tag, nx, c as u64, chunk.len());
             }
             out.extend_from_slice(&chunk);
         }
@@ -458,6 +525,7 @@ impl ChunkStream {
                 loop {
                     let msg = t.recv_timeout(only, tag.at(inc.next_chunk as u64), window)?;
                     let (chunk, done) = inc.feed(msg)?;
+                    note_arrival(&tag, &chunk);
                     on_chunk(chunk)?;
                     if done {
                         return Ok(());
@@ -486,6 +554,7 @@ impl ChunkStream {
                 {
                     progressed = true;
                     let (chunk, fin) = pending[i].feed(msg)?;
+                    note_arrival(&tag, &chunk);
                     on_chunk(chunk)?;
                     if fin {
                         done = true;
@@ -879,6 +948,28 @@ mod tests {
             Ok(())
         })
         .unwrap();
+    }
+
+    /// The datapath's process-wide stream counters see every chunk's
+    /// wire bytes (frame included) on both sides. The instrument is
+    /// global and monotone — other tests may add traffic concurrently
+    /// — so the assertions are at-least deltas.
+    #[test]
+    fn stream_stats_count_wire_traffic() {
+        let (ms0, bs0, mr0, br0) = comm_snapshot();
+        let mut world = ChannelHub::world(2);
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        let tag = ChunkTag::new(NS, 51);
+        let payload = vec![1u8; 80];
+        // 80 bytes at 16-byte chunks → 5 chunks, 96 wire bytes.
+        assert_eq!(ChunkStream::send(&t0, 1, tag, 16, &[&payload]).unwrap(), 5);
+        assert_eq!(ChunkStream::recv(&t1, 0, tag).unwrap(), payload);
+        let (ms1, bs1, mr1, br1) = comm_snapshot();
+        assert!(ms1 - ms0 >= 5, "sent msgs counted");
+        assert!(bs1 - bs0 >= 96, "sent wire bytes include the frame");
+        assert!(mr1 - mr0 >= 5, "recv msgs counted");
+        assert!(br1 - br0 >= 96, "recv wire bytes include the frame");
     }
 
     #[test]

@@ -100,6 +100,17 @@ pub mod tags {
         debug_assert!(step < 1 << 24, "step exceeds 24-bit tag field");
         ((ns as Tag) << 56) | ((epoch & 0xFFFF_FFFF) << 24) | (step & 0x00FF_FFFF)
     }
+
+    /// Split a packed tag back into `(namespace, epoch, step)`.
+    ///
+    /// Inverse of [`pack`] over its domain; legacy low-valued tags
+    /// ([`CONFIG`], [`RESULT`]) come back as namespace 0 with the raw
+    /// value in the step field, which is exactly how the trace plane
+    /// wants them labelled.
+    #[inline]
+    pub const fn unpack(tag: Tag) -> (u8, u64, u64) {
+        ((tag >> 56) as u8, (tag >> 24) & 0xFFFF_FFFF, tag & 0x00FF_FFFF)
+    }
 }
 
 /// Errors surfaced by transports.

@@ -69,7 +69,18 @@ impl BufferPool {
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 b
             }
-            None => Vec::new(),
+            None => {
+                // A miss means a fresh heap allocation on the hot path;
+                // steady-state loops should only see these during warm-up.
+                crate::obs_event!(
+                    crate::obs::EventKind::PoolMiss,
+                    tag: 0,
+                    peer: crate::obs::NO_PEER,
+                    a: cap as u64,
+                    b: 0
+                );
+                Vec::new()
+            }
         };
         buf.clear();
         buf.reserve(cap);

@@ -86,6 +86,7 @@ impl LaunchConfig {
                 nppn: 4,
                 chunk_bytes: 0,
                 artifacts: "artifacts".into(),
+                trace: false,
             },
         }
     }
@@ -174,6 +175,11 @@ impl LaunchConfig {
                 .as_str()
                 .ok_or_else(|| ConfigError::Field("artifacts", "must be a string".into()))?
                 .to_string();
+        }
+        if let Some(v) = j.get("trace") {
+            cfg.run.trace = v
+                .as_bool()
+                .ok_or_else(|| ConfigError::Field("trace", "must be a boolean".into()))?;
         }
         // The threaded backend's pool width is the Ntpn axis; the
         // collective topology's node width is the Nppn axis.

@@ -13,13 +13,18 @@
 use super::results::{RunConfig, WorkerReport};
 use super::worker::run_configured_stream;
 use crate::collective::{Collective, TagSpace, Topology};
-use crate::comm::{tags, Decode, Encode, Result, Transport};
+use crate::comm::datapath::{ChunkStream, ChunkTag};
+use crate::comm::{tags, CommError, Decode, Encode, Result, Transport};
+use crate::obs::fold::{FoldStream, TraceFold};
 use crate::stream::{aggregate, AggregateResult, StreamResult};
 
 /// Tag epoch of the config broadcast in [`tags::NS_COLL`].
 pub(crate) const EPOCH_CONFIG: u64 = 0;
 /// Tag epoch of the result aggregation in [`tags::NS_COLL`].
 pub(crate) const EPOCH_RESULT: u64 = 1;
+/// Tag epoch of the worker→leader telemetry stream in
+/// [`tags::NS_COLL`] (only used when the run config has `trace` set).
+pub(crate) const EPOCH_TRACE: u64 = 2;
 
 /// The config broadcast's tag space (star bootstrap, legacy tag).
 pub(crate) fn config_space() -> TagSpace {
@@ -32,6 +37,45 @@ pub(crate) fn result_space() -> TagSpace {
     TagSpace::with_star_tag(tags::NS_COLL, EPOCH_RESULT, tags::RESULT)
 }
 
+/// The telemetry stream's datapath tag: one [`ChunkStream`] per
+/// worker, after the result gather.
+pub(crate) fn trace_tag() -> ChunkTag {
+    ChunkTag::new(tags::NS_COLL, EPOCH_TRACE)
+}
+
+fn telemetry_err(e: crate::json::JsonError) -> CommError {
+    CommError::Malformed(format!("telemetry stream: {e}"))
+}
+
+/// Fold every worker's NDJSON telemetry stream — plus the leader's own
+/// pending events — into one [`TraceFold`], with memory bounded by the
+/// largest in-flight line per peer, not the report sizes: chunks from
+/// all peers interleave in arrival order, each byte window feeding
+/// that peer's incremental parse state. Returns the fold and the
+/// worst per-stream peak resident parse bytes (the bound the tests
+/// assert).
+pub(crate) fn fold_worker_traces(t: &dyn Transport, np: usize) -> Result<(TraceFold, usize)> {
+    let mut fold = TraceFold::new();
+    let mut own = FoldStream::new();
+    own.feed(&mut fold, crate::obs::emit::render_pending().as_bytes())
+        .map_err(telemetry_err)?;
+    own.finish(&mut fold).map_err(telemetry_err)?;
+    let mut peak = own.peak_resident_bytes();
+    let peers: Vec<usize> = (1..np).collect();
+    if !peers.is_empty() {
+        let mut streams: Vec<FoldStream> =
+            (0..peers.len()).map(|_| FoldStream::new()).collect();
+        ChunkStream::drain_chunks(t, &peers, trace_tag(), |c| {
+            streams[c.peer_idx].feed(&mut fold, c.payload()).map_err(telemetry_err)
+        })?;
+        for s in &mut streams {
+            s.finish(&mut fold).map_err(telemetry_err)?;
+            peak = peak.max(s.peak_resident_bytes());
+        }
+    }
+    Ok((fold, peak))
+}
+
 /// Run a coordinated STREAM benchmark from PID 0's endpoint.
 ///
 /// Broadcasts `cfg`, runs PID 0's own share, gathers every worker's
@@ -42,6 +86,10 @@ pub fn run_leader(
 ) -> Result<(AggregateResult, Vec<StreamResult>)> {
     assert_eq!(t.pid(), 0, "run_leader must be called on PID 0");
     let np = t.np();
+    if cfg.trace {
+        crate::obs::set_thread_rank(0);
+        crate::obs::set_enabled(true);
+    }
     Collective::star(np).bcast(t, config_space(), cfg.to_bytes())?;
     let mut results = Vec::with_capacity(np);
     results.push(run_configured_stream(cfg, 0, np));
@@ -54,6 +102,20 @@ pub fn run_leader(
         results.push(WorkerReport::from_bytes(part)?.to_result());
     }
     let agg = aggregate(&results).expect("np >= 1");
+    if cfg.trace {
+        let (fold, peak) = fold_worker_traces(t, np)?;
+        let dropped: u64 = fold.ranks.values().map(|r| r.dropped).sum();
+        crate::log!(
+            Info,
+            "telemetry: folded {} events from {} rank streams ({} lines, {} dropped, peak resident {} B)",
+            fold.total_events(),
+            fold.ranks.len(),
+            fold.lines,
+            dropped,
+            peak
+        );
+        crate::obs::clear_thread_rank();
+    }
     Ok((agg, results))
 }
 
@@ -80,6 +142,7 @@ mod tests {
             nppn: 0,
             chunk_bytes: 0,
             artifacts: "artifacts".into(),
+            trace: false,
         }
     }
 
@@ -180,6 +243,30 @@ mod tests {
             assert_eq!(agg.np, np);
             assert_eq!(results.iter().map(|r| r.n_local).sum::<usize>(), 5 * 1024);
         }
+    }
+
+    /// `--trace` rides the protocol: every worker streams its NDJSON
+    /// telemetry to the leader after the result gather, and the
+    /// leader's bounded-memory fold consumes them without breaking the
+    /// run. Works whether or not recording is compiled in (under
+    /// `obs-off` the streams carry only meta lines).
+    #[test]
+    fn traced_run_folds_worker_telemetry_in_lockstep() {
+        let np = 4;
+        let mut world = ChannelHub::world(np);
+        let leader = world.remove(0);
+        let handles: Vec<_> = world
+            .into_iter()
+            .map(|t| thread::spawn(move || run_worker(&t).unwrap()))
+            .collect();
+        let mut c = cfg(1 << 12, 2, MapKind::Cyclic);
+        c.trace = true;
+        let (agg, results) = run_leader(&leader, &c).unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(agg.all_valid, "worst err {}", agg.worst_err);
+        assert_eq!(results.len(), np);
     }
 
     #[test]

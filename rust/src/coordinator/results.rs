@@ -110,6 +110,12 @@ pub struct RunConfig {
     pub chunk_bytes: usize,
     /// Artifacts directory for the PJRT engine.
     pub artifacts: String,
+    /// Telemetry recording is on (`--trace`): every worker records
+    /// spans and, after its report, streams its NDJSON trace to the
+    /// leader for the bounded-memory fold. Part of the config wire so
+    /// the telemetry exchange stays in protocol lockstep even when a
+    /// worker's own sink install fails.
+    pub trace: bool,
 }
 
 impl Encode for RunConfig {
@@ -132,6 +138,7 @@ impl Encode for RunConfig {
         w.put_usize(self.nppn);
         w.put_usize(self.chunk_bytes);
         w.put_str(&self.artifacts);
+        w.put_bool(self.trace);
     }
 }
 
@@ -167,6 +174,7 @@ impl Decode for RunConfig {
         let nppn = r.get_usize()?;
         let chunk_bytes = r.get_usize()?;
         let artifacts = r.get_str()?;
+        let trace = r.get_bool()?;
         Ok(RunConfig {
             n_global,
             nt,
@@ -180,6 +188,7 @@ impl Decode for RunConfig {
             nppn,
             chunk_bytes,
             artifacts,
+            trace,
         })
     }
 }
@@ -298,6 +307,7 @@ mod tests {
             nppn: 4,
             chunk_bytes: 1 << 20,
             artifacts: "artifacts".into(),
+            trace: true,
         };
         let got = RunConfig::from_bytes(&c.to_bytes()).unwrap();
         assert_eq!(got, c);
@@ -351,6 +361,7 @@ mod tests {
             nppn: 0,
             chunk_bytes: 0,
             artifacts: String::new(),
+            trace: false,
         };
         let bytes = c.to_bytes();
         assert!(RunConfig::from_bytes(&bytes[..bytes.len() - 3]).is_err());

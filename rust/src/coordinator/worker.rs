@@ -1,9 +1,10 @@
 //! Worker side of the protocol: receive config → run → report.
 
-use super::leader::{config_space, result_space};
+use super::leader::{config_space, result_space, trace_tag};
 use super::results::{EngineKind, RunConfig, WorkerReport};
 use crate::backend::{run_stream_dtype, BackendRegistry};
 use crate::collective::{Collective, Topology};
+use crate::comm::datapath::{self, ChunkStream};
 use crate::comm::{Decode, Encode, Result, Transport};
 use crate::stream::timing::{OpTimes, Timer};
 use crate::stream::validate::validate;
@@ -177,9 +178,28 @@ pub fn run_worker(t: &dyn Transport) -> Result<WorkerReport> {
     if cfg.chunk_bytes > 0 {
         crate::comm::datapath::set_ambient_chunk_bytes(cfg.chunk_bytes);
     }
+    if cfg.trace {
+        crate::obs::set_thread_rank(t.pid());
+        crate::obs::set_enabled(true);
+    }
     let result = run_configured_stream(&cfg, t.pid(), np);
     let report = WorkerReport::from_result(t.pid(), &result);
     let coll = Collective::new(cfg.coll, Topology::grouped(np, cfg.nppn));
     coll.gather(t, result_space(), report.to_bytes())?;
+    if cfg.trace {
+        // Stream this rank's NDJSON telemetry to the leader. This is
+        // keyed off the *config*, not the local recording gate, so the
+        // exchange stays in protocol lockstep even under an `obs-off`
+        // build (the blob then carries only the meta lines).
+        let blob = crate::obs::emit::render_pending();
+        ChunkStream::send(
+            t,
+            0,
+            trace_tag(),
+            datapath::ambient_chunk_bytes(),
+            &[blob.as_bytes()],
+        )?;
+        crate::obs::clear_thread_rank();
+    }
     Ok(report)
 }

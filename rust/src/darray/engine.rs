@@ -301,6 +301,7 @@ pub fn execute_plan_typed<T: Element>(
         dst.copy_from_slice(src);
         return Ok(());
     }
+    let t0 = crate::obs::span_begin();
     let tag = remap_tag(epoch);
     for &(s_off, d_off, len) in plan.local_copies(pid) {
         dst[d_off..d_off + len].copy_from_slice(&src[s_off..s_off + len]);
@@ -308,7 +309,18 @@ pub fn execute_plan_typed<T: Element>(
     for g in plan.peer_sends(pid) {
         send_group_typed::<T>(g, src, t, tag)?;
     }
-    recv_groups_into::<T>(plan, pid, t, tag, dst)
+    recv_groups_into::<T>(plan, pid, t, tag, dst)?;
+    let sent_bytes: usize = plan.peer_sends(pid).iter().map(|g| g.total * T::WIDTH).sum();
+    let peers = plan.message_count(pid);
+    crate::obs_span!(
+        crate::obs::EventKind::RemapExec,
+        t0,
+        tag: tag.at(0),
+        peer: crate::obs::NO_PEER,
+        a: sent_bytes as u64,
+        b: peers as u64
+    );
+    Ok(())
 }
 
 /// Pack and send one peer's coalesced message:
@@ -684,7 +696,17 @@ impl RemapEngine {
             return p.clone();
         }
         self.builds.fetch_add(1, Ordering::Relaxed);
+        let t0 = crate::obs::span_begin();
         let plan = Arc::new(RemapPlan::build(src, dst, shape));
+        let groups: usize = plan.peer_sends.values().map(Vec::len).sum();
+        crate::obs_span!(
+            crate::obs::EventKind::RemapPlan,
+            t0,
+            tag: 0,
+            peer: crate::obs::NO_PEER,
+            a: shape.iter().product::<usize>() as u64,
+            b: groups as u64
+        );
         cache.insert(key, plan.clone());
         plan
     }

@@ -260,6 +260,537 @@ impl<'a> Parser<'a> {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Incremental (push) parsing
+// ---------------------------------------------------------------------------
+
+/// One parse event from [`PushParser`]. String payloads borrow the
+/// parser's token buffer and are valid only inside the callback.
+#[derive(Debug, PartialEq)]
+pub enum JsonEvent<'a> {
+    ObjBegin,
+    ObjEnd,
+    ArrBegin,
+    ArrEnd,
+    /// An object key (always followed by its value's events).
+    Key(&'a str),
+    Str(&'a str),
+    Num(f64),
+    Bool(bool),
+    Null,
+}
+
+/// Maximum container nesting the push parser accepts. Deeper input is
+/// an error, never a crash.
+pub const MAX_DEPTH: usize = 512;
+
+/// Maximum bytes buffered for a single token (string or number).
+/// Bounds memory on adversarial input: the parser's resident state is
+/// one token plus the container stack, never the document.
+pub const MAX_TOKEN_BYTES: usize = 1 << 26;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Frame {
+    Obj,
+    Arr,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Mode {
+    /// Expecting a value (top level, after `[`, `,` in an array, or
+    /// `:` in an object).
+    Value,
+    /// Right after `[`: a value or an immediate `]`.
+    ArrValueOrEnd,
+    /// Right after `{`: a key or an immediate `}`.
+    ObjKeyOrEnd,
+    /// After `,` in an object: a key is required.
+    ObjKey,
+    /// After a key: `:` is required.
+    ObjColon,
+    ObjCommaOrEnd,
+    ArrCommaOrEnd,
+    /// Inside a string token.
+    Str { is_key: bool },
+    /// After a backslash inside a string.
+    StrEscape { is_key: bool },
+    /// Inside a `\u` escape, accumulating hex digits.
+    StrHex { is_key: bool, n: u8, code: u32 },
+    /// Inside a number token.
+    Num,
+    /// Inside `true` / `false` / `null`.
+    Lit { lit: &'static str, pos: usize },
+}
+
+/// Event-driven incremental JSON parser over byte slices.
+///
+/// Feed arbitrary chunks — a network drain, a 7-byte-at-a-time test —
+/// and receive [`JsonEvent`]s as tokens complete; the parse result is
+/// identical no matter where the input is split. Resident state is
+/// bounded by the current token plus the container stack (never the
+/// document), capped by [`MAX_TOKEN_BYTES`] / [`MAX_DEPTH`] so
+/// malformed or adversarial input errors instead of exhausting
+/// memory. After the final chunk call [`PushParser::finish`], which
+/// completes a trailing number and rejects truncated input.
+///
+/// Grammar and semantics match [`Json::parse`] (loose number runs,
+/// `\u` escapes with U+FFFD fallback, UTF-8 validation); the
+/// whole-document API stays for small configs, this one is for
+/// streams. Multiple whitespace-separated top-level values are
+/// accepted — that is exactly NDJSON; [`StreamDocs`] builds on it.
+pub struct PushParser {
+    stack: Vec<Frame>,
+    mode: Mode,
+    tok: Vec<u8>,
+    /// Absolute byte offset across feeds (error positions).
+    pos: usize,
+    failed: bool,
+}
+
+impl Default for PushParser {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PushParser {
+    pub fn new() -> PushParser {
+        PushParser { stack: Vec::new(), mode: Mode::Value, tok: Vec::new(), pos: 0, failed: false }
+    }
+
+    /// Bytes currently buffered for an in-progress token.
+    pub fn buffered_bytes(&self) -> usize {
+        self.tok.len()
+    }
+
+    fn fail(&mut self, msg: &str) -> JsonError {
+        self.failed = true;
+        JsonError { at: self.pos, msg: msg.into() }
+    }
+
+    fn after_value(&mut self) {
+        self.mode = match self.stack.last() {
+            Some(Frame::Obj) => Mode::ObjCommaOrEnd,
+            Some(Frame::Arr) => Mode::ArrCommaOrEnd,
+            None => Mode::Value,
+        };
+    }
+
+    fn push_frame(&mut self, f: Frame) -> Result<(), JsonError> {
+        if self.stack.len() >= MAX_DEPTH {
+            return Err(self.fail("nesting too deep"));
+        }
+        self.stack.push(f);
+        Ok(())
+    }
+
+    fn finish_number(&mut self, f: &mut impl FnMut(JsonEvent<'_>)) -> Result<(), JsonError> {
+        // The token is a run of [0-9.eE+-] — always ASCII.
+        let s = std::str::from_utf8(&self.tok).expect("number token is ascii");
+        match s.parse::<f64>() {
+            Ok(n) => {
+                f(JsonEvent::Num(n));
+                self.tok.clear();
+                self.after_value();
+                Ok(())
+            }
+            Err(_) => {
+                let msg = format!("bad number '{s}'");
+                Err(self.fail(&msg))
+            }
+        }
+    }
+
+    fn grow_tok(&mut self, extra: usize) -> Result<(), JsonError> {
+        if self.tok.len() + extra > MAX_TOKEN_BYTES {
+            return Err(self.fail("token too large"));
+        }
+        Ok(())
+    }
+
+    /// Parse the next chunk, invoking `f` for each completed event.
+    /// An error poisons the parser; later feeds keep failing.
+    pub fn feed(
+        &mut self,
+        bytes: &[u8],
+        mut f: impl FnMut(JsonEvent<'_>),
+    ) -> Result<(), JsonError> {
+        self.feed_mut(bytes, &mut f)
+    }
+
+    fn feed_mut(
+        &mut self,
+        bytes: &[u8],
+        f: &mut impl FnMut(JsonEvent<'_>),
+    ) -> Result<(), JsonError> {
+        if self.failed {
+            return Err(JsonError { at: self.pos, msg: "parser already failed".into() });
+        }
+        let mut i = 0;
+        while i < bytes.len() {
+            let c = bytes[i];
+            match self.mode {
+                Mode::Value
+                | Mode::ArrValueOrEnd
+                | Mode::ObjKeyOrEnd
+                | Mode::ObjKey
+                | Mode::ObjColon
+                | Mode::ObjCommaOrEnd
+                | Mode::ArrCommaOrEnd
+                    if matches!(c, b' ' | b'\t' | b'\n' | b'\r') =>
+                {
+                    i += 1;
+                    self.pos += 1;
+                }
+                Mode::Value | Mode::ArrValueOrEnd => {
+                    if self.mode == Mode::ArrValueOrEnd {
+                        if c == b']' {
+                            self.stack.pop();
+                            f(JsonEvent::ArrEnd);
+                            self.after_value();
+                            i += 1;
+                            self.pos += 1;
+                            continue;
+                        }
+                        self.mode = Mode::Value;
+                        continue; // reprocess as a value start
+                    }
+                    match c {
+                        b'{' => {
+                            self.push_frame(Frame::Obj)?;
+                            f(JsonEvent::ObjBegin);
+                            self.mode = Mode::ObjKeyOrEnd;
+                        }
+                        b'[' => {
+                            self.push_frame(Frame::Arr)?;
+                            f(JsonEvent::ArrBegin);
+                            self.mode = Mode::ArrValueOrEnd;
+                        }
+                        b'"' => {
+                            self.tok.clear();
+                            self.mode = Mode::Str { is_key: false };
+                        }
+                        b't' => self.mode = Mode::Lit { lit: "true", pos: 1 },
+                        b'f' => self.mode = Mode::Lit { lit: "false", pos: 1 },
+                        b'n' => self.mode = Mode::Lit { lit: "null", pos: 1 },
+                        b'-' | b'0'..=b'9' => {
+                            self.tok.clear();
+                            self.tok.push(c);
+                            self.mode = Mode::Num;
+                        }
+                        _ => return Err(self.fail("unexpected character")),
+                    }
+                    i += 1;
+                    self.pos += 1;
+                }
+                Mode::ObjKeyOrEnd | Mode::ObjKey => {
+                    match c {
+                        b'}' if self.mode == Mode::ObjKeyOrEnd => {
+                            self.stack.pop();
+                            f(JsonEvent::ObjEnd);
+                            self.after_value();
+                        }
+                        b'"' => {
+                            self.tok.clear();
+                            self.mode = Mode::Str { is_key: true };
+                        }
+                        _ => return Err(self.fail("expected '\"'")),
+                    }
+                    i += 1;
+                    self.pos += 1;
+                }
+                Mode::ObjColon => {
+                    if c != b':' {
+                        return Err(self.fail("expected ':'"));
+                    }
+                    self.mode = Mode::Value;
+                    i += 1;
+                    self.pos += 1;
+                }
+                Mode::ObjCommaOrEnd => {
+                    match c {
+                        b',' => self.mode = Mode::ObjKey,
+                        b'}' => {
+                            self.stack.pop();
+                            f(JsonEvent::ObjEnd);
+                            self.after_value();
+                        }
+                        _ => return Err(self.fail("expected ',' or '}'")),
+                    }
+                    i += 1;
+                    self.pos += 1;
+                }
+                Mode::ArrCommaOrEnd => {
+                    match c {
+                        b',' => self.mode = Mode::Value,
+                        b']' => {
+                            self.stack.pop();
+                            f(JsonEvent::ArrEnd);
+                            self.after_value();
+                        }
+                        _ => return Err(self.fail("expected ',' or ']'")),
+                    }
+                    i += 1;
+                    self.pos += 1;
+                }
+                Mode::Str { is_key } => {
+                    match c {
+                        b'"' => {
+                            match std::str::from_utf8(&self.tok) {
+                                Ok(s) => {
+                                    if is_key {
+                                        f(JsonEvent::Key(s));
+                                    } else {
+                                        f(JsonEvent::Str(s));
+                                    }
+                                }
+                                Err(_) => return Err(self.fail("invalid utf8")),
+                            }
+                            self.tok.clear();
+                            if is_key {
+                                self.mode = Mode::ObjColon;
+                            } else {
+                                self.after_value();
+                            }
+                        }
+                        b'\\' => self.mode = Mode::StrEscape { is_key },
+                        _ => {
+                            self.grow_tok(1)?;
+                            self.tok.push(c);
+                        }
+                    }
+                    i += 1;
+                    self.pos += 1;
+                }
+                Mode::StrEscape { is_key } => {
+                    let decoded: &[u8] = match c {
+                        b'"' => b"\"",
+                        b'\\' => b"\\",
+                        b'/' => b"/",
+                        b'n' => b"\n",
+                        b't' => b"\t",
+                        b'r' => b"\r",
+                        b'b' => &[0x08],
+                        b'f' => &[0x0C],
+                        b'u' => {
+                            self.mode = Mode::StrHex { is_key, n: 0, code: 0 };
+                            i += 1;
+                            self.pos += 1;
+                            continue;
+                        }
+                        _ => return Err(self.fail("unknown escape")),
+                    };
+                    self.grow_tok(decoded.len())?;
+                    self.tok.extend_from_slice(decoded);
+                    self.mode = Mode::Str { is_key };
+                    i += 1;
+                    self.pos += 1;
+                }
+                Mode::StrHex { is_key, n, code } => {
+                    let d = match c {
+                        b'0'..=b'9' => (c - b'0') as u32,
+                        b'a'..=b'f' => (c - b'a' + 10) as u32,
+                        b'A'..=b'F' => (c - b'A' + 10) as u32,
+                        _ => return Err(self.fail("bad \\u escape")),
+                    };
+                    let code = code << 4 | d;
+                    if n == 3 {
+                        // Lone surrogates and out-of-range codes fall
+                        // back to U+FFFD, matching `Json::parse`.
+                        let ch = char::from_u32(code).unwrap_or('\u{fffd}');
+                        let mut buf = [0u8; 4];
+                        let enc = ch.encode_utf8(&mut buf);
+                        self.grow_tok(enc.len())?;
+                        self.tok.extend_from_slice(enc.as_bytes());
+                        self.mode = Mode::Str { is_key };
+                    } else {
+                        self.mode = Mode::StrHex { is_key, n: n + 1, code };
+                    }
+                    i += 1;
+                    self.pos += 1;
+                }
+                Mode::Num => {
+                    if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
+                        self.grow_tok(1)?;
+                        self.tok.push(c);
+                        i += 1;
+                        self.pos += 1;
+                    } else {
+                        self.finish_number(f)?;
+                        // Reprocess `c` under the post-value mode.
+                    }
+                }
+                Mode::Lit { lit, pos } => {
+                    if lit.as_bytes().get(pos) == Some(&c) {
+                        if pos + 1 == lit.len() {
+                            f(match lit {
+                                "true" => JsonEvent::Bool(true),
+                                "false" => JsonEvent::Bool(false),
+                                _ => JsonEvent::Null,
+                            });
+                            self.after_value();
+                        } else {
+                            self.mode = Mode::Lit { lit, pos: pos + 1 };
+                        }
+                        i += 1;
+                        self.pos += 1;
+                    } else {
+                        let msg = format!("expected '{lit}'");
+                        return Err(self.fail(&msg));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Signal end of input: completes a trailing number token and
+    /// rejects truncated strings, literals, or unclosed containers.
+    pub fn finish(&mut self, mut f: impl FnMut(JsonEvent<'_>)) -> Result<(), JsonError> {
+        if self.failed {
+            return Err(JsonError { at: self.pos, msg: "parser already failed".into() });
+        }
+        if self.mode == Mode::Num {
+            self.finish_number(&mut f)?;
+        }
+        if self.mode == Mode::Value && self.stack.is_empty() {
+            Ok(())
+        } else {
+            Err(self.fail("unexpected end of input"))
+        }
+    }
+}
+
+/// Streaming NDJSON document builder over [`PushParser`]: feed bytes
+/// in any chunking, get one [`Json`] per completed top-level value
+/// (whitespace/newline separated). Resident memory is the document
+/// under construction plus the current token — for line-oriented
+/// telemetry that means *the largest line*, not the stream; the
+/// observed high-water mark is available as
+/// [`StreamDocs::peak_resident_bytes`] so tests can assert the bound.
+pub struct StreamDocs {
+    p: PushParser,
+    build: Vec<(Json, Option<String>)>,
+    resident: usize,
+    peak: usize,
+    docs: usize,
+}
+
+impl Default for StreamDocs {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn stream_event(
+    build: &mut Vec<(Json, Option<String>)>,
+    resident: &mut usize,
+    peak: &mut usize,
+    docs: &mut usize,
+    on_doc: &mut impl FnMut(Json),
+    ev: JsonEvent<'_>,
+) {
+    // Coarse per-node size estimate for the bounded-memory claim.
+    fn attach(
+        build: &mut Vec<(Json, Option<String>)>,
+        resident: &mut usize,
+        docs: &mut usize,
+        on_doc: &mut impl FnMut(Json),
+        v: Json,
+    ) {
+        match build.last_mut() {
+            Some((Json::Obj(m), key)) => {
+                let k = key.take().expect("parser emits Key before every member value");
+                m.insert(k, v);
+            }
+            Some((Json::Arr(a), _)) => a.push(v),
+            _ => {
+                *resident = 0;
+                *docs += 1;
+                on_doc(v);
+            }
+        }
+    }
+    match ev {
+        JsonEvent::ObjBegin => {
+            *resident += 48;
+            build.push((Json::Obj(BTreeMap::new()), None));
+        }
+        JsonEvent::ArrBegin => {
+            *resident += 48;
+            build.push((Json::Arr(Vec::new()), None));
+        }
+        JsonEvent::Key(s) => {
+            *resident += s.len() + 32;
+            if let Some((_, key)) = build.last_mut() {
+                *key = Some(s.to_string());
+            }
+        }
+        JsonEvent::Str(s) => {
+            *resident += s.len() + 32;
+            attach(build, resident, docs, on_doc, Json::Str(s.to_string()));
+        }
+        JsonEvent::Num(n) => {
+            *resident += 16;
+            attach(build, resident, docs, on_doc, Json::Num(n));
+        }
+        JsonEvent::Bool(b) => {
+            *resident += 16;
+            attach(build, resident, docs, on_doc, Json::Bool(b));
+        }
+        JsonEvent::Null => {
+            *resident += 16;
+            attach(build, resident, docs, on_doc, Json::Null);
+        }
+        JsonEvent::ObjEnd | JsonEvent::ArrEnd => {
+            let (v, _) = build.pop().expect("parser balances container events");
+            attach(build, resident, docs, on_doc, v);
+        }
+    }
+    *peak = (*peak).max(*resident);
+}
+
+impl StreamDocs {
+    pub fn new() -> StreamDocs {
+        StreamDocs { p: PushParser::new(), build: Vec::new(), resident: 0, peak: 0, docs: 0 }
+    }
+
+    /// Parse the next chunk; `on_doc` fires once per completed
+    /// top-level value.
+    pub fn feed(&mut self, bytes: &[u8], mut on_doc: impl FnMut(Json)) -> Result<(), JsonError> {
+        let build = &mut self.build;
+        let resident = &mut self.resident;
+        let peak = &mut self.peak;
+        let docs = &mut self.docs;
+        self.p
+            .feed(bytes, |ev| stream_event(build, resident, peak, docs, &mut on_doc, ev))?;
+        self.peak = self.peak.max(self.resident + self.p.buffered_bytes());
+        Ok(())
+    }
+
+    /// Signal end of input: flushes a trailing bare number document
+    /// and rejects truncated input.
+    pub fn finish(&mut self, mut on_doc: impl FnMut(Json)) -> Result<(), JsonError> {
+        let build = &mut self.build;
+        let resident = &mut self.resident;
+        let peak = &mut self.peak;
+        let docs = &mut self.docs;
+        self.p
+            .finish(|ev| stream_event(build, resident, peak, docs, &mut on_doc, ev))
+    }
+
+    /// Completed documents delivered so far.
+    pub fn docs(&self) -> usize {
+        self.docs
+    }
+
+    /// High-water estimate of resident parse state in bytes (the
+    /// largest in-flight document + token, not the stream).
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.peak.max(self.resident + self.p.buffered_bytes())
+    }
+}
+
 impl fmt::Display for Json {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {

@@ -13,7 +13,8 @@
 //!   hardware-era models ([`hardware`]), STREAM drivers ([`stream`]),
 //!   pluggable execution backends ([`backend`]), topology-aware
 //!   collectives ([`collective`]), baseline programming models
-//!   ([`baselines`]), and report generators ([`report`]).
+//!   ([`baselines`]), report generators ([`report`]), and the
+//!   runtime telemetry plane ([`obs`]).
 //! * **L2/L1 (python/, build-time only)** — the STREAM step as a JAX
 //!   graph over Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`
 //!   and executed from Rust via [`runtime`].
@@ -43,6 +44,7 @@ pub mod element;
 pub mod hardware;
 pub mod json;
 pub mod launcher;
+pub mod obs;
 pub mod prop;
 pub mod report;
 pub mod runtime;

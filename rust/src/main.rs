@@ -8,6 +8,7 @@
 //! * `bench-overlap` — measure compute/communication overlap (bench_overlap_v1)
 //! * `sweep`       — regenerate a figure (fig3 | fig4 | petascale)
 //! * `report`      — print a paper table (table1 | table2 | fig4)
+//! * `trace-report` — merge per-rank NDJSON traces into a summary / Chrome export
 //! * `validate`    — run the PJRT artifacts and check numerics vs closed forms
 //! * `info`        — platform / artifact summary
 
@@ -30,6 +31,7 @@ fn main() {
         Some("bench-overlap") => cmd_bench_overlap(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("report") => cmd_report(&args),
+        Some("trace-report") => cmd_trace_report(&args),
         Some("validate") => cmd_validate(&args),
         Some("info") => cmd_info(&args),
         _ => {
@@ -42,6 +44,8 @@ fn main() {
                  \n           --coll star|tree|ring|hier|auto (collective algorithms; default star)\n\
                  \n           --chunk-bytes N (stream chunk of the shared datapath; default 65536)\n\
                  \n           --bench-json out.json (machine-readable per-op bandwidths)\n\
+                 \n           --trace out.ndjson|- (per-rank NDJSON span traces; workers\n\
+                 \n           write out.ndjson.rank<pid>) --metrics-interval MS (counter samples)\n\
                  \n  bench-remap --np 4 --n 1048576 --iters 10 --dtype f64\n\
                  \n           [--bench-json out.json] (bench_remap_v1: bytes, messages, GB/s)\n\
                  \n  bench-collective --np-list 2,4,8 --nppn 2 --bytes 65536 --iters 20\n\
@@ -52,6 +56,9 @@ fn main() {
                  \n           seconds + overlap efficiency for remap and elimination allreduce)\n\
                  \n  sweep    fig3|fig4|petascale [--measure] [--csv] [--backend host|threaded]\n\
                  \n  report   table1|table2|fig4\n\
+                 \n  trace-report <trace.ndjson>... [--check] [--chrome out.json]\n\
+                 \n           (merge per-rank traces: summary table, strict line validation,\n\
+                 \n           chrome://tracing export; benches also accept --trace out.ndjson)\n\
                  \n  validate --artifacts artifacts\n\
                  \n  info     --artifacts artifacts"
             );
@@ -70,10 +77,54 @@ fn parse_chunk_bytes(args: &Args, default: usize) -> Result<usize, i32> {
         Some(s) => match s.parse::<usize>() {
             Ok(b) if b >= 1 => Ok(b),
             _ => {
-                eprintln!("invalid --chunk-bytes '{s}' (expected a byte count >= 1)");
+                distarray::log!(Error, "invalid --chunk-bytes '{s}' (expected a byte count >= 1)");
                 Err(2)
             }
         },
+    }
+}
+
+/// Parse `--metrics-interval` in milliseconds (absent → no sampler).
+fn parse_metrics_interval(args: &Args) -> Result<Option<std::time::Duration>, i32> {
+    match args.flag("metrics-interval") {
+        None => Ok(None),
+        Some(s) => match s.parse::<u64>() {
+            Ok(ms) if ms >= 1 => Ok(Some(std::time::Duration::from_millis(ms))),
+            _ => {
+                distarray::log!(Error, "invalid --metrics-interval '{s}' (expected milliseconds >= 1)");
+                Err(2)
+            }
+        },
+    }
+}
+
+/// Enable tracing for an in-process bench when `--trace <path|->` is
+/// given: this process is rank 0, the NDJSON sink opens immediately,
+/// recording turns on, and `--metrics-interval` starts the counter
+/// sampler. Returns whether a trace was set up (so the command can
+/// close it on exit).
+fn setup_local_trace(args: &Args) -> Result<bool, i32> {
+    let Some(path) = args.flag("trace") else {
+        return Ok(false);
+    };
+    let interval = parse_metrics_interval(args)?;
+    distarray::obs::set_rank(0);
+    if let Err(e) = distarray::obs::emit::install_sink(path) {
+        distarray::log!(Error, "--trace {path}: {e}");
+        return Err(1);
+    }
+    distarray::obs::set_enabled(true);
+    if let Some(iv) = interval {
+        distarray::obs::emit::start_metrics_sampler(iv);
+    }
+    Ok(true)
+}
+
+/// Flush and close the local trace (no-op when tracing is off).
+fn finish_local_trace(traced: bool) {
+    if traced {
+        distarray::obs::emit::stop_metrics_sampler();
+        distarray::obs::emit::close_sink();
     }
 }
 
@@ -91,7 +142,7 @@ fn axis_flag<T>(
     match args.flag(name) {
         None => Ok(default),
         Some(s) => parse(s).ok_or_else(|| {
-            eprintln!("unknown {name} '{s}' (expected {choices})");
+            distarray::log!(Error, "unknown {name} '{s}' (expected {choices})");
             2
         }),
     }
@@ -104,7 +155,7 @@ fn cmd_run(args: &Args) -> i32 {
         Some(path) => match distarray::config::LaunchConfig::load(path) {
             Ok(c) => c,
             Err(e) => {
-                eprintln!("config {path}: {e}");
+                distarray::log!(Error, "config {path}: {e}");
                 return 2;
             }
         },
@@ -170,20 +221,38 @@ fn cmd_run(args: &Args) -> i32 {
         Ok(v) => v,
         Err(code) => return code,
     };
+    // `--trace` names the leader's NDJSON file (`-` = stderr); a
+    // config file can also set `"trace": true` and take the default
+    // name. Workers write `<path>.rank<pid>` beside it.
+    let trace_path: Option<String> = match args.flag("trace") {
+        Some(p) => Some(p.to_string()),
+        None if base.run.trace => Some("trace.ndjson".into()),
+        None => None,
+    };
+    let metrics_interval = match parse_metrics_interval(args) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
     if engine != EngineKind::Native && dtype != distarray::element::Dtype::F64 {
-        eprintln!("engine {} is f64-only; use --engine native for --dtype {dtype}", engine.name());
+        distarray::log!(
+            Error,
+            "engine {} is f64-only; use --engine native for --dtype {dtype}",
+            engine.name()
+        );
         return 2;
     }
     if engine != EngineKind::Native && backend != BackendKind::Host {
-        eprintln!(
+        distarray::log!(
+            Error,
             "--backend applies to the native engine; engine {} has its own execution path",
             engine.name()
         );
         return 2;
     }
     if !dtype.is_float() {
-        eprintln!(
-            "note: dtype {dtype} runs with q = 0 (integer STREAM degenerates; \
+        distarray::log!(
+            Warn,
+            "dtype {dtype} runs with q = 0 (integer STREAM degenerates; \
              bandwidth numbers remain meaningful)"
         );
     }
@@ -197,7 +266,8 @@ fn cmd_run(args: &Args) -> i32 {
         let probe = BackendRegistry::with_defaults(triples.ntpn, &artifacts);
         let be = probe.get(backend).expect("default registry covers every kind");
         if !be.available() {
-            eprintln!(
+            distarray::log!(
+                Error,
                 "backend '{backend}' is unavailable in this build/environment \
                  (the pjrt backend needs `--features pjrt` and AOT artifacts)"
             );
@@ -206,7 +276,10 @@ fn cmd_run(args: &Args) -> i32 {
         let dmap = map.to_map(triples.np());
         for pid in 0..triples.np() {
             if let Err(e) = be.prepare_alloc(dtype, dmap.local_size(pid, &[n])) {
-                eprintln!("backend '{backend}' cannot run this configuration (pid {pid}): {e}");
+                distarray::log!(
+                    Error,
+                    "backend '{backend}' cannot run this configuration (pid {pid}): {e}"
+                );
                 return 2;
             }
         }
@@ -226,6 +299,7 @@ fn cmd_run(args: &Args) -> i32 {
         nppn: triples.nppn,
         chunk_bytes,
         artifacts,
+        trace: trace_path.is_some(),
     };
     // Any library collective in this process (darray reductions,
     // barriers) follows the configured algorithm too — and spawned
@@ -239,6 +313,24 @@ fn cmd_run(args: &Args) -> i32 {
     if chunk_bytes > 0 {
         distarray::comm::datapath::set_ambient_chunk_bytes(chunk_bytes);
         std::env::set_var("DISTARRAY_CHUNK_BYTES", chunk_bytes.to_string());
+    }
+    if let Some(path) = &trace_path {
+        // Workers learn the trace file and sampler interval from the
+        // environment (like the collective/chunk axes above); the
+        // config's `trace` bit keeps the wire exchange in lockstep.
+        std::env::set_var("DISTARRAY_TRACE", path);
+        if let Some(iv) = metrics_interval {
+            std::env::set_var("DISTARRAY_METRICS_INTERVAL_MS", iv.as_millis().to_string());
+        }
+        distarray::obs::set_rank(0);
+        if let Err(e) = distarray::obs::emit::install_sink(path) {
+            distarray::log!(Error, "--trace {path}: {e}");
+            return 1;
+        }
+        distarray::obs::set_enabled(true);
+        if let Some(iv) = metrics_interval {
+            distarray::obs::emit::start_metrics_sampler(iv);
+        }
     }
     println!(
         "repro run: triples={triples} Np={} N={n} Nt={nt} engine={} dtype={} backend={} coll={}",
@@ -255,14 +347,14 @@ fn cmd_run(args: &Args) -> i32 {
     let workers = match spawn_workers(&triples, &spool, &[]) {
         Ok(w) => w,
         Err(e) => {
-            eprintln!("spawn failed: {e}");
+            distarray::log!(Error, "spawn failed: {e}");
             return 1;
         }
     };
     let leader = match FileTransport::new(&spool, 0, triples.np()) {
         Ok(t) => t,
         Err(e) => {
-            eprintln!("transport: {e}");
+            distarray::log!(Error, "transport: {e}");
             return 1;
         }
     };
@@ -293,7 +385,7 @@ fn cmd_run(args: &Args) -> i32 {
                 match bench_json::write_file(path, &cfg, &agg) {
                     Ok(()) => println!("bench json written to {path}"),
                     Err(e) => {
-                        eprintln!("bench-json {path}: {e}");
+                        distarray::log!(Error, "bench-json {path}: {e}");
                         ok = false;
                     }
                 }
@@ -301,11 +393,16 @@ fn cmd_run(args: &Args) -> i32 {
             for w in workers {
                 ok &= w.wait().unwrap_or(false);
             }
+            finish_local_trace(trace_path.is_some());
+            if let Some(path) = trace_path.as_deref().filter(|p| *p != "-") {
+                println!("trace written to {path} (+ {path}.rank<pid> per worker)");
+            }
             std::fs::remove_dir_all(&spool).ok();
             i32::from(!ok)
         }
         Err(e) => {
-            eprintln!("leader failed: {e}");
+            distarray::log!(Error, "leader failed: {e}");
+            finish_local_trace(trace_path.is_some());
             1
         }
     }
@@ -328,9 +425,13 @@ fn cmd_bench_remap(args: &Args) -> i32 {
         Err(code) => return code,
     };
     if np == 0 || n == 0 || iters == 0 {
-        eprintln!("bench-remap: --np, --n and --iters must all be >= 1");
+        distarray::log!(Error, "bench-remap: --np, --n and --iters must all be >= 1");
         return 2;
     }
+    let traced = match setup_local_trace(args) {
+        Ok(t) => t,
+        Err(code) => return code,
+    };
     let b = bench_json::run_remap(np, n, iters, dtype);
     println!(
         "bench-remap: np={np} n={n} dtype={dtype} iters={iters} \
@@ -340,16 +441,18 @@ fn cmd_bench_remap(args: &Args) -> i32 {
         b.payload_bytes,
         b.gb_per_sec()
     );
+    let mut code = 0;
     if let Some(path) = args.flag("bench-json") {
         match bench_json::write_remap_file(path, &b) {
             Ok(()) => println!("bench json written to {path}"),
             Err(e) => {
-                eprintln!("bench-json {path}: {e}");
-                return 1;
+                distarray::log!(Error, "bench-json {path}: {e}");
+                code = 1;
             }
         }
     }
-    0
+    finish_local_trace(traced);
+    code
 }
 
 /// `repro bench-collective` — measure every collective algorithm ×
@@ -364,7 +467,7 @@ fn cmd_bench_collective(args: &Args) -> i32 {
         .collect::<Result<_, _>>()
         .unwrap_or_default();
     if np_list.is_empty() || np_list.contains(&0) {
-        eprintln!("bench-collective: --np-list must be comma-separated positive integers");
+        distarray::log!(Error, "bench-collective: --np-list must be comma-separated positive integers");
         return 2;
     }
     let kinds: Vec<CollKind> = {
@@ -374,7 +477,7 @@ fn cmd_bench_collective(args: &Args) -> i32 {
             match CollKind::parse(s) {
                 Some(k) => out.push(k),
                 None => {
-                    eprintln!("unknown coll '{s}' (expected {})", CollKind::choices());
+                    distarray::log!(Error, "unknown coll '{s}' (expected {})", CollKind::choices());
                     return 2;
                 }
             }
@@ -382,14 +485,14 @@ fn cmd_bench_collective(args: &Args) -> i32 {
         out
     };
     if kinds.is_empty() {
-        eprintln!("bench-collective: --coll selected no algorithms");
+        distarray::log!(Error, "bench-collective: --coll selected no algorithms");
         return 2;
     }
     let nppn = args.flag_usize("nppn", 2);
     let bytes = args.flag_usize("bytes", 64 << 10);
     let iters = args.flag_usize("iters", 20);
     if bytes == 0 || iters == 0 {
-        eprintln!("bench-collective: --bytes and --iters must be >= 1");
+        distarray::log!(Error, "bench-collective: --bytes and --iters must be >= 1");
         return 2;
     }
     match parse_chunk_bytes(args, 0) {
@@ -397,6 +500,10 @@ fn cmd_bench_collective(args: &Args) -> i32 {
         Ok(b) => distarray::comm::datapath::set_ambient_chunk_bytes(b),
         Err(code) => return code,
     }
+    let traced = match setup_local_trace(args) {
+        Ok(t) => t,
+        Err(code) => return code,
+    };
     let mut records = Vec::new();
     for &np in &np_list {
         records.extend(bench_json::run_collective(np, nppn, &kinds, bytes, iters));
@@ -420,16 +527,18 @@ fn cmd_bench_collective(args: &Args) -> i32 {
             r.avg_latency_us()
         );
     }
+    let mut code = 0;
     if let Some(path) = args.flag("bench-json") {
         match bench_json::write_collective_file(path, &records) {
             Ok(()) => println!("bench json written to {path}"),
             Err(e) => {
-                eprintln!("bench-json {path}: {e}");
-                return 1;
+                distarray::log!(Error, "bench-json {path}: {e}");
+                code = 1;
             }
         }
     }
-    0
+    finish_local_trace(traced);
+    code
 }
 
 /// `repro bench-overlap` — measure how much of the wire time the
@@ -442,7 +551,7 @@ fn cmd_bench_overlap(args: &Args) -> i32 {
     let bytes = args.flag_usize("bytes", 64 << 20);
     let iters = args.flag_usize("iters", 3);
     if np < 2 || bytes < 8 || iters == 0 {
-        eprintln!("bench-overlap: need --np >= 2, --bytes >= 8 and --iters >= 1");
+        distarray::log!(Error, "bench-overlap: need --np >= 2, --bytes >= 8 and --iters >= 1");
         return 2;
     }
     let chunk = match parse_chunk_bytes(args, 0) {
@@ -452,6 +561,10 @@ fn cmd_bench_overlap(args: &Args) -> i32 {
     if chunk > 0 {
         distarray::comm::datapath::set_ambient_chunk_bytes(chunk);
     }
+    let traced = match setup_local_trace(args) {
+        Ok(t) => t,
+        Err(code) => return code,
+    };
     let records = bench_json::run_overlap(np, bytes, iters, chunk);
     println!("bench-overlap: np={np} bytes-per-rank={bytes} iters={iters}");
     println!(
@@ -470,22 +583,24 @@ fn cmd_bench_overlap(args: &Args) -> i32 {
             r.speedup_vs_serial()
         );
     }
+    let mut code = 0;
     if let Some(path) = args.flag("bench-json") {
         match bench_json::write_overlap_file(path, &records) {
             Ok(()) => println!("bench json written to {path}"),
             Err(e) => {
-                eprintln!("bench-json {path}: {e}");
-                return 1;
+                distarray::log!(Error, "bench-json {path}: {e}");
+                code = 1;
             }
         }
     }
-    0
+    finish_local_trace(traced);
+    code
 }
 
 /// `repro worker` — internal entry for spawned workers.
 fn cmd_worker() -> i32 {
     let Some(env) = WorkerEnv::from_env() else {
-        eprintln!("worker: missing DISTARRAY_* environment");
+        distarray::log!(Error, "worker: missing DISTARRAY_* environment");
         return 1;
     };
     // Install the launch's collective algorithm as this process's
@@ -504,23 +619,47 @@ fn cmd_worker() -> i32 {
     {
         distarray::comm::datapath::set_ambient_chunk_bytes(b);
     }
+    // The leader exports DISTARRAY_TRACE for traced runs: each worker
+    // opens its own per-rank NDJSON file beside the leader's (`-`
+    // traces to this process's stderr). Recording itself turns on when
+    // the broadcast config lands (`run_worker`), so the sink and the
+    // wire exchange always agree with the leader.
+    if let Ok(path) = std::env::var("DISTARRAY_TRACE") {
+        distarray::obs::set_rank(env.pid);
+        let mine =
+            if path == "-" { path } else { format!("{path}.rank{}", env.pid) };
+        if let Err(e) = distarray::obs::emit::install_sink(&mine) {
+            distarray::log!(Error, "worker {} trace sink {mine}: {e}", env.pid);
+            return 1;
+        }
+        if let Some(ms) = std::env::var("DISTARRAY_METRICS_INTERVAL_MS")
+            .ok()
+            .and_then(|s| s.parse::<u64>().ok())
+            .filter(|&ms| ms >= 1)
+        {
+            distarray::obs::emit::start_metrics_sampler(std::time::Duration::from_millis(ms));
+        }
+    }
     let t = match FileTransport::new(&env.spool, env.pid, env.np) {
         Ok(t) => t,
         Err(e) => {
-            eprintln!("worker {} transport: {e}", env.pid);
+            distarray::log!(Error, "worker {} transport: {e}", env.pid);
             return 1;
         }
     };
     // Pin to the adjacent-core plan slot.
     let triples = Triples::new(1, env.np, env.ntpn);
     PinPlan::for_node(&triples).apply(env.slot.min(env.np - 1));
-    match run_worker(&t) {
+    let code = match run_worker(&t) {
         Ok(rep) => i32::from(!rep.passed),
         Err(e) => {
-            eprintln!("worker {} failed: {e}", env.pid);
+            distarray::log!(Error, "worker {} failed: {e}", env.pid);
             1
         }
-    }
+    };
+    distarray::obs::emit::stop_metrics_sampler();
+    distarray::obs::emit::close_sink();
+    code
 }
 
 /// `repro sweep fig3|fig4|petascale`.
@@ -536,7 +675,8 @@ fn cmd_sweep(args: &Args) -> i32 {
                     None => series.push(fig3::measured_series(max_np, n_per_p, nt)),
                     Some(s) => {
                         let Some(kind) = BackendKind::parse(s) else {
-                            eprintln!(
+                            distarray::log!(
+                                Error,
                                 "unknown backend '{s}' (expected {})",
                                 BackendKind::choices()
                             );
@@ -548,13 +688,13 @@ fn cmd_sweep(args: &Args) -> i32 {
                         );
                         let be = reg.get(kind).expect("default registry covers every kind");
                         if !be.available() {
-                            eprintln!("backend '{kind}' is unavailable in this build");
+                            distarray::log!(Error, "backend '{kind}' is unavailable in this build");
                             return 2;
                         }
                         match fig3::measured_series_on(be, max_np, n_per_p, nt) {
                             Ok(s) => series.push(s),
                             Err(e) => {
-                                eprintln!("backend '{kind}' cannot run this sweep: {e}");
+                                distarray::log!(Error, "backend '{kind}' cannot run this sweep: {e}");
                                 return 2;
                             }
                         }
@@ -577,7 +717,7 @@ fn cmd_sweep(args: &Args) -> i32 {
             0
         }
         other => {
-            eprintln!("unknown sweep {other:?}; expected fig3|fig4|petascale");
+            distarray::log!(Error, "unknown sweep {other:?}; expected fig3|fig4|petascale");
             2
         }
     }
@@ -599,10 +739,50 @@ fn cmd_report(args: &Args) -> i32 {
             0
         }
         other => {
-            eprintln!("unknown report {other:?}; expected table1|table2|fig4");
+            distarray::log!(Error, "unknown report {other:?}; expected table1|table2|fig4");
             2
         }
     }
+}
+
+/// `repro trace-report` — merge per-rank NDJSON trace files into one
+/// fleet summary. `--check` validates every line strictly first;
+/// `--chrome out.json` exports a chrome://tracing document. All passes
+/// stream, so trace size is bounded only by disk.
+fn cmd_trace_report(args: &Args) -> i32 {
+    use distarray::obs::report;
+    if args.positional.is_empty() {
+        distarray::log!(Error, "trace-report: name at least one NDJSON trace file");
+        return 2;
+    }
+    let files = args.positional.clone();
+    if args.flag_bool("check") {
+        match report::check_files(&files) {
+            Ok((lines, events)) => println!("check ok: {lines} line(s), {events} event(s)"),
+            Err(e) => {
+                distarray::log!(Error, "trace-report check: {e}");
+                return 1;
+            }
+        }
+    }
+    let fold = match report::fold_files(&files) {
+        Ok(f) => f,
+        Err(e) => {
+            distarray::log!(Error, "trace-report: {e}");
+            return 1;
+        }
+    };
+    print!("{}", report::render_summary(&fold));
+    if let Some(out) = args.flag("chrome") {
+        match report::write_chrome(&files, out) {
+            Ok(()) => println!("chrome trace written to {out} (load in chrome://tracing)"),
+            Err(e) => {
+                distarray::log!(Error, "trace-report chrome: {e}");
+                return 1;
+            }
+        }
+    }
+    0
 }
 
 /// `repro validate` — prove the three layers compose: run the PJRT
@@ -614,7 +794,7 @@ fn cmd_validate(args: &Args) -> i32 {
     let rt = match PjrtRuntime::load(dir) {
         Ok(rt) => rt,
         Err(e) => {
-            eprintln!("load artifacts: {e}");
+            distarray::log!(Error, "load artifacts: {e}");
             return 1;
         }
     };
@@ -625,7 +805,7 @@ fn cmd_validate(args: &Args) -> i32 {
     let (a2, b2, c2) = match rt.run(&a, STREAM_Q) {
         Ok(x) => x,
         Err(e) => {
-            eprintln!("run artifact failed: {e}");
+            distarray::log!(Error, "run artifact failed: {e}");
             return 1;
         }
     };

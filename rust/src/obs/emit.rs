@@ -1,0 +1,288 @@
+//! Streaming NDJSON emission for trace events.
+//!
+//! One self-describing `trace_event_v1` object per line, formatted
+//! into a reused buffer and written as events drain from the ring —
+//! never a whole-document buffer. A stream opens with one
+//! `trace_meta_v1` line carrying the rank and the wall-clock anchor
+//! so per-process monotonic timestamps can be aligned in a merged
+//! report.
+
+use super::{
+    current_rank, field_names, kind_name, metric_name, recorder, wall_anchor_ns, Event, EventKind,
+    NO_PEER,
+};
+use crate::comm::tags;
+use std::fmt::Write as _;
+use std::io::Write;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Formats events as NDJSON lines into a reused buffer (no per-event
+/// allocation in steady state).
+#[derive(Default)]
+pub struct NdjsonEmitter {
+    line: String,
+}
+
+impl NdjsonEmitter {
+    pub fn new() -> NdjsonEmitter {
+        NdjsonEmitter { line: String::with_capacity(256) }
+    }
+
+    /// Format one event as a `trace_event_v1` line (no newline).
+    pub fn event_line(&mut self, ev: &Event) -> &str {
+        self.line.clear();
+        let _ = write!(
+            self.line,
+            "{{\"schema\":\"trace_event_v1\",\"kind\":\"{}\",\"rank\":{},\"t_ns\":{},\"dur_ns\":{}",
+            kind_name(ev.kind),
+            ev.rank,
+            ev.t_ns,
+            ev.dur_ns
+        );
+        if ev.peer != NO_PEER {
+            let _ = write!(self.line, ",\"peer\":{}", ev.peer);
+        }
+        if ev.kind == EventKind::Metric {
+            let _ = write!(self.line, ",\"metric\":\"{}\",\"value\":{}", metric_name(ev.tag), ev.a);
+        } else {
+            if ev.tag != 0 {
+                let (ns, epoch, step) = tags::unpack(ev.tag);
+                let _ = write!(self.line, ",\"ns\":{ns},\"epoch\":{epoch},\"step\":{step}");
+            }
+            let (an, bn) = field_names(ev.kind);
+            let _ = write!(self.line, ",\"{an}\":{},\"{bn}\":{}", ev.a, ev.b);
+        }
+        self.line.push('}');
+        &self.line
+    }
+}
+
+/// The stream-opening `trace_meta_v1` line for this process (no
+/// newline).
+pub fn meta_line() -> String {
+    format!(
+        "{{\"schema\":\"trace_meta_v1\",\"rank\":{},\"wall_anchor_ns\":{},\"proc\":{}}}",
+        current_rank().map(|r| r as i64).unwrap_or(-1),
+        wall_anchor_ns(),
+        std::process::id()
+    )
+}
+
+/// A closing `trace_meta_v1` line carrying the drop count, emitted by
+/// [`close_sink`] so a reader knows whether the ring wrapped.
+fn closing_line() -> String {
+    format!(
+        "{{\"schema\":\"trace_meta_v1\",\"rank\":{},\"dropped\":{},\"recorded\":{}}}",
+        current_rank().map(|r| r as i64).unwrap_or(-1),
+        recorder().dropped(),
+        recorder().recorded()
+    )
+}
+
+struct Sink {
+    out: Box<dyn Write + Send>,
+}
+
+fn sink() -> &'static Mutex<Option<Sink>> {
+    static SINK: OnceLock<Mutex<Option<Sink>>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::new(None))
+}
+
+/// Open the process trace sink (`"-"` means stderr), writing the
+/// meta line immediately. Replaces any previous sink.
+pub fn install_sink(path: &str) -> std::io::Result<()> {
+    let mut out: Box<dyn Write + Send> = if path == "-" {
+        Box::new(std::io::stderr())
+    } else {
+        Box::new(std::io::BufWriter::new(std::fs::File::create(path)?))
+    };
+    writeln!(out, "{}", meta_line())?;
+    *sink().lock().unwrap() = Some(Sink { out });
+    Ok(())
+}
+
+/// Is a sink currently installed?
+pub fn sink_installed() -> bool {
+    sink().lock().unwrap().is_some()
+}
+
+/// Append one already-formatted line to the sink (no-op without one).
+pub fn write_line(line: &str) {
+    if let Some(s) = sink().lock().unwrap().as_mut() {
+        let _ = writeln!(s.out, "{line}");
+    }
+}
+
+/// Drain the global recorder, handing each event to `f` as one
+/// formatted NDJSON line (no trailing newline). Returns the number of
+/// events drained.
+pub fn drain_events(mut f: impl FnMut(&str)) -> usize {
+    let mut em = NdjsonEmitter::new();
+    recorder().drain(|ev| f(em.event_line(&ev)))
+}
+
+/// Drain the global recorder into the installed sink.
+pub fn flush_to_sink() -> usize {
+    drain_events(write_line)
+}
+
+/// Render this process's pending telemetry as one NDJSON blob — the
+/// worker→leader wire exchange: meta line, every drained event, and
+/// the closing drop-count line. When a local sink is installed the
+/// drained events are mirrored into it too, so a spawned worker's own
+/// trace file and the leader's fold see the same events.
+pub fn render_pending() -> String {
+    let mut out = meta_line();
+    out.push('\n');
+    let mirror = sink_installed();
+    drain_events(|line| {
+        out.push_str(line);
+        out.push('\n');
+        if mirror {
+            write_line(line);
+        }
+    });
+    out.push_str(&closing_line());
+    out.push('\n');
+    out
+}
+
+/// Final flush: drain remaining events, write the closing meta line,
+/// flush and drop the sink. Safe to call without a sink.
+pub fn close_sink() {
+    flush_to_sink();
+    write_line(&closing_line());
+    if let Some(mut s) = sink().lock().unwrap().take() {
+        let _ = s.out.flush();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Periodic metrics sampler
+// ---------------------------------------------------------------------------
+
+struct Sampler {
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+fn sampler() -> &'static Mutex<Option<Sampler>> {
+    static SAMPLER: OnceLock<Mutex<Option<Sampler>>> = OnceLock::new();
+    SAMPLER.get_or_init(|| Mutex::new(None))
+}
+
+/// Record one round of counter samples (pool + datapath totals) into
+/// the ring as [`EventKind::Metric`] events.
+pub fn sample_metrics() {
+    use super::metric;
+    let (checkouts, hits) = crate::comm::datapath::pool_counters();
+    let (ms, bs, mr, br) = crate::comm::datapath::comm_snapshot();
+    for (id, v) in [
+        (metric::POOL_CHECKOUTS, checkouts),
+        (metric::POOL_HITS, hits),
+        (metric::DP_MSGS_SENT, ms),
+        (metric::DP_BYTES_SENT, bs),
+        (metric::DP_MSGS_RECV, mr),
+        (metric::DP_BYTES_RECV, br),
+    ] {
+        super::record(EventKind::Metric, id, NO_PEER, v, 0);
+    }
+}
+
+/// Start the background metrics sampler: every `interval` it records
+/// counter samples and flushes the ring to the sink. Idempotent
+/// (restarts with the new interval).
+pub fn start_metrics_sampler(interval: Duration) {
+    stop_metrics_sampler();
+    let stop = Arc::new(AtomicBool::new(false));
+    let flag = Arc::clone(&stop);
+    let handle = std::thread::Builder::new()
+        .name("obs-metrics".into())
+        .spawn(move || {
+            while !flag.load(Ordering::Relaxed) {
+                // Sleep in short steps so stop is prompt even for
+                // second-scale intervals.
+                let mut left = interval;
+                while !flag.load(Ordering::Relaxed) && !left.is_zero() {
+                    let step = left.min(Duration::from_millis(50));
+                    std::thread::sleep(step);
+                    left = left.saturating_sub(step);
+                }
+                if flag.load(Ordering::Relaxed) {
+                    break;
+                }
+                sample_metrics();
+                flush_to_sink();
+            }
+        })
+        .expect("spawn metrics sampler");
+    *sampler().lock().unwrap() = Some(Sampler { stop, handle });
+}
+
+/// Stop the sampler (if running) and wait for it to exit.
+pub fn stop_metrics_sampler() {
+    let s = sampler().lock().unwrap().take();
+    if let Some(s) = s {
+        s.stop.store(true, Ordering::Relaxed);
+        let _ = s.handle.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Json;
+
+    #[test]
+    fn event_lines_are_valid_self_describing_json() {
+        let mut em = NdjsonEmitter::new();
+        let ev = Event {
+            t_ns: 42,
+            dur_ns: 7,
+            kind: EventKind::ChunkSend,
+            rank: 3,
+            peer: 1,
+            tag: tags::pack(tags::NS_REMAP, 9, 2),
+            a: 65552,
+            b: 2,
+        };
+        let parsed = Json::parse(em.event_line(&ev)).expect("line parses");
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some("trace_event_v1"));
+        assert_eq!(parsed.get("kind").unwrap().as_str(), Some("chunk_send"));
+        assert_eq!(parsed.get("rank").unwrap().as_usize(), Some(3));
+        assert_eq!(parsed.get("peer").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("ns").unwrap().as_usize(), Some(tags::NS_REMAP as usize));
+        assert_eq!(parsed.get("epoch").unwrap().as_usize(), Some(9));
+        assert_eq!(parsed.get("step").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("bytes").unwrap().as_usize(), Some(65552));
+        assert_eq!(parsed.get("chunk").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn metric_lines_carry_name_and_value() {
+        let mut em = NdjsonEmitter::new();
+        let ev = Event {
+            t_ns: 1,
+            dur_ns: 0,
+            kind: EventKind::Metric,
+            rank: 0,
+            peer: NO_PEER,
+            tag: super::super::metric::POOL_HITS,
+            a: 123,
+            b: 0,
+        };
+        let parsed = Json::parse(em.event_line(&ev)).expect("line parses");
+        assert_eq!(parsed.get("metric").unwrap().as_str(), Some("pool_hits"));
+        assert_eq!(parsed.get("value").unwrap().as_usize(), Some(123));
+        assert!(parsed.get("peer").is_none(), "NO_PEER is omitted");
+    }
+
+    #[test]
+    fn meta_line_parses() {
+        let parsed = Json::parse(&meta_line()).expect("meta parses");
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some("trace_meta_v1"));
+        assert!(parsed.get("wall_anchor_ns").unwrap().as_f64().is_some());
+    }
+}

@@ -1,0 +1,236 @@
+//! Bounded-memory folding of NDJSON telemetry streams.
+//!
+//! The leader (and `repro trace-report`) must aggregate per-rank
+//! traces without ever holding a whole report: [`FoldStream`] pushes
+//! raw bytes through the incremental [`StreamDocs`] parser and folds
+//! each completed line into a [`TraceFold`] — peak memory is bounded
+//! by the largest in-flight line, not `O(P · report)`.
+
+use crate::json::{Json, JsonError, StreamDocs};
+use std::collections::BTreeMap;
+
+/// Rolling aggregate for one event kind (or one collective phase).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct KindAgg {
+    pub count: u64,
+    pub total_dur_ns: u64,
+    /// Sum of the kind's primary payload (`bytes` for data-movement
+    /// kinds, `value` deltas are not folded here).
+    pub total_bytes: u64,
+}
+
+impl KindAgg {
+    fn add(&mut self, dur_ns: u64, bytes: u64) {
+        self.count += 1;
+        self.total_dur_ns += dur_ns;
+        self.total_bytes += bytes;
+    }
+
+    /// Aggregate throughput over the recorded span time.
+    pub fn gb_per_sec(&self) -> f64 {
+        if self.total_dur_ns == 0 {
+            0.0
+        } else {
+            self.total_bytes as f64 / self.total_dur_ns as f64
+        }
+    }
+}
+
+/// Per-rank rollup of a trace stream.
+#[derive(Debug, Default, Clone)]
+pub struct RankAgg {
+    pub kinds: BTreeMap<String, KindAgg>,
+    /// Collective activity split by phase name (`coll_op` events).
+    pub phases: BTreeMap<&'static str, KindAgg>,
+    pub t_min_ns: u64,
+    pub t_max_ns: u64,
+    /// Wall-clock anchor from the stream's `trace_meta_v1` line.
+    pub wall_anchor_ns: u64,
+    /// Ring drop count from the closing meta line.
+    pub dropped: u64,
+    pub events: u64,
+}
+
+impl RankAgg {
+    /// Monotonic span covered by this rank's events, in seconds.
+    pub fn wall_seconds(&self) -> f64 {
+        self.t_max_ns.saturating_sub(self.t_min_ns) as f64 / 1e9
+    }
+}
+
+/// Collective phase name from a `coll_op` step field
+/// (`level | phase | round` packing — see
+/// [`TagSpace::at`](crate::collective::TagSpace::at)).
+pub fn phase_name(step: u64) -> &'static str {
+    match (step >> 16) & 0xF {
+        0 => "gather",
+        1 => "bcast",
+        2 => "up",
+        3 => "down",
+        4 => "dissem",
+        5 => "reduce_scatter",
+        6 => "allgather",
+        _ => "other",
+    }
+}
+
+/// Fleet-wide fold of trace streams: per-rank, per-kind aggregates
+/// plus line accounting. Feed it from any number of sources (one
+/// [`FoldStream`] each); memory is the aggregate tables only.
+#[derive(Debug, Default)]
+pub struct TraceFold {
+    pub ranks: BTreeMap<i64, RankAgg>,
+    /// Total NDJSON documents folded.
+    pub lines: u64,
+    /// Documents that were valid JSON but not a recognized trace
+    /// schema (counted, not fatal — forward compatibility).
+    pub unknown_lines: u64,
+}
+
+impl TraceFold {
+    pub fn new() -> TraceFold {
+        TraceFold::default()
+    }
+
+    /// Fold one parsed NDJSON document.
+    pub fn add_doc(&mut self, doc: &Json) {
+        self.lines += 1;
+        let schema = doc.get("schema").and_then(|s| s.as_str());
+        let rank = doc.get("rank").and_then(|r| r.as_f64()).map(|r| r as i64).unwrap_or(-1);
+        match schema {
+            Some("trace_meta_v1") => {
+                let agg = self.ranks.entry(rank).or_default();
+                if let Some(w) = doc.get("wall_anchor_ns").and_then(|v| v.as_f64()) {
+                    agg.wall_anchor_ns = w as u64;
+                }
+                if let Some(d) = doc.get("dropped").and_then(|v| v.as_f64()) {
+                    agg.dropped = d as u64;
+                }
+            }
+            Some("trace_event_v1") => {
+                let kind = doc.get("kind").and_then(|k| k.as_str()).unwrap_or("unknown");
+                let t_ns = doc.get("t_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                let dur = doc.get("dur_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                let bytes = doc.get("bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                let agg = self.ranks.entry(rank).or_default();
+                agg.events += 1;
+                if agg.events == 1 || t_ns < agg.t_min_ns {
+                    agg.t_min_ns = t_ns;
+                }
+                let end = t_ns + dur;
+                if end > agg.t_max_ns {
+                    agg.t_max_ns = end;
+                }
+                agg.kinds.entry(kind.to_string()).or_default().add(dur, bytes);
+                if kind == "coll_op" {
+                    let step = doc.get("step").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                    agg.phases.entry(phase_name(step)).or_default().add(dur, bytes);
+                }
+            }
+            _ => self.unknown_lines += 1,
+        }
+    }
+
+    /// Total events folded across every rank.
+    pub fn total_events(&self) -> u64 {
+        self.ranks.values().map(|r| r.events).sum()
+    }
+}
+
+/// Incremental parse state for one NDJSON source feeding a
+/// [`TraceFold`]. Keep one per worker stream / input file; drop it
+/// when the source ends (the fold itself persists).
+#[derive(Default)]
+pub struct FoldStream {
+    docs: StreamDocs,
+}
+
+impl FoldStream {
+    pub fn new() -> FoldStream {
+        FoldStream::default()
+    }
+
+    /// Push the next byte slice from this source into `fold`.
+    pub fn feed(&mut self, fold: &mut TraceFold, bytes: &[u8]) -> Result<(), JsonError> {
+        self.docs.feed(bytes, |doc| fold.add_doc(&doc))
+    }
+
+    /// Signal end of this source (rejects a truncated final line).
+    pub fn finish(&mut self, fold: &mut TraceFold) -> Result<(), JsonError> {
+        self.docs.finish(|doc| fold.add_doc(&doc))
+    }
+
+    /// High-water resident parse memory for this source — bounded by
+    /// the largest line, asserted by tests.
+    pub fn peak_resident_bytes(&self) -> usize {
+        self.docs.peak_resident_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn folds_a_stream_in_tiny_slices_with_bounded_memory() {
+        // A synthetic multi-line report: meta + many events.
+        let mut src = String::from(
+            "{\"schema\":\"trace_meta_v1\",\"rank\":2,\"wall_anchor_ns\":1000}\n",
+        );
+        for i in 0..200 {
+            src.push_str(&format!(
+                "{{\"schema\":\"trace_event_v1\",\"kind\":\"chunk_send\",\"rank\":2,\
+                 \"t_ns\":{},\"dur_ns\":10,\"peer\":0,\"ns\":2,\"epoch\":1,\"step\":{i},\
+                 \"bytes\":4096,\"chunk\":{i}}}\n",
+                i * 100
+            ));
+        }
+        let mut fold = TraceFold::new();
+        let mut stream = FoldStream::new();
+        for chunk in src.as_bytes().chunks(7) {
+            stream.feed(&mut fold, chunk).unwrap();
+        }
+        stream.finish(&mut fold).unwrap();
+        let agg = &fold.ranks[&2];
+        assert_eq!(agg.events, 200);
+        assert_eq!(agg.wall_anchor_ns, 1000);
+        let k = agg.kinds.get("chunk_send").unwrap();
+        assert_eq!(k.count, 200);
+        assert_eq!(k.total_bytes, 200 * 4096);
+        assert_eq!(k.total_dur_ns, 2000);
+        assert_eq!(agg.t_min_ns, 0);
+        assert_eq!(agg.t_max_ns, 199 * 100 + 10);
+        // Peak resident memory is one line's worth, not the stream's.
+        assert!(
+            stream.peak_resident_bytes() < 4096,
+            "peak {} should be bounded by the largest line",
+            stream.peak_resident_bytes()
+        );
+        assert!(src.len() > 20_000, "the stream itself is much larger");
+    }
+
+    #[test]
+    fn coll_ops_fold_by_phase() {
+        let mut fold = TraceFold::new();
+        // step packs level|phase|round; phase 5 = reduce_scatter.
+        let line = "{\"schema\":\"trace_event_v1\",\"kind\":\"coll_op\",\"rank\":0,\
+                    \"t_ns\":5,\"dur_ns\":3,\"ns\":8,\"epoch\":1,\"step\":327680,\
+                    \"bytes\":64,\"group\":4}\n";
+        let mut stream = FoldStream::new();
+        stream.feed(&mut fold, line.as_bytes()).unwrap();
+        stream.finish(&mut fold).unwrap();
+        let agg = &fold.ranks[&0];
+        assert_eq!(agg.phases.get("reduce_scatter").unwrap().count, 1);
+    }
+
+    #[test]
+    fn unknown_schemas_are_counted_not_fatal() {
+        let mut fold = TraceFold::new();
+        let mut stream = FoldStream::new();
+        stream.feed(&mut fold, b"{\"schema\":\"other\"}\n{\"x\":1}\n").unwrap();
+        stream.finish(&mut fold).unwrap();
+        assert_eq!(fold.lines, 2);
+        assert_eq!(fold.unknown_lines, 2);
+        assert_eq!(fold.total_events(), 0);
+    }
+}

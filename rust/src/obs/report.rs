@@ -1,0 +1,352 @@
+//! `repro trace-report`: merge per-rank NDJSON traces into a
+//! fleet-wide summary, validate them line by line, and export a
+//! Chrome `trace_event` document for chrome://tracing.
+//!
+//! Every pass over the input is streaming — files are read in fixed
+//! chunks through the incremental parser, so arbitrarily large traces
+//! fold in memory bounded by the largest line.
+
+use super::fold::{phase_name, FoldStream, TraceFold};
+use super::kind_from_name;
+use crate::json::Json;
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+
+const READ_CHUNK: usize = 64 * 1024;
+
+/// Stream every file into one fleet-wide [`TraceFold`].
+pub fn fold_files(paths: &[String]) -> Result<TraceFold, String> {
+    let mut fold = TraceFold::new();
+    for path in paths {
+        let mut f = std::fs::File::open(path).map_err(|e| format!("{path}: {e}"))?;
+        let mut stream = FoldStream::new();
+        let mut buf = vec![0u8; READ_CHUNK];
+        loop {
+            let n = f.read(&mut buf).map_err(|e| format!("{path}: {e}"))?;
+            if n == 0 {
+                break;
+            }
+            stream.feed(&mut fold, &buf[..n]).map_err(|e| format!("{path}: {e}"))?;
+        }
+        stream.finish(&mut fold).map_err(|e| format!("{path}: {e}"))?;
+    }
+    Ok(fold)
+}
+
+/// Render the per-rank / per-kind / per-phase summary table.
+pub fn render_summary(fold: &TraceFold) -> String {
+    let mut out = String::new();
+    let dropped: u64 = fold.ranks.values().map(|r| r.dropped).sum();
+    let _ = writeln!(
+        out,
+        "trace-report: {} rank(s), {} event(s), {} line(s), {} dropped",
+        fold.ranks.len(),
+        fold.total_events(),
+        fold.lines,
+        dropped
+    );
+    let _ = writeln!(out, "\n{:>6} {:>10} {:>9} {:>12}", "rank", "events", "dropped", "wall_s");
+    for (rank, agg) in &fold.ranks {
+        let _ = writeln!(
+            out,
+            "{:>6} {:>10} {:>9} {:>12.6}",
+            rank,
+            agg.events,
+            agg.dropped,
+            agg.wall_seconds()
+        );
+    }
+    // Kind totals across ranks.
+    let mut kinds: std::collections::BTreeMap<&str, super::fold::KindAgg> = Default::default();
+    let mut phases: std::collections::BTreeMap<&str, super::fold::KindAgg> = Default::default();
+    for agg in fold.ranks.values() {
+        for (k, v) in &agg.kinds {
+            let e = kinds.entry(k.as_str()).or_default();
+            e.count += v.count;
+            e.total_dur_ns += v.total_dur_ns;
+            e.total_bytes += v.total_bytes;
+        }
+        for (p, v) in &agg.phases {
+            let e = phases.entry(p).or_default();
+            e.count += v.count;
+            e.total_dur_ns += v.total_dur_ns;
+            e.total_bytes += v.total_bytes;
+        }
+    }
+    let _ = writeln!(
+        out,
+        "\n{:<16} {:>10} {:>12} {:>12} {:>10}",
+        "kind", "count", "total_ms", "MB", "GB/s"
+    );
+    for (k, v) in &kinds {
+        let _ = writeln!(
+            out,
+            "{:<16} {:>10} {:>12.3} {:>12.3} {:>10.3}",
+            k,
+            v.count,
+            v.total_dur_ns as f64 / 1e6,
+            v.total_bytes as f64 / 1e6,
+            v.gb_per_sec()
+        );
+    }
+    if !phases.is_empty() {
+        let _ = writeln!(
+            out,
+            "\n{:<16} {:>10} {:>12} {:>12}",
+            "coll phase", "count", "total_ms", "MB"
+        );
+        for (p, v) in &phases {
+            let _ = writeln!(
+                out,
+                "{:<16} {:>10} {:>12.3} {:>12.3}",
+                p,
+                v.count,
+                v.total_dur_ns as f64 / 1e6,
+                v.total_bytes as f64 / 1e6
+            );
+        }
+    }
+    out
+}
+
+/// Strictly validate trace files line by line. Every line must parse
+/// as JSON and carry a known schema; event lines must name a known
+/// kind. Returns `(lines, events)`.
+pub fn check_files(paths: &[String]) -> Result<(usize, usize), String> {
+    let mut lines = 0usize;
+    let mut events = 0usize;
+    for path in paths {
+        let mut f = std::fs::File::open(path).map_err(|e| format!("{path}: {e}"))?;
+        let mut buf = vec![0u8; READ_CHUNK];
+        let mut line = Vec::new();
+        let mut lineno = 0usize;
+        let mut check_line = |line: &[u8], lineno: usize| -> Result<bool, String> {
+            let text = std::str::from_utf8(line)
+                .map_err(|_| format!("{path}:{lineno}: not utf-8"))?;
+            if text.trim().is_empty() {
+                return Ok(false);
+            }
+            let doc = Json::parse(text.trim())
+                .map_err(|e| format!("{path}:{lineno}: {e}"))?;
+            match doc.get("schema").and_then(|s| s.as_str()) {
+                Some("trace_meta_v1") => Ok(false),
+                Some("trace_event_v1") => {
+                    let kind = doc
+                        .get("kind")
+                        .and_then(|k| k.as_str())
+                        .ok_or_else(|| format!("{path}:{lineno}: event without kind"))?;
+                    kind_from_name(kind)
+                        .ok_or_else(|| format!("{path}:{lineno}: unknown kind '{kind}'"))?;
+                    for field in ["rank", "t_ns", "dur_ns"] {
+                        if doc.get(field).and_then(|v| v.as_f64()).is_none() {
+                            return Err(format!("{path}:{lineno}: event missing {field}"));
+                        }
+                    }
+                    Ok(true)
+                }
+                Some(s) => Err(format!("{path}:{lineno}: unknown schema '{s}'")),
+                None => Err(format!("{path}:{lineno}: line without schema")),
+            }
+        };
+        loop {
+            let n = f.read(&mut buf).map_err(|e| format!("{path}: {e}"))?;
+            if n == 0 {
+                break;
+            }
+            for &b in &buf[..n] {
+                if b == b'\n' {
+                    lineno += 1;
+                    if check_line(&line, lineno)? {
+                        events += 1;
+                    }
+                    if !line.is_empty() {
+                        lines += 1;
+                    }
+                    line.clear();
+                } else {
+                    line.push(b);
+                }
+            }
+        }
+        if !line.is_empty() {
+            lineno += 1;
+            if check_line(&line, lineno)? {
+                events += 1;
+            }
+            lines += 1;
+        }
+    }
+    Ok((lines, events))
+}
+
+/// Export the traces as one Chrome `trace_event` JSON document
+/// (chrome://tracing / Perfetto "load trace"). Spans become `"ph":"X"`
+/// complete events, instants become `"ph":"i"`; `pid`/`tid` carry the
+/// rank and timestamps are aligned across processes via each stream's
+/// wall anchor.
+pub fn write_chrome(paths: &[String], out_path: &str) -> Result<(), String> {
+    let out = std::fs::File::create(out_path).map_err(|e| format!("{out_path}: {e}"))?;
+    let mut w = std::io::BufWriter::new(out);
+    write!(w, "{{\"displayTimeUnit\":\"ns\",\"traceEvents\":[").map_err(|e| e.to_string())?;
+    let mut first = true;
+    for path in paths {
+        let mut f = std::fs::File::open(path).map_err(|e| format!("{path}: {e}"))?;
+        let mut docs = crate::json::StreamDocs::new();
+        let mut buf = vec![0u8; READ_CHUNK];
+        // The wall anchor arrives in the stream's first (meta) line;
+        // events are shifted by it so ranks share one timeline.
+        let mut anchor_ns = 0f64;
+        let mut err: Option<String> = None;
+        loop {
+            let n = f.read(&mut buf).map_err(|e| format!("{path}: {e}"))?;
+            if n == 0 {
+                break;
+            }
+            let res = docs.feed(&buf[..n], |doc| {
+                if err.is_some() {
+                    return;
+                }
+                if let Err(e) = chrome_entry(&mut w, &doc, &mut anchor_ns, &mut first) {
+                    err = Some(e.to_string());
+                }
+            });
+            res.map_err(|e| format!("{path}: {e}"))?;
+            if let Some(e) = err.take() {
+                return Err(format!("{out_path}: {e}"));
+            }
+        }
+        docs.finish(|_| {}).map_err(|e| format!("{path}: {e}"))?;
+    }
+    writeln!(w, "]}}").map_err(|e| e.to_string())?;
+    w.flush().map_err(|e| e.to_string())?;
+    Ok(())
+}
+
+fn chrome_entry(
+    w: &mut impl Write,
+    doc: &Json,
+    anchor_ns: &mut f64,
+    first: &mut bool,
+) -> std::io::Result<()> {
+    match doc.get("schema").and_then(|s| s.as_str()) {
+        Some("trace_meta_v1") => {
+            if let Some(a) = doc.get("wall_anchor_ns").and_then(|v| v.as_f64()) {
+                *anchor_ns = a;
+            }
+            Ok(())
+        }
+        Some("trace_event_v1") => {
+            let kind = doc.get("kind").and_then(|k| k.as_str()).unwrap_or("unknown");
+            let rank = doc.get("rank").and_then(|v| v.as_f64()).unwrap_or(-1.0) as i64;
+            let t_ns = doc.get("t_ns").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let dur_ns = doc.get("dur_ns").and_then(|v| v.as_f64()).unwrap_or(0.0);
+            let ts_us = (*anchor_ns + t_ns) / 1e3;
+            let name = if kind == "coll_op" {
+                let step = doc.get("step").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                format!("coll_op:{}", phase_name(step))
+            } else {
+                kind.to_string()
+            };
+            if !*first {
+                write!(w, ",")?;
+            }
+            *first = false;
+            if dur_ns > 0.0 {
+                write!(
+                    w,
+                    "{{\"name\":\"{name}\",\"ph\":\"X\",\"ts\":{ts_us},\"dur\":{},\
+                     \"pid\":{rank},\"tid\":{rank},\"args\":{}}}",
+                    dur_ns / 1e3,
+                    chrome_args(doc)
+                )
+            } else {
+                write!(
+                    w,
+                    "{{\"name\":\"{name}\",\"ph\":\"i\",\"s\":\"t\",\"ts\":{ts_us},\
+                     \"pid\":{rank},\"tid\":{rank},\"args\":{}}}",
+                    chrome_args(doc)
+                )
+            }
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Everything except the positional fields rides along as `args`.
+fn chrome_args(doc: &Json) -> Json {
+    let mut args = std::collections::BTreeMap::new();
+    if let Some(m) = doc.obj() {
+        for (k, v) in m {
+            if !matches!(k.as_str(), "schema" | "kind" | "rank" | "t_ns" | "dur_ns") {
+                args.insert(k.clone(), v.clone());
+            }
+        }
+    }
+    Json::Obj(args)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> String {
+        std::env::temp_dir()
+            .join(format!("{name}_{}", std::process::id()))
+            .to_str()
+            .unwrap()
+            .to_string()
+    }
+
+    fn sample_trace(path: &str) {
+        let body = "{\"schema\":\"trace_meta_v1\",\"rank\":1,\"wall_anchor_ns\":5000}\n\
+             {\"schema\":\"trace_event_v1\",\"kind\":\"remap_exec\",\"rank\":1,\"t_ns\":10,\
+              \"dur_ns\":90,\"ns\":2,\"epoch\":1,\"step\":0,\"bytes\":1024,\"peers\":2}\n\
+             {\"schema\":\"trace_event_v1\",\"kind\":\"pool_miss\",\"rank\":1,\"t_ns\":50,\
+              \"dur_ns\":0,\"capacity\":4096,\"b\":0}\n";
+        std::fs::write(path, body).unwrap();
+    }
+
+    #[test]
+    fn fold_check_and_summary_agree() {
+        let path = tmp("trace_report_fold");
+        sample_trace(&path);
+        let paths = vec![path.clone()];
+        let fold = fold_files(&paths).unwrap();
+        assert_eq!(fold.total_events(), 2);
+        let (lines, events) = check_files(&paths).unwrap();
+        assert_eq!((lines, events), (3, 2));
+        let summary = render_summary(&fold);
+        assert!(summary.contains("remap_exec"));
+        assert!(summary.contains("pool_miss"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn check_rejects_garbage_and_unknown_kinds() {
+        let path = tmp("trace_report_bad");
+        std::fs::write(&path, "{\"schema\":\"trace_event_v1\",\"kind\":\"nope\"}\n").unwrap();
+        assert!(check_files(&[path.clone()]).unwrap_err().contains("unknown kind"));
+        std::fs::write(&path, "not json at all\n").unwrap();
+        assert!(check_files(&[path.clone()]).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn chrome_export_is_loadable_json() {
+        let path = tmp("trace_report_chrome_in");
+        let out = tmp("trace_report_chrome_out");
+        sample_trace(&path);
+        write_chrome(&[path.clone()], &out).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let doc = Json::parse(text.trim()).expect("chrome document parses");
+        let events = doc.get("traceEvents").unwrap().items().unwrap();
+        assert_eq!(events.len(), 2);
+        // The span became a complete event, the instant an "i".
+        assert_eq!(events[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(events[1].get("ph").unwrap().as_str(), Some("i"));
+        // Wall-anchor alignment: ts = (5000 + 10) / 1e3.
+        assert!((events[0].get("ts").unwrap().as_f64().unwrap() - 5.01).abs() < 1e-9);
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&out).ok();
+    }
+}

@@ -66,7 +66,7 @@ pub fn forall(iters: usize, base_seed: u64, check: impl Fn(&mut Rng)) {
         let mut rng = Rng::new(seed);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| check(&mut rng)));
         if let Err(e) = result {
-            eprintln!("property failed at iter {i} (seed {seed:#x})");
+            crate::log!(Error, "property failed at iter {i} (seed {seed:#x})");
             std::panic::resume_unwind(e);
         }
     }

@@ -105,6 +105,14 @@ pub struct RemapBench {
     /// [`RemapBench::pool_checkouts`] in steady state — the
     /// zero-allocation proof.
     pub pool_hits: u64,
+    /// Datapath [`CommStats`](crate::comm::CommStats) deltas over the
+    /// timed iterations: [`ChunkStream`] messages and wire bytes sent
+    /// and received (framing included) — the proof the remap hot path
+    /// routed through the shared streaming layer.
+    pub dp_msgs_sent: u64,
+    pub dp_bytes_sent: u64,
+    pub dp_msgs_recv: u64,
+    pub dp_bytes_recv: u64,
 }
 
 impl RemapBench {
@@ -136,6 +144,10 @@ pub fn remap_to_json(b: &RemapBench) -> Json {
     top.insert("gb_per_sec".to_string(), Json::Num(b.gb_per_sec()));
     top.insert("pool_checkouts".to_string(), Json::Num(b.pool_checkouts as f64));
     top.insert("pool_hits".to_string(), Json::Num(b.pool_hits as f64));
+    top.insert("datapath_msgs_sent".to_string(), Json::Num(b.dp_msgs_sent as f64));
+    top.insert("datapath_bytes_sent".to_string(), Json::Num(b.dp_bytes_sent as f64));
+    top.insert("datapath_msgs_recv".to_string(), Json::Num(b.dp_msgs_recv as f64));
+    top.insert("datapath_bytes_recv".to_string(), Json::Num(b.dp_bytes_recv as f64));
     Json::Obj(top)
 }
 
@@ -191,6 +203,7 @@ fn run_remap_t<T: Element>(np: usize, n_global: usize, iters: usize) -> RemapBen
     }
     gate.wait();
     let (c0, h0) = datapath::pool_counters();
+    let (ms0, bs0, mr0, br0) = datapath::comm_snapshot();
     gate.wait();
     let mut seconds = 0f64;
     let mut messages = 0u64;
@@ -202,6 +215,7 @@ fn run_remap_t<T: Element>(np: usize, n_global: usize, iters: usize) -> RemapBen
         bytes_moved += b;
     }
     let (c1, h1) = datapath::pool_counters();
+    let (ms1, bs1, mr1, br1) = datapath::comm_snapshot();
     let plan = engine.plan(&Dmap::block_1d(np), &Dmap::cyclic_1d(np), &[n_global]);
     let crossing: usize = plan
         .transfers()
@@ -220,6 +234,10 @@ fn run_remap_t<T: Element>(np: usize, n_global: usize, iters: usize) -> RemapBen
         seconds,
         pool_checkouts: c1 - c0,
         pool_hits: h1 - h0,
+        dp_msgs_sent: ms1 - ms0,
+        dp_bytes_sent: bs1 - bs0,
+        dp_msgs_recv: mr1 - mr0,
+        dp_bytes_recv: br1 - br0,
     }
 }
 
@@ -402,6 +420,13 @@ pub fn collective_to_json(records: &[CollBench]) -> Json {
     let (pc, ph) = datapath::pool_counters();
     top.insert("pool_checkouts".to_string(), Json::Num(pc as f64));
     top.insert("pool_hits".to_string(), Json::Num(ph as f64));
+    // Process-cumulative datapath stream counters (CommStats wired
+    // into ChunkStream send/recv) — same caveat as the pool counters.
+    let (ms, bs, mr, br) = datapath::comm_snapshot();
+    top.insert("datapath_msgs_sent".to_string(), Json::Num(ms as f64));
+    top.insert("datapath_bytes_sent".to_string(), Json::Num(bs as f64));
+    top.insert("datapath_msgs_recv".to_string(), Json::Num(mr as f64));
+    top.insert("datapath_bytes_recv".to_string(), Json::Num(br as f64));
     top.insert("runs".to_string(), Json::Arr(runs));
     Json::Obj(top)
 }
@@ -776,6 +801,13 @@ pub fn overlap_to_json(records: &[OverlapBench]) -> Json {
         .collect();
     let mut top = BTreeMap::new();
     top.insert("schema".to_string(), Json::Str(OVERLAP_SCHEMA.to_string()));
+    // Process-cumulative datapath stream counters — the overlap bench
+    // is pure ChunkStream traffic, so these are its wire totals.
+    let (ms, bs, mr, br) = datapath::comm_snapshot();
+    top.insert("datapath_msgs_sent".to_string(), Json::Num(ms as f64));
+    top.insert("datapath_bytes_sent".to_string(), Json::Num(bs as f64));
+    top.insert("datapath_msgs_recv".to_string(), Json::Num(mr as f64));
+    top.insert("datapath_bytes_recv".to_string(), Json::Num(br as f64));
     top.insert("runs".to_string(), Json::Arr(runs));
     Json::Obj(top)
 }
@@ -806,6 +838,7 @@ mod tests {
             nppn: 0,
             chunk_bytes: 0,
             artifacts: "artifacts".into(),
+            trace: false,
         };
         let agg = AggregateResult {
             np: 2,
@@ -877,6 +910,19 @@ mod tests {
         assert_eq!(parsed.get("pool_hits").unwrap().as_usize(), Some(b.pool_hits as usize));
         assert!(b.pool_hits <= b.pool_checkouts);
         assert!(b.pool_checkouts > 0, "timed sends check buffers out of the pool");
+        // The datapath stream counters ride along too. The counters
+        // are process-global, so parallel tests may add traffic —
+        // assert at-least, not equality.
+        assert!(b.dp_msgs_sent > 0, "remap traffic must route through the datapath");
+        assert!(b.dp_bytes_sent >= b.payload_bytes, "wire bytes cover the payload");
+        for f in [
+            "datapath_msgs_sent",
+            "datapath_bytes_sent",
+            "datapath_msgs_recv",
+            "datapath_bytes_recv",
+        ] {
+            assert!(parsed.get(f).unwrap().as_f64().is_some(), "{f} missing");
+        }
     }
 
     #[test]
@@ -907,6 +953,8 @@ mod tests {
         assert!(runs[0].get("avg_latency_us").unwrap().as_f64().is_some());
         assert!(parsed.get("pool_checkouts").unwrap().as_usize().is_some());
         assert!(parsed.get("pool_hits").unwrap().as_usize().is_some());
+        assert!(parsed.get("datapath_msgs_sent").unwrap().as_f64().is_some());
+        assert!(parsed.get("datapath_bytes_recv").unwrap().as_f64().is_some());
     }
 
     #[test]
@@ -936,6 +984,8 @@ mod tests {
         assert_eq!(runs[1].get("phase").unwrap().as_str(), Some("allreduce"));
         assert!(runs[0].get("overlap_efficiency").unwrap().as_f64().is_some());
         assert!(runs[1].get("speedup_vs_serial").unwrap().as_f64().is_some());
+        assert!(parsed.get("datapath_msgs_sent").unwrap().as_f64().is_some());
+        assert!(parsed.get("datapath_bytes_sent").unwrap().as_f64().is_some());
     }
 
     #[test]

@@ -45,6 +45,7 @@ fn coordinator_over_file_transport() {
         nppn: 0,
         chunk_bytes: 0,
         artifacts: "artifacts".into(),
+        trace: false,
     };
     let (agg, _) = run_leader(&leader, &cfg).unwrap();
     for h in hs {

@@ -147,6 +147,7 @@ fn coordinator_all_map_kinds() {
             nppn: 0,
             chunk_bytes: 0,
             artifacts: "artifacts".into(),
+            trace: false,
         };
         let (agg, results) = run_leader(&leader, &cfg).unwrap();
         for h in hs {

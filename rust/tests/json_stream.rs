@@ -1,0 +1,219 @@
+//! Property tests for the incremental JSON push parser: the event
+//! stream is invariant to where the input is split, malformed and
+//! truncated input fails with an error (never a panic, a hang, or an
+//! unbounded buffer), and NDJSON folding stays bounded-memory at
+//! multi-MB scale.
+
+use distarray::json::{Json, JsonEvent, PushParser, StreamDocs, MAX_DEPTH};
+use distarray::prop::{forall, Rng};
+
+/// Owned rendering of one parse event, for comparing streams.
+fn own(ev: &JsonEvent<'_>) -> String {
+    match ev {
+        JsonEvent::ObjBegin => "{".into(),
+        JsonEvent::ObjEnd => "}".into(),
+        JsonEvent::ArrBegin => "[".into(),
+        JsonEvent::ArrEnd => "]".into(),
+        JsonEvent::Key(k) => format!("K:{k}"),
+        JsonEvent::Str(s) => format!("S:{s}"),
+        JsonEvent::Num(n) => format!("N:{n}"),
+        JsonEvent::Bool(b) => format!("B:{b}"),
+        JsonEvent::Null => "null".into(),
+    }
+}
+
+/// Parse `text` fed as the slices delimited by ascending `cuts`
+/// (byte offsets; may split multi-byte UTF-8 sequences and tokens).
+fn parse_split(text: &str, cuts: &[usize]) -> Result<Vec<String>, distarray::json::JsonError> {
+    let bytes = text.as_bytes();
+    let mut p = PushParser::new();
+    let mut out = Vec::new();
+    let mut start = 0;
+    for &c in cuts.iter().chain(std::iter::once(&bytes.len())) {
+        let c = c.min(bytes.len());
+        p.feed(&bytes[start..c], |ev| out.push(own(&ev)))?;
+        start = c;
+    }
+    p.finish(|ev| out.push(own(&ev)))?;
+    Ok(out)
+}
+
+/// Documents covering every token kind, escapes, multi-byte UTF-8
+/// (splitting mid-character must not change the result), nesting, and
+/// NDJSON-style multiple top-level values.
+const CORPUS: [&str; 8] = [
+    r#"{"a":1,"b":[true,false,null],"c":{"d":"e"}}"#,
+    r#"[1.5e-3,-7,0.25,1e9,[],{}]"#,
+    "{\"esc\":\"a\\\"b\\\\c\\n\\u0041\\u00e9\",\"t\":\"tab\\there\"}",
+    "{\"unicode\":\"héllo wörld — ∑π≈3\"}",
+    "  [ { \"spaced\" : [ 1 , 2 ] } , \"x\" ]  ",
+    "{\"line\":1}\n{\"line\":2}\n{\"line\":3}\n",
+    r#"{"deep":[[[[{"k":[[[1]]]}]]]]}"#,
+    "3.14159",
+];
+
+#[test]
+fn every_byte_boundary_split_equals_whole_parse() {
+    for doc in CORPUS {
+        let whole = parse_split(doc, &[]).expect("corpus doc parses whole");
+        assert!(!whole.is_empty());
+        for k in 1..doc.len() {
+            let split = parse_split(doc, &[k])
+                .unwrap_or_else(|e| panic!("split at {k} of {doc:?} failed: {e}"));
+            assert_eq!(split, whole, "split at byte {k} of {doc:?} diverged");
+        }
+    }
+}
+
+#[test]
+fn seven_byte_slices_equal_whole_parse() {
+    for doc in CORPUS {
+        let whole = parse_split(doc, &[]).unwrap();
+        let cuts: Vec<usize> = (1..doc.len()).filter(|k| k % 7 == 0).collect();
+        assert_eq!(parse_split(doc, &cuts).unwrap(), whole, "7-byte slices of {doc:?}");
+    }
+}
+
+/// Random documents, random cut points: the event stream never
+/// depends on the chunking. The whole-parse reference is
+/// [`Json::parse`] round-tripped through `Display`, so the push
+/// parser is also checked against the whole-document grammar.
+#[test]
+fn random_docs_random_cuts_match_whole_document_parser() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth >= 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Num((rng.below(2000) as f64 - 1000.0) / 8.0),
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Null,
+            3 => Json::Str(format!("s{}—π{}", rng.below(100), rng.below(10))),
+            4 => Json::Arr((0..rng.below(4)).map(|_| gen(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(4))
+                    .map(|i| (format!("k{i}"), gen(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall(40, 0xDA7A_57AE, |rng| {
+        let doc = gen(rng, 0);
+        let text = doc.to_string();
+        let whole = parse_split(&text, &[]).expect("rendered doc parses");
+        let mut cuts: Vec<usize> = (0..rng.below(6)).map(|_| 1 + rng.below(text.len().max(2) - 1)).collect();
+        cuts.sort_unstable();
+        cuts.dedup();
+        assert_eq!(parse_split(&text, &cuts).unwrap(), whole, "doc {text:?} cuts {cuts:?}");
+        // And the parse agrees with the whole-document API.
+        assert!(Json::parse(&text).is_ok());
+    });
+}
+
+#[test]
+fn malformed_input_errors_and_poisons_never_panics() {
+    let bad = [
+        "{",
+        "[1,",
+        "\"abc",
+        "{\"a\":}",
+        "{\"a\" 1}",
+        "{:1}",
+        "[1 2]",
+        "tru",
+        "nul",
+        "1e",
+        "{\"a\":1}}",
+        "]",
+        "}",
+        ",",
+        "\"\\u12\"x",
+        "\u{FFFD}",
+    ];
+    for doc in bad {
+        let mut p = PushParser::new();
+        let mut r = p.feed(doc.as_bytes(), |_| {});
+        if r.is_ok() {
+            r = p.finish(|_| {});
+        }
+        assert!(r.is_err(), "malformed {doc:?} must error");
+        // Poisoned: later feeds keep failing instead of resynchronizing
+        // into garbage.
+        assert!(p.feed(b"1", |_| {}).is_err(), "{doc:?} must poison the parser");
+    }
+}
+
+#[test]
+fn truncation_at_every_boundary_errors_or_parses_a_prefix() {
+    // Chopping a valid document anywhere must either finish with an
+    // error (truncated token/container) or succeed because the prefix
+    // happens to be a complete value run — never panic or hang.
+    let doc = r#"{"a":[1,2,{"b":"c\u0041"}],"d":true}"#;
+    for k in 0..doc.len() {
+        let mut p = PushParser::new();
+        let pre = &doc.as_bytes()[..k];
+        if p.feed(pre, |_| {}).is_ok() {
+            let _ = p.finish(|_| {});
+        }
+    }
+}
+
+#[test]
+fn nesting_beyond_max_depth_is_an_error_not_a_crash() {
+    let deep = "[".repeat(MAX_DEPTH + 8);
+    let mut p = PushParser::new();
+    let err = p.feed(deep.as_bytes(), |_| {}).expect_err("over-deep input must error");
+    assert!(err.msg.contains("deep"), "unexpected error: {err}");
+}
+
+#[test]
+fn unterminated_token_buffers_only_what_was_fed() {
+    // An adversarial never-ending string may buffer the token itself,
+    // but nothing more — no amplification, no resynthesis.
+    let mut p = PushParser::new();
+    p.feed(b"\"", |_| {}).unwrap();
+    let chunk = vec![b'x'; 64 * 1024];
+    for _ in 0..16 {
+        p.feed(&chunk, |_| {}).unwrap();
+    }
+    let fed = 1 + 16 * chunk.len();
+    assert!(p.buffered_bytes() <= fed, "buffered {} > fed {fed}", p.buffered_bytes());
+    assert!(p.buffered_bytes() >= 16 * chunk.len(), "token must be retained until it closes");
+    assert!(p.finish(|_| {}).is_err(), "unterminated string is truncated input");
+}
+
+#[test]
+fn multi_mb_ndjson_in_seven_byte_slices_stays_bounded() {
+    // A synthetic multi-MB report: thousands of ~200 B lines. Folding
+    // through StreamDocs in 7-byte slices must keep peak resident
+    // parse memory near the largest line, not the document total.
+    let line = |i: usize| {
+        format!(
+            "{{\"schema\":\"trace_event_v1\",\"kind\":\"chunk_send\",\"rank\":{},\"t_ns\":{},\
+             \"dur_ns\":12,\"peer\":{},\"bytes\":65536,\"chunk\":{},\"pad\":\"{}\"}}\n",
+            i % 8,
+            i * 1000,
+            (i + 1) % 8,
+            i,
+            "p".repeat(100)
+        )
+    };
+    let mut text = String::new();
+    let mut n_lines = 0;
+    while text.len() < 2 * 1024 * 1024 {
+        text.push_str(&line(n_lines));
+        n_lines += 1;
+    }
+    let max_line = text.lines().map(str::len).max().unwrap();
+    let mut docs = StreamDocs::new();
+    let mut seen = 0usize;
+    for chunk in text.as_bytes().chunks(7) {
+        docs.feed(chunk, |_| seen += 1).unwrap();
+    }
+    docs.finish(|_| seen += 1).unwrap();
+    assert_eq!(seen, n_lines, "every NDJSON line folds to one document");
+    assert_eq!(docs.docs(), n_lines);
+    assert!(
+        docs.peak_resident_bytes() <= 4 * max_line + 1024,
+        "peak resident {} B not bounded by the largest line ({max_line} B) on a {} B stream",
+        docs.peak_resident_bytes(),
+        text.len()
+    );
+}

@@ -1,0 +1,142 @@
+//! Acceptance tests for the telemetry plane, end to end: the const
+//! and runtime gates make tracing a no-op when off, and a four-rank
+//! in-process traced run emits schema-valid NDJSON covering the
+//! remap, collective, and datapath layers that folds, summarizes, and
+//! exports to a loadable Chrome trace document.
+
+use distarray::collective::{Collective, ReduceOp, TagSpace};
+use distarray::comm::{tags, ChannelHub, Transport};
+use distarray::darray::Darray;
+use distarray::dmap::Dmap;
+use distarray::json::Json;
+use distarray::obs::{self, report};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::thread;
+
+/// obs state (gate, ring, sink) is process-global; the tests that
+/// touch it run serialized.
+fn obs_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("{name}_{}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// The zero-cost claim at the macro layer: with recording off (either
+/// gate), `span_begin` hands out 0 and the recording macros store
+/// nothing in the ring.
+#[test]
+fn disabled_tracing_records_nothing_and_spans_are_zero() {
+    let _g = obs_lock();
+    obs::set_enabled(false);
+    let before = obs::recorder().recorded();
+    assert_eq!(obs::span_begin(), 0, "span_begin must be 0 when recording is off");
+    distarray::obs_event!(obs::EventKind::Mark, tag: 0, peer: obs::NO_PEER, a: 1, b: 2);
+    let start = obs::span_begin();
+    distarray::obs_span!(obs::EventKind::Mark, start, tag: 0, peer: obs::NO_PEER, a: 3, b: 4);
+    assert_eq!(obs::recorder().recorded(), before, "disabled tracing must not record");
+}
+
+/// The const gate: `COMPILED` mirrors the `obs-off` feature, and in
+/// an `obs-off` build the runtime switch can never stick.
+#[test]
+fn const_gate_wins_over_the_runtime_switch() {
+    let _g = obs_lock();
+    if obs::COMPILED {
+        obs::set_enabled(true);
+        assert!(obs::enabled());
+        obs::set_enabled(false);
+        assert!(!obs::enabled());
+    } else {
+        obs::set_enabled(true);
+        assert!(!obs::enabled(), "obs-off build must never enable recording");
+    }
+}
+
+/// ISSUE acceptance: a 4-rank traced run (threads standing in for
+/// ranks) produces an NDJSON stream that validates line by line,
+/// folds with all four ranks attributed, covers the remap,
+/// collective, and datapath layers, and exports to a loadable Chrome
+/// `trace_event` document.
+#[test]
+fn four_rank_traced_run_emits_valid_ndjson_and_chrome_export() {
+    if !obs::COMPILED {
+        return; // obs-off build: nothing to trace by design
+    }
+    let _g = obs_lock();
+    let trace = tmp("obs_trace_accept");
+    obs::set_rank(0);
+    obs::emit::install_sink(&trace).expect("open trace sink");
+    obs::set_enabled(true);
+
+    let np = 4;
+    let n = 20_000;
+    let hs: Vec<_> = ChannelHub::world(np)
+        .into_iter()
+        .map(|t| {
+            thread::spawn(move || {
+                let pid = t.pid();
+                obs::set_thread_rank(pid);
+                // Remap through the chunked datapath: block -> cyclic
+                // touches every peer pair.
+                let src =
+                    Darray::from_global_fn(Dmap::block_1d(np), &[n], pid, |g| g as f64);
+                let mut dst = Darray::zeros(Dmap::cyclic_1d(np), &[n], pid);
+                dst.assign_from(&src, &t, 1).unwrap();
+                // Collective round on the same transport.
+                let coll = Collective::star(np);
+                let local = vec![pid as f64; 64];
+                let sum = coll
+                    .allreduce(&t, TagSpace::packed(tags::NS_COLL, 40), &local, ReduceOp::Sum)
+                    .unwrap();
+                assert_eq!(sum[0], (0..np).map(|p| p as f64).sum::<f64>());
+                obs::clear_thread_rank();
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+
+    obs::set_enabled(false);
+    obs::emit::close_sink();
+
+    // Line-by-line schema validation (what CI runs as `trace-report
+    // --check`).
+    let files = vec![trace.clone()];
+    let (lines, events) = report::check_files(&files).expect("trace must be schema-valid NDJSON");
+    assert!(events > 0, "traced run recorded no events");
+    assert!(lines >= events + 2, "expected opening and closing meta lines");
+
+    // Bounded fold: every rank attributed, every instrumented layer
+    // present.
+    let fold = report::fold_files(&files).expect("trace must fold");
+    for rank in 0..np as i64 {
+        assert!(fold.ranks.contains_key(&rank), "rank {rank} missing from fold");
+    }
+    assert_eq!(fold.total_events() as usize, events);
+    let summary = report::render_summary(&fold);
+    for kind in ["remap_exec", "chunk_send", "chunk_arrive", "coll_op"] {
+        assert!(summary.contains(kind), "trace must cover '{kind}'; summary:\n{summary}");
+    }
+
+    // Chrome export loads as one JSON document with the same events.
+    let chrome = tmp("obs_trace_chrome");
+    report::write_chrome(&files, &chrome).expect("chrome export");
+    let text = std::fs::read_to_string(&chrome).unwrap();
+    let doc = Json::parse(text.trim()).expect("chrome document parses");
+    let entries = doc.get("traceEvents").unwrap().items().unwrap();
+    assert_eq!(entries.len(), events, "one chrome entry per trace event");
+    assert!(entries.iter().all(|e| e.get("ph").is_some() && e.get("ts").is_some()));
+
+    std::fs::remove_file(&trace).ok();
+    std::fs::remove_file(&chrome).ok();
+}
