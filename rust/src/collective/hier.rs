@@ -44,15 +44,15 @@ struct View {
 }
 
 impl View {
-    fn build(topo: &Topology, group: &[Pid], me_pid: Pid) -> View {
-        let nodes = topo.restrict(group);
+    fn build(topo: &Topology, group: &[Pid], me_pid: Pid) -> Result<View> {
+        let nodes = topo.restrict(group)?;
         let leaders: Vec<Pid> = nodes.iter().map(|g| g[0]).collect();
         let (my_node, my_slot) = nodes
             .iter()
             .enumerate()
             .find_map(|(k, g)| g.iter().position(|&p| p == me_pid).map(|s| (k, s)))
             .expect("caller verified membership");
-        View { nodes, leaders, my_node, my_slot }
+        Ok(View { nodes, leaders, my_node, my_slot })
     }
 
     fn is_leader(&self) -> bool {
@@ -74,7 +74,7 @@ pub(crate) fn bcast(
     space: &TagSpace,
     payload: Vec<u8>,
 ) -> Result<Vec<u8>> {
-    let v = View::build(topo, group, me_pid);
+    let v = View::build(topo, group, me_pid)?;
     let data = if v.is_leader() {
         tree::bcast(t, &v.leaders, v.my_node, space, LV_INTER, payload)?
     } else {
@@ -103,7 +103,7 @@ pub(crate) fn gather(
     space: &TagSpace,
     part: Vec<u8>,
 ) -> Result<Option<Vec<Vec<u8>>>> {
-    let v = View::build(topo, group, me_pid);
+    let v = View::build(topo, group, me_pid)?;
     let node_parts = star::gather(
         t,
         v.my_group(),
@@ -155,7 +155,7 @@ pub(crate) fn barrier(
     space: &TagSpace,
     timeout: Duration,
 ) -> Result<()> {
-    let v = View::build(topo, group, me_pid);
+    let v = View::build(topo, group, me_pid)?;
     let up = space.at(LV_INTRA_PRE, PH_UP, 0);
     let down = space.at(LV_INTRA_POST, PH_DOWN, 0);
     if v.is_leader() {

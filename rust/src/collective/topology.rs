@@ -100,8 +100,16 @@ impl Topology {
     /// `group[0]` (the operation root) is rotated to the front and
     /// the root to the front of its node, preserving the invariant
     /// that the first PID of the first node is the global root.
-    pub fn restrict(&self, group: &[Pid]) -> Vec<Vec<Pid>> {
-        assert!(!group.is_empty(), "restrict of an empty group");
+    ///
+    /// An empty `group` is an error, not a panic: after a failure
+    /// every group is a survivor set and may legitimately come up
+    /// empty, and a failure-path API must not abort the leader.
+    pub fn restrict(&self, group: &[Pid]) -> crate::comm::Result<Vec<Vec<Pid>>> {
+        if group.is_empty() {
+            return Err(crate::comm::CommError::Malformed(
+                "topology restrict of an empty group (no survivors?)".into(),
+            ));
+        }
         let mut out: Vec<Vec<Pid>> = Vec::new();
         let mut node_slot: Vec<Option<usize>> = vec![None; self.nodes.len()];
         for &p in group {
@@ -125,7 +133,7 @@ impl Topology {
         out.swap(0, rn);
         let rs = out[0].iter().position(|&p| p == root).unwrap();
         out[0].swap(0, rs);
-        out
+        Ok(out)
     }
 }
 
@@ -159,10 +167,10 @@ mod tests {
     #[test]
     fn restrict_keeps_order_and_roots_first() {
         let t = Topology::grouped(8, 2); // {0,1}{2,3}{4,5}{6,7}
-        let g = t.restrict(&[0, 1, 2, 3, 6]);
+        let g = t.restrict(&[0, 1, 2, 3, 6]).unwrap();
         assert_eq!(g, vec![vec![0, 1], vec![2, 3], vec![6]]);
         // A root in a later node rotates to the front.
-        let g = t.restrict(&[5, 0, 1, 4]);
+        let g = t.restrict(&[5, 0, 1, 4]).unwrap();
         assert_eq!(g[0], vec![5, 4]);
         assert_eq!(g[1], vec![0, 1]);
     }
@@ -170,8 +178,15 @@ mod tests {
     #[test]
     fn restrict_promotes_unknown_pids_to_singletons() {
         let t = Topology::grouped(4, 2);
-        let g = t.restrict(&[0, 1, 9]);
+        let g = t.restrict(&[0, 1, 9]).unwrap();
         assert_eq!(g, vec![vec![0, 1], vec![9]]);
+    }
+
+    #[test]
+    fn restrict_of_empty_group_is_an_error_not_a_panic() {
+        let t = Topology::grouped(4, 2);
+        let err = t.restrict(&[]).unwrap_err();
+        assert!(err.to_string().contains("empty group"), "{err}");
     }
 
     #[test]

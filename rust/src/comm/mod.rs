@@ -87,6 +87,12 @@ pub mod tags {
     /// `level | phase | round` by
     /// [`TagSpace`](crate::collective::TagSpace).
     pub const NS_COLL: u8 = 8;
+    /// Fault-tolerance control plane (`crate::fault`): heartbeat
+    /// pings/pongs and survivor-reconfiguration messages. Rides its
+    /// own namespace so detector traffic can never alias a data
+    /// stream, and a redealt epoch's tags reject stale messages from
+    /// a dead rank by construction.
+    pub const NS_FAULT: u8 = 9;
 
     /// Pack `(namespace, epoch, step)` into disjoint bit fields.
     ///
@@ -128,6 +134,11 @@ pub enum CommError {
     Disconnected(Pid),
     Io(std::io::Error),
     Malformed(String),
+    /// A peer was declared dead by the failure detector
+    /// ([`crate::fault::Detector`]) after missing `missed`
+    /// consecutive heartbeats. Distinct from [`CommError::Timeout`]:
+    /// this is a positive verdict, not a stall.
+    RankDead { pid: Pid, missed: u32 },
 }
 
 impl CommError {
@@ -154,6 +165,9 @@ impl std::fmt::Display for CommError {
             CommError::Disconnected(p) => write!(f, "peer {p} disconnected"),
             CommError::Io(e) => write!(f, "io error: {e}"),
             CommError::Malformed(m) => write!(f, "malformed message: {m}"),
+            CommError::RankDead { pid, missed } => {
+                write!(f, "rank {pid} declared dead after {missed} missed heartbeats")
+            }
         }
     }
 }

@@ -87,6 +87,9 @@ impl LaunchConfig {
                 chunk_bytes: 0,
                 artifacts: "artifacts".into(),
                 trace: false,
+                heartbeat: false,
+                checkpoint: String::new(),
+                restore: false,
             },
         }
     }

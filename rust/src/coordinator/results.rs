@@ -116,6 +116,15 @@ pub struct RunConfig {
     /// the telemetry exchange stays in protocol lockstep even when a
     /// worker's own sink install fails.
     pub trace: bool,
+    /// Run the leader-side heartbeat failure detector and worker-side
+    /// responders (`--heartbeat`; see [`crate::fault::detect`]).
+    pub heartbeat: bool,
+    /// Checkpoint directory for `ckpt_v1` shards (`--checkpoint`;
+    /// empty = checkpointing off).
+    pub checkpoint: String,
+    /// Resume from the shards in `checkpoint` instead of the §III
+    /// initial state (`--restore`).
+    pub restore: bool,
 }
 
 impl Encode for RunConfig {
@@ -139,6 +148,9 @@ impl Encode for RunConfig {
         w.put_usize(self.chunk_bytes);
         w.put_str(&self.artifacts);
         w.put_bool(self.trace);
+        w.put_bool(self.heartbeat);
+        w.put_str(&self.checkpoint);
+        w.put_bool(self.restore);
     }
 }
 
@@ -175,6 +187,9 @@ impl Decode for RunConfig {
         let chunk_bytes = r.get_usize()?;
         let artifacts = r.get_str()?;
         let trace = r.get_bool()?;
+        let heartbeat = r.get_bool()?;
+        let checkpoint = r.get_str()?;
+        let restore = r.get_bool()?;
         Ok(RunConfig {
             n_global,
             nt,
@@ -189,6 +204,9 @@ impl Decode for RunConfig {
             chunk_bytes,
             artifacts,
             trace,
+            heartbeat,
+            checkpoint,
+            restore,
         })
     }
 }
@@ -308,6 +326,9 @@ mod tests {
             chunk_bytes: 1 << 20,
             artifacts: "artifacts".into(),
             trace: true,
+            heartbeat: true,
+            checkpoint: "ckpt/run1".into(),
+            restore: true,
         };
         let got = RunConfig::from_bytes(&c.to_bytes()).unwrap();
         assert_eq!(got, c);
@@ -362,6 +383,9 @@ mod tests {
             chunk_bytes: 0,
             artifacts: String::new(),
             trace: false,
+            heartbeat: false,
+            checkpoint: String::new(),
+            restore: false,
         };
         let bytes = c.to_bytes();
         assert!(RunConfig::from_bytes(&bytes[..bytes.len() - 3]).is_err());

@@ -27,6 +27,23 @@ pub fn run_configured_stream(cfg: &RunConfig, pid: usize, np: usize) -> StreamRe
             let backend = registry
                 .get(cfg.backend)
                 .expect("default registry covers every BackendKind");
+            // `--checkpoint` routes the native engine through the
+            // shard-writing driver (the CLI rejects the flag for the
+            // PJRT engines, whose state lives device-side).
+            if !cfg.checkpoint.is_empty() {
+                return crate::fault::ckpt::run_stream_ckpt_dtype(
+                    backend.as_ref(),
+                    &map,
+                    cfg.n_global,
+                    cfg.nt,
+                    cfg.q,
+                    cfg.dtype,
+                    pid,
+                    std::path::Path::new(&cfg.checkpoint),
+                    cfg.restore,
+                )
+                .unwrap_or_else(|e| panic!("backend '{}': {e}", cfg.backend));
+            }
             run_stream_dtype(
                 backend.as_ref(),
                 &map,
@@ -167,7 +184,9 @@ fn run_pjrt_stream(cfg: &RunConfig, pid: usize, np: usize) -> StreamResult {
 /// Full worker lifecycle over a transport: receive the broadcast
 /// config (star bootstrap — see the leader module docs), run, then
 /// join the result aggregation under the configured `--coll`
-/// algorithm.
+/// algorithm. Under `--heartbeat` a sidecar thread echoes the
+/// leader's failure-detector pings for the whole lifecycle (compute
+/// through report), so only a genuinely dead worker goes silent.
 pub fn run_worker(t: &dyn Transport) -> Result<WorkerReport> {
     let np = t.np();
     let payload = Collective::star(np).bcast(t, config_space(), Vec::new())?;
@@ -182,7 +201,23 @@ pub fn run_worker(t: &dyn Transport) -> Result<WorkerReport> {
         crate::obs::set_thread_rank(t.pid());
         crate::obs::set_enabled(true);
     }
-    let result = run_configured_stream(&cfg, t.pid(), np);
+    if cfg.heartbeat {
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        return std::thread::scope(|s| {
+            s.spawn(|| crate::fault::respond_loop(t, 0, &stop));
+            let r = finish_worker(t, &cfg, np);
+            stop.store(true, std::sync::atomic::Ordering::Relaxed);
+            r
+        });
+    }
+    finish_worker(t, &cfg, np)
+}
+
+/// Compute + report + telemetry — the post-config part of the worker
+/// lifecycle, factored out so `run_worker` can run it under the
+/// heartbeat responder scope.
+fn finish_worker(t: &dyn Transport, cfg: &RunConfig, np: usize) -> Result<WorkerReport> {
+    let result = run_configured_stream(cfg, t.pid(), np);
     let report = WorkerReport::from_result(t.pid(), &result);
     let coll = Collective::new(cfg.coll, Topology::grouped(np, cfg.nppn));
     coll.gather(t, result_space(), report.to_bytes())?;

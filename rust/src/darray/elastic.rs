@@ -1,0 +1,259 @@
+//! Elastic re-deal — remapping a darray from P to P−k (or P+k)
+//! owners after the failure detector shrinks the world.
+//!
+//! Shrink/grow is literally a remap: the destination map is the same
+//! distribution dealt over the survivor list
+//! ([`Dmap::redeal_1d`](crate::dmap::Dmap::redeal_1d)), the transfer
+//! plan comes from the ordinary [`RemapEngine`], and the data moves
+//! over the same coalesced per-peer streams as any `assign_from`.
+//! Two failure-specific twists:
+//!
+//! * **Epoch bump** — the caller runs the redeal under a *new* epoch,
+//!   and epochs are baked into the message tag
+//!   ([`tags::pack`](crate::comm::tags::pack)), so anything a dead
+//!   rank sent under the old epoch can never match a redeal receive.
+//!   Stale messages are rejected by tag, not by luck.
+//! * **Lost shards** — data owned solely by a dead rank is gone; no
+//!   protocol can fetch it. Incoming groups whose source is not in
+//!   the survivor list are *refilled* locally from a caller-supplied
+//!   `refill(global_index)` (deterministic re-initialization, or
+//!   values restored from a [`ckpt_v1`](crate::fault::ckpt) shard).
+//!   [`DarrayT::redeal`] zero-fills; when every source PID survives
+//!   (pure elastic shrink/grow of a live world) nothing is refilled
+//!   and the result is exactly the remap.
+
+use super::dense::DarrayT;
+use super::engine::{remap_tag, send_group_typed, GroupScatter, RemapEngine};
+use super::{DarrayError, Result};
+use crate::comm::{ChunkStream, Transport};
+use crate::dmap::Pid;
+use crate::element::Element;
+use crate::obs::EventKind;
+use crate::obs_span;
+
+impl<T: Element> DarrayT<T> {
+    /// Re-deal this array onto `survivors`, zero-filling any region
+    /// whose only copy lived on a dead rank. See
+    /// [`redeal_with`](DarrayT::redeal_with) for the general form.
+    /// SPMD: every survivor calls this with the same `survivors` and
+    /// `epoch`.
+    pub fn redeal(
+        &self,
+        survivors: &[Pid],
+        t: &dyn Transport,
+        epoch: u64,
+        engine: &RemapEngine,
+    ) -> Result<DarrayT<T>> {
+        self.redeal_with(survivors, t, epoch, engine, |_| T::ZERO)
+    }
+
+    /// Re-deal this array onto `survivors`, rebuilding dead ranks'
+    /// regions from `refill(global_flat_index)`.
+    ///
+    /// The destination map is this map's distribution over
+    /// `survivors`; the plan comes from `engine` (cached per map
+    /// pair). `epoch` must be **fresh** — strictly newer than any
+    /// epoch the failed configuration used — so in-flight messages
+    /// from the dead rank can never alias the redeal's tag stream.
+    /// Sends target only survivors by construction (the destination
+    /// map contains no dead PID); receives from dead sources are
+    /// replaced by local refills.
+    pub fn redeal_with(
+        &self,
+        survivors: &[Pid],
+        t: &dyn Transport,
+        epoch: u64,
+        engine: &RemapEngine,
+        refill: impl Fn(usize) -> T,
+    ) -> Result<DarrayT<T>> {
+        let dst_map = self.map().redeal_1d(survivors).ok_or_else(|| {
+            DarrayError::Unsupported(format!(
+                "redeal needs a 1-D map and a non-empty survivor list \
+                 (ndim={}, survivors={})",
+                self.map().ndim(),
+                survivors.len()
+            ))
+        })?;
+        if !dst_map.contains(self.pid()) {
+            return Err(DarrayError::Unsupported(format!(
+                "pid {} is not a survivor; dead ranks do not participate in a redeal",
+                self.pid()
+            )));
+        }
+        let t0 = crate::obs::span_begin();
+        let pid = self.pid();
+        let shape = self.shape().to_vec();
+        let mut dst = DarrayT::<T>::zeros(dst_map.clone(), &shape, pid);
+        let plan = engine.plan(self.map(), &dst_map, &shape);
+        let tag = remap_tag(epoch);
+        if plan.is_aligned() {
+            dst.loc_mut().copy_from_slice(self.loc());
+            return Ok(dst);
+        }
+        for &(s_off, d_off, len) in plan.local_copies(pid) {
+            dst.loc_mut()[d_off..d_off + len].copy_from_slice(&self.loc()[s_off..s_off + len]);
+        }
+        // Outgoing groups all target survivors — the destination map
+        // contains nothing else.
+        for g in plan.peer_sends(pid) {
+            send_group_typed::<T>(g, self.loc(), t, tag)?;
+        }
+        // Incoming groups split by source liveness: survivors are
+        // drained as coalesced streams, dead sources are refilled.
+        let alive = |p: Pid| survivors.contains(&p);
+        let groups = plan.peer_recvs(pid);
+        let dst_loc = dst.loc_mut();
+        for g in groups.iter().filter(|g| !alive(g.peer)) {
+            for (r, &off) in g.ranges.iter().zip(&g.local_offsets) {
+                for (k, slot) in dst_loc[off..off + r.len()].iter_mut().enumerate() {
+                    *slot = refill(r.lo + k);
+                }
+            }
+        }
+        let live: Vec<_> = groups.iter().filter(|g| alive(g.peer)).collect();
+        let peers: Vec<Pid> = live.iter().map(|g| g.peer).collect();
+        let mut scatters: Vec<GroupScatter<'_, T>> =
+            live.iter().map(|g| GroupScatter::new(g)).collect();
+        ChunkStream::drain_chunks(t, &peers, tag, |c| {
+            scatters[c.peer_idx].feed(c.payload(), dst_loc)
+        })?;
+        for s in &scatters {
+            s.finish()?;
+        }
+        obs_span!(
+            EventKind::Redeal,
+            t0,
+            tag: tag.at(0),
+            peer: crate::obs::NO_PEER,
+            a: dst.global_len() as u64,
+            b: survivors.len() as u64
+        );
+        Ok(dst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+    use crate::darray::Darray;
+    use crate::dmap::Dmap;
+    use std::sync::Arc;
+    use std::thread;
+
+    /// SPMD over an explicit participant list (survivors may be a
+    /// strict subset of the world).
+    fn spmd_on(
+        np: usize,
+        participants: &[Pid],
+        f: impl Fn(usize, &dyn Transport) + Send + Sync + 'static,
+    ) {
+        let world = ChannelHub::world(np);
+        let f = Arc::new(f);
+        let mut hs = Vec::new();
+        for t in world {
+            if !participants.contains(&t.pid()) {
+                continue;
+            }
+            let f = f.clone();
+            hs.push(thread::spawn(move || f(t.pid(), &t)));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn shrink_with_all_sources_alive_preserves_every_element() {
+        // 4 → 3 owners, nobody dead: a pure elastic shrink. Every
+        // global element must survive the move.
+        spmd_on(4, &[0, 1, 2, 3], |pid, t| {
+            let src = Darray::from_global_fn(Dmap::block_1d(4), &[97], pid, |g| g as f64 + 0.25);
+            let survivors = [0, 1, 2];
+            if !survivors.contains(&pid) {
+                // Rank 3 still participates as a *source*: it owns a
+                // block that must flow to the survivors.
+                let engine = RemapEngine::new();
+                let dst_map = src.map().redeal_1d(&survivors).unwrap();
+                let plan = engine.plan(src.map(), &dst_map, &[97]);
+                for g in plan.peer_sends(pid) {
+                    send_group_typed::<f64>(g, src.loc(), t, remap_tag(1)).unwrap();
+                }
+                return;
+            }
+            let engine = RemapEngine::new();
+            let dst = src.redeal(&survivors, t, 1, &engine).unwrap();
+            assert_eq!(dst.map().np(), 3);
+            for g in 0..97 {
+                if let Some(v) = dst.global_get(g) {
+                    assert_eq!(v, g as f64 + 0.25, "pid={pid} g={g}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn dead_source_regions_are_refilled_not_hung() {
+        // Rank 1 of 3 is dead and never sends. Its block is refilled
+        // from the closure; everything else moves normally.
+        let n = 60usize;
+        spmd_on(3, &[0, 2], move |pid, t| {
+            let src = Darray::from_global_fn(Dmap::block_1d(3), &[n], pid, |g| g as f64);
+            let engine = RemapEngine::new();
+            let survivors = [0, 2];
+            let dst = src.redeal_with(&survivors, t, 1, &engine, |g| -(g as f64)).unwrap();
+            for g in 0..n {
+                if let Some(v) = dst.global_get(g) {
+                    let dead_owned = src.map().owner(&[g], &[n]) == 1;
+                    let want = if dead_owned { -(g as f64) } else { g as f64 };
+                    assert_eq!(v, want, "pid={pid} g={g}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn stale_old_epoch_messages_are_ignored_by_tag() {
+        // A message the "dead" rank sent under the old epoch sits in
+        // a survivor's mailbox; the redeal runs under a bumped epoch
+        // and must never consume it. Survivors [1, 0] flip block
+        // ownership, so the redeal genuinely communicates past the
+        // poisoned mailbox entry.
+        let n = 40usize;
+        spmd_on(2, &[0, 1], move |pid, t| {
+            if pid == 1 {
+                // Poison: bytes under the OLD epoch's remap tag.
+                t.send(0, remap_tag(0).at(0), b"stale garbage from a dying rank").unwrap();
+            }
+            let src = Darray::from_global_fn(Dmap::block_1d(2), &[n], pid, |g| g as f64);
+            let engine = RemapEngine::new();
+            let dst = src.redeal(&[1, 0], t, 1, &engine).unwrap();
+            assert!(!t.stats().is_silent(), "reordered survivors must communicate");
+            for g in 0..n {
+                if let Some(v) = dst.global_get(g) {
+                    assert_eq!(v, g as f64);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn non_survivor_caller_is_an_error() {
+        spmd_on(2, &[0], |pid, t| {
+            let src = Darray::from_global_fn(Dmap::block_1d(2), &[8], pid, |g| g as f64);
+            let engine = RemapEngine::new();
+            let err = src.redeal(&[1], t, 1, &engine).unwrap_err();
+            assert!(err.to_string().contains("not a survivor"), "{err}");
+        });
+    }
+
+    #[test]
+    fn redeal_of_2d_map_is_unsupported() {
+        spmd_on(1, &[0], |pid, t| {
+            let src = Darray::zeros(Dmap::block_2d(1, 1), &[4, 4], pid);
+            let engine = RemapEngine::new();
+            let err = src.redeal(&[0], t, 1, &engine).unwrap_err();
+            assert!(err.to_string().contains("1-D"), "{err}");
+        });
+    }
+}

@@ -23,6 +23,7 @@
 
 pub mod agg;
 pub mod dense;
+pub mod elastic;
 pub mod engine;
 pub mod halo;
 pub mod ops;

@@ -186,6 +186,24 @@ impl Dmap {
         )
     }
 
+    /// The elastic re-deal of this map onto a new owner list: the
+    /// same 1-D distribution and overlap dealt over `new_pids` (the
+    /// survivor group after a failure, or a grown group on
+    /// scale-up). `None` for multi-dimensional grids — a survivor
+    /// set has no canonical factorization into a higher-rank grid —
+    /// and for an empty `new_pids`.
+    pub fn redeal_1d(&self, new_pids: &[Pid]) -> Option<Dmap> {
+        if self.ndim() != 1 || new_pids.is_empty() {
+            return None;
+        }
+        Some(Dmap::new(
+            Grid::line(new_pids.len()),
+            self.inner.dists.clone(),
+            self.inner.overlaps.clone(),
+            new_pids.to_vec(),
+        ))
+    }
+
     pub fn grid(&self) -> &Grid {
         &self.inner.grid
     }

@@ -1,0 +1,265 @@
+//! The end-to-end chaos scenario: kill one worker mid-job, detect,
+//! re-deal onto the survivors, verify bit-identity.
+//!
+//! [`run_chaos`] choreographs an in-process `np`-rank world over
+//! [`FaultTransport`]-wrapped channel endpoints:
+//!
+//! 1. every rank deals a block array and remaps it to a cyclic layout
+//!    (epoch 0 — the "job" is mid-flight, data has already moved);
+//! 2. the victim's endpoint is killed; its heartbeat responder goes
+//!    silent;
+//! 3. the leader's [`Detector`] declares it dead within the miss
+//!    threshold and broadcasts a survivor list + bumped epoch on the
+//!    `NS_FAULT` control step;
+//! 4. survivors [`redeal_with`](crate::darray::DarrayT::redeal_with)
+//!    onto the shrunk world (epoch 1), refilling the victim's lost
+//!    shard from the deterministic generator;
+//! 5. every survivor compares its shard against a freshly generated
+//!    reference on the survivor map — exactly what a clean run on the
+//!    surviving ranks would hold. Bit-identical or the run fails.
+//!
+//! The same scenario backs the `repro chaos` CLI subcommand, the CI
+//! chaos smoke, and the `fault_recovery` integration test — one
+//! choreography, three harnesses.
+
+use super::detect::{respond_loop, Detector, DetectorConfig};
+use super::inject::{FaultPlan, FaultTransport};
+use crate::comm::{tags, ChannelHub, Tag, Transport, WireReader, WireWriter};
+use crate::darray::{DarrayT, RemapEngine};
+use crate::dmap::{Dmap, Pid};
+use crate::element::Element;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Tag carrying the leader's post-detection reconfiguration order
+/// (survivor list + new epoch).
+pub fn ctrl_tag() -> Tag {
+    tags::pack(tags::NS_FAULT, 0, 2)
+}
+
+/// What the chaos run observed — enough for a harness (CLI, CI, test)
+/// to assert on and report.
+#[derive(Debug, Clone)]
+pub struct ChaosReport {
+    /// The rank that was killed.
+    pub killed: Pid,
+    /// The ranks that completed the redeal.
+    pub survivors: Vec<Pid>,
+    /// Probe rounds the leader ran before the verdict.
+    pub probe_rounds: u64,
+    /// Did every survivor's shard match the clean-survivor reference
+    /// bit for bit?
+    pub bit_identical: bool,
+    /// Global element count of the chaos array.
+    pub n_global: usize,
+}
+
+/// The deterministic generator every rank (and the refill) draws from.
+fn gen_at<T: Element>(g: usize) -> T {
+    T::from_f64((g % 97) as f64)
+}
+
+fn encode_ctrl(epoch: u64, survivors: &[Pid]) -> Vec<u8> {
+    let mut w = WireWriter::new();
+    w.put_u64(epoch);
+    let pids: Vec<u64> = survivors.iter().map(|&p| p as u64).collect();
+    w.put_slice::<u64>(&pids);
+    w.finish()
+}
+
+fn decode_ctrl(bytes: &[u8]) -> crate::comm::Result<(u64, Vec<Pid>)> {
+    let mut r = WireReader::new(bytes);
+    let epoch = r.get_u64()?;
+    let pids = r.get_vec::<u64>()?;
+    Ok((epoch, pids.into_iter().map(|p| p as Pid).collect()))
+}
+
+/// Run the kill-one-worker chaos scenario for element type `T`.
+///
+/// `np` ranks, `victim` (must be a nonzero rank — rank 0 is the
+/// leader/detector) killed after the epoch-0 remap, `n` global
+/// elements. Returns the report, or a one-line description of the
+/// first rank failure. Deterministic: same arguments, same data, same
+/// verdict.
+pub fn run_chaos<T: Element>(
+    np: usize,
+    victim: Pid,
+    n: usize,
+    cfg: DetectorConfig,
+) -> Result<ChaosReport, String> {
+    if np < 2 || victim == 0 || victim >= np {
+        return Err(format!(
+            "chaos needs np >= 2 and a worker victim in 1..np (np={np}, victim={victim})"
+        ));
+    }
+    let endpoints: Vec<FaultTransport<_>> = ChannelHub::world(np)
+        .into_iter()
+        .map(|t| FaultTransport::new(t, FaultPlan::default()))
+        .collect();
+    let survivors: Vec<Pid> = (0..np).filter(|&p| p != victim).collect();
+    let identical = Mutex::new(true);
+    let rounds = Mutex::new(0u64);
+    let first_err: Mutex<Option<String>> = Mutex::new(None);
+    let fail = |pid: Pid, msg: String| {
+        let mut slot = first_err.lock().unwrap();
+        if slot.is_none() {
+            *slot = Some(format!("rank {pid}: {msg}"));
+        }
+    };
+
+    std::thread::scope(|s| {
+        for t in &endpoints {
+            let survivors = &survivors;
+            let identical = &identical;
+            let rounds = &rounds;
+            let fail = &fail;
+            s.spawn(move || {
+                let pid = t.pid();
+                crate::obs::set_thread_rank(pid);
+                let engine = RemapEngine::new();
+                // Phase 1: the job — deal a block array, remap it to a
+                // cyclic layout. All ranks alive; must complete clean.
+                let src =
+                    DarrayT::<T>::from_global_fn(Dmap::block_1d(np), &[n], pid, gen_at::<T>);
+                let mut mid = DarrayT::<T>::zeros(Dmap::cyclic_1d(np), &[n], pid);
+                if let Err(e) = mid.assign_from_engine(&src, t, 0, &engine) {
+                    fail(pid, format!("epoch-0 remap failed: {e}"));
+                    return;
+                }
+                // Phase 2: the fault. The victim's endpoint dies; its
+                // responder falls silent and its thread "crashes" out.
+                if pid == victim {
+                    t.kill_now();
+                    return;
+                }
+                if pid == 0 {
+                    // Leader: probe until the victim is declared dead,
+                    // then order the survivors into the new epoch.
+                    let mut det = Detector::new(0, np, cfg.clone());
+                    let cap = cfg.miss_threshold as u64 + 8;
+                    while det.rounds() < cap && !det.is_dead(victim) {
+                        if let Err(e) = det.probe(t) {
+                            fail(pid, format!("probe failed: {e}"));
+                            return;
+                        }
+                    }
+                    *rounds.lock().unwrap() = det.rounds();
+                    if !det.is_dead(victim) {
+                        fail(pid, format!("victim {victim} not declared dead in {cap} rounds"));
+                        return;
+                    }
+                    let order = encode_ctrl(1, survivors);
+                    for &p in survivors.iter().filter(|&&p| p != 0) {
+                        if let Err(e) = t.send(p, ctrl_tag(), &order) {
+                            fail(pid, format!("ctrl send to {p} failed: {e}"));
+                            return;
+                        }
+                    }
+                    run_survivor(t, &mid, survivors, 1, &engine, identical, fail);
+                    return;
+                }
+                // Surviving worker: heartbeat responder on a sidecar,
+                // main thread waits for the reconfiguration order.
+                let stop = AtomicBool::new(false);
+                std::thread::scope(|inner| {
+                    inner.spawn(|| respond_loop(t, 0, &stop));
+                    let order = match t.recv_timeout(0, ctrl_tag(), Duration::from_secs(60)) {
+                        Ok(b) => b,
+                        Err(e) => {
+                            fail(pid, format!("no reconfiguration order: {e}"));
+                            stop.store(true, Ordering::Relaxed);
+                            return;
+                        }
+                    };
+                    match decode_ctrl(&order) {
+                        Ok((epoch, listed)) if listed == *survivors => {
+                            run_survivor(t, &mid, survivors, epoch, &engine, identical, fail)
+                        }
+                        Ok((_, listed)) => {
+                            fail(pid, format!("survivor list mismatch: {listed:?}"))
+                        }
+                        Err(e) => fail(pid, format!("bad reconfiguration order: {e}")),
+                    }
+                    stop.store(true, Ordering::Relaxed);
+                });
+            });
+        }
+    });
+
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+    Ok(ChaosReport {
+        killed: victim,
+        survivors,
+        probe_rounds: rounds.into_inner().unwrap(),
+        bit_identical: identical.into_inner().unwrap(),
+        n_global: n,
+    })
+}
+
+/// One survivor's share of phase 3: redeal onto the shrunk world and
+/// compare against the clean-survivor reference.
+fn run_survivor<T: Element>(
+    t: &dyn Transport,
+    mid: &DarrayT<T>,
+    survivors: &[Pid],
+    epoch: u64,
+    engine: &RemapEngine,
+    identical: &Mutex<bool>,
+    fail: &dyn Fn(Pid, String),
+) {
+    let pid = t.pid();
+    let redealt = match mid.redeal_with(survivors, t, epoch, engine, gen_at::<T>) {
+        Ok(d) => d,
+        Err(e) => {
+            fail(pid, format!("redeal failed: {e}"));
+            return;
+        }
+    };
+    // The reference is what a clean run on exactly the surviving ranks
+    // would hold: the same generator dealt over the survivor map.
+    let reference = DarrayT::<T>::from_global_fn(
+        redealt.map().clone(),
+        redealt.shape(),
+        pid,
+        gen_at::<T>,
+    );
+    if redealt.loc() != reference.loc() {
+        let mut id = identical.lock().unwrap();
+        *id = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> DetectorConfig {
+        DetectorConfig { interval: Duration::from_millis(10), miss_threshold: 3 }
+    }
+
+    #[test]
+    fn kill_one_of_four_recovers_bit_identically() {
+        let r = run_chaos::<f64>(4, 2, 4096, fast()).unwrap();
+        assert_eq!(r.killed, 2);
+        assert_eq!(r.survivors, vec![0, 1, 3]);
+        assert!(r.bit_identical, "survivor shards must match the clean reference");
+        assert!(r.probe_rounds <= fast().miss_threshold as u64 + 8);
+    }
+
+    #[test]
+    fn victim_choice_is_validated() {
+        assert!(run_chaos::<f64>(4, 0, 64, fast()).is_err(), "leader is not killable");
+        assert!(run_chaos::<f64>(4, 7, 64, fast()).is_err(), "victim must exist");
+        assert!(run_chaos::<f64>(1, 1, 64, fast()).is_err(), "need a worker");
+    }
+
+    #[test]
+    fn ctrl_order_roundtrips() {
+        let b = encode_ctrl(3, &[0, 1, 5]);
+        assert_eq!(decode_ctrl(&b).unwrap(), (3, vec![0, 1, 5]));
+        assert!(decode_ctrl(&b[..4]).is_err(), "torn order is a clean error");
+    }
+}

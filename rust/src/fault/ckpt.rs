@@ -1,0 +1,544 @@
+//! `ckpt_v1` — spool-backed checkpoint shards with restore.
+//!
+//! One file per rank (`ckpt_v1.rank<pid>` in the checkpoint
+//! directory), written atomically (tmp + rename) so a crash mid-write
+//! can never leave a half-shard under the final name:
+//!
+//! ```text
+//! magic "DACKPT1\0"                     8 bytes
+//! version                               u8  (= 1)
+//! dtype code                            u8  (Dtype::code)
+//! pid, np, epoch, n_global, n_sections  u64 × 5, LE
+//! sections                              n_sections × put_slice::<T>
+//! CRC-32 (IEEE) over all of the above   u32, LE
+//! ```
+//!
+//! The header is self-describing (a shard read at the wrong dtype is
+//! rejected by name, not misinterpreted) and the CRC trailer turns
+//! truncation and bit rot into one clean [`CkptError::Corrupt`] line
+//! — never a panic, never silent corruption. Reading validates in
+//! order: length → CRC → magic → version → dtype → geometry, so the
+//! most common damage (a torn tail) is caught before any field is
+//! trusted.
+//!
+//! [`run_stream_ckpt_t`] is the checkpoint-aware STREAM driver behind
+//! `repro run --checkpoint <dir> [--restore]`: same kernel sequence
+//! and validation as [`run_stream_t`](crate::backend::run_stream_t),
+//! with the three vectors downloaded and shard-written every
+//! `DISTARRAY_FAULT_CKPT_EVERY` iterations and a `--restore` resuming
+//! bit-identically from the last completed epoch.
+
+use crate::backend::{Backend, BackendError, DeviceBuffer};
+use crate::comm::{WireReader, WireWriter};
+use crate::dmap::{Dmap, Pid};
+use crate::element::{Dtype, Element};
+use crate::obs::EventKind;
+use crate::obs_span;
+use std::path::{Path, PathBuf};
+
+/// File magic of every `ckpt_v1` shard.
+pub const MAGIC: [u8; 8] = *b"DACKPT1\0";
+const VERSION: u8 = 1;
+/// Geometry sanity bound — a CRC-valid header still shouldn't drive
+/// an absurd allocation.
+const MAX_SECTIONS: u64 = 4096;
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE 802.3), hand-rolled — the crate is dependency-free.
+// ---------------------------------------------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC-32 (IEEE) of `bytes` — the shard trailer checksum.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Checkpoint I/O and validation failures. `Corrupt` messages are one
+/// line and name the shard — the operator-facing contract.
+#[derive(Debug)]
+pub enum CkptError {
+    Io(std::io::Error),
+    Corrupt(String),
+}
+
+impl std::fmt::Display for CkptError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CkptError::Io(e) => write!(f, "checkpoint io error: {e}"),
+            CkptError::Corrupt(m) => write!(f, "checkpoint rejected: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for CkptError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CkptError::Io(e) => Some(e),
+            CkptError::Corrupt(_) => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CkptError {
+    fn from(e: std::io::Error) -> Self {
+        CkptError::Io(e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, CkptError>;
+
+// ---------------------------------------------------------------------------
+// Codec
+// ---------------------------------------------------------------------------
+
+/// One decoded checkpoint shard.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Shard<T: Element> {
+    pub pid: Pid,
+    pub np: usize,
+    /// Completed epochs (iterations) at the time of the checkpoint.
+    pub epoch: u64,
+    pub n_global: usize,
+    /// Typed payload sections (e.g. the three STREAM vectors, or one
+    /// darray local part).
+    pub sections: Vec<Vec<T>>,
+}
+
+/// Path of rank `pid`'s shard inside checkpoint directory `dir`.
+pub fn shard_path(dir: &Path, pid: Pid) -> PathBuf {
+    dir.join(format!("ckpt_v1.rank{pid}"))
+}
+
+/// Encode one shard to bytes (header, sections, CRC trailer).
+pub fn encode_shard<T: Element>(
+    pid: Pid,
+    np: usize,
+    epoch: u64,
+    n_global: usize,
+    sections: &[&[T]],
+) -> Vec<u8> {
+    let payload: usize = sections.iter().map(|s| 9 + s.len() * T::WIDTH).sum();
+    let mut buf = Vec::with_capacity(8 + 2 + 40 + payload + 4);
+    buf.extend_from_slice(&MAGIC);
+    let mut w = WireWriter::from_vec(Vec::with_capacity(2 + 40 + payload));
+    w.put_u8(VERSION);
+    w.put_u8(T::DTYPE.code());
+    w.put_u64(pid as u64);
+    w.put_u64(np as u64);
+    w.put_u64(epoch);
+    w.put_u64(n_global as u64);
+    w.put_u64(sections.len() as u64);
+    for s in sections {
+        w.put_slice::<T>(s);
+    }
+    buf.extend_from_slice(&w.finish());
+    let crc = crc32(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+/// Decode and fully validate one shard from bytes. `what` names the
+/// source (a path) in error messages.
+pub fn decode_shard<T: Element>(bytes: &[u8], what: &str) -> Result<Shard<T>> {
+    let corrupt = |m: String| CkptError::Corrupt(format!("{what}: {m}"));
+    if bytes.len() < MAGIC.len() + 4 {
+        return Err(corrupt(format!("too short ({} bytes)", bytes.len())));
+    }
+    let (body, tail) = bytes.split_at(bytes.len() - 4);
+    let stored = u32::from_le_bytes(tail.try_into().unwrap());
+    if crc32(body) != stored {
+        return Err(corrupt("CRC mismatch (truncated or corrupt)".into()));
+    }
+    if body[..MAGIC.len()] != MAGIC {
+        return Err(corrupt("bad magic (not a ckpt_v1 shard)".into()));
+    }
+    let mut rd = WireReader::new(&body[MAGIC.len()..]);
+    let field = |r: crate::comm::Result<u64>| r.map_err(|e| corrupt(e.to_string()));
+    let version = field(rd.get_u8().map(u64::from))? as u8;
+    if version != VERSION {
+        return Err(corrupt(format!("unsupported version {version} (want {VERSION})")));
+    }
+    let code = field(rd.get_u8().map(u64::from))? as u8;
+    let dtype = Dtype::from_code(code)
+        .ok_or_else(|| corrupt(format!("unknown dtype code {code}")))?;
+    if dtype != T::DTYPE {
+        return Err(corrupt(format!("dtype mismatch: shard holds {dtype}, expected {}", T::DTYPE)));
+    }
+    let pid = field(rd.get_u64())? as usize;
+    let np = field(rd.get_u64())? as usize;
+    let epoch = field(rd.get_u64())?;
+    let n_global = field(rd.get_u64())? as usize;
+    let n_sections = field(rd.get_u64())?;
+    if n_sections > MAX_SECTIONS {
+        return Err(corrupt(format!("implausible section count {n_sections}")));
+    }
+    let mut sections = Vec::with_capacity(n_sections as usize);
+    for _ in 0..n_sections {
+        sections.push(rd.get_vec::<T>().map_err(|e| corrupt(e.to_string()))?);
+    }
+    if rd.remaining() != 0 {
+        return Err(corrupt(format!("{} trailing bytes after sections", rd.remaining())));
+    }
+    Ok(Shard { pid, np, epoch, n_global, sections })
+}
+
+/// Write rank `pid`'s shard into `dir` atomically (tmp + rename).
+/// Returns the shard size in bytes and emits a `fault_ckpt` span.
+pub fn write_shard<T: Element>(
+    dir: &Path,
+    pid: Pid,
+    np: usize,
+    epoch: u64,
+    n_global: usize,
+    sections: &[&[T]],
+) -> Result<usize> {
+    let t0 = crate::obs::span_begin();
+    std::fs::create_dir_all(dir)?;
+    let bytes = encode_shard::<T>(pid, np, epoch, n_global, sections);
+    let path = shard_path(dir, pid);
+    let tmp = dir.join(format!("ckpt_v1.rank{pid}.tmp"));
+    std::fs::write(&tmp, &bytes)?;
+    std::fs::rename(&tmp, &path)?;
+    obs_span!(
+        EventKind::Checkpoint,
+        t0,
+        tag: 0,
+        peer: crate::obs::NO_PEER,
+        a: bytes.len() as u64,
+        b: epoch
+    );
+    Ok(bytes.len())
+}
+
+/// Read and validate rank `pid`'s shard from `dir`. Emits a
+/// `fault_restore` span on success.
+pub fn read_shard<T: Element>(dir: &Path, pid: Pid) -> Result<Shard<T>> {
+    let t0 = crate::obs::span_begin();
+    let path = shard_path(dir, pid);
+    let bytes = std::fs::read(&path)?;
+    let shard = decode_shard::<T>(&bytes, &path.display().to_string())?;
+    obs_span!(
+        EventKind::Restore,
+        t0,
+        tag: 0,
+        peer: crate::obs::NO_PEER,
+        a: bytes.len() as u64,
+        b: shard.epoch
+    );
+    Ok(shard)
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint-aware STREAM driver
+// ---------------------------------------------------------------------------
+
+/// Checkpoint cadence from `DISTARRAY_FAULT_CKPT_EVERY` (default:
+/// every iteration).
+pub fn ckpt_every_from_env() -> usize {
+    std::env::var("DISTARRAY_FAULT_CKPT_EVERY")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map_or(1, |n| n.max(1))
+}
+
+/// [`run_stream_t`](crate::backend::run_stream_t) with per-epoch
+/// shard checkpoints: the three vectors are downloaded and written as
+/// one shard every `every` completed iterations, and `restore`
+/// resumes from the last shard instead of the §III initial state —
+/// bit-identically, because the shard holds the exact vectors. Shard
+/// geometry (pid/np/n_global/local length/dtype) is validated on
+/// restore; a mismatched or damaged shard is a one-line error, not a
+/// wrong answer.
+#[allow(clippy::too_many_arguments)]
+pub fn run_stream_ckpt_t<T: Element>(
+    backend: &dyn Backend,
+    map: &Dmap,
+    n_global: usize,
+    nt: usize,
+    q: T,
+    pid: Pid,
+    dir: &Path,
+    restore: bool,
+    every: usize,
+) -> crate::backend::Result<crate::stream::StreamResult> {
+    use crate::stream::serial::{A0, B0, C0};
+    use crate::stream::timing::{OpTimes, Timer};
+    use crate::stream::validate::{expected, tolerance_for, ValidationReport};
+
+    assert!(nt >= 1 && every >= 1);
+    if !backend.available() {
+        return Err(BackendError::Unavailable(backend.kind()));
+    }
+    let ckpt_err = |e: CkptError| BackendError::Runtime(e.to_string());
+    let shape = [n_global];
+    let n_local = map.local_size(pid, &shape);
+
+    let mut da = DeviceBuffer::<T>::alloc(backend, n_local)?;
+    let mut db = DeviceBuffer::<T>::alloc(backend, n_local)?;
+    let mut dc = DeviceBuffer::<T>::alloc(backend, n_local)?;
+    let mut stage = vec![T::ZERO; n_local];
+
+    let start_epoch = if restore {
+        let shard = read_shard::<T>(dir, pid).map_err(ckpt_err)?;
+        let geometry_ok = shard.np == map.np()
+            && shard.n_global == n_global
+            && shard.sections.len() == 3
+            && shard.sections.iter().all(|s| s.len() == n_local);
+        if !geometry_ok {
+            return Err(ckpt_err(CkptError::Corrupt(format!(
+                "{}: geometry mismatch (shard np={} n={} sections={:?}, run np={} n={} local={})",
+                shard_path(dir, pid).display(),
+                shard.np,
+                shard.n_global,
+                shard.sections.iter().map(Vec::len).collect::<Vec<_>>(),
+                map.np(),
+                n_global,
+                n_local
+            ))));
+        }
+        da.upload_from(backend, &shard.sections[0])?;
+        db.upload_from(backend, &shard.sections[1])?;
+        dc.upload_from(backend, &shard.sections[2])?;
+        crate::log!(Info, "restored rank {pid} from epoch {} of {}", shard.epoch, dir.display());
+        shard.epoch as usize
+    } else {
+        stage.fill(T::from_f64(A0));
+        da.upload_from(backend, &stage)?;
+        stage.fill(T::from_f64(B0));
+        db.upload_from(backend, &stage)?;
+        stage.fill(T::from_f64(C0));
+        dc.upload_from(backend, &stage)?;
+        0
+    };
+
+    let qf = q.to_f64();
+    let mut times = OpTimes::zero();
+    let mut b_stage = Vec::new();
+    let mut c_stage = Vec::new();
+    for it in start_epoch..nt {
+        let t = Timer::tic();
+        backend.copy(da.view(), dc.view_mut())?; // C = A
+        times.copy += t.toc();
+
+        let t = Timer::tic();
+        backend.scale(dc.view(), db.view_mut(), qf)?; // B = q·C
+        times.scale += t.toc();
+
+        let t = Timer::tic();
+        backend.add(da.view(), db.view(), dc.view_mut())?; // C = A + B
+        times.add += t.toc();
+
+        let t = Timer::tic();
+        backend.triad(db.view(), dc.view(), da.view_mut(), qf)?; // A = B + q·C
+        times.triad += t.toc();
+
+        let epoch = it + 1;
+        if epoch % every == 0 || epoch == nt {
+            b_stage.resize(n_local, T::ZERO);
+            c_stage.resize(n_local, T::ZERO);
+            da.download_into(backend, &mut stage)?;
+            db.download_into(backend, &mut b_stage)?;
+            dc.download_into(backend, &mut c_stage)?;
+            write_shard::<T>(
+                dir,
+                pid,
+                map.np(),
+                epoch as u64,
+                n_global,
+                &[&stage, &b_stage, &c_stage],
+            )
+            .map_err(ckpt_err)?;
+        }
+    }
+
+    let (ea, eb, ec) = expected(A0, qf, nt);
+    da.download_into(backend, &mut stage)?;
+    let err_a = max_dev(&stage, ea);
+    db.download_into(backend, &mut stage)?;
+    let err_b = max_dev(&stage, eb);
+    dc.download_into(backend, &mut stage)?;
+    let err_c = max_dev(&stage, ec);
+    let tol = tolerance_for(T::TOL_BASE, nt);
+    let validation = ValidationReport {
+        passed: err_a <= tol && err_b <= tol && err_c <= tol,
+        err_a,
+        err_b,
+        err_c,
+    };
+    Ok(crate::stream::StreamResult {
+        n_global,
+        n_local,
+        nt,
+        width: T::WIDTH,
+        backend: backend.kind(),
+        times,
+        validation,
+    })
+}
+
+fn max_dev<T: Element>(xs: &[T], e: f64) -> f64 {
+    xs.iter().map(|&x| (x.to_f64() - e).abs()).fold(0.0, f64::max)
+}
+
+/// Dtype dispatch for [`run_stream_ckpt_t`], mirroring
+/// [`run_stream_dtype`](crate::backend::run_stream_dtype).
+#[allow(clippy::too_many_arguments)]
+pub fn run_stream_ckpt_dtype(
+    backend: &dyn Backend,
+    map: &Dmap,
+    n_global: usize,
+    nt: usize,
+    q: f64,
+    dtype: Dtype,
+    pid: Pid,
+    dir: &Path,
+    restore: bool,
+) -> crate::backend::Result<crate::stream::StreamResult> {
+    let every = ckpt_every_from_env();
+    match dtype {
+        Dtype::F64 => {
+            run_stream_ckpt_t::<f64>(backend, map, n_global, nt, q, pid, dir, restore, every)
+        }
+        Dtype::F32 => run_stream_ckpt_t::<f32>(
+            backend, map, n_global, nt, q as f32, pid, dir, restore, every,
+        ),
+        Dtype::I64 => run_stream_ckpt_t::<i64>(
+            backend, map, n_global, nt, q as i64, pid, dir, restore, every,
+        ),
+        Dtype::U64 => run_stream_ckpt_t::<u64>(
+            backend, map, n_global, nt, q as u64, pid, dir, restore, every,
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{BackendKind, BackendRegistry};
+    use crate::stream::STREAM_Q;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("distarray_{name}_{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn shard_roundtrip_preserves_everything() {
+        let d = tmpdir("ckpt_rt");
+        let a: Vec<f64> = (0..100).map(|i| i as f64 * 0.5).collect();
+        let b: Vec<f64> = (0..100).map(|i| -(i as f64)).collect();
+        write_shard::<f64>(&d, 2, 4, 7, 400, &[&a, &b]).unwrap();
+        let s = read_shard::<f64>(&d, 2).unwrap();
+        assert_eq!((s.pid, s.np, s.epoch, s.n_global), (2, 4, 7, 400));
+        assert_eq!(s.sections, vec![a, b]);
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn dtype_confused_read_is_a_clean_error() {
+        let d = tmpdir("ckpt_dtype");
+        let a: Vec<f32> = vec![1.0, 2.0, 3.0];
+        write_shard::<f32>(&d, 0, 1, 1, 3, &[&a]).unwrap();
+        let err = read_shard::<f64>(&d, 0).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("dtype mismatch"), "{msg}");
+        assert!(msg.contains("f32") && msg.contains("f64"), "{msg}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn truncation_and_bitflips_are_clean_errors() {
+        let d = tmpdir("ckpt_damage");
+        let a: Vec<i64> = (0..64).collect();
+        write_shard::<i64>(&d, 1, 2, 3, 128, &[&a]).unwrap();
+        let path = shard_path(&d, 1);
+        let good = std::fs::read(&path).unwrap();
+        // Truncate at every prefix length: always an error, never a panic.
+        for cut in 0..good.len() {
+            let err = decode_shard::<i64>(&good[..cut], "trunc").unwrap_err();
+            assert!(matches!(err, CkptError::Corrupt(_)), "cut={cut}: {err}");
+        }
+        // Single bit flips anywhere: caught by the CRC.
+        crate::prop::forall(64, 0xC0FFEE, |rng| {
+            let mut bad = good.clone();
+            let bit = rng.below(bad.len() * 8);
+            bad[bit / 8] ^= 1 << (bit % 8);
+            let err = decode_shard::<i64>(&bad, "flip").unwrap_err();
+            assert!(matches!(err, CkptError::Corrupt(_)), "bit={bit}: {err}");
+        });
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn missing_shard_is_io_not_corrupt() {
+        let d = tmpdir("ckpt_missing");
+        let err = read_shard::<f64>(&d, 9).unwrap_err();
+        assert!(matches!(err, CkptError::Io(_)), "{err}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn interrupted_run_resumes_bit_identically() {
+        let reg = BackendRegistry::with_defaults(1, "artifacts");
+        let be = reg.get(BackendKind::Host).unwrap();
+        let map = Dmap::block_1d(1);
+        let (n, nt) = (4096, 6);
+        // Reference: one uninterrupted checkpointed run.
+        let d_ref = tmpdir("ckpt_ref");
+        let r_ref =
+            run_stream_ckpt_t::<f64>(be.as_ref(), &map, n, nt, STREAM_Q, 0, &d_ref, false, 1)
+                .unwrap();
+        assert!(r_ref.validation.passed);
+        let want = std::fs::read(shard_path(&d_ref, 0)).unwrap();
+        // Interrupted: run to epoch 3, then restore and finish.
+        let d = tmpdir("ckpt_resume");
+        run_stream_ckpt_t::<f64>(be.as_ref(), &map, n, 3, STREAM_Q, 0, &d, false, 1).unwrap();
+        let r = run_stream_ckpt_t::<f64>(be.as_ref(), &map, n, nt, STREAM_Q, 0, &d, true, 1)
+            .unwrap();
+        assert!(r.validation.passed);
+        let got = std::fs::read(shard_path(&d, 0)).unwrap();
+        assert_eq!(got, want, "resumed final shard must be bit-identical");
+        std::fs::remove_dir_all(&d_ref).ok();
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn restore_rejects_geometry_mismatch() {
+        let reg = BackendRegistry::with_defaults(1, "artifacts");
+        let be = reg.get(BackendKind::Host).unwrap();
+        let d = tmpdir("ckpt_geom");
+        let map = Dmap::block_1d(1);
+        run_stream_ckpt_t::<f64>(be.as_ref(), &map, 1024, 2, STREAM_Q, 0, &d, false, 1).unwrap();
+        // Same dir, different n_global: rejected with one line.
+        let err = run_stream_ckpt_t::<f64>(be.as_ref(), &map, 2048, 4, STREAM_Q, 0, &d, true, 1)
+            .unwrap_err();
+        assert!(err.to_string().contains("geometry mismatch"), "{err}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

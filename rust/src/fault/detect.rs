@@ -1,0 +1,285 @@
+//! Leader-driven heartbeat failure detector.
+//!
+//! The leader pings every worker each round on the
+//! [`NS_FAULT`](crate::comm::tags::NS_FAULT) namespace and tallies
+//! consecutive silent rounds per peer; a worker crossing the miss
+//! threshold is *declared dead* — a positive verdict the coordinator
+//! can act on (reap, redeal, resume) instead of spinning in
+//! [`CommError::Timeout`](crate::comm::CommError::Timeout). Workers
+//! run [`respond_loop`] on a sidecar thread: echo every ping back as
+//! a pong, nothing else — a wedged or killed worker stops echoing and
+//! that is the whole detection signal.
+//!
+//! Pings and pongs are separate steps of the same namespace (epoch 0),
+//! so detector traffic can never alias a data stream; the round
+//! sequence rides in the payload, and *any* pong arrival counts for
+//! its sender — a late pong proves liveness just as well as a prompt
+//! one.
+
+use crate::comm::{tags, Result, Tag, Transport};
+use crate::dmap::Pid;
+use crate::obs::EventKind;
+use crate::obs_event;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+/// Tag carrying leader → worker pings.
+pub fn ping_tag() -> Tag {
+    tags::pack(tags::NS_FAULT, 0, 0)
+}
+
+/// Tag carrying worker → leader pongs.
+pub fn pong_tag() -> Tag {
+    tags::pack(tags::NS_FAULT, 0, 1)
+}
+
+/// Detector tuning. `Default` is one round per 100 ms and a verdict
+/// after 3 silent rounds — a dead worker is declared within ~300 ms
+/// while a worker merely busy for a round survives.
+#[derive(Debug, Clone)]
+pub struct DetectorConfig {
+    /// Length of one probe round (ping, then collect pongs).
+    pub interval: Duration,
+    /// Consecutive silent rounds before a peer is declared dead.
+    pub miss_threshold: u32,
+}
+
+impl Default for DetectorConfig {
+    fn default() -> DetectorConfig {
+        DetectorConfig { interval: Duration::from_millis(100), miss_threshold: 3 }
+    }
+}
+
+impl DetectorConfig {
+    /// Read `DISTARRAY_FAULT_HB_INTERVAL_MS` /
+    /// `DISTARRAY_FAULT_HB_MISSES`, defaulting per [`Default`].
+    pub fn from_env() -> DetectorConfig {
+        let mut cfg = DetectorConfig::default();
+        if let Some(ms) = std::env::var("DISTARRAY_FAULT_HB_INTERVAL_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+        {
+            cfg.interval = Duration::from_millis(ms.max(1));
+        }
+        if let Some(n) = std::env::var("DISTARRAY_FAULT_HB_MISSES")
+            .ok()
+            .and_then(|v| v.parse::<u32>().ok())
+        {
+            cfg.miss_threshold = n.max(1);
+        }
+        cfg
+    }
+}
+
+/// Leader-side detector state: per-peer consecutive-miss counters and
+/// the accumulated dead set. Probing is pull-based — the caller runs
+/// [`Detector::probe`] once per round from wherever its event loop
+/// lives (the coordinator uses a monitor thread).
+pub struct Detector {
+    cfg: DetectorConfig,
+    me: Pid,
+    misses: Vec<u32>,
+    dead: Vec<bool>,
+    round: u64,
+}
+
+impl Detector {
+    /// A detector at endpoint `t_pid` watching all other PIDs of an
+    /// `np`-wide world.
+    pub fn new(me: Pid, np: usize, cfg: DetectorConfig) -> Detector {
+        Detector { cfg, me, misses: vec![0; np], dead: vec![false; np], round: 0 }
+    }
+
+    /// Has `pid` been declared dead?
+    pub fn is_dead(&self, pid: Pid) -> bool {
+        self.dead[pid]
+    }
+
+    /// Every declared-dead PID, ascending.
+    pub fn dead(&self) -> Vec<Pid> {
+        (0..self.dead.len()).filter(|&p| self.dead[p]).collect()
+    }
+
+    /// Every PID not declared dead (self included), ascending — the
+    /// survivor group a redeal targets.
+    pub fn survivors(&self) -> Vec<Pid> {
+        (0..self.dead.len()).filter(|&p| !self.dead[p]).collect()
+    }
+
+    /// Completed probe rounds.
+    pub fn rounds(&self) -> u64 {
+        self.round
+    }
+
+    /// Run one probe round: ping every live peer, collect pongs for
+    /// one interval, tally misses, and return any *newly* dead PIDs.
+    /// A send failure counts as a miss for that peer (a torn-down
+    /// endpoint is indistinguishable from silence). Emits
+    /// `fault_hb_miss` / `fault_rank_dead` trace events.
+    pub fn probe(&mut self, t: &dyn Transport) -> Result<Vec<Pid>> {
+        self.round += 1;
+        let peers: Vec<Pid> =
+            (0..t.np()).filter(|&p| p != self.me && !self.dead[p]).collect();
+        if peers.is_empty() {
+            return Ok(Vec::new());
+        }
+        let mut reachable = vec![true; peers.len()];
+        for (i, &p) in peers.iter().enumerate() {
+            if t.send(p, ping_tag(), &self.round.to_le_bytes()).is_err() {
+                reachable[i] = false;
+            }
+        }
+        // Collect pongs until the round interval elapses. Any pong —
+        // including one from an earlier round — proves liveness.
+        let mut ponged = vec![false; peers.len()];
+        let deadline = Instant::now() + self.cfg.interval;
+        loop {
+            let mut progressed = false;
+            for (i, &p) in peers.iter().enumerate() {
+                while t.try_recv(p, pong_tag())?.is_some() {
+                    ponged[i] = true;
+                    progressed = true;
+                }
+            }
+            if ponged.iter().all(|&x| x) || Instant::now() >= deadline {
+                break;
+            }
+            if !progressed {
+                std::thread::sleep(Duration::from_millis(1).min(self.cfg.interval / 4));
+            }
+        }
+        let mut newly_dead = Vec::new();
+        for (i, &p) in peers.iter().enumerate() {
+            if ponged[i] && reachable[i] {
+                self.misses[p] = 0;
+                continue;
+            }
+            self.misses[p] += 1;
+            obs_event!(
+                EventKind::HeartbeatMiss,
+                tag: ping_tag(),
+                peer: p as u32,
+                a: self.misses[p] as u64,
+                b: 0
+            );
+            if self.misses[p] >= self.cfg.miss_threshold {
+                self.dead[p] = true;
+                newly_dead.push(p);
+                obs_event!(
+                    EventKind::RankDead,
+                    tag: ping_tag(),
+                    peer: p as u32,
+                    a: self.misses[p] as u64,
+                    b: 0
+                );
+                crate::log!(
+                    Warn,
+                    "rank {p} declared dead after {} missed heartbeats",
+                    self.misses[p]
+                );
+            }
+        }
+        Ok(newly_dead)
+    }
+}
+
+/// Worker-side heartbeat responder: echo every leader ping back as a
+/// pong until `stop` is raised or the transport fails (a killed
+/// [`FaultTransport`](super::FaultTransport) endpoint exits here,
+/// which is exactly how its silence begins). Run on a sidecar thread
+/// (`std::thread::scope` — `&dyn Transport` is `Sync`).
+pub fn respond_loop(t: &dyn Transport, leader: Pid, stop: &AtomicBool) {
+    let poll = Duration::from_millis(25);
+    while !stop.load(Ordering::Relaxed) {
+        match t.recv_timeout(leader, ping_tag(), poll) {
+            Ok(seq) => {
+                if t.send(leader, pong_tag(), &seq).is_err() {
+                    return;
+                }
+            }
+            Err(crate::comm::CommError::Timeout { .. }) => continue,
+            Err(_) => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+    use crate::fault::{FaultPlan, FaultTransport};
+
+    fn fast() -> DetectorConfig {
+        DetectorConfig { interval: Duration::from_millis(5), miss_threshold: 3 }
+    }
+
+    #[test]
+    fn live_responders_are_never_declared_dead() {
+        let mut world = ChannelHub::world(3);
+        let t2 = world.pop().unwrap();
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            s.spawn(|| respond_loop(&t1, 0, &stop));
+            s.spawn(|| respond_loop(&t2, 0, &stop));
+            let mut det = Detector::new(0, 3, fast());
+            for _ in 0..5 {
+                assert_eq!(det.probe(&t0).unwrap(), Vec::<Pid>::new());
+            }
+            assert_eq!(det.survivors(), vec![0, 1, 2]);
+            stop.store(true, Ordering::Relaxed);
+        });
+    }
+
+    #[test]
+    fn silent_worker_is_declared_dead_within_threshold() {
+        let mut world = ChannelHub::world(3);
+        let t2 = world.pop().unwrap();
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        // Rank 2 responds; rank 1 is killed before it ever pongs.
+        let t1 = FaultTransport::new(t1, FaultPlan::default());
+        t1.kill_now();
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            s.spawn(|| respond_loop(&t1, 0, &stop));
+            s.spawn(|| respond_loop(&t2, 0, &stop));
+            let cfg = fast();
+            let mut det = Detector::new(0, 3, cfg.clone());
+            let mut dead = Vec::new();
+            for _ in 0..cfg.miss_threshold + 2 {
+                dead.extend(det.probe(&t0).unwrap());
+                if !dead.is_empty() {
+                    break;
+                }
+            }
+            assert_eq!(dead, vec![1]);
+            assert!(det.rounds() <= cfg.miss_threshold as u64, "verdict within threshold");
+            assert!(det.is_dead(1) && !det.is_dead(2));
+            assert_eq!(det.survivors(), vec![0, 2]);
+            stop.store(true, Ordering::Relaxed);
+        });
+    }
+
+    #[test]
+    fn one_missed_round_recovers() {
+        let mut world = ChannelHub::world(2);
+        let t1 = world.pop().unwrap();
+        let t0 = world.pop().unwrap();
+        let mut det = Detector::new(0, 2, fast());
+        // Round 1: nobody answers → one miss, no verdict.
+        assert!(det.probe(&t0).unwrap().is_empty());
+        assert!(!det.is_dead(1));
+        // The worker comes back: drain pings, answer, miss count resets.
+        let stop = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            s.spawn(|| respond_loop(&t1, 0, &stop));
+            for _ in 0..5 {
+                assert!(det.probe(&t0).unwrap().is_empty());
+            }
+            stop.store(true, Ordering::Relaxed);
+        });
+        assert_eq!(det.survivors(), vec![0, 1]);
+    }
+}

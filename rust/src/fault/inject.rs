@@ -1,0 +1,275 @@
+//! Deterministic fault injection at the transport seam.
+//!
+//! [`FaultTransport`] wraps any [`Transport`] and perturbs it from a
+//! seeded [`prop::Rng`](crate::prop::Rng): probabilistic silent
+//! drops, fixed delivery delay, probabilistic truncation, and a hard
+//! kill after N operations (or on demand via
+//! [`FaultTransport::kill_now`]). The same seed replays the same
+//! fault schedule, so every failure path found by a chaos run is a
+//! deterministic regression test. Composes over both the channel and
+//! file transports — the wrapper only sees the trait.
+
+use crate::comm::{CommError, CommStats, Result, Tag, Transport};
+use crate::dmap::Pid;
+use crate::prop::Rng;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// The fault schedule: what to inject and when. `Default` injects
+/// nothing — a `FaultTransport` over the default plan is a transparent
+/// pass-through.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    /// Seed for the per-endpoint fault PRNG (mixed with the PID so
+    /// ranks draw independent streams).
+    pub seed: u64,
+    /// Probability a `send` is silently dropped (receiver never sees
+    /// it; sender sees `Ok`).
+    pub drop_prob: f64,
+    /// Fixed delay applied to every `send` before delivery.
+    pub delay: Duration,
+    /// Probability a `send` delivers only the first half of its
+    /// payload (framing survives, content is torn — exercises the
+    /// `Malformed` paths).
+    pub truncate_prob: f64,
+    /// Kill this endpoint after it completes N send/recv operations;
+    /// every operation after that fails `Disconnected(self)`.
+    pub kill_after: Option<u64>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 1,
+            drop_prob: 0.0,
+            delay: Duration::ZERO,
+            truncate_prob: 0.0,
+            kill_after: None,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Build a plan from the `DISTARRAY_FAULT_*` environment knobs,
+    /// or `None` when no fault knob is set (the common case — spawned
+    /// workers check once at startup):
+    ///
+    /// * `DISTARRAY_FAULT_SEED` — PRNG seed (default 1)
+    /// * `DISTARRAY_FAULT_DROP` — send drop probability
+    /// * `DISTARRAY_FAULT_DELAY_MS` — per-send delay
+    /// * `DISTARRAY_FAULT_TRUNCATE` — send truncation probability
+    /// * `DISTARRAY_FAULT_KILL_AFTER` — kill after N operations
+    /// * `DISTARRAY_FAULT_KILL_PID` — restrict the kill to one PID
+    ///   (unset: the kill applies to every wrapped endpoint)
+    pub fn from_env(pid: Pid) -> Option<FaultPlan> {
+        fn f64_var(name: &str) -> Option<f64> {
+            std::env::var(name).ok()?.parse().ok()
+        }
+        fn u64_var(name: &str) -> Option<u64> {
+            std::env::var(name).ok()?.parse().ok()
+        }
+        let drop_prob = f64_var("DISTARRAY_FAULT_DROP");
+        let delay_ms = u64_var("DISTARRAY_FAULT_DELAY_MS");
+        let truncate_prob = f64_var("DISTARRAY_FAULT_TRUNCATE");
+        let mut kill_after = u64_var("DISTARRAY_FAULT_KILL_AFTER");
+        if let Some(kp) = u64_var("DISTARRAY_FAULT_KILL_PID") {
+            if kp as usize != pid {
+                kill_after = None;
+            }
+        }
+        if drop_prob.is_none()
+            && delay_ms.is_none()
+            && truncate_prob.is_none()
+            && kill_after.is_none()
+        {
+            return None;
+        }
+        Some(FaultPlan {
+            seed: u64_var("DISTARRAY_FAULT_SEED").unwrap_or(1),
+            drop_prob: drop_prob.unwrap_or(0.0),
+            delay: Duration::from_millis(delay_ms.unwrap_or(0)),
+            truncate_prob: truncate_prob.unwrap_or(0.0),
+            kill_after,
+        })
+    }
+}
+
+/// A [`Transport`] decorator that injects the faults of a
+/// [`FaultPlan`]. Deterministic given (seed, pid, operation order);
+/// transparent under the default plan.
+pub struct FaultTransport<T: Transport> {
+    inner: T,
+    plan: FaultPlan,
+    rng: Mutex<Rng>,
+    ops: AtomicU64,
+    dead: AtomicBool,
+}
+
+impl<T: Transport> FaultTransport<T> {
+    pub fn new(inner: T, plan: FaultPlan) -> FaultTransport<T> {
+        // Golden-ratio mix so per-rank streams are independent even
+        // for adjacent seeds/pids.
+        let seed = plan
+            .seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(inner.pid() as u64 + 1);
+        FaultTransport {
+            inner,
+            plan,
+            rng: Mutex::new(Rng::new(seed)),
+            ops: AtomicU64::new(0),
+            dead: AtomicBool::new(false),
+        }
+    }
+
+    /// The wrapped transport.
+    pub fn inner(&self) -> &T {
+        &self.inner
+    }
+
+    /// Kill this endpoint immediately: every subsequent operation
+    /// fails `Disconnected(self)`. Used by tests and the chaos
+    /// scenario to fail a rank at a chosen point.
+    pub fn kill_now(&self) {
+        self.dead.store(true, Ordering::SeqCst);
+    }
+
+    /// Has this endpoint been killed (on demand or by `kill_after`)?
+    pub fn is_killed(&self) -> bool {
+        self.dead.load(Ordering::SeqCst)
+    }
+
+    /// Count one operation; fail if the endpoint is (or just became)
+    /// dead.
+    fn step(&self) -> Result<()> {
+        if self.is_killed() {
+            return Err(CommError::Disconnected(self.inner.pid()));
+        }
+        let n = self.ops.fetch_add(1, Ordering::SeqCst) + 1;
+        if let Some(k) = self.plan.kill_after {
+            if n > k {
+                self.kill_now();
+                return Err(CommError::Disconnected(self.inner.pid()));
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<T: Transport> Transport for FaultTransport<T> {
+    fn pid(&self) -> Pid {
+        self.inner.pid()
+    }
+
+    fn np(&self) -> usize {
+        self.inner.np()
+    }
+
+    fn send(&self, to: Pid, tag: Tag, payload: &[u8]) -> Result<()> {
+        self.step()?;
+        if !self.plan.delay.is_zero() {
+            std::thread::sleep(self.plan.delay);
+        }
+        let (drop, truncate) = {
+            let mut rng = self.rng.lock().unwrap();
+            (
+                self.plan.drop_prob > 0.0 && rng.f64() < self.plan.drop_prob,
+                self.plan.truncate_prob > 0.0 && rng.f64() < self.plan.truncate_prob,
+            )
+        };
+        if drop {
+            return Ok(()); // swallowed — the receiver waits in vain
+        }
+        if truncate {
+            return self.inner.send(to, tag, &payload[..payload.len() / 2]);
+        }
+        self.inner.send(to, tag, payload)
+    }
+
+    fn recv_timeout(&self, from: Pid, tag: Tag, timeout: Duration) -> Result<Vec<u8>> {
+        self.step()?;
+        self.inner.recv_timeout(from, tag, timeout)
+    }
+
+    fn stats(&self) -> &CommStats {
+        self.inner.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::ChannelHub;
+
+    #[test]
+    fn default_plan_is_transparent() {
+        let mut world = ChannelHub::world(2);
+        let t1 = world.pop().unwrap();
+        let t0 = FaultTransport::new(world.pop().unwrap(), FaultPlan::default());
+        t0.send(1, 7, b"hello").unwrap();
+        assert_eq!(t1.recv(0, 7).unwrap(), b"hello");
+        assert!(!t0.is_killed());
+    }
+
+    #[test]
+    fn kill_after_n_operations_then_disconnected() {
+        let mut world = ChannelHub::world(2);
+        let _t1 = world.pop().unwrap();
+        let plan = FaultPlan { kill_after: Some(3), ..FaultPlan::default() };
+        let t0 = FaultTransport::new(world.pop().unwrap(), plan);
+        for _ in 0..3 {
+            t0.send(1, 1, b"x").unwrap();
+        }
+        let err = t0.send(1, 1, b"x").unwrap_err();
+        assert!(matches!(err, CommError::Disconnected(0)), "{err}");
+        assert!(t0.is_killed());
+        // Dead is sticky across operation kinds.
+        assert!(t0.try_recv(1, 1).is_err());
+    }
+
+    #[test]
+    fn kill_now_is_immediate() {
+        let mut world = ChannelHub::world(2);
+        let _t1 = world.pop().unwrap();
+        let t0 = FaultTransport::new(world.pop().unwrap(), FaultPlan::default());
+        t0.send(1, 1, b"ok").unwrap();
+        t0.kill_now();
+        assert!(matches!(t0.send(1, 1, b"x"), Err(CommError::Disconnected(0))));
+    }
+
+    #[test]
+    fn drops_are_deterministic_under_a_seed() {
+        let run = |seed| {
+            let mut world = ChannelHub::world(2);
+            let t1 = world.pop().unwrap();
+            let plan = FaultPlan { seed, drop_prob: 0.5, ..FaultPlan::default() };
+            let t0 = FaultTransport::new(world.pop().unwrap(), plan);
+            for i in 0..64u64 {
+                t0.send(1, i, &i.to_le_bytes()).unwrap();
+            }
+            (0..64u64).map(|i| t1.try_recv(0, i).unwrap().is_some()).collect::<Vec<_>>()
+        };
+        let a = run(42);
+        assert_eq!(a, run(42), "same seed, same drop schedule");
+        assert_ne!(a, run(43), "different seed, different schedule");
+        assert!(a.iter().any(|&d| d) && a.iter().any(|&d| !d), "p=0.5 drops some, not all");
+    }
+
+    #[test]
+    fn truncation_tears_payloads_in_half() {
+        let mut world = ChannelHub::world(2);
+        let t1 = world.pop().unwrap();
+        let plan = FaultPlan { truncate_prob: 1.0, ..FaultPlan::default() };
+        let t0 = FaultTransport::new(world.pop().unwrap(), plan);
+        t0.send(1, 9, &[1, 2, 3, 4, 5, 6]).unwrap();
+        assert_eq!(t1.recv(0, 9).unwrap(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn from_env_is_none_without_knobs() {
+        // Env-var tests stay read-only (other tests run in parallel);
+        // the unset case is the ambient state of the test process.
+        assert!(FaultPlan::from_env(0).is_none());
+    }
+}

@@ -1,0 +1,42 @@
+//! Fault tolerance and elasticity.
+//!
+//! The paper's headline operating point — hundreds of nodes sustaining
+//! petabyte-per-second aggregate bandwidth — is a regime where worker
+//! failure is routine. Without this module a dead PID hangs the whole
+//! run at a `drain_chunks` timeout and loses all completed work. The
+//! subsystem has four pieces, each usable on its own:
+//!
+//! * [`Detector`](detect::Detector) — leader-driven heartbeats on the
+//!   dedicated [`NS_FAULT`](crate::comm::tags::NS_FAULT) tag
+//!   namespace. A worker that misses a configurable number of rounds
+//!   is *declared dead*
+//!   ([`RankDead`](crate::comm::CommError::RankDead)), a positive
+//!   verdict instead of an indefinite stall.
+//! * [`FaultTransport`](inject::FaultTransport) — a deterministic,
+//!   seeded fault-injection wrapper over any
+//!   [`Transport`](crate::comm::Transport) (drop / delay / truncate /
+//!   kill-after-N), so every failure path is testable in-process.
+//! * **Elastic re-deal**
+//!   ([`redeal`](crate::darray::DarrayT::redeal)) — shrinking or
+//!   growing a darray's owner set is literally a remap through the
+//!   existing [`RemapEngine`](crate::darray::RemapEngine), executed
+//!   under a bumped epoch so stale messages from a dead rank are
+//!   rejected by tag, not by luck.
+//! * [`ckpt`] — the versioned `ckpt_v1` per-rank shard format
+//!   (self-describing dtype header, CRC-32 trailer) behind
+//!   `repro run --checkpoint <dir> [--restore]`.
+//!
+//! [`chaos`] packages the canonical kill-one-worker scenario (detect →
+//! redeal → bit-identical survivors) for both the integration tests
+//! and the `repro chaos` CLI smoke. `docs/fault_model.md` documents
+//! the full model and the `DISTARRAY_FAULT_*` knobs.
+
+pub mod chaos;
+pub mod ckpt;
+pub mod detect;
+pub mod inject;
+
+pub use chaos::{run_chaos, ChaosReport};
+pub use ckpt::{read_shard, shard_path, write_shard, CkptError, Shard};
+pub use detect::{respond_loop, Detector, DetectorConfig};
+pub use inject::{FaultPlan, FaultTransport};

@@ -47,6 +47,16 @@ impl WorkerHandle {
     pub fn wait(mut self) -> std::io::Result<bool> {
         Ok(self.child.wait()?.success())
     }
+
+    /// Kill the worker and reap it (kill + wait — never leaves a
+    /// zombie). Killing an already-exited worker is not an error.
+    pub fn kill(mut self) -> std::io::Result<()> {
+        // `Child::kill` on an exited-but-unreaped child is Ok; the
+        // wait below then reaps it either way.
+        self.child.kill()?;
+        self.child.wait()?;
+        Ok(())
+    }
 }
 
 /// Spawn the worker processes of a triples launch (all but PID 0,

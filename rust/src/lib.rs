@@ -41,6 +41,7 @@ pub mod coordinator;
 pub mod darray;
 pub mod dmap;
 pub mod element;
+pub mod fault;
 pub mod hardware;
 pub mod json;
 pub mod launcher;

@@ -3,6 +3,7 @@
 //! Subcommands:
 //! * `run`         — coordinated STREAM across worker processes (triples mode)
 //! * `worker`      — internal: one spawned worker process
+//! * `chaos`       — kill-one-worker fault drill: detect, re-deal, verify
 //! * `bench-remap` — measure the coalesced remap hot path (bench_remap_v1)
 //! * `bench-collective` — measure the collective algorithms (bench_collective_v1)
 //! * `bench-overlap` — measure compute/communication overlap (bench_overlap_v1)
@@ -26,6 +27,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("run") => cmd_run(&args),
         Some("worker") => cmd_worker(),
+        Some("chaos") => cmd_chaos(&args),
         Some("bench-remap") => cmd_bench_remap(&args),
         Some("bench-collective") => cmd_bench_collective(&args),
         Some("bench-overlap") => cmd_bench_overlap(&args),
@@ -36,7 +38,7 @@ fn main() {
         Some("info") => cmd_info(&args),
         _ => {
             eprintln!(
-                "usage: repro <run|bench-remap|sweep|report|validate|info> [--flags]\n\
+                "usage: repro <run|chaos|bench-remap|sweep|report|validate|info> [--flags]\n\
                  \n  run      [--config run.json] --triples 1x4x1 --n 1048576 --nt 10\n\
                  \n           --map block|cyclic|blockcyclic:K --engine native|pjrt|pjrt-fused\n\
                  \n           --dtype f32|f64|i64|u64 (native engine; default f64)\n\
@@ -46,6 +48,11 @@ fn main() {
                  \n           --bench-json out.json (machine-readable per-op bandwidths)\n\
                  \n           --trace out.ndjson|- (per-rank NDJSON span traces; workers\n\
                  \n           write out.ndjson.rank<pid>) --metrics-interval MS (counter samples)\n\
+                 \n           --heartbeat (leader failure detector + worker responders)\n\
+                 \n           --checkpoint DIR (ckpt_v1 shards, native engine) [--restore]\n\
+                 \n  chaos    --np 4 --kill 2 [--n N] [--dtype f64] [--trace out.ndjson]\n\
+                 \n           (kill one rank mid-job: detect, re-deal onto survivors,\n\
+                 \n           verify bit-identity against a clean survivor run)\n\
                  \n  bench-remap --np 4 --n 1048576 --iters 10 --dtype f64\n\
                  \n           [--bench-json out.json] (bench_remap_v1: bytes, messages, GB/s)\n\
                  \n  bench-collective --np-list 2,4,8 --nppn 2 --bytes 65536 --iters 20\n\
@@ -233,6 +240,21 @@ fn cmd_run(args: &Args) -> i32 {
         Ok(v) => v,
         Err(code) => return code,
     };
+    let heartbeat = args.flag_bool("heartbeat");
+    let checkpoint = args.flag("checkpoint").unwrap_or("").to_string();
+    let restore = args.flag_bool("restore");
+    if restore && checkpoint.is_empty() {
+        distarray::log!(Error, "--restore needs --checkpoint <dir> (where are the shards?)");
+        return 2;
+    }
+    if !checkpoint.is_empty() && engine != EngineKind::Native {
+        distarray::log!(
+            Error,
+            "--checkpoint applies to the native engine; engine {} keeps state device-side",
+            engine.name()
+        );
+        return 2;
+    }
     if engine != EngineKind::Native && dtype != distarray::element::Dtype::F64 {
         distarray::log!(
             Error,
@@ -300,6 +322,9 @@ fn cmd_run(args: &Args) -> i32 {
         chunk_bytes,
         artifacts,
         trace: trace_path.is_some(),
+        heartbeat,
+        checkpoint,
+        restore,
     };
     // Any library collective in this process (darray reductions,
     // barriers) follows the configured algorithm too — and spawned
@@ -402,10 +427,75 @@ fn cmd_run(args: &Args) -> i32 {
         }
         Err(e) => {
             distarray::log!(Error, "leader failed: {e}");
+            // Reap every spawned worker (kill + wait — no zombies, no
+            // orphans spinning on a dead spool) and remove the spool
+            // so a failed run leaves no stale rendezvous files behind.
+            for w in workers {
+                let pid = w.pid;
+                if let Err(ke) = w.kill() {
+                    distarray::log!(Warn, "reaping worker pid {pid}: {ke}");
+                }
+            }
+            std::fs::remove_dir_all(&spool).ok();
             finish_local_trace(trace_path.is_some());
             1
         }
     }
+}
+
+/// `repro chaos` — the kill-one-worker fault drill: an in-process
+/// `--np`-rank world runs a remap, `--kill` dies, the leader's
+/// detector declares it dead, the survivors re-deal under a bumped
+/// epoch, and every survivor shard is compared bit-for-bit against
+/// the clean survivor reference. Exit 0 iff the drill recovered
+/// bit-identically. `DISTARRAY_FAULT_HB_*` tune the detector;
+/// `--trace` records the `fault_*` telemetry events.
+fn cmd_chaos(args: &Args) -> i32 {
+    use distarray::fault::{run_chaos, DetectorConfig};
+    let np = args.flag_usize("np", 4);
+    let kill = args.flag_usize("kill", 2);
+    let n = args.flag_usize("n", 1 << 20);
+    let dtype = match axis_flag(
+        args,
+        "dtype",
+        "f32|f64|i64|u64",
+        distarray::element::Dtype::F64,
+        distarray::element::Dtype::parse,
+    ) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    let traced = match setup_local_trace(args) {
+        Ok(t) => t,
+        Err(code) => return code,
+    };
+    let cfg = DetectorConfig::from_env();
+    println!(
+        "repro chaos: np={np} kill={kill} n={n} dtype={dtype} \
+         hb_interval={:?} hb_misses={}",
+        cfg.interval, cfg.miss_threshold
+    );
+    let report = match dtype {
+        distarray::element::Dtype::F64 => run_chaos::<f64>(np, kill, n, cfg),
+        distarray::element::Dtype::F32 => run_chaos::<f32>(np, kill, n, cfg),
+        distarray::element::Dtype::I64 => run_chaos::<i64>(np, kill, n, cfg),
+        distarray::element::Dtype::U64 => run_chaos::<u64>(np, kill, n, cfg),
+    };
+    let code = match report {
+        Ok(r) => {
+            println!(
+                "CHAOS: killed={} survivors={:?} probe_rounds={} bit_identical={}",
+                r.killed, r.survivors, r.probe_rounds, r.bit_identical
+            );
+            i32::from(!r.bit_identical)
+        }
+        Err(e) => {
+            distarray::log!(Error, "chaos drill failed: {e}");
+            1
+        }
+    };
+    finish_local_trace(traced);
+    code
 }
 
 /// `repro bench-remap` — measure the coalesced remap hot path with
@@ -650,7 +740,17 @@ fn cmd_worker() -> i32 {
     // Pin to the adjacent-core plan slot.
     let triples = Triples::new(1, env.np, env.ntpn);
     PinPlan::for_node(&triples).apply(env.slot.min(env.np - 1));
-    let code = match run_worker(&t) {
+    // `DISTARRAY_FAULT_*` knobs wrap this worker's transport in the
+    // deterministic fault injector (chaos drills on real processes).
+    use distarray::fault::{FaultPlan, FaultTransport};
+    let result = match FaultPlan::from_env(env.pid) {
+        Some(plan) => {
+            distarray::log!(Warn, "worker {}: fault injection active: {plan:?}", env.pid);
+            run_worker(&FaultTransport::new(t, plan))
+        }
+        None => run_worker(&t),
+    };
+    let code = match result {
         Ok(rep) => i32::from(!rep.passed),
         Err(e) => {
             distarray::log!(Error, "worker {} failed: {e}", env.pid);

@@ -180,6 +180,20 @@ pub enum EventKind {
     Metric = 8,
     /// Free-form instant marker.
     Mark = 9,
+    /// A live rank missed one heartbeat round — `peer` = the silent
+    /// rank, `a` = consecutive misses so far.
+    HeartbeatMiss = 10,
+    /// A rank crossed the miss threshold and was declared dead —
+    /// `peer` = the dead rank, `a` = misses at the verdict.
+    RankDead = 11,
+    /// One elastic re-deal (P → survivors remap) — `a` = global
+    /// elements moved, `b` = survivor count.
+    Redeal = 12,
+    /// One checkpoint shard written — `a` = shard bytes, `b` = epoch.
+    Checkpoint = 13,
+    /// One checkpoint shard restored — `a` = shard bytes, `b` =
+    /// epoch resumed from.
+    Restore = 14,
 }
 
 impl EventKind {
@@ -195,6 +209,11 @@ impl EventKind {
             7 => EventKind::PoolMiss,
             8 => EventKind::Metric,
             9 => EventKind::Mark,
+            10 => EventKind::HeartbeatMiss,
+            11 => EventKind::RankDead,
+            12 => EventKind::Redeal,
+            13 => EventKind::Checkpoint,
+            14 => EventKind::Restore,
             _ => return None,
         })
     }
@@ -212,6 +231,11 @@ pub fn kind_name(kind: EventKind) -> &'static str {
         EventKind::PoolMiss => "pool_miss",
         EventKind::Metric => "metric",
         EventKind::Mark => "mark",
+        EventKind::HeartbeatMiss => "fault_hb_miss",
+        EventKind::RankDead => "fault_rank_dead",
+        EventKind::Redeal => "fault_redeal",
+        EventKind::Checkpoint => "fault_ckpt",
+        EventKind::Restore => "fault_restore",
     }
 }
 
@@ -227,6 +251,11 @@ pub fn kind_from_name(name: &str) -> Option<EventKind> {
         "pool_miss" => EventKind::PoolMiss,
         "metric" => EventKind::Metric,
         "mark" => EventKind::Mark,
+        "fault_hb_miss" => EventKind::HeartbeatMiss,
+        "fault_rank_dead" => EventKind::RankDead,
+        "fault_redeal" => EventKind::Redeal,
+        "fault_ckpt" => EventKind::Checkpoint,
+        "fault_restore" => EventKind::Restore,
         _ => return None,
     })
 }
@@ -242,6 +271,9 @@ pub fn field_names(kind: EventKind) -> (&'static str, &'static str) {
         EventKind::PoolMiss => ("capacity", "b"),
         EventKind::Metric => ("value", "b"),
         EventKind::Mark => ("a", "b"),
+        EventKind::HeartbeatMiss | EventKind::RankDead => ("missed", "b"),
+        EventKind::Redeal => ("elems", "survivors"),
+        EventKind::Checkpoint | EventKind::Restore => ("bytes", "epoch"),
     }
 }
 
@@ -682,12 +714,12 @@ mod tests {
 
     #[test]
     fn kind_names_roundtrip() {
-        for k in 1..=9u8 {
+        for k in 1..=14u8 {
             let kind = EventKind::from_u8(k).unwrap();
             assert_eq!(kind_from_name(kind_name(kind)), Some(kind));
         }
         assert_eq!(EventKind::from_u8(0), None);
-        assert_eq!(EventKind::from_u8(10), None);
+        assert_eq!(EventKind::from_u8(15), None);
         assert_eq!(kind_from_name("nope"), None);
     }
 }

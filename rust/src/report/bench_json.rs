@@ -839,6 +839,9 @@ mod tests {
             chunk_bytes: 0,
             artifacts: "artifacts".into(),
             trace: false,
+            heartbeat: false,
+            checkpoint: String::new(),
+            restore: false,
         };
         let agg = AggregateResult {
             np: 2,

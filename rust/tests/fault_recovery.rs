@@ -1,0 +1,93 @@
+//! Integration tests: fault tolerance end to end — kill one worker
+//! mid-job, detect it within the miss threshold, re-deal onto the
+//! survivors, and land bit-identical to a clean run on those ranks.
+//!
+//! Exercises the full chaos choreography from `distarray::fault` for
+//! every element type, plus the checkpoint/restore round-trip at the
+//! shard-codec level.
+
+use distarray::element::Element;
+use distarray::fault::{read_shard, run_chaos, shard_path, write_shard, DetectorConfig};
+use std::time::Duration;
+
+/// A fast detector so the suite stays sub-second: 10 ms rounds,
+/// 3 misses to a verdict.
+fn fast() -> DetectorConfig {
+    DetectorConfig { interval: Duration::from_millis(10), miss_threshold: 3 }
+}
+
+/// Kill rank `victim` of `np` and require: detection within the miss
+/// threshold (plus the scenario's settle slack), the right survivor
+/// list, and bit-identical recovery.
+fn chaos_case<T: Element>(np: usize, victim: usize, n: usize) {
+    let cfg = fast();
+    let slack = cfg.miss_threshold as u64 + 8;
+    let r = run_chaos::<T>(np, victim, n, cfg).unwrap();
+    assert_eq!(r.killed, victim);
+    let want: Vec<usize> = (0..np).filter(|&p| p != victim).collect();
+    assert_eq!(r.survivors, want);
+    assert_eq!(r.n_global, n);
+    assert!(
+        r.probe_rounds <= slack,
+        "{}: detection took {} rounds, threshold {}",
+        T::DTYPE,
+        r.probe_rounds,
+        slack
+    );
+    assert!(r.bit_identical, "{}: survivors diverged from the clean reference", T::DTYPE);
+}
+
+#[test]
+fn kill_one_worker_recovers_f64() {
+    chaos_case::<f64>(4, 2, 4096);
+}
+
+#[test]
+fn kill_one_worker_recovers_f32() {
+    chaos_case::<f32>(4, 1, 4096);
+}
+
+#[test]
+fn kill_one_worker_recovers_i64() {
+    chaos_case::<i64>(4, 3, 4096);
+}
+
+#[test]
+fn kill_one_worker_recovers_u64() {
+    chaos_case::<u64>(4, 2, 4096);
+}
+
+#[test]
+fn kill_last_worker_of_two() {
+    // The smallest world that can lose a worker: 2 ranks, leader
+    // carries on alone.
+    chaos_case::<f64>(2, 1, 1024);
+}
+
+#[test]
+fn uneven_global_length_survives_the_redeal() {
+    // A length that divides evenly into neither 4 nor 3 blocks — the
+    // redeal crosses every block boundary.
+    chaos_case::<f64>(4, 2, 1003);
+}
+
+#[test]
+fn checkpoint_round_trip_is_bit_identical() {
+    let dir = std::env::temp_dir().join(format!("distarray_faultrec_{}", std::process::id()));
+    let sections = [vec![1.5f64; 1024], vec![-2.25f64; 1024]];
+    write_shard::<f64>(&dir, 1, 4, 7, 4096, &[&sections[0], &sections[1]]).unwrap();
+    let back = read_shard::<f64>(&dir, 1).unwrap();
+    assert_eq!((back.pid, back.np, back.epoch, back.n_global), (1, 4, 7, 4096));
+    assert_eq!(back.sections, sections);
+
+    // Corruption is a one-line error, not a bad restore: flip a data
+    // byte and the CRC must reject the shard.
+    let path = shard_path(&dir, 1);
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = read_shard::<f64>(&dir, 1).unwrap_err();
+    assert!(err.to_string().contains("ckpt_v1"), "{err}");
+    std::fs::remove_dir_all(&dir).ok();
+}

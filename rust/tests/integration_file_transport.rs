@@ -46,6 +46,9 @@ fn coordinator_over_file_transport() {
         chunk_bytes: 0,
         artifacts: "artifacts".into(),
         trace: false,
+        heartbeat: false,
+        checkpoint: String::new(),
+        restore: false,
     };
     let (agg, _) = run_leader(&leader, &cfg).unwrap();
     for h in hs {

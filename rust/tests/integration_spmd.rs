@@ -148,6 +148,9 @@ fn coordinator_all_map_kinds() {
             chunk_bytes: 0,
             artifacts: "artifacts".into(),
             trace: false,
+            heartbeat: false,
+            checkpoint: String::new(),
+            restore: false,
         };
         let (agg, results) = run_leader(&leader, &cfg).unwrap();
         for h in hs {
