@@ -815,6 +815,10 @@ impl Collective {
         // reassembles the whole segment first and folds after (same
         // per-element combine, bit-identical result).
         for s in 0..p - 1 {
+            // Per-round span (round index is 1-based; round 0 is the
+            // phase summary below): the round boundaries are what the
+            // straggler analysis aligns across ranks.
+            let r0 = crate::obs::span_begin();
             let (slo, shi) = seg((me + p - s) % p);
             Self::send_segment(t, next, rs_tag, self.chunk_bytes, &acc[slo..shi])?;
             let (rlo, rhi) = seg((me + p - s - 1) % p);
@@ -827,12 +831,21 @@ impl Collective {
                     *a = op.combine(*b, *a);
                 }
             }
+            crate::obs_span!(
+                crate::obs::EventKind::CollOp,
+                r0,
+                tag: space.at(0, PH_RS, (s + 1) as u64),
+                peer: crate::obs::NO_PEER,
+                a: ((shi - slo) * T::WIDTH) as u64,
+                b: (s + 1) as u64
+            );
         }
         // Phase 2 — allgather: forward the segment received last
         // step, starting from the fully reduced one this rank owns;
         // received segments decode straight into their final slot
         // (chunk by chunk when overlap is on).
         for s in 0..p - 1 {
+            let r0 = crate::obs::span_begin();
             let (slo, shi) = seg((me + 1 + p - s) % p);
             Self::send_segment(t, next, ag_tag, self.chunk_bytes, &acc[slo..shi])?;
             let (rlo, rhi) = seg((me + p - s) % p);
@@ -841,6 +854,14 @@ impl Collective {
             } else {
                 Self::recv_segment_into(t, prev, ag_tag, &mut acc[rlo..rhi])?;
             }
+            crate::obs_span!(
+                crate::obs::EventKind::CollOp,
+                r0,
+                tag: space.at(0, PH_AG, (s + 1) as u64),
+                peer: crate::obs::NO_PEER,
+                a: ((shi - slo) * T::WIDTH) as u64,
+                b: (s + 1) as u64
+            );
         }
         crate::obs_span!(
             crate::obs::EventKind::CollOp,

@@ -38,7 +38,8 @@
 use super::pool::{BufferPool, PooledBuf};
 use super::{tags, CommError, CommStats, Result, Tag, Transport, WireReader, WireWriter};
 use crate::dmap::Pid;
-use crate::obs::EventKind;
+use crate::obs::hist::{record_since, HistKind};
+use crate::obs::{span_begin, EventKind};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::{Duration, Instant};
 
@@ -111,13 +112,20 @@ pub fn comm_snapshot() -> (u64, u64, u64, u64) {
     STREAM_STATS.snapshot()
 }
 
-/// Count one landed chunk and record its arrival event.
+/// Count one landed chunk and record its arrival as a **span** whose
+/// duration is the receiver-side wait: `wait_start` is the
+/// [`span_begin`] stamp taken when the receiver began waiting for
+/// this chunk (0 when recording was off — the event degrades to an
+/// instant). The wait also feeds the chunk-wait histogram, which
+/// survives ring wrap.
 #[inline]
-fn note_arrival(tag: &ChunkTag, chunk: &ArrivedChunk) {
+fn note_arrival(tag: &ChunkTag, chunk: &ArrivedChunk, wait_start: u64) {
     let wire = chunk.payload().len() + if chunk.chunk_idx == 0 { FRAME_BYTES } else { 0 };
     STREAM_STATS.record_recv(wire);
-    crate::obs_event!(
+    record_since(HistKind::ChunkWait, wait_start);
+    crate::obs_span!(
         EventKind::ChunkArrive,
+        wait_start,
         tag: tag.at(chunk.chunk_idx as u64),
         peer: chunk.peer as u32,
         a: wire as u64,
@@ -126,12 +134,15 @@ fn note_arrival(tag: &ChunkTag, chunk: &ArrivedChunk) {
 }
 
 /// Count one received wire message on the blocking path (where no
-/// [`ArrivedChunk`] is built).
+/// [`ArrivedChunk`] is built). Same wait-span semantics as
+/// [`note_arrival`].
 #[inline]
-fn note_recv_wire(tag: &ChunkTag, from: Pid, chunk_idx: u64, wire: usize) {
+fn note_recv_wire(tag: &ChunkTag, from: Pid, chunk_idx: u64, wire: usize, wait_start: u64) {
     STREAM_STATS.record_recv(wire);
-    crate::obs_event!(
+    record_since(HistKind::ChunkWait, wait_start);
+    crate::obs_span!(
         EventKind::ChunkArrive,
+        wait_start,
         tag: tag.at(chunk_idx),
         peer: from as u32,
         a: wire as u64,
@@ -429,8 +440,9 @@ impl ChunkStream {
         tag: ChunkTag,
         next: Option<Pid>,
     ) -> Result<Vec<u8>> {
+        let wait = span_begin();
         let first = t.recv(from, tag.at(0))?;
-        note_recv_wire(&tag, from, 0, first.len());
+        note_recv_wire(&tag, from, 0, first.len(), wait);
         if let Some(nx) = next {
             t.send(nx, tag.at(0), &first)?;
             note_send(&tag, nx, 0, first.len());
@@ -442,8 +454,9 @@ impl ChunkStream {
         let mut out = Vec::with_capacity(total);
         out.extend_from_slice(&first[FRAME_BYTES..]);
         for c in 1..n_chunks {
+            let wait = span_begin();
             let chunk = t.recv(from, tag.at(c as u64))?;
-            note_recv_wire(&tag, from, c as u64, chunk.len());
+            note_recv_wire(&tag, from, c as u64, chunk.len(), wait);
             if let Some(nx) = next {
                 t.send(nx, tag.at(c as u64), &chunk)?;
                 note_send(&tag, nx, c as u64, chunk.len());
@@ -523,9 +536,10 @@ impl ChunkStream {
             &[only] => {
                 let mut inc = Incoming::new(only, 0);
                 loop {
+                    let wait = span_begin();
                     let msg = t.recv_timeout(only, tag.at(inc.next_chunk as u64), window)?;
                     let (chunk, done) = inc.feed(msg)?;
-                    note_arrival(&tag, &chunk);
+                    note_arrival(&tag, &chunk, wait);
                     on_chunk(chunk)?;
                     if done {
                         return Ok(());
@@ -541,6 +555,10 @@ impl ChunkStream {
             .collect();
         let mut deadline = Instant::now() + window;
         let mut backoff = Backoff::new();
+        // One wait stamp for the whole sweep: the per-chunk "wait" in
+        // a multi-peer drain is the time since the previous landing —
+        // the receiver was free to take whichever peer was ready.
+        let mut wait = span_begin();
         while !pending.is_empty() {
             let mut progressed = false;
             let mut i = 0;
@@ -554,7 +572,8 @@ impl ChunkStream {
                 {
                     progressed = true;
                     let (chunk, fin) = pending[i].feed(msg)?;
-                    note_arrival(&tag, &chunk);
+                    note_arrival(&tag, &chunk, wait);
+                    wait = span_begin();
                     on_chunk(chunk)?;
                     if fin {
                         done = true;

@@ -62,6 +62,9 @@ impl BufferPool {
     /// Check out a cleared buffer with at least `cap` bytes reserved,
     /// reusing a previously returned allocation when one is free.
     pub fn checkout(&self, cap: usize) -> PooledBuf<'_> {
+        // Checkout latency (lock contention + miss allocation) feeds
+        // the pool-wait histogram; free when recording is off.
+        let wait = crate::obs::span_begin();
         self.checkouts.fetch_add(1, Ordering::Relaxed);
         let reused = self.free.lock().unwrap().pop();
         let mut buf = match reused {
@@ -84,6 +87,7 @@ impl BufferPool {
         };
         buf.clear();
         buf.reserve(cap);
+        crate::obs::hist::record_since(crate::obs::hist::HistKind::PoolWait, wait);
         PooledBuf { pool: self, buf }
     }
 

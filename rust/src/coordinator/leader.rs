@@ -156,15 +156,29 @@ fn finish_leader(
     if cfg.trace {
         let (fold, peak) = fold_worker_traces(t, np)?;
         let dropped: u64 = fold.ranks.values().map(|r| r.dropped).sum();
+        let hist_samples: u64 = fold
+            .ranks
+            .values()
+            .flat_map(|r| r.hists.values())
+            .map(|h| h.count)
+            .sum();
         crate::log!(
             Info,
-            "telemetry: folded {} events from {} rank streams ({} lines, {} dropped, peak resident {} B)",
+            "telemetry: folded {} events from {} rank streams ({} lines, {} hist samples, {} dropped, peak resident {} B)",
             fold.total_events(),
             fold.ranks.len(),
             fold.lines,
+            hist_samples,
             dropped,
             peak
         );
+        if fold.unknown_kinds > 0 {
+            crate::log!(
+                Warn,
+                "telemetry: {} event(s) carry kinds this build doesn't know (schema drift)",
+                fold.unknown_kinds
+            );
+        }
         crate::obs::clear_thread_rank();
     }
     Ok((agg, results))

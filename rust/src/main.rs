@@ -10,6 +10,9 @@
 //! * `sweep`       — regenerate a figure (fig3 | fig4 | petascale)
 //! * `report`      — print a paper table (table1 | table2 | fig4)
 //! * `trace-report` — merge per-rank NDJSON traces into a summary / Chrome export
+//! * `analyze`     — causal attribution over traces: critical path, stragglers,
+//!   latency histograms, achieved-vs-modeled bandwidth (analysis_v1)
+//! * `bench-diff`  — compare two bench/analysis JSON documents, gate regressions
 //! * `validate`    — run the PJRT artifacts and check numerics vs closed forms
 //! * `info`        — platform / artifact summary
 
@@ -34,6 +37,8 @@ fn main() {
         Some("sweep") => cmd_sweep(&args),
         Some("report") => cmd_report(&args),
         Some("trace-report") => cmd_trace_report(&args),
+        Some("analyze") => cmd_analyze(&args),
+        Some("bench-diff") => cmd_bench_diff(&args),
         Some("validate") => cmd_validate(&args),
         Some("info") => cmd_info(&args),
         _ => {
@@ -63,9 +68,16 @@ fn main() {
                  \n           seconds + overlap efficiency for remap and elimination allreduce)\n\
                  \n  sweep    fig3|fig4|petascale [--measure] [--csv] [--backend host|threaded]\n\
                  \n  report   table1|table2|fig4\n\
-                 \n  trace-report <trace.ndjson>... [--check] [--chrome out.json]\n\
+                 \n  trace-report <trace.ndjson>... [--check] [--chrome out.json] [--analyze]\n\
                  \n           (merge per-rank traces: summary table, strict line validation,\n\
                  \n           chrome://tracing export; benches also accept --trace out.ndjson)\n\
+                 \n  analyze  <trace.ndjson>... [--json out.json|-] [--era amd-e9]\n\
+                 \n           [--nppn N] [--ntpn N] (causal attribution: matched message\n\
+                 \n           edges, critical path, per-rank idle, straggler ranking,\n\
+                 \n           achieved vs modeled bandwidth; --json emits analysis_v1)\n\
+                 \n  bench-diff OLD.json NEW.json [--max-regress PCT] [--report-only]\n\
+                 \n           (field-by-field regression gate over two same-schema\n\
+                 \n           bench_*_v1 / analysis_v1 documents; exit 3 on regression)\n\
                  \n  validate --artifacts artifacts\n\
                  \n  info     --artifacts artifacts"
             );
@@ -711,11 +723,13 @@ fn cmd_worker() -> i32 {
     }
     // The leader exports DISTARRAY_TRACE for traced runs: each worker
     // opens its own per-rank NDJSON file beside the leader's (`-`
-    // traces to this process's stderr). Recording itself turns on when
-    // the broadcast config lands (`run_worker`), so the sink and the
-    // wire exchange always agree with the leader.
+    // traces to this process's stderr). Recording turns on before the
+    // transport opens so even the config-broadcast arrivals are
+    // captured — the causal matcher pairs them with the leader's
+    // sends.
     if let Ok(path) = std::env::var("DISTARRAY_TRACE") {
         distarray::obs::set_rank(env.pid);
+        distarray::obs::set_enabled(true);
         let mine =
             if path == "-" { path } else { format!("{path}.rank{}", env.pid) };
         if let Err(e) = distarray::obs::emit::install_sink(&mine) {
@@ -858,7 +872,18 @@ fn cmd_trace_report(args: &Args) -> i32 {
     let files = args.positional.clone();
     if args.flag_bool("check") {
         match report::check_files(&files) {
-            Ok((lines, events)) => println!("check ok: {lines} line(s), {events} event(s)"),
+            Ok(rep) => {
+                for w in &rep.warnings {
+                    distarray::log!(Warn, "trace-report check: {w}");
+                }
+                println!(
+                    "check ok: {} line(s), {} event(s), {} hist(s), {} warning(s)",
+                    rep.lines,
+                    rep.events,
+                    rep.hists,
+                    rep.warnings.len()
+                );
+            }
             Err(e) => {
                 distarray::log!(Error, "trace-report check: {e}");
                 return 1;
@@ -881,6 +906,95 @@ fn cmd_trace_report(args: &Args) -> i32 {
                 return 1;
             }
         }
+    }
+    if args.flag_bool("analyze") {
+        println!();
+        return cmd_analyze(args);
+    }
+    0
+}
+
+/// `repro analyze` — causal attribution over per-rank traces: match
+/// message edges, compute the critical path, per-rank idle time and
+/// the straggler ranking, and report achieved vs modeled bandwidth.
+/// `--json <path|->` also emits the versioned `analysis_v1` document.
+fn cmd_analyze(args: &Args) -> i32 {
+    use distarray::obs::analyze::{analyze_files, AnalyzeOpts};
+    if args.positional.is_empty() {
+        distarray::log!(Error, "analyze: name at least one NDJSON trace file");
+        return 2;
+    }
+    let era_label = args.flag_str("era", "amd-e9");
+    let Some(era) = distarray::hardware::Era::by_label(era_label) else {
+        distarray::log!(Error, "analyze: unknown era '{era_label}' (see `repro report table1`)");
+        return 2;
+    };
+    let nppn = match args.flag("nppn") {
+        None => None,
+        Some(s) => match s.parse::<usize>() {
+            Ok(v) if v >= 1 => Some(v),
+            _ => {
+                distarray::log!(Error, "invalid --nppn '{s}' (expected a count >= 1)");
+                return 2;
+            }
+        },
+    };
+    let opts =
+        AnalyzeOpts { era: era.label, nppn, ntpn: args.flag_usize("ntpn", 1).max(1) };
+    let analysis = match analyze_files(&args.positional, &opts) {
+        Ok(a) => a,
+        Err(e) => {
+            distarray::log!(Error, "analyze: {e}");
+            return 1;
+        }
+    };
+    print!("{}", analysis.render());
+    if let Some(path) = args.flag("json") {
+        let mut doc = analysis.to_json();
+        doc.push('\n');
+        if path == "-" {
+            print!("{doc}");
+        } else if let Err(e) = std::fs::write(path, doc) {
+            distarray::log!(Error, "analyze: write {path}: {e}");
+            return 1;
+        } else {
+            println!("analysis_v1 written to {path}");
+        }
+    }
+    0
+}
+
+/// `repro bench-diff` — the perf regression gate: compare two
+/// same-schema `bench_*_v1` / `analysis_v1` documents field by field.
+/// Exit 3 when any metric regresses beyond `--max-regress` percent
+/// (default 10); `--report-only` prints the table but always exits 0
+/// (CI baselines come from different machines).
+fn cmd_bench_diff(args: &Args) -> i32 {
+    use distarray::report::bench_diff;
+    if args.positional.len() != 2 {
+        distarray::log!(Error, "bench-diff: expected exactly OLD.json NEW.json");
+        return 2;
+    }
+    let max_regress = args.flag_f64("max-regress", 10.0);
+    let diff = match bench_diff::diff_files(
+        &args.positional[0],
+        &args.positional[1],
+        max_regress,
+    ) {
+        Ok(d) => d,
+        Err(e) => {
+            distarray::log!(Error, "bench-diff: {e}");
+            return 1;
+        }
+    };
+    print!("{}", diff.render());
+    if diff.regressions() > 0 && !args.flag_bool("report-only") {
+        distarray::log!(
+            Error,
+            "bench-diff: {} metric(s) regressed beyond {max_regress}%",
+            diff.regressions()
+        );
+        return 3;
     }
     0
 }

@@ -1,0 +1,530 @@
+//! The attribution report behind `repro analyze`.
+//!
+//! Ties the causal graph ([`super::causal`]) to the hardware model
+//! ([`crate::hardware`]): where did the wall time go (wire / compute /
+//! idle, on the critical path and per rank), how do the matched wire
+//! latencies distribute (p50/p95/p99, cross-checked against the
+//! runtime histograms), which rank is the straggler, and how close
+//! did achieved bandwidth come to the era's modeled envelope. Renders
+//! a human report and a versioned `analysis_v1` JSON document for CI.
+
+use super::causal::{
+    critical_path, match_edges, phase_skews, rank_times, CausalGraph, CriticalPath, PhaseSkew,
+    RankTime, Streams,
+};
+use super::hist::HistSnapshot;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Knobs for the modeled-bandwidth comparison.
+#[derive(Debug, Clone, Copy)]
+pub struct AnalyzeOpts {
+    /// Hardware era label for [`crate::hardware::Era::by_label`].
+    pub era: &'static str,
+    /// Processes per node; defaults to the trace's rank count.
+    pub nppn: Option<usize>,
+    /// Threads per process.
+    pub ntpn: usize,
+}
+
+impl Default for AnalyzeOpts {
+    fn default() -> Self {
+        AnalyzeOpts { era: "amd-e9", nppn: None, ntpn: 1 }
+    }
+}
+
+/// The full analysis of one traced run.
+pub struct Analysis {
+    pub streams: Streams,
+    pub graph: CausalGraph,
+    pub path: CriticalPath,
+    pub ranks: Vec<RankTime>,
+    pub phases: Vec<PhaseSkew>,
+    /// Aligned first-event → last-event-end span across all ranks.
+    pub wall_ns: u64,
+    /// Total `chunk_send` bytes / wall seconds.
+    pub achieved_bw: f64,
+    /// [`crate::hardware::NodeModel::node_bandwidth`] for the opts.
+    pub modeled_bw: f64,
+    pub era: &'static str,
+    pub nppn: usize,
+    pub ntpn: usize,
+    /// Sorted positive matched-edge latencies (ns), for percentiles.
+    latencies: Vec<u64>,
+    pub warnings: Vec<String>,
+}
+
+/// Parse trace files and run the whole pipeline.
+pub fn analyze_files(paths: &[String], opts: &AnalyzeOpts) -> Result<Analysis, String> {
+    Ok(analyze_streams(Streams::from_files(paths)?, opts))
+}
+
+/// Analyze already-parsed streams (tests build these synthetically).
+pub fn analyze_streams(streams: Streams, opts: &AnalyzeOpts) -> Analysis {
+    let graph = match_edges(&streams);
+    let path = critical_path(&streams, &graph);
+    let ranks = rank_times(&streams);
+    let phases = phase_skews(&streams);
+    let t0 = ranks.iter().map(|r| r.t0_ns).min().unwrap_or(0);
+    let t1 = ranks.iter().map(|r| r.t1_ns).max().unwrap_or(0);
+    let wall_ns = t1.saturating_sub(t0);
+    let bytes_sent: u64 = ranks.iter().map(|r| r.bytes_sent).sum();
+    let achieved_bw =
+        if wall_ns > 0 { bytes_sent as f64 / (wall_ns as f64 / 1e9) } else { 0.0 };
+    let nppn = opts.nppn.unwrap_or_else(|| ranks.len().max(1));
+    let modeled_bw = crate::hardware::Era::by_label(opts.era)
+        .map(|era| crate::hardware::NodeModel::new(era, nppn, opts.ntpn).node_bandwidth())
+        .unwrap_or(0.0);
+
+    let mut latencies: Vec<u64> =
+        graph.edges.iter().filter(|e| e.latency_ns > 0).map(|e| e.latency_ns as u64).collect();
+    latencies.sort_unstable();
+
+    let mut warnings = Vec::new();
+    if graph.skew_exceeds_min_latency() {
+        warnings.push(format!(
+            "estimated clock skew ({} ns) exceeds the smallest matched latency ({} ns); \
+             individual edge latencies are unreliable",
+            graph.skew_est_ns, graph.min_latency_ns
+        ));
+    }
+    let dropped = streams.total_dropped();
+    if dropped > 0 {
+        warnings.push(format!(
+            "{dropped} events were dropped by ring wrap; edges and attribution are partial"
+        ));
+    }
+    if graph.unmatched_sends + graph.unmatched_arrives > 0 {
+        warnings.push(format!(
+            "{} sends / {} arrives had no counterpart (ring wrap, untraced peer, or \
+             truncated file)",
+            graph.unmatched_sends, graph.unmatched_arrives
+        ));
+    }
+
+    Analysis {
+        streams,
+        graph,
+        path,
+        ranks,
+        phases,
+        wall_ns,
+        achieved_bw,
+        modeled_bw,
+        era: opts.era,
+        nppn,
+        ntpn: opts.ntpn,
+        latencies,
+        warnings,
+    }
+}
+
+impl Analysis {
+    /// Nearest-rank percentile over the matched positive latencies.
+    pub fn latency_pctile(&self, q: f64) -> u64 {
+        if self.latencies.is_empty() {
+            return 0;
+        }
+        let idx = ((q * self.latencies.len() as f64).ceil() as usize)
+            .clamp(1, self.latencies.len());
+        self.latencies[idx - 1]
+    }
+
+    /// Histograms merged across ranks, keyed by hist name.
+    pub fn merged_hists(&self) -> BTreeMap<String, HistSnapshot> {
+        let mut out: BTreeMap<String, HistSnapshot> = BTreeMap::new();
+        for ((_rank, name), snap) in &self.streams.hists {
+            out.entry(name.clone()).or_insert_with(HistSnapshot::new).merge(snap);
+        }
+        out
+    }
+
+    /// The human report.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "== trace analysis ==");
+        let _ = writeln!(
+            s,
+            "ranks {}  events {}  wall {}",
+            self.ranks.len(),
+            self.streams.events.len(),
+            fmt_ns(self.wall_ns)
+        );
+        let _ = writeln!(
+            s,
+            "edges matched {}  unmatched sends {}  unmatched arrives {}  skew est {}",
+            self.graph.edges.len(),
+            self.graph.unmatched_sends,
+            self.graph.unmatched_arrives,
+            fmt_ns(self.graph.skew_est_ns)
+        );
+        if !self.latencies.is_empty() {
+            let _ = writeln!(
+                s,
+                "wire latency p50 {}  p95 {}  p99 {}  (n={})",
+                fmt_ns(self.latency_pctile(0.50)),
+                fmt_ns(self.latency_pctile(0.95)),
+                fmt_ns(self.latency_pctile(0.99)),
+                self.latencies.len()
+            );
+        }
+        let _ = writeln!(
+            s,
+            "bandwidth achieved {:.3} GB/s  modeled ({} nppn={} ntpn={}) {:.3} GB/s  ({:.1}%)",
+            self.achieved_bw / 1e9,
+            self.era,
+            self.nppn,
+            self.ntpn,
+            self.modeled_bw / 1e9,
+            if self.modeled_bw > 0.0 { 100.0 * self.achieved_bw / self.modeled_bw } else { 0.0 }
+        );
+
+        let _ = writeln!(s, "\n-- critical path --");
+        let covered: u64 = self.path.segments.iter().map(|x| x.dur_ns()).sum();
+        let _ = writeln!(
+            s,
+            "span {}  segments {}  covered {}",
+            fmt_ns(self.path.total_ns()),
+            self.path.segments.len(),
+            fmt_ns(covered)
+        );
+        for (label, ns) in self.path.breakdown() {
+            let pct = if covered > 0 { 100.0 * ns as f64 / covered as f64 } else { 0.0 };
+            let _ = writeln!(s, "  {label:<16} {:>12}  {pct:5.1}%", fmt_ns(ns));
+        }
+
+        let _ = writeln!(s, "\n-- per rank --");
+        let _ = writeln!(
+            s,
+            "  {:>4} {:>12} {:>12} {:>12} {:>12} {:>12} {:>8}",
+            "rank", "wall", "busy", "idle", "sent", "recv", "events"
+        );
+        for r in &self.ranks {
+            let _ = writeln!(
+                s,
+                "  {:>4} {:>12} {:>12} {:>12} {:>12} {:>12} {:>8}",
+                r.rank,
+                fmt_ns(r.wall_ns()),
+                fmt_ns(r.busy_ns),
+                fmt_ns(r.idle_ns()),
+                fmt_bytes(r.bytes_sent),
+                fmt_bytes(r.bytes_recv),
+                r.events
+            );
+        }
+
+        if !self.phases.is_empty() {
+            let _ = writeln!(s, "\n-- collective phases (worst skew first) --");
+            let _ = writeln!(
+                s,
+                "  {:<16} {:>6} {:>12} {:>12} {:>12} {:>6} {:>6}",
+                "phase", "ops", "total", "median/rank", "max/rank", "rank", "skew"
+            );
+            for p in &self.phases {
+                let _ = writeln!(
+                    s,
+                    "  {:<16} {:>6} {:>12} {:>12} {:>12} {:>6} {:>6.2}",
+                    p.phase,
+                    p.count,
+                    fmt_ns(p.total_ns),
+                    fmt_ns(p.median_rank_ns),
+                    fmt_ns(p.max_rank_ns),
+                    p.max_rank,
+                    p.skew
+                );
+            }
+            if let Some(worst) = self.phases.first() {
+                if worst.skew > 1.05 {
+                    let _ = writeln!(
+                        s,
+                        "straggler: rank {} in {} ({:.2}x the median rank)",
+                        worst.max_rank, worst.phase, worst.skew
+                    );
+                }
+            }
+        }
+
+        let hists = self.merged_hists();
+        if !hists.is_empty() {
+            let _ = writeln!(s, "\n-- runtime histograms (merged across ranks) --");
+            let _ = writeln!(
+                s,
+                "  {:<20} {:>10} {:>12} {:>12} {:>12} {:>12}",
+                "hist", "count", "mean", "p50", "p95", "p99"
+            );
+            for (name, h) in &hists {
+                let _ = writeln!(
+                    s,
+                    "  {:<20} {:>10} {:>12} {:>12} {:>12} {:>12}",
+                    name,
+                    h.count,
+                    fmt_ns(h.mean() as u64),
+                    fmt_ns(h.quantile(0.50)),
+                    fmt_ns(h.quantile(0.95)),
+                    fmt_ns(h.quantile(0.99))
+                );
+            }
+        }
+
+        for w in &self.warnings {
+            let _ = writeln!(s, "warning: {w}");
+        }
+        s
+    }
+
+    /// The versioned machine-readable document CI consumes.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(2048);
+        let _ = write!(
+            s,
+            "{{\"schema\":\"analysis_v1\",\"ranks\":{},\"events\":{},\"wall_ns\":{},\
+             \"matched_edges\":{},\"unmatched_sends\":{},\"unmatched_arrives\":{},\
+             \"dropped\":{},\"clock_skew_ns_est\":{}",
+            self.ranks.len(),
+            self.streams.events.len(),
+            self.wall_ns,
+            self.graph.edges.len(),
+            self.graph.unmatched_sends,
+            self.graph.unmatched_arrives,
+            self.streams.total_dropped(),
+            self.graph.skew_est_ns
+        );
+        let _ = write!(
+            s,
+            ",\"latency_ns\":{{\"p50\":{},\"p95\":{},\"p99\":{},\"n\":{}}}",
+            self.latency_pctile(0.50),
+            self.latency_pctile(0.95),
+            self.latency_pctile(0.99),
+            self.latencies.len()
+        );
+        let _ = write!(
+            s,
+            ",\"achieved_gb_per_sec\":{},\"modeled_gb_per_sec\":{},\
+             \"model\":{{\"era\":\"{}\",\"nppn\":{},\"ntpn\":{}}}",
+            fmt_f64(self.achieved_bw / 1e9),
+            fmt_f64(self.modeled_bw / 1e9),
+            self.era,
+            self.nppn,
+            self.ntpn
+        );
+        if let Some(worst) = self.phases.first() {
+            let _ = write!(
+                s,
+                ",\"straggler\":{{\"rank\":{},\"phase\":\"{}\",\"skew\":{}}}",
+                worst.max_rank,
+                worst.phase,
+                fmt_f64(worst.skew)
+            );
+        }
+        // Critical path: totals, per-label breakdown, and the largest
+        // segments (enough for CI assertions and a quick look).
+        let covered: u64 = self.path.segments.iter().map(|x| x.dur_ns()).sum();
+        let _ = write!(
+            s,
+            ",\"critical_path\":{{\"total_ns\":{},\"covered_ns\":{},\"segments\":{},\
+             \"breakdown\":{{",
+            self.path.total_ns(),
+            covered,
+            self.path.segments.len()
+        );
+        for (i, (label, ns)) in self.path.breakdown().into_iter().enumerate() {
+            let _ = write!(s, "{}\"{label}\":{ns}", if i > 0 { "," } else { "" });
+        }
+        s.push_str("},\"top\":[");
+        let mut top: Vec<_> = self.path.segments.clone();
+        top.sort_by_key(|x| std::cmp::Reverse(x.dur_ns()));
+        for (i, seg) in top.iter().take(8).enumerate() {
+            let _ = write!(
+                s,
+                "{}{{\"rank\":{},\"label\":\"{}\",\"t0_ns\":{},\"dur_ns\":{}}}",
+                if i > 0 { "," } else { "" },
+                seg.rank,
+                seg.label,
+                seg.t0_ns,
+                seg.dur_ns()
+            );
+        }
+        s.push_str("]}");
+
+        s.push_str(",\"per_rank\":[");
+        for (i, r) in self.ranks.iter().enumerate() {
+            let _ = write!(
+                s,
+                "{}{{\"rank\":{},\"wall_ns\":{},\"busy_ns\":{},\"idle_ns\":{},\
+                 \"bytes_sent\":{},\"bytes_recv\":{},\"events\":{}}}",
+                if i > 0 { "," } else { "" },
+                r.rank,
+                r.wall_ns(),
+                r.busy_ns,
+                r.idle_ns(),
+                r.bytes_sent,
+                r.bytes_recv,
+                r.events
+            );
+        }
+        s.push(']');
+
+        s.push_str(",\"phases\":[");
+        for (i, p) in self.phases.iter().enumerate() {
+            let _ = write!(
+                s,
+                "{}{{\"phase\":\"{}\",\"ops\":{},\"total_ns\":{},\"median_rank_ns\":{},\
+                 \"max_rank_ns\":{},\"max_rank\":{},\"skew\":{}}}",
+                if i > 0 { "," } else { "" },
+                p.phase,
+                p.count,
+                p.total_ns,
+                p.median_rank_ns,
+                p.max_rank_ns,
+                p.max_rank,
+                fmt_f64(p.skew)
+            );
+        }
+        s.push(']');
+
+        s.push_str(",\"hists\":[");
+        for (i, (name, h)) in self.merged_hists().iter().enumerate() {
+            let _ = write!(
+                s,
+                "{}{{\"hist\":\"{}\",\"count\":{},\"sum\":{},\"p50\":{},\"p95\":{},\"p99\":{}}}",
+                if i > 0 { "," } else { "" },
+                name,
+                h.count,
+                h.sum,
+                h.quantile(0.50),
+                h.quantile(0.95),
+                h.quantile(0.99)
+            );
+        }
+        s.push(']');
+
+        s.push_str(",\"warnings\":[");
+        for (i, w) in self.warnings.iter().enumerate() {
+            let _ = write!(s, "{}\"{}\"", if i > 0 { "," } else { "" }, escape(w));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+/// A JSON-safe float: finite values as-is, NaN/inf as `null`.
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".into()
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// Human-scale nanoseconds: `982ns`, `14.3us`, `2.1ms`, `1.50s`.
+pub fn fmt_ns(ns: u64) -> String {
+    let v = ns as f64;
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.1}us", v / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.1}ms", v / 1e6)
+    } else {
+        format!("{:.2}s", v / 1e9)
+    }
+}
+
+fn fmt_bytes(b: u64) -> String {
+    let v = b as f64;
+    if b < 1 << 10 {
+        format!("{b}B")
+    } else if b < 1 << 20 {
+        format!("{:.1}KiB", v / 1024.0)
+    } else if b < 1 << 30 {
+        format!("{:.1}MiB", v / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2}GiB", v / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::causal::CEvent;
+    use super::super::EventKind;
+    use super::*;
+    use crate::json::Json;
+
+    fn ev(kind: EventKind, rank: i64, peer: i64, at_ns: u64, dur_ns: u64, step: u64) -> CEvent {
+        CEvent {
+            t_ns: at_ns,
+            dur_ns,
+            at_ns,
+            kind,
+            rank,
+            peer,
+            ns: 8,
+            epoch: 1,
+            step,
+            bytes: 1 << 20,
+        }
+    }
+
+    fn four_rank_streams() -> Streams {
+        let mut s = Streams::default();
+        for r in 0..4i64 {
+            s.events.push(ev(EventKind::RemapExec, r, -1, 0, 50, 0));
+        }
+        // Ring: r sends to r+1 at t=50, arrives at t=80.
+        for r in 0..3i64 {
+            s.events.push(ev(EventKind::ChunkSend, r, r + 1, 50, 0, r as u64));
+            s.events.push(ev(EventKind::ChunkArrive, r + 1, r, 70, 10, r as u64));
+        }
+        s.events.push(ev(EventKind::CollOp, 3, -1, 80, 120, 5 << 16));
+        s
+    }
+
+    #[test]
+    fn analysis_json_is_valid_and_versioned() {
+        let a = analyze_streams(four_rank_streams(), &AnalyzeOpts::default());
+        let doc = Json::parse(&a.to_json()).expect("analysis_v1 parses");
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some("analysis_v1"));
+        assert_eq!(doc.get("ranks").unwrap().as_usize(), Some(4));
+        assert_eq!(doc.get("matched_edges").unwrap().as_usize(), Some(3));
+        assert_eq!(doc.get("unmatched_sends").unwrap().as_usize(), Some(0));
+        let cp = doc.get("critical_path").unwrap();
+        assert!(cp.get("segments").unwrap().as_usize().unwrap() > 0);
+        // The path covers the whole wall span.
+        let wall = doc.get("wall_ns").unwrap().as_usize().unwrap();
+        assert_eq!(cp.get("total_ns").unwrap().as_usize().unwrap(), wall);
+        assert!(doc.get("modeled_gb_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn per_rank_idle_plus_busy_equals_wall() {
+        let a = analyze_streams(four_rank_streams(), &AnalyzeOpts::default());
+        for r in &a.ranks {
+            assert_eq!(r.busy_ns + r.idle_ns(), r.wall_ns(), "rank {}", r.rank);
+        }
+    }
+
+    #[test]
+    fn render_names_the_straggler_and_warns_on_skew() {
+        let mut s = four_rank_streams();
+        // Rank 2 is 10x slower in reduce_scatter.
+        for r in 0..4i64 {
+            let dur = if r == 2 { 1000 } else { 100 };
+            s.events.push(ev(EventKind::CollOp, r, -1, 200, dur, 5 << 16));
+        }
+        let a = analyze_streams(s, &AnalyzeOpts::default());
+        let text = a.render();
+        assert!(text.contains("straggler: rank 2"), "{text}");
+    }
+
+    #[test]
+    fn empty_input_renders_without_panic() {
+        let a = analyze_streams(Streams::default(), &AnalyzeOpts::default());
+        let _ = a.render();
+        let doc = Json::parse(&a.to_json()).expect("parses");
+        assert_eq!(doc.get("matched_edges").unwrap().as_usize(), Some(0));
+    }
+}

@@ -1,0 +1,641 @@
+//! Causal joining of per-rank trace streams.
+//!
+//! PR 7's telemetry plane produces P independent timelines; this
+//! module turns them into one causal graph. A `chunk_send` on rank
+//! *s* matches the `chunk_arrive` on rank *r* that carries the same
+//! bit-field tag `(ns, epoch, step)` with `peer` pointing back — the
+//! step field's low 16 bits are the chunk index, so the key is unique
+//! per in-flight chunk of a stream. Per-rank monotonic clocks are
+//! aligned by each stream's `trace_meta_v1` wall anchor
+//! (`aligned = wall_anchor_ns + t_ns`); the residual cross-process
+//! clock skew is *estimated* from the matched edges themselves (a
+//! negative wire latency is impossible, so its magnitude is a lower
+//! bound on skew) and reported rather than hidden.
+//!
+//! From the edge graph the module derives the three attribution
+//! primitives `repro analyze` reports: the run's **critical path**
+//! (walk backward from the last event; an arrive jumps to its matched
+//! send, anything else to its rank predecessor), per-rank
+//! **busy/idle time** (union of recorded spans vs. the rank's wall
+//! span), and a **straggler ranking** (max/median per-rank time per
+//! collective phase).
+//!
+//! Everything degrades, nothing panics: unmatched sends/arrives (ring
+//! wrap, a dead rank, a truncated file) are counted and the graph is
+//! built from what matched.
+
+use super::fold::phase_name;
+use super::hist::HistSnapshot;
+use super::EventKind;
+use crate::json::{Json, StreamDocs};
+use std::collections::BTreeMap;
+use std::io::Read;
+
+/// One trace event, parsed into the compact shape matching needs.
+#[derive(Debug, Clone, Copy)]
+pub struct CEvent {
+    /// Monotonic start since the stream's anchor.
+    pub t_ns: u64,
+    pub dur_ns: u64,
+    /// Aligned start: stream wall anchor + `t_ns`.
+    pub at_ns: u64,
+    pub kind: EventKind,
+    pub rank: i64,
+    /// Peer rank (-1 when absent).
+    pub peer: i64,
+    /// Unpacked tag fields (`0,0,0` when the event carried none).
+    pub ns: u64,
+    pub epoch: u64,
+    pub step: u64,
+    /// The kind's primary payload (`bytes` for data-movement kinds).
+    pub bytes: u64,
+}
+
+impl CEvent {
+    /// Aligned end of the event's span.
+    pub fn end_ns(&self) -> u64 {
+        self.at_ns + self.dur_ns
+    }
+}
+
+/// One matched message edge: `chunk_send` on `from` → `chunk_arrive`
+/// on `to`, timestamps aligned.
+#[derive(Debug, Clone, Copy)]
+pub struct Edge {
+    pub from: i64,
+    pub to: i64,
+    /// Aligned send instant.
+    pub send_ns: u64,
+    /// Aligned arrival completion.
+    pub arrive_ns: u64,
+    /// Wire bytes.
+    pub bytes: u64,
+    /// Signed wire latency (`arrive - send`; negative under clock
+    /// skew — kept signed so skew stays visible).
+    pub latency_ns: i64,
+}
+
+/// All streams of one run, parsed and indexed for matching.
+#[derive(Debug, Default)]
+pub struct Streams {
+    /// Every parsed event, in file order.
+    pub events: Vec<CEvent>,
+    /// Opening wall anchor per rank (first one seen wins).
+    pub anchors: BTreeMap<i64, u64>,
+    /// Ring drop count per rank (closing meta lines).
+    pub dropped: BTreeMap<i64, u64>,
+    /// Folded `trace_hist_v1` lines per (rank, hist name), last wins.
+    pub hists: BTreeMap<(i64, String), HistSnapshot>,
+    /// Lines that were valid JSON but no recognized schema/kind.
+    pub skipped: u64,
+}
+
+const READ_CHUNK: usize = 64 * 1024;
+
+impl Streams {
+    /// Stream-parse NDJSON trace files. Each file carries one wall
+    /// anchor (its opening meta line); every event line in the file is
+    /// aligned with it — a file may interleave events of many ranks
+    /// (in-process SPMD shares one ring), which is why the anchor is
+    /// per *file*, not per rank.
+    pub fn from_files(paths: &[String]) -> Result<Streams, String> {
+        let mut out = Streams::default();
+        for path in paths {
+            let mut f = std::fs::File::open(path).map_err(|e| format!("{path}: {e}"))?;
+            let mut docs = StreamDocs::new();
+            let mut buf = vec![0u8; READ_CHUNK];
+            let mut anchor = 0u64;
+            loop {
+                let n = f.read(&mut buf).map_err(|e| format!("{path}: {e}"))?;
+                if n == 0 {
+                    break;
+                }
+                docs.feed(&buf[..n], |doc| out.add_doc(&doc, &mut anchor))
+                    .map_err(|e| format!("{path}: {e}"))?;
+            }
+            docs.finish(|doc| out.add_doc(&doc, &mut anchor))
+                .map_err(|e| format!("{path}: {e}"))?;
+        }
+        Ok(out)
+    }
+
+    /// Fold one parsed document (`anchor` is the current file's).
+    pub fn add_doc(&mut self, doc: &Json, anchor: &mut u64) {
+        let rank = doc.get("rank").and_then(|r| r.as_f64()).map(|r| r as i64).unwrap_or(-1);
+        match doc.get("schema").and_then(|s| s.as_str()) {
+            Some("trace_meta_v1") => {
+                if let Some(w) = doc.get("wall_anchor_ns").and_then(|v| v.as_f64()) {
+                    *anchor = w as u64;
+                    self.anchors.entry(rank).or_insert(*anchor);
+                }
+                if let Some(d) = doc.get("dropped").and_then(|v| v.as_f64()) {
+                    let e = self.dropped.entry(rank).or_insert(0);
+                    *e = (*e).max(d as u64);
+                }
+            }
+            Some("trace_event_v1") => {
+                let name = doc.get("kind").and_then(|k| k.as_str()).unwrap_or("");
+                let Some(kind) = super::kind_from_name(name) else {
+                    self.skipped += 1;
+                    return;
+                };
+                let num = |k: &str| doc.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                let t_ns = num("t_ns");
+                // In-process SPMD rings share one anchor; spawned
+                // ranks each bring their own via their file's meta.
+                let at_ns = anchor.saturating_add(t_ns);
+                self.events.push(CEvent {
+                    t_ns,
+                    dur_ns: num("dur_ns"),
+                    at_ns,
+                    kind,
+                    rank,
+                    peer: doc.get("peer").and_then(|v| v.as_f64()).map(|p| p as i64).unwrap_or(-1),
+                    ns: num("ns"),
+                    epoch: num("epoch"),
+                    step: num("step"),
+                    bytes: num("bytes"),
+                });
+                // The per-file anchor also covers events recorded
+                // before any rank was attributed: nothing else needed.
+                if !self.anchors.contains_key(&rank) && *anchor > 0 {
+                    self.anchors.insert(rank, *anchor);
+                }
+            }
+            Some("trace_hist_v1") => {
+                if let Some(name) = doc.get("hist").and_then(|h| h.as_str()) {
+                    // Cumulative totals: the latest line supersedes.
+                    self.hists.insert((rank, name.to_string()), HistSnapshot::from_doc(doc));
+                }
+            }
+            _ => self.skipped += 1,
+        }
+    }
+
+    /// Total ring drops across every rank.
+    pub fn total_dropped(&self) -> u64 {
+        self.dropped.values().sum()
+    }
+}
+
+/// The causal join of a run's streams: matched edges, the leftovers,
+/// and the skew estimate.
+#[derive(Debug, Default)]
+pub struct CausalGraph {
+    pub edges: Vec<Edge>,
+    pub unmatched_sends: u64,
+    pub unmatched_arrives: u64,
+    /// Estimated cross-rank clock skew (ns): the largest negative
+    /// matched latency's magnitude — a hard lower bound on how far
+    /// two anchors disagree.
+    pub skew_est_ns: u64,
+    /// Smallest positive matched latency (ns); 0 when no edge has one.
+    pub min_latency_ns: u64,
+}
+
+impl CausalGraph {
+    /// Does the estimated skew exceed the smallest matched latency —
+    /// i.e., are individual edge latencies untrustworthy?
+    pub fn skew_exceeds_min_latency(&self) -> bool {
+        self.skew_est_ns > 0 && self.skew_est_ns > self.min_latency_ns
+    }
+}
+
+/// Join `chunk_send`/`chunk_arrive` events into message edges.
+///
+/// Key: `(ns, epoch, step, sender, receiver)` — the full bit-field
+/// tag (step carries `lane | chunk`) plus both endpoints, so ring
+/// forwards of the same chunk on different hops stay distinct.
+/// Duplicate keys (an epoch reused across bench iterations) pair in
+/// time order; surplus on either side is counted unmatched, never an
+/// error — the matcher must survive ring wrap and dead ranks.
+pub fn match_edges(streams: &Streams) -> CausalGraph {
+    type Key = (u64, u64, u64, i64, i64);
+    let mut sends: BTreeMap<Key, Vec<(u64, u64)>> = BTreeMap::new();
+    let mut arrives: BTreeMap<Key, Vec<(u64, u64)>> = BTreeMap::new();
+    for ev in &streams.events {
+        match ev.kind {
+            EventKind::ChunkSend => sends
+                .entry((ev.ns, ev.epoch, ev.step, ev.rank, ev.peer))
+                .or_default()
+                .push((ev.at_ns, ev.bytes)),
+            EventKind::ChunkArrive => arrives
+                .entry((ev.ns, ev.epoch, ev.step, ev.peer, ev.rank))
+                .or_default()
+                .push((ev.end_ns(), ev.bytes)),
+            _ => {}
+        }
+    }
+    let mut g = CausalGraph::default();
+    let mut min_pos = u64::MAX;
+    for (key, mut ss) in sends {
+        let (_, _, _, from, to) = key;
+        match arrives.remove(&key) {
+            None => g.unmatched_sends += ss.len() as u64,
+            Some(mut aa) => {
+                ss.sort_unstable();
+                aa.sort_unstable();
+                let n = ss.len().min(aa.len());
+                g.unmatched_sends += (ss.len() - n) as u64;
+                g.unmatched_arrives += (aa.len() - n) as u64;
+                for i in 0..n {
+                    let (send_ns, bytes) = ss[i];
+                    let (arrive_ns, _) = aa[i];
+                    let latency_ns = arrive_ns as i64 - send_ns as i64;
+                    if latency_ns < 0 {
+                        g.skew_est_ns = g.skew_est_ns.max(latency_ns.unsigned_abs());
+                    } else if latency_ns > 0 {
+                        min_pos = min_pos.min(latency_ns as u64);
+                    }
+                    g.edges.push(Edge { from, to, send_ns, arrive_ns, bytes, latency_ns });
+                }
+            }
+        }
+    }
+    g.unmatched_arrives += arrives.values().map(|v| v.len() as u64).sum::<u64>();
+    if min_pos != u64::MAX {
+        g.min_latency_ns = min_pos;
+    }
+    g
+}
+
+/// One critical-path segment, most recent first in the walk but
+/// returned oldest-first.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub rank: i64,
+    /// Aligned start/end.
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+    /// `"wire"` for a message edge, `"idle"` for a wait gap, else the
+    /// event kind name.
+    pub label: &'static str,
+}
+
+impl Segment {
+    pub fn dur_ns(&self) -> u64 {
+        self.t1_ns.saturating_sub(self.t0_ns)
+    }
+}
+
+/// The run's critical path: a contiguous chain of segments from the
+/// globally earliest event to the latest event end.
+#[derive(Debug, Default)]
+pub struct CriticalPath {
+    pub segments: Vec<Segment>,
+    /// Aligned span the path covers.
+    pub start_ns: u64,
+    pub end_ns: u64,
+}
+
+impl CriticalPath {
+    pub fn total_ns(&self) -> u64 {
+        self.end_ns.saturating_sub(self.start_ns)
+    }
+
+    /// Time on the path by label.
+    pub fn breakdown(&self) -> BTreeMap<&'static str, u64> {
+        let mut out = BTreeMap::new();
+        for s in &self.segments {
+            *out.entry(s.label).or_insert(0) += s.dur_ns();
+        }
+        out
+    }
+}
+
+/// Compute the critical path by backward walk: start at the event
+/// with the latest aligned end; a matched `chunk_arrive` jumps across
+/// the wire to its send (on the sending rank), anything else steps to
+/// the previous event on the same rank. Gaps between consecutive
+/// events on a rank become `idle` segments; the prefix from the
+/// globally earliest event to where the walk terminates becomes a
+/// leading `idle` segment — so the path always covers the measured
+/// wall span. Returns an empty path for an empty run.
+pub fn critical_path(streams: &Streams, graph: &CausalGraph) -> CriticalPath {
+    if streams.events.is_empty() {
+        return CriticalPath::default();
+    }
+    // Per-rank event lists sorted by aligned end.
+    let mut per_rank: BTreeMap<i64, Vec<usize>> = BTreeMap::new();
+    for (i, ev) in streams.events.iter().enumerate() {
+        per_rank.entry(ev.rank).or_default().push(i);
+    }
+    for list in per_rank.values_mut() {
+        list.sort_by_key(|&i| (streams.events[i].end_ns(), streams.events[i].at_ns));
+    }
+    // Arrive → edge lookup: key by (rank, aligned end) of the arrive.
+    let mut edge_by_arrive: BTreeMap<(i64, u64), &Edge> = BTreeMap::new();
+    for e in &graph.edges {
+        edge_by_arrive.entry((e.to, e.arrive_ns)).or_insert(e);
+    }
+    let global_start = streams.events.iter().map(|e| e.at_ns).min().unwrap_or(0);
+    let (last_rank, last_idx) = per_rank
+        .iter()
+        .filter_map(|(&r, list)| list.last().map(|&i| (r, i)))
+        .max_by_key(|&(_, i)| streams.events[i].end_ns())
+        .expect("nonempty run");
+    let end_ns = streams.events[last_idx].end_ns();
+
+    let mut segs: Vec<Segment> = Vec::new();
+    let mut rank = last_rank;
+    // Position within the current rank's sorted list.
+    let mut pos = per_rank[&rank].len() - 1;
+    let mut cursor = end_ns;
+    // Bounded walk: each step consumes one event or one edge.
+    let budget = streams.events.len() + graph.edges.len() + 8;
+    for _ in 0..budget {
+        let list = &per_rank[&rank];
+        let i = list[pos];
+        let ev = &streams.events[i];
+        let (start, end) = (ev.at_ns.min(cursor), ev.end_ns().min(cursor));
+        if end > start {
+            segs.push(Segment {
+                rank,
+                t0_ns: start,
+                t1_ns: end,
+                label: super::kind_name(ev.kind),
+            });
+        }
+        cursor = start;
+        // A matched arrival: cross the wire to the sender.
+        if ev.kind == EventKind::ChunkArrive {
+            if let Some(edge) = edge_by_arrive.get(&(rank, ev.end_ns())) {
+                if edge.send_ns < cursor {
+                    segs.push(Segment {
+                        rank: edge.from,
+                        t0_ns: edge.send_ns,
+                        t1_ns: cursor,
+                        label: "wire",
+                    });
+                    cursor = edge.send_ns;
+                }
+                let Some((npos, _)) = per_rank
+                    .get(&edge.from)
+                    .and_then(|l| {
+                        l.iter()
+                            .enumerate()
+                            .rev()
+                            .find(|&(_, &j)| streams.events[j].end_ns() <= edge.send_ns)
+                    })
+                else {
+                    break;
+                };
+                rank = edge.from;
+                pos = npos;
+                continue;
+            }
+        }
+        // Step to the rank's previous event; the gap is idle time.
+        if pos == 0 {
+            break;
+        }
+        pos -= 1;
+        let prev_end = streams.events[list[pos]].end_ns();
+        if prev_end < cursor {
+            segs.push(Segment { rank, t0_ns: prev_end, t1_ns: cursor, label: "idle" });
+            cursor = prev_end;
+        }
+    }
+    if global_start < cursor {
+        // Startup slack: the chain's origin rank waited since the
+        // run's earliest recorded instant.
+        segs.push(Segment { rank, t0_ns: global_start, t1_ns: cursor, label: "idle" });
+    }
+    segs.reverse();
+    CriticalPath { segments: segs, start_ns: global_start, end_ns }
+}
+
+/// Per-rank busy/idle attribution over the rank's own wall span.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RankTime {
+    pub rank: i64,
+    /// Aligned first event start / last event end.
+    pub t0_ns: u64,
+    pub t1_ns: u64,
+    /// Union of recorded span durations (overlaps merged).
+    pub busy_ns: u64,
+    pub events: u64,
+    pub bytes_sent: u64,
+    pub bytes_recv: u64,
+}
+
+impl RankTime {
+    pub fn wall_ns(&self) -> u64 {
+        self.t1_ns.saturating_sub(self.t0_ns)
+    }
+
+    /// Wall minus busy — by construction `busy + idle == wall`.
+    pub fn idle_ns(&self) -> u64 {
+        self.wall_ns().saturating_sub(self.busy_ns)
+    }
+}
+
+/// Compute per-rank busy (merged span union) and idle time.
+pub fn rank_times(streams: &Streams) -> Vec<RankTime> {
+    let mut spans: BTreeMap<i64, Vec<(u64, u64)>> = BTreeMap::new();
+    let mut out: BTreeMap<i64, RankTime> = BTreeMap::new();
+    for ev in &streams.events {
+        let rt = out.entry(ev.rank).or_insert_with(|| RankTime {
+            rank: ev.rank,
+            t0_ns: u64::MAX,
+            ..Default::default()
+        });
+        rt.t0_ns = rt.t0_ns.min(ev.at_ns);
+        rt.t1_ns = rt.t1_ns.max(ev.end_ns());
+        rt.events += 1;
+        match ev.kind {
+            EventKind::ChunkSend => rt.bytes_sent += ev.bytes,
+            EventKind::ChunkArrive => rt.bytes_recv += ev.bytes,
+            _ => {}
+        }
+        if ev.dur_ns > 0 {
+            spans.entry(ev.rank).or_default().push((ev.at_ns, ev.end_ns()));
+        }
+    }
+    for (rank, mut list) in spans {
+        list.sort_unstable();
+        let mut busy = 0u64;
+        let mut cur: Option<(u64, u64)> = None;
+        for (lo, hi) in list {
+            match &mut cur {
+                Some((_, chi)) if lo <= *chi => *chi = (*chi).max(hi),
+                _ => {
+                    if let Some((clo, chi)) = cur {
+                        busy += chi - clo;
+                    }
+                    cur = Some((lo, hi));
+                }
+            }
+        }
+        if let Some((clo, chi)) = cur {
+            busy += chi - clo;
+        }
+        if let Some(rt) = out.get_mut(&rank) {
+            rt.busy_ns = busy.min(rt.wall_ns());
+        }
+    }
+    out.into_values().collect()
+}
+
+/// Straggler statistics for one collective phase: per-rank total
+/// `coll_op` time, its spread, and the slowest rank.
+#[derive(Debug, Clone)]
+pub struct PhaseSkew {
+    pub phase: &'static str,
+    /// `coll_op` spans folded into this phase, all ranks.
+    pub count: u64,
+    pub total_ns: u64,
+    /// Median / max of the per-rank totals.
+    pub median_rank_ns: u64,
+    pub max_rank_ns: u64,
+    /// The rank holding the max.
+    pub max_rank: i64,
+    /// `max / median` (1.0 when balanced; grows with the straggler).
+    pub skew: f64,
+}
+
+/// Rank phase totals → per-phase straggler ranking, worst skew first.
+pub fn phase_skews(streams: &Streams) -> Vec<PhaseSkew> {
+    let mut per: BTreeMap<&'static str, BTreeMap<i64, (u64, u64)>> = BTreeMap::new();
+    for ev in &streams.events {
+        if ev.kind != EventKind::CollOp {
+            continue;
+        }
+        let entry = per
+            .entry(phase_name(ev.step))
+            .or_default()
+            .entry(ev.rank)
+            .or_insert((0, 0));
+        entry.0 += 1;
+        entry.1 += ev.dur_ns;
+    }
+    let mut out: Vec<PhaseSkew> = per
+        .into_iter()
+        .map(|(phase, ranks)| {
+            let mut totals: Vec<(u64, i64)> =
+                ranks.iter().map(|(&r, &(_, dur))| (dur, r)).collect();
+            totals.sort_unstable();
+            let median_rank_ns = totals[totals.len() / 2].0;
+            let &(max_rank_ns, max_rank) = totals.last().expect("nonempty phase");
+            PhaseSkew {
+                phase,
+                count: ranks.values().map(|&(c, _)| c).sum(),
+                total_ns: ranks.values().map(|&(_, d)| d).sum(),
+                median_rank_ns,
+                max_rank_ns,
+                max_rank,
+                skew: if median_rank_ns > 0 {
+                    max_rank_ns as f64 / median_rank_ns as f64
+                } else if max_rank_ns > 0 {
+                    f64::INFINITY
+                } else {
+                    1.0
+                },
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| b.skew.partial_cmp(&a.skew).unwrap_or(std::cmp::Ordering::Equal));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(
+        kind: EventKind,
+        rank: i64,
+        peer: i64,
+        at_ns: u64,
+        dur_ns: u64,
+        step: u64,
+    ) -> CEvent {
+        CEvent { t_ns: at_ns, dur_ns, at_ns, kind, rank, peer, ns: 8, epoch: 1, step, bytes: 64 }
+    }
+
+    #[test]
+    fn matches_send_to_arrive_by_tag_and_peers() {
+        let mut s = Streams::default();
+        s.events.push(ev(EventKind::ChunkSend, 0, 1, 100, 0, 0));
+        s.events.push(ev(EventKind::ChunkArrive, 1, 0, 150, 0, 0));
+        // A second stream chunk on another hop must not cross-match.
+        s.events.push(ev(EventKind::ChunkSend, 1, 2, 160, 0, 0));
+        let g = match_edges(&s);
+        assert_eq!(g.edges.len(), 1);
+        assert_eq!((g.edges[0].from, g.edges[0].to), (0, 1));
+        assert_eq!(g.edges[0].latency_ns, 50);
+        assert_eq!(g.unmatched_sends, 1);
+        assert_eq!(g.unmatched_arrives, 0);
+    }
+
+    #[test]
+    fn negative_latency_becomes_skew_estimate() {
+        let mut s = Streams::default();
+        s.events.push(ev(EventKind::ChunkSend, 0, 1, 1000, 0, 0));
+        s.events.push(ev(EventKind::ChunkArrive, 1, 0, 800, 0, 0));
+        s.events.push(ev(EventKind::ChunkSend, 0, 1, 2000, 0, 1));
+        s.events.push(ev(EventKind::ChunkArrive, 1, 0, 2050, 0, 1));
+        let g = match_edges(&s);
+        assert_eq!(g.skew_est_ns, 200);
+        assert_eq!(g.min_latency_ns, 50);
+        assert!(g.skew_exceeds_min_latency());
+    }
+
+    #[test]
+    fn critical_path_covers_the_wall_span() {
+        let mut s = Streams::default();
+        // rank 0 computes 0..100, sends at 100; rank 1 idles, arrive
+        // completes at 140, then computes 140..200.
+        s.events.push(ev(EventKind::RemapExec, 0, -1, 0, 100, 0));
+        s.events.push(ev(EventKind::ChunkSend, 0, 1, 100, 0, 0));
+        s.events.push(ev(EventKind::ChunkArrive, 1, 0, 130, 10, 0));
+        s.events.push(ev(EventKind::RemapExec, 1, -1, 140, 60, 0));
+        let g = match_edges(&s);
+        assert_eq!(g.edges.len(), 1);
+        let cp = critical_path(&s, &g);
+        assert_eq!(cp.total_ns(), 200);
+        let covered: u64 = cp.segments.iter().map(|x| x.dur_ns()).sum();
+        assert_eq!(covered, 200, "segments tile the wall span: {:#?}", cp.segments);
+        // The wire hop is on the path.
+        assert!(cp.segments.iter().any(|x| x.label == "wire"));
+    }
+
+    #[test]
+    fn rank_times_partition_wall_into_busy_and_idle() {
+        let mut s = Streams::default();
+        s.events.push(ev(EventKind::CollOp, 0, -1, 0, 40, 0));
+        s.events.push(ev(EventKind::CollOp, 0, -1, 20, 40, 0)); // overlaps
+        s.events.push(ev(EventKind::Mark, 0, -1, 100, 0, 0));
+        let rt = rank_times(&s);
+        assert_eq!(rt.len(), 1);
+        assert_eq!(rt[0].wall_ns(), 100);
+        assert_eq!(rt[0].busy_ns, 60, "overlapping spans merge");
+        assert_eq!(rt[0].busy_ns + rt[0].idle_ns(), rt[0].wall_ns());
+    }
+
+    #[test]
+    fn straggler_ranking_names_the_slow_rank() {
+        let mut s = Streams::default();
+        for r in 0..4 {
+            let dur = if r == 2 { 900 } else { 100 };
+            // step = phase 5 << 16 (reduce_scatter).
+            s.events.push(ev(EventKind::CollOp, r, -1, 0, dur, 5 << 16));
+        }
+        let skews = phase_skews(&s);
+        assert_eq!(skews.len(), 1);
+        assert_eq!(skews[0].phase, "reduce_scatter");
+        assert_eq!(skews[0].max_rank, 2);
+        assert!(skews[0].skew > 8.0, "skew {}", skews[0].skew);
+    }
+
+    #[test]
+    fn empty_streams_never_panic() {
+        let s = Streams::default();
+        let g = match_edges(&s);
+        let cp = critical_path(&s, &g);
+        assert!(cp.segments.is_empty());
+        assert_eq!(cp.total_ns(), 0);
+        assert!(rank_times(&s).is_empty());
+        assert!(phase_skews(&s).is_empty());
+    }
+}

@@ -128,11 +128,22 @@ pub fn flush_to_sink() -> usize {
     drain_events(write_line)
 }
 
+/// One `trace_hist_v1` line per non-empty runtime histogram
+/// (cumulative totals — a later emission supersedes an earlier one).
+fn hist_lines() -> Vec<String> {
+    let rank = current_rank().map(|r| r as i64).unwrap_or(-1);
+    super::hist::snapshots()
+        .into_iter()
+        .map(|(kind, snap)| snap.wire_line(rank, kind))
+        .collect()
+}
+
 /// Render this process's pending telemetry as one NDJSON blob — the
-/// worker→leader wire exchange: meta line, every drained event, and
-/// the closing drop-count line. When a local sink is installed the
-/// drained events are mirrored into it too, so a spawned worker's own
-/// trace file and the leader's fold see the same events.
+/// worker→leader wire exchange: meta line, every drained event, the
+/// runtime histograms, and the closing drop-count line. When a local
+/// sink is installed the drained events are mirrored into it too, so
+/// a spawned worker's own trace file and the leader's fold see the
+/// same events.
 pub fn render_pending() -> String {
     let mut out = meta_line();
     out.push('\n');
@@ -144,15 +155,26 @@ pub fn render_pending() -> String {
             write_line(line);
         }
     });
+    for line in hist_lines() {
+        out.push_str(&line);
+        out.push('\n');
+        if mirror {
+            write_line(&line);
+        }
+    }
     out.push_str(&closing_line());
     out.push('\n');
     out
 }
 
-/// Final flush: drain remaining events, write the closing meta line,
-/// flush and drop the sink. Safe to call without a sink.
+/// Final flush: drain remaining events, write the histogram and
+/// closing meta lines, flush and drop the sink. Safe to call without
+/// a sink.
 pub fn close_sink() {
     flush_to_sink();
+    for line in hist_lines() {
+        write_line(&line);
+    }
     write_line(&closing_line());
     if let Some(mut s) = sink().lock().unwrap().take() {
         let _ = s.out.flush();

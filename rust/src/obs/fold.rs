@@ -6,6 +6,7 @@
 //! each completed line into a [`TraceFold`] — peak memory is bounded
 //! by the largest in-flight line, not `O(P · report)`.
 
+use super::hist::HistSnapshot;
 use crate::json::{Json, JsonError, StreamDocs};
 use std::collections::BTreeMap;
 
@@ -49,6 +50,9 @@ pub struct RankAgg {
     /// Ring drop count from the closing meta line.
     pub dropped: u64,
     pub events: u64,
+    /// Runtime histograms from `trace_hist_v1` lines. Values are
+    /// cumulative at emission, so the latest line wins.
+    pub hists: BTreeMap<String, HistSnapshot>,
 }
 
 impl RankAgg {
@@ -85,6 +89,9 @@ pub struct TraceFold {
     /// Documents that were valid JSON but not a recognized trace
     /// schema (counted, not fatal — forward compatibility).
     pub unknown_lines: u64,
+    /// `trace_event_v1` lines whose `kind` this build doesn't know —
+    /// schema drift between builds must be visible, not silent.
+    pub unknown_kinds: u64,
 }
 
 impl TraceFold {
@@ -109,6 +116,9 @@ impl TraceFold {
             }
             Some("trace_event_v1") => {
                 let kind = doc.get("kind").and_then(|k| k.as_str()).unwrap_or("unknown");
+                if super::kind_from_name(kind).is_none() {
+                    self.unknown_kinds += 1;
+                }
                 let t_ns = doc.get("t_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
                 let dur = doc.get("dur_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
                 let bytes = doc.get("bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
@@ -125,6 +135,15 @@ impl TraceFold {
                 if kind == "coll_op" {
                     let step = doc.get("step").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
                     agg.phases.entry(phase_name(step)).or_default().add(dur, bytes);
+                }
+            }
+            Some("trace_hist_v1") => {
+                if let Some(name) = doc.get("hist").and_then(|h| h.as_str()) {
+                    self.ranks
+                        .entry(rank)
+                        .or_default()
+                        .hists
+                        .insert(name.to_string(), HistSnapshot::from_doc(doc));
                 }
             }
             _ => self.unknown_lines += 1,
@@ -221,6 +240,41 @@ mod tests {
         stream.finish(&mut fold).unwrap();
         let agg = &fold.ranks[&0];
         assert_eq!(agg.phases.get("reduce_scatter").unwrap().count, 1);
+    }
+
+    #[test]
+    fn unknown_event_kinds_are_counted() {
+        let mut fold = TraceFold::new();
+        let mut stream = FoldStream::new();
+        stream
+            .feed(
+                &mut fold,
+                b"{\"schema\":\"trace_event_v1\",\"kind\":\"from_the_future\",\"rank\":0,\
+                  \"t_ns\":1,\"dur_ns\":0}\n",
+            )
+            .unwrap();
+        stream.finish(&mut fold).unwrap();
+        assert_eq!(fold.unknown_kinds, 1);
+        // The event still folds (forward compatibility), it's just
+        // flagged.
+        assert_eq!(fold.total_events(), 1);
+    }
+
+    #[test]
+    fn hist_lines_fold_last_wins() {
+        let mut fold = TraceFold::new();
+        let mut stream = FoldStream::new();
+        let early = "{\"schema\":\"trace_hist_v1\",\"rank\":1,\"hist\":\"pool_wait_ns\",\
+                     \"count\":2,\"sum\":10,\"buckets\":[[3,2]]}\n";
+        let late = "{\"schema\":\"trace_hist_v1\",\"rank\":1,\"hist\":\"pool_wait_ns\",\
+                    \"count\":5,\"sum\":99,\"buckets\":[[3,4],[7,1]]}\n";
+        stream.feed(&mut fold, early.as_bytes()).unwrap();
+        stream.feed(&mut fold, late.as_bytes()).unwrap();
+        stream.finish(&mut fold).unwrap();
+        let h = fold.ranks[&1].hists.get("pool_wait_ns").unwrap();
+        assert_eq!(h.count, 5, "cumulative totals: the latest line supersedes");
+        assert_eq!(h.sum, 99);
+        assert_eq!(fold.unknown_lines, 0);
     }
 
     #[test]

@@ -1,0 +1,403 @@
+//! Fixed-size log2-bucketed latency histograms for the hot path.
+//!
+//! The span ring captures *individual* events; a bounded run can only
+//! keep the newest 64Ki of them. Histograms keep the *distribution*
+//! forever at O(1) memory: 64 power-of-two buckets of saturating
+//! atomic counters, recorded with one CAS loop per sample — no
+//! allocation, no locks, no loss on ring wrap. Three process-global
+//! instruments cover the paths the analysis plane attributes time to:
+//!
+//! * [`HistKind::ChunkWait`] — receiver-side chunk arrival wait
+//!   (datapath drain/recv stamps),
+//! * [`HistKind::CollRound`] — collective round/span durations
+//!   (fed centrally from [`super::record_span`]),
+//! * [`HistKind::PoolWait`] — buffer-pool checkout latency.
+//!
+//! Histograms ride the telemetry wire as `trace_hist_v1` NDJSON lines
+//! (see `docs/trace_schema.md`): cumulative totals emitted with every
+//! [`super::emit::render_pending`] / `close_sink`, folded last-wins by
+//! the leader. [`HistSnapshot`] is the plain-data mirror used for
+//! merging, quantiles, and the wire format.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count: bucket 0 holds zeros, bucket `i` (1..63) holds
+/// values in `[2^(i-1), 2^i)`, bucket 63 holds everything above.
+pub const BUCKETS: usize = 64;
+
+/// The process-global histogram instruments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(usize)]
+pub enum HistKind {
+    /// Receiver-side wait per datapath chunk: time from "started
+    /// waiting" (drain pass, blocking recv) to the chunk landing, ns.
+    ChunkWait = 0,
+    /// One collective round/group-call duration, ns (every `coll_op`
+    /// span feeds this).
+    CollRound = 1,
+    /// One buffer-pool checkout, ns (lock + free-list pop).
+    PoolWait = 2,
+}
+
+/// Number of [`HistKind`] instruments.
+pub const N_HISTS: usize = 3;
+
+/// All kinds, for iteration.
+pub const KINDS: [HistKind; N_HISTS] =
+    [HistKind::ChunkWait, HistKind::CollRound, HistKind::PoolWait];
+
+/// Wire name of a histogram (the `hist` field of `trace_hist_v1`).
+pub fn hist_name(kind: HistKind) -> &'static str {
+    match kind {
+        HistKind::ChunkWait => "chunk_arrive_wait_ns",
+        HistKind::CollRound => "coll_round_ns",
+        HistKind::PoolWait => "pool_wait_ns",
+    }
+}
+
+/// Parse a wire histogram name (reader side).
+pub fn hist_from_name(name: &str) -> Option<HistKind> {
+    Some(match name {
+        "chunk_arrive_wait_ns" => HistKind::ChunkWait,
+        "coll_round_ns" => HistKind::CollRound,
+        "pool_wait_ns" => HistKind::PoolWait,
+        _ => return None,
+    })
+}
+
+/// Bucket index of a value: 0 for 0, else `bit_width(v)` clamped to
+/// the last bucket — so bucket `i ≥ 1` covers `[2^(i-1), 2^i)`.
+#[inline]
+pub fn bucket_of(v: u64) -> usize {
+    ((64 - v.leading_zeros()) as usize).min(BUCKETS - 1)
+}
+
+/// Inclusive lower bound of bucket `i`.
+pub fn bucket_lo(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+/// Exclusive upper bound of bucket `i` (saturating for the last).
+pub fn bucket_hi(i: usize) -> u64 {
+    if i == 0 {
+        1
+    } else if i >= BUCKETS - 1 {
+        u64::MAX
+    } else {
+        1u64 << i
+    }
+}
+
+/// Saturating atomic add: the counter sticks at `u64::MAX` instead of
+/// wrapping (a histogram must never under-report by overflow).
+#[inline]
+fn sat_add(a: &AtomicU64, v: u64) {
+    let mut cur = a.load(Ordering::Relaxed);
+    loop {
+        if cur == u64::MAX {
+            return;
+        }
+        let next = cur.saturating_add(v);
+        match a.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(c) => cur = c,
+        }
+    }
+}
+
+/// One fixed-size concurrent histogram: 64 saturating bucket counters
+/// plus total count and sum. All fields are atomics — writers never
+/// block, never allocate, and a snapshot can be taken while they run.
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        Histogram {
+            counts: [const { AtomicU64::new(0) }; BUCKETS],
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one sample. Lock-free, allocation-free, saturating.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        sat_add(&self.counts[bucket_of(v)], 1);
+        sat_add(&self.count, 1);
+        sat_add(&self.sum, v);
+    }
+
+    /// Total samples recorded (saturating).
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Copy the current totals into a plain-data snapshot.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut s = HistSnapshot::new();
+        for (i, c) in self.counts.iter().enumerate() {
+            s.counts[i] = c.load(Ordering::Relaxed);
+        }
+        s.count = self.count.load(Ordering::Relaxed);
+        s.sum = self.sum.load(Ordering::Relaxed);
+        s
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Plain-data histogram totals: the merge/quantile/wire-format side of
+/// [`Histogram`] (and the fold's per-rank aggregate).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub counts: [u64; BUCKETS],
+    pub count: u64,
+    pub sum: u64,
+}
+
+impl Default for HistSnapshot {
+    fn default() -> HistSnapshot {
+        HistSnapshot::new()
+    }
+}
+
+impl HistSnapshot {
+    pub fn new() -> HistSnapshot {
+        HistSnapshot { counts: [0; BUCKETS], count: 0, sum: 0 }
+    }
+
+    /// Record one sample (the non-atomic twin of
+    /// [`Histogram::record`], for folds and tests).
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] = self.counts[bucket_of(v)].saturating_add(1);
+        self.count = self.count.saturating_add(1);
+        self.sum = self.sum.saturating_add(v);
+    }
+
+    /// Merge another snapshot in (saturating): merge of disjoint
+    /// splits equals the whole — the mergeability property tests pin.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a = a.saturating_add(*b);
+        }
+        self.count = self.count.saturating_add(other.count);
+        self.sum = self.sum.saturating_add(other.sum);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Mean sample value (0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile `q ∈ [0, 1]`: the log2 buckets bound the
+    /// answer to a factor of 2; within the winning bucket the value is
+    /// interpolated linearly. Returns 0 when empty.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = seen.saturating_add(c);
+            if next >= target {
+                let lo = bucket_lo(i) as f64;
+                let hi = bucket_hi(i) as f64;
+                let frac = (target - seen) as f64 / c as f64;
+                return (lo + (hi - lo) * frac) as u64;
+            }
+            seen = next;
+        }
+        bucket_hi(BUCKETS - 1)
+    }
+
+    /// Format as one `trace_hist_v1` NDJSON line (no newline).
+    /// Buckets are sparse `[index, count]` pairs — most lines are a
+    /// couple hundred bytes, never 64 zeros.
+    pub fn wire_line(&self, rank: i64, kind: HistKind) -> String {
+        use std::fmt::Write as _;
+        let mut line = String::with_capacity(128);
+        let _ = write!(
+            line,
+            "{{\"schema\":\"trace_hist_v1\",\"rank\":{rank},\"hist\":\"{}\",\
+             \"count\":{},\"sum\":{},\"buckets\":[",
+            hist_name(kind),
+            self.count,
+            self.sum
+        );
+        let mut first = true;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if !first {
+                line.push(',');
+            }
+            first = false;
+            let _ = write!(line, "[{i},{c}]");
+        }
+        line.push_str("]}");
+        line
+    }
+
+    /// Parse the snapshot fields back out of a `trace_hist_v1`
+    /// document (the `hist` name is the caller's job).
+    pub fn from_doc(doc: &crate::json::Json) -> HistSnapshot {
+        let mut s = HistSnapshot::new();
+        s.count = doc.get("count").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        s.sum = doc.get("sum").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        if let Some(items) = doc.get("buckets").and_then(|b| b.items()) {
+            for pair in items {
+                if let Some(p) = pair.items() {
+                    if p.len() == 2 {
+                        let i = p[0].as_f64().unwrap_or(0.0) as usize;
+                        let c = p[1].as_f64().unwrap_or(0.0) as u64;
+                        if i < BUCKETS {
+                            s.counts[i] = s.counts[i].saturating_add(c);
+                        }
+                    }
+                }
+            }
+        }
+        s
+    }
+}
+
+/// The process-global instruments, allocated statically (≈1.5 KiB).
+static HISTS: [Histogram; N_HISTS] = [const { Histogram::new() }; N_HISTS];
+
+/// One global instrument.
+pub fn hist(kind: HistKind) -> &'static Histogram {
+    &HISTS[kind as usize]
+}
+
+/// Record a sample into a global instrument; free when recording is
+/// off (one relaxed load, like the event macros).
+#[inline]
+pub fn record(kind: HistKind, v: u64) {
+    if super::COMPILED && super::enabled() {
+        hist(kind).record(v);
+    }
+}
+
+/// Record `now - start_ns` into a global instrument when `start_ns`
+/// came from a live [`super::span_begin`] (0 means recording was off).
+#[inline]
+pub fn record_since(kind: HistKind, start_ns: u64) {
+    if start_ns > 0 && super::COMPILED && super::enabled() {
+        hist(kind).record(super::now_ns().saturating_sub(start_ns));
+    }
+}
+
+/// Snapshots of every non-empty global instrument (emission side).
+pub fn snapshots() -> Vec<(HistKind, HistSnapshot)> {
+    KINDS
+        .iter()
+        .filter_map(|&k| {
+            let s = hist(k).snapshot();
+            if s.is_empty() {
+                None
+            } else {
+                Some((k, s))
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Json;
+
+    #[test]
+    fn buckets_partition_the_u64_range() {
+        // Every value falls in exactly the bucket whose [lo, hi) range
+        // contains it, and the ranges tile without gaps.
+        for v in [0u64, 1, 2, 3, 7, 8, 1023, 1024, u64::MAX / 2, u64::MAX] {
+            let i = bucket_of(v);
+            assert!(v >= bucket_lo(i), "v {v} below bucket {i} lo");
+            if i < BUCKETS - 1 {
+                assert!(v < bucket_hi(i), "v {v} beyond bucket {i} hi");
+            }
+        }
+        for i in 1..BUCKETS - 1 {
+            assert_eq!(bucket_hi(i), bucket_lo(i + 1), "gap at bucket {i}");
+        }
+    }
+
+    #[test]
+    fn record_snapshot_quantile_roundtrip() {
+        let h = Histogram::new();
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.sum, 500500);
+        let p50 = s.quantile(0.5);
+        // Log2 buckets bound quantiles to a factor of 2.
+        assert!((250..=1024).contains(&p50), "p50 {p50}");
+        assert!(s.quantile(1.0) >= 512);
+        assert_eq!(HistSnapshot::new().quantile(0.5), 0);
+    }
+
+    #[test]
+    fn saturating_counters_never_wrap() {
+        let mut s = HistSnapshot::new();
+        s.count = u64::MAX - 1;
+        s.counts[3] = u64::MAX;
+        s.record(5);
+        s.record(5);
+        assert_eq!(s.count, u64::MAX);
+        assert_eq!(s.counts[3], u64::MAX);
+        let other = s.clone();
+        s.merge(&other);
+        assert_eq!(s.count, u64::MAX, "merge must saturate too");
+    }
+
+    #[test]
+    fn wire_line_roundtrips_through_the_parser() {
+        let mut s = HistSnapshot::new();
+        for v in [0u64, 3, 3, 900, 70_000] {
+            s.record(v);
+        }
+        let line = s.wire_line(2, HistKind::ChunkWait);
+        let doc = Json::parse(&line).expect("hist line parses");
+        assert_eq!(doc.get("schema").unwrap().as_str(), Some("trace_hist_v1"));
+        assert_eq!(doc.get("hist").unwrap().as_str(), Some("chunk_arrive_wait_ns"));
+        assert_eq!(doc.get("rank").unwrap().as_usize(), Some(2));
+        let back = HistSnapshot::from_doc(&doc);
+        assert_eq!(back, s);
+    }
+
+    #[test]
+    fn hist_names_roundtrip() {
+        for k in KINDS {
+            assert_eq!(hist_from_name(hist_name(k)), Some(k));
+        }
+        assert_eq!(hist_from_name("nope"), None);
+    }
+}

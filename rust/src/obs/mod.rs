@@ -25,8 +25,11 @@
 //! ([`report`]) live in submodules; recording stays here so the hot
 //! layers only pull in this file's symbols.
 
+pub mod analyze;
+pub mod causal;
 pub mod emit;
 pub mod fold;
+pub mod hist;
 pub mod report;
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -482,6 +485,11 @@ pub fn record(kind: EventKind, tag: u64, peer: u32, a: u64, b: u64) {
 pub fn record_span(kind: EventKind, start_ns: u64, tag: u64, peer: u32, a: u64, b: u64) {
     let now = now_ns();
     let rank = current_rank().map(|r| r as u32).unwrap_or(u32::MAX);
+    if kind == EventKind::CollOp && start_ns > 0 {
+        // Every collective round/group-call span also feeds the O(1)
+        // round-time histogram, which survives ring wrap.
+        hist::hist(hist::HistKind::CollRound).record(now.saturating_sub(start_ns));
+    }
     recorder().record(Event {
         t_ns: if start_ns > 0 { start_ns } else { now },
         dur_ns: if start_ns > 0 { now.saturating_sub(start_ns) } else { 0 },

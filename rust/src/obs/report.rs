@@ -7,8 +7,9 @@
 //! fold in memory bounded by the largest line.
 
 use super::fold::{phase_name, FoldStream, TraceFold};
-use super::kind_from_name;
+use super::{hist, kind_from_name};
 use crate::json::Json;
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::io::{Read, Write};
 
@@ -45,6 +46,13 @@ pub fn render_summary(fold: &TraceFold) -> String {
         fold.lines,
         dropped
     );
+    if fold.unknown_kinds > 0 {
+        let _ = writeln!(
+            out,
+            "unknown_kinds: {} event(s) carry a kind this build doesn't know (schema drift)",
+            fold.unknown_kinds
+        );
+    }
     let _ = writeln!(out, "\n{:>6} {:>10} {:>9} {:>12}", "rank", "events", "dropped", "wall_s");
     for (rank, agg) in &fold.ranks {
         let _ = writeln!(
@@ -106,21 +114,76 @@ pub fn render_summary(fold: &TraceFold) -> String {
             );
         }
     }
+    // Runtime histograms, merged across ranks.
+    let mut hists: BTreeMap<&str, super::hist::HistSnapshot> = BTreeMap::new();
+    for agg in fold.ranks.values() {
+        for (name, snap) in &agg.hists {
+            hists
+                .entry(name.as_str())
+                .or_insert_with(super::hist::HistSnapshot::new)
+                .merge(snap);
+        }
+    }
+    if !hists.is_empty() {
+        let _ = writeln!(
+            out,
+            "\n{:<20} {:>10} {:>14} {:>14} {:>14}",
+            "hist", "count", "p50_ns", "p95_ns", "p99_ns"
+        );
+        for (name, h) in &hists {
+            let _ = writeln!(
+                out,
+                "{:<20} {:>10} {:>14} {:>14} {:>14}",
+                name,
+                h.count,
+                h.quantile(0.50),
+                h.quantile(0.95),
+                h.quantile(0.99)
+            );
+        }
+    }
     out
 }
 
+/// What `--check` found: counts plus non-fatal warnings (timestamp
+/// regressions, anchor skew) that would otherwise surface as silently
+/// garbled merges.
+#[derive(Debug, Default)]
+pub struct CheckReport {
+    pub lines: usize,
+    pub events: usize,
+    /// `trace_hist_v1` lines seen.
+    pub hists: usize,
+    pub warnings: Vec<String>,
+}
+
+/// Anchor offsets larger than this are suspicious: processes of one
+/// run start within seconds of each other, so a minute-scale gap
+/// means a stale file or a badly skewed wall clock got mixed in.
+const ANCHOR_SKEW_WARN_NS: u64 = 60_000_000_000;
+
 /// Strictly validate trace files line by line. Every line must parse
 /// as JSON and carry a known schema; event lines must name a known
-/// kind. Returns `(lines, events)`.
-pub fn check_files(paths: &[String]) -> Result<(usize, usize), String> {
-    let mut lines = 0usize;
-    let mut events = 0usize;
+/// kind; hist lines a known histogram. Per-(file, rank) timestamp
+/// monotonicity and cross-rank anchor skew are checked too, but those
+/// produce [`CheckReport::warnings`] naming the offending rank rather
+/// than errors — the files are still mergeable, just suspect.
+pub fn check_files(paths: &[String]) -> Result<CheckReport, String> {
+    let mut report = CheckReport::default();
+    // Opening wall anchor per rank, across all files.
+    let mut anchors: BTreeMap<i64, u64> = BTreeMap::new();
     for path in paths {
         let mut f = std::fs::File::open(path).map_err(|e| format!("{path}: {e}"))?;
         let mut buf = vec![0u8; READ_CHUNK];
         let mut line = Vec::new();
         let mut lineno = 0usize;
-        let mut check_line = |line: &[u8], lineno: usize| -> Result<bool, String> {
+        // Last t_ns per rank in THIS file; ranks already flagged.
+        let mut last_t: BTreeMap<i64, u64> = BTreeMap::new();
+        let mut flagged: std::collections::BTreeSet<i64> = Default::default();
+        let mut check_line = |line: &[u8],
+                              lineno: usize,
+                              report: &mut CheckReport|
+         -> Result<bool, String> {
             let text = std::str::from_utf8(line)
                 .map_err(|_| format!("{path}:{lineno}: not utf-8"))?;
             if text.trim().is_empty() {
@@ -128,8 +191,15 @@ pub fn check_files(paths: &[String]) -> Result<(usize, usize), String> {
             }
             let doc = Json::parse(text.trim())
                 .map_err(|e| format!("{path}:{lineno}: {e}"))?;
+            let rank =
+                doc.get("rank").and_then(|r| r.as_f64()).map(|r| r as i64).unwrap_or(-1);
             match doc.get("schema").and_then(|s| s.as_str()) {
-                Some("trace_meta_v1") => Ok(false),
+                Some("trace_meta_v1") => {
+                    if let Some(w) = doc.get("wall_anchor_ns").and_then(|v| v.as_f64()) {
+                        anchors.entry(rank).or_insert(w as u64);
+                    }
+                    Ok(false)
+                }
                 Some("trace_event_v1") => {
                     let kind = doc
                         .get("kind")
@@ -142,7 +212,36 @@ pub fn check_files(paths: &[String]) -> Result<(usize, usize), String> {
                             return Err(format!("{path}:{lineno}: event missing {field}"));
                         }
                     }
+                    let t_ns =
+                        doc.get("t_ns").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                    // The ring drains in record order, so a backward
+                    // step within one rank's stream means a garbled
+                    // merge (or a clock that went backward).
+                    let last = last_t.entry(rank).or_insert(t_ns);
+                    if t_ns < *last && flagged.insert(rank) {
+                        report.warnings.push(format!(
+                            "{path}:{lineno}: rank {rank} timestamps regress \
+                             ({t_ns} < {last}) — stream is not monotonic"
+                        ));
+                    }
+                    *last = (*last).max(t_ns);
                     Ok(true)
+                }
+                Some("trace_hist_v1") => {
+                    let name = doc
+                        .get("hist")
+                        .and_then(|h| h.as_str())
+                        .ok_or_else(|| format!("{path}:{lineno}: hist line without name"))?;
+                    hist::hist_from_name(name).ok_or_else(|| {
+                        format!("{path}:{lineno}: unknown histogram '{name}'")
+                    })?;
+                    for field in ["rank", "count", "sum"] {
+                        if doc.get(field).and_then(|v| v.as_f64()).is_none() {
+                            return Err(format!("{path}:{lineno}: hist missing {field}"));
+                        }
+                    }
+                    report.hists += 1;
+                    Ok(false)
                 }
                 Some(s) => Err(format!("{path}:{lineno}: unknown schema '{s}'")),
                 None => Err(format!("{path}:{lineno}: line without schema")),
@@ -156,11 +255,11 @@ pub fn check_files(paths: &[String]) -> Result<(usize, usize), String> {
             for &b in &buf[..n] {
                 if b == b'\n' {
                     lineno += 1;
-                    if check_line(&line, lineno)? {
-                        events += 1;
+                    if check_line(&line, lineno, &mut report)? {
+                        report.events += 1;
                     }
                     if !line.is_empty() {
-                        lines += 1;
+                        report.lines += 1;
                     }
                     line.clear();
                 } else {
@@ -170,13 +269,31 @@ pub fn check_files(paths: &[String]) -> Result<(usize, usize), String> {
         }
         if !line.is_empty() {
             lineno += 1;
-            if check_line(&line, lineno)? {
-                events += 1;
+            if check_line(&line, lineno, &mut report)? {
+                report.events += 1;
             }
-            lines += 1;
+            report.lines += 1;
         }
     }
-    Ok((lines, events))
+    // Cross-rank anchor skew: every rank of one run starts within
+    // seconds; a minute-plus outlier is a stale or foreign file.
+    if anchors.len() > 1 {
+        let median = {
+            let mut v: Vec<u64> = anchors.values().copied().collect();
+            v.sort_unstable();
+            v[v.len() / 2]
+        };
+        for (&rank, &a) in &anchors {
+            if a.abs_diff(median) > ANCHOR_SKEW_WARN_NS {
+                report.warnings.push(format!(
+                    "rank {rank} wall anchor is {:.1}s from the median — stale or \
+                     foreign trace file?",
+                    a.abs_diff(median) as f64 / 1e9
+                ));
+            }
+        }
+    }
+    Ok(report)
 }
 
 /// Export the traces as one Chrome `trace_event` JSON document
@@ -313,12 +430,76 @@ mod tests {
         let paths = vec![path.clone()];
         let fold = fold_files(&paths).unwrap();
         assert_eq!(fold.total_events(), 2);
-        let (lines, events) = check_files(&paths).unwrap();
-        assert_eq!((lines, events), (3, 2));
+        let rep = check_files(&paths).unwrap();
+        assert_eq!((rep.lines, rep.events), (3, 2));
+        assert!(rep.warnings.is_empty(), "{:?}", rep.warnings);
         let summary = render_summary(&fold);
         assert!(summary.contains("remap_exec"));
         assert!(summary.contains("pool_miss"));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn check_accepts_hist_lines_and_folds_them() {
+        let path = tmp("trace_report_hist");
+        std::fs::write(
+            &path,
+            "{\"schema\":\"trace_meta_v1\",\"rank\":0,\"wall_anchor_ns\":1}\n\
+             {\"schema\":\"trace_hist_v1\",\"rank\":0,\"hist\":\"coll_round_ns\",\
+              \"count\":3,\"sum\":21,\"buckets\":[[3,3]]}\n",
+        )
+        .unwrap();
+        let rep = check_files(&[path.clone()]).unwrap();
+        assert_eq!(rep.hists, 1);
+        assert_eq!(rep.events, 0);
+        let fold = fold_files(&[path.clone()]).unwrap();
+        let summary = render_summary(&fold);
+        assert!(summary.contains("coll_round_ns"), "{summary}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn check_warns_on_timestamp_regression_naming_the_rank() {
+        let path = tmp("trace_report_mono");
+        std::fs::write(
+            &path,
+            "{\"schema\":\"trace_event_v1\",\"kind\":\"mark\",\"rank\":3,\"t_ns\":100,\
+              \"dur_ns\":0,\"a\":0,\"b\":0}\n\
+             {\"schema\":\"trace_event_v1\",\"kind\":\"mark\",\"rank\":3,\"t_ns\":40,\
+              \"dur_ns\":0,\"a\":0,\"b\":0}\n",
+        )
+        .unwrap();
+        let rep = check_files(&[path.clone()]).unwrap();
+        assert_eq!(rep.warnings.len(), 1, "{:?}", rep.warnings);
+        assert!(rep.warnings[0].contains("rank 3"), "{}", rep.warnings[0]);
+        assert!(rep.warnings[0].contains("not monotonic"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn check_warns_on_anchor_skew_naming_the_rank() {
+        let a = tmp("trace_report_skew_a");
+        let b = tmp("trace_report_skew_b");
+        std::fs::write(
+            &a,
+            "{\"schema\":\"trace_meta_v1\",\"rank\":0,\"wall_anchor_ns\":1000}\n\
+             {\"schema\":\"trace_meta_v1\",\"rank\":2,\"wall_anchor_ns\":2000}\n",
+        )
+        .unwrap();
+        // Rank 1's anchor is ~2 minutes from the others: a stale file.
+        std::fs::write(
+            &b,
+            "{\"schema\":\"trace_meta_v1\",\"rank\":1,\"wall_anchor_ns\":120000000001}\n",
+        )
+        .unwrap();
+        let rep = check_files(&[a.clone(), b.clone()]).unwrap();
+        assert!(
+            rep.warnings.iter().any(|w| w.contains("rank 1") && w.contains("anchor")),
+            "{:?}",
+            rep.warnings
+        );
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
     }
 
     #[test]

@@ -1,0 +1,314 @@
+//! `repro bench-diff` — the perf regression gate.
+//!
+//! Compares two same-schema JSON documents (`bench_remap_v1`,
+//! `bench_collective_v1`, `bench_overlap_v1`, `analysis_v1`, ...)
+//! field by field. Documents are flattened to `path → number` maps:
+//! objects join with `.`, arrays of objects key by their identifying
+//! field (`coll`, `op`, `phase`, `np`, ...) so rows still line up
+//! when order changes, and everything else keys by index. Whether a
+//! change is a *regression* follows from the field's name — bandwidth
+//! and hit rates should not fall, latencies and message counts should
+//! not rise — and unclassifiable fields are reported but never gated.
+
+use crate::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// How a metric is judged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    HigherBetter,
+    LowerBetter,
+    /// Informational only — never a regression.
+    Neutral,
+}
+
+/// Classify a flattened path by its final segment. The convention is
+/// already enforced by the emitters: rates end in `*_per_sec` /
+/// `*efficiency*` / `*hit*`, costs end in `*_ns` / `*_us` /
+/// `*seconds` / `*messages*` / `*miss*` / `*dropped*`.
+pub fn direction_of(path: &str) -> Direction {
+    let seg = path.rsplit('.').next().unwrap_or(path);
+    let higher = ["per_sec", "hit", "efficiency", "speedup", "bandwidth"];
+    if higher.iter().any(|h| seg.contains(h)) {
+        return Direction::HigherBetter;
+    }
+    let lower_suffix = ["_ns", "_us", "_ms", "seconds"];
+    let lower_any = ["latency", "messages", "msgs", "miss", "dropped", "skew", "unmatched"];
+    if lower_suffix.iter().any(|s| seg.ends_with(s))
+        || lower_any.iter().any(|s| seg.contains(s))
+    {
+        return Direction::LowerBetter;
+    }
+    Direction::Neutral
+}
+
+/// Keys that identify a row of an array-of-objects (first match
+/// wins): flattening by them keeps rows aligned across reorderings.
+const ROW_KEYS: [&str; 8] = ["coll", "op", "phase", "hist", "label", "kind", "np", "rank"];
+
+fn row_key(item: &Json) -> Option<String> {
+    let m = item.obj()?;
+    for k in ROW_KEYS {
+        if let Some(v) = m.get(k) {
+            if let Some(s) = v.as_str() {
+                return Some(format!("{k}={s}"));
+            }
+            if let Some(n) = v.as_f64() {
+                return Some(format!("{k}={n}"));
+            }
+        }
+    }
+    None
+}
+
+/// Flatten every numeric leaf of `doc` into `out` under `prefix`.
+fn flatten(doc: &Json, prefix: &str, out: &mut BTreeMap<String, f64>) {
+    if let Some(v) = doc.as_f64() {
+        out.insert(prefix.to_string(), v);
+        return;
+    }
+    if let Some(m) = doc.obj() {
+        for (k, v) in m {
+            let p = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+            flatten(v, &p, out);
+        }
+        return;
+    }
+    if let Some(items) = doc.items() {
+        for (i, item) in items.iter().enumerate() {
+            let key = row_key(item).unwrap_or_else(|| i.to_string());
+            let p = if prefix.is_empty() { key.clone() } else { format!("{prefix}.{key}") };
+            flatten(item, &p, out);
+        }
+    }
+    // Strings / bools / nulls carry no comparable value.
+}
+
+/// One compared metric.
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub path: String,
+    pub old: f64,
+    pub new: f64,
+    /// Signed relative change in percent (positive = value went up);
+    /// `None` when the baseline is 0.
+    pub delta_pct: Option<f64>,
+    pub direction: Direction,
+    /// Regressed beyond the threshold.
+    pub regressed: bool,
+}
+
+/// The full field-by-field comparison.
+#[derive(Debug)]
+pub struct Diff {
+    pub schema: String,
+    pub rows: Vec<Row>,
+    /// Paths present in only one document.
+    pub only_old: Vec<String>,
+    pub only_new: Vec<String>,
+    pub max_regress_pct: f64,
+}
+
+impl Diff {
+    pub fn regressions(&self) -> usize {
+        self.rows.iter().filter(|r| r.regressed).count()
+    }
+
+    /// The comparison table: regressions first, then the largest
+    /// moves; unchanged fields are summarized, not listed.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "bench-diff: schema {}  {} field(s)  {} regression(s) (threshold {}%)",
+            self.schema,
+            self.rows.len(),
+            self.regressions(),
+            self.max_regress_pct
+        );
+        let mut shown: Vec<&Row> = self
+            .rows
+            .iter()
+            .filter(|r| r.delta_pct.map(|d| d.abs() > 1e-9).unwrap_or(false))
+            .collect();
+        shown.sort_by(|a, b| {
+            b.regressed.cmp(&a.regressed).then(
+                b.delta_pct
+                    .unwrap_or(0.0)
+                    .abs()
+                    .partial_cmp(&a.delta_pct.unwrap_or(0.0).abs())
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+        });
+        if shown.is_empty() {
+            let _ = writeln!(s, "no changed metrics");
+        } else {
+            let _ = writeln!(
+                s,
+                "{:<52} {:>14} {:>14} {:>9}  {}",
+                "metric", "old", "new", "delta", "verdict"
+            );
+            for r in shown {
+                let verdict = if r.regressed {
+                    "REGRESSED"
+                } else {
+                    match r.direction {
+                        Direction::Neutral => "-",
+                        _ => "ok",
+                    }
+                };
+                let _ = writeln!(
+                    s,
+                    "{:<52} {:>14.4} {:>14.4} {:>8.1}%  {}",
+                    r.path,
+                    r.old,
+                    r.new,
+                    r.delta_pct.unwrap_or(0.0),
+                    verdict
+                );
+            }
+        }
+        for p in &self.only_old {
+            let _ = writeln!(s, "only in OLD: {p}");
+        }
+        for p in &self.only_new {
+            let _ = writeln!(s, "only in NEW: {p}");
+        }
+        s
+    }
+}
+
+/// Compare two parsed documents. Errors when the schemas differ —
+/// cross-schema diffs line up nothing and would silently pass.
+pub fn diff_docs(old: &Json, new: &Json, max_regress_pct: f64) -> Result<Diff, String> {
+    let schema_of = |d: &Json| {
+        d.get("schema").and_then(|s| s.as_str()).map(str::to_string).unwrap_or_default()
+    };
+    let (so, sn) = (schema_of(old), schema_of(new));
+    if so != sn {
+        return Err(format!("schema mismatch: OLD is '{so}', NEW is '{sn}'"));
+    }
+    let mut fo = BTreeMap::new();
+    let mut fn_ = BTreeMap::new();
+    flatten(old, "", &mut fo);
+    flatten(new, "", &mut fn_);
+    let mut rows = Vec::new();
+    let mut only_old = Vec::new();
+    for (path, &ov) in &fo {
+        let Some(&nv) = fn_.get(path) else {
+            only_old.push(path.clone());
+            continue;
+        };
+        let direction = direction_of(path);
+        let delta_pct = if ov != 0.0 { Some(100.0 * (nv - ov) / ov.abs()) } else { None };
+        let regressed = match (direction, delta_pct) {
+            (Direction::HigherBetter, Some(d)) => d < -max_regress_pct,
+            (Direction::LowerBetter, Some(d)) => d > max_regress_pct,
+            _ => false,
+        };
+        rows.push(Row { path: path.clone(), old: ov, new: nv, delta_pct, direction, regressed });
+    }
+    let only_new: Vec<String> =
+        fn_.keys().filter(|k| !fo.contains_key(*k)).cloned().collect();
+    Ok(Diff { schema: so, rows, only_old, only_new, max_regress_pct })
+}
+
+/// Load, parse, and compare two JSON files.
+pub fn diff_files(old_path: &str, new_path: &str, max_regress_pct: f64) -> Result<Diff, String> {
+    let load = |p: &str| -> Result<Json, String> {
+        let text = std::fs::read_to_string(p).map_err(|e| format!("{p}: {e}"))?;
+        Json::parse(text.trim()).map_err(|e| format!("{p}: {e}"))
+    };
+    diff_docs(&load(old_path)?, &load(new_path)?, max_regress_pct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direction_classification_follows_field_names() {
+        assert_eq!(direction_of("ops.remap.gb_per_sec"), Direction::HigherBetter);
+        assert_eq!(direction_of("pool.hit_rate"), Direction::HigherBetter);
+        assert_eq!(direction_of("overlap_efficiency"), Direction::HigherBetter);
+        assert_eq!(direction_of("total_seconds"), Direction::LowerBetter);
+        assert_eq!(direction_of("latency_us"), Direction::LowerBetter);
+        assert_eq!(direction_of("wire.messages"), Direction::LowerBetter);
+        assert_eq!(direction_of("dropped"), Direction::LowerBetter);
+        // "ranks" must NOT be misread as a *_ns cost.
+        assert_eq!(direction_of("ranks"), Direction::Neutral);
+        assert_eq!(direction_of("np"), Direction::Neutral);
+    }
+
+    #[test]
+    fn bandwidth_drop_beyond_threshold_regresses() {
+        let old = Json::parse(
+            "{\"schema\":\"bench_overlap_v1\",\"remap\":{\"gb_per_sec\":10.0,\
+             \"total_seconds\":1.0}}",
+        )
+        .unwrap();
+        let new = Json::parse(
+            "{\"schema\":\"bench_overlap_v1\",\"remap\":{\"gb_per_sec\":8.0,\
+             \"total_seconds\":1.01}}",
+        )
+        .unwrap();
+        let d = diff_docs(&old, &new, 10.0).unwrap();
+        // -20% bandwidth regresses; +1% seconds is within threshold.
+        assert_eq!(d.regressions(), 1);
+        let r = d.rows.iter().find(|r| r.path.contains("gb_per_sec")).unwrap();
+        assert!(r.regressed);
+        assert!(d.render().contains("REGRESSED"));
+    }
+
+    #[test]
+    fn improvement_and_neutral_fields_never_regress() {
+        let old = Json::parse(
+            "{\"schema\":\"bench_remap_v1\",\"gb_per_sec\":5.0,\"messages\":100,\"np\":4}",
+        )
+        .unwrap();
+        let new = Json::parse(
+            "{\"schema\":\"bench_remap_v1\",\"gb_per_sec\":9.0,\"messages\":50,\"np\":8}",
+        )
+        .unwrap();
+        let d = diff_docs(&old, &new, 10.0).unwrap();
+        assert_eq!(d.regressions(), 0, "{:?}", d.rows);
+    }
+
+    #[test]
+    fn arrays_of_objects_align_by_row_key_not_order() {
+        let old = Json::parse(
+            "{\"schema\":\"bench_collective_v1\",\"results\":[\
+             {\"coll\":\"star\",\"latency_us\":10.0},\
+             {\"coll\":\"ring\",\"latency_us\":20.0}]}",
+        )
+        .unwrap();
+        // Same rows, reversed order, ring got 3x slower.
+        let new = Json::parse(
+            "{\"schema\":\"bench_collective_v1\",\"results\":[\
+             {\"coll\":\"ring\",\"latency_us\":60.0},\
+             {\"coll\":\"star\",\"latency_us\":10.0}]}",
+        )
+        .unwrap();
+        let d = diff_docs(&old, &new, 10.0).unwrap();
+        assert_eq!(d.regressions(), 1);
+        let r = d.rows.iter().find(|r| r.regressed).unwrap();
+        assert!(r.path.contains("coll=ring"), "{}", r.path);
+    }
+
+    #[test]
+    fn schema_mismatch_is_an_error() {
+        let a = Json::parse("{\"schema\":\"bench_remap_v1\"}").unwrap();
+        let b = Json::parse("{\"schema\":\"analysis_v1\"}").unwrap();
+        assert!(diff_docs(&a, &b, 10.0).unwrap_err().contains("schema mismatch"));
+    }
+
+    #[test]
+    fn zero_baseline_is_reported_not_gated() {
+        let old = Json::parse("{\"schema\":\"x\",\"dropped\":0}").unwrap();
+        let new = Json::parse("{\"schema\":\"x\",\"dropped\":7}").unwrap();
+        let d = diff_docs(&old, &new, 10.0).unwrap();
+        assert_eq!(d.regressions(), 0);
+        assert!(d.rows[0].delta_pct.is_none());
+    }
+}

@@ -4,6 +4,7 @@
 //! and a rendered table so `repro report <id>` prints the same
 //! rows/series the paper shows.
 
+pub mod bench_diff;
 pub mod bench_json;
 pub mod fig3;
 pub mod fig4;

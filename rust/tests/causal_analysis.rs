@@ -1,0 +1,422 @@
+//! Acceptance for the causal analysis plane: histogram properties
+//! (merge of splits equals the whole, monotone quantiles, saturating
+//! counters), cross-rank message matching on synthetic traces with
+//! skewed anchors and ring-wrap losses, and an end-to-end in-process
+//! four-rank traced run whose every `chunk_send` matches an arrive,
+//! whose critical path covers the wall span, and whose per-rank
+//! busy/idle times partition the wall exactly.
+
+use distarray::collective::{Collective, ReduceOp, TagSpace};
+use distarray::comm::{tags, ChannelHub, Transport};
+use distarray::darray::Darray;
+use distarray::dmap::Dmap;
+use distarray::json::Json;
+use distarray::obs::analyze::{analyze_files, AnalyzeOpts};
+use distarray::obs::causal::{critical_path, match_edges, CEvent, Streams};
+use distarray::obs::hist::{bucket_hi, bucket_of, HistSnapshot};
+use distarray::obs::{self, EventKind};
+use distarray::prop::{forall, Rng};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::thread;
+
+/// obs state (gate, ring, sink, histograms) is process-global; the
+/// test that touches it runs serialized with any future siblings.
+fn obs_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+}
+
+fn tmp(name: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("{name}_{}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+// ---------------------------------------------------------------------------
+// Histogram properties
+// ---------------------------------------------------------------------------
+
+fn random_value(rng: &mut Rng) -> u64 {
+    // Shift by a random amount so samples spread over every bucket
+    // scale instead of clustering at 64-bit magnitudes.
+    rng.next_u64() >> rng.below(64)
+}
+
+#[test]
+fn hist_merge_of_random_splits_equals_the_whole() {
+    forall(50, 0x5EED_0001, |rng| {
+        let n = rng.range(1, 200);
+        let mut whole = HistSnapshot::new();
+        let mut left = HistSnapshot::new();
+        let mut right = HistSnapshot::new();
+        for _ in 0..n {
+            let v = random_value(rng);
+            whole.record(v);
+            if rng.bool() {
+                left.record(v);
+            } else {
+                right.record(v);
+            }
+        }
+        left.merge(&right);
+        assert_eq!(left, whole, "merge of a random split must equal the whole");
+    });
+}
+
+#[test]
+fn hist_quantiles_are_monotone_and_bucket_bounded() {
+    forall(50, 0x5EED_0002, |rng| {
+        let mut h = HistSnapshot::new();
+        let n = rng.range(1, 300);
+        let mut max = 0u64;
+        for _ in 0..n {
+            let v = random_value(rng);
+            max = max.max(v);
+            h.record(v);
+        }
+        let mut prev = 0u64;
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            let x = h.quantile(q);
+            assert!(x >= prev, "quantiles must be monotone: q{q} gave {x} < {prev}");
+            prev = x;
+        }
+        // Log2 buckets bound any quantile by the max sample's bucket.
+        assert!(h.quantile(1.0) <= bucket_hi(bucket_of(max)));
+    });
+}
+
+#[test]
+fn hist_counters_saturate_instead_of_wrapping() {
+    let mut a = HistSnapshot::new();
+    a.count = u64::MAX - 2;
+    a.sum = u64::MAX - 2;
+    a.counts[bucket_of(7)] = u64::MAX - 2;
+    let b = a.clone();
+    a.merge(&b);
+    assert_eq!(a.count, u64::MAX);
+    assert_eq!(a.sum, u64::MAX);
+    assert_eq!(a.counts[bucket_of(7)], u64::MAX);
+    a.record(7);
+    assert_eq!(a.count, u64::MAX, "record at the ceiling must stick, not wrap");
+}
+
+// ---------------------------------------------------------------------------
+// Causal matching on synthetic traces
+// ---------------------------------------------------------------------------
+
+fn send(rank: i64, peer: i64, at_ns: u64, step: u64) -> CEvent {
+    CEvent {
+        t_ns: at_ns,
+        dur_ns: 0,
+        at_ns,
+        kind: EventKind::ChunkSend,
+        rank,
+        peer,
+        ns: 8,
+        epoch: 1,
+        step,
+        bytes: 4096,
+    }
+}
+
+fn arrive(rank: i64, peer: i64, at_ns: u64, step: u64) -> CEvent {
+    CEvent { kind: EventKind::ChunkArrive, rank, peer, ..send(rank, peer, at_ns, step) }
+}
+
+#[test]
+fn random_traffic_matching_accounts_for_every_send() {
+    forall(30, 0x5EED_0003, |rng| {
+        let mut s = Streams::default();
+        let n = rng.range(1, 40);
+        let mut expect_matched = 0u64;
+        let mut expect_unmatched = 0u64;
+        for i in 0..n {
+            let from = rng.below(4) as i64;
+            let to = (from + 1 + rng.below(3) as i64) % 4;
+            let t = (i as u64) * 100 + rng.below(50) as u64;
+            s.events.push(send(from, to, t, i as u64));
+            if rng.below(10) < 8 {
+                s.events.push(arrive(to, from, t + 30, i as u64));
+                expect_matched += 1;
+            } else {
+                // The arrive was lost to ring wrap: a partial edge.
+                expect_unmatched += 1;
+            }
+        }
+        let g = match_edges(&s);
+        assert_eq!(g.edges.len() as u64, expect_matched);
+        assert_eq!(g.unmatched_sends, expect_unmatched);
+        assert_eq!(g.unmatched_arrives, 0);
+        // The walk never panics and stays within the global span.
+        let cp = critical_path(&s, &g);
+        let start = s.events.iter().map(|e| e.at_ns).min().unwrap();
+        let end = s.events.iter().map(|e| e.at_ns + e.dur_ns).max().unwrap();
+        assert_eq!((cp.start_ns, cp.end_ns), (start, end));
+        for seg in &cp.segments {
+            assert!(seg.t0_ns >= start && seg.t1_ns <= end && seg.t1_ns >= seg.t0_ns);
+        }
+    });
+}
+
+/// One rank's trace file: opening meta (wall anchor), events, closing
+/// meta (drop count) — the exact shape `close_sink` writes.
+fn write_rank_file(path: &str, rank: i64, anchor: u64, events: &[String], dropped: u64) {
+    let mut s =
+        format!("{{\"schema\":\"trace_meta_v1\",\"rank\":{rank},\"wall_anchor_ns\":{anchor}}}\n");
+    for line in events {
+        s.push_str(line);
+        s.push('\n');
+    }
+    s.push_str(&format!(
+        "{{\"schema\":\"trace_meta_v1\",\"rank\":{rank},\"dropped\":{dropped},\"recorded\":9}}\n"
+    ));
+    std::fs::write(path, s).unwrap();
+}
+
+fn event_line(kind: &str, rank: i64, t_ns: u64, dur_ns: u64, peer: i64, step: u64) -> String {
+    format!(
+        "{{\"schema\":\"trace_event_v1\",\"kind\":\"{kind}\",\"rank\":{rank},\"t_ns\":{t_ns},\
+         \"dur_ns\":{dur_ns},\"peer\":{peer},\"ns\":8,\"epoch\":1,\"step\":{step},\
+         \"bytes\":4096,\"chunk\":{step}}}"
+    )
+}
+
+/// Four per-rank files forming a known pipeline chain
+/// 0 → 1 → 2 → 3, with rank 2's wall anchor deliberately 6 µs low —
+/// the edge into rank 2 gets a negative latency, which must surface
+/// as a skew estimate and a warning, never as a crash.
+#[test]
+fn skewed_anchors_surface_as_a_skew_estimate_and_warning() {
+    let mk = |r: usize| tmp(&format!("causal_skew_r{r}"));
+    let base = 1_000_000u64;
+    write_rank_file(
+        &mk(0),
+        0,
+        base,
+        &[
+            event_line("remap_exec", 0, 0, 100, -1, 0),
+            event_line("chunk_send", 0, 100, 0, 1, 0),
+        ],
+        0,
+    );
+    write_rank_file(
+        &mk(1),
+        1,
+        base,
+        &[
+            event_line("chunk_arrive", 1, 130, 10, 0, 0),
+            event_line("remap_exec", 1, 140, 60, -1, 0),
+            event_line("chunk_send", 1, 200, 0, 2, 1),
+        ],
+        0,
+    );
+    write_rank_file(
+        &mk(2),
+        2,
+        base - 6000, // the skewed clock
+        &[
+            event_line("chunk_arrive", 2, 230, 10, 1, 1),
+            event_line("remap_exec", 2, 240, 60, -1, 0),
+            event_line("chunk_send", 2, 300, 0, 3, 2),
+        ],
+        0,
+    );
+    write_rank_file(
+        &mk(3),
+        3,
+        base,
+        &[
+            event_line("chunk_arrive", 3, 330, 10, 2, 2),
+            event_line("remap_exec", 3, 340, 60, -1, 0),
+        ],
+        0,
+    );
+    let files: Vec<String> = (0..4).map(mk).collect();
+    let a = analyze_files(&files, &AnalyzeOpts::default()).unwrap();
+    assert_eq!(a.graph.edges.len(), 3, "all three hops match despite the skew");
+    // Rank 2's arrive lands (aligned) before rank 1's send: the
+    // magnitude is a lower bound on the anchor disagreement.
+    assert_eq!(a.graph.skew_est_ns, 5960);
+    assert_eq!(a.graph.min_latency_ns, 40);
+    assert!(a.graph.skew_exceeds_min_latency());
+    assert!(
+        a.warnings.iter().any(|w| w.contains("clock skew")),
+        "warnings: {:?}",
+        a.warnings
+    );
+    // The path still tiles the whole (aligned) wall span.
+    assert_eq!(a.path.total_ns(), a.wall_ns);
+    let covered: u64 = a.path.segments.iter().map(|s| s.dur_ns()).sum();
+    assert_eq!(covered, a.path.total_ns(), "{:#?}", a.path.segments);
+    let doc = Json::parse(&a.to_json()).expect("analysis_v1 parses");
+    assert_eq!(doc.get("clock_skew_ns_est").unwrap().as_usize(), Some(5960));
+    for f in &files {
+        std::fs::remove_file(f).ok();
+    }
+}
+
+/// A ring-wrapped run: rank 1's arrive line was dropped before the
+/// drain reached it. The matcher degrades to partial edges, counts
+/// the loss, and the analysis warns — nothing panics.
+#[test]
+fn dropped_events_degrade_to_partial_edges_with_warnings() {
+    let mk = |r: usize| tmp(&format!("causal_drop_r{r}"));
+    let base = 2_000_000u64;
+    write_rank_file(
+        &mk(0),
+        0,
+        base,
+        &[
+            event_line("remap_exec", 0, 0, 100, -1, 0),
+            event_line("chunk_send", 0, 100, 0, 1, 0),
+        ],
+        0,
+    );
+    // Rank 1 lost its arrive to ring wrap (dropped=1 in the closer).
+    write_rank_file(
+        &mk(1),
+        1,
+        base,
+        &[
+            event_line("remap_exec", 1, 140, 60, -1, 0),
+            event_line("chunk_send", 1, 200, 0, 2, 1),
+        ],
+        1,
+    );
+    write_rank_file(
+        &mk(2),
+        2,
+        base,
+        &[
+            event_line("chunk_arrive", 2, 230, 10, 1, 1),
+            event_line("remap_exec", 2, 240, 60, -1, 0),
+            event_line("chunk_send", 2, 300, 0, 3, 2),
+        ],
+        0,
+    );
+    write_rank_file(
+        &mk(3),
+        3,
+        base,
+        &[
+            event_line("chunk_arrive", 3, 330, 10, 2, 2),
+            event_line("remap_exec", 3, 340, 60, -1, 0),
+        ],
+        0,
+    );
+    let files: Vec<String> = (0..4).map(mk).collect();
+    let a = analyze_files(&files, &AnalyzeOpts::default()).unwrap();
+    assert_eq!(a.graph.edges.len(), 2);
+    assert_eq!(a.graph.unmatched_sends, 1);
+    assert_eq!(a.streams.total_dropped(), 1);
+    assert!(a.warnings.iter().any(|w| w.contains("ring wrap")), "{:?}", a.warnings);
+    assert!(a.warnings.iter().any(|w| w.contains("no counterpart")), "{:?}", a.warnings);
+    // Render and JSON both survive partial graphs.
+    let _ = a.render();
+    Json::parse(&a.to_json()).expect("analysis_v1 parses");
+    for f in &files {
+        std::fs::remove_file(f).ok();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End to end: traced in-process 4-rank run → analyze
+// ---------------------------------------------------------------------------
+
+/// ISSUE acceptance: on a traced four-rank run, every recorded
+/// `chunk_send` matches its `chunk_arrive` (the datapath instruments
+/// both ends of every hop), the critical path covers at least the
+/// wall span, per-rank busy + idle partition the wall exactly, and
+/// achieved-vs-modeled bandwidth is reported.
+#[test]
+fn four_rank_traced_run_analyzes_end_to_end() {
+    if !obs::COMPILED {
+        return; // obs-off build: nothing to trace by design
+    }
+    let _g = obs_lock();
+    let trace = tmp("causal_e2e_trace");
+    obs::set_rank(0);
+    obs::emit::install_sink(&trace).expect("open trace sink");
+    obs::set_enabled(true);
+
+    let np = 4;
+    let n = 20_000;
+    let hs: Vec<_> = ChannelHub::world(np)
+        .into_iter()
+        .map(|t| {
+            thread::spawn(move || {
+                let pid = t.pid();
+                obs::set_thread_rank(pid);
+                let src =
+                    Darray::from_global_fn(Dmap::block_1d(np), &[n], pid, |g| g as f64);
+                let mut dst = Darray::zeros(Dmap::cyclic_1d(np), &[n], pid);
+                dst.assign_from(&src, &t, 1).unwrap();
+                let coll = Collective::star(np);
+                let local = vec![pid as f64; 64];
+                let sum = coll
+                    .allreduce(&t, TagSpace::packed(tags::NS_COLL, 41), &local, ReduceOp::Sum)
+                    .unwrap();
+                assert_eq!(sum[0], (0..np).map(|p| p as f64).sum::<f64>());
+                obs::clear_thread_rank();
+            })
+        })
+        .collect();
+    for h in hs {
+        h.join().unwrap();
+    }
+
+    obs::set_enabled(false);
+    obs::emit::close_sink();
+
+    let files = vec![trace.clone()];
+    let a = analyze_files(&files, &AnalyzeOpts::default()).expect("trace analyzes");
+
+    // Every recorded send has its matched arrive: chunk hops are
+    // instrumented symmetrically and the ring did not wrap.
+    let sends =
+        a.streams.events.iter().filter(|e| e.kind == EventKind::ChunkSend).count();
+    assert!(sends > 0, "a 4-rank remap must move chunks");
+    assert_eq!(a.graph.edges.len(), sends, "matched edges == chunk_send count");
+    assert_eq!(a.graph.unmatched_sends, 0);
+    assert_eq!(a.graph.unmatched_arrives, 0);
+    assert_eq!(a.streams.total_dropped(), 0);
+
+    // The critical path covers the wall span.
+    assert!(a.path.total_ns() >= a.wall_ns, "{} < {}", a.path.total_ns(), a.wall_ns);
+    assert!(!a.path.segments.is_empty());
+
+    // Busy + idle partition each rank's wall exactly.
+    assert_eq!(a.ranks.len(), np);
+    for r in &a.ranks {
+        assert_eq!(r.busy_ns + r.idle_ns(), r.wall_ns(), "rank {}", r.rank);
+    }
+
+    // Bandwidth is reported on both sides of the comparison.
+    assert!(a.achieved_bw > 0.0);
+    assert!(a.modeled_bw > 0.0, "default era must resolve");
+
+    // The runtime histograms rode the trace file and fold non-empty.
+    let hists = a.merged_hists();
+    assert!(
+        hists.get("chunk_arrive_wait_ns").map(|h| h.count > 0).unwrap_or(false),
+        "chunk-wait histogram missing from trace; got {:?}",
+        hists.keys().collect::<Vec<_>>()
+    );
+    assert!(
+        hists.get("coll_round_ns").map(|h| h.count > 0).unwrap_or(false),
+        "collective-round histogram missing from trace"
+    );
+
+    // The machine document CI consumes round-trips.
+    let doc = Json::parse(&a.to_json()).expect("analysis_v1 parses");
+    assert_eq!(doc.get("schema").unwrap().as_str(), Some("analysis_v1"));
+    assert_eq!(doc.get("matched_edges").unwrap().as_usize(), Some(sends));
+    let per_rank = doc.get("per_rank").unwrap().items().unwrap();
+    assert_eq!(per_rank.len(), np);
+
+    std::fs::remove_file(&trace).ok();
+}

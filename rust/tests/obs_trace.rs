@@ -112,9 +112,11 @@ fn four_rank_traced_run_emits_valid_ndjson_and_chrome_export() {
     // Line-by-line schema validation (what CI runs as `trace-report
     // --check`).
     let files = vec![trace.clone()];
-    let (lines, events) = report::check_files(&files).expect("trace must be schema-valid NDJSON");
+    let check = report::check_files(&files).expect("trace must be schema-valid NDJSON");
+    let (lines, events) = (check.lines, check.events);
     assert!(events > 0, "traced run recorded no events");
     assert!(lines >= events + 2, "expected opening and closing meta lines");
+    assert!(check.warnings.is_empty(), "clean run warned: {:?}", check.warnings);
 
     // Bounded fold: every rank attributed, every instrumented layer
     // present.
