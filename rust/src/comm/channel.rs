@@ -5,7 +5,7 @@
 //! the same semantics the file transport provides across processes.
 
 use super::counter::CommStats;
-use super::{CommError, Result, Tag, Transport};
+use super::{CommError, Result, Tag, Transport, TransportKind};
 use crate::dmap::Pid;
 use std::collections::{HashMap, VecDeque};
 use std::sync::{Arc, Condvar, Mutex};
@@ -67,6 +67,10 @@ impl Transport for ChannelTransport {
 
     fn np(&self) -> usize {
         self.np
+    }
+
+    fn kind(&self) -> Option<TransportKind> {
+        Some(TransportKind::Channel)
     }
 
     fn send(&self, to: Pid, tag: Tag, payload: &[u8]) -> Result<()> {

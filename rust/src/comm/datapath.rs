@@ -112,14 +112,24 @@ pub fn comm_snapshot() -> (u64, u64, u64, u64) {
     STREAM_STATS.snapshot()
 }
 
+/// The transport-kind stamp for a message exchanged with `peer`,
+/// pre-shifted into the top byte of a chunk event's `b` field. Chunk
+/// indices occupy at most 16 bits ([`MAX_CHUNKS`]), so the top byte is
+/// free; 0 means "unknown transport" and the emitter omits the field.
+#[inline]
+fn transport_stamp(t: &dyn Transport, peer: Pid) -> u64 {
+    (t.kind_to(peer).map(|k| k.code()).unwrap_or(0) as u64) << 56
+}
+
 /// Count one landed chunk and record its arrival as a **span** whose
 /// duration is the receiver-side wait: `wait_start` is the
 /// [`span_begin`] stamp taken when the receiver began waiting for
 /// this chunk (0 when recording was off — the event degrades to an
 /// instant). The wait also feeds the chunk-wait histogram, which
-/// survives ring wrap.
+/// survives ring wrap. `stamp` is the [`transport_stamp`] of the
+/// sending peer, carried in `b`'s top byte.
 #[inline]
-fn note_arrival(tag: &ChunkTag, chunk: &ArrivedChunk, wait_start: u64) {
+fn note_arrival(tag: &ChunkTag, chunk: &ArrivedChunk, wait_start: u64, stamp: u64) {
     let wire = chunk.payload().len() + if chunk.chunk_idx == 0 { FRAME_BYTES } else { 0 };
     STREAM_STATS.record_recv(wire);
     record_since(HistKind::ChunkWait, wait_start);
@@ -129,7 +139,7 @@ fn note_arrival(tag: &ChunkTag, chunk: &ArrivedChunk, wait_start: u64) {
         tag: tag.at(chunk.chunk_idx as u64),
         peer: chunk.peer as u32,
         a: wire as u64,
-        b: chunk.chunk_idx as u64
+        b: chunk.chunk_idx as u64 | stamp
     );
 }
 
@@ -137,7 +147,14 @@ fn note_arrival(tag: &ChunkTag, chunk: &ArrivedChunk, wait_start: u64) {
 /// [`ArrivedChunk`] is built). Same wait-span semantics as
 /// [`note_arrival`].
 #[inline]
-fn note_recv_wire(tag: &ChunkTag, from: Pid, chunk_idx: u64, wire: usize, wait_start: u64) {
+fn note_recv_wire(
+    tag: &ChunkTag,
+    from: Pid,
+    chunk_idx: u64,
+    wire: usize,
+    wait_start: u64,
+    stamp: u64,
+) {
     STREAM_STATS.record_recv(wire);
     record_since(HistKind::ChunkWait, wait_start);
     crate::obs_span!(
@@ -146,20 +163,20 @@ fn note_recv_wire(tag: &ChunkTag, from: Pid, chunk_idx: u64, wire: usize, wait_s
         tag: tag.at(chunk_idx),
         peer: from as u32,
         a: wire as u64,
-        b: chunk_idx
+        b: chunk_idx | stamp
     );
 }
 
 /// Count one sent chunk and record its event.
 #[inline]
-fn note_send(tag: &ChunkTag, to: Pid, chunk_idx: u64, wire: usize) {
+fn note_send(tag: &ChunkTag, to: Pid, chunk_idx: u64, wire: usize, stamp: u64) {
     STREAM_STATS.record_send(wire);
     crate::obs_event!(
         EventKind::ChunkSend,
         tag: tag.at(chunk_idx),
         peer: to as u32,
         a: wire as u64,
-        b: chunk_idx
+        b: chunk_idx | stamp
     );
 }
 
@@ -199,8 +216,11 @@ impl ChunkTag {
 }
 
 /// How long a drain waits in total before reporting a timeout
-/// (matches [`Transport::recv`]'s default).
-const RECV_WINDOW: Duration = Duration::from_secs(120);
+/// (matches [`Transport::recv`]'s default — the configurable
+/// [`super::default_recv_timeout`]).
+fn recv_window() -> Duration {
+    super::default_recv_timeout()
+}
 /// Empty sweeps before the drain stops spinning (yield) and starts
 /// sleeping.
 const SPIN_SWEEPS: u32 = 64;
@@ -393,6 +413,7 @@ impl ChunkStream {
         w.put_u64(n_chunks as u64);
         header.restore(w.finish());
 
+        let stamp = transport_stamp(t, to);
         // Cursor over the logical byte space of `parts`; chunks are
         // consecutive, so it only ever advances.
         let mut pi = 0usize;
@@ -420,7 +441,7 @@ impl ChunkStream {
             }
             t.send_parts(to, tag.at(c as u64), &slices)?;
             let wire = (hi - lo) + if c == 0 { FRAME_BYTES } else { 0 };
-            note_send(&tag, to, c as u64, wire);
+            note_send(&tag, to, c as u64, wire, stamp);
         }
         Ok(n_chunks)
     }
@@ -440,12 +461,13 @@ impl ChunkStream {
         tag: ChunkTag,
         next: Option<Pid>,
     ) -> Result<Vec<u8>> {
+        let stamp = transport_stamp(t, from);
         let wait = span_begin();
         let first = t.recv(from, tag.at(0))?;
-        note_recv_wire(&tag, from, 0, first.len(), wait);
+        note_recv_wire(&tag, from, 0, first.len(), wait, stamp);
         if let Some(nx) = next {
             t.send(nx, tag.at(0), &first)?;
-            note_send(&tag, nx, 0, first.len());
+            note_send(&tag, nx, 0, first.len(), transport_stamp(t, nx));
         }
         let (total, n_chunks) = parse_frame(&first)?;
         // Pre-reserve `total` off chunk 0's frame: a multi-chunk
@@ -456,10 +478,10 @@ impl ChunkStream {
         for c in 1..n_chunks {
             let wait = span_begin();
             let chunk = t.recv(from, tag.at(c as u64))?;
-            note_recv_wire(&tag, from, c as u64, chunk.len(), wait);
+            note_recv_wire(&tag, from, c as u64, chunk.len(), wait, stamp);
             if let Some(nx) = next {
                 t.send(nx, tag.at(c as u64), &chunk)?;
-                note_send(&tag, nx, c as u64, chunk.len());
+                note_send(&tag, nx, c as u64, chunk.len(), transport_stamp(t, nx));
             }
             out.extend_from_slice(&chunk);
         }
@@ -514,7 +536,7 @@ impl ChunkStream {
         tag: ChunkTag,
         on_chunk: impl FnMut(ArrivedChunk) -> Result<()>,
     ) -> Result<()> {
-        Self::drain_chunks_window(t, peers, tag, RECV_WINDOW, on_chunk)
+        Self::drain_chunks_window(t, peers, tag, recv_window(), on_chunk)
     }
 
     /// [`ChunkStream::drain_chunks`] with an explicit stall window:
@@ -534,12 +556,13 @@ impl ChunkStream {
             // A single incoming stream has nothing to reorder —
             // block per chunk.
             &[only] => {
+                let stamp = transport_stamp(t, only);
                 let mut inc = Incoming::new(only, 0);
                 loop {
                     let wait = span_begin();
                     let msg = t.recv_timeout(only, tag.at(inc.next_chunk as u64), window)?;
                     let (chunk, done) = inc.feed(msg)?;
-                    note_arrival(&tag, &chunk, wait);
+                    note_arrival(&tag, &chunk, wait, stamp);
                     on_chunk(chunk)?;
                     if done {
                         return Ok(());
@@ -572,7 +595,7 @@ impl ChunkStream {
                 {
                     progressed = true;
                     let (chunk, fin) = pending[i].feed(msg)?;
-                    note_arrival(&tag, &chunk, wait);
+                    note_arrival(&tag, &chunk, wait, transport_stamp(t, chunk.peer));
                     wait = span_begin();
                     on_chunk(chunk)?;
                     if fin {

@@ -22,7 +22,7 @@
 //! a Lustre mount; here, a local spool directory).
 
 use super::counter::CommStats;
-use super::{CommError, Result, Tag, Transport};
+use super::{CommError, Result, Tag, Transport, TransportKind};
 use crate::dmap::Pid;
 use std::collections::HashMap;
 use std::fs;
@@ -95,6 +95,10 @@ impl FileTransport {
 impl Transport for FileTransport {
     fn pid(&self) -> Pid {
         self.pid
+    }
+
+    fn kind(&self) -> Option<TransportKind> {
+        Some(TransportKind::File)
     }
 
     fn np(&self) -> usize {

@@ -1,0 +1,203 @@
+//! Hybrid transport: shared-memory rings inside a node, framed TCP
+//! across nodes.
+//!
+//! [`HybridTransport`] owns one [`ShmemTransport`] and one
+//! [`TcpTransport`] endpoint and routes every message by the
+//! [`Topology`]'s node map — the transport-level mirror of the
+//! two-level `hier` collective split (intra-node exchange over the
+//! fast path, node leaders over the wire). Both inner endpoints keep
+//! their own [`CommStats`]; the hybrid's own counter sees the union,
+//! so per-route byte counts stay inspectable via
+//! [`HybridTransport::shmem_stats`] / [`HybridTransport::tcp_stats`].
+//!
+//! TCP connections are dialed lazily, so ranks that never talk past
+//! their node (everything but the node leaders under `hier`
+//! collectives) never open a socket.
+
+use super::{
+    CommError, CommStats, Result, ShmemTransport, Tag, TcpTransport, Transport, TransportKind,
+};
+use crate::collective::Topology;
+use crate::dmap::Pid;
+use std::time::Duration;
+
+/// Topology-routed composite of shmem and TCP endpoints for one PID.
+pub struct HybridTransport {
+    shmem: ShmemTransport,
+    tcp: TcpTransport,
+    topo: Topology,
+    stats: CommStats,
+}
+
+impl HybridTransport {
+    /// Compose two endpoints of the **same** pid/world with the node
+    /// map that decides the route.
+    pub fn new(shmem: ShmemTransport, tcp: TcpTransport, topo: Topology) -> HybridTransport {
+        assert_eq!(shmem.pid(), tcp.pid(), "inner endpoints must agree on pid");
+        assert_eq!(shmem.np(), tcp.np(), "inner endpoints must agree on np");
+        assert_eq!(topo.np(), shmem.np(), "topology must cover the world");
+        HybridTransport { shmem, tcp, topo, stats: CommStats::new() }
+    }
+
+    /// An in-process world: shmem rings under `dir`, TCP over
+    /// loopback, nodes of `per_node` consecutive pids — tests and the
+    /// transport microbench.
+    pub fn world(
+        dir: &std::path::Path,
+        np: usize,
+        per_node: usize,
+    ) -> std::io::Result<Vec<HybridTransport>> {
+        let shmems = ShmemTransport::world(dir, np)?;
+        let tcps = super::TcpRendezvous::loopback_world(np)?;
+        let topo = Topology::grouped(np, per_node);
+        Ok(shmems
+            .into_iter()
+            .zip(tcps)
+            .map(|(s, t)| HybridTransport::new(s, t, topo.clone()))
+            .collect())
+    }
+
+    /// Is `peer` on this endpoint's node?
+    fn same_node(&self, peer: Pid) -> bool {
+        match (self.topo.node_of(self.shmem.pid()), self.topo.node_of(peer)) {
+            (Some(a), Some(b)) => a == b,
+            _ => false,
+        }
+    }
+
+    /// The inner endpoint carrying traffic with `peer`.
+    fn route(&self, peer: Pid) -> &dyn Transport {
+        if self.same_node(peer) {
+            &self.shmem
+        } else {
+            &self.tcp
+        }
+    }
+
+    /// The intra-node route's counters.
+    pub fn shmem_stats(&self) -> &CommStats {
+        self.shmem.stats()
+    }
+
+    /// The cross-node route's counters.
+    pub fn tcp_stats(&self) -> &CommStats {
+        self.tcp.stats()
+    }
+}
+
+impl Transport for HybridTransport {
+    fn pid(&self) -> Pid {
+        self.shmem.pid()
+    }
+
+    fn np(&self) -> usize {
+        self.shmem.np()
+    }
+
+    fn send(&self, to: Pid, tag: Tag, payload: &[u8]) -> Result<()> {
+        if to >= self.np() {
+            return Err(CommError::Disconnected(to));
+        }
+        self.route(to).send(to, tag, payload)?;
+        self.stats.record_send(payload.len());
+        Ok(())
+    }
+
+    fn send_parts(&self, to: Pid, tag: Tag, parts: &[&[u8]]) -> Result<()> {
+        if to >= self.np() {
+            return Err(CommError::Disconnected(to));
+        }
+        self.route(to).send_parts(to, tag, parts)?;
+        self.stats.record_send(parts.iter().map(|p| p.len()).sum());
+        Ok(())
+    }
+
+    fn recv_timeout(&self, from: Pid, tag: Tag, timeout: Duration) -> Result<Vec<u8>> {
+        if from >= self.np() {
+            return Err(CommError::Disconnected(from));
+        }
+        let msg = self.route(from).recv_timeout(from, tag, timeout)?;
+        self.stats.record_recv(msg.len());
+        Ok(msg)
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    fn kind(&self) -> Option<TransportKind> {
+        Some(TransportKind::Hybrid)
+    }
+
+    /// Per-peer attribution: the route actually taken, so trace
+    /// events distinguish shmem hops from TCP hops inside one run.
+    fn kind_to(&self, to: Pid) -> Option<TransportKind> {
+        if to < self.np() && self.same_node(to) {
+            Some(TransportKind::Shmem)
+        } else if to < self.np() {
+            Some(TransportKind::Tcp)
+        } else {
+            Some(TransportKind::Hybrid)
+        }
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn scratch(label: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "distarray_hybrid_{label}_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// 2 nodes × 2 pids: 0↔1 and 2↔3 ride shmem, 0↔2 rides TCP, and
+    /// the attribution reports the route taken.
+    #[test]
+    fn routes_by_node_and_attributes_the_route() {
+        let dir = scratch("route");
+        let world = HybridTransport::world(&dir, 4, 2).unwrap();
+        assert_eq!(world[0].kind_to(1), Some(TransportKind::Shmem));
+        assert_eq!(world[0].kind_to(2), Some(TransportKind::Tcp));
+        assert_eq!(world[2].kind_to(3), Some(TransportKind::Shmem));
+        assert_eq!(world[3].kind_to(0), Some(TransportKind::Tcp));
+
+        world[0].send(1, 1, b"intra").unwrap();
+        assert_eq!(world[1].recv(0, 1).unwrap(), b"intra");
+        world[0].send(2, 1, b"inter").unwrap();
+        assert_eq!(world[2].recv(0, 1).unwrap(), b"inter");
+
+        // Per-route counters: pid 0 sent one message each way.
+        assert_eq!(world[0].shmem_stats().msgs_sent(), 1);
+        assert_eq!(world[0].tcp_stats().msgs_sent(), 1);
+        assert_eq!(world[0].stats().msgs_sent(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn send_parts_routes_like_send() {
+        let dir = scratch("parts");
+        let world = HybridTransport::world(&dir, 4, 2).unwrap();
+        world[1].send_parts(0, 2, &[b"a", b"bc"]).unwrap();
+        world[1].send_parts(3, 2, &[b"x", b"yz"]).unwrap();
+        assert_eq!(world[0].recv(1, 2).unwrap(), b"abc");
+        assert_eq!(world[3].recv(1, 2).unwrap(), b"xyz");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn out_of_world_peers_are_disconnected() {
+        let dir = scratch("oow");
+        let world = HybridTransport::world(&dir, 2, 1).unwrap();
+        assert!(matches!(world[0].send(9, 1, b"x"), Err(CommError::Disconnected(9))));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -5,13 +5,21 @@
 //! result aggregation via **asynchronous file-based messaging** (§V,
 //! reference [44] "Large scale parallelization using file-based
 //! communications").  Both are expressed through the [`Transport`]
-//! trait with two implementations:
+//! trait with several implementations:
 //!
 //! * [`ChannelTransport`] — in-process (one thread per PID); used by
 //!   tests and single-process multi-worker runs.
 //! * [`FileTransport`] — the paper's file-based messaging: messages
 //!   are files in a spool directory, delivered by atomic rename; works
 //!   across OS processes with no daemon.
+//! * [`ShmemTransport`] — per-peer-pair mmap'd shared-memory SPSC
+//!   rings with futex wait/wake; the fast intra-node path.
+//! * [`TcpTransport`] — length-prefixed framed TCP, one multiplexed
+//!   connection per peer pair; the cross-node path.
+//! * [`HybridTransport`] — routes by [`crate::collective::Topology`]:
+//!   shmem to same-node PIDs, TCP across nodes.
+//!
+//! See `docs/transport.md` for wire formats and the selection matrix.
 //!
 //! Every send/recv is counted by [`CommStats`] so the paper's central
 //! claim — *same-map STREAM performs zero communication* (Figure 2) —
@@ -22,18 +30,25 @@ pub mod channel;
 pub mod counter;
 pub mod datapath;
 pub mod file_msg;
+pub mod hybrid;
 pub mod pool;
 pub mod protocol;
+pub mod shmem;
+pub mod tcp;
 
 pub use channel::{ChannelHub, ChannelTransport};
 pub use counter::CommStats;
 pub use datapath::{ChunkStream, ChunkTag};
 pub use file_msg::FileTransport;
+pub use hybrid::HybridTransport;
 pub use pool::{BufferPool, PooledBuf};
 pub use protocol::{Decode, Encode, WireReader, WireWriter};
+pub use shmem::ShmemTransport;
+pub use tcp::{TcpRendezvous, TcpTransport};
 
 use crate::dmap::Pid;
-use std::sync::Arc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
 /// Message tag (sender-chosen; disambiguates concurrent streams).
@@ -116,6 +131,126 @@ pub mod tags {
     #[inline]
     pub const fn unpack(tag: Tag) -> (u8, u64, u64) {
         ((tag >> 56) as u8, (tag >> 24) & 0xFFFF_FFFF, tag & 0x00FF_FFFF)
+    }
+}
+
+/// The transport families a run can ride — the `--transport` axis.
+///
+/// Wire codes are stable across versions (they are stamped into
+/// `trace_event_v1` chunk events and into [`crate::coordinator::results::RunConfig`]'s
+/// encoding); code 0 is reserved for "unknown / unstamped".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TransportKind {
+    /// In-process mailboxes ([`ChannelTransport`]); one thread per PID.
+    Channel,
+    /// The paper's file-based spool ([`FileTransport`]).
+    File,
+    /// mmap'd shared-memory rings ([`ShmemTransport`]); same node only.
+    Shmem,
+    /// Length-prefixed framed TCP ([`TcpTransport`]).
+    Tcp,
+    /// [`HybridTransport`]: shmem same-node, TCP cross-node.
+    Hybrid,
+}
+
+impl TransportKind {
+    /// Every selectable kind, in CLI/doc order.
+    pub const ALL: [TransportKind; 5] = [
+        TransportKind::Channel,
+        TransportKind::File,
+        TransportKind::Shmem,
+        TransportKind::Tcp,
+        TransportKind::Hybrid,
+    ];
+
+    /// The axis-flag / config / trace label.
+    pub const fn name(self) -> &'static str {
+        match self {
+            TransportKind::Channel => "channel",
+            TransportKind::File => "file",
+            TransportKind::Shmem => "shmem",
+            TransportKind::Tcp => "tcp",
+            TransportKind::Hybrid => "hybrid",
+        }
+    }
+
+    /// Stable wire/trace code (0 is reserved for "unknown").
+    pub const fn code(self) -> u8 {
+        match self {
+            TransportKind::Channel => 1,
+            TransportKind::File => 2,
+            TransportKind::Shmem => 3,
+            TransportKind::Tcp => 4,
+            TransportKind::Hybrid => 5,
+        }
+    }
+
+    /// Inverse of [`TransportKind::code`].
+    pub const fn from_code(code: u8) -> Option<TransportKind> {
+        match code {
+            1 => Some(TransportKind::Channel),
+            2 => Some(TransportKind::File),
+            3 => Some(TransportKind::Shmem),
+            4 => Some(TransportKind::Tcp),
+            5 => Some(TransportKind::Hybrid),
+            _ => None,
+        }
+    }
+
+    /// Parse an axis-flag value.
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        TransportKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// The `--transport` choices string for CLI errors and usage.
+    pub const CHOICES: &'static str = "channel|file|shmem|tcp|hybrid";
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The compiled-in fallback for [`default_recv_timeout`].
+pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// Process-wide override of the default receive timeout in
+/// milliseconds (0 = unset). Installed by `--recv-timeout-ms` /
+/// `RunConfig`; the environment (`DISTARRAY_RECV_TIMEOUT_MS`) seeds it
+/// lazily so spawned workers inherit the leader's setting before
+/// their config broadcast lands.
+static RECV_TIMEOUT_OVERRIDE_MS: AtomicU64 = AtomicU64::new(0);
+
+/// `DISTARRAY_RECV_TIMEOUT_MS` parsed once per process.
+fn env_recv_timeout_ms() -> u64 {
+    static ENV: OnceLock<u64> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("DISTARRAY_RECV_TIMEOUT_MS")
+            .ok()
+            .and_then(|v| v.parse::<u64>().ok())
+            .unwrap_or(0)
+    })
+}
+
+/// Install the process-default receive timeout (milliseconds; 0
+/// restores the compiled-in [`DEFAULT_RECV_TIMEOUT`]).
+pub fn set_default_recv_timeout_ms(ms: u64) {
+    RECV_TIMEOUT_OVERRIDE_MS.store(ms, Ordering::Relaxed);
+}
+
+/// The default timeout used by [`Transport::recv`] and the datapath's
+/// stall windows: the explicit process override if installed, else
+/// `DISTARRAY_RECV_TIMEOUT_MS`, else [`DEFAULT_RECV_TIMEOUT`].
+pub fn default_recv_timeout() -> Duration {
+    let ms = match RECV_TIMEOUT_OVERRIDE_MS.load(Ordering::Relaxed) {
+        0 => env_recv_timeout_ms(),
+        ms => ms,
+    };
+    if ms == 0 {
+        DEFAULT_RECV_TIMEOUT
+    } else {
+        Duration::from_millis(ms)
     }
 }
 
@@ -206,9 +341,26 @@ pub trait Transport: Send + Sync {
     /// Communication statistics for this endpoint.
     fn stats(&self) -> &CommStats;
 
-    /// Blocking receive with the default (generous) timeout.
+    /// The transport family of this endpoint (stamped into trace
+    /// events so `repro analyze` can attribute wire time per
+    /// transport). `None` means "unknown" — test doubles and wrappers
+    /// that don't care inherit it.
+    fn kind(&self) -> Option<TransportKind> {
+        None
+    }
+
+    /// The transport family used for messages **to `to`** — equal to
+    /// [`Transport::kind`] for every homogeneous transport; the hybrid
+    /// transport overrides it to report shmem or TCP per peer.
+    fn kind_to(&self, _to: Pid) -> Option<TransportKind> {
+        self.kind()
+    }
+
+    /// Blocking receive with the default (generous) timeout —
+    /// [`default_recv_timeout`], overridable per process via
+    /// `--recv-timeout-ms` / `DISTARRAY_RECV_TIMEOUT_MS`.
     fn recv(&self, from: Pid, tag: Tag) -> Result<Vec<u8>> {
-        self.recv_timeout(from, tag, Duration::from_secs(120))
+        self.recv_timeout(from, tag, default_recv_timeout())
     }
 
     /// Send a message whose payload is `parts` concatenated in order.

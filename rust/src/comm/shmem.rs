@@ -1,0 +1,871 @@
+//! Shared-memory transport: per-peer-pair mmap'd SPSC rings.
+//!
+//! The fast intra-node path. For every **ordered** peer pair `(from,
+//! to)` there is one file in the spool directory (`ring_f{from}_
+//! t{to}.shm`) holding a single-producer single-consumer byte ring:
+//!
+//! ```text
+//! offset 0    head  (u64, consumer cursor; low 32 bits = futex word)
+//! offset 64   tail  (u64, producer cursor; low 32 bits = futex word)
+//! offset 128  data  (power-of-two capacity)
+//! ```
+//!
+//! Cursors are **monotone byte counts**; `cursor & (cap-1)` is the
+//! ring position and `tail - head` the bytes in flight, so an
+//! all-zero file is a valid empty ring and both sides can create and
+//! size it idempotently — no initialization handshake. The head and
+//! tail live a cache line apart so producer and consumer never false-
+//! share.
+//!
+//! A record is a 16-byte header `[len: u32][kind: u32][tag: u64]`
+//! followed by the payload padded to 8 bytes. Records never straddle
+//! the ring end: a producer that would wrap emits a skip marker
+//! (`len == u32::MAX`) and continues at position 0. Payloads above a
+//! quarter of the ring capacity spill to a one-shot file next to the
+//! ring, referenced by a 16-byte `[spill_seq][len]` descriptor
+//! record; the consumer reads and deletes it.
+//!
+//! Publication order is the usual SPSC contract: the producer writes
+//! the record bytes, then release-stores the advanced tail; the
+//! consumer acquire-loads the tail before reading. Blocking on empty
+//! (receiver) and full (sender) uses `futex` wait/wake on the low 32
+//! bits of the tail/head word on Linux, degrading to a bounded sleep
+//! elsewhere. Waits are sliced ([`WAIT_SLICE`]) so a message that a
+//! *sibling thread* drained into the shared mailbox is picked up
+//! promptly even though the ring itself stays quiet.
+
+#[cfg(unix)]
+pub use imp::ShmemTransport;
+
+#[cfg(unix)]
+mod imp {
+    use super::sys;
+    use crate::comm::{
+        default_recv_timeout, CommError, CommStats, Result, Tag, Transport, TransportKind,
+    };
+    use crate::dmap::Pid;
+    use std::collections::{HashMap, VecDeque};
+    use std::fs::OpenOptions;
+    use std::io;
+    use std::path::{Path, PathBuf};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Mutex, OnceLock};
+    use std::time::{Duration, Instant};
+
+    /// Ring header bytes: head at 0, tail one cache line later.
+    const RING_HDR: usize = 128;
+    const HEAD_OFF: usize = 0;
+    const TAIL_OFF: usize = 64;
+    /// Record header bytes: `[len: u32][kind: u32][tag: u64]`.
+    const REC_HDR: usize = 16;
+    /// `len` value of a skip-to-ring-start marker.
+    const LEN_WRAP: u32 = u32::MAX;
+    /// Record kinds.
+    const K_INLINE: u32 = 0;
+    const K_SPILL: u32 = 1;
+    /// Default / minimum ring data capacity.
+    const DEFAULT_RING_BYTES: usize = 1 << 20;
+    const MIN_RING_BYTES: usize = 4096;
+    /// Upper bound of one blocking slice: caps the latency of
+    /// cross-thread mailbox handoffs and of the no-futex fallback.
+    const WAIT_SLICE: Duration = Duration::from_millis(2);
+
+    #[inline]
+    fn pad8(n: usize) -> usize {
+        (n + 7) & !7
+    }
+
+    /// `DISTARRAY_SHMEM_RING_BYTES` parsed once per process (rounded
+    /// up to a power of two, floored at [`MIN_RING_BYTES`]).
+    fn ambient_ring_bytes() -> usize {
+        static ENV: OnceLock<usize> = OnceLock::new();
+        *ENV.get_or_init(|| {
+            std::env::var("DISTARRAY_SHMEM_RING_BYTES")
+                .ok()
+                .and_then(|v| v.parse::<usize>().ok())
+                .filter(|&b| b > 0)
+                .map(|b| b.next_power_of_two().max(MIN_RING_BYTES))
+                .unwrap_or(DEFAULT_RING_BYTES)
+        })
+    }
+
+    fn ring_path(dir: &Path, from: Pid, to: Pid) -> PathBuf {
+        dir.join(format!("ring_f{from}_t{to}.shm"))
+    }
+
+    /// One mapped ring file.
+    struct Ring {
+        map: sys::Map,
+        cap: usize,
+    }
+
+    impl Ring {
+        /// Open (creating and sizing if new) and map the ring at
+        /// `path`. An existing file must already have the expected
+        /// size — a mismatch means the processes disagree on the ring
+        /// capacity, which would corrupt both cursors.
+        fn open(path: &Path, cap: usize) -> io::Result<Ring> {
+            let total = RING_HDR + cap;
+            let f = OpenOptions::new().read(true).write(true).create(true).open(path)?;
+            let len = f.metadata()?.len();
+            if len == 0 {
+                f.set_len(total as u64)?;
+            } else if len != total as u64 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!(
+                        "shmem ring {} is {len} bytes, expected {total}; \
+                         DISTARRAY_SHMEM_RING_BYTES must agree across processes",
+                        path.display()
+                    ),
+                ));
+            }
+            Ok(Ring { map: sys::Map::of_file(&f, total)?, cap })
+        }
+
+        fn head(&self) -> &AtomicU64 {
+            unsafe { &*(self.map.ptr().add(HEAD_OFF) as *const AtomicU64) }
+        }
+
+        fn tail(&self) -> &AtomicU64 {
+            unsafe { &*(self.map.ptr().add(TAIL_OFF) as *const AtomicU64) }
+        }
+
+        /// Futex word: the low half of the head cursor (the cursors
+        /// are little-endian on every supported target; on a
+        /// big-endian machine the word would track the high half and
+        /// waits would still terminate via [`WAIT_SLICE`]).
+        fn head_word(&self) -> *const u32 {
+            unsafe { self.map.ptr().add(HEAD_OFF) as *const u32 }
+        }
+
+        fn tail_word(&self) -> *const u32 {
+            unsafe { self.map.ptr().add(TAIL_OFF) as *const u32 }
+        }
+
+        fn data(&self) -> *mut u8 {
+            unsafe { self.map.ptr().add(RING_HDR) }
+        }
+    }
+
+    /// A ring plus the mutex serializing this process's side of it
+    /// (threads of one endpoint; the other process never takes it).
+    struct RingSlot {
+        ring: Ring,
+        lock: Mutex<()>,
+    }
+
+    type Mailbox = HashMap<(Pid, Tag), VecDeque<Vec<u8>>>;
+
+    /// Shared-memory transport endpoint for one PID. See the module
+    /// docs for the on-disk layout.
+    pub struct ShmemTransport {
+        pid: Pid,
+        np: usize,
+        dir: PathBuf,
+        /// `out[to]` — ring this endpoint produces into (None at `pid`).
+        out: Vec<Option<RingSlot>>,
+        /// `inn[from]` — ring this endpoint consumes (None at `pid`).
+        inn: Vec<Option<RingSlot>>,
+        /// Records drained off the rings, keyed by `(from, tag)`.
+        mbox: Mutex<Mailbox>,
+        /// Inline records above this spill to a side file (cap / 4).
+        spill_threshold: usize,
+        spill_seq: AtomicU64,
+        /// `None` = the process default ([`default_recv_timeout`]).
+        send_patience: Option<Duration>,
+        stats: CommStats,
+    }
+
+    impl ShmemTransport {
+        /// Endpoint `pid` of an `np`-wide world rooted at `dir`, with
+        /// the ambient ring capacity (`DISTARRAY_SHMEM_RING_BYTES` or
+        /// 1 MiB). Maps all `2(np-1)` rings eagerly so the datapath
+        /// never faults mid-stream.
+        pub fn new(dir: &Path, pid: Pid, np: usize) -> io::Result<ShmemTransport> {
+            Self::with_ring_bytes(dir, pid, np, ambient_ring_bytes())
+        }
+
+        /// [`ShmemTransport::new`] with an explicit per-ring data
+        /// capacity (rounded up to a power of two; tests use small
+        /// rings to exercise wrap and backpressure).
+        pub fn with_ring_bytes(
+            dir: &Path,
+            pid: Pid,
+            np: usize,
+            ring_bytes: usize,
+        ) -> io::Result<ShmemTransport> {
+            assert!(pid < np, "pid {pid} outside world of {np}");
+            let cap = ring_bytes.next_power_of_two().max(MIN_RING_BYTES);
+            std::fs::create_dir_all(dir)?;
+            let mut out = Vec::with_capacity(np);
+            let mut inn = Vec::with_capacity(np);
+            for peer in 0..np {
+                if peer == pid {
+                    out.push(None);
+                    inn.push(None);
+                    continue;
+                }
+                out.push(Some(RingSlot {
+                    ring: Ring::open(&ring_path(dir, pid, peer), cap)?,
+                    lock: Mutex::new(()),
+                }));
+                inn.push(Some(RingSlot {
+                    ring: Ring::open(&ring_path(dir, peer, pid), cap)?,
+                    lock: Mutex::new(()),
+                }));
+            }
+            Ok(ShmemTransport {
+                pid,
+                np,
+                dir: dir.to_path_buf(),
+                out,
+                inn,
+                mbox: Mutex::new(HashMap::new()),
+                spill_threshold: cap / 4,
+                spill_seq: AtomicU64::new(0),
+                send_patience: None,
+                stats: CommStats::new(),
+            })
+        }
+
+        /// All `np` endpoints over one directory — in-process worlds
+        /// for tests and the transport microbench.
+        pub fn world(dir: &Path, np: usize) -> io::Result<Vec<ShmemTransport>> {
+            (0..np).map(|p| Self::new(dir, p, np)).collect()
+        }
+
+        /// Override how long a send waits on a full ring before
+        /// failing (default: [`default_recv_timeout`]).
+        pub fn with_send_patience(mut self, patience: Duration) -> ShmemTransport {
+            self.send_patience = Some(patience);
+            self
+        }
+
+        /// The spool directory holding this world's rings.
+        pub fn dir(&self) -> &Path {
+            &self.dir
+        }
+
+        fn send_patience(&self) -> Duration {
+            self.send_patience.unwrap_or_else(default_recv_timeout)
+        }
+
+        /// Block until `ring` has `need` free bytes given our `tail`.
+        fn wait_space(
+            &self,
+            ring: &Ring,
+            to: Pid,
+            tail: u64,
+            need: usize,
+            deadline: Instant,
+        ) -> Result<()> {
+            loop {
+                let head = ring.head().load(Ordering::Acquire);
+                let used = (tail - head) as usize;
+                if ring.cap - used >= need {
+                    return Ok(());
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(CommError::Io(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        format!(
+                            "shmem ring to pid {to} full ({used} of {} bytes) past the \
+                             {} ms send patience — receiver stalled?",
+                            ring.cap,
+                            self.send_patience().as_millis()
+                        ),
+                    )));
+                }
+                sys::futex_wait(ring.head_word(), head as u32, (deadline - now).min(WAIT_SLICE));
+            }
+        }
+
+        /// Append one record (caller holds the slot lock, making this
+        /// endpoint the ring's only producer).
+        fn push(
+            &self,
+            ring: &Ring,
+            to: Pid,
+            tag: Tag,
+            kind: u32,
+            parts: &[&[u8]],
+            deadline: Instant,
+        ) -> Result<()> {
+            let len: usize = parts.iter().map(|p| p.len()).sum();
+            let need = REC_HDR + pad8(len);
+            debug_assert!(need <= ring.cap / 2, "inline record exceeds half the ring");
+            let mut tail = ring.tail().load(Ordering::Relaxed);
+            loop {
+                let pos = (tail as usize) & (ring.cap - 1);
+                let rem = ring.cap - pos;
+                if need > rem {
+                    // Wrap: own the skipped slack plus the record so
+                    // the consumer can never be lapped, mark the
+                    // slack, and continue from position 0.
+                    self.wait_space(ring, to, tail, rem + need, deadline)?;
+                    if rem >= REC_HDR {
+                        unsafe {
+                            let base = ring.data().add(pos);
+                            base.copy_from_nonoverlapping(LEN_WRAP.to_le_bytes().as_ptr(), 4);
+                            std::ptr::write_bytes(base.add(4), 0, REC_HDR - 4);
+                        }
+                    }
+                    tail += rem as u64;
+                    ring.tail().store(tail, Ordering::Release);
+                    sys::futex_wake(ring.tail_word());
+                    continue;
+                }
+                self.wait_space(ring, to, tail, need, deadline)?;
+                unsafe {
+                    let base = ring.data().add(pos);
+                    base.copy_from_nonoverlapping((len as u32).to_le_bytes().as_ptr(), 4);
+                    base.add(4).copy_from_nonoverlapping(kind.to_le_bytes().as_ptr(), 4);
+                    base.add(8).copy_from_nonoverlapping(tag.to_le_bytes().as_ptr(), 8);
+                    let mut off = REC_HDR;
+                    for p in parts {
+                        base.add(off).copy_from_nonoverlapping(p.as_ptr(), p.len());
+                        off += p.len();
+                    }
+                }
+                tail += need as u64;
+                ring.tail().store(tail, Ordering::Release);
+                sys::futex_wake(ring.tail_word());
+                return Ok(());
+            }
+        }
+
+        /// Drain every complete record of `inn[from]` into the
+        /// mailbox. Returns the drained count and the tail value the
+        /// ring was observed empty at (the futex expectation for a
+        /// subsequent wait).
+        fn drain_ring(&self, from: Pid) -> Result<(usize, u64)> {
+            let slot = self.inn[from].as_ref().expect("no ring to self");
+            let _g = slot.lock.lock().unwrap();
+            let ring = &slot.ring;
+            let mut tail = ring.tail().load(Ordering::Acquire);
+            let mut head = ring.head().load(Ordering::Relaxed);
+            let start_head = head;
+            let mut drained = 0usize;
+            let mut landed: Vec<(Tag, Vec<u8>)> = Vec::new();
+            loop {
+                if head == tail {
+                    // Pick up records that arrived while copying.
+                    let t2 = ring.tail().load(Ordering::Acquire);
+                    if t2 == tail {
+                        break;
+                    }
+                    tail = t2;
+                }
+                let pos = (head as usize) & (ring.cap - 1);
+                let rem = ring.cap - pos;
+                if rem < REC_HDR {
+                    head += rem as u64;
+                    continue;
+                }
+                let mut hdr = [0u8; REC_HDR];
+                unsafe { ring.data().add(pos).copy_to_nonoverlapping(hdr.as_mut_ptr(), REC_HDR) };
+                let len = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+                if len == LEN_WRAP {
+                    head += rem as u64;
+                    continue;
+                }
+                let kind = u32::from_le_bytes(hdr[4..8].try_into().unwrap());
+                let tag = Tag::from_le_bytes(hdr[8..16].try_into().unwrap());
+                let len = len as usize;
+                if REC_HDR + pad8(len) > rem {
+                    return Err(CommError::Malformed(format!(
+                        "shmem record from pid {from} ({len} bytes at {pos}) straddles the \
+                         ring end"
+                    )));
+                }
+                let mut payload = vec![0u8; len];
+                unsafe {
+                    ring.data().add(pos + REC_HDR).copy_to_nonoverlapping(payload.as_mut_ptr(), len)
+                };
+                head += (REC_HDR + pad8(len)) as u64;
+                let msg = match kind {
+                    K_INLINE => payload,
+                    K_SPILL => self.read_spill(from, &payload)?,
+                    other => {
+                        return Err(CommError::Malformed(format!(
+                            "shmem record from pid {from} has unknown kind {other}"
+                        )))
+                    }
+                };
+                landed.push((tag, msg));
+                drained += 1;
+            }
+            if head != start_head {
+                ring.head().store(head, Ordering::Release);
+                sys::futex_wake(ring.head_word());
+            }
+            drop(_g);
+            if !landed.is_empty() {
+                let mut mb = self.mbox.lock().unwrap();
+                for (tag, msg) in landed {
+                    mb.entry((from, tag)).or_default().push_back(msg);
+                }
+            }
+            Ok((drained, tail))
+        }
+
+        /// Resolve a spill descriptor: read and delete the side file.
+        fn read_spill(&self, from: Pid, desc: &[u8]) -> Result<Vec<u8>> {
+            if desc.len() != 16 {
+                return Err(CommError::Malformed(format!(
+                    "shmem spill descriptor from pid {from} is {} bytes, expected 16",
+                    desc.len()
+                )));
+            }
+            let seq = u64::from_le_bytes(desc[0..8].try_into().unwrap());
+            let len = u64::from_le_bytes(desc[8..16].try_into().unwrap()) as usize;
+            let path = self.dir.join(format!("spill_f{from}_t{}_{seq}.bin", self.pid));
+            let bytes = std::fs::read(&path)?;
+            if bytes.len() != len {
+                return Err(CommError::Malformed(format!(
+                    "shmem spill {} is {} bytes, descriptor said {len}",
+                    path.display(),
+                    bytes.len()
+                )));
+            }
+            let _ = std::fs::remove_file(&path);
+            Ok(bytes)
+        }
+
+        /// Write a large payload to a one-shot spill file (atomic via
+        /// rename, like the file transport) and return its descriptor.
+        fn write_spill(&self, to: Pid, parts: &[&[u8]]) -> Result<[u8; 16]> {
+            use std::io::Write as _;
+            let len: usize = parts.iter().map(|p| p.len()).sum();
+            let seq = self.spill_seq.fetch_add(1, Ordering::Relaxed);
+            let dst = self.dir.join(format!("spill_f{}_t{to}_{seq}.bin", self.pid));
+            let tmp = self.dir.join(format!(".tmp_spill_f{}_t{to}_{seq}", self.pid));
+            {
+                let mut f = std::fs::File::create(&tmp)?;
+                for p in parts {
+                    f.write_all(p)?;
+                }
+            }
+            std::fs::rename(&tmp, &dst)?;
+            let mut desc = [0u8; 16];
+            desc[0..8].copy_from_slice(&seq.to_le_bytes());
+            desc[8..16].copy_from_slice(&(len as u64).to_le_bytes());
+            Ok(desc)
+        }
+
+        fn pop_mbox(&self, from: Pid, tag: Tag) -> Option<Vec<u8>> {
+            let mut mb = self.mbox.lock().unwrap();
+            let q = mb.get_mut(&(from, tag))?;
+            let msg = q.pop_front();
+            if q.is_empty() {
+                mb.remove(&(from, tag));
+            }
+            msg
+        }
+    }
+
+    impl Transport for ShmemTransport {
+        fn pid(&self) -> Pid {
+            self.pid
+        }
+
+        fn np(&self) -> usize {
+            self.np
+        }
+
+        fn send(&self, to: Pid, tag: Tag, payload: &[u8]) -> Result<()> {
+            self.send_parts(to, tag, &[payload])
+        }
+
+        fn send_parts(&self, to: Pid, tag: Tag, parts: &[&[u8]]) -> Result<()> {
+            let total: usize = parts.iter().map(|p| p.len()).sum();
+            if to == self.pid {
+                let mut buf = Vec::with_capacity(total);
+                for p in parts {
+                    buf.extend_from_slice(p);
+                }
+                self.mbox.lock().unwrap().entry((to, tag)).or_default().push_back(buf);
+                self.stats.record_send(total);
+                return Ok(());
+            }
+            let Some(slot) = self.out.get(to).and_then(|s| s.as_ref()) else {
+                return Err(CommError::Disconnected(to));
+            };
+            let deadline = Instant::now() + self.send_patience();
+            let _g = slot.lock.lock().unwrap();
+            if total > self.spill_threshold {
+                let desc = self.write_spill(to, parts)?;
+                self.push(&slot.ring, to, tag, K_SPILL, &[&desc], deadline)?;
+            } else {
+                self.push(&slot.ring, to, tag, K_INLINE, parts, deadline)?;
+            }
+            self.stats.record_send(total);
+            Ok(())
+        }
+
+        fn recv_timeout(&self, from: Pid, tag: Tag, timeout: Duration) -> Result<Vec<u8>> {
+            if from != self.pid && self.inn.get(from).and_then(|s| s.as_ref()).is_none() {
+                return Err(CommError::Disconnected(from));
+            }
+            let deadline = Instant::now() + timeout;
+            loop {
+                if let Some(msg) = self.pop_mbox(from, tag) {
+                    self.stats.record_recv(msg.len());
+                    return Ok(msg);
+                }
+                let (drained, empty_at) =
+                    if from == self.pid { (0, 0) } else { self.drain_ring(from)? };
+                if drained > 0 {
+                    continue;
+                }
+                let now = Instant::now();
+                if now >= deadline {
+                    return Err(CommError::timeout(from, tag));
+                }
+                let slice = (deadline - now).min(WAIT_SLICE);
+                if from == self.pid {
+                    // Self-sends bypass the rings; poll the mailbox.
+                    std::thread::sleep(slice.min(Duration::from_micros(100)));
+                } else {
+                    let ring = &self.inn[from].as_ref().unwrap().ring;
+                    sys::futex_wait(ring.tail_word(), empty_at as u32, slice);
+                }
+            }
+        }
+
+        fn stats(&self) -> &CommStats {
+            &self.stats
+        }
+
+        fn kind(&self) -> Option<TransportKind> {
+            Some(TransportKind::Shmem)
+        }
+    }
+}
+
+/// Raw mmap + futex bindings (the crate is dependency-free, so these
+/// are hand-rolled over glibc/the kernel like
+/// [`crate::launcher::pinning`]).
+#[cfg(unix)]
+mod sys {
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    /// An mmap'd shared region, unmapped on drop.
+    pub struct Map {
+        ptr: *mut u8,
+        len: usize,
+    }
+
+    // The region is plain shared memory; all concurrent access goes
+    // through atomics (the cursors) ordered by release/acquire.
+    unsafe impl Send for Map {}
+    unsafe impl Sync for Map {}
+
+    extern "C" {
+        fn mmap(addr: *mut u8, len: usize, prot: i32, flags: i32, fd: i32, off: i64) -> *mut u8;
+        fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const PROT_WRITE: i32 = 2;
+    const MAP_SHARED: i32 = 1;
+
+    impl Map {
+        pub fn of_file(f: &File, len: usize) -> io::Result<Map> {
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ | PROT_WRITE,
+                    MAP_SHARED,
+                    f.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr.is_null() || ptr as isize == -1 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Map { ptr, len })
+        }
+
+        pub fn ptr(&self) -> *mut u8 {
+            self.ptr
+        }
+    }
+
+    impl Drop for Map {
+        fn drop(&mut self) {
+            unsafe { munmap(self.ptr, self.len) };
+        }
+    }
+
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    mod futex {
+        use std::time::Duration;
+
+        #[cfg(target_arch = "x86_64")]
+        const SYS_FUTEX: i64 = 202;
+        #[cfg(target_arch = "aarch64")]
+        const SYS_FUTEX: i64 = 98;
+        // No FUTEX_PRIVATE_FLAG: the word is shared across processes.
+        const FUTEX_WAIT: i32 = 0;
+        const FUTEX_WAKE: i32 = 1;
+
+        #[repr(C)]
+        struct Timespec {
+            tv_sec: i64,
+            tv_nsec: i64,
+        }
+
+        extern "C" {
+            fn syscall(num: i64, ...) -> i64;
+        }
+
+        /// Sleep until `*word != expected`, a wake, or `timeout` —
+        /// returns immediately if the word already changed.
+        pub fn wait(word: *const u32, expected: u32, timeout: Duration) {
+            let ts = Timespec {
+                tv_sec: timeout.as_secs() as i64,
+                tv_nsec: timeout.subsec_nanos() as i64,
+            };
+            unsafe {
+                syscall(SYS_FUTEX, word, FUTEX_WAIT, expected, &ts as *const Timespec, 0usize, 0u32)
+            };
+        }
+
+        /// Wake every waiter on `word`.
+        pub fn wake(word: *const u32) {
+            unsafe {
+                syscall(SYS_FUTEX, word, FUTEX_WAKE, i32::MAX, 0usize, 0usize, 0u32)
+            };
+        }
+    }
+
+    #[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+    mod futex {
+        use std::time::Duration;
+
+        /// Portable fallback: a bounded sleep (no kernel wait queue;
+        /// the caller's slice loop re-checks the ring).
+        pub fn wait(_word: *const u32, _expected: u32, timeout: Duration) {
+            std::thread::sleep(timeout.min(Duration::from_micros(200)));
+        }
+
+        pub fn wake(_word: *const u32) {}
+    }
+
+    pub use futex::{wait as futex_wait, wake as futex_wake};
+}
+
+/// Non-unix stub: construction reports the platform gap up front.
+#[cfg(not(unix))]
+pub struct ShmemTransport {
+    never: std::convert::Infallible,
+    stats: crate::comm::CommStats,
+}
+
+#[cfg(not(unix))]
+impl ShmemTransport {
+    fn unsupported() -> std::io::Error {
+        std::io::Error::new(
+            std::io::ErrorKind::Unsupported,
+            "the shmem transport requires a unix host (mmap)",
+        )
+    }
+
+    pub fn new(
+        _dir: &std::path::Path,
+        _pid: crate::dmap::Pid,
+        _np: usize,
+    ) -> std::io::Result<ShmemTransport> {
+        Err(Self::unsupported())
+    }
+
+    pub fn with_ring_bytes(
+        _dir: &std::path::Path,
+        _pid: crate::dmap::Pid,
+        _np: usize,
+        _ring_bytes: usize,
+    ) -> std::io::Result<ShmemTransport> {
+        Err(Self::unsupported())
+    }
+
+    pub fn world(_dir: &std::path::Path, _np: usize) -> std::io::Result<Vec<ShmemTransport>> {
+        Err(Self::unsupported())
+    }
+}
+
+#[cfg(not(unix))]
+impl crate::comm::Transport for ShmemTransport {
+    fn pid(&self) -> crate::dmap::Pid {
+        match self.never {}
+    }
+    fn np(&self) -> usize {
+        match self.never {}
+    }
+    fn send(
+        &self,
+        _to: crate::dmap::Pid,
+        _tag: crate::comm::Tag,
+        _payload: &[u8],
+    ) -> crate::comm::Result<()> {
+        match self.never {}
+    }
+    fn recv_timeout(
+        &self,
+        _from: crate::dmap::Pid,
+        _tag: crate::comm::Tag,
+        _timeout: std::time::Duration,
+    ) -> crate::comm::Result<Vec<u8>> {
+        match self.never {}
+    }
+    fn stats(&self) -> &crate::comm::CommStats {
+        &self.stats
+    }
+    fn kind(&self) -> Option<crate::comm::TransportKind> {
+        Some(crate::comm::TransportKind::Shmem)
+    }
+}
+
+#[cfg(all(test, unix))]
+mod tests {
+    use super::ShmemTransport;
+    use crate::comm::{CommError, Transport};
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::time::Duration;
+
+    /// A fresh per-test spool directory (removed by the OS tempdir
+    /// cleanup; unique across concurrent test processes and threads).
+    fn scratch(label: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "distarray_shmem_{label}_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_and_per_tag_order() {
+        let dir = scratch("rt");
+        let world = ShmemTransport::world(&dir, 2).unwrap();
+        let (t0, t1) = (&world[0], &world[1]);
+        for i in 0..10u8 {
+            t0.send(1, 7, &[i; 9]).unwrap();
+            t0.send(1, 8, &[i + 100; 3]).unwrap();
+        }
+        for i in 0..10u8 {
+            assert_eq!(t1.recv_timeout(0, 7, Duration::from_secs(5)).unwrap(), vec![i; 9]);
+            assert_eq!(t1.recv_timeout(0, 8, Duration::from_secs(5)).unwrap(), vec![i + 100; 3]);
+        }
+        assert_eq!(t0.stats().msgs_sent(), 20);
+        assert_eq!(t1.stats().msgs_recv(), 20);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A tiny ring forces wrap markers and full-ring backpressure;
+    /// a concurrent consumer keeps the producer advancing.
+    #[test]
+    fn wrap_and_backpressure_with_a_tiny_ring() {
+        let dir = scratch("wrap");
+        let t0 = ShmemTransport::with_ring_bytes(&dir, 0, 2, 4096).unwrap();
+        let t1 = ShmemTransport::with_ring_bytes(&dir, 1, 2, 4096).unwrap();
+        let n = 200usize;
+        let consumer = std::thread::spawn(move || {
+            for i in 0..n {
+                let msg = t1.recv_timeout(0, 3, Duration::from_secs(10)).unwrap();
+                assert_eq!(msg, vec![(i % 251) as u8; 100 + (i % 57)], "message {i}");
+            }
+            t1
+        });
+        for i in 0..n {
+            t0.send(1, 3, &vec![(i % 251) as u8; 100 + (i % 57)]).unwrap();
+        }
+        let t1 = consumer.join().unwrap();
+        assert_eq!(t1.stats().msgs_recv() as usize, n);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// Payloads above a quarter of the ring spill to a side file that
+    /// the consumer deletes after reading.
+    #[test]
+    fn large_payloads_spill_and_clean_up() {
+        let dir = scratch("spill");
+        let t0 = ShmemTransport::with_ring_bytes(&dir, 0, 2, 4096).unwrap();
+        let t1 = ShmemTransport::with_ring_bytes(&dir, 1, 2, 4096).unwrap();
+        let big: Vec<u8> = (0..10_000u32).map(|i| (i % 253) as u8).collect();
+        t0.send_parts(1, 9, &[&big[..4000], &big[4000..]]).unwrap();
+        assert_eq!(t1.recv_timeout(0, 9, Duration::from_secs(5)).unwrap(), big);
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains("spill"))
+            .collect();
+        assert!(leftovers.is_empty(), "spill files left behind: {leftovers:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn timeout_names_the_silent_peer() {
+        let dir = scratch("to");
+        let world = ShmemTransport::world(&dir, 2).unwrap();
+        let err = world[0].recv_timeout(1, 5, Duration::from_millis(30)).unwrap_err();
+        match err {
+            CommError::Timeout { from, tag, .. } => {
+                assert_eq!((from, tag), (1, 5));
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// A full ring with no consumer fails the send with a one-line
+    /// error instead of hanging forever.
+    #[test]
+    fn full_ring_send_fails_loudly() {
+        let dir = scratch("full");
+        let t0 = ShmemTransport::with_ring_bytes(&dir, 0, 2, 4096)
+            .unwrap()
+            .with_send_patience(Duration::from_millis(50));
+        let mut err = None;
+        for _ in 0..64 {
+            // 1000-byte payloads stay inline (threshold 1024).
+            if let Err(e) = t0.send(1, 2, &[7u8; 1000]) {
+                err = Some(e);
+                break;
+            }
+        }
+        let msg = err.expect("ring never filled").to_string();
+        assert!(msg.contains("full") && msg.contains("pid 1"), "{msg}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn self_send_delivers() {
+        let dir = scratch("selfs");
+        let world = ShmemTransport::world(&dir, 2).unwrap();
+        world[0].send(0, 11, b"loop").unwrap();
+        assert_eq!(world[0].recv_timeout(0, 11, Duration::from_secs(1)).unwrap(), b"loop");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn out_of_world_peers_are_disconnected() {
+        let dir = scratch("oow");
+        let world = ShmemTransport::world(&dir, 2).unwrap();
+        assert!(matches!(world[0].send(5, 1, b"x"), Err(CommError::Disconnected(5))));
+        assert!(matches!(
+            world[0].recv_timeout(5, 1, Duration::ZERO),
+            Err(CommError::Disconnected(5))
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,690 @@
+//! TCP transport: length-prefixed framed streams, one multiplexed
+//! connection per directed peer pair.
+//!
+//! The cross-node path. Every endpoint binds a data listener; a
+//! sender lazily dials one connection to each peer it talks to
+//! (bounded connect retry with exponential backoff, Nagle off) and
+//! multiplexes **all** tags over it. Each accepted connection gets a
+//! reader thread that parses frames and dispatches payloads into
+//! per-`(from, tag)` queues under one condvar — the receive side of
+//! [`Transport`] never touches a socket.
+//!
+//! The wire frame is a 28-byte header followed by the payload:
+//!
+//! ```text
+//! [magic: u32 = 0x44415252 "DARR"]
+//! [len:   u64]  payload bytes
+//! [tag:   u64]
+//! [from:  u32]  sender PID
+//! [crc:   u32]  CRC-32 of the 24 header bytes above
+//! ```
+//!
+//! The CRC covers the header only (the kernel already checksums the
+//! stream; the CRC catches desynchronization and truncation, not
+//! payload corruption). A reader that hits a short header, a bad
+//! magic/CRC, or EOF mid-payload **poisons** the attributable sender:
+//! pending and future receives from that PID fail immediately with a
+//! one-line [`CommError::Malformed`] instead of hanging out a
+//! timeout. A clean close at a frame boundary is a normal shutdown.
+//!
+//! `send_parts` writes the header and every part with vectored I/O —
+//! the scatter list goes straight from the caller's buffers to the
+//! socket, so [`super::ChunkStream`]'s zero-copy contract holds.
+//!
+//! Rendezvous ([`TcpRendezvous`]) is leader-rooted: the leader binds
+//! a boot listener before spawning workers and hands its address down
+//! via `DISTARRAY_TCP_BOOT`; each worker binds its own data listener,
+//! registers `(pid, addr)` over the boot connection, and receives the
+//! full pid→address map in return. Addresses are loopback — the
+//! launcher simulates nodes as processes on one machine; a real
+//! multi-host deployment would advertise routable addresses through
+//! the same map without touching the framing.
+
+use super::{CommError, CommStats, Result, Tag, Transport, TransportKind};
+use crate::dmap::Pid;
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, IoSlice, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Frame header bytes (see the module docs for the layout).
+pub const FRAME_HDR: usize = 28;
+/// Frame magic: the bytes `"DARR"` on the wire.
+pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"DARR");
+/// Sanity cap on one frame's payload.
+const MAX_FRAME: u64 = 1 << 32;
+/// Rendezvous handshake I/O timeout.
+const BOOT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Bitwise (table-free) CRC-32 (IEEE polynomial).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        crc ^= b as u32;
+        for _ in 0..8 {
+            let mask = (crc & 1).wrapping_neg();
+            crc = (crc >> 1) ^ (0xEDB8_8320 & mask);
+        }
+    }
+    !crc
+}
+
+/// Build the frame header for `len` payload bytes from `from`.
+fn frame_header(from: Pid, tag: Tag, len: usize) -> [u8; FRAME_HDR] {
+    let mut h = [0u8; FRAME_HDR];
+    h[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    h[4..12].copy_from_slice(&(len as u64).to_le_bytes());
+    h[12..20].copy_from_slice(&tag.to_le_bytes());
+    h[20..24].copy_from_slice(&(from as u32).to_le_bytes());
+    let crc = crc32(&h[0..24]);
+    h[24..28].copy_from_slice(&crc.to_le_bytes());
+    h
+}
+
+/// Per-`(from, tag)` delivery queues plus the poisoned-peer table,
+/// under one lock so a reader's verdict and its last deliveries are
+/// observed atomically.
+struct Inbox {
+    queues: HashMap<(Pid, Tag), VecDeque<Vec<u8>>>,
+    dead: HashMap<Pid, String>,
+}
+
+struct Shared {
+    inbox: Mutex<Inbox>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    fn deliver(&self, from: Pid, tag: Tag, payload: Vec<u8>) {
+        let mut inbox = self.inbox.lock().unwrap();
+        inbox.queues.entry((from, tag)).or_default().push_back(payload);
+        drop(inbox);
+        self.cv.notify_all();
+    }
+
+    /// Mark `from` dead with a one-line reason; pending receives fail
+    /// immediately. The first verdict wins (it names the root cause).
+    fn poison(&self, from: Option<Pid>, reason: String) {
+        let Some(from) = from else { return };
+        let mut inbox = self.inbox.lock().unwrap();
+        inbox.dead.entry(from).or_insert(reason);
+        drop(inbox);
+        self.cv.notify_all();
+    }
+}
+
+/// TCP transport endpoint for one PID. See the module docs.
+pub struct TcpTransport {
+    pid: Pid,
+    np: usize,
+    /// `addrs[p]` — peer `p`'s data-listener address.
+    addrs: Vec<String>,
+    /// Lazily dialed outgoing connections, one per peer.
+    conns: Vec<Mutex<Option<TcpStream>>>,
+    shared: Arc<Shared>,
+    accept_handle: Option<JoinHandle<()>>,
+    connect_attempts: u32,
+    connect_backoff: Duration,
+    stats: CommStats,
+}
+
+impl TcpTransport {
+    /// Endpoint over an already-bound data listener and the full
+    /// pid→address map (what rendezvous produces).
+    fn from_parts(
+        pid: Pid,
+        np: usize,
+        listener: TcpListener,
+        addrs: Vec<String>,
+    ) -> io::Result<TcpTransport> {
+        assert_eq!(addrs.len(), np, "address map must cover the world");
+        let shared = Arc::new(Shared {
+            inbox: Mutex::new(Inbox { queues: HashMap::new(), dead: HashMap::new() }),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept_handle = std::thread::Builder::new()
+            .name(format!("tcp-accept-{pid}"))
+            .spawn(move || accept_loop(listener, accept_shared))?;
+        Ok(TcpTransport {
+            pid,
+            np,
+            addrs,
+            conns: (0..np).map(|_| Mutex::new(None)).collect(),
+            shared,
+            accept_handle: Some(accept_handle),
+            connect_attempts: 40,
+            connect_backoff: Duration::from_millis(25),
+            stats: CommStats::new(),
+        })
+    }
+
+    /// Override the bounded connect retry (attempts × exponential
+    /// backoff from `backoff`, capped at 1 s per wait).
+    pub fn with_connect_retry(mut self, attempts: u32, backoff: Duration) -> TcpTransport {
+        self.connect_attempts = attempts.max(1);
+        self.connect_backoff = backoff;
+        self
+    }
+
+    /// This endpoint's data-listener address.
+    pub fn addr(&self) -> &str {
+        &self.addrs[self.pid]
+    }
+
+    fn dial(&self, to: Pid) -> Result<TcpStream> {
+        let addr = &self.addrs[to];
+        let mut delay = self.connect_backoff;
+        let mut last: Option<io::Error> = None;
+        for _ in 0..self.connect_attempts {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    let _ = s.set_nodelay(true);
+                    return Ok(s);
+                }
+                Err(e) => {
+                    last = Some(e);
+                    std::thread::sleep(delay);
+                    delay = (delay * 2).min(Duration::from_secs(1));
+                }
+            }
+        }
+        let e = last.unwrap();
+        Err(CommError::Io(io::Error::new(
+            e.kind(),
+            format!(
+                "tcp connect to pid {to} at {addr} failed after {} attempts: {e}",
+                self.connect_attempts
+            ),
+        )))
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_handle.take() {
+            // Unblock the accept loop with a throwaway connection.
+            let _ = TcpStream::connect(&self.addrs[self.pid]);
+            let _ = h.join();
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn pid(&self) -> Pid {
+        self.pid
+    }
+
+    fn np(&self) -> usize {
+        self.np
+    }
+
+    fn send(&self, to: Pid, tag: Tag, payload: &[u8]) -> Result<()> {
+        self.send_parts(to, tag, &[payload])
+    }
+
+    fn send_parts(&self, to: Pid, tag: Tag, parts: &[&[u8]]) -> Result<()> {
+        let Some(conn) = self.conns.get(to) else {
+            return Err(CommError::Disconnected(to));
+        };
+        let total: usize = parts.iter().map(|p| p.len()).sum();
+        let header = frame_header(self.pid, tag, total);
+        let mut guard = conn.lock().unwrap();
+        if guard.is_none() {
+            *guard = Some(self.dial(to)?);
+        }
+        let stream = guard.as_mut().unwrap();
+        let mut bufs: Vec<&[u8]> = Vec::with_capacity(parts.len() + 1);
+        bufs.push(&header);
+        bufs.extend_from_slice(parts);
+        if let Err(e) = write_all_vectored(stream, &bufs) {
+            // A broken connection is not resumable mid-frame; drop it
+            // so a later send re-dials from a clean boundary.
+            *guard = None;
+            return Err(CommError::Io(io::Error::new(
+                e.kind(),
+                format!("tcp send of {total} bytes to pid {to} failed: {e}"),
+            )));
+        }
+        self.stats.record_send(total);
+        Ok(())
+    }
+
+    fn recv_timeout(&self, from: Pid, tag: Tag, timeout: Duration) -> Result<Vec<u8>> {
+        if from >= self.np {
+            return Err(CommError::Disconnected(from));
+        }
+        let deadline = Instant::now() + timeout;
+        let mut inbox = self.shared.inbox.lock().unwrap();
+        loop {
+            if let Some(q) = inbox.queues.get_mut(&(from, tag)) {
+                if let Some(msg) = q.pop_front() {
+                    if q.is_empty() {
+                        inbox.queues.remove(&(from, tag));
+                    }
+                    self.stats.record_recv(msg.len());
+                    return Ok(msg);
+                }
+            }
+            // Already-delivered frames above stay receivable; only a
+            // queue miss consults the poison table.
+            if let Some(reason) = inbox.dead.get(&from) {
+                return Err(CommError::Malformed(reason.clone()));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(CommError::timeout(from, tag));
+            }
+            let (g, _) = self.shared.cv.wait_timeout(inbox, deadline - now).unwrap();
+            inbox = g;
+        }
+    }
+
+    fn stats(&self) -> &CommStats {
+        &self.stats
+    }
+
+    fn kind(&self) -> Option<TransportKind> {
+        Some(TransportKind::Tcp)
+    }
+}
+
+/// Accept connections until shutdown, one reader thread each.
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    loop {
+        let Ok((stream, _)) = listener.accept() else {
+            return;
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let reader_shared = Arc::clone(&shared);
+        let _ = std::thread::Builder::new()
+            .name("tcp-reader".into())
+            .spawn(move || reader_loop(stream, reader_shared));
+    }
+}
+
+enum HeaderRead {
+    Full,
+    /// Zero bytes at a frame boundary: clean shutdown.
+    CleanEof,
+}
+
+fn read_header(stream: &mut TcpStream, buf: &mut [u8]) -> io::Result<HeaderRead> {
+    let mut off = 0;
+    while off < buf.len() {
+        match stream.read(&mut buf[off..]) {
+            Ok(0) if off == 0 => return Ok(HeaderRead::CleanEof),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("connection closed {off} bytes into a {} byte header", buf.len()),
+                ))
+            }
+            Ok(n) => off += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(HeaderRead::Full)
+}
+
+/// Parse frames off one accepted connection, dispatching payloads
+/// into the inbox. Any malformation or mid-frame EOF poisons the
+/// attributable sender and ends the connection.
+fn reader_loop(mut stream: TcpStream, shared: Arc<Shared>) {
+    let mut last_from: Option<Pid> = None;
+    loop {
+        let mut hdr = [0u8; FRAME_HDR];
+        match read_header(&mut stream, &mut hdr) {
+            Ok(HeaderRead::CleanEof) => return,
+            Ok(HeaderRead::Full) => {}
+            Err(e) => {
+                shared.poison(last_from, format!("tcp frame header truncated: {e}"));
+                return;
+            }
+        }
+        let magic = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+        let crc = u32::from_le_bytes(hdr[24..28].try_into().unwrap());
+        if magic != FRAME_MAGIC || crc != crc32(&hdr[0..24]) {
+            // The `from` field is untrusted when the CRC fails; only a
+            // previously attributed sender can be poisoned.
+            shared.poison(
+                last_from,
+                format!("tcp frame desynchronized (magic {magic:#x}, bad header crc)"),
+            );
+            return;
+        }
+        let len = u64::from_le_bytes(hdr[4..12].try_into().unwrap());
+        let tag = Tag::from_le_bytes(hdr[12..20].try_into().unwrap());
+        let from = u32::from_le_bytes(hdr[20..24].try_into().unwrap()) as Pid;
+        if len > MAX_FRAME {
+            shared.poison(Some(from), format!("tcp frame from pid {from} claims {len} bytes"));
+            return;
+        }
+        last_from = Some(from);
+        let mut payload = vec![0u8; len as usize];
+        if let Err(e) = stream.read_exact(&mut payload) {
+            shared.poison(
+                Some(from),
+                format!("tcp frame from pid {from} truncated ({len} byte payload): {e}"),
+            );
+            return;
+        }
+        shared.deliver(from, tag, payload);
+    }
+}
+
+/// Write every buffer in order with vectored I/O, resuming across
+/// partial writes (`write_all_vectored` is not yet stable).
+fn write_all_vectored(stream: &mut TcpStream, bufs: &[&[u8]]) -> io::Result<()> {
+    let mut idx = 0;
+    let mut off = 0;
+    let mut slices: Vec<IoSlice<'_>> = Vec::with_capacity(bufs.len());
+    while idx < bufs.len() {
+        if bufs[idx].len() == off {
+            idx += 1;
+            off = 0;
+            continue;
+        }
+        slices.clear();
+        slices.push(IoSlice::new(&bufs[idx][off..]));
+        for b in &bufs[idx + 1..] {
+            if !b.is_empty() {
+                slices.push(IoSlice::new(b));
+            }
+        }
+        let mut n = match stream.write_vectored(&slices) {
+            Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+            Ok(n) => n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        while idx < bufs.len() && n > 0 {
+            let avail = bufs[idx].len() - off;
+            if n < avail {
+                off += n;
+                break;
+            }
+            n -= avail;
+            idx += 1;
+            off = 0;
+        }
+    }
+    Ok(())
+}
+
+fn put_u64(s: &mut TcpStream, v: u64) -> io::Result<()> {
+    s.write_all(&v.to_le_bytes())
+}
+
+fn get_u64(s: &mut TcpStream) -> io::Result<u64> {
+    let mut b = [0u8; 8];
+    s.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn put_str(s: &mut TcpStream, v: &str) -> io::Result<()> {
+    put_u64(s, v.len() as u64)?;
+    s.write_all(v.as_bytes())
+}
+
+fn get_str(s: &mut TcpStream) -> io::Result<String> {
+    let len = get_u64(s)?;
+    if len > 4096 {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("rendezvous string of {len} bytes"),
+        ));
+    }
+    let mut buf = vec![0u8; len as usize];
+    s.read_exact(&mut buf)?;
+    String::from_utf8(buf)
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "rendezvous string not utf-8"))
+}
+
+/// Leader-rooted address exchange for a TCP world (see module docs).
+pub struct TcpRendezvous {
+    np: usize,
+    boot: TcpListener,
+    data: TcpListener,
+}
+
+impl TcpRendezvous {
+    /// Bind the leader's boot and data listeners — before spawning
+    /// workers, so [`TcpRendezvous::boot_addr`] can ride their
+    /// environment.
+    pub fn leader(np: usize) -> io::Result<TcpRendezvous> {
+        Ok(TcpRendezvous {
+            np,
+            boot: TcpListener::bind("127.0.0.1:0")?,
+            data: TcpListener::bind("127.0.0.1:0")?,
+        })
+    }
+
+    /// The boot address workers must register at
+    /// (`DISTARRAY_TCP_BOOT`).
+    pub fn boot_addr(&self) -> String {
+        self.boot.local_addr().map(|a| a.to_string()).unwrap_or_default()
+    }
+
+    /// Accept every worker's `(pid, addr)` registration, reply with
+    /// the complete map, and become the leader's endpoint.
+    pub fn complete_leader(self) -> io::Result<TcpTransport> {
+        let mut addrs = vec![String::new(); self.np];
+        addrs[0] = self.data.local_addr()?.to_string();
+        let mut pending = Vec::with_capacity(self.np.saturating_sub(1));
+        for _ in 1..self.np {
+            let (mut s, _) = self.boot.accept()?;
+            s.set_read_timeout(Some(BOOT_TIMEOUT))?;
+            let pid = get_u64(&mut s)? as usize;
+            let addr = get_str(&mut s)?;
+            if pid == 0 || pid >= self.np || !addrs[pid].is_empty() {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("rendezvous registration for invalid or duplicate pid {pid}"),
+                ));
+            }
+            addrs[pid] = addr;
+            pending.push(s);
+        }
+        for s in &mut pending {
+            put_u64(s, self.np as u64)?;
+            for a in &addrs {
+                put_str(s, a)?;
+            }
+        }
+        TcpTransport::from_parts(0, self.np, self.data, addrs)
+    }
+
+    /// Worker side: bind a data listener, register at `boot_addr`,
+    /// receive the full map, and become this worker's endpoint.
+    pub fn worker(pid: Pid, boot_addr: &str) -> io::Result<TcpTransport> {
+        let data = TcpListener::bind("127.0.0.1:0")?;
+        let mut boot = connect_with_retry(boot_addr, 100, Duration::from_millis(30))?;
+        boot.set_read_timeout(Some(BOOT_TIMEOUT))?;
+        put_u64(&mut boot, pid as u64)?;
+        put_str(&mut boot, &data.local_addr()?.to_string())?;
+        let np = get_u64(&mut boot)? as usize;
+        if pid >= np {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("rendezvous map covers {np} pids, this worker is {pid}"),
+            ));
+        }
+        let mut addrs = Vec::with_capacity(np);
+        for _ in 0..np {
+            addrs.push(get_str(&mut boot)?);
+        }
+        TcpTransport::from_parts(pid, np, data, addrs)
+    }
+
+    /// An in-process world over loopback — tests, conformance, and
+    /// the transport microbench.
+    pub fn loopback_world(np: usize) -> io::Result<Vec<TcpTransport>> {
+        let listeners: Vec<TcpListener> =
+            (0..np).map(|_| TcpListener::bind("127.0.0.1:0")).collect::<io::Result<_>>()?;
+        let addrs: Vec<String> = listeners
+            .iter()
+            .map(|l| l.local_addr().map(|a| a.to_string()))
+            .collect::<io::Result<_>>()?;
+        listeners
+            .into_iter()
+            .enumerate()
+            .map(|(pid, l)| TcpTransport::from_parts(pid, np, l, addrs.clone()))
+            .collect()
+    }
+}
+
+fn connect_with_retry(addr: &str, attempts: u32, backoff: Duration) -> io::Result<TcpStream> {
+    let mut delay = backoff;
+    let mut last: Option<io::Error> = None;
+    for _ in 0..attempts.max(1) {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_secs(1));
+            }
+        }
+    }
+    let e = last.unwrap();
+    Err(io::Error::new(
+        e.kind(),
+        format!("connect to {addr} failed after {attempts} attempts: {e}"),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_matches_known_vector() {
+        // The classic IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn loopback_roundtrip_and_tag_order() {
+        let world = TcpRendezvous::loopback_world(2).unwrap();
+        let (t0, t1) = (&world[0], &world[1]);
+        for i in 0..10u8 {
+            t0.send(1, 7, &[i; 5]).unwrap();
+            t0.send(1, 8, &[i + 50; 2]).unwrap();
+        }
+        for i in 0..10u8 {
+            assert_eq!(t1.recv_timeout(0, 7, Duration::from_secs(5)).unwrap(), vec![i; 5]);
+            assert_eq!(t1.recv_timeout(0, 8, Duration::from_secs(5)).unwrap(), vec![i + 50; 2]);
+        }
+        // Both directions work over the pair's two directed streams.
+        t1.send(0, 9, b"pong").unwrap();
+        assert_eq!(t0.recv_timeout(1, 9, Duration::from_secs(5)).unwrap(), b"pong");
+    }
+
+    #[test]
+    fn send_parts_is_one_contiguous_payload() {
+        let world = TcpRendezvous::loopback_world(2).unwrap();
+        world[0].send_parts(1, 3, &[b"abc", b"", b"defg", b"h"]).unwrap();
+        assert_eq!(world[1].recv_timeout(0, 3, Duration::from_secs(5)).unwrap(), b"abcdefgh");
+    }
+
+    #[test]
+    fn timeout_names_the_silent_peer() {
+        let world = TcpRendezvous::loopback_world(2).unwrap();
+        let err = world[0].recv_timeout(1, 4, Duration::from_millis(30)).unwrap_err();
+        match err {
+            CommError::Timeout { from, tag, .. } => assert_eq!((from, tag), (1, 4)),
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+    }
+
+    /// A frame whose header promises more payload than ever arrives
+    /// poisons the sender: the pending receive fails with a one-line
+    /// error well before the timeout would fire — never a hang.
+    #[test]
+    fn truncated_frame_fails_fast_instead_of_hanging() {
+        let world = TcpRendezvous::loopback_world(2).unwrap();
+        let t1 = &world[1];
+        let mut raw = TcpStream::connect(t1.addr()).unwrap();
+        let header = frame_header(0, 42, 1000);
+        raw.write_all(&header).unwrap();
+        raw.write_all(&[7u8; 10]).unwrap(); // 10 of 1000 payload bytes
+        drop(raw);
+        let t = Instant::now();
+        let err = t1.recv_timeout(0, 42, Duration::from_secs(30)).unwrap_err();
+        assert!(t.elapsed() < Duration::from_secs(5), "poisoning must not wait out the timeout");
+        let msg = err.to_string();
+        assert!(msg.contains("truncated") && msg.contains("pid 0"), "{msg}");
+    }
+
+    /// Garbage that fails the magic/CRC check cannot be attributed to
+    /// any sender — the connection dies quietly and real traffic from
+    /// properly framed connections keeps flowing.
+    #[test]
+    fn desynchronized_connection_does_not_poison_real_peers() {
+        let world = TcpRendezvous::loopback_world(2).unwrap();
+        let mut raw = TcpStream::connect(world[1].addr()).unwrap();
+        raw.write_all(&[0xAAu8; 64]).unwrap();
+        drop(raw);
+        world[0].send(1, 5, b"still alive").unwrap();
+        assert_eq!(
+            world[1].recv_timeout(0, 5, Duration::from_secs(5)).unwrap(),
+            b"still alive"
+        );
+    }
+
+    /// Frames already delivered before the truncation stay
+    /// receivable; only the queue miss reports the poisoning.
+    #[test]
+    fn poisoning_preserves_previously_landed_frames() {
+        let world = TcpRendezvous::loopback_world(2).unwrap();
+        let t1 = &world[1];
+        let mut raw = TcpStream::connect(t1.addr()).unwrap();
+        raw.write_all(&frame_header(0, 6, 4)).unwrap();
+        raw.write_all(b"good").unwrap();
+        raw.write_all(&frame_header(0, 6, 500)).unwrap();
+        raw.write_all(&[1u8; 3]).unwrap();
+        drop(raw);
+        assert_eq!(t1.recv_timeout(0, 6, Duration::from_secs(5)).unwrap(), b"good");
+        assert!(matches!(
+            t1.recv_timeout(0, 6, Duration::from_secs(5)),
+            Err(CommError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn rendezvous_builds_a_working_world() {
+        let np = 3;
+        let rdv = TcpRendezvous::leader(np).unwrap();
+        let boot = rdv.boot_addr();
+        let workers: Vec<_> = (1..np)
+            .map(|pid| {
+                let boot = boot.clone();
+                std::thread::spawn(move || TcpRendezvous::worker(pid, &boot).unwrap())
+            })
+            .collect();
+        let leader = rdv.complete_leader().unwrap();
+        let workers: Vec<TcpTransport> =
+            workers.into_iter().map(|h| h.join().unwrap()).collect();
+        for (i, w) in workers.iter().enumerate() {
+            w.send(0, 1, &[w.pid() as u8; 4]).unwrap();
+            assert_eq!(
+                leader.recv_timeout(i + 1, 1, Duration::from_secs(5)).unwrap(),
+                vec![(i + 1) as u8; 4]
+            );
+            leader.send(w.pid(), 2, b"ack").unwrap();
+            assert_eq!(w.recv_timeout(0, 2, Duration::from_secs(5)).unwrap(), b"ack");
+        }
+    }
+}

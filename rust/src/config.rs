@@ -15,6 +15,7 @@
 
 use crate::backend::BackendKind;
 use crate::collective::CollKind;
+use crate::comm::TransportKind;
 use crate::coordinator::{EngineKind, MapKind, RunConfig};
 use crate::element::Dtype;
 use crate::json::Json;
@@ -90,6 +91,8 @@ impl LaunchConfig {
                 heartbeat: false,
                 checkpoint: String::new(),
                 restore: false,
+                transport: TransportKind::File,
+                recv_timeout_ms: 0,
             },
         }
     }
@@ -184,6 +187,23 @@ impl LaunchConfig {
                 .as_bool()
                 .ok_or_else(|| ConfigError::Field("trace", "must be a boolean".into()))?;
         }
+        if let Some(v) = j.get("transport") {
+            let s = v
+                .as_str()
+                .ok_or_else(|| ConfigError::Field("transport", "must be a string".into()))?;
+            cfg.run.transport = TransportKind::parse(s).ok_or_else(|| {
+                ConfigError::Field(
+                    "transport",
+                    format!("unknown transport '{s}' (expected {})", TransportKind::CHOICES),
+                )
+            })?;
+        }
+        if let Some(v) = j.get("recv_timeout_ms") {
+            cfg.run.recv_timeout_ms = v
+                .as_usize()
+                .ok_or_else(|| ConfigError::Field("recv_timeout_ms", "must be a number".into()))?
+                as u64;
+        }
         // The threaded backend's pool width is the Ntpn axis; the
         // collective topology's node width is the Nppn axis.
         cfg.run.threads = cfg.triples.ntpn;
@@ -207,7 +227,8 @@ mod tests {
             r#"{"triples": "2x4x2", "n": 1024, "nt": 3, "q": 0.5,
                 "map": "blockcyclic:16", "engine": "pjrt-fused",
                 "dtype": "f32", "backend": "threaded", "coll": "hier",
-                "chunk_bytes": 4096, "artifacts": "art"}"#,
+                "chunk_bytes": 4096, "artifacts": "art",
+                "transport": "shmem", "recv_timeout_ms": 45000}"#,
         )
         .unwrap();
         assert_eq!(cfg.triples, Triples::new(2, 4, 2));
@@ -223,6 +244,8 @@ mod tests {
         assert_eq!(cfg.run.nppn, 4, "collective topology follows the Nppn axis");
         assert_eq!(cfg.run.chunk_bytes, 4096);
         assert_eq!(cfg.run.artifacts, "art");
+        assert_eq!(cfg.run.transport, TransportKind::Shmem);
+        assert_eq!(cfg.run.recv_timeout_ms, 45_000);
     }
 
     #[test]
@@ -233,6 +256,8 @@ mod tests {
         assert_eq!(cfg.run.map, MapKind::Block);
         assert_eq!(cfg.run.dtype, Dtype::F64);
         assert_eq!(cfg.run.chunk_bytes, 0, "0 = datapath default");
+        assert_eq!(cfg.run.transport, TransportKind::File);
+        assert_eq!(cfg.run.recv_timeout_ms, 0, "0 = built-in 120 s default");
     }
 
     #[test]
@@ -260,6 +285,10 @@ mod tests {
         assert!(matches!(
             LaunchConfig::from_json(r#"{"chunk_bytes": 0}"#),
             Err(ConfigError::Field("chunk_bytes", _))
+        ));
+        assert!(matches!(
+            LaunchConfig::from_json(r#"{"transport": "carrier-pigeon"}"#),
+            Err(ConfigError::Field("transport", _))
         ));
         assert!(matches!(
             LaunchConfig::from_json("{"),

@@ -211,6 +211,8 @@ mod tests {
             heartbeat: false,
             checkpoint: String::new(),
             restore: false,
+            transport: crate::comm::TransportKind::Channel,
+            recv_timeout_ms: 0,
         }
     }
 

@@ -2,7 +2,7 @@
 
 use crate::backend::BackendKind;
 use crate::collective::CollKind;
-use crate::comm::{CommError, Decode, Encode, WireReader, WireWriter};
+use crate::comm::{CommError, Decode, Encode, TransportKind, WireReader, WireWriter};
 use crate::dmap::Dmap;
 use crate::element::Dtype;
 use crate::stream::timing::OpTimes;
@@ -125,6 +125,15 @@ pub struct RunConfig {
     /// Resume from the shards in `checkpoint` instead of the §III
     /// initial state (`--restore`).
     pub restore: bool,
+    /// Wire transport carrying the worker world (`--transport` axis).
+    /// Workers inherit the concrete endpoint through the environment;
+    /// the config copy keeps the choice in provenance records and on
+    /// the protocol wire.
+    pub transport: TransportKind,
+    /// Receive-timeout override in milliseconds (`--recv-timeout-ms`;
+    /// 0 = the built-in 120 s default). Applied by every worker via
+    /// [`crate::comm::set_default_recv_timeout_ms`].
+    pub recv_timeout_ms: u64,
 }
 
 impl Encode for RunConfig {
@@ -151,6 +160,8 @@ impl Encode for RunConfig {
         w.put_bool(self.heartbeat);
         w.put_str(&self.checkpoint);
         w.put_bool(self.restore);
+        w.put_u8(self.transport.code());
+        w.put_u64(self.recv_timeout_ms);
     }
 }
 
@@ -190,6 +201,10 @@ impl Decode for RunConfig {
         let heartbeat = r.get_bool()?;
         let checkpoint = r.get_str()?;
         let restore = r.get_bool()?;
+        let tcode = r.get_u8()?;
+        let transport = TransportKind::from_code(tcode)
+            .ok_or_else(|| CommError::Malformed(format!("bad transport code {tcode}")))?;
+        let recv_timeout_ms = r.get_u64()?;
         Ok(RunConfig {
             n_global,
             nt,
@@ -207,6 +222,8 @@ impl Decode for RunConfig {
             heartbeat,
             checkpoint,
             restore,
+            transport,
+            recv_timeout_ms,
         })
     }
 }
@@ -329,6 +346,8 @@ mod tests {
             heartbeat: true,
             checkpoint: "ckpt/run1".into(),
             restore: true,
+            transport: TransportKind::Shmem,
+            recv_timeout_ms: 45_000,
         };
         let got = RunConfig::from_bytes(&c.to_bytes()).unwrap();
         assert_eq!(got, c);
@@ -386,6 +405,8 @@ mod tests {
             heartbeat: false,
             checkpoint: String::new(),
             restore: false,
+            transport: TransportKind::File,
+            recv_timeout_ms: 0,
         };
         let bytes = c.to_bytes();
         assert!(RunConfig::from_bytes(&bytes[..bytes.len() - 3]).is_err());

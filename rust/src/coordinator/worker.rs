@@ -197,6 +197,11 @@ pub fn run_worker(t: &dyn Transport) -> Result<WorkerReport> {
     if cfg.chunk_bytes > 0 {
         crate::comm::datapath::set_ambient_chunk_bytes(cfg.chunk_bytes);
     }
+    // Same authority for the receive patience: the broadcast value
+    // wins over the env inherit (0 keeps the 120 s default).
+    if cfg.recv_timeout_ms > 0 {
+        crate::comm::set_default_recv_timeout_ms(cfg.recv_timeout_ms);
+    }
     if cfg.trace {
         crate::obs::set_thread_rank(t.pid());
         crate::obs::set_enabled(true);

@@ -88,15 +88,30 @@ pub fn run_chaos<T: Element>(
     n: usize,
     cfg: DetectorConfig,
 ) -> Result<ChaosReport, String> {
+    let endpoints: Vec<FaultTransport<_>> = ChannelHub::world(np)
+        .into_iter()
+        .map(|t| FaultTransport::new(t, FaultPlan::default()))
+        .collect();
+    run_chaos_on::<T, _>(endpoints, victim, n, cfg)
+}
+
+/// [`run_chaos`] over caller-built endpoints — the same choreography
+/// on any [`Transport`] (the CLI drills shmem and TCP worlds through
+/// this). Endpoints must be the full `0..np` world, each already
+/// wrapped in a [`FaultTransport`] (the kill switch is the drill's
+/// fault).
+pub fn run_chaos_on<T: Element, Tr: Transport>(
+    endpoints: Vec<FaultTransport<Tr>>,
+    victim: Pid,
+    n: usize,
+    cfg: DetectorConfig,
+) -> Result<ChaosReport, String> {
+    let np = endpoints.len();
     if np < 2 || victim == 0 || victim >= np {
         return Err(format!(
             "chaos needs np >= 2 and a worker victim in 1..np (np={np}, victim={victim})"
         ));
     }
-    let endpoints: Vec<FaultTransport<_>> = ChannelHub::world(np)
-        .into_iter()
-        .map(|t| FaultTransport::new(t, FaultPlan::default()))
-        .collect();
     let survivors: Vec<Pid> = (0..np).filter(|&p| p != victim).collect();
     let identical = Mutex::new(true);
     let rounds = Mutex::new(0u64);
@@ -254,6 +269,25 @@ mod tests {
         assert!(run_chaos::<f64>(4, 0, 64, fast()).is_err(), "leader is not killable");
         assert!(run_chaos::<f64>(4, 7, 64, fast()).is_err(), "victim must exist");
         assert!(run_chaos::<f64>(1, 1, 64, fast()).is_err(), "need a worker");
+    }
+
+    /// The drill is transport-generic: the same choreography over
+    /// shared-memory endpoints recovers bit-identically.
+    #[cfg(unix)]
+    #[test]
+    fn chaos_composes_over_shmem_endpoints() {
+        use crate::comm::ShmemTransport;
+        let dir = std::env::temp_dir()
+            .join(format!("distarray_chaos_shmem_{}", std::process::id()));
+        let endpoints: Vec<_> = ShmemTransport::world(&dir, 3)
+            .unwrap()
+            .into_iter()
+            .map(|t| FaultTransport::new(t, FaultPlan::default()))
+            .collect();
+        let r = run_chaos_on::<f64, _>(endpoints, 1, 2048, fast()).unwrap();
+        assert_eq!(r.survivors, vec![0, 2]);
+        assert!(r.bit_identical);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

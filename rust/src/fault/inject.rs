@@ -9,7 +9,7 @@
 //! deterministic regression test. Composes over both the channel and
 //! file transports — the wrapper only sees the trait.
 
-use crate::comm::{CommError, CommStats, Result, Tag, Transport};
+use crate::comm::{CommError, CommStats, Result, Tag, Transport, TransportKind};
 use crate::dmap::Pid;
 use crate::prop::Rng;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -164,6 +164,14 @@ impl<T: Transport> Transport for FaultTransport<T> {
 
     fn np(&self) -> usize {
         self.inner.np()
+    }
+
+    fn kind(&self) -> Option<TransportKind> {
+        self.inner.kind()
+    }
+
+    fn kind_to(&self, to: Pid) -> Option<TransportKind> {
+        self.inner.kind_to(to)
     }
 
     fn send(&self, to: Pid, tag: Tag, payload: &[u8]) -> Result<()> {

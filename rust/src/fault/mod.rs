@@ -36,7 +36,7 @@ pub mod ckpt;
 pub mod detect;
 pub mod inject;
 
-pub use chaos::{run_chaos, ChaosReport};
+pub use chaos::{run_chaos, run_chaos_on, ChaosReport};
 pub use ckpt::{read_shard, shard_path, write_shard, CkptError, Shard};
 pub use detect::{respond_loop, Detector, DetectorConfig};
 pub use inject::{FaultPlan, FaultTransport};

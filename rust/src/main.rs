@@ -7,6 +7,8 @@
 //! * `bench-remap` — measure the coalesced remap hot path (bench_remap_v1)
 //! * `bench-collective` — measure the collective algorithms (bench_collective_v1)
 //! * `bench-overlap` — measure compute/communication overlap (bench_overlap_v1)
+//! * `bench-transport` — ping-pong / streaming microbench across transports
+//!   (bench_transport_v1)
 //! * `sweep`       — regenerate a figure (fig3 | fig4 | petascale)
 //! * `report`      — print a paper table (table1 | table2 | fig4)
 //! * `trace-report` — merge per-rank NDJSON traces into a summary / Chrome export
@@ -19,7 +21,9 @@
 use distarray::backend::{BackendKind, BackendRegistry};
 use distarray::cli::Args;
 use distarray::collective::CollKind;
-use distarray::comm::FileTransport;
+use distarray::comm::{
+    FileTransport, HybridTransport, ShmemTransport, TcpRendezvous, Transport, TransportKind,
+};
 use distarray::coordinator::{run_leader, run_worker, EngineKind, MapKind, RunConfig};
 use distarray::launcher::{spawn_workers, PinPlan, Triples, WorkerEnv};
 use distarray::report::{bench_json, fig3, fig4, fmt_bw, petascale, table1, table2};
@@ -34,6 +38,7 @@ fn main() {
         Some("bench-remap") => cmd_bench_remap(&args),
         Some("bench-collective") => cmd_bench_collective(&args),
         Some("bench-overlap") => cmd_bench_overlap(&args),
+        Some("bench-transport") => cmd_bench_transport(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("report") => cmd_report(&args),
         Some("trace-report") => cmd_trace_report(&args),
@@ -50,12 +55,17 @@ fn main() {
                  \n           --backend host|threaded|pjrt (native engine; default host)\n\
                  \n           --coll star|tree|ring|hier|auto (collective algorithms; default star)\n\
                  \n           --chunk-bytes N (stream chunk of the shared datapath; default 65536)\n\
+                 \n           --transport channel|file|shmem|tcp|hybrid (worker wire; default file;\n\
+                 \n           channel runs the whole world in-process, hybrid routes shmem\n\
+                 \n           intra-node and tcp across nodes per the triples Nppn axis)\n\
+                 \n           --recv-timeout-ms N (receive patience everywhere; default 120000)\n\
                  \n           --bench-json out.json (machine-readable per-op bandwidths)\n\
                  \n           --trace out.ndjson|- (per-rank NDJSON span traces; workers\n\
                  \n           write out.ndjson.rank<pid>) --metrics-interval MS (counter samples)\n\
                  \n           --heartbeat (leader failure detector + worker responders)\n\
                  \n           --checkpoint DIR (ckpt_v1 shards, native engine) [--restore]\n\
                  \n  chaos    --np 4 --kill 2 [--n N] [--dtype f64] [--trace out.ndjson]\n\
+                 \n           [--transport channel|file|shmem|tcp] (fault world's wire)\n\
                  \n           (kill one rank mid-job: detect, re-deal onto survivors,\n\
                  \n           verify bit-identity against a clean survivor run)\n\
                  \n  bench-remap --np 4 --n 1048576 --iters 10 --dtype f64\n\
@@ -66,6 +76,9 @@ fn main() {
                  \n  bench-overlap --np 4 --bytes 67108864 --iters 3 [--chunk-bytes N]\n\
                  \n           [--bench-json out.json] (bench_overlap_v1: wire/compute/serial/total\n\
                  \n           seconds + overlap efficiency for remap and elimination allreduce)\n\
+                 \n  bench-transport [--transport channel,file,shmem,tcp,hybrid] [--iters 200]\n\
+                 \n           [--bytes 4194304] [--bench-json out.json] (bench_transport_v1:\n\
+                 \n           small-message ping-pong RTT + chunked streaming GB/s per transport)\n\
                  \n  sweep    fig3|fig4|petascale [--measure] [--csv] [--backend host|threaded]\n\
                  \n  report   table1|table2|fig4\n\
                  \n  trace-report <trace.ndjson>... [--check] [--chrome out.json] [--analyze]\n\
@@ -240,6 +253,29 @@ fn cmd_run(args: &Args) -> i32 {
         Ok(v) => v,
         Err(code) => return code,
     };
+    let transport = match axis_flag(
+        args,
+        "transport",
+        TransportKind::CHOICES,
+        base.run.transport,
+        TransportKind::parse,
+    ) {
+        Ok(v) => v,
+        Err(code) => return code,
+    };
+    let recv_timeout_ms = match args.flag("recv-timeout-ms") {
+        None => base.run.recv_timeout_ms,
+        Some(s) => match s.parse::<u64>() {
+            Ok(ms) if ms >= 1 => ms,
+            _ => {
+                distarray::log!(
+                    Error,
+                    "invalid --recv-timeout-ms '{s}' (expected milliseconds >= 1)"
+                );
+                return 2;
+            }
+        },
+    };
     // `--trace` names the leader's NDJSON file (`-` = stderr); a
     // config file can also set `"trace": true` and take the default
     // name. Workers write `<path>.rank<pid>` beside it.
@@ -337,6 +373,8 @@ fn cmd_run(args: &Args) -> i32 {
         heartbeat,
         checkpoint,
         restore,
+        transport,
+        recv_timeout_ms,
     };
     // Any library collective in this process (darray reductions,
     // barriers) follows the configured algorithm too — and spawned
@@ -350,6 +388,14 @@ fn cmd_run(args: &Args) -> i32 {
     if chunk_bytes > 0 {
         distarray::comm::datapath::set_ambient_chunk_bytes(chunk_bytes);
         std::env::set_var("DISTARRAY_CHUNK_BYTES", chunk_bytes.to_string());
+    }
+    // The receive patience travels both ways: set here for this
+    // process (and workers, via the environment) so even the config
+    // broadcast obeys it, and carried in the config wire so workers
+    // re-apply it authoritatively after decode.
+    if recv_timeout_ms > 0 {
+        distarray::comm::set_default_recv_timeout_ms(recv_timeout_ms);
+        std::env::set_var("DISTARRAY_RECV_TIMEOUT_MS", recv_timeout_ms.to_string());
     }
     if let Some(path) = &trace_path {
         // Workers learn the trace file and sampler interval from the
@@ -370,16 +416,67 @@ fn cmd_run(args: &Args) -> i32 {
         }
     }
     println!(
-        "repro run: triples={triples} Np={} N={n} Nt={nt} engine={} dtype={} backend={} coll={}",
+        "repro run: triples={triples} Np={} N={n} Nt={nt} engine={} dtype={} backend={} coll={} transport={}",
         triples.np(),
         cfg.engine.name(),
         cfg.dtype,
         cfg.backend,
-        cfg.coll
+        cfg.coll,
+        cfg.transport
     );
 
     let plan = PinPlan::for_node(&triples);
     plan.apply(0);
+
+    // Channel endpoints cannot cross a process boundary: the whole
+    // world runs in this process, workers on threads — no spool, no
+    // spawns, the fastest path for single-node smoke runs.
+    if transport == TransportKind::Channel {
+        let mut world = distarray::comm::ChannelHub::world(triples.np());
+        let leader = world.remove(0);
+        let handles: Vec<_> = world
+            .into_iter()
+            .map(|t| std::thread::spawn(move || run_worker(&t)))
+            .collect();
+        let out = run_leader(&leader, &cfg);
+        let mut ok = true;
+        for h in handles {
+            ok &= matches!(h.join(), Ok(Ok(rep)) if rep.passed);
+        }
+        return match out {
+            Ok((agg, results)) => {
+                ok &= report_run(args, &cfg, &agg, &results);
+                finish_local_trace(trace_path.is_some());
+                if let Some(path) = trace_path.as_deref().filter(|p| *p != "-") {
+                    println!("trace written to {path}");
+                }
+                i32::from(!ok)
+            }
+            Err(e) => {
+                distarray::log!(Error, "leader failed: {e}");
+                finish_local_trace(trace_path.is_some());
+                1
+            }
+        };
+    }
+
+    // TCP-backed worlds rendezvous through the leader: bind the boot
+    // and data listeners before spawning so the boot address rides the
+    // workers' environment.
+    let mut rendezvous = None;
+    if matches!(transport, TransportKind::Tcp | TransportKind::Hybrid) {
+        match TcpRendezvous::leader(triples.np()) {
+            Ok(r) => {
+                std::env::set_var("DISTARRAY_TCP_BOOT", r.boot_addr());
+                rendezvous = Some(r);
+            }
+            Err(e) => {
+                distarray::log!(Error, "tcp rendezvous: {e}");
+                return 1;
+            }
+        }
+    }
+    std::env::set_var("DISTARRAY_TRANSPORT", transport.name());
 
     let workers = match spawn_workers(&triples, &spool, &[]) {
         Ok(w) => w,
@@ -388,45 +485,47 @@ fn cmd_run(args: &Args) -> i32 {
             return 1;
         }
     };
-    let leader = match FileTransport::new(&spool, 0, triples.np()) {
+    let np = triples.np();
+    let built: Result<Box<dyn Transport>, distarray::comm::CommError> = match transport {
+        TransportKind::File => {
+            FileTransport::new(&spool, 0, np).map(|t| Box::new(t) as Box<dyn Transport>)
+        }
+        TransportKind::Shmem => ShmemTransport::new(&spool, 0, np)
+            .map(|t| Box::new(t) as Box<dyn Transport>)
+            .map_err(Into::into),
+        TransportKind::Tcp => rendezvous
+            .take()
+            .expect("bound above")
+            .complete_leader()
+            .map(|t| Box::new(t) as Box<dyn Transport>)
+            .map_err(Into::into),
+        TransportKind::Hybrid => ShmemTransport::new(&spool, 0, np)
+            .and_then(|sh| {
+                let tcp = rendezvous.take().expect("bound above").complete_leader()?;
+                let topo = distarray::collective::Topology::grouped(np, triples.nppn);
+                Ok(Box::new(HybridTransport::new(sh, tcp, topo)) as Box<dyn Transport>)
+            })
+            .map_err(Into::into),
+        TransportKind::Channel => unreachable!("channel worlds return above"),
+    };
+    let leader = match built {
         Ok(t) => t,
         Err(e) => {
             distarray::log!(Error, "transport: {e}");
+            for w in workers {
+                let pid = w.pid;
+                if let Err(ke) = w.kill() {
+                    distarray::log!(Warn, "reaping worker pid {pid}: {ke}");
+                }
+            }
+            std::fs::remove_dir_all(&spool).ok();
+            finish_local_trace(trace_path.is_some());
             return 1;
         }
     };
-    match run_leader(&leader, &cfg) {
+    match run_leader(&*leader, &cfg) {
         Ok((agg, results)) => {
-            for r in &results {
-                println!(
-                    "  pid n_local={:<10} triad={:<12} backend={:<9} ok={}",
-                    r.n_local,
-                    fmt_bw(r.triad_bw()),
-                    r.backend.name(),
-                    r.validation.passed
-                );
-            }
-            println!(
-                "AGGREGATE[{}]: copy={} scale={} add={} triad={} ({:.3e} elem/s @ {}B/elem) validated={}",
-                agg.backend,
-                fmt_bw(agg.bw[0]),
-                fmt_bw(agg.bw[1]),
-                fmt_bw(agg.bw[2]),
-                fmt_bw(agg.bw[3]),
-                agg.triad_elements_per_sec(),
-                agg.width,
-                agg.all_valid
-            );
-            let mut ok = agg.all_valid;
-            if let Some(path) = args.flag("bench-json") {
-                match bench_json::write_file(path, &cfg, &agg) {
-                    Ok(()) => println!("bench json written to {path}"),
-                    Err(e) => {
-                        distarray::log!(Error, "bench-json {path}: {e}");
-                        ok = false;
-                    }
-                }
-            }
+            let mut ok = report_run(args, &cfg, &agg, &results);
             for w in workers {
                 ok &= w.wait().unwrap_or(false);
             }
@@ -455,6 +554,47 @@ fn cmd_run(args: &Args) -> i32 {
     }
 }
 
+/// Print the per-rank and aggregate lines and write `--bench-json`;
+/// true iff everything validated and any JSON wrote cleanly.
+fn report_run(
+    args: &Args,
+    cfg: &RunConfig,
+    agg: &distarray::stream::AggregateResult,
+    results: &[distarray::stream::StreamResult],
+) -> bool {
+    for r in results {
+        println!(
+            "  pid n_local={:<10} triad={:<12} backend={:<9} ok={}",
+            r.n_local,
+            fmt_bw(r.triad_bw()),
+            r.backend.name(),
+            r.validation.passed
+        );
+    }
+    println!(
+        "AGGREGATE[{}]: copy={} scale={} add={} triad={} ({:.3e} elem/s @ {}B/elem) validated={}",
+        agg.backend,
+        fmt_bw(agg.bw[0]),
+        fmt_bw(agg.bw[1]),
+        fmt_bw(agg.bw[2]),
+        fmt_bw(agg.bw[3]),
+        agg.triad_elements_per_sec(),
+        agg.width,
+        agg.all_valid
+    );
+    let mut ok = agg.all_valid;
+    if let Some(path) = args.flag("bench-json") {
+        match bench_json::write_file(path, cfg, agg) {
+            Ok(()) => println!("bench json written to {path}"),
+            Err(e) => {
+                distarray::log!(Error, "bench-json {path}: {e}");
+                ok = false;
+            }
+        }
+    }
+    ok
+}
+
 /// `repro chaos` — the kill-one-worker fault drill: an in-process
 /// `--np`-rank world runs a remap, `--kill` dies, the leader's
 /// detector declares it dead, the survivors re-deal under a bumped
@@ -463,7 +603,7 @@ fn cmd_run(args: &Args) -> i32 {
 /// bit-identically. `DISTARRAY_FAULT_HB_*` tune the detector;
 /// `--trace` records the `fault_*` telemetry events.
 fn cmd_chaos(args: &Args) -> i32 {
-    use distarray::fault::{run_chaos, DetectorConfig};
+    use distarray::fault::DetectorConfig;
     let np = args.flag_usize("np", 4);
     let kill = args.flag_usize("kill", 2);
     let n = args.flag_usize("n", 1 << 20);
@@ -477,22 +617,54 @@ fn cmd_chaos(args: &Args) -> i32 {
         Ok(v) => v,
         Err(code) => return code,
     };
+    let transport = match axis_flag(
+        args,
+        "transport",
+        "channel|file|shmem|tcp",
+        TransportKind::Channel,
+        TransportKind::parse,
+    ) {
+        Ok(TransportKind::Hybrid) => {
+            distarray::log!(Error, "chaos drills one transport at a time; pick channel|file|shmem|tcp");
+            return 2;
+        }
+        Ok(v) => v,
+        Err(code) => return code,
+    };
     let traced = match setup_local_trace(args) {
         Ok(t) => t,
         Err(code) => return code,
     };
     let cfg = DetectorConfig::from_env();
     println!(
-        "repro chaos: np={np} kill={kill} n={n} dtype={dtype} \
+        "repro chaos: np={np} kill={kill} n={n} dtype={dtype} transport={transport} \
          hb_interval={:?} hb_misses={}",
         cfg.interval, cfg.miss_threshold
     );
-    let report = match dtype {
-        distarray::element::Dtype::F64 => run_chaos::<f64>(np, kill, n, cfg),
-        distarray::element::Dtype::F32 => run_chaos::<f32>(np, kill, n, cfg),
-        distarray::element::Dtype::I64 => run_chaos::<i64>(np, kill, n, cfg),
-        distarray::element::Dtype::U64 => run_chaos::<u64>(np, kill, n, cfg),
+    let scratch = std::env::temp_dir().join(format!("distarray_chaos_{}", std::process::id()));
+    let report = match transport {
+        TransportKind::Channel => {
+            chaos_on_world(distarray::comm::ChannelHub::world(np), dtype, kill, n, cfg)
+        }
+        TransportKind::File => {
+            let worlds: Result<Vec<_>, _> =
+                (0..np).map(|p| FileTransport::new(&scratch, p, np)).collect();
+            match worlds {
+                Ok(w) => chaos_on_world(w, dtype, kill, n, cfg),
+                Err(e) => Err(format!("transport: {e}")),
+            }
+        }
+        TransportKind::Shmem => match ShmemTransport::world(&scratch, np) {
+            Ok(w) => chaos_on_world(w, dtype, kill, n, cfg),
+            Err(e) => Err(format!("transport: {e}")),
+        },
+        TransportKind::Tcp => match TcpRendezvous::loopback_world(np) {
+            Ok(w) => chaos_on_world(w, dtype, kill, n, cfg),
+            Err(e) => Err(format!("transport: {e}")),
+        },
+        TransportKind::Hybrid => unreachable!("rejected above"),
     };
+    std::fs::remove_dir_all(&scratch).ok();
     let code = match report {
         Ok(r) => {
             println!(
@@ -508,6 +680,28 @@ fn cmd_chaos(args: &Args) -> i32 {
     };
     finish_local_trace(traced);
     code
+}
+
+/// Wrap an in-process world in the deterministic fault injector and
+/// run the chaos drill for the requested dtype.
+fn chaos_on_world<Tr: Transport>(
+    world: Vec<Tr>,
+    dtype: distarray::element::Dtype,
+    kill: usize,
+    n: usize,
+    cfg: distarray::fault::DetectorConfig,
+) -> Result<distarray::fault::ChaosReport, String> {
+    use distarray::fault::{run_chaos_on, FaultPlan, FaultTransport};
+    let endpoints: Vec<_> = world
+        .into_iter()
+        .map(|t| FaultTransport::new(t, FaultPlan::default()))
+        .collect();
+    match dtype {
+        distarray::element::Dtype::F64 => run_chaos_on::<f64, _>(endpoints, kill, n, cfg),
+        distarray::element::Dtype::F32 => run_chaos_on::<f32, _>(endpoints, kill, n, cfg),
+        distarray::element::Dtype::I64 => run_chaos_on::<i64, _>(endpoints, kill, n, cfg),
+        distarray::element::Dtype::U64 => run_chaos_on::<u64, _>(endpoints, kill, n, cfg),
+    }
 }
 
 /// `repro bench-remap` — measure the coalesced remap hot path with
@@ -699,6 +893,82 @@ fn cmd_bench_overlap(args: &Args) -> i32 {
     code
 }
 
+/// `repro bench-transport` — measure each selected transport's
+/// small-message round-trip time and `ChunkStream` goodput over an
+/// in-process two-rank world of that transport, and emit/print a
+/// `bench_transport_v1` document. The committed
+/// `bench/BENCH_transport.json` baseline is produced by exactly this
+/// command; CI diffs fresh numbers against it (report-only).
+fn cmd_bench_transport(args: &Args) -> i32 {
+    let iters = args.flag_usize("iters", 200);
+    let bytes = args.flag_usize("bytes", 4 << 20);
+    if iters == 0 || bytes < 8 {
+        distarray::log!(Error, "bench-transport: need --iters >= 1 and --bytes >= 8");
+        return 2;
+    }
+    let kinds: Vec<TransportKind> = {
+        let spec = args.flag_str("transport", "channel,file,shmem,tcp,hybrid");
+        let mut out = Vec::new();
+        for s in spec.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            match TransportKind::parse(s) {
+                Some(k) => out.push(k),
+                None => {
+                    distarray::log!(
+                        Error,
+                        "unknown transport '{s}' (expected {})",
+                        TransportKind::CHOICES
+                    );
+                    return 2;
+                }
+            }
+        }
+        out
+    };
+    if kinds.is_empty() {
+        distarray::log!(Error, "bench-transport: --transport selected no transports");
+        return 2;
+    }
+    match parse_chunk_bytes(args, 0) {
+        Ok(0) => {}
+        Ok(b) => distarray::comm::datapath::set_ambient_chunk_bytes(b),
+        Err(code) => return code,
+    }
+    let traced = match setup_local_trace(args) {
+        Ok(t) => t,
+        Err(code) => return code,
+    };
+    let records = bench_json::run_transport(&kinds, iters, bytes);
+    println!("bench-transport: iters={iters} bytes={bytes} np=2");
+    println!(
+        "{:<9} {:>8} {:>12} {:>12} {:>12}",
+        "transport", "ping B", "rtt µs", "stream MB", "GB/s"
+    );
+    for b in &records {
+        println!(
+            "{:<9} {:>8} {:>12.2} {:>12.1} {:>12.3}",
+            b.transport.name(),
+            b.ping_bytes,
+            b.rtt_us(),
+            b.stream_bytes as f64 / 1e6,
+            b.stream_gb_per_sec()
+        );
+    }
+    // An empty table means every selected world failed to build —
+    // that is a failure, not a trivially green bench.
+    let mut code = i32::from(records.is_empty());
+    if let Some(path) = args.flag("bench-json") {
+        match bench_json::write_transport_file(path, &records) {
+            Ok(()) => println!("bench json written to {path}"),
+            Err(e) => {
+                distarray::log!(Error, "bench-json {path}: {e}");
+                code = 1;
+            }
+        }
+    }
+    finish_local_trace(traced);
+    code
+}
+
 /// `repro worker` — internal entry for spawned workers.
 fn cmd_worker() -> i32 {
     let Some(env) = WorkerEnv::from_env() else {
@@ -744,36 +1014,103 @@ fn cmd_worker() -> i32 {
             distarray::obs::emit::start_metrics_sampler(std::time::Duration::from_millis(ms));
         }
     }
-    let t = match FileTransport::new(&env.spool, env.pid, env.np) {
-        Ok(t) => t,
-        Err(e) => {
-            distarray::log!(Error, "worker {} transport: {e}", env.pid);
-            return 1;
-        }
-    };
     // Pin to the adjacent-core plan slot.
     let triples = Triples::new(1, env.np, env.ntpn);
     PinPlan::for_node(&triples).apply(env.slot.min(env.np - 1));
-    // `DISTARRAY_FAULT_*` knobs wrap this worker's transport in the
-    // deterministic fault injector (chaos drills on real processes).
-    use distarray::fault::{FaultPlan, FaultTransport};
-    let result = match FaultPlan::from_env(env.pid) {
-        Some(plan) => {
-            distarray::log!(Warn, "worker {}: fault injection active: {plan:?}", env.pid);
-            run_worker(&FaultTransport::new(t, plan))
-        }
-        None => run_worker(&t),
+    // The leader names the wire (`DISTARRAY_TRANSPORT`); absent means
+    // a legacy launcher, which spoke the file spool.
+    let kind = match std::env::var("DISTARRAY_TRANSPORT") {
+        Err(_) => TransportKind::File,
+        Ok(s) => match TransportKind::parse(&s) {
+            Some(k) => k,
+            None => {
+                distarray::log!(
+                    Error,
+                    "worker {}: unknown DISTARRAY_TRANSPORT '{s}' (expected {})",
+                    env.pid,
+                    TransportKind::CHOICES
+                );
+                return 1;
+            }
+        },
     };
-    let code = match result {
-        Ok(rep) => i32::from(!rep.passed),
-        Err(e) => {
-            distarray::log!(Error, "worker {} failed: {e}", env.pid);
+    let code = match kind {
+        TransportKind::File => match FileTransport::new(&env.spool, env.pid, env.np) {
+            Ok(t) => worker_body(t, env.pid),
+            Err(e) => worker_transport_err(env.pid, &e),
+        },
+        TransportKind::Shmem => match ShmemTransport::new(&env.spool, env.pid, env.np) {
+            Ok(t) => worker_body(t, env.pid),
+            Err(e) => worker_transport_err(env.pid, &e),
+        },
+        TransportKind::Tcp => match worker_tcp(env.pid) {
+            Ok(t) => worker_body(t, env.pid),
+            Err(e) => worker_transport_err(env.pid, &e),
+        },
+        TransportKind::Hybrid => {
+            let built = ShmemTransport::new(&env.spool, env.pid, env.np).and_then(|sh| {
+                let tcp = worker_tcp(env.pid)?;
+                let nppn = std::env::var("DISTARRAY_NPPN")
+                    .ok()
+                    .and_then(|s| s.parse().ok())
+                    .unwrap_or(0);
+                let topo = distarray::collective::Topology::grouped(env.np, nppn);
+                Ok(HybridTransport::new(sh, tcp, topo))
+            });
+            match built {
+                Ok(t) => worker_body(t, env.pid),
+                Err(e) => worker_transport_err(env.pid, &e),
+            }
+        }
+        TransportKind::Channel => {
+            distarray::log!(
+                Error,
+                "worker {}: channel transports cannot cross processes",
+                env.pid
+            );
             1
         }
     };
     distarray::obs::emit::stop_metrics_sampler();
     distarray::obs::emit::close_sink();
     code
+}
+
+/// Dial this worker's TCP endpoint through the leader's boot address.
+fn worker_tcp(pid: usize) -> std::io::Result<distarray::comm::TcpTransport> {
+    let boot = std::env::var("DISTARRAY_TCP_BOOT").map_err(|_| {
+        std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "DISTARRAY_TCP_BOOT missing (leader did not open a rendezvous)",
+        )
+    })?;
+    TcpRendezvous::worker(pid, &boot)
+}
+
+fn worker_transport_err(pid: usize, e: &dyn std::fmt::Display) -> i32 {
+    distarray::log!(Error, "worker {pid} transport: {e}");
+    1
+}
+
+/// The worker lifecycle on a concrete endpoint, with the
+/// `DISTARRAY_FAULT_*` deterministic fault injector wrapped around it
+/// when the environment asks for chaos (any transport composes).
+fn worker_body<T: Transport>(t: T, pid: usize) -> i32 {
+    use distarray::fault::{FaultPlan, FaultTransport};
+    let result = match FaultPlan::from_env(pid) {
+        Some(plan) => {
+            distarray::log!(Warn, "worker {pid}: fault injection active: {plan:?}");
+            run_worker(&FaultTransport::new(t, plan))
+        }
+        None => run_worker(&t),
+    };
+    match result {
+        Ok(rep) => i32::from(!rep.passed),
+        Err(e) => {
+            distarray::log!(Error, "worker {pid} failed: {e}");
+            1
+        }
+    }
 }
 
 /// `repro sweep fig3|fig4|petascale`.

@@ -13,6 +13,8 @@ use super::causal::{
     RankTime, Streams,
 };
 use super::hist::HistSnapshot;
+use super::EventKind;
+use crate::comm::TransportKind;
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
@@ -33,6 +35,76 @@ impl Default for AnalyzeOpts {
     }
 }
 
+/// Wire traffic attributed to one transport — the `--transport` axis
+/// surfaced from the stamps chunk events carry in their `b` top byte.
+/// Traces from before the stamping (or non-datapath events) carry
+/// code 0 and contribute to no lane; the section is omitted when
+/// nothing is stamped, so old traces analyze unchanged.
+#[derive(Debug, Clone, Default)]
+pub struct TransportLane {
+    pub name: &'static str,
+    /// `chunk_send` events / wire bytes carried by this transport.
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+    /// `chunk_arrive` events / wire bytes.
+    pub msgs_recv: u64,
+    pub bytes_recv: u64,
+    /// Matched send→arrive edges on this transport.
+    pub edges: u64,
+    lat_sum_ns: u64,
+    lat_n: u64,
+}
+
+impl TransportLane {
+    /// Mean positive matched-edge latency (0 when none matched).
+    pub fn mean_latency_ns(&self) -> u64 {
+        if self.lat_n > 0 {
+            self.lat_sum_ns / self.lat_n
+        } else {
+            0
+        }
+    }
+}
+
+/// Group chunk events and matched edges by their transport stamp.
+fn transport_lanes(streams: &Streams, graph: &CausalGraph) -> Vec<TransportLane> {
+    let mut by: BTreeMap<u8, TransportLane> = BTreeMap::new();
+    for ev in &streams.events {
+        if ev.transport == 0 {
+            continue;
+        }
+        let lane = by.entry(ev.transport).or_default();
+        match ev.kind {
+            EventKind::ChunkSend => {
+                lane.msgs_sent += 1;
+                lane.bytes_sent += ev.bytes;
+            }
+            EventKind::ChunkArrive => {
+                lane.msgs_recv += 1;
+                lane.bytes_recv += ev.bytes;
+            }
+            _ => {}
+        }
+    }
+    for e in &graph.edges {
+        if e.transport == 0 {
+            continue;
+        }
+        let lane = by.entry(e.transport).or_default();
+        lane.edges += 1;
+        if e.latency_ns > 0 {
+            lane.lat_sum_ns += e.latency_ns as u64;
+            lane.lat_n += 1;
+        }
+    }
+    by.into_iter()
+        .map(|(code, mut lane)| {
+            lane.name = TransportKind::from_code(code).map(|k| k.name()).unwrap_or("?");
+            lane
+        })
+        .collect()
+}
+
 /// The full analysis of one traced run.
 pub struct Analysis {
     pub streams: Streams,
@@ -40,6 +112,8 @@ pub struct Analysis {
     pub path: CriticalPath,
     pub ranks: Vec<RankTime>,
     pub phases: Vec<PhaseSkew>,
+    /// Wire traffic per transport stamp (empty for unstamped traces).
+    pub transports: Vec<TransportLane>,
     /// Aligned first-event → last-event-end span across all ranks.
     pub wall_ns: u64,
     /// Total `chunk_send` bytes / wall seconds.
@@ -65,6 +139,7 @@ pub fn analyze_streams(streams: Streams, opts: &AnalyzeOpts) -> Analysis {
     let path = critical_path(&streams, &graph);
     let ranks = rank_times(&streams);
     let phases = phase_skews(&streams);
+    let transports = transport_lanes(&streams, &graph);
     let t0 = ranks.iter().map(|r| r.t0_ns).min().unwrap_or(0);
     let t1 = ranks.iter().map(|r| r.t1_ns).max().unwrap_or(0);
     let wall_ns = t1.saturating_sub(t0);
@@ -108,6 +183,7 @@ pub fn analyze_streams(streams: Streams, opts: &AnalyzeOpts) -> Analysis {
         path,
         ranks,
         phases,
+        transports,
         wall_ns,
         achieved_bw,
         modeled_bw,
@@ -211,6 +287,28 @@ impl Analysis {
                 fmt_bytes(r.bytes_recv),
                 r.events
             );
+        }
+
+        if !self.transports.is_empty() {
+            let _ = writeln!(s, "\n-- wire by transport --");
+            let _ = writeln!(
+                s,
+                "  {:<9} {:>10} {:>12} {:>10} {:>12} {:>8} {:>12}",
+                "transport", "sends", "sent", "recvs", "recvd", "edges", "mean lat"
+            );
+            for l in &self.transports {
+                let _ = writeln!(
+                    s,
+                    "  {:<9} {:>10} {:>12} {:>10} {:>12} {:>8} {:>12}",
+                    l.name,
+                    l.msgs_sent,
+                    fmt_bytes(l.bytes_sent),
+                    l.msgs_recv,
+                    fmt_bytes(l.bytes_recv),
+                    l.edges,
+                    fmt_ns(l.mean_latency_ns())
+                );
+            }
         }
 
         if !self.phases.is_empty() {
@@ -364,6 +462,24 @@ impl Analysis {
         }
         s.push(']');
 
+        s.push_str(",\"transports\":[");
+        for (i, l) in self.transports.iter().enumerate() {
+            let _ = write!(
+                s,
+                "{}{{\"transport\":\"{}\",\"msgs_sent\":{},\"bytes_sent\":{},\
+                 \"msgs_recv\":{},\"bytes_recv\":{},\"edges\":{},\"mean_latency_ns\":{}}}",
+                if i > 0 { "," } else { "" },
+                l.name,
+                l.msgs_sent,
+                l.bytes_sent,
+                l.msgs_recv,
+                l.bytes_recv,
+                l.edges,
+                l.mean_latency_ns()
+            );
+        }
+        s.push(']');
+
         s.push_str(",\"phases\":[");
         for (i, p) in self.phases.iter().enumerate() {
             let _ = write!(
@@ -466,6 +582,7 @@ mod tests {
             epoch: 1,
             step,
             bytes: 1 << 20,
+            transport: 0,
         }
     }
 
@@ -497,6 +614,45 @@ mod tests {
         let wall = doc.get("wall_ns").unwrap().as_usize().unwrap();
         assert_eq!(cp.get("total_ns").unwrap().as_usize().unwrap(), wall);
         assert!(doc.get("modeled_gb_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn transport_lanes_attribute_wire_traffic_per_stamp() {
+        let mut s = Streams::default();
+        // One shmem hop and one tcp hop — a hybrid run's shape.
+        for (i, code) in
+            [TransportKind::Shmem.code(), TransportKind::Tcp.code()].into_iter().enumerate()
+        {
+            let mut snd = ev(EventKind::ChunkSend, 0, 1, 100, 0, i as u64);
+            snd.transport = code;
+            let mut arr = ev(EventKind::ChunkArrive, 1, 0, 150 + 50 * i as u64, 0, i as u64);
+            arr.transport = code;
+            s.events.push(snd);
+            s.events.push(arr);
+        }
+        let a = analyze_streams(s, &AnalyzeOpts::default());
+        assert_eq!(a.transports.len(), 2);
+        assert_eq!(a.transports[0].name, "shmem");
+        assert_eq!(a.transports[1].name, "tcp");
+        for l in &a.transports {
+            assert_eq!((l.msgs_sent, l.msgs_recv, l.edges), (1, 1, 1), "{}", l.name);
+            assert_eq!(l.bytes_sent, 1 << 20);
+            assert!(l.mean_latency_ns() > 0, "{}", l.name);
+        }
+        let text = a.render();
+        assert!(text.contains("wire by transport"), "{text}");
+        let doc = Json::parse(&a.to_json()).expect("analysis_v1 parses");
+        let lanes = doc.get("transports").unwrap().items().expect("array");
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes[0].get("transport").unwrap().as_str(), Some("shmem"));
+        assert!(lanes[1].get("mean_latency_ns").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn unstamped_traces_omit_the_transport_section() {
+        let a = analyze_streams(four_rank_streams(), &AnalyzeOpts::default());
+        assert!(a.transports.is_empty());
+        assert!(!a.render().contains("wire by transport"));
     }
 
     #[test]

@@ -27,6 +27,7 @@
 use super::fold::phase_name;
 use super::hist::HistSnapshot;
 use super::EventKind;
+use crate::comm::TransportKind;
 use crate::json::{Json, StreamDocs};
 use std::collections::BTreeMap;
 use std::io::Read;
@@ -49,6 +50,9 @@ pub struct CEvent {
     pub step: u64,
     /// The kind's primary payload (`bytes` for data-movement kinds).
     pub bytes: u64,
+    /// Wire code of the transport that carried a chunk event
+    /// ([`TransportKind::code`]; 0 = unstamped / not a chunk event).
+    pub transport: u8,
 }
 
 impl CEvent {
@@ -73,6 +77,16 @@ pub struct Edge {
     /// Signed wire latency (`arrive - send`; negative under clock
     /// skew — kept signed so skew stays visible).
     pub latency_ns: i64,
+    /// Wire code of the carrying transport (the send's stamp, falling
+    /// back to the arrive's; 0 = neither side was stamped).
+    pub transport: u8,
+}
+
+impl Edge {
+    /// The carrying transport's trace label (`"?"` when unstamped).
+    pub fn transport_name(&self) -> &'static str {
+        TransportKind::from_code(self.transport).map(|k| k.name()).unwrap_or("?")
+    }
 }
 
 /// All streams of one run, parsed and indexed for matching.
@@ -155,6 +169,12 @@ impl Streams {
                     epoch: num("epoch"),
                     step: num("step"),
                     bytes: num("bytes"),
+                    transport: doc
+                        .get("transport")
+                        .and_then(|v| v.as_str())
+                        .and_then(TransportKind::parse)
+                        .map(|k| k.code())
+                        .unwrap_or(0),
                 });
                 // The per-file anchor also covers events recorded
                 // before any rank was attributed: nothing else needed.
@@ -211,18 +231,18 @@ impl CausalGraph {
 /// error — the matcher must survive ring wrap and dead ranks.
 pub fn match_edges(streams: &Streams) -> CausalGraph {
     type Key = (u64, u64, u64, i64, i64);
-    let mut sends: BTreeMap<Key, Vec<(u64, u64)>> = BTreeMap::new();
-    let mut arrives: BTreeMap<Key, Vec<(u64, u64)>> = BTreeMap::new();
+    let mut sends: BTreeMap<Key, Vec<(u64, u64, u8)>> = BTreeMap::new();
+    let mut arrives: BTreeMap<Key, Vec<(u64, u64, u8)>> = BTreeMap::new();
     for ev in &streams.events {
         match ev.kind {
             EventKind::ChunkSend => sends
                 .entry((ev.ns, ev.epoch, ev.step, ev.rank, ev.peer))
                 .or_default()
-                .push((ev.at_ns, ev.bytes)),
+                .push((ev.at_ns, ev.bytes, ev.transport)),
             EventKind::ChunkArrive => arrives
                 .entry((ev.ns, ev.epoch, ev.step, ev.peer, ev.rank))
                 .or_default()
-                .push((ev.end_ns(), ev.bytes)),
+                .push((ev.end_ns(), ev.bytes, ev.transport)),
             _ => {}
         }
     }
@@ -239,15 +259,24 @@ pub fn match_edges(streams: &Streams) -> CausalGraph {
                 g.unmatched_sends += (ss.len() - n) as u64;
                 g.unmatched_arrives += (aa.len() - n) as u64;
                 for i in 0..n {
-                    let (send_ns, bytes) = ss[i];
-                    let (arrive_ns, _) = aa[i];
+                    let (send_ns, bytes, st) = ss[i];
+                    let (arrive_ns, _, at) = aa[i];
                     let latency_ns = arrive_ns as i64 - send_ns as i64;
                     if latency_ns < 0 {
                         g.skew_est_ns = g.skew_est_ns.max(latency_ns.unsigned_abs());
                     } else if latency_ns > 0 {
                         min_pos = min_pos.min(latency_ns as u64);
                     }
-                    g.edges.push(Edge { from, to, send_ns, arrive_ns, bytes, latency_ns });
+                    let transport = if st != 0 { st } else { at };
+                    g.edges.push(Edge {
+                        from,
+                        to,
+                        send_ns,
+                        arrive_ns,
+                        bytes,
+                        latency_ns,
+                        transport,
+                    });
                 }
             }
         }
@@ -550,7 +579,19 @@ mod tests {
         dur_ns: u64,
         step: u64,
     ) -> CEvent {
-        CEvent { t_ns: at_ns, dur_ns, at_ns, kind, rank, peer, ns: 8, epoch: 1, step, bytes: 64 }
+        CEvent {
+            t_ns: at_ns,
+            dur_ns,
+            at_ns,
+            kind,
+            rank,
+            peer,
+            ns: 8,
+            epoch: 1,
+            step,
+            bytes: 64,
+            transport: 0,
+        }
     }
 
     #[test]
@@ -566,6 +607,21 @@ mod tests {
         assert_eq!(g.edges[0].latency_ns, 50);
         assert_eq!(g.unmatched_sends, 1);
         assert_eq!(g.unmatched_arrives, 0);
+    }
+
+    #[test]
+    fn edges_carry_the_transport_stamp() {
+        let mut s = Streams::default();
+        let mut snd = ev(EventKind::ChunkSend, 0, 1, 100, 0, 0);
+        snd.transport = TransportKind::Tcp.code();
+        // Only the send side is stamped (a truncated arrive line):
+        // the edge still knows its wire.
+        s.events.push(snd);
+        s.events.push(ev(EventKind::ChunkArrive, 1, 0, 150, 0, 0));
+        let g = match_edges(&s);
+        assert_eq!(g.edges.len(), 1);
+        assert_eq!(g.edges[0].transport, TransportKind::Tcp.code());
+        assert_eq!(g.edges[0].transport_name(), "tcp");
     }
 
     #[test]

@@ -11,7 +11,7 @@ use super::{
     current_rank, field_names, kind_name, metric_name, recorder, wall_anchor_ns, Event, EventKind,
     NO_PEER,
 };
-use crate::comm::tags;
+use crate::comm::{tags, TransportKind};
 use std::fmt::Write as _;
 use std::io::Write;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -52,7 +52,19 @@ impl NdjsonEmitter {
                 let _ = write!(self.line, ",\"ns\":{ns},\"epoch\":{epoch},\"step\":{step}");
             }
             let (an, bn) = field_names(ev.kind);
-            let _ = write!(self.line, ",\"{an}\":{},\"{bn}\":{}", ev.a, ev.b);
+            // Chunk events carry the sending transport's wire code in
+            // the top byte of `b` (chunk indices need at most 16
+            // bits). Surface it as a name and keep `chunk` clean;
+            // code 0 means unstamped and the field is omitted.
+            let b = if matches!(ev.kind, EventKind::ChunkSend | EventKind::ChunkArrive) {
+                if let Some(k) = TransportKind::from_code((ev.b >> 56) as u8) {
+                    let _ = write!(self.line, ",\"transport\":\"{}\"", k.name());
+                }
+                ev.b & 0x00FF_FFFF_FFFF_FFFF
+            } else {
+                ev.b
+            };
+            let _ = write!(self.line, ",\"{an}\":{},\"{bn}\":{b}", ev.a);
         }
         self.line.push('}');
         &self.line
@@ -280,6 +292,25 @@ mod tests {
         assert_eq!(parsed.get("step").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.get("bytes").unwrap().as_usize(), Some(65552));
         assert_eq!(parsed.get("chunk").unwrap().as_usize(), Some(2));
+        assert!(parsed.get("transport").is_none(), "unstamped events omit the field");
+    }
+
+    #[test]
+    fn chunk_events_surface_the_transport_stamp() {
+        let mut em = NdjsonEmitter::new();
+        let ev = Event {
+            t_ns: 42,
+            dur_ns: 0,
+            kind: EventKind::ChunkArrive,
+            rank: 1,
+            peer: 0,
+            tag: tags::pack(tags::NS_REMAP, 1, 0),
+            a: 4096,
+            b: 5 | ((TransportKind::Shmem.code() as u64) << 56),
+        };
+        let parsed = Json::parse(em.event_line(&ev)).expect("line parses");
+        assert_eq!(parsed.get("transport").unwrap().as_str(), Some("shmem"));
+        assert_eq!(parsed.get("chunk").unwrap().as_usize(), Some(5), "stamp masked out");
     }
 
     #[test]

@@ -45,7 +45,8 @@ pub fn direction_of(path: &str) -> Direction {
 
 /// Keys that identify a row of an array-of-objects (first match
 /// wins): flattening by them keeps rows aligned across reorderings.
-const ROW_KEYS: [&str; 8] = ["coll", "op", "phase", "hist", "label", "kind", "np", "rank"];
+const ROW_KEYS: [&str; 9] =
+    ["coll", "op", "phase", "hist", "label", "kind", "transport", "np", "rank"];
 
 fn row_key(item: &Json) -> Option<String> {
     let m = item.obj()?;

@@ -17,8 +17,11 @@ use crate::backend::ChunkedThreadedBackend;
 use crate::collective::{
     AllreduceOrder, CollKind, Collective, ReduceOp, TagSpace, Topology, PH_AG, PH_RS,
 };
-use crate::comm::datapath::{self, ChunkStream};
-use crate::comm::{tags, ChannelHub, Transport, WireWriter};
+use crate::comm::datapath::{self, ChunkStream, ChunkTag};
+use crate::comm::{
+    tags, ChannelHub, FileTransport, HybridTransport, ShmemTransport, Tag, TcpRendezvous,
+    Transport, TransportKind, WireWriter,
+};
 use crate::coordinator::RunConfig;
 use crate::darray::engine::{remap_tag, send_group_typed, unpack_group_typed, write_group_header};
 use crate::darray::{DarrayT, RemapEngine};
@@ -41,6 +44,9 @@ pub const COLL_SCHEMA: &str = "bench_collective_v1";
 
 /// Schema tag of the compute/communication-overlap benchmark document.
 pub const OVERLAP_SCHEMA: &str = "bench_overlap_v1";
+
+/// Schema tag of the transport microbenchmark document.
+pub const TRANSPORT_SCHEMA: &str = "bench_transport_v1";
 
 /// The four op names, in the order of [`AggregateResult::bw`].
 pub const OP_NAMES: [&str; 4] = ["copy", "scale", "add", "triad"];
@@ -817,6 +823,229 @@ pub fn write_overlap_file(path: &str, records: &[OverlapBench]) -> std::io::Resu
     std::fs::write(path, format!("{}\n", overlap_to_json(records)))
 }
 
+/// Ping payload of the transport microbench — small enough that the
+/// round trip measures per-message overhead, not bandwidth.
+pub const TRANSPORT_PING_BYTES: usize = 64;
+
+/// Timed full-stream repetitions per transport (one warm-up stream on
+/// top dials connections, pages rings in, and fills the buffer pool).
+const TRANSPORT_STREAM_ITERS: usize = 4;
+
+/// Epoch base reserved for bench traffic: far above any epoch a real
+/// run reaches, so the tags cannot alias application streams.
+const TRANSPORT_BENCH_EPOCH: u64 = 0xBE6C;
+
+fn transport_ping_tag() -> Tag {
+    tags::pack(tags::NS_COLL, TRANSPORT_BENCH_EPOCH, 1)
+}
+
+fn transport_pong_tag() -> Tag {
+    tags::pack(tags::NS_COLL, TRANSPORT_BENCH_EPOCH, 2)
+}
+
+fn transport_ack_tag() -> Tag {
+    tags::pack(tags::NS_COLL, TRANSPORT_BENCH_EPOCH, 3)
+}
+
+/// One stream tag per repetition — distinct epochs keep the streams
+/// unambiguous even on transports that buffer ahead.
+fn transport_stream_tag(i: u64) -> ChunkTag {
+    ChunkTag::new(tags::NS_COLL, TRANSPORT_BENCH_EPOCH + 1 + i)
+}
+
+/// One transport's measured point: small-message round trips plus
+/// [`ChunkStream`] streaming, both over an in-process two-rank world
+/// of that transport. The same harness runs every
+/// [`TransportKind`], so the numbers are directly comparable — the
+/// shmem-vs-file RTT ratio in `bench/BENCH_transport.json` is the
+/// committed acceptance evidence for the shared-memory datapath.
+#[derive(Debug, Clone)]
+pub struct TransportBench {
+    pub transport: TransportKind,
+    /// Timed round trips (one warm-up round excluded).
+    pub ping_iters: usize,
+    /// Ping payload bytes ([`TRANSPORT_PING_BYTES`]).
+    pub ping_bytes: usize,
+    /// Wall time of all timed round trips.
+    pub ping_seconds: f64,
+    /// Timed full streams (one warm-up stream excluded).
+    pub stream_iters: usize,
+    /// Payload bytes per stream.
+    pub stream_bytes: usize,
+    /// Chunk size the streams were cut into (the ambient datapath
+    /// setting at bench time).
+    pub chunk_bytes: usize,
+    /// Wall time of all timed streams, completion acks included.
+    pub stream_seconds: f64,
+}
+
+impl TransportBench {
+    /// Mean small-message round-trip time in microseconds.
+    pub fn rtt_us(&self) -> f64 {
+        if self.ping_iters > 0 {
+            self.ping_seconds / self.ping_iters as f64 * 1e6
+        } else {
+            0.0
+        }
+    }
+
+    /// Streaming goodput in GB/s — payload bytes over acked wall
+    /// time, so a transport cannot win by buffering without draining.
+    pub fn stream_gb_per_sec(&self) -> f64 {
+        if self.stream_seconds > 0.0 {
+            (self.stream_iters as f64 * self.stream_bytes as f64) / self.stream_seconds / 1e9
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Drive the two-phase microbench over a two-endpoint world: rank 1
+/// echoes pings and acks drained streams on its own thread, rank 0
+/// times the round trips and the acked streams.
+fn bench_transport_world<Tr: Transport + 'static>(
+    kind: TransportKind,
+    mut world: Vec<Tr>,
+    ping_iters: usize,
+    stream_bytes: usize,
+) -> TransportBench {
+    assert_eq!(world.len(), 2, "transport bench runs a 2-rank ping/stream pair");
+    let t1 = world.pop().expect("peer endpoint");
+    let t0 = world.pop().expect("driver endpoint");
+    let chunk_bytes = datapath::ambient_chunk_bytes();
+    let echo = std::thread::spawn(move || -> crate::comm::Result<()> {
+        // Phase 1 echo: warm-up round plus the timed rounds.
+        for _ in 0..=ping_iters {
+            let m = t1.recv(0, transport_ping_tag())?;
+            t1.send(0, transport_pong_tag(), &m)?;
+        }
+        // Phase 2 sink: drain each stream fully, then ack with the
+        // byte count — the ack puts stream *completion* (not merely
+        // the sender's last write) inside the timed window.
+        for i in 0..=TRANSPORT_STREAM_ITERS as u64 {
+            let mut got = 0u64;
+            ChunkStream::drain_chunks(&t1, &[0], transport_stream_tag(i), |c| {
+                got += c.payload().len() as u64;
+                Ok(())
+            })?;
+            t1.send(0, transport_ack_tag(), &got.to_le_bytes())?;
+        }
+        Ok(())
+    });
+    let ping = vec![0xA5u8; TRANSPORT_PING_BYTES];
+    // Warm-up round trip: dials TCP connections, pages rings in,
+    // fills the pool — none of that belongs in the RTT.
+    t0.send(1, transport_ping_tag(), &ping).expect("bench warm-up ping");
+    t0.recv(1, transport_pong_tag()).expect("bench warm-up pong");
+    let start = Instant::now();
+    for _ in 0..ping_iters {
+        t0.send(1, transport_ping_tag(), &ping).expect("bench ping");
+        t0.recv(1, transport_pong_tag()).expect("bench pong");
+    }
+    let ping_seconds = start.elapsed().as_secs_f64();
+
+    let payload = vec![0x5Au8; stream_bytes];
+    ChunkStream::send(&t0, 1, transport_stream_tag(0), chunk_bytes, &[&payload])
+        .expect("bench warm-up stream");
+    t0.recv(1, transport_ack_tag()).expect("bench warm-up ack");
+    let start = Instant::now();
+    for i in 1..=TRANSPORT_STREAM_ITERS as u64 {
+        ChunkStream::send(&t0, 1, transport_stream_tag(i), chunk_bytes, &[&payload])
+            .expect("bench stream");
+        t0.recv(1, transport_ack_tag()).expect("bench ack");
+    }
+    let stream_seconds = start.elapsed().as_secs_f64();
+    echo.join().expect("echo thread").expect("echo peer");
+    TransportBench {
+        transport: kind,
+        ping_iters,
+        ping_bytes: TRANSPORT_PING_BYTES,
+        ping_seconds,
+        stream_iters: TRANSPORT_STREAM_ITERS,
+        stream_bytes,
+        chunk_bytes,
+        stream_seconds,
+    }
+}
+
+/// Run the transport microbench for each requested kind. A kind whose
+/// world cannot be built on this host (shmem on non-unix, say) is
+/// skipped with a warning rather than failing the whole bench — the
+/// emitted document simply lacks that run.
+pub fn run_transport(
+    kinds: &[TransportKind],
+    ping_iters: usize,
+    stream_bytes: usize,
+) -> Vec<TransportBench> {
+    let mut out = Vec::new();
+    for &kind in kinds {
+        let scratch = std::env::temp_dir().join(format!(
+            "distarray_bench_{}_{}",
+            kind.name(),
+            std::process::id()
+        ));
+        let built: Result<TransportBench, String> = match kind {
+            TransportKind::Channel => {
+                Ok(bench_transport_world(kind, ChannelHub::world(2), ping_iters, stream_bytes))
+            }
+            TransportKind::File => (0..2)
+                .map(|p| FileTransport::new(&scratch, p, 2))
+                .collect::<crate::comm::Result<Vec<_>>>()
+                .map_err(|e| e.to_string())
+                .map(|w| bench_transport_world(kind, w, ping_iters, stream_bytes)),
+            TransportKind::Shmem => ShmemTransport::world(&scratch, 2)
+                .map_err(|e| e.to_string())
+                .map(|w| bench_transport_world(kind, w, ping_iters, stream_bytes)),
+            TransportKind::Tcp => TcpRendezvous::loopback_world(2)
+                .map_err(|e| e.to_string())
+                .map(|w| bench_transport_world(kind, w, ping_iters, stream_bytes)),
+            // Two one-pid "nodes", so the route under test is the
+            // cross-node TCP leg behind the hybrid dispatch — the
+            // interesting overhead; the same-node leg is just shmem.
+            TransportKind::Hybrid => HybridTransport::world(&scratch, 2, 1)
+                .map_err(|e| e.to_string())
+                .map(|w| bench_transport_world(kind, w, ping_iters, stream_bytes)),
+        };
+        std::fs::remove_dir_all(&scratch).ok();
+        match built {
+            Ok(b) => out.push(b),
+            Err(e) => crate::log!(Warn, "bench-transport: {} skipped: {e}", kind.name()),
+        }
+    }
+    out
+}
+
+/// Build the `bench_transport_v1` document.
+pub fn transport_to_json(records: &[TransportBench]) -> Json {
+    let runs: Vec<Json> = records
+        .iter()
+        .map(|b| {
+            let mut m = BTreeMap::new();
+            m.insert("transport".to_string(), Json::Str(b.transport.name().to_string()));
+            m.insert("ping_iters".to_string(), Json::Num(b.ping_iters as f64));
+            m.insert("ping_bytes".to_string(), Json::Num(b.ping_bytes as f64));
+            m.insert("ping_seconds".to_string(), Json::Num(b.ping_seconds));
+            m.insert("rtt_us".to_string(), Json::Num(b.rtt_us()));
+            m.insert("stream_iters".to_string(), Json::Num(b.stream_iters as f64));
+            m.insert("stream_bytes".to_string(), Json::Num(b.stream_bytes as f64));
+            m.insert("chunk_bytes".to_string(), Json::Num(b.chunk_bytes as f64));
+            m.insert("stream_seconds".to_string(), Json::Num(b.stream_seconds));
+            m.insert("stream_gb_per_sec".to_string(), Json::Num(b.stream_gb_per_sec()));
+            Json::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("schema".to_string(), Json::Str(TRANSPORT_SCHEMA.to_string()));
+    top.insert("np".to_string(), Json::Num(2.0));
+    top.insert("runs".to_string(), Json::Arr(runs));
+    Json::Obj(top)
+}
+
+/// Emit the transport document to `path` (newline-terminated).
+pub fn write_transport_file(path: &str, records: &[TransportBench]) -> std::io::Result<()> {
+    std::fs::write(path, format!("{}\n", transport_to_json(records)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -842,6 +1071,8 @@ mod tests {
             heartbeat: false,
             checkpoint: String::new(),
             restore: false,
+            transport: TransportKind::Channel,
+            recv_timeout_ms: 0,
         };
         let agg = AggregateResult {
             np: 2,
@@ -989,6 +1220,41 @@ mod tests {
         assert!(runs[1].get("speedup_vs_serial").unwrap().as_f64().is_some());
         assert!(parsed.get("datapath_msgs_sent").unwrap().as_f64().is_some());
         assert!(parsed.get("datapath_bytes_sent").unwrap().as_f64().is_some());
+    }
+
+    #[test]
+    fn transport_bench_measures_and_documents_channel() {
+        let recs = run_transport(&[TransportKind::Channel], 8, 1 << 16);
+        assert_eq!(recs.len(), 1);
+        let b = &recs[0];
+        assert_eq!(b.transport, TransportKind::Channel);
+        assert_eq!(b.ping_iters, 8);
+        assert_eq!(b.ping_bytes, TRANSPORT_PING_BYTES);
+        assert!(b.ping_seconds > 0.0 && b.rtt_us() > 0.0);
+        assert!(b.stream_seconds > 0.0 && b.stream_gb_per_sec() > 0.0);
+        let doc = transport_to_json(&recs);
+        let parsed = Json::parse(&doc.to_string()).expect("emitted json parses");
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some(TRANSPORT_SCHEMA));
+        let runs = parsed.get("runs").unwrap().items().expect("runs is an array");
+        assert_eq!(runs.len(), 1);
+        assert_eq!(runs[0].get("transport").unwrap().as_str(), Some("channel"));
+        assert!(runs[0].get("rtt_us").unwrap().as_f64().unwrap() > 0.0);
+        assert!(runs[0].get("stream_gb_per_sec").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    /// The same harness runs the OS-backed worlds — the committed
+    /// baseline's shmem/tcp rows come from exactly this path.
+    #[cfg(unix)]
+    #[test]
+    fn transport_bench_covers_shmem_and_tcp_worlds() {
+        let recs = run_transport(&[TransportKind::Shmem, TransportKind::Tcp], 4, 1 << 15);
+        assert_eq!(recs.len(), 2, "unix hosts build both worlds");
+        assert_eq!(recs[0].transport, TransportKind::Shmem);
+        assert_eq!(recs[1].transport, TransportKind::Tcp);
+        for b in &recs {
+            assert!(b.rtt_us() > 0.0, "{}", b.transport.name());
+            assert!(b.stream_gb_per_sec() > 0.0, "{}", b.transport.name());
+        }
     }
 
     #[test]

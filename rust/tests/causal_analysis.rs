@@ -120,6 +120,7 @@ fn send(rank: i64, peer: i64, at_ns: u64, step: u64) -> CEvent {
         epoch: 1,
         step,
         bytes: 4096,
+        transport: 0,
     }
 }
 

@@ -49,6 +49,8 @@ fn coordinator_over_file_transport() {
         heartbeat: false,
         checkpoint: String::new(),
         restore: false,
+        transport: distarray::comm::TransportKind::File,
+        recv_timeout_ms: 0,
     };
     let (agg, _) = run_leader(&leader, &cfg).unwrap();
     for h in hs {

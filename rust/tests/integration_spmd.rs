@@ -151,6 +151,8 @@ fn coordinator_all_map_kinds() {
             heartbeat: false,
             checkpoint: String::new(),
             restore: false,
+            transport: distarray::comm::TransportKind::Channel,
+            recv_timeout_ms: 0,
         };
         let (agg, results) = run_leader(&leader, &cfg).unwrap();
         for h in hs {
